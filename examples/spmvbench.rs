@@ -1,0 +1,140 @@
+//! spmvbench — the heterogeneous SpMV benchmark of section 4.1.
+//!
+//! Reproduces the paper's listings: CPU-socket-only, GPU-only, CPU+GPU
+//! with bandwidth weights (1 : 2.75 in the paper, derived from the
+//! single-device runs), and the full node including the PHI. "GPU"/"PHI"
+//! ranks execute through the AOT-compiled JAX/Pallas artifact via PJRT;
+//! CPU ranks run the native SELL kernels. Each device enforces its
+//! Table 1 bandwidth as a modeled time floor, so the *relative* numbers
+//! follow the paper (see DESIGN.md "Performance realism").
+//!
+//!     cargo run --release --example spmvbench [-- <iters>]
+
+use ghost::benchutil::Table;
+use ghost::comm::CommConfig;
+use ghost::hetero::{presets, Backend, HeteroSpmv, RankSetup};
+use ghost::matgen;
+use ghost::perfmodel;
+use ghost::sparsemat::SellMat;
+use ghost::topology;
+
+fn main() -> anyhow::Result<()> {
+    let iters: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(5);
+    let artifact_dir = std::env::var("GHOST_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let have_artifacts = std::path::Path::new(&artifact_dir)
+        .join("manifest.txt")
+        .exists();
+    if !have_artifacts {
+        eprintln!("WARNING: no artifacts at {artifact_dir} (run `make artifacts`); GPU/PHI rows are skipped");
+    }
+
+    // ML_Geer stand-in: 3-D stencil, W<=16 so it fits the spmv_f64_m bucket
+    let a = matgen::poisson7::<f64>(16, 16, 16);
+    let n = a.nrows();
+    println!(
+        "matrix: poisson7 (ML_Geer stand-in), n = {n}, nnz = {}, SELL-32-1",
+        a.nnz()
+    );
+    let x = vec![1.0f64; n];
+
+    // roofline context per device (Table 1)
+    let sell = SellMat::from_crs(&a, 32, 1)?;
+    for dev in [
+        topology::emmy_cpu_socket(),
+        topology::emmy_gpu(),
+        topology::emmy_phi(),
+    ] {
+        println!(
+            "  roofline {:4}: {:6.2} Gflop/s ({} GB/s, code balance ~6 B/flop)",
+            dev.kind.to_string(),
+            perfmodel::predict_spmmv(&dev, &sell, 1),
+            dev.bandwidth_gbs
+        );
+    }
+
+    let mut table = Table::new(&[
+        "configuration",
+        "ranks",
+        "rows/rank",
+        "model Gflop/s",
+        "sum",
+    ]);
+    // time-model scale: chosen so the device floors (~5 ms/iter) dominate
+    // the real single-core kernel time; the reported model Gflop/s then
+    // lands on each device's roofline (see perfmodel)
+    let scale = 2e-4;
+
+    let mut run = |name: &str, setups: Vec<RankSetup>, weights: Option<Vec<f64>>| {
+        let mut engine = HeteroSpmv::new(setups)
+            .with_comm(CommConfig::default())
+            .with_time_scale(scale);
+        if let Some(w) = weights {
+            engine = engine.with_weights(w);
+        }
+        match engine.run(&a, &x, iters) {
+            Ok((reports, y)) => {
+                // validate the heterogeneous result
+                let mut want = vec![0.0; n];
+                a.spmv(&x, &mut want);
+                let err = y
+                    .iter()
+                    .zip(&want)
+                    .map(|(u, v)| (u - v) * (u - v))
+                    .sum::<f64>()
+                    .sqrt();
+                assert!(err < 1e-8, "{name}: wrong result ({err})");
+                let total: f64 = reports.iter().map(|r| r.model_gflops).sum();
+                let rows = reports
+                    .iter()
+                    .map(|r| r.rows.to_string())
+                    .collect::<Vec<_>>()
+                    .join("/");
+                let per = reports
+                    .iter()
+                    .map(|r| format!("{:.1}", r.model_gflops))
+                    .collect::<Vec<_>>()
+                    .join("/");
+                table.row(&[
+                    name.to_string(),
+                    reports.len().to_string(),
+                    rows,
+                    per,
+                    format!("{total:.1}"),
+                ]);
+            }
+            Err(e) => eprintln!("{name}: FAILED: {e}"),
+        }
+    };
+
+    run("CPU 1 socket", presets::cpu_only(1, 4), None);
+    run("CPU 2 sockets", presets::cpu_only(2, 4), None);
+    if have_artifacts {
+        let dir = std::path::PathBuf::from(&artifact_dir);
+        run(
+            "GPU only (PJRT)",
+            vec![RankSetup {
+                device: topology::emmy_gpu(),
+                backend: Backend::Pjrt {
+                    artifact_dir: dir.clone(),
+                },
+            }],
+            None,
+        );
+        // paper: CPU:GPU = 1 : 2.75 measured; bandwidth weights 50:150
+        run(
+            "CPU+GPU weighted",
+            presets::cpu_gpu(dir.clone(), 4),
+            Some(vec![1.0, 2.75]),
+        );
+        run("full node (2xCPU+GPU+PHI)", presets::full_node(dir, 4), None);
+    }
+    table.print();
+    println!(
+        "\nExpected shape (paper section 4.1): GPU ~2.75-3x one CPU socket; \
+         the heterogeneous run approaches the sum of its parts."
+    );
+    Ok(())
+}

@@ -1,0 +1,13 @@
+"""GHOST compile path (build-time only; never imported at runtime).
+
+Layer 1: Pallas kernels (kernels/), validated against pure-jnp oracles.
+Layer 2: JAX compute graphs (model.py) lowered AOT to HLO text (aot.py).
+
+The rust coordinator loads the emitted artifacts via PJRT and never calls
+back into Python.
+"""
+import jax
+
+# GHOST supports double precision throughout (the paper's benchmarks are
+# double / complex double); enable x64 before any tracing happens.
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,66 @@
+# AOT lowering: JAX -> HLO *text* artifacts for the rust/PJRT runtime.
+#
+# HLO text (NOT lowered.compiler_ir("hlo") protos and NOT .serialize()) is
+# the interchange format: jax >= 0.5 emits HloModuleProtos with 64-bit
+# instruction ids which xla_extension 0.5.1 (the version behind the `xla`
+# 0.1.6 rust crate) rejects with `proto.id() <= INT_MAX`. The HLO text
+# parser reassigns ids, so text round-trips cleanly.
+# See /opt/xla-example/README.md.
+import argparse
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (return_tuple=True, so
+    the rust side unwraps with to_tuple1/to_tupleN)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_spec(spec: model.ArtifactSpec) -> str:
+    lowered = jax.jit(spec.fn).lower(*spec.args)
+    return to_hlo_text(lowered)
+
+
+def manifest_line(spec: model.ArtifactSpec, fname: str, nouts: int) -> str:
+    kv = dict(name=spec.name, file=fname, nouts=nouts, **spec.meta)
+    return " ".join(f"{k}={v}" for k, v in kv.items())
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description="GHOST AOT artifact builder")
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated artifact names to (re)build")
+    args = ap.parse_args(argv)
+    os.makedirs(args.outdir, exist_ok=True)
+    only = set(args.only.split(",")) if args.only else None
+
+    lines = []
+    for spec in model.SPECS:
+        if only is not None and spec.name not in only:
+            continue
+        fname = f"{spec.name}.hlo.txt"
+        text = lower_spec(spec)
+        nouts = len(jax.eval_shape(spec.fn, *spec.args))
+        with open(os.path.join(args.outdir, fname), "w") as f:
+            f.write(text)
+        lines.append(manifest_line(spec, fname, nouts))
+        print(f"[aot] {spec.name}: {len(text)} chars, {nouts} outputs")
+    with open(os.path.join(args.outdir, "manifest.txt"), "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print(f"[aot] wrote {len(lines)} artifacts + manifest to {args.outdir}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

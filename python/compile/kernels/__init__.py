@@ -1,0 +1,7 @@
+"""Layer-1 Pallas kernels: SELL-C-sigma SpM(M)V and tall-skinny GEMMs.
+
+All kernels run with interpret=True (CPU PJRT cannot execute Mosaic
+custom-calls); the BlockSpec structure is written for a real TPU schedule
+regardless (see DESIGN.md section 2, "Hardware adaptation").
+"""
+from . import ref, sell, tsm  # noqa: F401

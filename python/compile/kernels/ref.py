@@ -1,0 +1,60 @@
+# Pure-jnp correctness oracles for every Layer-1 kernel.
+#
+# The SELL-C-sigma operand layout shared by oracle, Pallas kernel and the
+# rust coordinator (see rust/src/sparsemat/sell.rs):
+#   val : (nchunks, C, W)  f32/f64   chunk-local dense slab, zero padded
+#   col : (nchunks, C, W)  int32     gather indices into x; padding -> 0
+#                                    (safe because the matching val is 0)
+#   x   : (nx,) or (nx, nvecs)       input vector(s); nx >= nchunks*C to
+#                                    leave room for halo (remote) entries
+#   y   : (nchunks*C,) or (nchunks*C, nvecs)
+import jax.numpy as jnp
+
+
+def sell_spmv(val, col, x):
+    """y = A x for a SELL-C-sigma matrix. x: (nx,), returns (nchunks*C,)."""
+    nchunks, c, w = val.shape
+    xg = jnp.take(x, col, axis=0)  # (nchunks, C, W)
+    return jnp.sum(val * xg, axis=2).reshape(nchunks * c)
+
+
+def sell_spmmv(val, col, x):
+    """Y = A X for block vectors. x: (nx, nvecs), returns (nchunks*C, nvecs)."""
+    nchunks, c, w = val.shape
+    xg = jnp.take(x, col, axis=0)  # (nchunks, C, W, nvecs)
+    return jnp.sum(val[..., None] * xg, axis=2).reshape(nchunks * c, -1)
+
+
+def fused_spmmv(val, col, x, y, alpha, beta, gamma, delta, eta, z):
+    """The paper's augmented SpM(M)V (section 5.3):
+
+        y' = alpha * (A - gamma*I) x + beta * y
+        z' = delta * z + eta * y'
+        dots = (<y',y'>, <x,y'>, <x,x>) per block-vector column
+
+    gamma is a per-column shift vector (VSHIFT); scalars alpha/beta/delta/
+    eta are broadcast. Returns (y', z', dots(3, nvecs)).
+    """
+    n = y.shape[0]
+    ax = sell_spmmv(val, col, x)
+    xl = x[:n]
+    ynew = alpha * (ax - gamma[None, :] * xl) + beta * y
+    znew = delta * z + eta * ynew
+    dots = jnp.stack(
+        [
+            jnp.sum(ynew * ynew, axis=0),
+            jnp.sum(xl * ynew, axis=0),
+            jnp.sum(xl * xl, axis=0),
+        ]
+    )
+    return ynew, znew, dots
+
+
+def tsmttsm(v, w):
+    """X = V^T W for tall-skinny V (n,m), W (n,k) -> (m,k)."""
+    return v.T @ w
+
+
+def tsmm(v, x):
+    """W = V X for tall-skinny V (n,m), small X (m,k) -> (n,k)."""
+    return v @ x

@@ -1,0 +1,91 @@
+# Layer-1 Pallas kernels for SELL-C-sigma sparse matrix (multiple) vector
+# multiplication.
+#
+# TPU mapping of the paper's CUDA/MIC kernels (DESIGN.md section 2):
+# the grid iterates over SELL chunks; each grid step stages one (C, W)
+# val/col slab from HBM into VMEM via BlockSpec, gathers the needed x
+# entries, and reduces along the chunk width W on the VPU. The chunk
+# height C plays the role the warp width (GPU) / SIMD width (MIC) plays
+# in the paper: it must be a multiple of the vector unit width, and the
+# per-device choice is unified to max(all devices) for heterogeneous runs
+# (section 5.1).
+#
+# interpret=True is mandatory here: the CPU PJRT plugin cannot execute
+# Mosaic custom-calls, and the AOT path (aot.py) targets the CPU client.
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _spmv_kernel(val_ref, col_ref, x_ref, y_ref):
+    """One grid step = a *block* of SELL chunks:
+    y[b, :] = sum_w val[b, :, w] * x[col[b, :, w]] for b in the block.
+    Blocking chunks per grid step amortizes per-step overhead (HBM->VMEM
+    DMA setup on TPU; interpreter dispatch under interpret=True) — see
+    EXPERIMENTS.md section Perf (47x on the CPU artifact path)."""
+    v = val_ref[...]  # (B, C, W) slab in VMEM
+    c = col_ref[...]  # (B, C, W) gather indices
+    xv = x_ref[...]  # full x; on TPU this lives in VMEM once per grid pass
+    xg = jnp.take(xv, c, axis=0)  # (B, C, W)
+    y_ref[...] = jnp.sum(v * xg, axis=2)
+
+
+def _spmmv_kernel(val_ref, col_ref, x_ref, y_ref):
+    """Block-vector variant: x is (nx, nvecs), gathers (B, C, W, nvecs)."""
+    v = val_ref[...]
+    c = col_ref[...]
+    xv = x_ref[...]
+    xg = jnp.take(xv, c, axis=0)  # (B, C, W, nvecs)
+    y_ref[...] = jnp.sum(v[..., None] * xg, axis=2)
+
+
+def _chunk_block(nchunks, limit=64):
+    """Largest divisor of nchunks not exceeding `limit` (VMEM budget: a
+    (64, 32, 16) f64 slab is ~390 KiB, far under the 16 MiB VMEM)."""
+    b = min(limit, nchunks)
+    while nchunks % b != 0:
+        b -= 1
+    return max(b, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sell_spmv(val, col, x, *, interpret=True):
+    """y = A x with A in SELL-C-sigma layout. Shapes: see ref.py."""
+    nchunks, c, w = val.shape
+    nx = x.shape[0]
+    b = _chunk_block(nchunks)
+    return pl.pallas_call(
+        _spmv_kernel,
+        grid=(nchunks // b,),
+        in_specs=[
+            pl.BlockSpec((b, c, w), lambda i: (i, 0, 0)),
+            pl.BlockSpec((b, c, w), lambda i: (i, 0, 0)),
+            pl.BlockSpec((nx,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((b, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nchunks, c), val.dtype),
+        interpret=interpret,
+    )(val, col, x).reshape(nchunks * c)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sell_spmmv(val, col, x, *, interpret=True):
+    """Y = A X for block vectors X (nx, nvecs); row-major interleaved
+    storage, which is what makes this a single streaming pass (Fig 8)."""
+    nchunks, c, w = val.shape
+    nx, nvecs = x.shape
+    b = _chunk_block(nchunks)
+    return pl.pallas_call(
+        _spmmv_kernel,
+        grid=(nchunks // b,),
+        in_specs=[
+            pl.BlockSpec((b, c, w), lambda i: (i, 0, 0)),
+            pl.BlockSpec((b, c, w), lambda i: (i, 0, 0)),
+            pl.BlockSpec((nx, nvecs), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((b, c, nvecs), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nchunks, c, nvecs), val.dtype),
+        interpret=interpret,
+    )(val, col, x).reshape(nchunks * c, nvecs)

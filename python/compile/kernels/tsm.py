@@ -1,0 +1,67 @@
+# Layer-1 Pallas kernels for tall-and-skinny dense matrix products
+# (the paper's ghost_tsmttsm / ghost_tsmm, section 5.2).
+#
+# TPU mapping: the paper unrolls these kernels over AVX registers because
+# BLAS libraries block for square GEMM and collapse on m,k << n. On TPU the
+# equivalent insight is that the MXU wants (B, m) x (B, k) panel products
+# with the long dimension n tiled over the grid and the tiny (m, k) result
+# accumulated in a VMEM-resident output block that every grid step revisits.
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _tsmttsm_kernel(v_ref, w_ref, o_ref):
+    """Grid step i: o += V[i*B:(i+1)*B, :]^T @ W[i*B:(i+1)*B, :]."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += v_ref[...].T @ w_ref[...]
+
+
+def _tsmm_kernel(v_ref, x_ref, o_ref):
+    """Grid step i: O[i*B:(i+1)*B, :] = V[i*B:(i+1)*B, :] @ X."""
+    o_ref[...] = v_ref[...] @ x_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def tsmttsm(v, w, *, block=256, interpret=True):
+    """X = V^T W, V (n,m), W (n,k), m,k << n. n must be divisible by block."""
+    n, m = v.shape
+    _, k = w.shape
+    assert n % block == 0, f"n={n} not divisible by block={block}"
+    return pl.pallas_call(
+        _tsmttsm_kernel,
+        grid=(n // block,),
+        in_specs=[
+            pl.BlockSpec((block, m), lambda i: (i, 0)),
+            pl.BlockSpec((block, k), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((m, k), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, k), v.dtype),
+        interpret=interpret,
+    )(v, w)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def tsmm(v, x, *, block=256, interpret=True):
+    """W = V X, V (n,m), X (m,k). n must be divisible by block."""
+    n, m = v.shape
+    _, k = x.shape
+    assert n % block == 0, f"n={n} not divisible by block={block}"
+    return pl.pallas_call(
+        _tsmm_kernel,
+        grid=(n // block,),
+        in_specs=[
+            pl.BlockSpec((block, m), lambda i: (i, 0)),
+            pl.BlockSpec((m, k), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, k), v.dtype),
+        interpret=interpret,
+    )(v, x)

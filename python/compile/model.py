@@ -1,0 +1,230 @@
+# Layer-2: GHOST compute graphs in JAX, calling the Layer-1 Pallas kernels.
+#
+# Each entry of SPECS below is lowered AOT (aot.py) to one HLO-text artifact
+# that the rust runtime (rust/src/runtime/) compiles once per process and
+# executes on the hot path. Shapes are static per artifact ("shape
+# buckets"): a rank whose local partition is smaller pads up to the bucket,
+# exactly like bucketed AOT serving. Input order in the HLO module equals
+# the positional argument order of the functions here.
+from dataclasses import dataclass, field
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref, sell, tsm
+
+F64 = jnp.float64
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+# ---------------------------------------------------------------------------
+# L2 graphs
+# ---------------------------------------------------------------------------
+
+def spmv(val, col, x):
+    """Plain SpMV; the accelerator-rank hot kernel for hetero execution."""
+    return (sell.sell_spmv(val, col, x),)
+
+
+def spmmv(val, col, x):
+    """Block-vector SpMMV (row-major interleaved block vectors)."""
+    return (sell.sell_spmmv(val, col, x),)
+
+
+def fused_spmmv(val, col, x, y, alpha, beta, gamma, delta, eta, z):
+    """Augmented SpMMV (paper section 5.3): shift, axpby, chained axpby and
+    the three dot products, fused into a single module so XLA keeps every
+    intermediate in registers/cache instead of round-tripping memory."""
+    n = y.shape[0]
+    ax = sell.sell_spmmv(val, col, x)
+    xl = x[:n]
+    ynew = alpha * (ax - gamma[None, :] * xl) + beta * y
+    znew = delta * z + eta * ynew
+    dots = jnp.stack(
+        [
+            jnp.sum(ynew * ynew, axis=0),
+            jnp.sum(xl * ynew, axis=0),
+            jnp.sum(xl * xl, axis=0),
+        ]
+    )
+    return ynew, znew, dots
+
+
+def tsmttsm(v, w):
+    return (tsm.tsmttsm(v, w),)
+
+
+def tsmm(v, x):
+    return (tsm.tsmm(v, x),)
+
+
+def cg_step(val, col, x, r, p, rr):
+    """One full (unpreconditioned) CG iteration as a single fused module.
+
+    Demonstrates the paper's kernel-fusion thesis at solver granularity:
+    the SpMV, both dots and all three vector updates lower into one HLO
+    module with no host round-trip inside the iteration.
+    """
+    q = sell.sell_spmv(val, col, p)
+    pq = jnp.sum(p * q)
+    alpha = rr / pq
+    x2 = x + alpha * p
+    r2 = r - alpha * q
+    rr2 = jnp.sum(r2 * r2)
+    beta = rr2 / rr
+    p2 = r2 + beta * p
+    return x2, r2, p2, rr2
+
+
+def kpm_step(val, col, v_prev, v_cur):
+    """One Kernel Polynomial Method recurrence step with fused moments:
+
+        v_next = 2 * H v_cur - v_prev
+        eta0   = <v_cur, v_cur>,  eta1 = <v_cur, v_next>   (per column)
+
+    This is the augmented SpMMV the paper credits with a 2.5x solver
+    speedup for KPM (section 5.3); block vectors of width nvecs.
+    """
+    n = v_cur.shape[0]
+    av = sell.sell_spmmv(val, col, v_cur)
+    v_next = 2.0 * av - v_prev[:n]
+    eta0 = jnp.sum(v_cur[:n] * v_cur[:n], axis=0)
+    eta1 = jnp.sum(v_cur[:n] * v_next, axis=0)
+    return v_next, eta0, eta1
+
+
+# ---------------------------------------------------------------------------
+# Artifact registry (shape buckets)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ArtifactSpec:
+    name: str
+    fn: Callable
+    args: list  # list of jax.ShapeDtypeStruct in positional order
+    meta: dict = field(default_factory=dict)
+
+
+def _sell_args(nchunks, c, w, nx, dtype):
+    return [
+        jax.ShapeDtypeStruct((nchunks, c, w), dtype),
+        jax.ShapeDtypeStruct((nchunks, c, w), I32),
+        jax.ShapeDtypeStruct((nx,), dtype),
+    ]
+
+
+def _sell_blk_args(nchunks, c, w, nx, nvecs, dtype):
+    return [
+        jax.ShapeDtypeStruct((nchunks, c, w), dtype),
+        jax.ShapeDtypeStruct((nchunks, c, w), I32),
+        jax.ShapeDtypeStruct((nx, nvecs), dtype),
+    ]
+
+
+def build_specs():
+    specs = []
+    # SpMV buckets for accelerator ranks. C=32 per the paper's
+    # heterogeneous-C rule (max SIMD width over all devices).
+    for tag, nchunks, w, halo in [("s", 64, 16, 512), ("m", 256, 16, 1024)]:
+        c = 32
+        n = nchunks * c
+        nx = n + halo
+        specs.append(
+            ArtifactSpec(
+                name=f"spmv_f64_{tag}",
+                fn=spmv,
+                args=_sell_args(nchunks, c, w, nx, F64),
+                meta=dict(kind="spmv", dtype="f64", nchunks=nchunks, c=c,
+                          w=w, nrows=n, nx=nx),
+            )
+        )
+    # Block-vector SpMMV bucket.
+    nchunks, c, w, halo, nvecs = 64, 32, 16, 512, 4
+    n = nchunks * c
+    nx = n + halo
+    specs.append(
+        ArtifactSpec(
+            name="spmmv_f64_s_v4",
+            fn=spmmv,
+            args=_sell_blk_args(nchunks, c, w, nx, nvecs, F64),
+            meta=dict(kind="spmmv", dtype="f64", nchunks=nchunks, c=c, w=w,
+                      nrows=n, nx=nx, nvecs=nvecs),
+        )
+    )
+    # Fused/augmented SpMMV bucket.
+    specs.append(
+        ArtifactSpec(
+            name="fused_f64_s_v4",
+            fn=fused_spmmv,
+            args=_sell_blk_args(nchunks, c, w, nx, nvecs, F64)
+            + [
+                jax.ShapeDtypeStruct((n, nvecs), F64),   # y
+                jax.ShapeDtypeStruct((), F64),            # alpha
+                jax.ShapeDtypeStruct((), F64),            # beta
+                jax.ShapeDtypeStruct((nvecs,), F64),      # gamma (vshift)
+                jax.ShapeDtypeStruct((), F64),            # delta
+                jax.ShapeDtypeStruct((), F64),            # eta
+                jax.ShapeDtypeStruct((n, nvecs), F64),    # z
+            ],
+            meta=dict(kind="fused_spmmv", dtype="f64", nchunks=nchunks, c=c,
+                      w=w, nrows=n, nx=nx, nvecs=nvecs),
+        )
+    )
+    # Tall-skinny kernels.
+    n, m, k = 65536, 4, 4
+    specs.append(
+        ArtifactSpec(
+            name="tsmttsm_f64_m4_k4",
+            fn=tsmttsm,
+            args=[jax.ShapeDtypeStruct((n, m), F64),
+                  jax.ShapeDtypeStruct((n, k), F64)],
+            meta=dict(kind="tsmttsm", dtype="f64", nrows=n, m=m, k=k),
+        )
+    )
+    specs.append(
+        ArtifactSpec(
+            name="tsmm_f64_m4_k4",
+            fn=tsmm,
+            args=[jax.ShapeDtypeStruct((n, m), F64),
+                  jax.ShapeDtypeStruct((m, k), F64)],
+            meta=dict(kind="tsmm", dtype="f64", nrows=n, m=m, k=k),
+        )
+    )
+    # Whole-iteration solver steps (local/no-halo buckets: nx == nrows).
+    nchunks, c, w = 64, 32, 16
+    n = nchunks * c
+    specs.append(
+        ArtifactSpec(
+            name="cg_step_f64_s",
+            fn=cg_step,
+            args=_sell_args(nchunks, c, w, n, F64)[:2]
+            + [
+                jax.ShapeDtypeStruct((n,), F64),  # x
+                jax.ShapeDtypeStruct((n,), F64),  # r
+                jax.ShapeDtypeStruct((n,), F64),  # p
+                jax.ShapeDtypeStruct((), F64),    # rr
+            ],
+            meta=dict(kind="cg_step", dtype="f64", nchunks=nchunks, c=c, w=w,
+                      nrows=n, nx=n),
+        )
+    )
+    nvecs = 2
+    specs.append(
+        ArtifactSpec(
+            name="kpm_step_f64_s_v2",
+            fn=kpm_step,
+            args=_sell_blk_args(nchunks, c, w, n, nvecs, F64)[:2]
+            + [
+                jax.ShapeDtypeStruct((n, nvecs), F64),  # v_prev
+                jax.ShapeDtypeStruct((n, nvecs), F64),  # v_cur
+            ],
+            meta=dict(kind="kpm_step", dtype="f64", nchunks=nchunks, c=c,
+                      w=w, nrows=n, nx=n, nvecs=nvecs),
+        )
+    )
+    return specs
+
+
+SPECS = build_specs()

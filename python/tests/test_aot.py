@@ -1,0 +1,36 @@
+# AOT pipeline tests: HLO-text emission and manifest integrity.
+import os
+import tempfile
+
+import compile  # noqa: F401
+from compile import aot, model
+
+
+def test_lower_one_spec_produces_hlo_text():
+    spec = model.SPECS[0]
+    text = aot.lower_spec(spec)
+    assert "ENTRY" in text and "HloModule" in text
+    # text interchange: must not be a serialized proto blob
+    assert text.isprintable() or "\n" in text
+
+
+def test_manifest_line_roundtrip():
+    spec = model.SPECS[0]
+    line = aot.manifest_line(spec, "f.hlo.txt", 1)
+    kv = dict(item.split("=", 1) for item in line.split())
+    assert kv["name"] == spec.name
+    assert kv["file"] == "f.hlo.txt"
+    assert kv["kind"] == spec.meta["kind"]
+    assert int(kv["nouts"]) == 1
+
+
+def test_main_only_subset(tmp_path=None):
+    outdir = tempfile.mkdtemp()
+    rc = aot.main(["--outdir", outdir, "--only", "tsmm_f64_m4_k4"])
+    assert rc == 0
+    files = os.listdir(outdir)
+    assert "tsmm_f64_m4_k4.hlo.txt" in files
+    assert "manifest.txt" in files
+    with open(os.path.join(outdir, "manifest.txt")) as f:
+        lines = [l for l in f.read().splitlines() if l.strip()]
+    assert len(lines) == 1 and "tsmm_f64_m4_k4" in lines[0]

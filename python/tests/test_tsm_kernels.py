@@ -1,0 +1,67 @@
+# Tall-skinny dense kernels (ghost_tsmttsm / ghost_tsmm) vs jnp matmul.
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import compile  # noqa: F401
+from compile.kernels import ref, tsm
+
+TOL = {np.float32: 2e-4, np.float64: 1e-10}
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    nblocks=st.integers(1, 8),
+    block=st.sampled_from([8, 64, 256]),
+    m=st.integers(1, 9),
+    k=st.integers(1, 9),
+    dtype=st.sampled_from([np.float32, np.float64]),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_tsmttsm(nblocks, block, m, k, dtype, seed):
+    rng = np.random.default_rng(seed)
+    n = nblocks * block
+    v = rng.standard_normal((n, m)).astype(dtype)
+    w = rng.standard_normal((n, k)).astype(dtype)
+    got = np.asarray(tsm.tsmttsm(v, w, block=block))
+    want = np.asarray(ref.tsmttsm(v, w))
+    tol = TOL[dtype] * max(1.0, np.abs(want).max())
+    np.testing.assert_allclose(got, want, rtol=0, atol=tol)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    nblocks=st.integers(1, 8),
+    block=st.sampled_from([8, 64, 256]),
+    m=st.integers(1, 9),
+    k=st.integers(1, 9),
+    dtype=st.sampled_from([np.float32, np.float64]),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_tsmm(nblocks, block, m, k, dtype, seed):
+    rng = np.random.default_rng(seed)
+    n = nblocks * block
+    v = rng.standard_normal((n, m)).astype(dtype)
+    x = rng.standard_normal((m, k)).astype(dtype)
+    got = np.asarray(tsm.tsmm(v, x, block=block))
+    want = np.asarray(ref.tsmm(v, x))
+    tol = TOL[dtype] * max(1.0, np.abs(want).max())
+    np.testing.assert_allclose(got, want, rtol=0, atol=tol)
+
+
+def test_tsmttsm_accumulation_order_stability():
+    """The grid accumulation must traverse blocks deterministically."""
+    rng = np.random.default_rng(3)
+    v = rng.standard_normal((1024, 4))
+    w = rng.standard_normal((1024, 4))
+    a = np.asarray(tsm.tsmttsm(v, w, block=128))
+    b = np.asarray(tsm.tsmttsm(v, w, block=128))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_tsmm_single_column():
+    """m=k=1 degenerates to scal; exactness expected."""
+    rng = np.random.default_rng(4)
+    v = rng.standard_normal((256, 1))
+    x = np.array([[2.5]])
+    got = np.asarray(tsm.tsmm(v, x, block=64))
+    np.testing.assert_allclose(got, 2.5 * v, rtol=0, atol=0)

@@ -1,0 +1,60 @@
+# Shared helpers: build SELL-C-sigma operands from dense matrices so the
+# kernels can be checked against plain dense matmul (a stronger oracle than
+# ref.py, which shares the SELL layout conventions with the kernels).
+import numpy as np
+
+
+def dense_to_sell(a, c, sigma=1, nx=None):
+    """Convert dense (nr, ncols) matrix to SELL-C-sigma arrays.
+
+    Returns (val, col, perm) where val/col are (nchunks, C, W) with W the
+    maximum chunk width, and perm is the sigma-scope row permutation
+    (row i of the SELL matrix is row perm[i] of `a`). Padding entries get
+    val=0, col=0.
+    """
+    nr, ncols = a.shape
+    nchunks = (nr + c - 1) // c
+    nrp = nchunks * c
+    rowlen = np.count_nonzero(a, axis=1)
+    rowlen = np.concatenate([rowlen, np.zeros(nrp - nr, dtype=int)])
+    perm = np.arange(nrp)
+    # sigma-scope sorting by descending row length
+    for s0 in range(0, nrp, max(sigma, 1)):
+        s1 = min(s0 + max(sigma, 1), nrp)
+        order = np.argsort(-rowlen[perm[s0:s1]], kind="stable")
+        perm[s0:s1] = perm[s0:s1][order]
+    w = 1
+    for ch in range(nchunks):
+        rows = perm[ch * c:(ch + 1) * c]
+        w = max(w, int(rowlen[rows].max()) if len(rows) else 1)
+    val = np.zeros((nchunks, c, w), dtype=a.dtype)
+    col = np.zeros((nchunks, c, w), dtype=np.int32)
+    for ch in range(nchunks):
+        for r in range(c):
+            src = perm[ch * c + r]
+            if src >= nr:
+                continue
+            nz = np.nonzero(a[src])[0]
+            val[ch, r, :len(nz)] = a[src, nz]
+            col[ch, r, :len(nz)] = nz.astype(np.int32)
+    return val, col, perm
+
+
+def random_sparse_dense(rng, nr, ncols, density=0.2, dtype=np.float64):
+    """Random dense matrix with approximately `density` nonzeros."""
+    a = rng.standard_normal((nr, ncols)).astype(dtype)
+    mask = rng.random((nr, ncols)) < density
+    return np.where(mask, a, 0.0).astype(dtype)
+
+
+def sell_apply_dense(a, perm, x):
+    """Dense oracle: y[i] = (A x)[perm[i]] (SELL row order), padded rows 0."""
+    nr = a.shape[0]
+    ax = a @ x
+    nrp = len(perm)
+    pad_shape = (nrp,) + ax.shape[1:]
+    out = np.zeros(pad_shape, dtype=ax.dtype)
+    for i, src in enumerate(perm):
+        if src < nr:
+            out[i] = ax[src]
+    return out

@@ -1,0 +1,682 @@
+//! GHOST benchmark harness (`cargo bench`) — regenerates every table and
+//! figure of the paper's evaluation (DESIGN.md section 4 maps each bench
+//! to its paper counterpart). criterion is not vendorable offline; this
+//! is a plain `harness = false` binary using ghost::benchutil.
+//!
+//! Run all:           cargo bench
+//! Run a subset:      cargo bench -- fig7 fig11
+//!
+//! Absolute numbers are workstation numbers (single-core host; see
+//! EXPERIMENTS.md); what must match the paper is the *shape*: who wins,
+//! by what factor, where crossovers sit.
+
+use std::time::{Duration, Instant};
+
+use ghost::benchutil::{bench, bench_for, gflops, Stats, Table};
+use ghost::comm::context::{build_contexts, Partition};
+use ghost::comm::exchange::{dist_spmv, DistMatrix, OverlapMode};
+use ghost::comm::{CommConfig, World};
+use ghost::core::{Rng, Scalar, C64};
+use ghost::densemat::{tsm, DenseMat, Layout};
+use ghost::kernels::spmmv::{sell_spmmv, sell_spmmv_generic};
+use ghost::kernels::spmv::{crs_spmv, sell_spmv_mt, SpmvVariant};
+use ghost::matgen;
+use ghost::perfmodel;
+use ghost::solvers::kpm::{kpm_moments, KpmConfig, KpmVariant};
+use ghost::solvers::krylov_schur::{eigs_largest_real, EigOpts};
+use ghost::solvers::{KernelMode, MpiOp};
+use ghost::sparsemat::SellMat;
+use ghost::taskq::TaskQueue;
+use ghost::topology::Machine;
+
+fn main() {
+    let filters: Vec<String> = std::env::args()
+        .skip(1)
+        .filter(|a| !a.starts_with("--"))
+        .collect();
+    let want = |name: &str| filters.is_empty() || filters.iter().any(|f| name.contains(f.as_str()));
+    let t0 = Instant::now();
+    if want("fig5_overlap") {
+        fig5_overlap();
+    }
+    if want("fig6_formats") {
+        fig6_formats();
+    }
+    if want("sec41_hetero") {
+        sec41_hetero();
+    }
+    if want("sec51_construction") {
+        sec51_construction();
+    }
+    if want("fig7_tsm") {
+        fig7_tsm();
+    }
+    if want("fig8_rowcol") {
+        fig8_rowcol();
+    }
+    if want("fig9_vectorization") {
+        fig9_vectorization();
+    }
+    if want("fig10_codegen") {
+        fig10_codegen();
+    }
+    if want("fig11_scaling") {
+        fig11_scaling();
+    }
+    if want("kahan") {
+        kahan_accuracy();
+    }
+    if want("fusion_ablation") {
+        fusion_ablation();
+    }
+    println!("\n[all benches done in {:.1}s]", t0.elapsed().as_secs_f64());
+}
+
+fn header(title: &str, paper: &str) {
+    println!("\n=== {title} ===");
+    println!("    reproduces: {paper}");
+}
+
+// ---------------------------------------------------------------------------
+// Fig 5: communication/computation overlap variants
+// ---------------------------------------------------------------------------
+fn fig5_overlap() {
+    header(
+        "fig5_overlap",
+        "Fig 5 — runtime of no-overlap / naive / task-mode SpMV (cage15 stand-in, 4 ranks)",
+    );
+    let n = 30_000;
+    let iters = 12;
+    let nranks = 4;
+    let a = matgen::cage_like::<f64>(n, 11);
+    let part = Partition::uniform(n, nranks);
+    let ctxs = build_contexts(&a, &part).unwrap();
+    let dms: Vec<DistMatrix<f64>> = ctxs
+        .iter()
+        .map(|c| DistMatrix::from_context(c, 32, 1024).unwrap())
+        .collect();
+    let mut table = Table::new(&["fabric", "variant", "ms/iter", "vs no-overlap"]);
+    for (fabric, async_progress) in
+        [("async-progress", true), ("non-progressing", false)]
+    {
+        let cfg = CommConfig {
+            async_progress,
+            latency: Duration::from_micros(300),
+            bandwidth_bps: 2.0e8,
+            eager_limit: 4 * 1024,
+            ..CommConfig::default()
+        };
+        let mut base = 0.0f64;
+        for (name, mode) in [
+            ("No Overlap", OverlapMode::NoOverlap),
+            ("Naive", OverlapMode::NaiveOverlap),
+            ("GHOST task", OverlapMode::TaskMode),
+        ] {
+            let dms_ref = &dms;
+            let cfg2 = cfg.clone();
+            let t0 = Instant::now();
+            World::run(nranks, cfg2, move |comm| {
+                let dm = &dms_ref[comm.rank()];
+                let q = TaskQueue::new(Machine::small_node(2), 2);
+                let mut xbuf = vec![0.0f64; dm.xbuf_len()];
+                for (i, v) in xbuf.iter_mut().take(dm.nlocal).enumerate() {
+                    *v = (i as f64 * 0.01).sin();
+                }
+                let mut y = vec![0.0f64; dm.full.nrows_padded()];
+                for _ in 0..iters {
+                    dist_spmv(dm, &comm, &mut xbuf, &mut y, mode, 1, Some(&q)).unwrap();
+                }
+                q.shutdown();
+            });
+            let ms = t0.elapsed().as_secs_f64() * 1e3 / iters as f64;
+            if mode == OverlapMode::NoOverlap {
+                base = ms;
+            }
+            table.row(&[
+                fabric.into(),
+                name.into(),
+                format!("{ms:.2}"),
+                format!("{:.2}x", base / ms),
+            ]);
+        }
+    }
+    table.print();
+    println!("paper shape: overlap wins; task-mode advantage survives a non-progressing MPI");
+}
+
+// ---------------------------------------------------------------------------
+// Fig 6: SELL-C-sigma vs the device-specific baseline format (CRS)
+// ---------------------------------------------------------------------------
+fn fig6_formats() {
+    header(
+        "fig6_formats",
+        "Fig 6 — SpMV: unified SELL-C-sigma vs vendor baseline (CRS) across the matrix suite",
+    );
+    let mut table = Table::new(&[
+        "matrix", "n", "nnz/row", "beta", "CRS Gflop/s", "SELL Gflop/s", "SELL/CRS",
+    ]);
+    for e in matgen::suite_f64(2) {
+        let a = e.mat;
+        let n = a.nrows();
+        let sell = SellMat::from_crs(&a, 32, 256).unwrap();
+        let x = vec![1.0f64; n];
+        let mut y = vec![0.0f64; n];
+        let st_crs = bench_for(Duration::from_millis(300), 3, || {
+            crs_spmv(&a, &x, &mut y);
+        });
+        let mut xs = vec![0.0f64; sell.nrows_padded().max(n)];
+        xs[..n].copy_from_slice(&x);
+        let mut ys = vec![0.0f64; sell.nrows_padded()];
+        let st_sell = bench_for(Duration::from_millis(300), 3, || {
+            sell_spmv_mt(&sell, &xs, &mut ys, SpmvVariant::Vectorized, 1);
+        });
+        let fl = 2.0 * a.nnz() as f64;
+        let g_crs = gflops(fl, st_crs.median);
+        let g_sell = gflops(fl, st_sell.median);
+        table.row(&[
+            e.name.into(),
+            n.to_string(),
+            format!("{:.1}", a.avg_row_len()),
+            format!("{:.3}", sell.beta()),
+            format!("{g_crs:.2}"),
+            format!("{g_sell:.2}"),
+            format!("{:.2}", g_sell / g_crs),
+        ]);
+    }
+    table.print();
+    println!("paper shape: SELL on par with or better than the baseline for most matrices");
+}
+
+// ---------------------------------------------------------------------------
+// Section 4.1: heterogeneous SpMV (requires artifacts)
+// ---------------------------------------------------------------------------
+fn sec41_hetero() {
+    header(
+        "sec41_hetero",
+        "Section 4.1 listings — CPU / GPU / heterogeneous SpMV (model Gflop/s, Table 1 devices)",
+    );
+    let dir = std::env::var("GHOST_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    if !std::path::Path::new(&dir).join("manifest.txt").exists() {
+        println!("SKIPPED: no artifacts (run `make artifacts`)");
+        return;
+    }
+    use ghost::hetero::{presets, HeteroSpmv};
+    let a = matgen::poisson7::<f64>(16, 16, 16);
+    let n = a.nrows();
+    let x = vec![1.0f64; n];
+    let scale = 2e-4;
+    let mut table = Table::new(&["configuration", "rows/rank", "model Gflop/s", "sum"]);
+    let mut run = |name: &str, setups, weights: Option<Vec<f64>>| {
+        let mut engine = HeteroSpmv::new(setups)
+            .with_comm(CommConfig::default())
+            .with_time_scale(scale);
+        if let Some(w) = weights {
+            engine = engine.with_weights(w);
+        }
+        let (reports, y) = engine.run(&a, &x, 5).unwrap();
+        let mut want = vec![0.0; n];
+        a.spmv(&x, &mut want);
+        for i in 0..n {
+            assert!((y[i] - want[i]).abs() < 1e-8);
+        }
+        let total: f64 = reports.iter().map(|r| r.model_gflops).sum();
+        table.row(&[
+            name.into(),
+            reports
+                .iter()
+                .map(|r| r.rows.to_string())
+                .collect::<Vec<_>>()
+                .join("/"),
+            reports
+                .iter()
+                .map(|r| format!("{:.1}", r.model_gflops))
+                .collect::<Vec<_>>()
+                .join("/"),
+            format!("{total:.1}"),
+        ]);
+    };
+    let p = std::path::PathBuf::from(&dir);
+    run("CPU 1 socket", presets::cpu_only(1, 1), None);
+    run("CPU 2 sockets", presets::cpu_only(2, 1), None);
+    run("CPU+GPU 1:2.75", presets::cpu_gpu(p.clone(), 1), Some(vec![1.0, 2.75]));
+    run("full node", presets::full_node(p, 1), None);
+    table.print();
+    println!("paper: 16.4 Gflop/s on 2 sockets; GPU 2.75x one socket; hetero ~ sum of parts");
+}
+
+// ---------------------------------------------------------------------------
+// Section 5.1: matrix construction cost in SpMV units
+// ---------------------------------------------------------------------------
+fn sec51_construction() {
+    header(
+        "sec51_construction",
+        "Section 5.1 — CRS->SELL construction cost in SpMV units (paper: ~48 SpMVs full, ~2 refill)",
+    );
+    let a = matgen::stencil27::<f64>(24, 24, 12); // ML_Geer-ish density
+    let n = a.nrows();
+    let sell0 = SellMat::from_crs(&a, 32, 128).unwrap();
+    let x = vec![1.0f64; n];
+    let mut xs = vec![0.0f64; sell0.nrows_padded().max(n)];
+    xs[..n].copy_from_slice(&x);
+    let mut ys = vec![0.0f64; sell0.nrows_padded()];
+    let st_spmv = bench_for(Duration::from_millis(400), 5, || {
+        sell_spmv_mt(&sell0, &xs, &mut ys, SpmvVariant::Vectorized, 1);
+    });
+    let t_spmv = st_spmv.median.as_secs_f64();
+
+    // full construction: SELL build + communication buffer setup (2 ranks)
+    let part = Partition::uniform(n, 2);
+    let st_full = bench(1, 3, || {
+        let _ctxs = build_contexts(&a, &part).unwrap();
+        let _s = SellMat::from_crs(&a, 32, 128).unwrap();
+    });
+    // SELL-only construction
+    let st_sell = bench(1, 3, || {
+        let _s = SellMat::from_crs(&a, 32, 128).unwrap();
+    });
+    // comm setup only
+    let st_ctx = bench(1, 3, || {
+        let _ctxs = build_contexts(&a, &part).unwrap();
+    });
+    // value refill (pattern unchanged)
+    let mut sell = SellMat::from_crs(&a, 32, 128).unwrap();
+    let st_refill = bench(1, 5, || {
+        sell.refill_values(&a).unwrap();
+    });
+    let in_spmvs = |st: Stats| st.median.as_secs_f64() / t_spmv;
+    let mut table = Table::new(&["step", "time [ms]", "in SpMV units", "paper"]);
+    table.row(&[
+        "full construction (SELL + comm setup)".into(),
+        format!("{:.1}", st_full.median.as_secs_f64() * 1e3),
+        format!("{:.1}", in_spmvs(st_full)),
+        "~48".into(),
+    ]);
+    table.row(&[
+        "comm buffer setup only".into(),
+        format!("{:.1}", st_ctx.median.as_secs_f64() * 1e3),
+        format!("{:.1}", in_spmvs(st_ctx)),
+        "78% of total".into(),
+    ]);
+    table.row(&[
+        "SELL assembly only".into(),
+        format!("{:.1}", st_sell.median.as_secs_f64() * 1e3),
+        format!("{:.1}", in_spmvs(st_sell)),
+        "22% of total".into(),
+    ]);
+    table.row(&[
+        "value refill (same pattern)".into(),
+        format!("{:.2}", st_refill.median.as_secs_f64() * 1e3),
+        format!("{:.1}", in_spmvs(st_refill)),
+        "~2".into(),
+    ]);
+    table.print();
+    println!("note: this host's 260 MiB L3 keeps every working set cache-resident,");
+    println!("compressing the paper's DRAM-bound 2.5x to the observed gain; ordering is preserved");
+}
+
+// ---------------------------------------------------------------------------
+// Fig 7: tall & skinny kernels vs generic GEMM ("MKL stand-in")
+// ---------------------------------------------------------------------------
+fn fig7_tsm() {
+    header(
+        "fig7_tsm",
+        "Fig 7 — tsmttsm/tsmm: specialized kernels vs generic GEMM, speedup over baseline",
+    );
+    let n = 1 << 17;
+    let mut table = Table::new(&["kernel", "m", "k", "generic ms", "special ms", "speedup"]);
+    for &(m, k) in &[(1usize, 1usize), (2, 2), (4, 4), (8, 4), (8, 8), (16, 16)] {
+        let v = DenseMat::<f64>::random(n, m, Layout::RowMajor, 1);
+        let w = DenseMat::<f64>::random(n, k, Layout::RowMajor, 2);
+        let mut x1 = DenseMat::<f64>::zeros(m, k, Layout::RowMajor);
+        let mut x2 = x1.clone();
+        let st_g = bench_for(Duration::from_millis(250), 3, || {
+            tsm::tsmttsm_generic(&mut x1, 1.0, &v, &w, 0.0).unwrap();
+        });
+        let st_s = bench_for(Duration::from_millis(250), 3, || {
+            let c = tsm::tsmttsm(&mut x2, 1.0, &v, &w, 0.0).unwrap();
+            debug_assert_eq!(c, tsm::KernelChoice::Specialized);
+        });
+        table.row(&[
+            "tsmttsm".into(),
+            m.to_string(),
+            k.to_string(),
+            format!("{:.2}", st_g.median.as_secs_f64() * 1e3),
+            format!("{:.2}", st_s.median.as_secs_f64() * 1e3),
+            format!("{:.1}x", st_g.median.as_secs_f64() / st_s.median.as_secs_f64()),
+        ]);
+    }
+    for &(m, k) in &[(1usize, 1usize), (2, 2), (4, 4), (8, 8), (16, 16)] {
+        let v = DenseMat::<f64>::random(n, m, Layout::RowMajor, 3);
+        let xm = DenseMat::<f64>::random(m, k, Layout::RowMajor, 4);
+        let mut w1 = DenseMat::<f64>::zeros(n, k, Layout::RowMajor);
+        let mut w2 = w1.clone();
+        let st_g = bench_for(Duration::from_millis(250), 3, || {
+            tsm::tsmm_generic(&mut w1, 1.0, &v, &xm, 0.0).unwrap();
+        });
+        let st_s = bench_for(Duration::from_millis(250), 3, || {
+            tsm::tsmm(&mut w2, 1.0, &v, &xm, 0.0).unwrap();
+        });
+        table.row(&[
+            "tsmm".into(),
+            m.to_string(),
+            k.to_string(),
+            format!("{:.2}", st_g.median.as_secs_f64() * 1e3),
+            format!("{:.2}", st_s.median.as_secs_f64() * 1e3),
+            format!("{:.1}x", st_g.median.as_secs_f64() / st_s.median.as_secs_f64()),
+        ]);
+    }
+    table.print();
+    println!("paper shape: specialized >= baseline everywhere, large gains at small m,k (up to ~30x)");
+}
+
+// ---------------------------------------------------------------------------
+// Fig 8: SpMMV with row- vs col-major block vectors
+// ---------------------------------------------------------------------------
+fn fig8_rowcol() {
+    header(
+        "fig8_rowcol",
+        "Fig 8 — SpMMV performance, row-major vs col-major block vectors, growing width",
+    );
+    let a = matgen::poisson7::<f64>(24, 24, 16);
+    let n = a.nrows();
+    let sell = SellMat::from_crs(&a, 32, 256).unwrap();
+    let np = sell.nrows_padded();
+    let mut table = Table::new(&[
+        "width", "row-major Gflop/s", "col-major Gflop/s", "row/col", "roofline",
+    ]);
+    for nv in [1usize, 2, 4, 8, 16, 32] {
+        let xr = DenseMat::<f64>::random(np.max(n), nv, Layout::RowMajor, nv as u64);
+        let xc = xr.to_layout(Layout::ColMajor);
+        let mut yr = DenseMat::<f64>::zeros(np, nv, Layout::RowMajor);
+        let mut yc = DenseMat::<f64>::zeros(np, nv, Layout::ColMajor);
+        let st_r = bench_for(Duration::from_millis(200), 3, || {
+            sell_spmmv(&sell, &xr, &mut yr);
+        });
+        let st_c = bench_for(Duration::from_millis(200), 3, || {
+            sell_spmmv(&sell, &xc, &mut yc);
+        });
+        let fl = perfmodel::spmv_flops(&sell, nv);
+        let dev = ghost::topology::emmy_cpu_socket();
+        table.row(&[
+            nv.to_string(),
+            format!("{:.2}", gflops(fl, st_r.median)),
+            format!("{:.2}", gflops(fl, st_c.median)),
+            format!("{:.2}", st_c.median.as_secs_f64() / st_r.median.as_secs_f64()),
+            format!("{:.1}", perfmodel::predict_spmmv(&dev, &sell, nv)),
+        ]);
+    }
+    table.print();
+    println!("paper shape: row-major (interleaved) wins, gap grows with width");
+}
+
+// ---------------------------------------------------------------------------
+// Fig 9: vectorization impact on SpMV (complex double)
+// ---------------------------------------------------------------------------
+fn fig9_vectorization() {
+    header(
+        "fig9_vectorization",
+        "Fig 9 — SpMV kernel variants on the 3Dspectralwave stand-in (complex double)",
+    );
+    println!("NOTE: single-core host — the paper's core-scaling axis collapses; the");
+    println!("      kernel-structure comparison (CRS vs scalar-SELL vs vectorized-SELL) remains.");
+    let a = matgen::spectralwave_like::<C64>(18, 18, 10, 1);
+    let n = a.nrows();
+    let sell = SellMat::from_crs(&a, 32, 256).unwrap();
+    let mut rng = Rng::new(2);
+    let x: Vec<C64> = (0..n).map(|_| C64::new(rng.normal(), rng.normal())).collect();
+    let mut xs = vec![C64::ZERO; sell.nrows_padded().max(n)];
+    xs[..n].copy_from_slice(&x);
+    let mut table = Table::new(&["kernel", "threads", "Gflop/s"]);
+    let fl = perfmodel::spmv_flops(&sell, 1);
+    {
+        let mut y = vec![C64::ZERO; n];
+        let st = bench_for(Duration::from_millis(200), 3, || {
+            crs_spmv(&a, &x, &mut y);
+        });
+        table.row(&["CRS (baseline)".into(), "1".into(), format!("{:.2}", gflops(fl, st.median))]);
+    }
+    for variant in [SpmvVariant::Scalar, SpmvVariant::Vectorized] {
+        for nt in [1usize, 2, 4] {
+            let mut ys = vec![C64::ZERO; sell.nrows_padded()];
+            let st = bench_for(Duration::from_millis(200), 3, || {
+                sell_spmv_mt(&sell, &xs, &mut ys, variant, nt);
+            });
+            table.row(&[
+                format!("SELL {variant:?}"),
+                nt.to_string(),
+                format!("{:.2}", gflops(fl, st.median)),
+            ]);
+        }
+    }
+    table.print();
+    println!("paper shape: the vectorized SELL kernel needs fewer cores to saturate;");
+    println!("here: vectorized > scalar ~ CRS at equal thread count");
+}
+
+// ---------------------------------------------------------------------------
+// Fig 10: hard-coded block widths (code generation)
+// ---------------------------------------------------------------------------
+fn fig10_codegen() {
+    header(
+        "fig10_codegen",
+        "Fig 10 — SpMMV with compile-time specialized widths vs generic runtime loop",
+    );
+    let a = matgen::poisson7::<f64>(24, 24, 16);
+    let n = a.nrows();
+    let sell = SellMat::from_crs(&a, 32, 256).unwrap();
+    let np = sell.nrows_padded();
+    let mut table = Table::new(&["width", "generic Gflop/s", "specialized Gflop/s", "gain"]);
+    for nv in [1usize, 2, 4, 8, 16] {
+        let x = DenseMat::<f64>::random(np.max(n), nv, Layout::RowMajor, nv as u64);
+        let mut y1 = DenseMat::<f64>::zeros(np, nv, Layout::RowMajor);
+        let mut y2 = y1.clone();
+        let st_g = bench_for(Duration::from_millis(200), 3, || {
+            sell_spmmv_generic(&sell, &x, &mut y1);
+        });
+        let st_s = bench_for(Duration::from_millis(200), 3, || {
+            sell_spmmv(&sell, &x, &mut y2);
+        });
+        let fl = perfmodel::spmv_flops(&sell, nv);
+        table.row(&[
+            nv.to_string(),
+            format!("{:.2}", gflops(fl, st_g.median)),
+            format!("{:.2}", gflops(fl, st_s.median)),
+            format!(
+                "{:.2}x",
+                st_g.median.as_secs_f64() / st_s.median.as_secs_f64()
+            ),
+        ]);
+    }
+    table.print();
+    println!("paper shape: hard-coded widths beat the generic loop at every width");
+}
+
+// ---------------------------------------------------------------------------
+// Fig 11: Krylov-Schur scaling, GHOST vs Tpetra-like baseline
+// ---------------------------------------------------------------------------
+fn fig11_scaling() {
+    header(
+        "fig11_scaling",
+        "Fig 11 — Krylov-Schur (MATPDE): strong & weak scaling, GHOST vs Tpetra-like kernels",
+    );
+    println!("device model: per-apply time floors (50 GB/s socket) + modeled fabric;");
+    println!("single-core host, so scaling comes from the model exactly as DESIGN.md describes.");
+    let comm_cfg = CommConfig {
+        latency: Duration::from_micros(300),
+        bandwidth_bps: 2.0e8,
+        eager_limit: 4 * 1024,
+        async_progress: false, // the regime where overlap matters
+    };
+    let scale = 3e-4;
+    let run = |grid: usize, nranks: usize, mode: KernelMode| -> (f64, usize) {
+        let a = matgen::matpde::<f64>(grid);
+        let n = a.nrows();
+        let opts = EigOpts {
+            nev: 6,
+            m: 20,
+            tol: 1e-6,
+            max_restarts: 3000,
+            seed: 42,
+        };
+        let aref = &a;
+        let cfg = comm_cfg.clone();
+        let t0 = Instant::now();
+        let results = World::run(nranks, cfg, move |comm| {
+            let part = Partition::uniform(n, comm.nranks());
+            let mut op = MpiOp::build(aref, &part, comm.clone(), mode, 1)
+                .unwrap()
+                .with_time_floor(50.0, scale);
+            eigs_largest_real(&mut op, &opts).unwrap()
+        });
+        assert!(results[0].converged, "{mode:?}/{nranks}/{grid} not converged");
+        (t0.elapsed().as_secs_f64(), results[0].matvecs)
+    };
+
+    println!("\nstrong scaling (grid 28, n = 784):");
+    let mut table = Table::new(&[
+        "ranks", "mode", "time [s]", "matvecs", "efficiency", "ghost/baseline",
+    ]);
+    let mut t1 = [0.0f64; 2];
+    for nranks in [1usize, 2, 4] {
+        let mut tims = [0.0f64; 2];
+        for (i, mode) in [KernelMode::Baseline, KernelMode::Ghost].iter().enumerate() {
+            let (t, mv) = run(28, nranks, *mode);
+            tims[i] = t;
+            if nranks == 1 {
+                t1[i] = t;
+            }
+            let eff = t1[i] / (t * nranks as f64);
+            let ratio = if i == 1 {
+                format!("{:.2}x", tims[0] / t)
+            } else {
+                "-".into()
+            };
+            table.row(&[
+                nranks.to_string(),
+                format!("{mode:?}"),
+                format!("{t:.2}"),
+                mv.to_string(),
+                format!("{:.0}%", eff * 100.0),
+                ratio,
+            ]);
+        }
+    }
+    table.print();
+
+    println!("\nweak scaling (grid grows with ranks: 28, 40, 56):");
+    let mut table = Table::new(&["ranks", "grid", "mode", "time [s]", "matvecs", "ghost/baseline"]);
+    for (nranks, grid) in [(1usize, 28usize), (2, 40), (4, 56)] {
+        let mut tims = [0.0f64; 2];
+        for (i, mode) in [KernelMode::Baseline, KernelMode::Ghost].iter().enumerate() {
+            let (t, mv) = run(grid, nranks, *mode);
+            tims[i] = t;
+            let ratio = if i == 1 {
+                format!("{:.2}x", tims[0] / t)
+            } else {
+                "-".into()
+            };
+            table.row(&[
+                nranks.to_string(),
+                grid.to_string(),
+                format!("{mode:?}"),
+                format!("{t:.2}"),
+                mv.to_string(),
+                ratio,
+            ]);
+        }
+    }
+    table.print();
+    println!("paper shape: GHOST faster than Tpetra everywhere; gap widens with rank count");
+}
+
+// ---------------------------------------------------------------------------
+// Section 5.2: Kahan-compensated tsmttsm
+// ---------------------------------------------------------------------------
+fn kahan_accuracy() {
+    header(
+        "kahan",
+        "Section 5.2 — Kahan tsmttsm: accuracy gain vs overhead",
+    );
+    let n = 1 << 20;
+    let mut table = Table::new(&["m=k", "plain ms", "kahan ms", "overhead", "err plain", "err kahan"]);
+    for m in [1usize, 2, 4] {
+        // hostile data: the running sum sits at ~1e16 (beyond 2^53) while
+        // small contributions (k+1) trickle in — plain summation drops
+        // them; Kahan keeps them. Absolute error against the analytically
+        // exact result is the metric (the lost part is tiny relative to
+        // the huge sum by construction).
+        let v = DenseMat::<f64>::from_fn(n, m, Layout::RowMajor, |_, _| 1.0);
+        let w = DenseMat::<f64>::from_fn(n, m, Layout::RowMajor, |i, k| {
+            if i % 2 == 0 {
+                1e16
+            } else {
+                (k + 1) as f64
+            }
+        });
+        let mut xp = DenseMat::<f64>::zeros(m, m, Layout::RowMajor);
+        let mut xk = xp.clone();
+        let st_p = bench_for(Duration::from_millis(250), 3, || {
+            tsm::tsmttsm_generic(&mut xp, 1.0, &v, &w, 0.0).unwrap();
+        });
+        let st_k = bench_for(Duration::from_millis(250), 3, || {
+            tsm::tsmttsm_kahan(&mut xk, 1.0, &v, &w, 0.0).unwrap();
+        });
+        let exact = |k: usize| (n as f64 / 2.0) * (1e16 + (k + 1) as f64);
+        let err = |x: &DenseMat<f64>| {
+            let mut e = 0.0f64;
+            for k in 0..m {
+                e = e.max((x.at(0, k) - exact(k)).abs());
+            }
+            e
+        };
+        table.row(&[
+            m.to_string(),
+            format!("{:.2}", st_p.median.as_secs_f64() * 1e3),
+            format!("{:.2}", st_k.median.as_secs_f64() * 1e3),
+            format!(
+                "{:.2}x",
+                st_k.median.as_secs_f64() / st_p.median.as_secs_f64()
+            ),
+            format!("{:.1e}", err(&xp)),
+            format!("{:.1e}", err(&xk)),
+        ]);
+    }
+    table.print();
+    println!("paper shape: accuracy improves significantly; overhead small for wider blocks");
+}
+
+// ---------------------------------------------------------------------------
+// Section 5.3: KPM fusion/blocking ablation
+// ---------------------------------------------------------------------------
+fn fusion_ablation() {
+    header(
+        "fusion_ablation",
+        "Section 5.3 — KPM: naive vs fused vs blocked+fused (paper: ~2.5x overall)",
+    );
+    let (h, _, _) = matgen::scaled_hamiltonian::<f64>(320, 2.0, 42);
+    let mut table = Table::new(&["variant", "time [s]", "speedup vs naive"]);
+    let mut t_naive = 0.0;
+    for variant in [KpmVariant::Naive, KpmVariant::Fused, KpmVariant::BlockedFused] {
+        let cfg = KpmConfig {
+            nmoments: 48,
+            nrandom: 8,
+            variant,
+            seed: 7,
+        };
+        let t0 = Instant::now();
+        let mu = kpm_moments(&h, &cfg).unwrap();
+        let dt = t0.elapsed().as_secs_f64();
+        assert!(mu[0] > 0.0);
+        if variant == KpmVariant::Naive {
+            t_naive = dt;
+        }
+        table.row(&[
+            format!("{variant:?}"),
+            format!("{dt:.3}"),
+            format!("{:.2}x", t_naive / dt),
+        ]);
+    }
+    table.print();
+    println!("note: this host's 260 MiB L3 keeps every working set cache-resident,");
+    println!("compressing the paper's DRAM-bound 2.5x to the observed gain; ordering is preserved");
+}

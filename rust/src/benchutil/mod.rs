@@ -1,0 +1,158 @@
+//! Benchmark harness (criterion is not vendorable offline): warmup +
+//! repeated timing with min/median/mean statistics and an aligned table
+//! printer shared by all `cargo bench` targets and examples.
+
+use std::time::{Duration, Instant};
+
+/// Timing statistics over repetitions.
+#[derive(Clone, Copy, Debug)]
+pub struct Stats {
+    pub reps: usize,
+    pub min: Duration,
+    pub median: Duration,
+    pub mean: Duration,
+    pub max: Duration,
+}
+
+impl Stats {
+    pub fn secs_min(&self) -> f64 {
+        self.min.as_secs_f64()
+    }
+    pub fn secs_median(&self) -> f64 {
+        self.median.as_secs_f64()
+    }
+}
+
+/// Run `f` `reps` times after `warmup` unmeasured runs.
+pub fn bench<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps.max(1) {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed());
+    }
+    times.sort_unstable();
+    let sum: Duration = times.iter().sum();
+    Stats {
+        reps: times.len(),
+        min: times[0],
+        median: times[times.len() / 2],
+        mean: sum / times.len() as u32,
+        max: *times.last().unwrap(),
+    }
+}
+
+/// Keep re-running `f` until at least `budget` has elapsed (at least
+/// `min_reps` times); good for very fast kernels.
+pub fn bench_for<F: FnMut()>(budget: Duration, min_reps: usize, mut f: F) -> Stats {
+    let mut times = Vec::new();
+    let start = Instant::now();
+    while times.len() < min_reps || start.elapsed() < budget {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed());
+        if times.len() > 10_000 {
+            break;
+        }
+    }
+    times.sort_unstable();
+    let sum: Duration = times.iter().sum();
+    Stats {
+        reps: times.len(),
+        min: times[0],
+        median: times[times.len() / 2],
+        mean: sum / times.len() as u32,
+        max: *times.last().unwrap(),
+    }
+}
+
+/// Gflop/s given flops per run and a per-run time.
+pub fn gflops(flops: f64, t: Duration) -> f64 {
+    flops / t.as_secs_f64() / 1e9
+}
+
+/// Simple aligned table printer for bench output.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for c in 0..ncol {
+                widths[c] = widths[c].max(row[c].len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for c in 0..ncol {
+                s.push_str(&format!("{:>w$}  ", cells[c], w = widths[c]));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.headers);
+        println!(
+            "{}",
+            widths
+                .iter()
+                .map(|w| "-".repeat(*w))
+                .collect::<Vec<_>>()
+                .join("--")
+        );
+        for row in &self.rows {
+            line(row);
+        }
+    }
+}
+
+/// Format helpers.
+pub fn fmt_ms(d: Duration) -> String {
+    format!("{:.3}", d.as_secs_f64() * 1e3)
+}
+
+pub fn fmt_gflops(v: f64) -> String {
+    format!("{v:.2}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_reps() {
+        let mut n = 0;
+        let st = bench(2, 5, || n += 1);
+        assert_eq!(st.reps, 5);
+        assert_eq!(n, 7);
+        assert!(st.min <= st.median && st.median <= st.max);
+    }
+
+    #[test]
+    fn bench_for_minimum_reps() {
+        let st = bench_for(Duration::ZERO, 3, || {});
+        assert!(st.reps >= 3);
+    }
+
+    #[test]
+    fn gflops_math() {
+        assert!((gflops(2e9, Duration::from_secs(1)) - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,443 @@
+//! Distributed SpMV with the three communication modes of Fig 5:
+//!
+//! - `NoOverlap`: synchronous halo exchange, then the full local SpMV;
+//! - `NaiveOverlap`: Isend/Irecv + local-part SpMV, then wait + remote
+//!   part — overlaps only if the fabric progresses asynchronously;
+//! - `TaskMode`: a GHOST task (taskq) carries the communication while a
+//!   sibling task computes the local part — assured overlap independent
+//!   of the MPI library's progression behaviour (section 4.2).
+
+use super::context::RankContext;
+use super::Comm;
+use crate::core::{Result, Scalar};
+use crate::kernels::spmv::{sell_spmv_mt, SpmvVariant};
+use crate::sparsemat::{Crs, SellMat};
+use crate::taskq::{flags as tflags, TaskOpts, TaskQueue};
+
+const HALO_TAG: u64 = 100;
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum OverlapMode {
+    NoOverlap,
+    NaiveOverlap,
+    TaskMode,
+}
+
+/// A rank's distributed SELL matrix: the full local operator plus the
+/// local/remote split in a *shared* SELL row permutation, so partial
+/// results can be combined rowwise.
+pub struct DistMatrix<S> {
+    pub rank: usize,
+    pub row0: usize,
+    pub nlocal: usize,
+    pub nhalo: usize,
+    pub full: SellMat<S>,
+    pub local_part: SellMat<S>,
+    pub remote_part: SellMat<S>,
+    pub send_plan: Vec<(usize, Vec<usize>)>,
+    pub recv_plan: Vec<(usize, usize, usize)>,
+}
+
+impl<S: Scalar> DistMatrix<S> {
+    /// Convert a [`RankContext`] into SELL-C-sigma form. The sigma sort is
+    /// computed on the full matrix; the split parts are then assembled in
+    /// the same row order (sigma = 1 on the pre-permuted rows).
+    pub fn from_context(ctx: &RankContext<S>, c: usize, sigma: usize) -> Result<Self> {
+        let full = SellMat::from_crs(&ctx.local, c, sigma)?;
+        let perm = full.perm().to_vec();
+        let reorder = |part: &Crs<S>| -> Result<SellMat<S>> {
+            let permuted = Crs::from_row_fn(
+                full.nrows_padded(),
+                part.ncols(),
+                |i, cols, vals| {
+                    let src = perm[i];
+                    if src < part.nrows() {
+                        let (cs, vs) = part.row(src);
+                        cols.extend_from_slice(cs);
+                        vals.extend_from_slice(vs);
+                    }
+                },
+            )?;
+            SellMat::from_crs(&permuted, c, 1)
+        };
+        Ok(DistMatrix {
+            rank: ctx.rank,
+            row0: ctx.row0,
+            nlocal: ctx.nlocal,
+            nhalo: ctx.nhalo,
+            local_part: reorder(&ctx.local_part)?,
+            remote_part: reorder(&ctx.remote_part)?,
+            full,
+            send_plan: ctx.send_plan.clone(),
+            recv_plan: ctx.recv_plan.clone(),
+        })
+    }
+
+    /// Size of the x buffer (local + halo).
+    pub fn xbuf_len(&self) -> usize {
+        self.nlocal + self.nhalo
+    }
+
+    /// Bring a SELL-order result back to local row order.
+    pub fn unpermute(&self, y_sell: &[S], y: &mut [S]) {
+        crate::kernels::spmv::unpermute(&self.full, y_sell, y);
+    }
+
+    /// Bytes sent per SpMV (communication volume).
+    pub fn send_volume_bytes(&self) -> usize {
+        self.send_plan
+            .iter()
+            .map(|(_, v)| v.len() * S::bytes())
+            .sum()
+    }
+}
+
+/// One distributed SpMV: fills the halo region of `xbuf` (whose first
+/// nlocal entries must hold the local x values), computes
+/// y_sell = A_local x into SELL row order. `nthreads` bounds the compute
+/// parallelism; `taskq` is required for `TaskMode`.
+pub fn dist_spmv<S: Scalar>(
+    dm: &DistMatrix<S>,
+    comm: &Comm,
+    xbuf: &mut [S],
+    y_sell: &mut [S],
+    mode: OverlapMode,
+    nthreads: usize,
+    taskq: Option<&TaskQueue>,
+) -> Result<()> {
+    dist_spmv_floored(dm, comm, xbuf, y_sell, mode, nthreads, taskq, None)
+}
+
+/// [`dist_spmv`] with an optional modeled *compute* time floor (device
+/// model for scaling studies, DESIGN.md "Performance realism"). The floor
+/// is charged where the compute happens: inside the overlap region for
+/// the local part, after the exchange for the remote part — so overlap
+/// modes genuinely hide communication behind (modeled) compute while
+/// NoOverlap pays them serially.
+#[allow(clippy::too_many_arguments)]
+pub fn dist_spmv_floored<S: Scalar>(
+    dm: &DistMatrix<S>,
+    comm: &Comm,
+    xbuf: &mut [S],
+    y_sell: &mut [S],
+    mode: OverlapMode,
+    nthreads: usize,
+    taskq: Option<&TaskQueue>,
+    compute_floor: Option<std::time::Duration>,
+) -> Result<()> {
+    crate::ensure!(
+        xbuf.len() >= dm.xbuf_len(),
+        DimMismatch,
+        "xbuf too small: {} < {}",
+        xbuf.len(),
+        dm.xbuf_len()
+    );
+    crate::ensure!(
+        y_sell.len() >= dm.full.nrows_padded(),
+        DimMismatch,
+        "y too small"
+    );
+    // split the modeled compute floor by nnz between local/remote parts
+    let nnz_total = dm.full.nnz().max(1);
+    let floor_of = |nnz: usize| {
+        compute_floor.map(|f| f.mul_f64(nnz as f64 / nnz_total as f64))
+    };
+    let floored = |t0: std::time::Instant, floor: Option<std::time::Duration>| {
+        if let Some(f) = floor {
+            let spent = t0.elapsed();
+            if spent < f {
+                std::thread::sleep(f - spent);
+            }
+        }
+    };
+    match mode {
+        OverlapMode::NoOverlap => {
+            // synchronous exchange, then the full product
+            post_sends(dm, comm, xbuf, /*nonblocking=*/ false)?;
+            receive_halo(dm, comm, xbuf)?;
+            let t0 = std::time::Instant::now();
+            sell_spmv_mt(&dm.full, xbuf, y_sell, SpmvVariant::Vectorized, nthreads);
+            floored(t0, compute_floor);
+        }
+        OverlapMode::NaiveOverlap => {
+            // rely on MPI to progress the Isends while we compute
+            let reqs = post_sends(dm, comm, xbuf, /*nonblocking=*/ true)?;
+            let t0 = std::time::Instant::now();
+            sell_spmv_mt(
+                &dm.local_part,
+                xbuf,
+                y_sell,
+                SpmvVariant::Vectorized,
+                nthreads,
+            );
+            floored(t0, floor_of(dm.local_part.nnz()));
+            for r in reqs {
+                r.wait()?;
+            }
+            receive_halo(dm, comm, xbuf)?;
+            let t0 = std::time::Instant::now();
+            add_remote(dm, xbuf, y_sell, nthreads);
+            floored(t0, floor_of(dm.remote_part.nnz()));
+        }
+        OverlapMode::TaskMode => {
+            let q = taskq.ok_or_else(|| {
+                crate::core::GhostError::Task("TaskMode requires a task queue".into())
+            })?;
+            // explicit overlap via GHOST tasks (section 4.2 listing):
+            // a light-weight comm task next to the heavy local compute.
+            // The comm task carries both directions of the halo exchange;
+            // received halos land in a temporary and are committed to
+            // xbuf after the overlap region (xbuf is shared-borrowed by
+            // the compute during the scope).
+            let send_bufs = gather_send_bufs(dm, xbuf);
+            let comm2 = comm.clone();
+            let plan = dm.send_plan.clone();
+            let rplan = dm.recv_plan.clone();
+            let comm_task = q.enqueue_with_result(
+                TaskOpts {
+                    nthreads: 1,
+                    flags: tflags::NOT_PIN,
+                    ..Default::default()
+                },
+                move |_| -> Result<Vec<(usize, Vec<S>)>> {
+                    // post all sends first, then complete them: on an
+                    // async fabric this parallelizes the transfers; on a
+                    // non-progressing one the serial cost still stays on
+                    // this task, off the compute's critical path
+                    let mut reqs = Vec::new();
+                    for ((peer, _), buf) in plan.iter().zip(send_bufs) {
+                        reqs.push(comm2.isend(*peer, HALO_TAG, &buf)?);
+                    }
+                    for r in reqs {
+                        r.wait()?;
+                    }
+                    let mut halos = Vec::new();
+                    for &(peer, off, count) in &rplan {
+                        let data: Vec<S> = comm2.recv(peer, HALO_TAG)?;
+                        crate::ensure!(data.len() == count, Comm, "halo size mismatch");
+                        halos.push((off, data));
+                    }
+                    Ok(halos)
+                },
+            );
+            // local computation on the remaining threads, concurrently
+            // with the comm task
+            let t0 = std::time::Instant::now();
+            sell_spmv_mt(
+                &dm.local_part,
+                xbuf,
+                y_sell,
+                SpmvVariant::Vectorized,
+                nthreads.saturating_sub(1).max(1),
+            );
+            floored(t0, floor_of(dm.local_part.nnz()));
+            let halos = comm_task.wait()??;
+            for (off, data) in halos {
+                xbuf[dm.nlocal + off..dm.nlocal + off + data.len()]
+                    .copy_from_slice(&data);
+            }
+            let t0 = std::time::Instant::now();
+            add_remote(dm, xbuf, y_sell, nthreads);
+            floored(t0, floor_of(dm.remote_part.nnz()));
+        }
+    }
+    Ok(())
+}
+
+fn gather_send_bufs<S: Scalar>(dm: &DistMatrix<S>, xbuf: &[S]) -> Vec<Vec<S>> {
+    dm.send_plan
+        .iter()
+        .map(|(_, idxs)| idxs.iter().map(|&i| xbuf[i]).collect())
+        .collect()
+}
+
+fn post_sends<S: Scalar>(
+    dm: &DistMatrix<S>,
+    comm: &Comm,
+    xbuf: &[S],
+    nonblocking: bool,
+) -> Result<Vec<super::Request>> {
+    let bufs = gather_send_bufs(dm, xbuf);
+    let mut reqs = Vec::new();
+    for ((peer, _), buf) in dm.send_plan.iter().zip(bufs) {
+        if nonblocking {
+            reqs.push(comm.isend(*peer, HALO_TAG, &buf)?);
+        } else {
+            comm.send(*peer, HALO_TAG, &buf)?;
+        }
+    }
+    Ok(reqs)
+}
+
+fn receive_halo<S: Scalar>(dm: &DistMatrix<S>, comm: &Comm, xbuf: &mut [S]) -> Result<()> {
+    for &(peer, off, count) in &dm.recv_plan {
+        let data: Vec<S> = comm.recv(peer, HALO_TAG)?;
+        crate::ensure!(
+            data.len() == count,
+            Comm,
+            "halo from {peer}: got {} want {count}",
+            data.len()
+        );
+        xbuf[dm.nlocal + off..dm.nlocal + off + count].copy_from_slice(&data);
+    }
+    Ok(())
+}
+
+fn add_remote<S: Scalar>(dm: &DistMatrix<S>, xbuf: &[S], y_sell: &mut [S], nthreads: usize) {
+    // remote part: compute into a temp and add (rows share the SELL perm)
+    let mut tmp = vec![S::ZERO; dm.remote_part.nrows_padded()];
+    sell_spmv_mt(
+        &dm.remote_part,
+        xbuf,
+        &mut tmp,
+        SpmvVariant::Vectorized,
+        nthreads,
+    );
+    for (y, t) in y_sell.iter_mut().zip(&tmp) {
+        *y += *t;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::context::{build_contexts, Partition};
+    use crate::comm::{CommConfig, World};
+    use crate::core::Rng;
+    use crate::matgen;
+    use crate::topology::Machine;
+
+    fn check_mode(mode: OverlapMode, cfg: CommConfig) {
+        let a = matgen::cage_like::<f64>(300, 5);
+        let n = a.nrows();
+        let nranks = 3;
+        let part = Partition::uniform(n, nranks);
+        let ctxs = build_contexts(&a, &part).unwrap();
+        let mut rng = Rng::new(7);
+        let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mut y_want = vec![0.0; n];
+        a.spmv(&x, &mut y_want);
+
+        let dms: Vec<DistMatrix<f64>> = ctxs
+            .iter()
+            .map(|c| DistMatrix::from_context(c, 8, 64).unwrap())
+            .collect();
+        let x_ref = &x;
+        let dms_ref = &dms;
+        let results = World::run(nranks, cfg, move |comm| {
+            let dm = &dms_ref[comm.rank()];
+            let q = TaskQueue::new(Machine::small_node(4), 4);
+            let mut xbuf = vec![0.0; dm.xbuf_len()];
+            xbuf[..dm.nlocal]
+                .copy_from_slice(&x_ref[dm.row0..dm.row0 + dm.nlocal]);
+            let mut y_sell = vec![0.0; dm.full.nrows_padded()];
+            dist_spmv(dm, &comm, &mut xbuf, &mut y_sell, mode, 2, Some(&q)).unwrap();
+            let mut y = vec![0.0; dm.nlocal];
+            dm.unpermute(&y_sell, &mut y);
+            q.shutdown();
+            (dm.row0, y)
+        });
+        for (row0, y) in results {
+            for (i, v) in y.iter().enumerate() {
+                assert!(
+                    (v - y_want[row0 + i]).abs() < 1e-10,
+                    "{mode:?} row {}: {} vs {}",
+                    row0 + i,
+                    v,
+                    y_want[row0 + i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn no_overlap_correct() {
+        check_mode(OverlapMode::NoOverlap, CommConfig::instant());
+    }
+
+    #[test]
+    fn naive_overlap_correct() {
+        check_mode(OverlapMode::NaiveOverlap, CommConfig::instant());
+    }
+
+    #[test]
+    fn naive_overlap_correct_without_progression() {
+        let cfg = CommConfig {
+            async_progress: false,
+            eager_limit: 16,
+            ..CommConfig::instant()
+        };
+        check_mode(OverlapMode::NaiveOverlap, cfg);
+    }
+
+    #[test]
+    fn task_mode_correct() {
+        check_mode(OverlapMode::TaskMode, CommConfig::instant());
+    }
+
+    #[test]
+    fn repeated_iterations_stable() {
+        // 10 SpMV iterations y -> x with exchange each time
+        let a = matgen::poisson7::<f64>(6, 6, 4);
+        let n = a.nrows();
+        let nranks = 2;
+        let part = Partition::uniform(n, nranks);
+        let ctxs = build_contexts(&a, &part).unwrap();
+        let x0: Vec<f64> = (0..n).map(|i| (i as f64).sin()).collect();
+        // reference: repeated global spmv with normalization
+        let mut xg = x0.clone();
+        for _ in 0..10 {
+            let mut y = vec![0.0; n];
+            a.spmv(&xg, &mut y);
+            let norm = (y.iter().map(|v| v * v).sum::<f64>()).sqrt();
+            for v in &mut y {
+                *v /= norm;
+            }
+            xg = y;
+        }
+        let dms: Vec<DistMatrix<f64>> = ctxs
+            .iter()
+            .map(|c| DistMatrix::from_context(c, 4, 16).unwrap())
+            .collect();
+        let dms_ref = &dms;
+        let x0_ref = &x0;
+        let results = World::run(nranks, CommConfig::instant(), move |comm| {
+            let dm = &dms_ref[comm.rank()];
+            let mut xbuf = vec![0.0; dm.xbuf_len()];
+            xbuf[..dm.nlocal].copy_from_slice(&x0_ref[dm.row0..dm.row0 + dm.nlocal]);
+            let mut y_sell = vec![0.0; dm.full.nrows_padded()];
+            let mut y = vec![0.0; dm.nlocal];
+            for _ in 0..10 {
+                dist_spmv(
+                    dm,
+                    &comm,
+                    &mut xbuf,
+                    &mut y_sell,
+                    OverlapMode::NoOverlap,
+                    1,
+                    None,
+                )
+                .unwrap();
+                dm.unpermute(&y_sell, &mut y);
+                // distributed normalization via allreduce
+                let local_ss: f64 = y.iter().map(|v| v * v).sum();
+                let global = comm.allreduce_sum(&[local_ss]).unwrap()[0];
+                let norm = global.sqrt();
+                for (xb, yv) in xbuf[..dm.nlocal].iter_mut().zip(&y) {
+                    *xb = yv / norm;
+                }
+            }
+            (dm.row0, xbuf[..dm.nlocal].to_vec())
+        });
+        for (row0, xl) in results {
+            for (i, v) in xl.iter().enumerate() {
+                assert!(
+                    (v - xg[row0 + i]).abs() < 1e-9,
+                    "row {}: {v} vs {}",
+                    row0 + i,
+                    xg[row0 + i]
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,568 @@
+//! Communication layer — the MPI stand-in (DESIGN.md substitution table).
+//!
+//! GHOST is "MPI+X"; here the process level is simulated with in-process
+//! ranks (std::thread) exchanging typed messages through a shared
+//! mailbox. The simulation models the two MPI behaviours the paper's
+//! Fig 5 hinges on:
+//!
+//! - *eager vs rendezvous*: messages below `eager_limit` bytes complete
+//!   at isend time regardless of progression;
+//! - *asynchronous progression*: when `async_progress` is false (the
+//!   common real-world case the paper cites via Wittmann/Denis), a
+//!   non-blocking isend does NOT transfer in the background — the whole
+//!   transfer cost lands in the matching wait() — so "naive" overlap
+//!   through Isend/Irecv overlaps nothing.
+//!
+//! Transfer time is modeled as latency + bytes/bandwidth and realized
+//! with thread sleeps (scaled so benches run in milliseconds).
+
+pub mod context;
+pub mod exchange;
+
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::core::{GhostError, Result, Scalar};
+
+/// Communication fabric configuration.
+#[derive(Clone, Debug)]
+pub struct CommConfig {
+    /// Modeled per-message latency.
+    pub latency: Duration,
+    /// Modeled bandwidth in bytes/sec (shared fabric).
+    pub bandwidth_bps: f64,
+    /// Messages <= this size complete eagerly at isend time.
+    pub eager_limit: usize,
+    /// Whether non-blocking sends progress asynchronously (true models a
+    /// progression-thread MPI; false models the deferred-transfer MPI the
+    /// paper warns about).
+    pub async_progress: bool,
+}
+
+impl Default for CommConfig {
+    fn default() -> Self {
+        CommConfig {
+            latency: Duration::from_micros(20),
+            bandwidth_bps: 6.0e9, // ~QDR InfiniBand per direction
+            eager_limit: 8 * 1024,
+            async_progress: true,
+        }
+    }
+}
+
+impl CommConfig {
+    /// Zero-cost fabric for correctness tests.
+    pub fn instant() -> Self {
+        CommConfig {
+            latency: Duration::ZERO,
+            bandwidth_bps: f64::INFINITY,
+            eager_limit: usize::MAX,
+            async_progress: true,
+        }
+    }
+
+    pub fn transfer_time(&self, bytes: usize) -> Duration {
+        if self.bandwidth_bps.is_infinite() {
+            return self.latency;
+        }
+        self.latency + Duration::from_secs_f64(bytes as f64 / self.bandwidth_bps)
+    }
+}
+
+struct Msg {
+    bytes: Vec<u8>,
+    /// Instant at which the payload is fully available to the receiver.
+    arrival: Instant,
+}
+
+#[derive(Default)]
+struct Mailboxes {
+    /// (src, dst, tag) -> FIFO of messages.
+    boxes: HashMap<(usize, usize, u64), std::collections::VecDeque<Msg>>,
+}
+
+struct Barrier {
+    count: usize,
+    generation: u64,
+}
+
+struct ReduceSlot {
+    /// Per-rank contribution for the current reduction.
+    parts: Vec<Option<Vec<f64>>>,
+    result: Option<Arc<Vec<f64>>>,
+    arrived: usize,
+    taken: usize,
+    generation: u64,
+}
+
+struct WorldInner {
+    nranks: usize,
+    cfg: CommConfig,
+    mail: Mutex<Mailboxes>,
+    mail_cond: Condvar,
+    barrier: Mutex<Barrier>,
+    barrier_cond: Condvar,
+    reduce: Mutex<ReduceSlot>,
+    reduce_cond: Condvar,
+}
+
+/// The simulated communicator shared by all ranks.
+#[derive(Clone)]
+pub struct World {
+    inner: Arc<WorldInner>,
+}
+
+impl World {
+    pub fn new(nranks: usize, cfg: CommConfig) -> Self {
+        World {
+            inner: Arc::new(WorldInner {
+                nranks,
+                cfg,
+                mail: Mutex::new(Mailboxes::default()),
+                mail_cond: Condvar::new(),
+                barrier: Mutex::new(Barrier {
+                    count: 0,
+                    generation: 0,
+                }),
+                barrier_cond: Condvar::new(),
+                reduce: Mutex::new(ReduceSlot {
+                    parts: (0..nranks).map(|_| None).collect(),
+                    result: None,
+                    arrived: 0,
+                    taken: 0,
+                    generation: 0,
+                }),
+                reduce_cond: Condvar::new(),
+            }),
+        }
+    }
+
+    pub fn nranks(&self) -> usize {
+        self.inner.nranks
+    }
+
+    pub fn rank(&self, r: usize) -> Comm {
+        assert!(r < self.inner.nranks);
+        Comm {
+            world: self.clone(),
+            rank: r,
+        }
+    }
+
+    /// Spawn one thread per rank running `f(comm)`; joins all and returns
+    /// the per-rank results. The standard way to run a "distributed"
+    /// GHOST program in this repo.
+    pub fn run<T: Send>(
+        nranks: usize,
+        cfg: CommConfig,
+        f: impl Fn(Comm) -> T + Sync,
+    ) -> Vec<T> {
+        let world = World::new(nranks, cfg);
+        let mut out: Vec<Option<T>> = (0..nranks).map(|_| None).collect();
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..nranks)
+                .map(|r| {
+                    let comm = world.rank(r);
+                    let f = &f;
+                    s.spawn(move || f(comm))
+                })
+                .collect();
+            for (r, h) in handles.into_iter().enumerate() {
+                out[r] = Some(h.join().expect("rank panicked"));
+            }
+        });
+        out.into_iter().map(|o| o.unwrap()).collect()
+    }
+}
+
+/// A pending non-blocking send/recv.
+pub struct Request {
+    kind: ReqKind,
+}
+
+enum ReqKind {
+    /// Deferred send (non-progressing MPI): payload not yet delivered.
+    DeferredSend {
+        world: World,
+        src: usize,
+        dst: usize,
+        tag: u64,
+        bytes: Vec<u8>,
+    },
+    /// Send already delivered (eager or async progression); wait is free.
+    DoneSend,
+    /// Receive: completes when the message is present and arrived.
+    Recv {
+        world: World,
+        src: usize,
+        dst: usize,
+        tag: u64,
+    },
+}
+
+impl Request {
+    /// Complete the request. For receives, returns the payload.
+    pub fn wait(self) -> Result<Vec<u8>> {
+        match self.kind {
+            ReqKind::DoneSend => Ok(vec![]),
+            ReqKind::DeferredSend {
+                world,
+                src,
+                dst,
+                tag,
+                bytes,
+            } => {
+                // non-progressing MPI: the transfer happens *inside* wait
+                let dur = world.inner.cfg.transfer_time(bytes.len());
+                std::thread::sleep(dur);
+                world.deliver(src, dst, tag, bytes, Instant::now());
+                Ok(vec![])
+            }
+            ReqKind::Recv {
+                world,
+                src,
+                dst,
+                tag,
+            } => world.take_blocking(src, dst, tag),
+        }
+    }
+}
+
+impl World {
+    fn deliver(&self, src: usize, dst: usize, tag: u64, bytes: Vec<u8>, arrival: Instant) {
+        let mut mail = self.inner.mail.lock().unwrap();
+        mail.boxes
+            .entry((src, dst, tag))
+            .or_default()
+            .push_back(Msg { bytes, arrival });
+        self.inner.mail_cond.notify_all();
+    }
+
+    fn take_blocking(&self, src: usize, dst: usize, tag: u64) -> Result<Vec<u8>> {
+        let mut mail = self.inner.mail.lock().unwrap();
+        loop {
+            if let Some(q) = mail.boxes.get_mut(&(src, dst, tag)) {
+                if let Some(front) = q.front() {
+                    let now = Instant::now();
+                    if front.arrival <= now {
+                        let msg = q.pop_front().unwrap();
+                        return Ok(msg.bytes);
+                    }
+                    // message in flight: wait out the modeled transfer
+                    let dur = front.arrival - now;
+                    drop(mail);
+                    std::thread::sleep(dur);
+                    mail = self.inner.mail.lock().unwrap();
+                    continue;
+                }
+            }
+            let (m, _timeout) = self
+                .inner
+                .mail_cond
+                .wait_timeout(mail, Duration::from_millis(50))
+                .unwrap();
+            mail = m;
+        }
+    }
+}
+
+/// Per-rank communicator handle (the MPI_Comm + rank pair).
+#[derive(Clone)]
+pub struct Comm {
+    world: World,
+    rank: usize,
+}
+
+impl Comm {
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn nranks(&self) -> usize {
+        self.world.nranks()
+    }
+
+    pub fn config(&self) -> &CommConfig {
+        &self.world.inner.cfg
+    }
+
+    /// Blocking send (completes after the modeled transfer time).
+    pub fn send_bytes(&self, dst: usize, tag: u64, bytes: Vec<u8>) -> Result<()> {
+        crate::ensure!(dst < self.nranks(), Comm, "send to invalid rank {dst}");
+        let dur = self.world.inner.cfg.transfer_time(bytes.len());
+        std::thread::sleep(dur);
+        self.world
+            .deliver(self.rank, dst, tag, bytes, Instant::now());
+        Ok(())
+    }
+
+    /// Non-blocking send. Semantics depend on the fabric configuration —
+    /// see the module docs (this is the Fig 5 mechanism).
+    pub fn isend_bytes(&self, dst: usize, tag: u64, bytes: Vec<u8>) -> Result<Request> {
+        crate::ensure!(dst < self.nranks(), Comm, "isend to invalid rank {dst}");
+        let cfg = &self.world.inner.cfg;
+        if bytes.len() <= cfg.eager_limit || cfg.async_progress {
+            // transfer proceeds in the background: arrival is stamped now
+            let arrival = Instant::now() + cfg.transfer_time(bytes.len());
+            self.world.deliver(self.rank, dst, tag, bytes, arrival);
+            Ok(Request {
+                kind: ReqKind::DoneSend,
+            })
+        } else {
+            Ok(Request {
+                kind: ReqKind::DeferredSend {
+                    world: self.world.clone(),
+                    src: self.rank,
+                    dst,
+                    tag,
+                    bytes,
+                },
+            })
+        }
+    }
+
+    /// Blocking receive.
+    pub fn recv_bytes(&self, src: usize, tag: u64) -> Result<Vec<u8>> {
+        self.world.take_blocking(src, self.rank, tag)
+    }
+
+    /// Non-blocking receive.
+    pub fn irecv_bytes(&self, src: usize, tag: u64) -> Request {
+        Request {
+            kind: ReqKind::Recv {
+                world: self.world.clone(),
+                src,
+                dst: self.rank,
+                tag,
+            },
+        }
+    }
+
+    /// Typed scalar send/recv built on the byte layer.
+    pub fn send<S: Scalar>(&self, dst: usize, tag: u64, data: &[S]) -> Result<()> {
+        self.send_bytes(dst, tag, scalars_to_bytes(data))
+    }
+
+    pub fn isend<S: Scalar>(&self, dst: usize, tag: u64, data: &[S]) -> Result<Request> {
+        self.isend_bytes(dst, tag, scalars_to_bytes(data))
+    }
+
+    pub fn recv<S: Scalar>(&self, src: usize, tag: u64) -> Result<Vec<S>> {
+        Ok(bytes_to_scalars(&self.recv_bytes(src, tag)?))
+    }
+
+    /// Barrier across all ranks.
+    pub fn barrier(&self) {
+        let mut b = self.world.inner.barrier.lock().unwrap();
+        let gen = b.generation;
+        b.count += 1;
+        if b.count == self.nranks() {
+            b.count = 0;
+            b.generation += 1;
+            self.world.inner.barrier_cond.notify_all();
+        } else {
+            while b.generation == gen {
+                b = self.world.inner.barrier_cond.wait(b).unwrap();
+            }
+        }
+    }
+
+    /// Allreduce(sum) over f64 slices — used for distributed dot products.
+    pub fn allreduce_sum(&self, local: &[f64]) -> Result<Vec<f64>> {
+        let mut r = self.world.inner.reduce.lock().unwrap();
+        // wait for previous reduction to fully drain
+        while r.parts[self.rank].is_some() {
+            r = self.world.inner.reduce_cond.wait(r).unwrap();
+        }
+        r.parts[self.rank] = Some(local.to_vec());
+        r.arrived += 1;
+        if r.arrived == self.nranks() {
+            // last rank in: reduce
+            let n = local.len();
+            let mut acc = vec![0.0f64; n];
+            for p in r.parts.iter() {
+                let p = p.as_ref().ok_or_else(|| {
+                    GhostError::Comm("allreduce length mismatch".into())
+                })?;
+                crate::ensure!(p.len() == n, Comm, "allreduce length mismatch");
+                for (a, v) in acc.iter_mut().zip(p) {
+                    *a += v;
+                }
+            }
+            r.result = Some(Arc::new(acc));
+            self.world.inner.reduce_cond.notify_all();
+        } else {
+            while r.result.is_none() {
+                r = self.world.inner.reduce_cond.wait(r).unwrap();
+            }
+        }
+        let out = r.result.as_ref().unwrap().clone();
+        r.taken += 1;
+        if r.taken == self.nranks() {
+            // reset for the next reduction
+            r.taken = 0;
+            r.arrived = 0;
+            r.result = None;
+            for p in r.parts.iter_mut() {
+                *p = None;
+            }
+            r.generation += 1;
+            self.world.inner.reduce_cond.notify_all();
+        }
+        Ok((*out).clone())
+    }
+
+    /// Allreduce for any scalar type via (re, im) pairs.
+    pub fn allreduce_sum_scalar<S: Scalar>(&self, local: &[S]) -> Result<Vec<S>> {
+        let mut flat = Vec::with_capacity(local.len() * 2);
+        for v in local {
+            flat.push(v.re());
+            flat.push(v.im());
+        }
+        let red = self.allreduce_sum(&flat)?;
+        Ok(red
+            .chunks_exact(2)
+            .map(|c| S::from_re_im(c[0], c[1]))
+            .collect())
+    }
+}
+
+pub fn scalars_to_bytes<S: Scalar>(data: &[S]) -> Vec<u8> {
+    let mut v = vec![0u8; std::mem::size_of_val(data)];
+    unsafe {
+        std::ptr::copy_nonoverlapping(data.as_ptr() as *const u8, v.as_mut_ptr(), v.len());
+    }
+    v
+}
+
+pub fn bytes_to_scalars<S: Scalar>(bytes: &[u8]) -> Vec<S> {
+    let n = bytes.len() / std::mem::size_of::<S>();
+    let mut v = vec![S::ZERO; n];
+    unsafe {
+        std::ptr::copy_nonoverlapping(bytes.as_ptr(), v.as_mut_ptr() as *mut u8, bytes.len());
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ping_pong() {
+        let out = World::run(2, CommConfig::instant(), |comm| {
+            if comm.rank() == 0 {
+                comm.send::<f64>(1, 7, &[1.0, 2.0, 3.0]).unwrap();
+                comm.recv::<f64>(1, 8).unwrap()
+            } else {
+                let got = comm.recv::<f64>(0, 7).unwrap();
+                let doubled: Vec<f64> = got.iter().map(|v| v * 2.0).collect();
+                comm.send(0, 8, &doubled).unwrap();
+                vec![]
+            }
+        });
+        assert_eq!(out[0], vec![2.0, 4.0, 6.0]);
+    }
+
+    #[test]
+    fn isend_irecv_roundtrip() {
+        World::run(2, CommConfig::instant(), |comm| {
+            if comm.rank() == 0 {
+                let r = comm.isend::<f64>(1, 1, &[5.0; 100]).unwrap();
+                r.wait().unwrap();
+            } else {
+                let r = comm.irecv_bytes(0, 1);
+                let bytes = r.wait().unwrap();
+                let v: Vec<f64> = bytes_to_scalars(&bytes);
+                assert_eq!(v.len(), 100);
+                assert!(v.iter().all(|&x| x == 5.0));
+            }
+        });
+    }
+
+    #[test]
+    fn barrier_synchronizes() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let counter = Arc::new(AtomicUsize::new(0));
+        let c2 = counter.clone();
+        World::run(4, CommConfig::instant(), move |comm| {
+            c2.fetch_add(1, Ordering::SeqCst);
+            comm.barrier();
+            // all ranks incremented before any passes the barrier
+            assert_eq!(c2.load(Ordering::SeqCst), 4);
+            comm.barrier();
+        });
+    }
+
+    #[test]
+    fn allreduce_sums_across_ranks() {
+        let out = World::run(3, CommConfig::instant(), |comm| {
+            let local = vec![comm.rank() as f64, 1.0];
+            comm.allreduce_sum(&local).unwrap()
+        });
+        for r in out {
+            assert_eq!(r, vec![3.0, 3.0]); // 0+1+2, 1*3
+        }
+    }
+
+    #[test]
+    fn repeated_allreduce() {
+        let out = World::run(2, CommConfig::instant(), |comm| {
+            let mut acc = 0.0;
+            for i in 0..10 {
+                let r = comm.allreduce_sum(&[i as f64]).unwrap();
+                acc += r[0];
+            }
+            acc
+        });
+        assert_eq!(out[0], out[1]);
+        assert_eq!(out[0], 2.0 * (0..10).sum::<usize>() as f64 / 1.0);
+    }
+
+    #[test]
+    fn complex_allreduce() {
+        use crate::core::C64;
+        let out = World::run(2, CommConfig::instant(), |comm| {
+            let v = [C64::new(1.0, comm.rank() as f64)];
+            comm.allreduce_sum_scalar(&v).unwrap()
+        });
+        assert_eq!(out[0][0], C64::new(2.0, 1.0));
+    }
+
+    #[test]
+    fn deferred_send_transfers_in_wait() {
+        // non-progressing fabric: isend over the eager limit must not be
+        // received until the sender calls wait()
+        let cfg = CommConfig {
+            latency: Duration::from_millis(5),
+            bandwidth_bps: f64::INFINITY,
+            eager_limit: 8,
+            async_progress: false,
+        };
+        World::run(2, cfg, |comm| {
+            if comm.rank() == 0 {
+                let req = comm.isend::<f64>(1, 1, &[1.0; 64]).unwrap();
+                std::thread::sleep(Duration::from_millis(30));
+                req.wait().unwrap();
+            } else {
+                let t0 = Instant::now();
+                let bytes = comm.irecv_bytes(0, 1).wait().unwrap();
+                assert!(!bytes.is_empty());
+                // must have waited for sender's wait() at ~30ms
+                assert!(
+                    t0.elapsed() >= Duration::from_millis(25),
+                    "received too early: {:?}",
+                    t0.elapsed()
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn send_to_invalid_rank_errors() {
+        World::run(1, CommConfig::instant(), |comm| {
+            assert!(comm.send::<f64>(3, 0, &[1.0]).is_err());
+        });
+    }
+}

@@ -1,0 +1,47 @@
+//! Library error type. Mirrors GHOST's error codes (ghost_error) but as a
+//! proper Rust enum.
+
+use thiserror::Error;
+
+#[derive(Error, Debug)]
+pub enum GhostError {
+    #[error("invalid argument: {0}")]
+    InvalidArg(String),
+    #[error("dimension mismatch: {0}")]
+    DimMismatch(String),
+    #[error("index overflow: {0}")]
+    IndexOverflow(String),
+    #[error("unsupported dtype for this path: {0}")]
+    Dtype(String),
+    #[error("i/o error: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("parse error: {0}")]
+    Parse(String),
+    #[error("runtime (PJRT/XLA) error: {0}")]
+    Runtime(String),
+    #[error("artifact not found: {0}")]
+    ArtifactNotFound(String),
+    #[error("communication error: {0}")]
+    Comm(String),
+    #[error("task error: {0}")]
+    Task(String),
+    #[error("solver did not converge: {0}")]
+    NoConvergence(String),
+}
+
+pub type Result<T> = std::result::Result<T, GhostError>;
+
+impl From<xla::Error> for GhostError {
+    fn from(e: xla::Error) -> Self {
+        GhostError::Runtime(e.to_string())
+    }
+}
+
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $kind:ident, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::core::error::GhostError::$kind(format!($($arg)*)));
+        }
+    };
+}

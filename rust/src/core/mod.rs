@@ -1,0 +1,40 @@
+//! Core types: scalars, indices, errors, RNG and the in-repo
+//! property-testing framework.
+
+pub mod error;
+pub mod prop;
+pub mod rng;
+pub mod scalar;
+
+pub use error::{GhostError, Result};
+pub use rng::Rng;
+pub use scalar::{Complex, Scalar, C32, C64};
+
+/// Global row/column index (64-bit; section 5.1 of the paper).
+pub type Gidx = i64;
+/// Process-local index (32-bit; remote columns are compressed so local
+/// matrices always fit, section 5.1 / Fig 3).
+pub type Lidx = i32;
+
+/// Checked Gidx -> Lidx narrowing; errors instead of wrapping.
+pub fn to_lidx(g: Gidx) -> Result<Lidx> {
+    if g < 0 || g > Lidx::MAX as Gidx {
+        return Err(GhostError::IndexOverflow(format!(
+            "global index {g} does not fit in 32-bit local index"
+        )));
+    }
+    Ok(g as Lidx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lidx_narrowing() {
+        assert_eq!(to_lidx(12).unwrap(), 12);
+        assert!(to_lidx(-1).is_err());
+        assert!(to_lidx(Lidx::MAX as Gidx + 1).is_err());
+        assert_eq!(to_lidx(Lidx::MAX as Gidx).unwrap(), Lidx::MAX);
+    }
+}

@@ -1,0 +1,116 @@
+//! Minimal property-based testing framework (proptest is not vendored).
+//!
+//! Usage:
+//! ```ignore
+//! prop_check(100, 42, |g| {
+//!     let n = g.usize(1, 100);
+//!     let v = g.vec_f64(n, -1.0, 1.0);
+//!     assert!(v.len() == n);
+//! });
+//! ```
+//! Failures re-raise the inner panic annotated with the case seed so a
+//! failing case can be replayed with `prop_replay`.
+
+use super::rng::Rng;
+
+/// Random value generator handed to property closures.
+pub struct Gen {
+    rng: Rng,
+    /// Seed for this particular case (for replay).
+    pub case_seed: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Gen {
+            rng: Rng::new(seed),
+            case_seed: seed,
+        }
+    }
+
+    pub fn usize(&mut self, lo: usize, hi_incl: usize) -> usize {
+        self.rng.range(lo, hi_incl + 1)
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.rng.bool(p)
+    }
+
+    pub fn choose<'a, T>(&mut self, opts: &'a [T]) -> &'a T {
+        &opts[self.rng.below(opts.len())]
+    }
+
+    pub fn vec_f64(&mut self, n: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..n).map(|_| self.f64(lo, hi)).collect()
+    }
+
+    pub fn normal(&mut self) -> f64 {
+        self.rng.normal()
+    }
+
+    pub fn vec_normal(&mut self, n: usize) -> Vec<f64> {
+        (0..n).map(|_| self.rng.normal()).collect()
+    }
+
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Run `f` against `cases` random cases derived from `seed`.
+pub fn prop_check<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(
+    cases: u32,
+    seed: u64,
+    f: F,
+) {
+    for i in 0..cases {
+        let case_seed = seed
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(i as u64);
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen::new(case_seed);
+            f(&mut g);
+        });
+        if let Err(e) = result {
+            eprintln!(
+                "property failed at case {i} (replay with prop_replay({case_seed}, ..))"
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Replay a single failing case.
+pub fn prop_replay<F: FnOnce(&mut Gen)>(case_seed: u64, f: F) {
+    let mut g = Gen::new(case_seed);
+    f(&mut g);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generators_in_bounds() {
+        prop_check(50, 1, |g| {
+            let n = g.usize(1, 10);
+            assert!((1..=10).contains(&n));
+            let x = g.f64(-2.0, 3.0);
+            assert!((-2.0..3.0).contains(&x));
+            let v = g.vec_f64(n, 0.0, 1.0);
+            assert_eq!(v.len(), n);
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn failures_propagate() {
+        prop_check(10, 2, |g| {
+            assert!(g.usize(0, 5) > 5, "always fails eventually");
+        });
+    }
+}

@@ -1,0 +1,347 @@
+//! Scalar abstraction over the four GHOST data types: f32, f64, complex
+//! float and complex double (the paper stresses first-class complex
+//! support as a differentiator against ViennaCL/LAMA, section 1.2).
+//!
+//! No external complex crate is vendored, so [`Complex`] is defined here.
+
+use std::fmt;
+use std::iter::Sum;
+use std::ops::{Add, AddAssign, Div, DivAssign, Mul, MulAssign, Neg, Sub, SubAssign};
+
+/// Complex number over f32/f64. Layout-compatible with `[T; 2]`
+/// (re, im) — the interleaved layout BLAS and XLA use.
+#[derive(Clone, Copy, PartialEq, Debug, Default)]
+#[repr(C)]
+pub struct Complex<T> {
+    pub re: T,
+    pub im: T,
+}
+
+impl<T> Complex<T> {
+    pub const fn new(re: T, im: T) -> Self {
+        Complex { re, im }
+    }
+}
+
+pub type C32 = Complex<f32>;
+pub type C64 = Complex<f64>;
+
+macro_rules! complex_ops {
+    ($t:ty) => {
+        impl Add for Complex<$t> {
+            type Output = Self;
+            #[inline(always)]
+            fn add(self, o: Self) -> Self {
+                Complex::new(self.re + o.re, self.im + o.im)
+            }
+        }
+        impl Sub for Complex<$t> {
+            type Output = Self;
+            #[inline(always)]
+            fn sub(self, o: Self) -> Self {
+                Complex::new(self.re - o.re, self.im - o.im)
+            }
+        }
+        impl Mul for Complex<$t> {
+            type Output = Self;
+            #[inline(always)]
+            fn mul(self, o: Self) -> Self {
+                Complex::new(
+                    self.re * o.re - self.im * o.im,
+                    self.re * o.im + self.im * o.re,
+                )
+            }
+        }
+        impl Div for Complex<$t> {
+            type Output = Self;
+            #[inline(always)]
+            fn div(self, o: Self) -> Self {
+                let d = o.re * o.re + o.im * o.im;
+                Complex::new(
+                    (self.re * o.re + self.im * o.im) / d,
+                    (self.im * o.re - self.re * o.im) / d,
+                )
+            }
+        }
+        impl Neg for Complex<$t> {
+            type Output = Self;
+            #[inline(always)]
+            fn neg(self) -> Self {
+                Complex::new(-self.re, -self.im)
+            }
+        }
+        impl AddAssign for Complex<$t> {
+            #[inline(always)]
+            fn add_assign(&mut self, o: Self) {
+                *self = *self + o;
+            }
+        }
+        impl SubAssign for Complex<$t> {
+            #[inline(always)]
+            fn sub_assign(&mut self, o: Self) {
+                *self = *self - o;
+            }
+        }
+        impl MulAssign for Complex<$t> {
+            #[inline(always)]
+            fn mul_assign(&mut self, o: Self) {
+                *self = *self * o;
+            }
+        }
+        impl DivAssign for Complex<$t> {
+            #[inline(always)]
+            fn div_assign(&mut self, o: Self) {
+                *self = *self / o;
+            }
+        }
+        impl fmt::Display for Complex<$t> {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                write!(f, "({}{:+}i)", self.re, self.im)
+            }
+        }
+        impl Sum for Complex<$t> {
+            fn sum<I: Iterator<Item = Self>>(it: I) -> Self {
+                it.fold(Complex::new(0.0, 0.0), |a, b| a + b)
+            }
+        }
+    };
+}
+complex_ops!(f32);
+complex_ops!(f64);
+
+/// The GHOST scalar trait: everything the kernels need, nothing more.
+/// Norm-like quantities are always returned as f64 to keep reductions
+/// uniform across real and complex types.
+pub trait Scalar:
+    Copy
+    + Send
+    + Sync
+    + PartialEq
+    + fmt::Debug
+    + fmt::Display
+    + Default
+    + Add<Output = Self>
+    + Sub<Output = Self>
+    + Mul<Output = Self>
+    + Div<Output = Self>
+    + Neg<Output = Self>
+    + AddAssign
+    + SubAssign
+    + MulAssign
+    + Sum
+    + 'static
+{
+    const ZERO: Self;
+    const ONE: Self;
+    /// True for C32/C64.
+    const IS_COMPLEX: bool;
+    /// "f32" | "f64" | "c32" | "c64" — matches the artifact manifest.
+    const NAME: &'static str;
+
+    fn from_f64(v: f64) -> Self;
+    fn from_re_im(re: f64, im: f64) -> Self;
+    /// Complex conjugate (identity for real types).
+    fn conj(self) -> Self;
+    fn re(self) -> f64;
+    fn im(self) -> f64;
+    /// Modulus |x| as f64.
+    fn abs(self) -> f64;
+    /// |x|^2 as f64 (cheaper than abs for complex).
+    #[inline(always)]
+    fn abs2(self) -> f64 {
+        let (r, i) = (self.re(), self.im());
+        r * r + i * i
+    }
+    /// Fused multiply-add a*b + c in this scalar type.
+    #[inline(always)]
+    fn mul_add(a: Self, b: Self, c: Self) -> Self {
+        a * b + c
+    }
+    /// Storage bytes per element.
+    #[inline(always)]
+    fn bytes() -> usize {
+        std::mem::size_of::<Self>()
+    }
+}
+
+impl Scalar for f32 {
+    const ZERO: Self = 0.0;
+    const ONE: Self = 1.0;
+    const IS_COMPLEX: bool = false;
+    const NAME: &'static str = "f32";
+    #[inline(always)]
+    fn from_f64(v: f64) -> Self {
+        v as f32
+    }
+    #[inline(always)]
+    fn from_re_im(re: f64, _im: f64) -> Self {
+        re as f32
+    }
+    #[inline(always)]
+    fn conj(self) -> Self {
+        self
+    }
+    #[inline(always)]
+    fn re(self) -> f64 {
+        self as f64
+    }
+    #[inline(always)]
+    fn im(self) -> f64 {
+        0.0
+    }
+    #[inline(always)]
+    fn abs(self) -> f64 {
+        (self as f64).abs()
+    }
+    #[inline(always)]
+    fn mul_add(a: Self, b: Self, c: Self) -> Self {
+        f32::mul_add(a, b, c)
+    }
+}
+
+impl Scalar for f64 {
+    const ZERO: Self = 0.0;
+    const ONE: Self = 1.0;
+    const IS_COMPLEX: bool = false;
+    const NAME: &'static str = "f64";
+    #[inline(always)]
+    fn from_f64(v: f64) -> Self {
+        v
+    }
+    #[inline(always)]
+    fn from_re_im(re: f64, _im: f64) -> Self {
+        re
+    }
+    #[inline(always)]
+    fn conj(self) -> Self {
+        self
+    }
+    #[inline(always)]
+    fn re(self) -> f64 {
+        self
+    }
+    #[inline(always)]
+    fn im(self) -> f64 {
+        0.0
+    }
+    #[inline(always)]
+    fn abs(self) -> f64 {
+        f64::abs(self)
+    }
+    #[inline(always)]
+    fn mul_add(a: Self, b: Self, c: Self) -> Self {
+        f64::mul_add(a, b, c)
+    }
+}
+
+impl Scalar for C32 {
+    const ZERO: Self = Complex::new(0.0, 0.0);
+    const ONE: Self = Complex::new(1.0, 0.0);
+    const IS_COMPLEX: bool = true;
+    const NAME: &'static str = "c32";
+    #[inline(always)]
+    fn from_f64(v: f64) -> Self {
+        Complex::new(v as f32, 0.0)
+    }
+    #[inline(always)]
+    fn from_re_im(re: f64, im: f64) -> Self {
+        Complex::new(re as f32, im as f32)
+    }
+    #[inline(always)]
+    fn conj(self) -> Self {
+        Complex::new(self.re, -self.im)
+    }
+    #[inline(always)]
+    fn re(self) -> f64 {
+        self.re as f64
+    }
+    #[inline(always)]
+    fn im(self) -> f64 {
+        self.im as f64
+    }
+    #[inline(always)]
+    fn abs(self) -> f64 {
+        self.abs2().sqrt()
+    }
+}
+
+impl Scalar for C64 {
+    const ZERO: Self = Complex::new(0.0, 0.0);
+    const ONE: Self = Complex::new(1.0, 0.0);
+    const IS_COMPLEX: bool = true;
+    const NAME: &'static str = "c64";
+    #[inline(always)]
+    fn from_f64(v: f64) -> Self {
+        Complex::new(v, 0.0)
+    }
+    #[inline(always)]
+    fn from_re_im(re: f64, im: f64) -> Self {
+        Complex::new(re, im)
+    }
+    #[inline(always)]
+    fn conj(self) -> Self {
+        Complex::new(self.re, -self.im)
+    }
+    #[inline(always)]
+    fn re(self) -> f64 {
+        self.re
+    }
+    #[inline(always)]
+    fn im(self) -> f64 {
+        self.im
+    }
+    #[inline(always)]
+    fn abs(self) -> f64 {
+        self.abs2().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn complex_field_axioms() {
+        let a = C64::new(1.5, -2.0);
+        let b = C64::new(-0.5, 3.0);
+        assert_eq!(a + b, C64::new(1.0, 1.0));
+        assert_eq!(a * C64::ONE, a);
+        let q = a / b;
+        let back = q * b;
+        assert!((back - a).abs() < 1e-12);
+    }
+
+    #[test]
+    fn conj_and_abs() {
+        let a = C64::new(3.0, 4.0);
+        assert_eq!(a.abs(), 5.0);
+        assert_eq!(a.conj(), C64::new(3.0, -4.0));
+        assert_eq!((a * a.conj()).re(), 25.0);
+        assert_eq!((a * a.conj()).im(), 0.0);
+        assert_eq!(2.0f64.conj(), 2.0);
+    }
+
+    #[test]
+    fn layout_is_interleaved() {
+        assert_eq!(std::mem::size_of::<C64>(), 16);
+        assert_eq!(std::mem::size_of::<C32>(), 8);
+        let v = [C64::new(1.0, 2.0), C64::new(3.0, 4.0)];
+        let flat: &[f64] =
+            unsafe { std::slice::from_raw_parts(v.as_ptr() as *const f64, 4) };
+        assert_eq!(flat, &[1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn names_and_flags() {
+        assert!(!f64::IS_COMPLEX && C32::IS_COMPLEX);
+        assert_eq!(f32::NAME, "f32");
+        assert_eq!(C64::NAME, "c64");
+        assert_eq!(C64::bytes(), 16);
+    }
+
+    #[test]
+    fn from_re_im() {
+        assert_eq!(f64::from_re_im(2.0, 9.0), 2.0);
+        assert_eq!(C64::from_re_im(2.0, 9.0), C64::new(2.0, 9.0));
+    }
+}

@@ -1,0 +1,418 @@
+//! Dense matrices (`ghost_densemat`): block vectors, tall & skinny
+//! matrices, and small replicated matrices (section 3.2).
+//!
+//! Storage is row-major ("interleaved" block vectors) or column-major,
+//! selectable per object; row-major is the performance-preferred layout
+//! (Fig 8) while column-major exists for integration with column-major
+//! solver stacks (section 6). Views (compact and scattered, Fig 2) borrow
+//! the underlying storage without copying.
+
+pub mod ops;
+pub mod tsm;
+
+use crate::core::{Result, Rng, Scalar};
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Layout {
+    RowMajor,
+    ColMajor,
+}
+
+/// An owned dense matrix with explicit leading dimension (`stride`).
+#[derive(Clone, Debug)]
+pub struct DenseMat<S> {
+    data: Vec<S>,
+    nrows: usize,
+    ncols: usize,
+    /// Leading dimension: elements between consecutive rows (row-major)
+    /// or consecutive columns (col-major).
+    stride: usize,
+    layout: Layout,
+}
+
+impl<S: Scalar> DenseMat<S> {
+    pub fn zeros(nrows: usize, ncols: usize, layout: Layout) -> Self {
+        let stride = match layout {
+            Layout::RowMajor => ncols,
+            Layout::ColMajor => nrows,
+        };
+        let len = match layout {
+            Layout::RowMajor => nrows * stride,
+            Layout::ColMajor => ncols * stride,
+        };
+        DenseMat {
+            data: vec![S::ZERO; len],
+            nrows,
+            ncols,
+            stride,
+            layout,
+        }
+    }
+
+    /// Column vector of zeros (dense vectors are 1-column matrices).
+    pub fn zero_vec(nrows: usize) -> Self {
+        Self::zeros(nrows, 1, Layout::ColMajor)
+    }
+
+    pub fn from_fn(
+        nrows: usize,
+        ncols: usize,
+        layout: Layout,
+        mut f: impl FnMut(usize, usize) -> S,
+    ) -> Self {
+        let mut m = Self::zeros(nrows, ncols, layout);
+        for i in 0..nrows {
+            for j in 0..ncols {
+                *m.at_mut(i, j) = f(i, j);
+            }
+        }
+        m
+    }
+
+    /// Random gaussian entries (deterministic from `seed`).
+    pub fn random(nrows: usize, ncols: usize, layout: Layout, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        Self::from_fn(nrows, ncols, layout, |_, _| {
+            S::from_re_im(rng.normal(), if S::IS_COMPLEX { rng.normal() } else { 0.0 })
+        })
+    }
+
+    /// Adopt existing data ("view of raw data in memory" in the paper —
+    /// here an owned adoption since Rust views need lifetimes; see
+    /// [`DenseMat::view`] for borrowing).
+    pub fn from_vec(
+        data: Vec<S>,
+        nrows: usize,
+        ncols: usize,
+        layout: Layout,
+    ) -> Result<Self> {
+        crate::ensure!(
+            data.len() == nrows * ncols,
+            DimMismatch,
+            "data len {} != {}x{}",
+            data.len(),
+            nrows,
+            ncols
+        );
+        let stride = match layout {
+            Layout::RowMajor => ncols,
+            Layout::ColMajor => nrows,
+        };
+        Ok(DenseMat {
+            data,
+            nrows,
+            ncols,
+            stride,
+            layout,
+        })
+    }
+
+    #[inline(always)]
+    pub fn nrows(&self) -> usize {
+        self.nrows
+    }
+    #[inline(always)]
+    pub fn ncols(&self) -> usize {
+        self.ncols
+    }
+    #[inline(always)]
+    pub fn layout(&self) -> Layout {
+        self.layout
+    }
+    #[inline(always)]
+    pub fn stride(&self) -> usize {
+        self.stride
+    }
+
+    #[inline(always)]
+    fn idx(&self, i: usize, j: usize) -> usize {
+        debug_assert!(i < self.nrows && j < self.ncols);
+        match self.layout {
+            Layout::RowMajor => i * self.stride + j,
+            Layout::ColMajor => j * self.stride + i,
+        }
+    }
+
+    #[inline(always)]
+    pub fn at(&self, i: usize, j: usize) -> S {
+        self.data[self.idx(i, j)]
+    }
+
+    #[inline(always)]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut S {
+        let k = self.idx(i, j);
+        &mut self.data[k]
+    }
+
+    pub fn fill(&mut self, v: S) {
+        self.data.fill(v);
+    }
+
+    #[inline(always)]
+    pub fn as_slice(&self) -> &[S] {
+        &self.data
+    }
+
+    #[inline(always)]
+    pub fn as_mut_slice(&mut self) -> &mut [S] {
+        &mut self.data
+    }
+
+    /// Contiguous row access (row-major only).
+    #[inline(always)]
+    pub fn row(&self, i: usize) -> &[S] {
+        debug_assert_eq!(self.layout, Layout::RowMajor);
+        &self.data[i * self.stride..i * self.stride + self.ncols]
+    }
+
+    #[inline(always)]
+    pub fn row_mut(&mut self, i: usize) -> &mut [S] {
+        debug_assert_eq!(self.layout, Layout::RowMajor);
+        let s = self.stride;
+        let nc = self.ncols;
+        &mut self.data[i * s..i * s + nc]
+    }
+
+    /// Contiguous column access (col-major only).
+    #[inline(always)]
+    pub fn col(&self, j: usize) -> &[S] {
+        debug_assert_eq!(self.layout, Layout::ColMajor);
+        &self.data[j * self.stride..j * self.stride + self.nrows]
+    }
+
+    #[inline(always)]
+    pub fn col_mut(&mut self, j: usize) -> &mut [S] {
+        debug_assert_eq!(self.layout, Layout::ColMajor);
+        let s = self.stride;
+        let nr = self.nrows;
+        &mut self.data[j * s..j * s + nr]
+    }
+
+    /// Borrowing compact view of a contiguous sub-block (Fig 2 left).
+    pub fn view(&self, r0: usize, c0: usize, nr: usize, nc: usize) -> Result<DenseView<'_, S>> {
+        crate::ensure!(
+            r0 + nr <= self.nrows && c0 + nc <= self.ncols,
+            DimMismatch,
+            "view ({r0}+{nr}, {c0}+{nc}) out of ({}, {})",
+            self.nrows,
+            self.ncols
+        );
+        Ok(DenseView {
+            mat: self,
+            r0,
+            nr,
+            cols: ViewCols::Range(c0, nc),
+        })
+    }
+
+    /// Borrowing scattered view of an arbitrary column subset (Fig 2
+    /// right). Scattered views cannot be used by vectorized kernels; call
+    /// [`DenseView::clone_compact`] first (section 3.2).
+    pub fn view_scattered(&self, r0: usize, nr: usize, cols: Vec<usize>) -> Result<DenseView<'_, S>> {
+        crate::ensure!(
+            r0 + nr <= self.nrows,
+            DimMismatch,
+            "row range out of bounds"
+        );
+        for &c in &cols {
+            crate::ensure!(c < self.ncols, DimMismatch, "column {c} out of bounds");
+        }
+        Ok(DenseView {
+            mat: self,
+            r0,
+            nr,
+            cols: ViewCols::Scattered(cols),
+        })
+    }
+
+    /// Change storage layout, copying (out-of-place).
+    pub fn to_layout(&self, layout: Layout) -> Self {
+        let mut out = Self::zeros(self.nrows, self.ncols, layout);
+        for i in 0..self.nrows {
+            for j in 0..self.ncols {
+                *out.at_mut(i, j) = self.at(i, j);
+            }
+        }
+        out
+    }
+
+    /// In-place layout change (paper section 3.2: "in-place or
+    /// out-of-place, while copying a block vector").
+    pub fn change_layout_inplace(&mut self, layout: Layout) {
+        if layout == self.layout {
+            return;
+        }
+        *self = self.to_layout(layout);
+    }
+
+    /// Frobenius norm (f64 regardless of scalar type).
+    pub fn norm_fro(&self) -> f64 {
+        let mut acc = 0.0;
+        for i in 0..self.nrows {
+            for j in 0..self.ncols {
+                acc += self.at(i, j).abs2();
+            }
+        }
+        acc.sqrt()
+    }
+
+    pub fn max_abs_diff(&self, o: &Self) -> f64 {
+        assert_eq!((self.nrows, self.ncols), (o.nrows, o.ncols));
+        let mut m = 0.0f64;
+        for i in 0..self.nrows {
+            for j in 0..self.ncols {
+                m = m.max((self.at(i, j) - o.at(i, j)).abs());
+            }
+        }
+        m
+    }
+}
+
+enum ViewCols {
+    /// (first, count)
+    Range(usize, usize),
+    Scattered(Vec<usize>),
+}
+
+/// Read-only view over a [`DenseMat`]; compact (column range) or scattered
+/// (arbitrary column subset).
+pub struct DenseView<'a, S> {
+    mat: &'a DenseMat<S>,
+    r0: usize,
+    nr: usize,
+    cols: ViewCols,
+}
+
+impl<'a, S: Scalar> DenseView<'a, S> {
+    pub fn nrows(&self) -> usize {
+        self.nr
+    }
+
+    pub fn ncols(&self) -> usize {
+        match &self.cols {
+            ViewCols::Range(_, n) => *n,
+            ViewCols::Scattered(c) => c.len(),
+        }
+    }
+
+    pub fn is_scattered(&self) -> bool {
+        matches!(self.cols, ViewCols::Scattered(_))
+    }
+
+    /// A scattered view over a *row-major* matrix is still "compact by
+    /// row" only if the column set is contiguous; this reports whether
+    /// vectorized kernels may run directly on the view.
+    pub fn is_compact(&self) -> bool {
+        !self.is_scattered()
+    }
+
+    #[inline(always)]
+    pub fn at(&self, i: usize, j: usize) -> S {
+        let col = match &self.cols {
+            ViewCols::Range(c0, _) => c0 + j,
+            ViewCols::Scattered(c) => c[j],
+        };
+        self.mat.at(self.r0 + i, col)
+    }
+
+    /// Materialize as a compact owned matrix ("compact clone", section 3.2).
+    pub fn clone_compact(&self, layout: Layout) -> DenseMat<S> {
+        DenseMat::from_fn(self.nrows(), self.ncols(), layout, |i, j| self.at(i, j))
+    }
+}
+
+/// Convenience constructor for a single (column) vector from a slice.
+pub fn vec_from_slice<S: Scalar>(v: &[S]) -> DenseMat<S> {
+    DenseMat::from_vec(v.to_vec(), v.len(), 1, Layout::ColMajor).unwrap()
+}
+
+impl<S: Scalar> std::ops::Index<(usize, usize)> for DenseMat<S> {
+    type Output = S;
+    #[inline(always)]
+    fn index(&self, (i, j): (usize, usize)) -> &S {
+        &self.data[self.idx(i, j)]
+    }
+}
+
+impl<S: Scalar> std::ops::IndexMut<(usize, usize)> for DenseMat<S> {
+    #[inline(always)]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut S {
+        let k = self.idx(i, j);
+        &mut self.data[k]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::prop::prop_check;
+
+    #[test]
+    fn roundtrip_layouts() {
+        let m = DenseMat::<f64>::from_fn(5, 3, Layout::RowMajor, |i, j| {
+            (i * 10 + j) as f64
+        });
+        let c = m.to_layout(Layout::ColMajor);
+        for i in 0..5 {
+            for j in 0..3 {
+                assert_eq!(m.at(i, j), c.at(i, j));
+            }
+        }
+        let mut r = c.clone();
+        r.change_layout_inplace(Layout::RowMajor);
+        assert_eq!(r.max_abs_diff(&m), 0.0);
+    }
+
+    #[test]
+    fn views_compact_and_scattered() {
+        let m = DenseMat::<f64>::from_fn(6, 6, Layout::RowMajor, |i, j| {
+            (i * 6 + j) as f64
+        });
+        let v = m.view(1, 2, 3, 2).unwrap();
+        assert_eq!(v.at(0, 0), m.at(1, 2));
+        assert!(v.is_compact());
+        let s = m.view_scattered(0, 6, vec![0, 3, 5]).unwrap();
+        assert!(s.is_scattered());
+        assert_eq!(s.at(2, 1), m.at(2, 3));
+        let cc = s.clone_compact(Layout::ColMajor);
+        assert_eq!(cc.at(2, 1), m.at(2, 3));
+        assert_eq!(cc.ncols(), 3);
+    }
+
+    #[test]
+    fn view_bounds_checked() {
+        let m = DenseMat::<f64>::zeros(4, 4, Layout::RowMajor);
+        assert!(m.view(2, 2, 3, 1).is_err());
+        assert!(m.view_scattered(0, 4, vec![4]).is_err());
+    }
+
+    #[test]
+    fn row_col_slices() {
+        let m = DenseMat::<f64>::from_fn(3, 4, Layout::RowMajor, |i, j| {
+            (i + j) as f64
+        });
+        assert_eq!(m.row(1), &[1.0, 2.0, 3.0, 4.0]);
+        let c = m.to_layout(Layout::ColMajor);
+        assert_eq!(c.col(2), &[2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn prop_layout_roundtrip_preserves_values() {
+        prop_check(30, 99, |g| {
+            let nr = g.usize(1, 20);
+            let nc = g.usize(1, 8);
+            let m = DenseMat::<f64>::random(nr, nc, Layout::RowMajor, g.case_seed);
+            let back = m.to_layout(Layout::ColMajor).to_layout(Layout::RowMajor);
+            assert_eq!(m.max_abs_diff(&back), 0.0);
+        });
+    }
+
+    #[test]
+    fn complex_matrices() {
+        use crate::core::C64;
+        let m = DenseMat::<C64>::random(8, 2, Layout::RowMajor, 5);
+        assert!(m.norm_fro() > 0.0);
+        let c = m.to_layout(Layout::ColMajor);
+        assert_eq!(m.max_abs_diff(&c), 0.0);
+    }
+}

@@ -1,0 +1,283 @@
+//! Blocked BLAS-1 operations (section 5.2): axpy/axpby/scal/dot working
+//! vector-wise on block vectors, plus the v-variants (vaxpy/vaxpby/vscal)
+//! with a distinct scalar per block-vector column.
+//!
+//! Row-major block vectors get a fused single-pass implementation (this is
+//! what "interleaved storage" buys, Fig 8); column-major falls back to a
+//! per-column pass.
+
+use super::{DenseMat, Layout};
+use crate::core::{Result, Scalar};
+
+fn check_same_shape<S: Scalar>(a: &DenseMat<S>, b: &DenseMat<S>) -> Result<()> {
+    crate::ensure!(
+        a.nrows() == b.nrows() && a.ncols() == b.ncols(),
+        DimMismatch,
+        "shape ({},{}) vs ({},{})",
+        a.nrows(),
+        a.ncols(),
+        b.nrows(),
+        b.ncols()
+    );
+    Ok(())
+}
+
+/// y += alpha * x (same alpha for every column).
+pub fn axpy<S: Scalar>(y: &mut DenseMat<S>, alpha: S, x: &DenseMat<S>) -> Result<()> {
+    check_same_shape(y, x)?;
+    let alphas = vec![alpha; y.ncols()];
+    vaxpby(y, &alphas, x, &vec![S::ONE; y.ncols()])
+}
+
+/// y = alpha * x + beta * y.
+pub fn axpby<S: Scalar>(
+    y: &mut DenseMat<S>,
+    alpha: S,
+    x: &DenseMat<S>,
+    beta: S,
+) -> Result<()> {
+    check_same_shape(y, x)?;
+    let nc = y.ncols();
+    vaxpby(y, &vec![alpha; nc], x, &vec![beta; nc])
+}
+
+/// x *= alpha.
+pub fn scal<S: Scalar>(x: &mut DenseMat<S>, alpha: S) {
+    for v in x.as_mut_slice() {
+        *v *= alpha;
+    }
+}
+
+/// Column-wise scaling x[:,j] *= alpha[j] (the paper's vscal; avoids the
+/// BLAS-3 diagonal-matrix trick that would transfer zeros, section 5.2).
+pub fn vscal<S: Scalar>(x: &mut DenseMat<S>, alpha: &[S]) -> Result<()> {
+    crate::ensure!(
+        alpha.len() == x.ncols(),
+        DimMismatch,
+        "vscal: {} alphas for {} cols",
+        alpha.len(),
+        x.ncols()
+    );
+    match x.layout() {
+        Layout::RowMajor => {
+            let nc = x.ncols();
+            for i in 0..x.nrows() {
+                let row = x.row_mut(i);
+                for j in 0..nc {
+                    row[j] *= alpha[j];
+                }
+            }
+        }
+        Layout::ColMajor => {
+            for j in 0..x.ncols() {
+                let a = alpha[j];
+                for v in x.col_mut(j) {
+                    *v *= a;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// y[:,j] += alpha[j] * x[:,j].
+pub fn vaxpy<S: Scalar>(y: &mut DenseMat<S>, alpha: &[S], x: &DenseMat<S>) -> Result<()> {
+    let ones = vec![S::ONE; y.ncols()];
+    vaxpby(y, alpha, x, &ones)
+}
+
+/// y[:,j] = alpha[j] * x[:,j] + beta[j] * y[:,j] — the master kernel all
+/// axpy-family ops lower to.
+pub fn vaxpby<S: Scalar>(
+    y: &mut DenseMat<S>,
+    alpha: &[S],
+    x: &DenseMat<S>,
+    beta: &[S],
+) -> Result<()> {
+    check_same_shape(y, x)?;
+    crate::ensure!(
+        alpha.len() == y.ncols() && beta.len() == y.ncols(),
+        DimMismatch,
+        "vaxpby: scalar count mismatch"
+    );
+    match (y.layout(), x.layout()) {
+        (Layout::RowMajor, Layout::RowMajor) => {
+            let nc = y.ncols();
+            for i in 0..y.nrows() {
+                let xr = x.row(i);
+                let yr = y.row_mut(i);
+                for j in 0..nc {
+                    yr[j] = alpha[j] * xr[j] + beta[j] * yr[j];
+                }
+            }
+        }
+        (Layout::ColMajor, Layout::ColMajor) => {
+            for j in 0..y.ncols() {
+                let (a, b) = (alpha[j], beta[j]);
+                let xc = x.col(j);
+                let yc = y.col_mut(j);
+                for (yv, xv) in yc.iter_mut().zip(xc) {
+                    *yv = a * *xv + b * *yv;
+                }
+            }
+        }
+        _ => {
+            // mixed layouts: generic indexed path
+            for i in 0..y.nrows() {
+                for j in 0..y.ncols() {
+                    let v = alpha[j] * x.at(i, j) + beta[j] * y.at(i, j);
+                    *y.at_mut(i, j) = v;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Column-wise inner products dot[j] = <x[:,j], y[:,j]> (x conjugated for
+/// complex scalars, matching BLAS xDOTC).
+pub fn dot<S: Scalar>(x: &DenseMat<S>, y: &DenseMat<S>) -> Result<Vec<S>> {
+    check_same_shape(x, y)?;
+    let nc = x.ncols();
+    let mut out = vec![S::ZERO; nc];
+    match (x.layout(), y.layout()) {
+        (Layout::RowMajor, Layout::RowMajor) => {
+            for i in 0..x.nrows() {
+                let xr = x.row(i);
+                let yr = y.row(i);
+                for j in 0..nc {
+                    out[j] += xr[j].conj() * yr[j];
+                }
+            }
+        }
+        (Layout::ColMajor, Layout::ColMajor) => {
+            for (j, o) in out.iter_mut().enumerate() {
+                let xc = x.col(j);
+                let yc = y.col(j);
+                let mut acc = S::ZERO;
+                for (a, b) in xc.iter().zip(yc) {
+                    acc += a.conj() * *b;
+                }
+                *o = acc;
+            }
+        }
+        _ => {
+            for i in 0..x.nrows() {
+                for (j, o) in out.iter_mut().enumerate() {
+                    *o += x.at(i, j).conj() * y.at(i, j);
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Column-wise 2-norms as f64.
+pub fn norm2<S: Scalar>(x: &DenseMat<S>) -> Vec<f64> {
+    let mut out = vec![0.0f64; x.ncols()];
+    for i in 0..x.nrows() {
+        for (j, o) in out.iter_mut().enumerate() {
+            *o += x.at(i, j).abs2();
+        }
+    }
+    for o in &mut out {
+        *o = o.sqrt();
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::prop::prop_check;
+    use crate::core::C64;
+
+    fn approx(a: f64, b: f64, tol: f64) {
+        assert!((a - b).abs() <= tol * (1.0 + a.abs().max(b.abs())), "{a} vs {b}");
+    }
+
+    #[test]
+    fn axpy_axpby_scal_consistency() {
+        let x = DenseMat::<f64>::random(40, 3, Layout::RowMajor, 1);
+        let y0 = DenseMat::<f64>::random(40, 3, Layout::RowMajor, 2);
+        // axpby(y, a, x, 1) == axpy(y, a, x)
+        let mut y1 = y0.clone();
+        axpy(&mut y1, 2.5, &x).unwrap();
+        let mut y2 = y0.clone();
+        axpby(&mut y2, 2.5, &x, 1.0).unwrap();
+        assert_eq!(y1.max_abs_diff(&y2), 0.0);
+        // axpby(y, 0, x, b) == scal(y, b)
+        let mut y3 = y0.clone();
+        axpby(&mut y3, 0.0, &x, -2.0).unwrap();
+        let mut y4 = y0.clone();
+        scal(&mut y4, -2.0);
+        assert!(y3.max_abs_diff(&y4) < 1e-15);
+    }
+
+    #[test]
+    fn v_variants_match_per_column_calls() {
+        let x = DenseMat::<f64>::random(30, 4, Layout::ColMajor, 3);
+        let y0 = DenseMat::<f64>::random(30, 4, Layout::ColMajor, 4);
+        let alphas = [1.0, -2.0, 0.5, 3.0];
+        let betas = [0.0, 1.0, -1.0, 0.25];
+        let mut y1 = y0.clone();
+        vaxpby(&mut y1, &alphas, &x, &betas).unwrap();
+        for j in 0..4 {
+            for i in 0..30 {
+                let want = alphas[j] * x.at(i, j) + betas[j] * y0.at(i, j);
+                approx(y1.at(i, j), want, 1e-15);
+            }
+        }
+    }
+
+    #[test]
+    fn layouts_agree() {
+        prop_check(25, 7, |g| {
+            let nr = g.usize(1, 50);
+            let nc = g.usize(1, 6);
+            let xr = DenseMat::<f64>::random(nr, nc, Layout::RowMajor, g.case_seed);
+            let yr = DenseMat::<f64>::random(nr, nc, Layout::RowMajor, g.case_seed + 1);
+            let xc = xr.to_layout(Layout::ColMajor);
+            let yc = yr.to_layout(Layout::ColMajor);
+            let mut a = yr.clone();
+            axpby(&mut a, 1.5, &xr, -0.5).unwrap();
+            let mut b = yc.clone();
+            axpby(&mut b, 1.5, &xc, -0.5).unwrap();
+            assert!(a.max_abs_diff(&b.to_layout(Layout::RowMajor)) < 1e-14);
+            let d1 = dot(&xr, &yr).unwrap();
+            let d2 = dot(&xc, &yc).unwrap();
+            for (u, v) in d1.iter().zip(&d2) {
+                approx(*u, *v, 1e-12);
+            }
+        });
+    }
+
+    #[test]
+    fn complex_dot_conjugates() {
+        let mut x = DenseMat::<C64>::zeros(2, 1, Layout::ColMajor);
+        *x.at_mut(0, 0) = C64::new(0.0, 1.0); // i
+        *x.at_mut(1, 0) = C64::new(1.0, 0.0);
+        let d = dot(&x, &x).unwrap();
+        // <x,x> = conj(i)*i + 1 = 1 + 1 = 2 (real)
+        assert_eq!(d[0], C64::new(2.0, 0.0));
+    }
+
+    #[test]
+    fn norm2_matches_dot() {
+        let x = DenseMat::<f64>::random(64, 2, Layout::RowMajor, 9);
+        let d = dot(&x, &x).unwrap();
+        let n = norm2(&x);
+        for j in 0..2 {
+            approx(n[j] * n[j], d[j], 1e-12);
+        }
+    }
+
+    #[test]
+    fn shape_mismatch_errors() {
+        let x = DenseMat::<f64>::zeros(4, 2, Layout::RowMajor);
+        let mut y = DenseMat::<f64>::zeros(4, 3, Layout::RowMajor);
+        assert!(axpy(&mut y, 1.0, &x).is_err());
+        assert!(dot(&x, &y).is_err());
+        assert!(vscal(&mut y, &[1.0, 2.0]).is_err());
+    }
+}

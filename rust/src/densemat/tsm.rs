@@ -1,0 +1,480 @@
+//! Tall & skinny dense matrix kernels (section 5.2):
+//!
+//! - `tsmttsm`:  X = alpha * V^H W + beta * X   (block-vector inner product)
+//! - `tsmm`:     W = alpha * V X + beta * W
+//! - `tsmm_inplace`: V = V X (square X)
+//!
+//! Each kernel exists in two flavors mirroring GHOST's code-generation
+//! story (section 5.4): a *generic* implementation (the role Intel MKL
+//! plays in Fig 7 — correct for any shape, blind to m,k << n) and
+//! *width-specialized* implementations instantiated at compile time for
+//! small (m, k) via const generics + the `specialize!` macro (the analogue
+//! of GHOST's #GHOST_UNROLL code generator). The public entry points
+//! implement the paper's fallback chain: specialized if available, else
+//! generic — and report which one ran.
+
+use super::{DenseMat, Layout};
+use crate::core::{Result, Scalar};
+
+/// Which implementation the dispatcher selected (the paper logs the
+/// "degree of specialization" of the chosen kernel, section 5.4).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum KernelChoice {
+    Specialized,
+    Generic,
+}
+
+// ---------------------------------------------------------------------------
+// Generic fallbacks ("MKL stand-in": shape-oblivious, correct everywhere)
+// ---------------------------------------------------------------------------
+
+/// Generic X = alpha * V^H W + beta * X. V: (n, m), W: (n, k), X: (m, k).
+pub fn tsmttsm_generic<S: Scalar>(
+    x: &mut DenseMat<S>,
+    alpha: S,
+    v: &DenseMat<S>,
+    w: &DenseMat<S>,
+    beta: S,
+) -> Result<()> {
+    let (n, m) = (v.nrows(), v.ncols());
+    let k = w.ncols();
+    crate::ensure!(
+        w.nrows() == n && x.nrows() == m && x.ncols() == k,
+        DimMismatch,
+        "tsmttsm: V({n},{m}) W({},{k}) X({},{})",
+        w.nrows(),
+        x.nrows(),
+        x.ncols()
+    );
+    // j-i-l loop order with a column temporary: cache-friendly for
+    // column-blind shapes, deliberately not specialized on m,k.
+    for jm in 0..m {
+        for jk in 0..k {
+            let mut acc = S::ZERO;
+            for i in 0..n {
+                acc += v.at(i, jm).conj() * w.at(i, jk);
+            }
+            let old = x.at(jm, jk);
+            *x.at_mut(jm, jk) = alpha * acc + beta * old;
+        }
+    }
+    Ok(())
+}
+
+/// Generic W = alpha * V X + beta * W. V: (n, m), X: (m, k), W: (n, k).
+pub fn tsmm_generic<S: Scalar>(
+    w: &mut DenseMat<S>,
+    alpha: S,
+    v: &DenseMat<S>,
+    x: &DenseMat<S>,
+    beta: S,
+) -> Result<()> {
+    let (n, m) = (v.nrows(), v.ncols());
+    let k = x.ncols();
+    crate::ensure!(
+        x.nrows() == m && w.nrows() == n && w.ncols() == k,
+        DimMismatch,
+        "tsmm: V({n},{m}) X({},{k}) W({},{})",
+        x.nrows(),
+        w.nrows(),
+        w.ncols()
+    );
+    for i in 0..n {
+        for jk in 0..k {
+            let mut acc = S::ZERO;
+            for jm in 0..m {
+                acc += v.at(i, jm) * x.at(jm, jk);
+            }
+            let old = w.at(i, jk);
+            *w.at_mut(i, jk) = alpha * acc + beta * old;
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Specialized kernels (compile-time m, k — the code-generation analogue)
+// ---------------------------------------------------------------------------
+
+/// Fully-unrolled X = alpha V^H W + beta X for compile-time (M, K).
+/// Requires row-major V and W (interleaved block vectors); the M*K
+/// accumulator tile lives in registers across the streaming n loop —
+/// this is exactly the structure GHOST emits with #GHOST_UNROLL.
+fn tsmttsm_fixed<S: Scalar, const M: usize, const K: usize>(
+    x: &mut DenseMat<S>,
+    alpha: S,
+    v: &DenseMat<S>,
+    w: &DenseMat<S>,
+    beta: S,
+) {
+    debug_assert_eq!(v.layout(), Layout::RowMajor);
+    debug_assert_eq!(w.layout(), Layout::RowMajor);
+    let n = v.nrows();
+    let mut acc = [[S::ZERO; K]; M];
+    let vs = v.as_slice();
+    let ws = w.as_slice();
+    let (lv, lw) = (v.stride(), w.stride());
+    for i in 0..n {
+        let vr = &vs[i * lv..i * lv + M];
+        let wr = &ws[i * lw..i * lw + K];
+        for jm in 0..M {
+            let vc = vr[jm].conj();
+            for jk in 0..K {
+                acc[jm][jk] += vc * wr[jk];
+            }
+        }
+    }
+    for jm in 0..M {
+        for jk in 0..K {
+            let old = x.at(jm, jk);
+            *x.at_mut(jm, jk) = alpha * acc[jm][jk] + beta * old;
+        }
+    }
+}
+
+/// Fully-unrolled W = alpha V X + beta W for compile-time (M, K).
+fn tsmm_fixed<S: Scalar, const M: usize, const K: usize>(
+    w: &mut DenseMat<S>,
+    alpha: S,
+    v: &DenseMat<S>,
+    x: &DenseMat<S>,
+    beta: S,
+) {
+    debug_assert_eq!(v.layout(), Layout::RowMajor);
+    debug_assert_eq!(w.layout(), Layout::RowMajor);
+    let n = v.nrows();
+    // stage X into a register tile
+    let mut xt = [[S::ZERO; K]; M];
+    for jm in 0..M {
+        for jk in 0..K {
+            xt[jm][jk] = x.at(jm, jk);
+        }
+    }
+    let lv = v.stride();
+    let lw = w.stride();
+    let vs = v.as_slice().as_ptr();
+    let ws = w.as_mut_slice().as_mut_ptr();
+    for i in 0..n {
+        // SAFETY: i < n and M/K <= stride by construction.
+        unsafe {
+            let vr = std::slice::from_raw_parts(vs.add(i * lv), M);
+            let wr = std::slice::from_raw_parts_mut(ws.add(i * lw), K);
+            let mut out = [S::ZERO; K];
+            for jm in 0..M {
+                let vv = vr[jm];
+                for jk in 0..K {
+                    out[jk] += vv * xt[jm][jk];
+                }
+            }
+            for jk in 0..K {
+                wr[jk] = alpha * out[jk] + beta * wr[jk];
+            }
+        }
+    }
+}
+
+/// The set of (m, k) pairs specialized at compile time — the equivalent of
+/// listing block-vector widths in GHOST's build system (section 5.4).
+pub const SPECIALIZED_DIMS: &[usize] = &[1, 2, 4, 8, 16];
+
+macro_rules! dispatch_fixed {
+    // expand an (m, k) match over the cartesian product of widths
+    ($func:ident, $m:expr, $k:expr, $args:tt, [$($mm:literal),+]) => {
+        match $m {
+            $( $mm => dispatch_fixed!(@inner $func, $mm, $k, $args, [1, 2, 4, 8, 16]), )+
+            _ => false,
+        }
+    };
+    (@inner $func:ident, $mm:literal, $k:expr, $args:tt, [$($kk:literal),+]) => {
+        match $k {
+            $( $kk => { dispatch_fixed!(@call $func, $mm, $kk, $args); true } )+
+            _ => false,
+        }
+    };
+    (@call $func:ident, $mm:literal, $kk:literal, ($($a:expr),*)) => {
+        $func::<S, $mm, $kk>($($a),*)
+    };
+}
+
+// ---------------------------------------------------------------------------
+// Public dispatchers (fallback chain, section 5.4)
+// ---------------------------------------------------------------------------
+
+/// X = alpha V^H W + beta X with automatic kernel selection.
+pub fn tsmttsm<S: Scalar>(
+    x: &mut DenseMat<S>,
+    alpha: S,
+    v: &DenseMat<S>,
+    w: &DenseMat<S>,
+    beta: S,
+) -> Result<KernelChoice> {
+    let (m, k) = (v.ncols(), w.ncols());
+    crate::ensure!(
+        w.nrows() == v.nrows() && x.nrows() == m && x.ncols() == k,
+        DimMismatch,
+        "tsmttsm dims"
+    );
+    if v.layout() == Layout::RowMajor && w.layout() == Layout::RowMajor {
+        let hit = dispatch_fixed!(
+            tsmttsm_fixed, m, k, (x, alpha, v, w, beta), [1, 2, 4, 8, 16]
+        );
+        if hit {
+            return Ok(KernelChoice::Specialized);
+        }
+    }
+    tsmttsm_generic(x, alpha, v, w, beta)?;
+    Ok(KernelChoice::Generic)
+}
+
+/// W = alpha V X + beta W with automatic kernel selection.
+pub fn tsmm<S: Scalar>(
+    w: &mut DenseMat<S>,
+    alpha: S,
+    v: &DenseMat<S>,
+    x: &DenseMat<S>,
+    beta: S,
+) -> Result<KernelChoice> {
+    let (m, k) = (v.ncols(), x.ncols());
+    crate::ensure!(
+        x.nrows() == m && w.nrows() == v.nrows() && w.ncols() == k,
+        DimMismatch,
+        "tsmm dims"
+    );
+    if v.layout() == Layout::RowMajor && w.layout() == Layout::RowMajor {
+        let hit = dispatch_fixed!(
+            tsmm_fixed, m, k, (w, alpha, v, x, beta), [1, 2, 4, 8, 16]
+        );
+        if hit {
+            return Ok(KernelChoice::Specialized);
+        }
+    }
+    tsmm_generic(w, alpha, v, x, beta)?;
+    Ok(KernelChoice::Generic)
+}
+
+/// In-place V = V X for square X (m == k): ghost_tsmm_inplace.
+pub fn tsmm_inplace<S: Scalar>(v: &mut DenseMat<S>, x: &DenseMat<S>) -> Result<()> {
+    let m = v.ncols();
+    crate::ensure!(
+        x.nrows() == m && x.ncols() == m,
+        DimMismatch,
+        "tsmm_inplace needs square X({m},{m})"
+    );
+    // row-wise: each row of V is replaced by row * X; small m keeps the
+    // temporary in registers.
+    let mut tmp = vec![S::ZERO; m];
+    for i in 0..v.nrows() {
+        for jk in 0..m {
+            let mut acc = S::ZERO;
+            for jm in 0..m {
+                acc += v.at(i, jm) * x.at(jm, jk);
+            }
+            tmp[jk] = acc;
+        }
+        for jk in 0..m {
+            *v.at_mut(i, jk) = tmp[jk];
+        }
+    }
+    Ok(())
+}
+
+/// Kahan-compensated X = V^H W (section 5.2: more accurate block-vector
+/// inner products for very large n; overhead is small because the kernel
+/// is memory-bound).
+pub fn tsmttsm_kahan<S: Scalar>(
+    x: &mut DenseMat<S>,
+    alpha: S,
+    v: &DenseMat<S>,
+    w: &DenseMat<S>,
+    beta: S,
+) -> Result<()> {
+    let (n, m) = (v.nrows(), v.ncols());
+    let k = w.ncols();
+    crate::ensure!(
+        w.nrows() == n && x.nrows() == m && x.ncols() == k,
+        DimMismatch,
+        "tsmttsm_kahan dims"
+    );
+    for jm in 0..m {
+        for jk in 0..k {
+            let mut sum = S::ZERO;
+            let mut comp = S::ZERO; // running compensation
+            for i in 0..n {
+                let term = v.at(i, jm).conj() * w.at(i, jk) - comp;
+                let t = sum + term;
+                comp = (t - sum) - term;
+                sum = t;
+            }
+            let old = x.at(jm, jk);
+            *x.at_mut(jm, jk) = alpha * sum + beta * old;
+        }
+    }
+    Ok(())
+}
+
+/// General GEMM entry point: checks whether a specialized tall-skinny
+/// kernel applies before falling back (the paper's ghost_gemm contract,
+/// section 5.2). C = alpha * A^H B + beta * C when `transa`, else
+/// C = alpha * A B + beta * C.
+pub fn gemm<S: Scalar>(
+    c: &mut DenseMat<S>,
+    alpha: S,
+    a: &DenseMat<S>,
+    transa: bool,
+    b: &DenseMat<S>,
+    beta: S,
+) -> Result<KernelChoice> {
+    if transa && a.nrows() == b.nrows() && a.ncols() <= 64 && b.ncols() <= 64 {
+        return tsmttsm(c, alpha, a, b, beta);
+    }
+    if !transa && a.ncols() == b.nrows() && a.ncols() <= 64 && b.ncols() <= 64 {
+        return tsmm(c, alpha, a, b, beta);
+    }
+    // plain generic GEMM
+    let (m, n) = if transa {
+        (a.ncols(), b.ncols())
+    } else {
+        (a.nrows(), b.ncols())
+    };
+    crate::ensure!(
+        c.nrows() == m && c.ncols() == n,
+        DimMismatch,
+        "gemm output dims"
+    );
+    let inner = if transa { a.nrows() } else { a.ncols() };
+    crate::ensure!(b.nrows() == inner, DimMismatch, "gemm inner dims");
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = S::ZERO;
+            for l in 0..inner {
+                let av = if transa { a.at(l, i).conj() } else { a.at(i, l) };
+                acc += av * b.at(l, j);
+            }
+            let old = c.at(i, j);
+            *c.at_mut(i, j) = alpha * acc + beta * old;
+        }
+    }
+    Ok(KernelChoice::Generic)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::prop::prop_check;
+    use crate::core::C64;
+
+    #[test]
+    fn specialized_matches_generic_tsmttsm() {
+        prop_check(30, 11, |g| {
+            let n = g.usize(1, 200);
+            let m = *g.choose(&[1usize, 2, 4, 8, 16]);
+            let k = *g.choose(&[1usize, 2, 4, 8, 16]);
+            let v = DenseMat::<f64>::random(n, m, Layout::RowMajor, g.case_seed);
+            let w = DenseMat::<f64>::random(n, k, Layout::RowMajor, g.case_seed + 1);
+            let mut x1 = DenseMat::<f64>::random(m, k, Layout::RowMajor, g.case_seed + 2);
+            let mut x2 = x1.clone();
+            let choice = tsmttsm(&mut x1, 1.5, &v, &w, -0.5).unwrap();
+            assert_eq!(choice, KernelChoice::Specialized);
+            tsmttsm_generic(&mut x2, 1.5, &v, &w, -0.5).unwrap();
+            assert!(x1.max_abs_diff(&x2) < 1e-10 * (n as f64));
+        });
+    }
+
+    #[test]
+    fn specialized_matches_generic_tsmm() {
+        prop_check(30, 13, |g| {
+            let n = g.usize(1, 200);
+            let m = *g.choose(&[1usize, 2, 4, 8, 16]);
+            let k = *g.choose(&[1usize, 2, 4, 8, 16]);
+            let v = DenseMat::<f64>::random(n, m, Layout::RowMajor, g.case_seed);
+            let x = DenseMat::<f64>::random(m, k, Layout::RowMajor, g.case_seed + 1);
+            let mut w1 = DenseMat::<f64>::random(n, k, Layout::RowMajor, g.case_seed + 2);
+            let mut w2 = w1.clone();
+            let choice = tsmm(&mut w1, 2.0, &v, &x, 0.25).unwrap();
+            assert_eq!(choice, KernelChoice::Specialized);
+            tsmm_generic(&mut w2, 2.0, &v, &x, 0.25).unwrap();
+            assert!(w1.max_abs_diff(&w2) < 1e-11 * (1.0 + n as f64));
+        });
+    }
+
+    #[test]
+    fn unsupported_width_falls_back() {
+        let n = 50;
+        let v = DenseMat::<f64>::random(n, 3, Layout::RowMajor, 1);
+        let w = DenseMat::<f64>::random(n, 5, Layout::RowMajor, 2);
+        let mut x = DenseMat::<f64>::zeros(3, 5, Layout::RowMajor);
+        let choice = tsmttsm(&mut x, 1.0, &v, &w, 0.0).unwrap();
+        assert_eq!(choice, KernelChoice::Generic);
+    }
+
+    #[test]
+    fn colmajor_falls_back() {
+        let v = DenseMat::<f64>::random(32, 4, Layout::ColMajor, 1);
+        let w = DenseMat::<f64>::random(32, 4, Layout::ColMajor, 2);
+        let mut x = DenseMat::<f64>::zeros(4, 4, Layout::RowMajor);
+        assert_eq!(tsmttsm(&mut x, 1.0, &v, &w, 0.0).unwrap(), KernelChoice::Generic);
+    }
+
+    #[test]
+    fn complex_tsmttsm_is_hermitian_inner_product() {
+        let v = DenseMat::<C64>::random(40, 2, Layout::RowMajor, 3);
+        let mut x = DenseMat::<C64>::zeros(2, 2, Layout::RowMajor);
+        tsmttsm(&mut x, C64::ONE, &v, &v, C64::ZERO).unwrap();
+        // V^H V is Hermitian with real positive diagonal
+        assert!(x.at(0, 0).im().abs() < 1e-12);
+        assert!(x.at(0, 0).re() > 0.0);
+        let off = x.at(0, 1) - x.at(1, 0).conj();
+        assert!(off.abs() < 1e-12);
+    }
+
+    #[test]
+    fn tsmm_inplace_matches_out_of_place() {
+        let mut v = DenseMat::<f64>::random(64, 4, Layout::RowMajor, 5);
+        let x = DenseMat::<f64>::random(4, 4, Layout::RowMajor, 6);
+        let mut w = DenseMat::<f64>::zeros(64, 4, Layout::RowMajor);
+        tsmm(&mut w, 1.0, &v, &x, 0.0).unwrap();
+        tsmm_inplace(&mut v, &x).unwrap();
+        assert!(v.max_abs_diff(&w) < 1e-12);
+    }
+
+    #[test]
+    fn kahan_more_accurate_on_hostile_sum() {
+        // alternating huge/tiny values: plain summation loses the tiny ones
+        let n = 4096;
+        let mut v = DenseMat::<f64>::zeros(n, 1, Layout::RowMajor);
+        let mut w = DenseMat::<f64>::zeros(n, 1, Layout::RowMajor);
+        for i in 0..n {
+            *v.at_mut(i, 0) = 1.0;
+            *w.at_mut(i, 0) = if i % 2 == 0 { 1e16 } else { 1.0 };
+        }
+        // exact: (n/2)*1e16 + n/2
+        let exact = (n as f64 / 2.0) * 1e16 + n as f64 / 2.0;
+        let mut xk = DenseMat::<f64>::zeros(1, 1, Layout::RowMajor);
+        tsmttsm_kahan(&mut xk, 1.0, &v, &w, 0.0).unwrap();
+        let mut xg = DenseMat::<f64>::zeros(1, 1, Layout::RowMajor);
+        tsmttsm_generic(&mut xg, 1.0, &v, &w, 0.0).unwrap();
+        let err_k = (xk.at(0, 0) - exact).abs();
+        let err_g = (xg.at(0, 0) - exact).abs();
+        assert!(err_k <= err_g, "kahan {err_k} vs generic {err_g}");
+        assert!(err_k < 1e3); // compensated sum keeps the +n/2 part
+    }
+
+    #[test]
+    fn gemm_dispatches_to_tsm() {
+        let a = DenseMat::<f64>::random(100, 4, Layout::RowMajor, 7);
+        let b = DenseMat::<f64>::random(100, 4, Layout::RowMajor, 8);
+        let mut c = DenseMat::<f64>::zeros(4, 4, Layout::RowMajor);
+        assert_eq!(
+            gemm(&mut c, 1.0, &a, true, &b, 0.0).unwrap(),
+            KernelChoice::Specialized
+        );
+        // square-ish gemm goes generic
+        let a2 = DenseMat::<f64>::random(30, 100, Layout::RowMajor, 9);
+        let b2 = DenseMat::<f64>::random(100, 30, Layout::RowMajor, 10);
+        let mut c2 = DenseMat::<f64>::zeros(30, 30, Layout::RowMajor);
+        assert_eq!(
+            gemm(&mut c2, 1.0, &a2, false, &b2, 0.0).unwrap(),
+            KernelChoice::Generic
+        );
+    }
+}

@@ -1,0 +1,439 @@
+//! Transparent data-parallel heterogeneous execution (section 4.1).
+//!
+//! Each rank gets a [`DeviceSpec`] and an execution backend:
+//! - `Native` — the rust SELL kernels (the paper's CPU path),
+//! - `Pjrt` — the AOT-compiled JAX/Pallas artifact executed through the
+//!   PJRT runtime (the paper's GPU/PHI path; a genuinely different
+//!   compile/execute stack, preserving "truly heterogeneous execution").
+//!
+//! Work is distributed row-wise with bandwidth-proportional weights
+//! (Fig 3). Because every device in this repo is ultimately the same host
+//! CPU, each rank additionally enforces a *device-model time floor*
+//! (bytes moved / modeled bandwidth, scaled) after computing, so relative
+//! throughput between device classes follows the paper's roofline logic
+//! while the numerics stay real.
+
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use crate::comm::context::{build_contexts, Partition};
+use crate::comm::exchange::{dist_spmv, DistMatrix, OverlapMode};
+use crate::comm::{Comm, CommConfig, World};
+use crate::core::{Result, Scalar};
+use crate::runtime::Runtime;
+use crate::sparsemat::Crs;
+use crate::topology::{bandwidth_weights, DeviceKind, DeviceSpec};
+
+/// Execution backend of one rank.
+///
+/// PJRT client handles are not Send (Rc + raw pointers inside the xla
+/// crate), so a Pjrt backend carries the artifact directory and each rank
+/// thread compiles its own runtime — exactly like a real accelerator
+/// process owning its device context.
+#[derive(Clone)]
+pub enum Backend {
+    Native { nthreads: usize },
+    Pjrt { artifact_dir: PathBuf },
+}
+
+/// Per-rank configuration for a heterogeneous run.
+pub struct RankSetup {
+    pub device: DeviceSpec,
+    pub backend: Backend,
+}
+
+/// Time-throttle scale: model_seconds = bytes / (bandwidth_gbs * SCALE).
+/// SCALE > 1 shrinks modeled time so benches finish quickly while the
+/// *ratios* between devices stay exact.
+pub const DEFAULT_TIME_SCALE: f64 = 200.0;
+
+/// Result of a heterogeneous SpMV benchmark run (one rank).
+#[derive(Clone, Debug)]
+pub struct RankReport {
+    pub rank: usize,
+    pub device: String,
+    pub kind: DeviceKind,
+    pub rows: usize,
+    pub nnz: usize,
+    /// Wall time of the compute+comm loop.
+    pub elapsed: Duration,
+    /// Modeled Gflop/s of this device for the measured loop.
+    pub model_gflops: f64,
+}
+
+/// The heterogeneous SpMV engine: partitions a global matrix over the
+/// given devices and runs `iters` distributed SpMVs, each rank using its
+/// own backend. Returns per-rank reports plus the result vector for
+/// validation.
+pub struct HeteroSpmv {
+    pub setups: Vec<RankSetup>,
+    pub weights: Vec<f64>,
+    pub comm_cfg: CommConfig,
+    pub overlap: OverlapMode,
+    pub time_scale: f64,
+    /// SELL parameters (C is the max SIMD width over devices, section 5.1).
+    pub c: usize,
+    pub sigma: usize,
+}
+
+impl HeteroSpmv {
+    pub fn new(setups: Vec<RankSetup>) -> Self {
+        let devices: Vec<DeviceSpec> = setups.iter().map(|s| s.device.clone()).collect();
+        HeteroSpmv {
+            weights: bandwidth_weights(&devices),
+            setups,
+            comm_cfg: CommConfig::default(),
+            overlap: OverlapMode::NoOverlap,
+            time_scale: DEFAULT_TIME_SCALE,
+            c: 32,
+            sigma: 1,
+        }
+    }
+
+    pub fn with_weights(mut self, weights: Vec<f64>) -> Self {
+        assert_eq!(weights.len(), self.setups.len());
+        self.weights = weights;
+        self
+    }
+
+    pub fn with_comm(mut self, cfg: CommConfig) -> Self {
+        self.comm_cfg = cfg;
+        self
+    }
+
+    pub fn with_time_scale(mut self, s: f64) -> Self {
+        self.time_scale = s;
+        self
+    }
+
+    /// Run `iters` SpMV iterations of y = A x (x constant — the paper's
+    /// spmvbench). Returns (reports, y) with y in global row order.
+    pub fn run<S: Scalar>(
+        &self,
+        a: &Crs<S>,
+        x: &[S],
+        iters: usize,
+    ) -> Result<(Vec<RankReport>, Vec<S>)> {
+        let n = a.nrows();
+        crate::ensure!(x.len() == n, DimMismatch, "x length");
+        let nranks = self.setups.len();
+        let part = Partition::weighted(n, &self.weights);
+        let ctxs = build_contexts(a, &part)?;
+        let dms: Vec<DistMatrix<S>> = ctxs
+            .iter()
+            .map(|c| DistMatrix::from_context(c, self.c, self.sigma))
+            .collect::<Result<Vec<_>>>()?;
+        let dms = &dms;
+        let setups = &self.setups;
+        let scale = self.time_scale;
+        let overlap = self.overlap;
+        let results = World::run(nranks, self.comm_cfg.clone(), move |comm| {
+            let rank = comm.rank();
+            let dm = &dms[rank];
+            let setup = &setups[rank];
+            run_rank(dm, setup, &comm, x, iters, overlap, scale)
+        });
+        let mut reports = Vec::with_capacity(nranks);
+        let mut y = vec![S::ZERO; n];
+        for res in results {
+            let (rep, row0, yl) = res?;
+            y[row0..row0 + yl.len()].copy_from_slice(&yl);
+            reports.push(rep);
+        }
+        Ok((reports, y))
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_rank<S: Scalar>(
+    dm: &DistMatrix<S>,
+    setup: &RankSetup,
+    comm: &Comm,
+    x: &[S],
+    iters: usize,
+    overlap: OverlapMode,
+    time_scale: f64,
+) -> Result<(RankReport, usize, Vec<S>)> {
+    let mut xbuf = vec![S::ZERO; dm.xbuf_len()];
+    xbuf[..dm.nlocal].copy_from_slice(&x[dm.row0..dm.row0 + dm.nlocal]);
+    let mut y_sell = vec![S::ZERO; dm.full.nrows_padded()];
+    let nnz = dm.full.nnz();
+    // rank-local PJRT runtime (client handles are not Send; see Backend)
+    let runtime: Option<Runtime> = match &setup.backend {
+        Backend::Pjrt { artifact_dir } => Some(Runtime::load(artifact_dir)?),
+        Backend::Native { .. } => None,
+    };
+    // matrix slabs are uploaded once; only x changes per iteration
+    let pjrt_plan: Option<PjrtPlan> = match &runtime {
+        Some(rt) => Some(build_pjrt_plan(dm, rt)?),
+        None => None,
+    };
+    // traffic per SpMV: matrix values + indices + x and y streams
+    let bytes_per_iter = dm.full.bytes() + (dm.nlocal + dm.xbuf_len()) * S::bytes();
+    let floor_per_iter = Duration::from_secs_f64(
+        bytes_per_iter as f64 / (setup.device.bandwidth_gbs * 1e9 * time_scale),
+    );
+    comm.barrier();
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        let it0 = Instant::now();
+        match &setup.backend {
+            Backend::Native { nthreads } => {
+                dist_spmv(dm, comm, &mut xbuf, &mut y_sell, overlap, *nthreads, None)?;
+            }
+            Backend::Pjrt { .. } => {
+                // exchange halo synchronously, then run the AOT artifact
+                dist_spmv(dm, comm, &mut xbuf, &mut y_sell, OverlapMode::NoOverlap, 1, None)?;
+                let rt = runtime.as_ref().expect("pjrt runtime initialized");
+                let plan = pjrt_plan.as_ref().expect("pjrt plan built");
+                pjrt_spmv_planned(plan, rt, &xbuf, &mut y_sell)?;
+            }
+        }
+        // device-model time floor (see module docs)
+        let spent = it0.elapsed();
+        if spent < floor_per_iter {
+            std::thread::sleep(floor_per_iter - spent);
+        }
+    }
+    let elapsed = t0.elapsed();
+    comm.barrier();
+    // modeled Gflop/s: 2 * nnz flops per iteration at the modeled scale
+    let flops = 2.0 * nnz as f64 * iters as f64;
+    let model_gflops = flops / elapsed.as_secs_f64() / 1e9 / time_scale;
+    let mut y = vec![S::ZERO; dm.nlocal];
+    dm.unpermute(&y_sell, &mut y);
+    Ok((
+        RankReport {
+            rank: dm.rank,
+            device: setup.device.model.to_string(),
+            kind: setup.device.kind,
+            rows: dm.nlocal,
+            nnz,
+            elapsed,
+            model_gflops,
+        },
+        dm.row0,
+        y,
+    ))
+}
+
+/// Prepared PJRT execution plan for one rank's local SpMV: the matrix
+/// slab literals are built once; only the x vector is re-uploaded per
+/// iteration (the real accelerator analogue: the matrix stays on device).
+struct PjrtPlan {
+    artifact: String,
+    /// Device-resident matrix slabs (uploaded once; the accelerator
+    /// analogue of keeping the matrix in device memory).
+    val_buf: Option<xla::PjRtBuffer>,
+    col_buf: Option<xla::PjRtBuffer>,
+    nx: usize,
+    /// False means the dtype has no artifact coverage: native fallback.
+    active: bool,
+}
+
+fn build_pjrt_plan<S: Scalar>(dm: &DistMatrix<S>, rt: &Runtime) -> Result<PjrtPlan> {
+    if S::NAME != "f64" {
+        return Ok(PjrtPlan {
+            artifact: String::new(),
+            val_buf: None,
+            col_buf: None,
+            nx: 0,
+            active: false,
+        });
+    }
+    let sell = &dm.full;
+    let c = sell.chunk_height();
+    let wmax = sell.chunk_len().iter().copied().max().unwrap_or(1);
+    let art = rt.find_spmv_bucket("spmv", "f64", sell.nchunks(), wmax)?;
+    let (bn, bw) = (art.meta.get_usize("nchunks")?, art.meta.get_usize("w")?);
+    let bc = art.meta.get_usize("c")?;
+    crate::ensure!(bc == c, InvalidArg, "bucket C {bc} != matrix C {c}");
+    let nx = art.meta.get_usize("nx")?;
+    crate::ensure!(
+        dm.xbuf_len() <= nx,
+        DimMismatch,
+        "x buffer {} exceeds bucket nx {nx}",
+        dm.xbuf_len()
+    );
+    let (val, col) = sell.to_slabs(bn, bw)?;
+    // SAFETY: S::NAME == "f64" implies S is f64.
+    let val_f64: &[f64] =
+        unsafe { std::slice::from_raw_parts(val.as_ptr() as *const f64, val.len()) };
+    let dims = [bn, c, bw];
+    Ok(PjrtPlan {
+        artifact: art.meta.name.clone(),
+        val_buf: Some(rt.client().buffer_from_host_buffer(val_f64, &dims, None)?),
+        col_buf: Some(rt.client().buffer_from_host_buffer(&col, &dims, None)?),
+        nx,
+        active: true,
+    })
+}
+
+/// Execute the local SpMV through the prepared PJRT plan.
+fn pjrt_spmv_planned<S: Scalar>(
+    plan: &PjrtPlan,
+    rt: &Runtime,
+    xbuf: &[S],
+    y_sell: &mut [S],
+) -> Result<()> {
+    if !plan.active {
+        // dtype not covered by the artifact set: native fallback happens
+        // in the caller via dist_spmv's full product (already computed)
+        return Ok(());
+    }
+    let x_f64: &[f64] =
+        unsafe { std::slice::from_raw_parts(xbuf.as_ptr() as *const f64, xbuf.len()) };
+    let mut x_pad = vec![0.0f64; plan.nx];
+    x_pad[..x_f64.len()].copy_from_slice(x_f64);
+    let art = rt.get(&plan.artifact)?;
+    let x_buf = rt
+        .client()
+        .buffer_from_host_buffer(&x_pad, &[plan.nx], None)?;
+    let outs = art.execute_buffers(&[
+        plan.val_buf.as_ref().unwrap(),
+        plan.col_buf.as_ref().unwrap(),
+        &x_buf,
+    ])?;
+    let yv = outs[0].to_vec::<f64>()?;
+    let np = y_sell.len().min(yv.len());
+    for (y, v) in y_sell.iter_mut().zip(yv.iter().take(np)) {
+        *y = S::from_f64(*v);
+    }
+    Ok(())
+}
+
+/// Convenience constructors for the canonical device mixes of section 4.1.
+pub mod presets {
+    use super::*;
+    use crate::topology;
+
+    pub fn cpu_only(nsockets: usize, threads_per_socket: usize) -> Vec<RankSetup> {
+        (0..nsockets)
+            .map(|_| RankSetup {
+                device: topology::emmy_cpu_socket(),
+                backend: Backend::Native {
+                    nthreads: threads_per_socket,
+                },
+            })
+            .collect()
+    }
+
+    pub fn cpu_gpu(artifact_dir: PathBuf, threads_per_socket: usize) -> Vec<RankSetup> {
+        vec![
+            RankSetup {
+                device: topology::emmy_cpu_socket(),
+                backend: Backend::Native {
+                    nthreads: threads_per_socket,
+                },
+            },
+            RankSetup {
+                device: topology::emmy_gpu(),
+                backend: Backend::Pjrt { artifact_dir },
+            },
+        ]
+    }
+
+    pub fn full_node(artifact_dir: PathBuf, threads_per_socket: usize) -> Vec<RankSetup> {
+        vec![
+            RankSetup {
+                device: topology::emmy_cpu_socket(),
+                backend: Backend::Native {
+                    nthreads: threads_per_socket,
+                },
+            },
+            RankSetup {
+                device: topology::emmy_cpu_socket(),
+                backend: Backend::Native {
+                    nthreads: threads_per_socket,
+                },
+            },
+            RankSetup {
+                device: topology::emmy_gpu(),
+                backend: Backend::Pjrt {
+                    artifact_dir: artifact_dir.clone(),
+                },
+            },
+            RankSetup {
+                device: topology::emmy_phi(),
+                backend: Backend::Pjrt { artifact_dir },
+            },
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matgen;
+
+    #[test]
+    fn native_hetero_weighted_partition_correct() {
+        // two "CPU sockets" with skewed weights; numerics must be exact
+        let a = matgen::poisson7::<f64>(8, 8, 4);
+        let n = a.nrows();
+        let x: Vec<f64> = (0..n).map(|i| (i as f64 * 0.1).cos()).collect();
+        let engine = HeteroSpmv::new(presets::cpu_only(2, 2))
+            .with_weights(vec![1.0, 2.75])
+            .with_comm(CommConfig::instant())
+            .with_time_scale(1e9); // no throttle in the unit test
+        let (reports, y) = engine.run(&a, &x, 3).unwrap();
+        assert_eq!(reports.len(), 2);
+        // weighted split: rank1 gets ~2.75x the rows
+        let ratio = reports[1].rows as f64 / reports[0].rows as f64;
+        assert!((ratio - 2.75).abs() < 0.2, "ratio {ratio}");
+        let mut want = vec![0.0; n];
+        a.spmv(&x, &mut want);
+        for i in 0..n {
+            assert!((y[i] - want[i]).abs() < 1e-10, "row {i}");
+        }
+    }
+
+    #[test]
+    fn bandwidth_weighting_reduces_makespan() {
+        // The point of bandwidth-proportional weights (section 4.1): with
+        // an equal row split the fast device idles behind the slow one
+        // (ranks couple through the halo exchange), while the weighted
+        // split balances the modeled time floors and shrinks the overall
+        // makespan.
+        let a = matgen::poisson7::<f64>(10, 10, 4);
+        let n = a.nrows();
+        let x = vec![1.0; n];
+        let mk_setups = || {
+            let mut slow = crate::topology::emmy_cpu_socket();
+            slow.bandwidth_gbs = 10.0;
+            let mut fast = crate::topology::emmy_cpu_socket();
+            fast.bandwidth_gbs = 100.0;
+            vec![
+                RankSetup {
+                    device: slow,
+                    backend: Backend::Native { nthreads: 1 },
+                },
+                RankSetup {
+                    device: fast,
+                    backend: Backend::Native { nthreads: 1 },
+                },
+            ]
+        };
+        // strong throttle so the modeled floors dominate thread noise
+        let scale = 1e-4;
+        let run = |weights: Vec<f64>| {
+            let engine = HeteroSpmv::new(mk_setups())
+                .with_weights(weights)
+                .with_comm(CommConfig::instant())
+                .with_time_scale(scale);
+            let (reports, y) = engine.run(&a, &x, 3).unwrap();
+            let mut want = vec![0.0; n];
+            a.spmv(&x, &mut want);
+            for i in 0..n {
+                assert!((y[i] - want[i]).abs() < 1e-10);
+            }
+            reports.iter().map(|r| r.elapsed).max().unwrap()
+        };
+        let makespan_equal = run(vec![1.0, 1.0]);
+        let makespan_weighted = run(vec![1.0, 10.0]);
+        assert!(
+            makespan_weighted.as_secs_f64() < 0.75 * makespan_equal.as_secs_f64(),
+            "weighted {makespan_weighted:?} !<< equal {makespan_equal:?}"
+        );
+    }
+}

@@ -1,0 +1,479 @@
+//! The augmented ("fused") SpM(M)V of section 5.3:
+//!
+//! ```text
+//! y = alpha * (A - gamma I) x + beta * y        (shift / vshift)
+//! z = delta * z + eta * y                       (chained axpby)
+//! dots = <y,y>, <x,y>, <x,x>                    (per column)
+//! ```
+//!
+//! computed in a *single pass* over the matrix and vectors — the whole
+//! point of fusion is to avoid re-streaming y/x through memory for the
+//! BLAS-1 tails. Every augmentation is individually selectable via
+//! [`SpmvOpts`], mirroring ghost_spmv_opts + flags.
+//!
+//! Vectors are block vectors in SELL row order; matrices must be built
+//! with `col_permute = true` (or sigma = 1) so A*x and the elementwise
+//! terms live in the same index space.
+
+use crate::core::Scalar;
+use crate::densemat::{DenseMat, Layout};
+use crate::sparsemat::SellMat;
+
+/// Flags (bitmask) selecting augmentations — ghost_spmv_flags.
+pub mod flags {
+    pub const VSHIFT: u32 = 1; // y = alpha (A - gamma_j I) x
+    pub const AXPBY: u32 = 2; // accumulate beta * y
+    pub const DOT_YY: u32 = 4;
+    pub const DOT_XY: u32 = 8;
+    pub const DOT_XX: u32 = 16;
+    pub const CHAIN_AXPBY: u32 = 32; // z = delta z + eta y
+    pub const DOT_ANY: u32 = DOT_YY | DOT_XY | DOT_XX;
+}
+
+/// Options for the augmented SpMV — the rust face of `ghost_spmv_opts`.
+#[derive(Clone, Debug)]
+pub struct SpmvOpts<S> {
+    pub flags: u32,
+    pub alpha: S,
+    pub beta: S,
+    /// Per-column shift (VSHIFT); broadcast if len 1.
+    pub gamma: Vec<S>,
+    pub delta: S,
+    pub eta: S,
+}
+
+impl<S: Scalar> Default for SpmvOpts<S> {
+    fn default() -> Self {
+        SpmvOpts {
+            flags: 0,
+            alpha: S::ONE,
+            beta: S::ZERO,
+            gamma: vec![],
+            delta: S::ZERO,
+            eta: S::ZERO,
+        }
+    }
+}
+
+/// Dot products produced by the fused kernel (empty when not requested).
+#[derive(Clone, Debug, Default)]
+pub struct FusedDots<S> {
+    pub yy: Vec<S>,
+    pub xy: Vec<S>,
+    pub xx: Vec<S>,
+}
+
+/// Fused SpMMV. `x`: (>= ncols, nv) block vector in SELL order;
+/// `y`: (nrows_padded, nv); `z`: optional chain target.
+/// Returns the requested dot products.
+pub fn sell_spmv_fused<S: Scalar>(
+    a: &SellMat<S>,
+    x: &DenseMat<S>,
+    y: &mut DenseMat<S>,
+    z: Option<&mut DenseMat<S>>,
+    opts: &SpmvOpts<S>,
+) -> crate::core::Result<FusedDots<S>> {
+    let nv = x.ncols();
+    let c = a.chunk_height();
+    let np = a.nrows_padded();
+    crate::ensure!(
+        y.nrows() >= np && y.ncols() == nv,
+        DimMismatch,
+        "fused: y ({},{}) vs need ({np},{nv})",
+        y.nrows(),
+        y.ncols()
+    );
+    if opts.flags & flags::VSHIFT != 0 {
+        crate::ensure!(
+            opts.gamma.len() == nv || opts.gamma.len() == 1,
+            DimMismatch,
+            "gamma len {} for {nv} columns",
+            opts.gamma.len()
+        );
+    }
+    let mut z = z;
+    if opts.flags & flags::CHAIN_AXPBY != 0 {
+        crate::ensure!(
+            z.as_ref().is_some_and(|z| z.nrows() >= np && z.ncols() == nv),
+            InvalidArg,
+            "CHAIN_AXPBY requires a matching z"
+        );
+    }
+
+    let mut dots = FusedDots::default();
+    let want_yy = opts.flags & flags::DOT_YY != 0;
+    let want_xy = opts.flags & flags::DOT_XY != 0;
+    let want_xx = opts.flags & flags::DOT_XX != 0;
+    if want_yy {
+        dots.yy = vec![S::ZERO; nv];
+    }
+    if want_xy {
+        dots.xy = vec![S::ZERO; nv];
+    }
+    if want_xx {
+        dots.xx = vec![S::ZERO; nv];
+    }
+
+    // fast path: row-major x/y (and z), width-specialized via const
+    // generics (the code-generation story of section 5.4 applied to the
+    // fused kernel). Falls back to the generic indexed loop otherwise.
+    let rowmajor = x.layout() == Layout::RowMajor
+        && y.layout() == Layout::RowMajor
+        && z.as_ref().map_or(true, |z| z.layout() == Layout::RowMajor);
+    if rowmajor {
+        macro_rules! fused_dispatch {
+            ($($w:literal),+) => {
+                match nv {
+                    $( $w => {
+                        fused_rowmajor_fixed::<S, $w>(
+                            a, x, y, z.as_deref_mut(), opts, &mut dots,
+                            want_yy, want_xy, want_xx,
+                        );
+                        return Ok(dots);
+                    } )+
+                    _ => {}
+                }
+            };
+        }
+        fused_dispatch!(1, 2, 4, 8, 16);
+    }
+
+    let val = a.values();
+    let col = a.colidx();
+    let cptr = a.chunk_ptr();
+    let clen = a.chunk_len();
+    let gamma_at = |v: usize| -> S {
+        if opts.gamma.len() == 1 {
+            opts.gamma[0]
+        } else {
+            opts.gamma[v]
+        }
+    };
+
+    let mut acc = vec![S::ZERO; nv]; // per-row accumulator (A x)
+    for ch in 0..a.nchunks() {
+        let base = cptr[ch];
+        let w = clen[ch];
+        for r in 0..c {
+            let row = ch * c + r;
+            acc.fill(S::ZERO);
+            let mut k = base + r;
+            for _ in 0..w {
+                let av = val[k];
+                let xc = col[k] as usize;
+                if x.layout() == Layout::RowMajor {
+                    let xrow = &x.as_slice()[xc * x.stride()..xc * x.stride() + nv];
+                    for v in 0..nv {
+                        acc[v] += av * xrow[v];
+                    }
+                } else {
+                    for v in 0..nv {
+                        acc[v] += av * x.at(xc, v);
+                    }
+                }
+                k += c;
+            }
+            // augmentation tail, all in registers for this row
+            for v in 0..nv {
+                let xrv = x.at(row, v);
+                let mut ax = acc[v];
+                if opts.flags & flags::VSHIFT != 0 {
+                    ax -= gamma_at(v) * xrv;
+                }
+                let mut ynew = opts.alpha * ax;
+                if opts.flags & flags::AXPBY != 0 {
+                    ynew += opts.beta * y.at(row, v);
+                }
+                *y.at_mut(row, v) = ynew;
+                if let Some(z) = z.as_deref_mut() {
+                    if opts.flags & flags::CHAIN_AXPBY != 0 {
+                        let zv = z.at(row, v);
+                        *z.at_mut(row, v) = opts.delta * zv + opts.eta * ynew;
+                    }
+                }
+                if want_yy {
+                    dots.yy[v] += ynew.conj() * ynew;
+                }
+                if want_xy {
+                    dots.xy[v] += xrv.conj() * ynew;
+                }
+                if want_xx {
+                    dots.xx[v] += xrv.conj() * xrv;
+                }
+            }
+        }
+    }
+    Ok(dots)
+}
+
+/// Width-specialized row-major fused kernel: chunk-column traversal (the
+/// vectorizable SELL order), a (C x NV) accumulator tile, and slice-based
+/// augmentation tails — no per-element layout dispatch.
+#[allow(clippy::too_many_arguments)]
+fn fused_rowmajor_fixed<S: Scalar, const NV: usize>(
+    a: &SellMat<S>,
+    x: &DenseMat<S>,
+    y: &mut DenseMat<S>,
+    mut z: Option<&mut DenseMat<S>>,
+    opts: &SpmvOpts<S>,
+    dots: &mut FusedDots<S>,
+    want_yy: bool,
+    want_xy: bool,
+    want_xx: bool,
+) {
+    let c = a.chunk_height();
+    let val = a.values();
+    let col = a.colidx();
+    let cptr = a.chunk_ptr();
+    let clen = a.chunk_len();
+    let lx = x.stride();
+    let ly = y.stride();
+    let xs = x.as_slice();
+    let gamma: [S; NV] = {
+        let mut g = [S::ZERO; NV];
+        if opts.flags & flags::VSHIFT != 0 {
+            for (v, gv) in g.iter_mut().enumerate() {
+                *gv = if opts.gamma.len() == 1 {
+                    opts.gamma[0]
+                } else {
+                    opts.gamma[v]
+                };
+            }
+        }
+        g
+    };
+    let vshift = opts.flags & flags::VSHIFT != 0;
+    let axpby = opts.flags & flags::AXPBY != 0;
+    let chain = opts.flags & flags::CHAIN_AXPBY != 0;
+    let mut acc = vec![S::ZERO; c * NV];
+    let mut dyy = [S::ZERO; NV];
+    let mut dxy = [S::ZERO; NV];
+    let mut dxx = [S::ZERO; NV];
+    for ch in 0..a.nchunks() {
+        let base = cptr[ch];
+        let w = clen[ch];
+        acc.fill(S::ZERO);
+        for wi in 0..w {
+            let vs = &val[base + wi * c..base + wi * c + c];
+            let cs = &col[base + wi * c..base + wi * c + c];
+            for r in 0..c {
+                let av = vs[r];
+                let xrow = &xs[cs[r] as usize * lx..cs[r] as usize * lx + NV];
+                let arow = &mut acc[r * NV..(r + 1) * NV];
+                for v in 0..NV {
+                    arow[v] += av * xrow[v];
+                }
+            }
+        }
+        // augmentation tail per row, all slices
+        for r in 0..c {
+            let row = ch * c + r;
+            let xrow = &xs[row * lx..row * lx + NV];
+            let yrow = &mut y.as_mut_slice()[row * ly..row * ly + NV];
+            let arow = &acc[r * NV..(r + 1) * NV];
+            for v in 0..NV {
+                let mut ax = arow[v];
+                if vshift {
+                    ax -= gamma[v] * xrow[v];
+                }
+                let mut ynew = opts.alpha * ax;
+                if axpby {
+                    ynew += opts.beta * yrow[v];
+                }
+                yrow[v] = ynew;
+                if want_yy {
+                    dyy[v] += ynew.conj() * ynew;
+                }
+                if want_xy {
+                    dxy[v] += xrow[v].conj() * ynew;
+                }
+                if want_xx {
+                    dxx[v] += xrow[v].conj() * xrow[v];
+                }
+            }
+            if chain {
+                let z = z.as_deref_mut().unwrap();
+                let lz = z.stride();
+                let zrow = &mut z.as_mut_slice()[row * lz..row * lz + NV];
+                let yrow = &y.as_slice()[row * ly..row * ly + NV];
+                for v in 0..NV {
+                    zrow[v] = opts.delta * zrow[v] + opts.eta * yrow[v];
+                }
+            }
+        }
+    }
+    for v in 0..NV {
+        if want_yy {
+            dots.yy[v] += dyy[v];
+        }
+        if want_xy {
+            dots.xy[v] += dxy[v];
+        }
+        if want_xx {
+            dots.xx[v] += dxx[v];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::prop::prop_check;
+    use crate::core::{Lidx, Rng};
+    use crate::densemat::ops;
+    use crate::kernels::spmmv::sell_spmmv;
+    use crate::sparsemat::Crs;
+
+    fn random_square(rng: &mut Rng, n: usize) -> Crs<f64> {
+        Crs::from_row_fn(n, n, |i, cols, vals| {
+            let k = rng.range(1, 8.min(n) + 1);
+            let mut set = rng.sample_distinct(n, k);
+            if !set.contains(&i) {
+                set.push(i);
+                set.sort_unstable();
+            }
+            for c in set {
+                cols.push(c as Lidx);
+                vals.push(rng.normal());
+            }
+        })
+        .unwrap()
+    }
+
+    /// Reference: compose the fused operation from unfused kernels.
+    fn reference(
+        s: &SellMat<f64>,
+        x: &DenseMat<f64>,
+        y0: &DenseMat<f64>,
+        z0: &DenseMat<f64>,
+        opts: &SpmvOpts<f64>,
+    ) -> (DenseMat<f64>, DenseMat<f64>, FusedDots<f64>) {
+        let np = s.nrows_padded();
+        let nv = x.ncols();
+        let mut ax = DenseMat::<f64>::zeros(np, nv, Layout::RowMajor);
+        sell_spmmv(s, x, &mut ax);
+        let mut y = y0.clone();
+        for i in 0..np {
+            for v in 0..nv {
+                let g = if opts.flags & flags::VSHIFT != 0 {
+                    if opts.gamma.len() == 1 {
+                        opts.gamma[0]
+                    } else {
+                        opts.gamma[v]
+                    }
+                } else {
+                    0.0
+                };
+                let shifted = ax.at(i, v) - g * x.at(i, v);
+                let b = if opts.flags & flags::AXPBY != 0 {
+                    opts.beta * y0.at(i, v)
+                } else {
+                    0.0
+                };
+                *y.at_mut(i, v) = opts.alpha * shifted + b;
+            }
+        }
+        let mut z = z0.clone();
+        if opts.flags & flags::CHAIN_AXPBY != 0 {
+            ops::scal(&mut z, opts.delta);
+            ops::axpy(&mut z, opts.eta, &y).unwrap();
+        }
+        let xl = DenseMat::from_fn(np, nv, Layout::RowMajor, |i, v| x.at(i, v));
+        let dots = FusedDots {
+            yy: ops::dot(&y, &y).unwrap(),
+            xy: ops::dot(&xl, &y).unwrap(),
+            xx: ops::dot(&xl, &xl).unwrap(),
+        };
+        (y, z, dots)
+    }
+
+    #[test]
+    fn fused_matches_composition() {
+        prop_check(25, 71, |g| {
+            let n = g.usize(1, 90);
+            let nv = g.usize(1, 5);
+            let a = random_square(g.rng(), n);
+            let s = SellMat::from_crs_opts(&a, 8, 32, true).unwrap();
+            let np = s.nrows_padded();
+            let x = DenseMat::<f64>::random(np, nv, Layout::RowMajor, g.case_seed);
+            let y0 = DenseMat::<f64>::random(np, nv, Layout::RowMajor, g.case_seed + 1);
+            let z0 = DenseMat::<f64>::random(np, nv, Layout::RowMajor, g.case_seed + 2);
+            let opts = SpmvOpts {
+                flags: flags::VSHIFT
+                    | flags::AXPBY
+                    | flags::CHAIN_AXPBY
+                    | flags::DOT_ANY,
+                alpha: g.f64(-2.0, 2.0),
+                beta: g.f64(-2.0, 2.0),
+                gamma: (0..nv).map(|_| g.f64(-1.0, 1.0)).collect(),
+                delta: g.f64(-1.0, 1.0),
+                eta: g.f64(-1.0, 1.0),
+            };
+            let mut y = y0.clone();
+            let mut z = z0.clone();
+            let dots = sell_spmv_fused(&s, &x, &mut y, Some(&mut z), &opts).unwrap();
+            let (yr, zr, dr) = reference(&s, &x, &y0, &z0, &opts);
+            assert!(y.max_abs_diff(&yr) < 1e-10);
+            assert!(z.max_abs_diff(&zr) < 1e-10);
+            for v in 0..nv {
+                assert!((dots.yy[v] - dr.yy[v]).abs() < 1e-8 * (1.0 + dr.yy[v].abs()));
+                assert!((dots.xy[v] - dr.xy[v]).abs() < 1e-8 * (1.0 + dr.xy[v].abs()));
+                assert!((dots.xx[v] - dr.xx[v]).abs() < 1e-8 * (1.0 + dr.xx[v].abs()));
+            }
+        });
+    }
+
+    #[test]
+    fn plain_spmv_via_default_opts() {
+        let mut rng = Rng::new(2);
+        let a = random_square(&mut rng, 50);
+        let s = SellMat::from_crs_opts(&a, 4, 16, true).unwrap();
+        let np = s.nrows_padded();
+        let x = DenseMat::<f64>::random(np, 2, Layout::RowMajor, 3);
+        let mut y = DenseMat::<f64>::random(np, 2, Layout::RowMajor, 4);
+        let dots = sell_spmv_fused(&s, &x, &mut y, None, &SpmvOpts::default()).unwrap();
+        assert!(dots.yy.is_empty() && dots.xy.is_empty() && dots.xx.is_empty());
+        let mut want = DenseMat::<f64>::zeros(np, 2, Layout::RowMajor);
+        sell_spmmv(&s, &x, &mut want);
+        assert!(y.max_abs_diff(&want) < 1e-13);
+    }
+
+    #[test]
+    fn chain_without_z_errors() {
+        let mut rng = Rng::new(3);
+        let a = random_square(&mut rng, 10);
+        let s = SellMat::from_crs_opts(&a, 2, 4, true).unwrap();
+        let np = s.nrows_padded();
+        let x = DenseMat::<f64>::random(np, 1, Layout::RowMajor, 1);
+        let mut y = DenseMat::<f64>::zeros(np, 1, Layout::RowMajor);
+        let opts = SpmvOpts {
+            flags: flags::CHAIN_AXPBY,
+            ..Default::default()
+        };
+        assert!(sell_spmv_fused(&s, &x, &mut y, None, &opts).is_err());
+    }
+
+    #[test]
+    fn vshift_broadcast_scalar_gamma() {
+        let mut rng = Rng::new(4);
+        let a = random_square(&mut rng, 30);
+        let s = SellMat::from_crs_opts(&a, 4, 8, true).unwrap();
+        let np = s.nrows_padded();
+        let x = DenseMat::<f64>::random(np, 3, Layout::RowMajor, 7);
+        let opts1 = SpmvOpts {
+            flags: flags::VSHIFT,
+            gamma: vec![0.7],
+            ..Default::default()
+        };
+        let opts3 = SpmvOpts {
+            flags: flags::VSHIFT,
+            gamma: vec![0.7, 0.7, 0.7],
+            ..Default::default()
+        };
+        let mut y1 = DenseMat::<f64>::zeros(np, 3, Layout::RowMajor);
+        let mut y3 = DenseMat::<f64>::zeros(np, 3, Layout::RowMajor);
+        sell_spmv_fused(&s, &x, &mut y1, None, &opts1).unwrap();
+        sell_spmv_fused(&s, &x, &mut y3, None, &opts3).unwrap();
+        assert_eq!(y1.max_abs_diff(&y3), 0.0);
+    }
+}

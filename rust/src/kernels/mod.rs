@@ -1,0 +1,32 @@
+//! Compute kernels: SELL-C-sigma SpMV/SpMMV in several variants
+//! (vectorizable vs scalar — Fig 9; width-specialized vs generic —
+//! Fig 10; row- vs col-major block vectors — Fig 8) and the augmented
+//! ("fused") SpMV of section 5.3.
+
+pub mod fused;
+pub mod spmmv;
+pub mod spmv;
+
+pub use fused::{sell_spmv_fused, FusedDots, SpmvOpts};
+pub use spmmv::{sell_spmmv, sell_spmmv_generic, SpmmvVariant};
+pub use spmv::{crs_spmv, sell_spmv, sell_spmv_mt, SpmvVariant};
+
+/// Code balance of the (double, 32-bit index) SpMV in bytes/flop: the
+/// paper's "1 Gflop/s corresponds to 6 GByte/s" (section 4.1) comes from
+/// 8B value + 4B index per 2 flops = 6 B/flop.
+pub fn spmv_code_balance(scalar_bytes: usize, idx_bytes: usize, nvecs: usize) -> f64 {
+    // per nonzero: value + index read; per vector: 2 flops each, x/y
+    // traffic amortized over the row (ignored, as in the minimum balance)
+    (scalar_bytes + idx_bytes) as f64 / (2.0 * nvecs as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn code_balance_matches_paper() {
+        // double + 32-bit idx, 1 vector: 6 bytes/flop
+        assert_eq!(super::spmv_code_balance(8, 4, 1), 6.0);
+        // block vectors reduce balance (the SpMMV motivation, section 5.2)
+        assert_eq!(super::spmv_code_balance(8, 4, 4), 1.5);
+    }
+}

@@ -1,0 +1,307 @@
+//! Single-vector SpMV kernels.
+//!
+//! The SELL kernel exists in two structural variants reproducing the
+//! Fig 9 comparison:
+//! - `Vectorized`: chunk-column traversal — the inner loop runs over the
+//!   C rows of a chunk on *contiguous* val/col data, which LLVM
+//!   auto-vectorizes (the rust analogue of GHOST's AVX/MIC intrinsics).
+//! - `Scalar`: row-wise traversal inside the chunk — stride-C accesses
+//!   that defeat vectorization (the "no vectorization" baseline).
+//!
+//! `crs_spmv` is the CRS (= SELL-1-1) baseline playing the role of the
+//! vendor-library kernel in Fig 6/9.
+
+use crate::core::Scalar;
+use crate::sparsemat::{Crs, SellMat};
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum SpmvVariant {
+    Vectorized,
+    Scalar,
+}
+
+/// y = A x for CRS.
+pub fn crs_spmv<S: Scalar>(a: &Crs<S>, x: &[S], y: &mut [S]) {
+    a.spmv(x, y);
+}
+
+/// y = A x for SELL-C-sigma. `x` is indexed by SELL-local column indices
+/// (for distributed operation the halo is appended past the local part);
+/// `y` has `nrows_padded` entries in SELL row order.
+pub fn sell_spmv<S: Scalar>(a: &SellMat<S>, x: &[S], y: &mut [S], variant: SpmvVariant) {
+    debug_assert!(y.len() >= a.nrows_padded());
+    debug_assert!(x.len() >= a.ncols());
+    match variant {
+        SpmvVariant::Vectorized => spmv_chunk_range_vec(a, x, y, 0, a.nchunks()),
+        SpmvVariant::Scalar => spmv_chunk_range_scalar(a, x, y, 0, a.nchunks()),
+    }
+}
+
+/// Chunk-column traversal: for each chunk column w, update all C rows.
+/// `val[base + w*C + r]` is contiguous in r — SIMD-friendly.
+fn spmv_chunk_range_vec<S: Scalar>(
+    a: &SellMat<S>,
+    x: &[S],
+    y: &mut [S],
+    ch0: usize,
+    ch1: usize,
+) {
+    let c = a.chunk_height();
+    let val = a.values();
+    let col = a.colidx();
+    let cptr = a.chunk_ptr();
+    let clen = a.chunk_len();
+    for ch in ch0..ch1 {
+        let base = cptr[ch];
+        let w = clen[ch];
+        let yrow = &mut y[ch * c..(ch + 1) * c];
+        yrow.fill(S::ZERO);
+        for wi in 0..w {
+            let vs = &val[base + wi * c..base + wi * c + c];
+            let cs = &col[base + wi * c..base + wi * c + c];
+            for r in 0..c {
+                // contiguous in r: vectorizes
+                yrow[r] += vs[r] * x[cs[r] as usize];
+            }
+        }
+    }
+}
+
+/// Row-wise traversal inside the chunk: stride-C access, no vectorization.
+fn spmv_chunk_range_scalar<S: Scalar>(
+    a: &SellMat<S>,
+    x: &[S],
+    y: &mut [S],
+    ch0: usize,
+    ch1: usize,
+) {
+    let c = a.chunk_height();
+    let val = a.values();
+    let col = a.colidx();
+    let cptr = a.chunk_ptr();
+    let clen = a.chunk_len();
+    for ch in ch0..ch1 {
+        let base = cptr[ch];
+        let w = clen[ch];
+        for r in 0..c {
+            let mut acc = S::ZERO;
+            let mut k = base + r;
+            for _ in 0..w {
+                acc += val[k] * x[col[k] as usize];
+                k += c; // stride-C: defeats vectorization
+            }
+            y[ch * c + r] = acc;
+        }
+    }
+}
+
+/// Multi-threaded SELL SpMV: chunks are divided into `nthreads` contiguous
+/// ranges; each thread writes a disjoint slice of y. This is the kernel
+/// behind the Fig 9 core-scaling curves.
+pub fn sell_spmv_mt<S: Scalar>(
+    a: &SellMat<S>,
+    x: &[S],
+    y: &mut [S],
+    variant: SpmvVariant,
+    nthreads: usize,
+) {
+    let nchunks = a.nchunks();
+    let nt = nthreads.max(1).min(nchunks.max(1));
+    if nt <= 1 {
+        sell_spmv(a, x, y, variant);
+        return;
+    }
+    let c = a.chunk_height();
+    let per = nchunks.div_ceil(nt);
+    // split y into per-thread disjoint slices aligned on chunk boundaries
+    let mut slices: Vec<&mut [S]> = Vec::with_capacity(nt);
+    let mut rest: &mut [S] = &mut y[..nchunks * c];
+    for t in 0..nt {
+        let lo = (t * per).min(nchunks);
+        let hi = ((t + 1) * per).min(nchunks);
+        let take = (hi - lo) * c;
+        let (head, tail) = rest.split_at_mut(take);
+        slices.push(head);
+        rest = tail;
+    }
+    std::thread::scope(|s| {
+        for (t, ys) in slices.into_iter().enumerate() {
+            let lo = (t * per).min(nchunks);
+            let hi = ((t + 1) * per).min(nchunks);
+            s.spawn(move || {
+                // ys is y[lo*c .. hi*c]; kernel indexes y[ch*c ..], so
+                // shift by viewing a local closure over offsets
+                spmv_range_offset(a, x, ys, lo, hi, variant);
+            });
+        }
+    });
+}
+
+fn spmv_range_offset<S: Scalar>(
+    a: &SellMat<S>,
+    x: &[S],
+    yslice: &mut [S],
+    ch0: usize,
+    ch1: usize,
+    variant: SpmvVariant,
+) {
+    let c = a.chunk_height();
+    let val = a.values();
+    let col = a.colidx();
+    let cptr = a.chunk_ptr();
+    let clen = a.chunk_len();
+    for ch in ch0..ch1 {
+        let base = cptr[ch];
+        let w = clen[ch];
+        let yrow = &mut yslice[(ch - ch0) * c..(ch - ch0 + 1) * c];
+        match variant {
+            SpmvVariant::Vectorized => {
+                yrow.fill(S::ZERO);
+                for wi in 0..w {
+                    let vs = &val[base + wi * c..base + wi * c + c];
+                    let cs = &col[base + wi * c..base + wi * c + c];
+                    for r in 0..c {
+                        yrow[r] += vs[r] * x[cs[r] as usize];
+                    }
+                }
+            }
+            SpmvVariant::Scalar => {
+                for r in 0..c {
+                    let mut acc = S::ZERO;
+                    let mut k = base + r;
+                    for _ in 0..w {
+                        acc += val[k] * x[col[k] as usize];
+                        k += c;
+                    }
+                    yrow[r] = acc;
+                }
+            }
+        }
+    }
+}
+
+/// Gather a SELL-ordered result back to original row order
+/// (y_orig[i] = y_sell[inv_perm[i]]).
+pub fn unpermute<S: Scalar>(a: &SellMat<S>, y_sell: &[S], y_orig: &mut [S]) {
+    let inv = a.inv_perm();
+    for i in 0..a.nrows() {
+        y_orig[i] = y_sell[inv[i]];
+    }
+}
+
+/// Permute an original-order vector into SELL order
+/// (x_sell[i] = x_orig[perm[i]]).
+pub fn permute<S: Scalar>(a: &SellMat<S>, x_orig: &[S], x_sell: &mut [S]) {
+    let perm = a.perm();
+    for i in 0..a.nrows_padded() {
+        x_sell[i] = if perm[i] < a.nrows() {
+            x_orig[perm[i]]
+        } else {
+            S::ZERO
+        };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::prop::prop_check;
+    use crate::core::{Lidx, Rng, C64};
+    use crate::sparsemat::Crs;
+
+    fn random_crs(rng: &mut Rng, n: usize, avg: usize) -> Crs<f64> {
+        Crs::from_row_fn(n, n, |_i, cols, vals| {
+            let k = rng.range(0, (2 * avg).min(n) + 1);
+            for c in rng.sample_distinct(n, k) {
+                cols.push(c as Lidx);
+                vals.push(rng.normal());
+            }
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn sell_matches_crs_all_variants() {
+        prop_check(40, 51, |g| {
+            let n = g.usize(1, 120);
+            let a = random_crs(g.rng(), n, 6);
+            let c = *g.choose(&[1usize, 4, 8, 32]);
+            let sigma = *g.choose(&[1usize, 16, 256]);
+            let s = SellMat::from_crs(&a, c, sigma).unwrap();
+            let x = g.vec_normal(n);
+            let mut y_crs = vec![0.0; n];
+            a.spmv(&x, &mut y_crs);
+            // SELL works in permuted space
+            let mut xs = vec![0.0; s.nrows_padded().max(n)];
+            xs[..n].copy_from_slice(&x);
+            for variant in [SpmvVariant::Vectorized, SpmvVariant::Scalar] {
+                let mut ys = vec![0.0; s.nrows_padded()];
+                sell_spmv(&s, &xs, &mut ys, variant);
+                let mut y = vec![0.0; n];
+                unpermute(&s, &ys, &mut y);
+                for i in 0..n {
+                    assert!(
+                        (y[i] - y_crs[i]).abs() < 1e-10,
+                        "{variant:?} row {i}: {} vs {}",
+                        y[i],
+                        y_crs[i]
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn multithreaded_matches_sequential() {
+        prop_check(15, 53, |g| {
+            let n = g.usize(10, 400);
+            let a = random_crs(g.rng(), n, 8);
+            let s = SellMat::from_crs(&a, 8, 64).unwrap();
+            let x = g.vec_normal(n);
+            let mut xs = vec![0.0; s.nrows_padded().max(n)];
+            xs[..n].copy_from_slice(&x);
+            let mut y1 = vec![0.0; s.nrows_padded()];
+            sell_spmv(&s, &xs, &mut y1, SpmvVariant::Vectorized);
+            for nt in [2usize, 3, 7] {
+                let mut y2 = vec![0.0; s.nrows_padded()];
+                sell_spmv_mt(&s, &xs, &mut y2, SpmvVariant::Vectorized, nt);
+                assert_eq!(y1, y2, "nthreads={nt}");
+            }
+        });
+    }
+
+    #[test]
+    fn complex_spmv() {
+        let a = crate::matgen::spectralwave_like::<C64>(4, 4, 2, 3);
+        let n = a.nrows();
+        let s = SellMat::from_crs(&a, 8, 32).unwrap();
+        let mut rng = Rng::new(4);
+        let x: Vec<C64> = (0..n)
+            .map(|_| C64::new(rng.normal(), rng.normal()))
+            .collect();
+        let mut y_crs = vec![C64::ZERO; n];
+        a.spmv(&x, &mut y_crs);
+        let mut xs = vec![C64::ZERO; s.nrows_padded().max(n)];
+        xs[..n].copy_from_slice(&x);
+        let mut ys = vec![C64::ZERO; s.nrows_padded()];
+        sell_spmv(&s, &xs, &mut ys, SpmvVariant::Vectorized);
+        let mut y = vec![C64::ZERO; n];
+        unpermute(&s, &ys, &mut y);
+        for i in 0..n {
+            assert!((y[i] - y_crs[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn permute_roundtrip() {
+        let mut rng = Rng::new(8);
+        let a = random_crs(&mut rng, 37, 5);
+        let s = SellMat::from_crs(&a, 4, 16).unwrap();
+        let x: Vec<f64> = (0..37).map(|i| i as f64).collect();
+        let mut xs = vec![0.0; s.nrows_padded()];
+        permute(&s, &x, &mut xs);
+        let mut back = vec![0.0; 37];
+        unpermute(&s, &xs, &mut back);
+        assert_eq!(x, back);
+    }
+}

@@ -1,0 +1,30 @@
+//! # GHOST — General, Hybrid and Optimized Sparse Toolkit
+//!
+//! Rust + JAX + Pallas reproduction of Kreutzer et al., "GHOST: Building
+//! Blocks for High Performance Sparse Linear Algebra on Heterogeneous
+//! Systems" (2015). See DESIGN.md for the architecture and the paper
+//! mapping of every module.
+//!
+//! Layer map:
+//! - L3 (this crate): data structures, kernels, tasking, simulated-MPI
+//!   communication, heterogeneous execution, solvers.
+//! - L2/L1 (python/compile): JAX graphs + Pallas kernels, AOT-lowered to
+//!   HLO text consumed by [`runtime`].
+
+pub mod benchutil;
+pub mod comm;
+pub mod core;
+pub mod densemat;
+pub mod hetero;
+pub mod kernels;
+pub mod matgen;
+pub mod perfmodel;
+pub mod runtime;
+pub mod solvers;
+pub mod sparsemat;
+pub mod taskq;
+pub mod topology;
+
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

@@ -1,0 +1,271 @@
+//! ghost — CLI launcher for the GHOST toolkit (L3 leader entrypoint).
+//!
+//! Subcommands:
+//!   info                         topology, Table-1 devices, artifacts
+//!   spmv   [--matrix M] [--n N] [--c C] [--sigma S] [--iters I]
+//!   cg     [--matrix M] [--n N] [--tol T]
+//!   eig    [--matrix M] [--n N] [--nev K] [--space M] [--tol T]
+//!   kpm    [--n N] [--moments M] [--vectors R]
+//!
+//! Matrices: poisson7 | stencil27 | matpde | anderson | cage | random.
+//! (clap is not vendorable offline; flags are parsed by the tiny parser
+//! below.)
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use ghost::benchutil::{gflops, Table};
+use ghost::kernels::spmv::{sell_spmv_mt, SpmvVariant};
+use ghost::matgen;
+use ghost::perfmodel;
+use ghost::solvers::cg::cg;
+use ghost::solvers::kpm::{kpm_moments, KpmConfig, KpmVariant};
+use ghost::solvers::krylov_schur::{eigs_largest_real, EigOpts};
+use ghost::solvers::{LocalCrsOp, LocalSellOp};
+use ghost::sparsemat::{Crs, SellMat};
+use ghost::topology;
+
+struct Args {
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(args: &[String]) -> Self {
+        let mut flags = HashMap::new();
+        let mut i = 0;
+        while i < args.len() {
+            if let Some(key) = args[i].strip_prefix("--") {
+                let val = args
+                    .get(i + 1)
+                    .filter(|v| !v.starts_with("--"))
+                    .cloned()
+                    .unwrap_or_else(|| "true".into());
+                if val != "true" {
+                    i += 1;
+                }
+                flags.insert(key.to_string(), val);
+            }
+            i += 1;
+        }
+        Args { flags }
+    }
+
+    fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        self.flags
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    fn str(&self, key: &str, default: &str) -> String {
+        self.flags
+            .get(key)
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
+    }
+}
+
+fn build_matrix(name: &str, n: usize) -> Crs<f64> {
+    match name {
+        "poisson7" => {
+            let s = (n as f64).cbrt().ceil() as usize;
+            matgen::poisson7(s, s, s)
+        }
+        "stencil27" => {
+            let s = (n as f64).cbrt().ceil() as usize;
+            matgen::stencil27(s, s, s)
+        }
+        "matpde" => matgen::matpde((n as f64).sqrt().ceil() as usize),
+        "anderson" => matgen::anderson((n as f64).sqrt().ceil() as usize, 2.0, 42),
+        "cage" => matgen::cage_like(n, 11),
+        "random" => matgen::random_sparse(n, 8, 13),
+        other => {
+            eprintln!("unknown matrix '{other}', using poisson7");
+            let s = (n as f64).cbrt().ceil() as usize;
+            matgen::poisson7(s, s, s)
+        }
+    }
+}
+
+fn cmd_info() {
+    println!(
+        "GHOST {} — General, Hybrid and Optimized Sparse Toolkit",
+        ghost::version()
+    );
+    println!("\nTable 1 device presets:");
+    let mut t = Table::new(&[
+        "alias",
+        "model",
+        "clock",
+        "SIMD B",
+        "cores",
+        "b GB/s",
+        "peak Gflop/s",
+    ]);
+    for d in [
+        topology::emmy_cpu_socket(),
+        topology::emmy_gpu(),
+        topology::emmy_phi(),
+    ] {
+        t.row(&[
+            d.kind.to_string(),
+            d.model.to_string(),
+            d.clock_mhz.to_string(),
+            d.simd_bytes.to_string(),
+            d.cores.to_string(),
+            format!("{:.0}", d.bandwidth_gbs),
+            format!("{:.0}", d.peak_gflops),
+        ]);
+    }
+    t.print();
+    let m = topology::Machine::emmy_node();
+    println!(
+        "\nexample node: {} sockets x {} cores x {} SMT = {} PUs, {} accelerators",
+        m.sockets,
+        m.cores_per_socket,
+        m.smt,
+        m.num_pus(),
+        m.accelerators.len()
+    );
+    match topology::suggest_placement(&m) {
+        Ok(plans) => {
+            println!("suggested placement (Fig 1b):");
+            for p in plans {
+                println!("  rank {}: {} ({} PUs)", p.rank, p.device.model, p.pus.len());
+            }
+        }
+        Err(e) => eprintln!("placement failed: {e}"),
+    }
+    let dir = std::env::var("GHOST_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    match ghost::runtime::Runtime::load(&dir) {
+        Ok(rt) => {
+            println!("\nAOT artifacts ({dir}, platform {}):", rt.platform());
+            for n in rt.names() {
+                println!("  {n}");
+            }
+        }
+        Err(e) => println!("\nno artifacts loaded from {dir}: {e}"),
+    }
+}
+
+fn cmd_spmv(a: &Args) -> anyhow::Result<()> {
+    let n: usize = a.get("n", 100_000);
+    let mname = a.str("matrix", "poisson7");
+    let c: usize = a.get("c", 32);
+    let sigma: usize = a.get("sigma", 256);
+    let iters: usize = a.get("iters", 50);
+    let nthreads: usize = a.get("threads", 4);
+    let m = build_matrix(&mname, n);
+    let sell = SellMat::from_crs(&m, c, sigma)?;
+    println!(
+        "{mname}: n = {}, nnz = {}, SELL-{c}-{sigma} beta = {:.3}",
+        m.nrows(),
+        m.nnz(),
+        sell.beta()
+    );
+    let x = vec![1.0f64; m.ncols()];
+    let mut xs = vec![0.0; sell.nrows_padded().max(m.ncols())];
+    xs[..m.ncols()].copy_from_slice(&x);
+    let mut y = vec![0.0f64; sell.nrows_padded()];
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        sell_spmv_mt(&sell, &xs, &mut y, SpmvVariant::Vectorized, nthreads);
+    }
+    let per = t0.elapsed() / iters as u32;
+    let fl = perfmodel::spmv_flops(&sell, 1);
+    println!(
+        "{iters} iterations: {:.3} ms/iter, {:.2} Gflop/s measured",
+        per.as_secs_f64() * 1e3,
+        gflops(fl, per)
+    );
+    Ok(())
+}
+
+fn cmd_cg(a: &Args) -> anyhow::Result<()> {
+    let n: usize = a.get("n", 50_000);
+    let mname = a.str("matrix", "poisson7");
+    let tol: f64 = a.get("tol", 1e-8);
+    let m = build_matrix(&mname, n);
+    let b = vec![1.0f64; m.nrows()];
+    let mut x = vec![0.0f64; m.nrows()];
+    let mut op = LocalSellOp::new(&m, 32, 256, 4)?;
+    let t0 = Instant::now();
+    let st = cg(&mut op, &b, &mut x, tol, 10_000)?;
+    println!(
+        "CG on {mname} (n = {}): converged = {}, {} iterations, {:.3}s, residual {:.2e}",
+        m.nrows(),
+        st.converged,
+        st.iterations,
+        t0.elapsed().as_secs_f64(),
+        st.final_residual
+    );
+    Ok(())
+}
+
+fn cmd_eig(a: &Args) -> anyhow::Result<()> {
+    let n: usize = a.get("n", 576);
+    let mname = a.str("matrix", "matpde");
+    let opts = EigOpts {
+        nev: a.get("nev", 6),
+        m: a.get("space", 20),
+        tol: a.get("tol", 1e-6),
+        max_restarts: a.get("restarts", 3000),
+        seed: a.get("seed", 42),
+    };
+    let m = build_matrix(&mname, n);
+    let mut op = LocalCrsOp::new(m);
+    let t0 = Instant::now();
+    let r = eigs_largest_real(&mut op, &opts)?;
+    println!(
+        "eig on {mname}: converged = {}, {} restarts, {} matvecs, {:.3}s",
+        r.converged,
+        r.restarts,
+        r.matvecs,
+        t0.elapsed().as_secs_f64()
+    );
+    for (ev, res) in r.eigenvalues.iter().zip(&r.residuals) {
+        println!("  {:>12.6} {:+.6}i   (res {:.2e})", ev.re, ev.im, res);
+    }
+    Ok(())
+}
+
+fn cmd_kpm(a: &Args) -> anyhow::Result<()> {
+    let l: usize = a.get("n", 64);
+    let cfg = KpmConfig {
+        nmoments: a.get("moments", 64),
+        nrandom: a.get("vectors", 4),
+        variant: KpmVariant::BlockedFused,
+        seed: a.get("seed", 7),
+    };
+    let (h, _, _) = matgen::scaled_hamiltonian::<f64>(l, 2.0, 42);
+    let t0 = Instant::now();
+    let mu = kpm_moments(&h, &cfg)?;
+    println!(
+        "KPM on anderson {l}x{l}: {} moments, {} vectors, {:.3}s; mu0 = {:.1}, mu2 = {:.3}",
+        cfg.nmoments,
+        cfg.nrandom,
+        t0.elapsed().as_secs_f64(),
+        mu[0],
+        mu[2]
+    );
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = argv.first().map(|s| s.as_str()).unwrap_or("info");
+    let args = Args::parse(&argv[1.min(argv.len())..]);
+    match cmd {
+        "info" => cmd_info(),
+        "spmv" => cmd_spmv(&args)?,
+        "cg" => cmd_cg(&args)?,
+        "eig" => cmd_eig(&args)?,
+        "kpm" => cmd_kpm(&args)?,
+        "version" => println!("ghost {}", ghost::version()),
+        other => {
+            eprintln!("unknown command '{other}'; see the module docs (info|spmv|cg|eig|kpm)");
+            std::process::exit(2);
+        }
+    }
+    Ok(())
+}

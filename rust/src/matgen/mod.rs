@@ -1,0 +1,423 @@
+//! Scalable matrix generators — the in-repo substitutes for the paper's
+//! benchmark matrices (all served from the UF/SuiteSparse collection or
+//! application codes in the paper; none are redistributable here, so each
+//! generator reproduces the *structural class* of its counterpart):
+//!
+//! | paper matrix            | generator                | class |
+//! |-------------------------|--------------------------|-------|
+//! | Janna/ML_Geer           | `stencil27` / `poisson7` | large 3-D mesh, ~20-27 nnz/row |
+//! | vanHeukelum/cage15      | `cage_like`              | DNA electrophoresis: irregular, ~19 nnz/row |
+//! | Sinclair/3Dspectralwave | `spectralwave_like`      | complex, 3-D spectral stencil |
+//! | MATPDE (NEP collection) | `matpde`                 | non-symmetric 5-point variable-coefficient PDE |
+//! | graphene/topological-insulator Hamiltonians | `anderson` | tight-binding + disorder |
+
+use crate::core::{Lidx, Rng, Scalar};
+use crate::sparsemat::crs::Crs;
+
+/// 7-point 3-D Poisson operator on an nx*ny*nz grid (Dirichlet).
+pub fn poisson7<S: Scalar>(nx: usize, ny: usize, nz: usize) -> Crs<S> {
+    let idx = move |x: usize, y: usize, z: usize| (z * ny + y) * nx + x;
+    Crs::from_row_fn(nx * ny * nz, nx * ny * nz, |i, cols, vals| {
+        let x = i % nx;
+        let y = (i / nx) % ny;
+        let z = i / (nx * ny);
+        let mut push = |c: usize, v: f64| {
+            cols.push(c as Lidx);
+            vals.push(S::from_f64(v));
+        };
+        push(idx(x, y, z), 6.0);
+        if x > 0 {
+            push(idx(x - 1, y, z), -1.0);
+        }
+        if x + 1 < nx {
+            push(idx(x + 1, y, z), -1.0);
+        }
+        if y > 0 {
+            push(idx(x, y - 1, z), -1.0);
+        }
+        if y + 1 < ny {
+            push(idx(x, y + 1, z), -1.0);
+        }
+        if z > 0 {
+            push(idx(x, y, z - 1), -1.0);
+        }
+        if z + 1 < nz {
+            push(idx(x, y, z + 1), -1.0);
+        }
+    })
+    .unwrap()
+}
+
+/// 27-point 3-D stencil (ML_Geer-like density: ~27 nnz/row, strong
+/// locality). Values decay with distance; diagonally dominant.
+pub fn stencil27<S: Scalar>(nx: usize, ny: usize, nz: usize) -> Crs<S> {
+    let idx = move |x: usize, y: usize, z: usize| (z * ny + y) * nx + x;
+    Crs::from_row_fn(nx * ny * nz, nx * ny * nz, |i, cols, vals| {
+        let x = (i % nx) as i64;
+        let y = ((i / nx) % ny) as i64;
+        let z = (i / (nx * ny)) as i64;
+        for dz in -1i64..=1 {
+            for dy in -1i64..=1 {
+                for dx in -1i64..=1 {
+                    let (xx, yy, zz) = (x + dx, y + dy, z + dz);
+                    if xx < 0
+                        || yy < 0
+                        || zz < 0
+                        || xx >= nx as i64
+                        || yy >= ny as i64
+                        || zz >= nz as i64
+                    {
+                        continue;
+                    }
+                    let dist = (dx.abs() + dy.abs() + dz.abs()) as f64;
+                    let v = if dist == 0.0 { 26.0 } else { -1.0 / dist };
+                    cols.push(idx(xx as usize, yy as usize, zz as usize) as Lidx);
+                    vals.push(S::from_f64(v));
+                }
+            }
+        }
+    })
+    .unwrap()
+}
+
+/// MATPDE-like operator (the Fig 11 test case): five-point central finite
+/// difference discretization of a two-dimensional variable-coefficient
+/// linear elliptic PDE
+///     -(p u_x)_x - (q u_y)_y + r u_x + s u_y + t u = f
+/// on an n*n grid with Dirichlet boundaries. Coefficients follow the NEP
+/// collection's MATPDE: p = e^{-xy}, q = e^{xy}, r = beta (x + y),
+/// s = gamma (x + y), t = 1/(1 + x + y). Non-symmetric.
+pub fn matpde<S: Scalar>(n: usize) -> Crs<S> {
+    let h = 1.0 / (n as f64 + 1.0);
+    let beta = 20.0;
+    let gamma = 20.0;
+    let p = |x: f64, y: f64| (-x * y).exp();
+    let q = |x: f64, y: f64| (x * y).exp();
+    let idx = move |ix: usize, iy: usize| iy * n + ix;
+    Crs::from_row_fn(n * n, n * n, |i, cols, vals| {
+        let ix = i % n;
+        let iy = i / n;
+        let x = (ix as f64 + 1.0) * h;
+        let y = (iy as f64 + 1.0) * h;
+        let (ph_e, ph_w) = (p(x + 0.5 * h, y), p(x - 0.5 * h, y));
+        let (qh_n, qh_s) = (q(x, y + 0.5 * h), q(x, y - 0.5 * h));
+        let r = beta * (x + y);
+        let s = gamma * (x + y);
+        let t = 1.0 / (1.0 + x + y);
+        let h2 = h * h;
+        // center
+        let center = (ph_e + ph_w + qh_n + qh_s) / h2 + t;
+        // neighbors (central differences for convection)
+        let east = -ph_e / h2 + r / (2.0 * h);
+        let west = -ph_w / h2 - r / (2.0 * h);
+        let north = -qh_n / h2 + s / (2.0 * h);
+        let south = -qh_s / h2 - s / (2.0 * h);
+        let mut push = |c: usize, v: f64| {
+            cols.push(c as Lidx);
+            vals.push(S::from_f64(v));
+        };
+        if iy > 0 {
+            push(idx(ix, iy - 1), south);
+        }
+        if ix > 0 {
+            push(idx(ix - 1, iy), west);
+        }
+        push(idx(ix, iy), center);
+        if ix + 1 < n {
+            push(idx(ix + 1, iy), east);
+        }
+        if iy + 1 < n {
+            push(idx(ix, iy + 1), north);
+        }
+    })
+    .unwrap()
+}
+
+/// Anderson-model tight-binding Hamiltonian on a 2-D square lattice with
+/// on-site disorder in [-w/2, w/2] — the structural class of the paper's
+/// graphene / topological-insulator applications (section 1.1).
+/// Symmetric (real) with 5 nnz per interior row. Spectrum bounded by
+/// 4 + w/2 in absolute value.
+pub fn anderson<S: Scalar>(n: usize, disorder: f64, seed: u64) -> Crs<S> {
+    let mut rng = Rng::new(seed);
+    let onsite: Vec<f64> = (0..n * n)
+        .map(|_| disorder * (rng.f64() - 0.5))
+        .collect();
+    let idx = move |x: usize, y: usize| y * n + x;
+    Crs::from_row_fn(n * n, n * n, |i, cols, vals| {
+        let x = i % n;
+        let y = i / n;
+        let mut push = |c: usize, v: f64| {
+            cols.push(c as Lidx);
+            vals.push(S::from_f64(v));
+        };
+        if y > 0 {
+            push(idx(x, y - 1), -1.0);
+        }
+        if x > 0 {
+            push(idx(x - 1, y), -1.0);
+        }
+        push(idx(x, y), onsite[i]);
+        if x + 1 < n {
+            push(idx(x + 1, y), -1.0);
+        }
+        if y + 1 < n {
+            push(idx(x, y + 1), -1.0);
+        }
+    })
+    .unwrap()
+}
+
+/// cage15-like: irregular row lengths (uniform in [lo, hi]) with strong
+/// but not perfect locality (most entries within a band, a few long-range)
+/// — stresses sigma-sorting and halo exchange.
+pub fn cage_like<S: Scalar>(n: usize, seed: u64) -> Crs<S> {
+    let mut rng = Rng::new(seed);
+    Crs::from_row_fn(n, n, |i, cols, vals| {
+        let k = rng.range(5, 34); // avg ~19 like cage15
+        let mut set = std::collections::BTreeSet::new();
+        set.insert(i);
+        while set.len() < k.min(n) {
+            let c = if rng.bool(0.85) {
+                // banded part
+                let off = rng.range(0, 201) as i64 - 100;
+                (i as i64 + off).rem_euclid(n as i64) as usize
+            } else {
+                rng.below(n)
+            };
+            set.insert(c);
+        }
+        for c in set {
+            cols.push(c as Lidx);
+            vals.push(S::from_re_im(rng.normal(), 0.0));
+        }
+    })
+    .unwrap()
+}
+
+/// 3Dspectralwave-like: complex symmetric matrix from a 3-D spectral
+/// element pattern, ~45 nnz/row (the Fig 9 test case is complex double).
+pub fn spectralwave_like<S: Scalar>(nx: usize, ny: usize, nz: usize, seed: u64) -> Crs<S> {
+    let mut rng = Rng::new(seed);
+    let n = nx * ny * nz;
+    let idx = move |x: usize, y: usize, z: usize| (z * ny + y) * nx + x;
+    // random-but-symmetric values via hash of (min, max) index pair
+    let pair_val = move |a: usize, b: usize, rng: &mut Rng| -> (f64, f64) {
+        let _ = rng;
+        let (lo, hi) = (a.min(b) as u64, a.max(b) as u64);
+        let mut h = lo
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(hi.wrapping_mul(0xBF58476D1CE4E5B9))
+            .wrapping_add(seed);
+        h ^= h >> 31;
+        h = h.wrapping_mul(0x94D049BB133111EB);
+        let re = ((h >> 11) as f64 / (1u64 << 53) as f64) - 0.5;
+        let im = (((h.wrapping_mul(0x2545F4914F6CDD1D)) >> 11) as f64
+            / (1u64 << 53) as f64)
+            - 0.5;
+        (re, im)
+    };
+    Crs::from_row_fn(n, n, |i, cols, vals| {
+        let x = (i % nx) as i64;
+        let y = ((i / nx) % ny) as i64;
+        let z = (i / (nx * ny)) as i64;
+        for dz in -1i64..=1 {
+            for dy in -2i64..=2 {
+                for dx in -2i64..=2 {
+                    if dx.abs() + dy.abs() + dz.abs() > 3 {
+                        continue;
+                    }
+                    let (xx, yy, zz) = (x + dx, y + dy, z + dz);
+                    if xx < 0
+                        || yy < 0
+                        || zz < 0
+                        || xx >= nx as i64
+                        || yy >= ny as i64
+                        || zz >= nz as i64
+                    {
+                        continue;
+                    }
+                    let j = idx(xx as usize, yy as usize, zz as usize);
+                    let (re, im) = pair_val(i, j, &mut rng);
+                    let v = if i == j {
+                        S::from_re_im(10.0 + re, 0.0)
+                    } else {
+                        S::from_re_im(re, im)
+                    };
+                    cols.push(j as Lidx);
+                    vals.push(v);
+                }
+            }
+        }
+    })
+    .unwrap()
+}
+
+/// Random sparse matrix with given average row length (no locality) —
+/// worst case for communication volume.
+pub fn random_sparse<S: Scalar>(n: usize, avg_nnz: usize, seed: u64) -> Crs<S> {
+    let mut rng = Rng::new(seed);
+    Crs::from_row_fn(n, n, |i, cols, vals| {
+        let k = rng.range(1, (2 * avg_nnz).min(n) + 1);
+        let mut set = rng.sample_distinct(n, k.min(n));
+        if !set.contains(&i) {
+            set.push(i);
+            set.sort_unstable();
+        }
+        for c in set {
+            cols.push(c as Lidx);
+            vals.push(S::from_re_im(rng.normal(), 0.0));
+        }
+    })
+    .unwrap()
+}
+
+/// Scaled Hamiltonian for KPM/Chebyshev: returns (matrix, a, b) where the
+/// matrix has been spectrally mapped into ~[-1, 1] via H' = (H - b) / a
+/// using Gershgorin bounds.
+pub fn scaled_hamiltonian<S: Scalar>(n: usize, disorder: f64, seed: u64) -> (Crs<S>, f64, f64) {
+    let h = anderson::<S>(n, disorder, seed);
+    // Gershgorin: |lambda| <= max_i sum_j |a_ij|
+    let mut radius = 0.0f64;
+    for i in 0..h.nrows() {
+        let (_, vals) = h.row(i);
+        let r: f64 = vals.iter().map(|v| v.abs()).sum();
+        radius = radius.max(r);
+    }
+    let a = radius * 1.01;
+    let b = 0.0;
+    let scaled = Crs::from_row_fn(h.nrows(), h.ncols(), |i, cols, vals| {
+        let (cs, vs) = h.row(i);
+        for (&c, &v) in cs.iter().zip(vs) {
+            cols.push(c);
+            vals.push(v * S::from_f64(1.0 / a));
+        }
+    })
+    .unwrap();
+    (scaled, a, b)
+}
+
+/// Result of listing the benchmark suite (Fig 6 / Fig 9 style sweeps).
+pub struct SuiteEntry<S> {
+    pub name: &'static str,
+    pub mat: Crs<S>,
+}
+
+/// The benchmark matrix suite used by the Fig 6 bench.
+pub fn suite_f64(scale: usize) -> Vec<SuiteEntry<f64>> {
+    let s = scale.max(1);
+    vec![
+        SuiteEntry {
+            name: "poisson7",
+            mat: poisson7(8 * s, 8 * s, 4 * s),
+        },
+        SuiteEntry {
+            name: "stencil27",
+            mat: stencil27(6 * s, 6 * s, 4 * s),
+        },
+        SuiteEntry {
+            name: "matpde",
+            mat: matpde(16 * s),
+        },
+        SuiteEntry {
+            name: "anderson",
+            mat: anderson(16 * s, 2.0, 7),
+        },
+        SuiteEntry {
+            name: "cage_like",
+            mat: cage_like(256 * s * s, 11),
+        },
+        SuiteEntry {
+            name: "random",
+            mat: random_sparse(192 * s * s, 8, 13),
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::C64;
+
+    #[test]
+    fn poisson_properties() {
+        let a = poisson7::<f64>(4, 4, 3);
+        assert_eq!(a.nrows(), 48);
+        assert!(a.is_symmetric(0.0));
+        assert_eq!(a.max_row_len(), 7);
+        // row sums nonneg (diagonal dominance)
+        for i in 0..a.nrows() {
+            let s: f64 = a.row(i).1.iter().sum();
+            assert!(s >= 0.0);
+        }
+    }
+
+    #[test]
+    fn stencil27_density() {
+        let a = stencil27::<f64>(5, 5, 5);
+        assert_eq!(a.max_row_len(), 27);
+        assert!(a.is_symmetric(1e-15));
+    }
+
+    #[test]
+    fn matpde_nonsymmetric_five_point() {
+        let a = matpde::<f64>(8);
+        assert_eq!(a.nrows(), 64);
+        assert_eq!(a.max_row_len(), 5);
+        assert!(!a.is_symmetric(1e-12), "MATPDE must be non-symmetric");
+        // diagonal positive
+        for i in 0..a.nrows() {
+            let (cs, vs) = a.row(i);
+            let d = cs.iter().position(|&c| c as usize == i).unwrap();
+            assert!(vs[d] > 0.0);
+        }
+    }
+
+    #[test]
+    fn anderson_symmetric_bounded() {
+        let a = anderson::<f64>(10, 4.0, 3);
+        assert!(a.is_symmetric(0.0));
+        let (scaled, norm, _) = scaled_hamiltonian::<f64>(10, 4.0, 3);
+        assert!(norm > 0.0);
+        // Gershgorin of scaled matrix <= ~1
+        for i in 0..scaled.nrows() {
+            let r: f64 = scaled.row(i).1.iter().map(|v| v.abs()).sum();
+            assert!(r <= 1.0 + 1e-12);
+        }
+    }
+
+    #[test]
+    fn spectralwave_is_complex_symmetric() {
+        let a = spectralwave_like::<C64>(4, 4, 3, 1);
+        assert_eq!(a.nrows(), 48);
+        // complex symmetric: A == A^T (not Hermitian)
+        let t = a.transpose();
+        let mut x = a.clone();
+        let mut y = t;
+        x.sort_rows();
+        y.sort_rows();
+        assert_eq!(x.colidx(), y.colidx());
+        for (u, v) in x.values().iter().zip(y.values()) {
+            assert!((*u - *v).abs() < 1e-14);
+        }
+        assert!(a.avg_row_len() > 15.0);
+    }
+
+    #[test]
+    fn cage_like_row_stats() {
+        let a = cage_like::<f64>(500, 2);
+        assert!(a.avg_row_len() > 10.0 && a.avg_row_len() < 30.0);
+        // diagonal present
+        for i in 0..a.nrows() {
+            assert!(a.row(i).0.iter().any(|&c| c as usize == i));
+        }
+    }
+
+    #[test]
+    fn suite_builds() {
+        for e in suite_f64(1) {
+            assert!(e.mat.nnz() > 0, "{}", e.name);
+            assert_eq!(e.mat.nrows(), e.mat.ncols());
+        }
+    }
+}

@@ -1,0 +1,239 @@
+//! PJRT runtime: loads the HLO-text artifacts produced by the build-time
+//! JAX/Pallas pipeline (python/compile/aot.py) and executes them from the
+//! rust hot path. This is the "accelerator backend" of heterogeneous
+//! execution (DESIGN.md section 1): ranks of device kind Gpu/Phi run their
+//! local SpMV through these compiled executables while Cpu ranks run the
+//! native kernels.
+//!
+//! Interchange is HLO *text* — see aot.py for why serialized protos from
+//! jax >= 0.5 cannot be loaded by xla_extension 0.5.1.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::core::{GhostError, Result};
+
+/// Parsed line of artifacts/manifest.txt.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    pub dtype: String,
+    pub nouts: usize,
+    fields: HashMap<String, String>,
+}
+
+impl ArtifactMeta {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.fields.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<usize> {
+        self.get(key)
+            .ok_or_else(|| GhostError::Parse(format!("manifest key {key} missing")))?
+            .parse()
+            .map_err(|_| GhostError::Parse(format!("manifest key {key} not an int")))
+    }
+
+    fn parse(line: &str) -> Result<Self> {
+        let mut fields = HashMap::new();
+        for item in line.split_whitespace() {
+            let (k, v) = item
+                .split_once('=')
+                .ok_or_else(|| GhostError::Parse(format!("bad manifest item {item}")))?;
+            fields.insert(k.to_string(), v.to_string());
+        }
+        let need = |k: &str| -> Result<String> {
+            fields
+                .get(k)
+                .cloned()
+                .ok_or_else(|| GhostError::Parse(format!("manifest missing {k}")))
+        };
+        Ok(ArtifactMeta {
+            name: need("name")?,
+            file: need("file")?,
+            kind: need("kind")?,
+            dtype: need("dtype")?,
+            nouts: need("nouts")?
+                .parse()
+                .map_err(|_| GhostError::Parse("bad nouts".into()))?,
+            fields,
+        })
+    }
+}
+
+/// A compiled artifact: PJRT executable + its metadata.
+pub struct Artifact {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Artifact {
+    /// Execute with literal inputs; returns the flattened output tuple.
+    pub fn execute(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self.exe.execute::<xla::Literal>(inputs)?;
+        let lit = result[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: output is always a tuple
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Execute with device-resident buffers (hot path: operands that do
+    /// not change between calls stay on device, e.g. matrix slabs).
+    pub fn execute_buffers(&self, inputs: &[&xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
+        let result = self.exe.execute_b(inputs)?;
+        let lit = result[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Convenience: execute and pull every output out as f64 vectors.
+    pub fn execute_f64(&self, inputs: &[xla::Literal]) -> Result<Vec<Vec<f64>>> {
+        self.execute(inputs)?
+            .iter()
+            .map(|l| Ok(l.to_vec::<f64>()?))
+            .collect()
+    }
+}
+
+/// Registry of all compiled artifacts, keyed by name. Compilation happens
+/// once at load; execution is cheap and reentrant.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifacts: HashMap<String, Artifact>,
+    dir: PathBuf,
+}
+
+impl Runtime {
+    /// Load `<dir>/manifest.txt` and compile every artifact on the PJRT
+    /// CPU client.
+    pub fn load<P: AsRef<Path>>(dir: P) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        // silence TFRT client lifecycle chatter unless the user asked
+        if std::env::var("TF_CPP_MIN_LOG_LEVEL").is_err() {
+            std::env::set_var("TF_CPP_MIN_LOG_LEVEL", "2");
+        }
+        let client = xla::PjRtClient::cpu()?;
+        let manifest = std::fs::read_to_string(dir.join("manifest.txt"))?;
+        let mut artifacts = HashMap::new();
+        for line in manifest.lines() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let meta = ArtifactMeta::parse(line)?;
+            let path = dir.join(&meta.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str()
+                    .ok_or_else(|| GhostError::InvalidArg("non-utf8 path".into()))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            artifacts.insert(meta.name.clone(), Artifact { meta, exe });
+        }
+        Ok(Runtime {
+            client,
+            artifacts,
+            dir,
+        })
+    }
+
+    /// Default artifact location: $GHOST_ARTIFACTS or ./artifacts.
+    pub fn load_default() -> Result<Self> {
+        let dir = std::env::var("GHOST_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Self::load(dir)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// The underlying PJRT client (for host->device buffer uploads).
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.artifacts.keys().map(|s| s.as_str()).collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Artifact> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| GhostError::ArtifactNotFound(name.to_string()))
+    }
+
+    /// Find an artifact of `kind` whose bucket fits (nchunks, w) — smallest
+    /// adequate bucket wins (AOT shape bucketing, DESIGN.md).
+    pub fn find_spmv_bucket(
+        &self,
+        kind: &str,
+        dtype: &str,
+        nchunks: usize,
+        w: usize,
+    ) -> Result<&Artifact> {
+        let mut best: Option<(&Artifact, usize)> = None;
+        for a in self.artifacts.values() {
+            if a.meta.kind != kind || a.meta.dtype != dtype {
+                continue;
+            }
+            let (bn, bw) = (a.meta.get_usize("nchunks")?, a.meta.get_usize("w")?);
+            if bn >= nchunks && bw >= w {
+                let waste = bn * bw;
+                if best.map_or(true, |(_, bwaste)| waste < bwaste) {
+                    best = Some((a, waste));
+                }
+            }
+        }
+        best.map(|(a, _)| a).ok_or_else(|| {
+            GhostError::ArtifactNotFound(format!(
+                "no {kind}/{dtype} bucket for nchunks={nchunks}, w={w}"
+            ))
+        })
+    }
+}
+
+/// Helpers to build literals in the artifact layouts.
+pub mod lit {
+    use crate::core::Result;
+
+    pub fn f64_slab(data: &[f64], dims: &[i64]) -> Result<xla::Literal> {
+        Ok(xla::Literal::vec1(data).reshape(dims)?)
+    }
+
+    pub fn i32_slab(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+        Ok(xla::Literal::vec1(data).reshape(dims)?)
+    }
+
+    pub fn f64_scalar(v: f64) -> xla::Literal {
+        xla::Literal::scalar(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parse() {
+        let m = ArtifactMeta::parse(
+            "name=spmv_f64_s file=spmv_f64_s.hlo.txt nouts=1 kind=spmv dtype=f64 nchunks=64 c=32 w=16 nrows=2048 nx=2560",
+        )
+        .unwrap();
+        assert_eq!(m.name, "spmv_f64_s");
+        assert_eq!(m.kind, "spmv");
+        assert_eq!(m.nouts, 1);
+        assert_eq!(m.get_usize("nchunks").unwrap(), 64);
+        assert!(m.get_usize("missing").is_err());
+    }
+
+    #[test]
+    fn manifest_parse_errors() {
+        assert!(ArtifactMeta::parse("name=x no_equals_here").is_err());
+        assert!(ArtifactMeta::parse("file=f kind=k dtype=d nouts=1").is_err());
+    }
+}

@@ -1,0 +1,245 @@
+//! Block Conjugate Gradient (O'Leary [33]) — the classic block method the
+//! paper's section 5.2 motivates: multiple right-hand sides share every
+//! matrix stream through the SpMMV kernel, and the small projected
+//! systems run through the tall-skinny kernels (tsmttsm).
+
+use crate::core::{Result, Scalar};
+use crate::densemat::ops as dops;
+use crate::densemat::{tsm, DenseMat, Layout};
+use crate::kernels::spmmv::sell_spmmv;
+use crate::sparsemat::{Crs, SellMat};
+
+#[derive(Clone, Debug)]
+pub struct BlockCgStats {
+    pub iterations: usize,
+    pub final_residual: f64,
+    pub converged: bool,
+}
+
+/// Solve A X = B for `nrhs` right-hand sides simultaneously (A SPD,
+/// local). Block vectors are row-major; one SpMMV per iteration feeds all
+/// systems. Small (nrhs x nrhs) matrices are solved densely.
+pub fn block_cg<S: Scalar>(
+    a: &Crs<S>,
+    b: &DenseMat<S>,
+    x: &mut DenseMat<S>,
+    c: usize,
+    sigma: usize,
+    tol: f64,
+    max_iters: usize,
+) -> Result<BlockCgStats> {
+    let n = a.nrows();
+    let nrhs = b.ncols();
+    crate::ensure!(
+        b.nrows() == n && x.nrows() == n && x.ncols() == nrhs,
+        DimMismatch,
+        "block_cg sizes"
+    );
+    let sell = SellMat::from_crs_opts(a, c, sigma, true)?;
+    let np = sell.nrows_padded();
+    let perm = sell.perm();
+    let to_sell = |m: &DenseMat<S>| {
+        DenseMat::from_fn(np, nrhs, Layout::RowMajor, |i, j| {
+            if perm[i] < n {
+                m.at(perm[i], j)
+            } else {
+                S::ZERO
+            }
+        })
+    };
+    let bs = to_sell(b);
+    let mut xs = to_sell(x);
+    let bnorm = bs.norm_fro().max(1e-300);
+
+    // R = B - A X, P = R
+    let mut q = DenseMat::<S>::zeros(np, nrhs, Layout::RowMajor);
+    sell_spmmv(&sell, &xs, &mut q);
+    let mut r = bs.clone();
+    dops::axpy(&mut r, -S::ONE, &q)?;
+    let mut p = r.clone();
+    // RR = R^H R
+    let mut rr = DenseMat::<S>::zeros(nrhs, nrhs, Layout::RowMajor);
+    tsm::tsmttsm(&mut rr, S::ONE, &r, &r, S::ZERO)?;
+
+    let mut iterations = 0usize;
+    let mut converged = false;
+    while iterations < max_iters {
+        if r.norm_fro() <= tol * bnorm {
+            converged = true;
+            break;
+        }
+        // Q = A P (one streaming pass for all systems)
+        sell_spmmv(&sell, &p, &mut q);
+        // PQ = P^H Q  (nrhs x nrhs via tall-skinny kernel)
+        let mut pq = DenseMat::<S>::zeros(nrhs, nrhs, Layout::RowMajor);
+        tsm::tsmttsm(&mut pq, S::ONE, &p, &q, S::ZERO)?;
+        // alpha = PQ^{-1} RR (small dense solve, one column at a time)
+        let alpha = solve_small(&pq, &rr)?;
+        // X += P alpha, R -= Q alpha
+        let mut pa = DenseMat::<S>::zeros(np, nrhs, Layout::RowMajor);
+        tsm::tsmm(&mut pa, S::ONE, &p, &alpha, S::ZERO)?;
+        dops::axpy(&mut xs, S::ONE, &pa)?;
+        let mut qa = DenseMat::<S>::zeros(np, nrhs, Layout::RowMajor);
+        tsm::tsmm(&mut qa, S::ONE, &q, &alpha, S::ZERO)?;
+        dops::axpy(&mut r, -S::ONE, &qa)?;
+        // RR_new, beta = RR^{-1} RR_new
+        let mut rr_new = DenseMat::<S>::zeros(nrhs, nrhs, Layout::RowMajor);
+        tsm::tsmttsm(&mut rr_new, S::ONE, &r, &r, S::ZERO)?;
+        let beta = solve_small(&rr, &rr_new)?;
+        // P = R + P beta   (tsmm_inplace-style update)
+        let mut pb = DenseMat::<S>::zeros(np, nrhs, Layout::RowMajor);
+        tsm::tsmm(&mut pb, S::ONE, &p, &beta, S::ZERO)?;
+        p = r.clone();
+        dops::axpy(&mut p, S::ONE, &pb)?;
+        rr = rr_new;
+        iterations += 1;
+    }
+    let final_residual = r.norm_fro() / bnorm;
+    // un-permute
+    for (i, &src) in perm.iter().enumerate() {
+        if src < n {
+            for j in 0..nrhs {
+                *x.at_mut(src, j) = xs.at(i, j);
+            }
+        }
+    }
+    Ok(BlockCgStats {
+        iterations,
+        final_residual,
+        converged,
+    })
+}
+
+/// Solve M Y = N for small (k x k) matrices by Gaussian elimination.
+fn solve_small<S: Scalar>(m: &DenseMat<S>, nrhs: &DenseMat<S>) -> Result<DenseMat<S>> {
+    let k = m.nrows();
+    crate::ensure!(
+        m.ncols() == k && nrhs.nrows() == k,
+        DimMismatch,
+        "solve_small dims"
+    );
+    let cols = nrhs.ncols();
+    let mut a: Vec<S> = (0..k * k).map(|t| m.at(t / k, t % k)).collect();
+    let mut b: Vec<S> = (0..k * cols).map(|t| nrhs.at(t / cols, t % cols)).collect();
+    for piv in 0..k {
+        // partial pivoting
+        let mut best = piv;
+        for i in piv + 1..k {
+            if a[i * k + piv].abs() > a[best * k + piv].abs() {
+                best = i;
+            }
+        }
+        crate::ensure!(
+            a[best * k + piv].abs() > 1e-300,
+            NoConvergence,
+            "block CG breakdown: singular projected matrix"
+        );
+        if best != piv {
+            for j in 0..k {
+                a.swap(piv * k + j, best * k + j);
+            }
+            for j in 0..cols {
+                b.swap(piv * cols + j, best * cols + j);
+            }
+        }
+        let inv = S::ONE / a[piv * k + piv];
+        for i in piv + 1..k {
+            let f = a[i * k + piv] * inv;
+            for j in piv..k {
+                let t = a[piv * k + j];
+                a[i * k + j] -= f * t;
+            }
+            for j in 0..cols {
+                let t = b[piv * cols + j];
+                b[i * cols + j] -= f * t;
+            }
+        }
+    }
+    let mut y = DenseMat::<S>::zeros(k, cols, Layout::RowMajor);
+    for j in 0..cols {
+        for i in (0..k).rev() {
+            let mut acc = b[i * cols + j];
+            for l in i + 1..k {
+                acc -= a[i * k + l] * y.at(l, j);
+            }
+            *y.at_mut(i, j) = acc / a[i * k + i];
+        }
+    }
+    Ok(y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matgen;
+    use crate::solvers::cg::cg;
+    use crate::solvers::LocalSellOp;
+
+    #[test]
+    fn block_cg_matches_single_cg_per_rhs() {
+        let a = matgen::poisson7::<f64>(6, 6, 4);
+        let n = a.nrows();
+        let nrhs = 4;
+        let b = DenseMat::<f64>::random(n, nrhs, Layout::RowMajor, 3);
+        let mut x = DenseMat::<f64>::zeros(n, nrhs, Layout::RowMajor);
+        let st = block_cg(&a, &b, &mut x, 8, 64, 1e-10, 1000).unwrap();
+        assert!(st.converged, "{st:?}");
+        for j in 0..nrhs {
+            let bj: Vec<f64> = (0..n).map(|i| b.at(i, j)).collect();
+            let mut xj = vec![0.0; n];
+            let mut op = LocalSellOp::new(&a, 8, 64, 1).unwrap();
+            cg(&mut op, &bj, &mut xj, 1e-12, 2000).unwrap();
+            for i in 0..n {
+                assert!((x.at(i, j) - xj[i]).abs() < 1e-6, "rhs {j} row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn block_cg_converges_in_fewer_iterations_than_worst_single() {
+        // block methods share spectral information: the block iteration
+        // count is at most the single-vector count (usually smaller)
+        let a = matgen::anderson::<f64>(14, 1.0, 3);
+        let shifted = crate::sparsemat::Crs::from_row_fn(a.nrows(), a.ncols(), |i, cols, vals| {
+            let (cs, vs) = a.row(i);
+            for (&c, &v) in cs.iter().zip(vs) {
+                cols.push(c);
+                vals.push(if c as usize == i { v + 6.0 } else { v });
+            }
+        })
+        .unwrap();
+        let n = shifted.nrows();
+        let b = DenseMat::<f64>::random(n, 4, Layout::RowMajor, 9);
+        let mut x = DenseMat::<f64>::zeros(n, 4, Layout::RowMajor);
+        let st = block_cg(&shifted, &b, &mut x, 8, 64, 1e-9, 500).unwrap();
+        assert!(st.converged);
+        let bj: Vec<f64> = (0..n).map(|i| b.at(i, 0)).collect();
+        let mut xj = vec![0.0; n];
+        let mut op = LocalSellOp::new(&shifted, 8, 64, 1).unwrap();
+        let single = cg(&mut op, &bj, &mut xj, 1e-9, 500).unwrap();
+        assert!(
+            st.iterations <= single.iterations + 2,
+            "block {} vs single {}",
+            st.iterations,
+            single.iterations
+        );
+    }
+
+    #[test]
+    fn solve_small_identity() {
+        let m = DenseMat::<f64>::from_fn(3, 3, Layout::RowMajor, |i, j| {
+            if i == j {
+                2.0
+            } else {
+                0.0
+            }
+        });
+        let n = DenseMat::<f64>::from_fn(3, 2, Layout::RowMajor, |i, j| (i + j) as f64);
+        let y = solve_small(&m, &n).unwrap();
+        for i in 0..3 {
+            for j in 0..2 {
+                assert!((y.at(i, j) - (i + j) as f64 / 2.0).abs() < 1e-14);
+            }
+        }
+    }
+}

@@ -1,0 +1,251 @@
+//! Conjugate Gradient — the sample linear solver shipped with GHOST.
+//!
+//! Two variants:
+//! - [`cg`]: textbook CG against any [`Operator`] (local or distributed);
+//! - [`cg_fused_local`]: the kernel-fusion showcase (section 5.3) — the
+//!   SpMV is augmented with the <p, Ap> dot product so p is streamed
+//!   once instead of twice per iteration.
+
+use super::{slice_axpby, slice_axpy, Operator};
+use crate::core::{GhostError, Result, Scalar};
+use crate::densemat::{DenseMat, Layout};
+use crate::kernels::fused::{flags, sell_spmv_fused, SpmvOpts};
+use crate::sparsemat::{Crs, SellMat};
+
+#[derive(Clone, Debug)]
+pub struct CgStats {
+    pub iterations: usize,
+    pub final_residual: f64,
+    pub converged: bool,
+}
+
+/// Solve A x = b (A SPD) to relative residual `tol`.
+pub fn cg<S: Scalar, O: Operator<S>>(
+    op: &mut O,
+    b: &[S],
+    x: &mut [S],
+    tol: f64,
+    max_iters: usize,
+) -> Result<CgStats> {
+    let n = op.nlocal();
+    crate::ensure!(b.len() == n && x.len() == n, DimMismatch, "cg sizes");
+    let bnorm = op.norm(b).max(1e-300);
+    let mut r = b.to_vec();
+    let mut q = vec![S::ZERO; n];
+    // r = b - A x
+    op.apply(x, &mut q);
+    for i in 0..n {
+        r[i] -= q[i];
+    }
+    let mut p = r.clone();
+    let mut rr = op.dot(&r, &r);
+    for it in 0..max_iters {
+        let rnorm = rr.re().sqrt();
+        if rnorm <= tol * bnorm {
+            return Ok(CgStats {
+                iterations: it,
+                final_residual: rnorm / bnorm,
+                converged: true,
+            });
+        }
+        op.apply(&p, &mut q);
+        let pq = op.dot(&p, &q);
+        let alpha = rr / pq;
+        slice_axpy(x, alpha, &p);
+        slice_axpy(&mut r, -alpha, &q);
+        let rr_new = op.dot(&r, &r);
+        let beta = rr_new / rr;
+        rr = rr_new;
+        // p = r + beta p
+        slice_axpby(&mut p, S::ONE, &r, beta);
+    }
+    Ok(CgStats {
+        iterations: max_iters,
+        final_residual: rr.re().sqrt() / bnorm,
+        converged: false,
+    })
+}
+
+/// CG over a local SELL matrix using the fused/augmented SpMV: computes
+/// q = A p and <p, q> in one matrix pass (DOT_XY), demonstrating the
+/// section 5.3 fusion inside a real solver. The matrix must be built with
+/// col_permute so vectors live in SELL order; b is permuted internally.
+pub fn cg_fused_local<S: Scalar>(
+    a: &Crs<S>,
+    b: &[S],
+    x_out: &mut [S],
+    c: usize,
+    sigma: usize,
+    tol: f64,
+    max_iters: usize,
+) -> Result<CgStats> {
+    let n = a.nrows();
+    crate::ensure!(b.len() == n && x_out.len() == n, DimMismatch, "cg sizes");
+    let sell = SellMat::from_crs_opts(a, c, sigma, true)?;
+    let np = sell.nrows_padded();
+    let perm = sell.perm();
+    let to_sell = |v: &[S]| -> DenseMat<S> {
+        DenseMat::from_fn(np, 1, Layout::RowMajor, |i, _| {
+            if perm[i] < n {
+                v[perm[i]]
+            } else {
+                S::ZERO
+            }
+        })
+    };
+    let bs = to_sell(b);
+    let mut x = to_sell(x_out);
+    let mut r = bs.clone();
+    let mut p = r.clone();
+    let mut q = DenseMat::<S>::zeros(np, 1, Layout::RowMajor);
+    let bnorm = bs.norm_fro().max(1e-300);
+    let mut rr = S::ZERO;
+    for i in 0..np {
+        rr += r.at(i, 0).conj() * r.at(i, 0);
+    }
+    let opts = SpmvOpts {
+        flags: flags::DOT_XY,
+        ..Default::default()
+    };
+    let mut iterations = 0;
+    let mut converged = false;
+    while iterations < max_iters {
+        if rr.re().sqrt() <= tol * bnorm {
+            converged = true;
+            break;
+        }
+        // fused: q = A p AND <p, q> in one pass
+        let dots = sell_spmv_fused(&sell, &p, &mut q, None, &opts)?;
+        let pq = dots.xy[0];
+        if pq.abs() < 1e-300 {
+            return Err(GhostError::NoConvergence("CG breakdown: <p,Ap> = 0".into()));
+        }
+        let alpha = rr / pq;
+        for i in 0..np {
+            let pv = p.at(i, 0);
+            let qv = q.at(i, 0);
+            *x.at_mut(i, 0) += alpha * pv;
+            *r.at_mut(i, 0) -= alpha * qv;
+        }
+        let mut rr_new = S::ZERO;
+        for i in 0..np {
+            rr_new += r.at(i, 0).conj() * r.at(i, 0);
+        }
+        let beta = rr_new / rr;
+        rr = rr_new;
+        for i in 0..np {
+            let rv = r.at(i, 0);
+            let pv = p.at(i, 0);
+            *p.at_mut(i, 0) = rv + beta * pv;
+        }
+        iterations += 1;
+    }
+    // un-permute the solution
+    for (i, &src) in perm.iter().enumerate() {
+        if src < n {
+            x_out[src] = x.at(i, 0);
+        }
+    }
+    Ok(CgStats {
+        iterations,
+        final_residual: rr.re().sqrt() / bnorm,
+        converged,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::context::Partition;
+    use crate::comm::{CommConfig, World};
+    use crate::core::Rng;
+    use crate::matgen;
+    use crate::solvers::{KernelMode, LocalSellOp, MpiOp};
+
+    fn residual(a: &Crs<f64>, x: &[f64], b: &[f64]) -> f64 {
+        let mut ax = vec![0.0; a.nrows()];
+        a.spmv(x, &mut ax);
+        ax.iter()
+            .zip(b)
+            .map(|(u, v)| (u - v) * (u - v))
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    #[test]
+    fn cg_solves_poisson_local() {
+        let a = matgen::poisson7::<f64>(6, 6, 6);
+        let n = a.nrows();
+        let mut rng = Rng::new(4);
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mut x = vec![0.0; n];
+        let mut op = LocalSellOp::new(&a, 8, 64, 2).unwrap();
+        let st = cg(&mut op, &b, &mut x, 1e-10, 1000).unwrap();
+        assert!(st.converged, "CG did not converge: {st:?}");
+        assert!(residual(&a, &x, &b) < 1e-7);
+    }
+
+    #[test]
+    fn cg_fused_matches_plain() {
+        let a = matgen::poisson7::<f64>(5, 5, 5);
+        let n = a.nrows();
+        let mut rng = Rng::new(5);
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mut x1 = vec![0.0; n];
+        let mut x2 = vec![0.0; n];
+        let mut op = LocalSellOp::new(&a, 8, 64, 1).unwrap();
+        let s1 = cg(&mut op, &b, &mut x1, 1e-10, 1000).unwrap();
+        let s2 = cg_fused_local(&a, &b, &mut x2, 8, 64, 1e-10, 1000).unwrap();
+        assert!(s1.converged && s2.converged);
+        // same solution (CG is deterministic; iteration counts may differ
+        // by the residual bookkeeping but solutions agree to tolerance)
+        for i in 0..n {
+            assert!((x1[i] - x2[i]).abs() < 1e-6, "i={i}");
+        }
+        assert!(residual(&a, &x2, &b) < 1e-7);
+    }
+
+    #[test]
+    fn cg_distributed_matches_local() {
+        let a = matgen::poisson7::<f64>(6, 6, 4);
+        let n = a.nrows();
+        let mut rng = Rng::new(6);
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mut x_local = vec![0.0; n];
+        let mut op = LocalSellOp::new(&a, 8, 64, 1).unwrap();
+        cg(&mut op, &b, &mut x_local, 1e-10, 2000).unwrap();
+        let aref = &a;
+        let bref = &b;
+        let xref = &x_local;
+        World::run(3, CommConfig::instant(), move |comm| {
+            let part = Partition::uniform(n, comm.nranks());
+            let mut op =
+                MpiOp::build(aref, &part, comm.clone(), KernelMode::Ghost, 1).unwrap();
+            let r0 = op.row0();
+            let nl = op.nlocal();
+            let bl = &bref[r0..r0 + nl];
+            let mut xl = vec![0.0; nl];
+            let st = cg(&mut op, bl, &mut xl, 1e-10, 2000).unwrap();
+            assert!(st.converged);
+            for i in 0..nl {
+                assert!(
+                    (xl[i] - xref[r0 + i]).abs() < 1e-6,
+                    "row {}",
+                    r0 + i
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn cg_reports_nonconvergence() {
+        let a = matgen::poisson7::<f64>(4, 4, 4);
+        let n = a.nrows();
+        let b = vec![1.0; n];
+        let mut x = vec![0.0; n];
+        let mut op = LocalSellOp::new(&a, 4, 16, 1).unwrap();
+        let st = cg(&mut op, &b, &mut x, 1e-14, 2).unwrap();
+        assert!(!st.converged);
+        assert_eq!(st.iterations, 2);
+    }
+}

@@ -1,0 +1,299 @@
+//! Chebyshev filter diagonalization (ChebFD, [38]) — the block-vector
+//! workhorse of section 5.2: repeatedly applies a Chebyshev polynomial
+//! filter p(H) to a block of vectors (SpMMV-dominated), then Rayleigh-
+//! Ritz extracts interior eigenpairs.
+//!
+//! This is a compact but functional ChebFD: enough to exercise block
+//! vectors + tall-skinny kernels in a real algorithm (the full production
+//! solver in the paper adds window management and locking).
+
+use super::Operator;
+use crate::core::{Result, Rng, Scalar};
+use crate::densemat::ops as dops;
+use crate::densemat::tsm;
+use crate::densemat::{DenseMat, Layout};
+
+/// Apply the degree-`deg` Zhou-Saad Chebyshev filter: eigendirections in
+/// the *damped* interval [damp_lo, damp_hi] are suppressed while those
+/// near `target` (outside the interval, typically the wanted end of the
+/// spectrum) grow like T_deg of their mapped coordinate — the standard
+/// ChebFD construction [38].
+pub fn chebyshev_filter<S: Scalar, O: Operator<S>>(
+    op: &mut O,
+    x: &mut DenseMat<S>,
+    deg: usize,
+    damp_lo: f64,
+    damp_hi: f64,
+    target: f64,
+) -> Result<()> {
+    crate::ensure!(damp_hi > damp_lo, InvalidArg, "bad damp interval");
+    crate::ensure!(
+        !(damp_lo..=damp_hi).contains(&target),
+        InvalidArg,
+        "target must lie outside the damped interval"
+    );
+    let n = op.nlocal();
+    crate::ensure!(x.nrows() == n, DimMismatch, "block vector rows");
+    // affine map sending [damp_lo, damp_hi] -> [-1, 1]; the target maps
+    // outside, where Chebyshev polynomials grow exponentially in deg
+    let e = (damp_hi - damp_lo) / 2.0;
+    let c = (damp_hi + damp_lo) / 2.0;
+    let sigma1 = e / (c - target);
+    let nv = x.ncols();
+    let mut sigma = sigma1;
+    // Y = (H - c)/e * X * sigma1
+    let mut y = DenseMat::<S>::zeros(n, nv, Layout::RowMajor);
+    apply_shifted(op, x, &mut y, c, e)?;
+    dops::scal(&mut y, S::from_f64(sigma1));
+    let mut x_prev = x.clone();
+    let mut x_cur = y;
+    for _ in 2..=deg.max(2) {
+        let sigma_new = 1.0 / (2.0 / sigma1 - sigma);
+        // X_next = 2 sigma_new / e (H - c) X_cur - sigma sigma_new X_prev
+        let mut t = DenseMat::<S>::zeros(n, nv, Layout::RowMajor);
+        apply_shifted(op, &x_cur, &mut t, c, e)?;
+        dops::scal(&mut t, S::from_f64(2.0 * sigma_new));
+        dops::axpy(&mut t, S::from_f64(-sigma * sigma_new), &x_prev)?;
+        x_prev = x_cur;
+        x_cur = t;
+        sigma = sigma_new;
+    }
+    *x = x_cur;
+    Ok(())
+}
+
+/// y[:, j] = (H - c I) x[:, j] / e, column by column through the operator.
+fn apply_shifted<S: Scalar, O: Operator<S>>(
+    op: &mut O,
+    x: &DenseMat<S>,
+    y: &mut DenseMat<S>,
+    c: f64,
+    e: f64,
+) -> Result<()> {
+    let n = op.nlocal();
+    let mut xv = vec![S::ZERO; n];
+    let mut yv = vec![S::ZERO; n];
+    for j in 0..x.ncols() {
+        for i in 0..n {
+            xv[i] = x.at(i, j);
+        }
+        op.apply(&xv, &mut yv);
+        for i in 0..n {
+            *y.at_mut(i, j) = (yv[i] - S::from_f64(c) * xv[i]) * S::from_f64(1.0 / e);
+        }
+    }
+    Ok(())
+}
+
+#[derive(Clone, Debug)]
+pub struct ChebFdResult {
+    pub eigenvalues: Vec<f64>,
+    pub residuals: Vec<f64>,
+    pub filter_applications: usize,
+}
+
+/// Compute eigenvalues of a *symmetric* operator inside [lo, hi] by
+/// filtered subspace iteration with Rayleigh-Ritz (block size `nb`).
+pub fn chebfd<S: Scalar, O: Operator<S>>(
+    op: &mut O,
+    lo: f64,
+    hi: f64,
+    lmin: f64,
+    lmax: f64,
+    nb: usize,
+    deg: usize,
+    sweeps: usize,
+    seed: u64,
+) -> Result<ChebFdResult> {
+    let n = op.nlocal();
+    let mut rng = Rng::new(seed);
+    let mut x = DenseMat::<S>::from_fn(n, nb, Layout::RowMajor, |_, _| {
+        S::from_f64(rng.normal())
+    });
+    // damp everything above the wanted window; aim at its center
+    let target = (lo + lmin.min(lo)) / 2.0;
+    let mut filter_applications = 0;
+    for _ in 0..sweeps {
+        chebyshev_filter(op, &mut x, deg, hi, lmax, target)?;
+        filter_applications += 1;
+        orthonormalize(&mut x)?;
+    }
+    // Rayleigh-Ritz: G = X^T (H X), S = X^T X (== I after orth)
+    let mut hx = DenseMat::<S>::zeros(n, nb, Layout::RowMajor);
+    {
+        let mut xv = vec![S::ZERO; n];
+        let mut yv = vec![S::ZERO; n];
+        for j in 0..nb {
+            for i in 0..n {
+                xv[i] = x.at(i, j);
+            }
+            op.apply(&xv, &mut yv);
+            for i in 0..n {
+                *hx.at_mut(i, j) = yv[i];
+            }
+        }
+    }
+    let mut g = DenseMat::<S>::zeros(nb, nb, Layout::RowMajor);
+    tsm::tsmttsm(&mut g, S::ONE, &x, &hx, S::ZERO)?;
+    // symmetric tridiagonalization shortcut: G is symmetric nb x nb;
+    // use Jacobi sweeps for eigenvalues (nb is small)
+    let eigenvalues = jacobi_eigenvalues(&g)?;
+    // residual estimate: ||H x_j - theta_j x_j|| with Ritz vectors omitted
+    // (diagnostic only; the full solver forms them)
+    let residuals = vec![f64::NAN; eigenvalues.len()];
+    Ok(ChebFdResult {
+        eigenvalues,
+        residuals,
+        filter_applications,
+    })
+}
+
+/// Modified Gram-Schmidt on block-vector columns.
+pub fn orthonormalize<S: Scalar>(x: &mut DenseMat<S>) -> Result<()> {
+    let n = x.nrows();
+    let nv = x.ncols();
+    for j in 0..nv {
+        for k in 0..j {
+            let mut proj = S::ZERO;
+            for i in 0..n {
+                proj += x.at(i, k).conj() * x.at(i, j);
+            }
+            for i in 0..n {
+                let v = x.at(i, k);
+                *x.at_mut(i, j) -= proj * v;
+            }
+        }
+        let mut norm = 0.0f64;
+        for i in 0..n {
+            norm += x.at(i, j).abs2();
+        }
+        let norm = norm.sqrt().max(1e-300);
+        for i in 0..n {
+            *x.at_mut(i, j) *= S::from_f64(1.0 / norm);
+        }
+    }
+    Ok(())
+}
+
+/// Cyclic Jacobi eigenvalues of a small symmetric matrix (real part).
+fn jacobi_eigenvalues<S: Scalar>(g: &DenseMat<S>) -> Result<Vec<f64>> {
+    let m = g.nrows();
+    let mut a: Vec<f64> = (0..m * m)
+        .map(|k| g.at(k / m, k % m).re())
+        .collect();
+    for _ in 0..50 {
+        let mut off = 0.0;
+        for i in 0..m {
+            for j in i + 1..m {
+                off += a[i * m + j] * a[i * m + j];
+            }
+        }
+        if off < 1e-24 {
+            break;
+        }
+        for p in 0..m {
+            for q in p + 1..m {
+                let apq = a[p * m + q];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let theta = (a[q * m + q] - a[p * m + p]) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                for k in 0..m {
+                    let (akp, akq) = (a[k * m + p], a[k * m + q]);
+                    a[k * m + p] = c * akp - s * akq;
+                    a[k * m + q] = s * akp + c * akq;
+                }
+                for k in 0..m {
+                    let (apk, aqk) = (a[p * m + k], a[q * m + k]);
+                    a[p * m + k] = c * apk - s * aqk;
+                    a[q * m + k] = s * apk + c * aqk;
+                }
+            }
+        }
+    }
+    let mut eigs: Vec<f64> = (0..m).map(|i| a[i * m + i]).collect();
+    eigs.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    Ok(eigs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solvers::LocalSellOp;
+
+    fn laplacian_1d(n: usize) -> crate::sparsemat::Crs<f64> {
+        crate::sparsemat::Crs::from_row_fn(n, n, |i, cols, vals| {
+            if i > 0 {
+                cols.push((i - 1) as i32);
+                vals.push(-1.0);
+            }
+            cols.push(i as i32);
+            vals.push(2.0);
+            if i + 1 < n {
+                cols.push((i + 1) as i32);
+                vals.push(-1.0);
+            }
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn filter_amplifies_window_directions() {
+        let n = 64;
+        let a = laplacian_1d(n);
+        let mut op = LocalSellOp::new(&a, 8, 64, 1).unwrap();
+        // damp [0.5, 4], amplify near 0 — the lower spectral end
+        let mut x = DenseMat::<f64>::random(n, 2, Layout::RowMajor, 3);
+        let before = x.norm_fro();
+        chebyshev_filter(&mut op, &mut x, 20, 0.5, 4.0, 0.0).unwrap();
+        let after = x.norm_fro();
+        // the filter amplifies inside the window; compare against the
+        // component near lmax which is strongly damped: apply H and check
+        // the Rayleigh quotient dropped toward the window
+        let mut hx = vec![0.0; n];
+        let xv: Vec<f64> = (0..n).map(|i| x.at(i, 0)).collect();
+        op.apply(&xv, &mut hx);
+        let rq = crate::solvers::local_dot(&xv, &hx)
+            / crate::solvers::local_dot(&xv, &xv).max(1e-300);
+        assert!(rq < 0.6, "Rayleigh quotient {rq} not pulled into window");
+        assert!(after.is_finite() && after > 0.0 && before > 0.0);
+    }
+
+    #[test]
+    fn chebfd_finds_lowest_eigenvalues() {
+        let n = 96;
+        let a = laplacian_1d(n);
+        let mut op = LocalSellOp::new(&a, 8, 64, 1).unwrap();
+        let lam = |k: usize| {
+            2.0 - 2.0 * ((k + 1) as f64 * std::f64::consts::PI / (n as f64 + 1.0)).cos()
+        };
+        let r = chebfd(&mut op, 0.0, lam(4) + 1e-3, 0.0, 4.0, 6, 40, 6, 5).unwrap();
+        // the lowest Ritz values approximate the lowest true eigenvalues
+        for k in 0..3 {
+            let got = r.eigenvalues[k];
+            let want = lam(k);
+            assert!(
+                (got - want).abs() < 5e-4,
+                "k={k}: {got} vs {want}"
+            );
+        }
+        assert_eq!(r.filter_applications, 6);
+    }
+
+    #[test]
+    fn orthonormalize_produces_identity_gram() {
+        let mut x = DenseMat::<f64>::random(50, 4, Layout::RowMajor, 9);
+        orthonormalize(&mut x).unwrap();
+        let mut g = DenseMat::<f64>::zeros(4, 4, Layout::RowMajor);
+        tsm::tsmttsm(&mut g, 1.0, &x, &x, 0.0).unwrap();
+        for i in 0..4 {
+            for j in 0..4 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((g.at(i, j) - want).abs() < 1e-10);
+            }
+        }
+    }
+}

@@ -1,0 +1,387 @@
+//! CRS (compressed row storage) — the baseline format. In SELL-C-sigma
+//! terms this is exactly SELL-1-1 (section 3.1), and the paper's Fig 6
+//! uses it as the vendor-library (MKL) reference format on CPUs.
+
+use crate::core::{Lidx, Result, Scalar};
+
+/// Process-local CRS matrix with 32-bit column indices (section 5.1:
+/// local quantities are 32-bit, global ones 64-bit).
+#[derive(Clone, Debug)]
+pub struct Crs<S> {
+    nrows: usize,
+    ncols: usize,
+    rowptr: Vec<usize>,
+    col: Vec<Lidx>,
+    val: Vec<S>,
+}
+
+impl<S: Scalar> Crs<S> {
+    pub fn new(
+        nrows: usize,
+        ncols: usize,
+        rowptr: Vec<usize>,
+        col: Vec<Lidx>,
+        val: Vec<S>,
+    ) -> Result<Self> {
+        crate::ensure!(
+            rowptr.len() == nrows + 1,
+            DimMismatch,
+            "rowptr len {} != nrows+1 {}",
+            rowptr.len(),
+            nrows + 1
+        );
+        crate::ensure!(
+            col.len() == val.len() && col.len() == *rowptr.last().unwrap(),
+            DimMismatch,
+            "col/val/nnz mismatch"
+        );
+        crate::ensure!(
+            rowptr.windows(2).all(|w| w[0] <= w[1]),
+            InvalidArg,
+            "rowptr not monotone"
+        );
+        for &c in &col {
+            crate::ensure!(
+                (c as usize) < ncols && c >= 0,
+                IndexOverflow,
+                "column {c} out of range {ncols}"
+            );
+        }
+        Ok(Crs {
+            nrows,
+            ncols,
+            rowptr,
+            col,
+            val,
+        })
+    }
+
+    /// Build row-by-row from a callback — the paper's preferred scalable
+    /// construction interface (section 3.1). The callback fills column
+    /// indices and values for one row.
+    pub fn from_row_fn(
+        nrows: usize,
+        ncols: usize,
+        mut f: impl FnMut(usize, &mut Vec<Lidx>, &mut Vec<S>),
+    ) -> Result<Self> {
+        let mut rowptr = Vec::with_capacity(nrows + 1);
+        rowptr.push(0usize);
+        let mut col = Vec::new();
+        let mut val = Vec::new();
+        let mut ctmp = Vec::new();
+        let mut vtmp = Vec::new();
+        for i in 0..nrows {
+            ctmp.clear();
+            vtmp.clear();
+            f(i, &mut ctmp, &mut vtmp);
+            crate::ensure!(
+                ctmp.len() == vtmp.len(),
+                DimMismatch,
+                "row {i}: {} cols vs {} vals",
+                ctmp.len(),
+                vtmp.len()
+            );
+            col.extend_from_slice(&ctmp);
+            val.extend_from_slice(&vtmp);
+            rowptr.push(col.len());
+        }
+        Crs::new(nrows, ncols, rowptr, col, val)
+    }
+
+    /// Dense constructor for tests.
+    pub fn from_dense(a: &[Vec<S>]) -> Self {
+        let nrows = a.len();
+        let ncols = a.first().map_or(0, |r| r.len());
+        Crs::from_row_fn(nrows, ncols, |i, cols, vals| {
+            for (j, &v) in a[i].iter().enumerate() {
+                if v != S::ZERO {
+                    cols.push(j as Lidx);
+                    vals.push(v);
+                }
+            }
+        })
+        .unwrap()
+    }
+
+    #[inline(always)]
+    pub fn nrows(&self) -> usize {
+        self.nrows
+    }
+    #[inline(always)]
+    pub fn ncols(&self) -> usize {
+        self.ncols
+    }
+    #[inline(always)]
+    pub fn nnz(&self) -> usize {
+        self.val.len()
+    }
+    #[inline(always)]
+    pub fn rowptr(&self) -> &[usize] {
+        &self.rowptr
+    }
+    #[inline(always)]
+    pub fn colidx(&self) -> &[Lidx] {
+        &self.col
+    }
+    #[inline(always)]
+    pub fn values(&self) -> &[S] {
+        &self.val
+    }
+    #[inline(always)]
+    pub fn values_mut(&mut self) -> &mut [S] {
+        &mut self.val
+    }
+
+    #[inline(always)]
+    pub fn row_len(&self, i: usize) -> usize {
+        self.rowptr[i + 1] - self.rowptr[i]
+    }
+
+    /// (cols, vals) of row i.
+    #[inline(always)]
+    pub fn row(&self, i: usize) -> (&[Lidx], &[S]) {
+        let (a, b) = (self.rowptr[i], self.rowptr[i + 1]);
+        (&self.col[a..b], &self.val[a..b])
+    }
+
+    pub fn max_row_len(&self) -> usize {
+        (0..self.nrows).map(|i| self.row_len(i)).max().unwrap_or(0)
+    }
+
+    /// Average nonzeros per row.
+    pub fn avg_row_len(&self) -> f64 {
+        if self.nrows == 0 {
+            0.0
+        } else {
+            self.nnz() as f64 / self.nrows as f64
+        }
+    }
+
+    /// Matrix bandwidth: max |i - j| over nonzeros.
+    pub fn bandwidth(&self) -> usize {
+        let mut bw = 0usize;
+        for i in 0..self.nrows {
+            for &c in self.row(i).0 {
+                bw = bw.max((c as i64 - i as i64).unsigned_abs() as usize);
+            }
+        }
+        bw
+    }
+
+    /// y = A x (dense slices). The baseline SpMV used as the "vendor CRS"
+    /// reference in Fig 6 / Fig 9.
+    pub fn spmv(&self, x: &[S], y: &mut [S]) {
+        debug_assert!(x.len() >= self.ncols);
+        debug_assert!(y.len() >= self.nrows);
+        for i in 0..self.nrows {
+            let (cols, vals) = self.row(i);
+            let mut acc = S::ZERO;
+            for (c, v) in cols.iter().zip(vals) {
+                acc += *v * x[*c as usize];
+            }
+            y[i] = acc;
+        }
+    }
+
+    /// Transpose (used by RCM and symmetry checks).
+    pub fn transpose(&self) -> Crs<S> {
+        let mut cnt = vec![0usize; self.ncols];
+        for &c in &self.col {
+            cnt[c as usize] += 1;
+        }
+        let mut rowptr = vec![0usize; self.ncols + 1];
+        for j in 0..self.ncols {
+            rowptr[j + 1] = rowptr[j] + cnt[j];
+        }
+        let mut col = vec![0 as Lidx; self.nnz()];
+        let mut val = vec![S::ZERO; self.nnz()];
+        let mut cur = rowptr.clone();
+        for i in 0..self.nrows {
+            let (cols, vals) = self.row(i);
+            for (c, v) in cols.iter().zip(vals) {
+                let p = cur[*c as usize];
+                col[p] = i as Lidx;
+                val[p] = *v;
+                cur[*c as usize] += 1;
+            }
+        }
+        Crs {
+            nrows: self.ncols,
+            ncols: self.nrows,
+            rowptr,
+            col,
+            val,
+        }
+    }
+
+    /// Structurally + numerically symmetric?
+    pub fn is_symmetric(&self, tol: f64) -> bool {
+        if self.nrows != self.ncols {
+            return false;
+        }
+        let t = self.transpose();
+        if t.rowptr != self.rowptr {
+            return false;
+        }
+        // same pattern per row (requires sorted columns in both)
+        let mut a = self.clone();
+        let mut b = t;
+        a.sort_rows();
+        b.sort_rows();
+        if a.col != b.col {
+            return false;
+        }
+        a.val
+            .iter()
+            .zip(&b.val)
+            .all(|(x, y)| (*x - *y).abs() <= tol)
+    }
+
+    /// Sort column indices within each row (canonical form).
+    pub fn sort_rows(&mut self) {
+        for i in 0..self.nrows {
+            let (a, b) = (self.rowptr[i], self.rowptr[i + 1]);
+            let mut pairs: Vec<(Lidx, S)> = self.col[a..b]
+                .iter()
+                .copied()
+                .zip(self.val[a..b].iter().copied())
+                .collect();
+            pairs.sort_by_key(|p| p.0);
+            for (k, (c, v)) in pairs.into_iter().enumerate() {
+                self.col[a + k] = c;
+                self.val[a + k] = v;
+            }
+        }
+    }
+
+    /// Apply a symmetric permutation: B[i,j] = A[perm[i], perm[j]].
+    /// `perm` maps new index -> old index.
+    pub fn permute_symmetric(&self, perm: &[usize]) -> Result<Crs<S>> {
+        crate::ensure!(
+            perm.len() == self.nrows && self.nrows == self.ncols,
+            DimMismatch,
+            "permutation length"
+        );
+        let mut inv = vec![0usize; perm.len()];
+        for (new, &old) in perm.iter().enumerate() {
+            inv[old] = new;
+        }
+        Crs::from_row_fn(self.nrows, self.ncols, |i, cols, vals| {
+            let (cs, vs) = self.row(perm[i]);
+            let mut pairs: Vec<(Lidx, S)> = cs
+                .iter()
+                .map(|&c| inv[c as usize] as Lidx)
+                .zip(vs.iter().copied())
+                .collect();
+            pairs.sort_by_key(|p| p.0);
+            for (c, v) in pairs {
+                cols.push(c);
+                vals.push(v);
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::prop::prop_check;
+    use crate::core::Rng;
+
+    pub fn random_crs(rng: &mut Rng, n: usize, avg: usize) -> Crs<f64> {
+        Crs::from_row_fn(n, n, |_i, cols, vals| {
+            let k = rng.range(1, (2 * avg).min(n) + 1);
+            for c in rng.sample_distinct(n, k) {
+                cols.push(c as Lidx);
+                vals.push(rng.normal());
+            }
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn dense_roundtrip_spmv() {
+        let a = vec![
+            vec![2.0, 0.0, 1.0],
+            vec![0.0, 0.0, 0.0],
+            vec![-1.0, 3.0, 0.0],
+        ];
+        let m = Crs::from_dense(&a);
+        assert_eq!(m.nnz(), 4);
+        assert_eq!(m.row_len(1), 0);
+        let x = [1.0, 2.0, 3.0];
+        let mut y = [0.0; 3];
+        m.spmv(&x, &mut y);
+        assert_eq!(y, [5.0, 0.0, 5.0]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        prop_check(20, 21, |g| {
+            let n = g.usize(1, 40);
+            let m = random_crs(g.rng(), n, 4);
+            let tt = m.transpose().transpose();
+            assert_eq!(m.rowptr(), tt.rowptr());
+            let mut a = m.clone();
+            let mut b = tt;
+            a.sort_rows();
+            b.sort_rows();
+            assert_eq!(a.colidx(), b.colidx());
+            assert_eq!(a.values(), b.values());
+        });
+    }
+
+    #[test]
+    fn symmetric_detection() {
+        let a = vec![
+            vec![2.0, 1.0, 0.0],
+            vec![1.0, 3.0, 0.5],
+            vec![0.0, 0.5, 1.0],
+        ];
+        assert!(Crs::from_dense(&a).is_symmetric(0.0));
+        let b = vec![vec![2.0, 1.0], vec![0.0, 3.0]];
+        assert!(!Crs::from_dense(&b).is_symmetric(0.0));
+    }
+
+    #[test]
+    fn permute_symmetric_preserves_spmv() {
+        prop_check(20, 23, |g| {
+            let n = g.usize(2, 30);
+            let m = random_crs(g.rng(), n, 3);
+            let mut perm: Vec<usize> = (0..n).collect();
+            g.rng().shuffle(&mut perm);
+            let p = m.permute_symmetric(&perm).unwrap();
+            let x: Vec<f64> = g.vec_normal(n);
+            // permuted spmv: y_p[i] = y[perm[i]] when x_p[i] = x[perm[i]]
+            let xp: Vec<f64> = perm.iter().map(|&o| x[o]).collect();
+            let mut y = vec![0.0; n];
+            let mut yp = vec![0.0; n];
+            m.spmv(&x, &mut y);
+            p.spmv(&xp, &mut yp);
+            for i in 0..n {
+                assert!((yp[i] - y[perm[i]]).abs() < 1e-10);
+            }
+        });
+    }
+
+    #[test]
+    fn validation_errors() {
+        assert!(Crs::<f64>::new(2, 2, vec![0, 1], vec![0], vec![1.0]).is_err());
+        assert!(Crs::<f64>::new(1, 2, vec![0, 1], vec![5], vec![1.0]).is_err());
+        assert!(Crs::<f64>::new(2, 2, vec![0, 2, 1], vec![0, 1], vec![1.0, 1.0]).is_err());
+    }
+
+    #[test]
+    fn bandwidth_and_stats() {
+        let a = vec![
+            vec![1.0, 0.0, 0.0, 2.0],
+            vec![0.0, 1.0, 0.0, 0.0],
+            vec![0.0, 0.0, 1.0, 0.0],
+            vec![3.0, 0.0, 0.0, 1.0],
+        ];
+        let m = Crs::from_dense(&a);
+        assert_eq!(m.bandwidth(), 3);
+        assert_eq!(m.max_row_len(), 2);
+        assert!((m.avg_row_len() - 1.5).abs() < 1e-15);
+    }
+}

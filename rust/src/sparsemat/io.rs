@@ -1,0 +1,352 @@
+//! Sparse matrix file I/O (section 3.1): Matrix Market exchange format
+//! and a CRS-shaped binary format. The paper notes file-based construction
+//! scales poorly — the row-callback interface is preferred — but both
+//! formats are supported for interoperability.
+
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use super::crs::Crs;
+use crate::core::{GhostError, Lidx, Result, Scalar};
+
+/// Read a Matrix Market coordinate file (real/integer/complex/pattern,
+/// general or symmetric).
+pub fn read_matrix_market<S: Scalar, P: AsRef<Path>>(path: P) -> Result<Crs<S>> {
+    let f = std::fs::File::open(path)?;
+    read_matrix_market_from(BufReader::new(f))
+}
+
+pub fn read_matrix_market_from<S: Scalar, R: BufRead>(mut r: R) -> Result<Crs<S>> {
+    let mut header = String::new();
+    r.read_line(&mut header)?;
+    let h = header.trim().to_lowercase();
+    if !h.starts_with("%%matrixmarket matrix coordinate") {
+        return Err(GhostError::Parse(format!("bad MatrixMarket header: {h}")));
+    }
+    let field = if h.contains("complex") {
+        "complex"
+    } else if h.contains("pattern") {
+        "pattern"
+    } else {
+        "real"
+    };
+    if field == "complex" && !S::IS_COMPLEX {
+        return Err(GhostError::Dtype(
+            "complex file read into real matrix".into(),
+        ));
+    }
+    let symmetric = h.contains("symmetric");
+    let skew = h.contains("skew-symmetric");
+    let hermitian = h.contains("hermitian");
+
+    let mut line = String::new();
+    // skip comments
+    loop {
+        line.clear();
+        if r.read_line(&mut line)? == 0 {
+            return Err(GhostError::Parse("unexpected EOF before sizes".into()));
+        }
+        if !line.trim_start().starts_with('%') && !line.trim().is_empty() {
+            break;
+        }
+    }
+    let sizes: Vec<usize> = line
+        .split_whitespace()
+        .map(|t| t.parse().map_err(|_| GhostError::Parse(format!("bad size {t}"))))
+        .collect::<Result<_>>()?;
+    if sizes.len() != 3 {
+        return Err(GhostError::Parse("size line must have 3 entries".into()));
+    }
+    let (nrows, ncols, nnz) = (sizes[0], sizes[1], sizes[2]);
+
+    let mut triples: Vec<(usize, usize, S)> = Vec::with_capacity(nnz);
+    for _ in 0..nnz {
+        line.clear();
+        loop {
+            if r.read_line(&mut line)? == 0 {
+                return Err(GhostError::Parse("unexpected EOF in entries".into()));
+            }
+            if !line.trim().is_empty() {
+                break;
+            }
+            line.clear();
+        }
+        let toks: Vec<&str> = line.split_whitespace().collect();
+        if toks.len() < 2 {
+            return Err(GhostError::Parse(format!("bad entry line: {line}")));
+        }
+        let i: usize = toks[0]
+            .parse::<usize>()
+            .map_err(|_| GhostError::Parse("bad row index".into()))?
+            - 1;
+        let j: usize = toks[1]
+            .parse::<usize>()
+            .map_err(|_| GhostError::Parse("bad col index".into()))?
+            - 1;
+        let v = match field {
+            "pattern" => S::ONE,
+            "complex" => {
+                let re: f64 = toks
+                    .get(2)
+                    .and_then(|t| t.parse().ok())
+                    .ok_or_else(|| GhostError::Parse("bad re".into()))?;
+                let im: f64 = toks
+                    .get(3)
+                    .and_then(|t| t.parse().ok())
+                    .ok_or_else(|| GhostError::Parse("bad im".into()))?;
+                S::from_re_im(re, im)
+            }
+            _ => {
+                let re: f64 = toks
+                    .get(2)
+                    .and_then(|t| t.parse().ok())
+                    .ok_or_else(|| GhostError::Parse("bad value".into()))?;
+                S::from_f64(re)
+            }
+        };
+        triples.push((i, j, v));
+        if (symmetric || skew || hermitian) && i != j {
+            let mv = if skew {
+                -v
+            } else if hermitian {
+                v.conj()
+            } else {
+                v
+            };
+            triples.push((j, i, mv));
+        }
+    }
+    crs_from_triples(nrows, ncols, triples)
+}
+
+fn crs_from_triples<S: Scalar>(
+    nrows: usize,
+    ncols: usize,
+    mut triples: Vec<(usize, usize, S)>,
+) -> Result<Crs<S>> {
+    triples.sort_by_key(|t| (t.0, t.1));
+    let mut k = 0usize;
+    Crs::from_row_fn(nrows, ncols, |i, cols, vals| {
+        while k < triples.len() && triples[k].0 == i {
+            cols.push(triples[k].1 as Lidx);
+            vals.push(triples[k].2);
+            k += 1;
+        }
+    })
+}
+
+/// Write a Matrix Market coordinate file (general; real or complex).
+pub fn write_matrix_market<S: Scalar, P: AsRef<Path>>(a: &Crs<S>, path: P) -> Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    let field = if S::IS_COMPLEX { "complex" } else { "real" };
+    writeln!(w, "%%MatrixMarket matrix coordinate {field} general")?;
+    writeln!(w, "{} {} {}", a.nrows(), a.ncols(), a.nnz())?;
+    for i in 0..a.nrows() {
+        let (cols, vals) = a.row(i);
+        for (c, v) in cols.iter().zip(vals) {
+            if S::IS_COMPLEX {
+                writeln!(w, "{} {} {:e} {:e}", i + 1, c + 1, v.re(), v.im())?;
+            } else {
+                writeln!(w, "{} {} {:e}", i + 1, c + 1, v.re())?;
+            }
+        }
+    }
+    Ok(())
+}
+
+const BIN_MAGIC: u32 = 0x47484F53; // "GHOS"
+
+/// Write the binary CRS format (magic, version, dtype tag, dims, rowptr
+/// as u64, col as i32, values as raw little-endian scalars).
+pub fn write_binary<S: Scalar, P: AsRef<Path>>(a: &Crs<S>, path: P) -> Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    w.write_all(&BIN_MAGIC.to_le_bytes())?;
+    w.write_all(&1u32.to_le_bytes())?; // version
+    let tag: u32 = match S::NAME {
+        "f32" => 0,
+        "f64" => 1,
+        "c32" => 2,
+        "c64" => 3,
+        _ => unreachable!(),
+    };
+    w.write_all(&tag.to_le_bytes())?;
+    w.write_all(&(a.nrows() as u64).to_le_bytes())?;
+    w.write_all(&(a.ncols() as u64).to_le_bytes())?;
+    w.write_all(&(a.nnz() as u64).to_le_bytes())?;
+    for &p in a.rowptr() {
+        w.write_all(&(p as u64).to_le_bytes())?;
+    }
+    for &c in a.colidx() {
+        w.write_all(&c.to_le_bytes())?;
+    }
+    // raw scalar bytes (Complex<T> is #[repr(C)] (re, im))
+    let vbytes = unsafe {
+        std::slice::from_raw_parts(
+            a.values().as_ptr() as *const u8,
+            a.values().len() * S::bytes(),
+        )
+    };
+    w.write_all(vbytes)?;
+    Ok(())
+}
+
+/// Read the binary CRS format written by [`write_binary`].
+pub fn read_binary<S: Scalar, P: AsRef<Path>>(path: P) -> Result<Crs<S>> {
+    let mut f = std::fs::File::open(path)?;
+    let mut buf = Vec::new();
+    f.read_to_end(&mut buf)?;
+    let mut off = 0usize;
+    let mut take = |n: usize| -> Result<&[u8]> {
+        if off + n > buf.len() {
+            return Err(GhostError::Parse("binary file truncated".into()));
+        }
+        let s = &buf[off..off + n];
+        off += n;
+        Ok(s)
+    };
+    let magic = u32::from_le_bytes(take(4)?.try_into().unwrap());
+    if magic != BIN_MAGIC {
+        return Err(GhostError::Parse("bad magic".into()));
+    }
+    let _version = u32::from_le_bytes(take(4)?.try_into().unwrap());
+    let tag = u32::from_le_bytes(take(4)?.try_into().unwrap());
+    let want_tag: u32 = match S::NAME {
+        "f32" => 0,
+        "f64" => 1,
+        "c32" => 2,
+        "c64" => 3,
+        _ => unreachable!(),
+    };
+    if tag != want_tag {
+        return Err(GhostError::Dtype(format!(
+            "file dtype tag {tag} != requested {want_tag}"
+        )));
+    }
+    let nrows = u64::from_le_bytes(take(8)?.try_into().unwrap()) as usize;
+    let ncols = u64::from_le_bytes(take(8)?.try_into().unwrap()) as usize;
+    let nnz = u64::from_le_bytes(take(8)?.try_into().unwrap()) as usize;
+    let mut rowptr = Vec::with_capacity(nrows + 1);
+    for _ in 0..=nrows {
+        rowptr.push(u64::from_le_bytes(take(8)?.try_into().unwrap()) as usize);
+    }
+    let mut col = Vec::with_capacity(nnz);
+    for _ in 0..nnz {
+        col.push(Lidx::from_le_bytes(take(4)?.try_into().unwrap()));
+    }
+    let vraw = take(nnz * S::bytes())?;
+    let mut val = vec![S::ZERO; nnz];
+    unsafe {
+        std::ptr::copy_nonoverlapping(
+            vraw.as_ptr(),
+            val.as_mut_ptr() as *mut u8,
+            nnz * S::bytes(),
+        );
+    }
+    Crs::new(nrows, ncols, rowptr, col, val)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{Rng, C64};
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("ghost_test_{}_{name}", std::process::id()));
+        p
+    }
+
+    fn random_crs(rng: &mut Rng, n: usize) -> Crs<f64> {
+        Crs::from_row_fn(n, n, |_i, cols, vals| {
+            let k = rng.range(1, 6.min(n) + 1);
+            for c in rng.sample_distinct(n, k) {
+                cols.push(c as Lidx);
+                vals.push(rng.normal());
+            }
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn matrix_market_roundtrip_real() {
+        let mut rng = Rng::new(1);
+        let a = random_crs(&mut rng, 25);
+        let p = tmpfile("mm_real.mtx");
+        write_matrix_market(&a, &p).unwrap();
+        let b: Crs<f64> = read_matrix_market(&p).unwrap();
+        assert_eq!(a.rowptr(), b.rowptr());
+        assert_eq!(a.colidx(), b.colidx());
+        for (x, y) in a.values().iter().zip(b.values()) {
+            assert!((x - y).abs() < 1e-12 * x.abs().max(1.0));
+        }
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn matrix_market_roundtrip_complex() {
+        let a = Crs::<C64>::from_dense(&[
+            vec![C64::new(1.0, -2.0), C64::ZERO],
+            vec![C64::new(0.5, 0.25), C64::new(3.0, 0.0)],
+        ]);
+        let p = tmpfile("mm_cplx.mtx");
+        write_matrix_market(&a, &p).unwrap();
+        let b: Crs<C64> = read_matrix_market(&p).unwrap();
+        assert_eq!(a.colidx(), b.colidx());
+        for (x, y) in a.values().iter().zip(b.values()) {
+            assert!((*x - *y).abs() < 1e-12);
+        }
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn matrix_market_symmetric_expansion() {
+        let text = "%%MatrixMarket matrix coordinate real symmetric\n\
+                    % comment line\n\
+                    3 3 3\n\
+                    1 1 2.0\n\
+                    2 1 -1.0\n\
+                    3 3 5.0\n";
+        let a: Crs<f64> =
+            read_matrix_market_from(std::io::BufReader::new(text.as_bytes())).unwrap();
+        assert_eq!(a.nnz(), 4); // one off-diagonal mirrored
+        assert!(a.is_symmetric(0.0));
+    }
+
+    #[test]
+    fn matrix_market_pattern() {
+        let text = "%%MatrixMarket matrix coordinate pattern general\n2 2 2\n1 2\n2 1\n";
+        let a: Crs<f64> =
+            read_matrix_market_from(std::io::BufReader::new(text.as_bytes())).unwrap();
+        assert_eq!(a.values(), &[1.0, 1.0]);
+    }
+
+    #[test]
+    fn bad_headers_rejected() {
+        let r = read_matrix_market_from::<f64, _>(std::io::BufReader::new(
+            "%%MatrixMarket matrix array real general\n".as_bytes(),
+        ));
+        assert!(r.is_err());
+        let r = read_matrix_market_from::<f64, _>(std::io::BufReader::new(
+            "%%MatrixMarket matrix coordinate complex general\n1 1 1\n1 1 1.0 2.0\n"
+                .as_bytes(),
+        ));
+        assert!(r.is_err(), "complex into f64 must fail");
+    }
+
+    #[test]
+    fn binary_roundtrip() {
+        let mut rng = Rng::new(2);
+        let a = random_crs(&mut rng, 40);
+        let p = tmpfile("bin.ghost");
+        write_binary(&a, &p).unwrap();
+        let b: Crs<f64> = read_binary(&p).unwrap();
+        assert_eq!(a.rowptr(), b.rowptr());
+        assert_eq!(a.colidx(), b.colidx());
+        assert_eq!(a.values(), b.values());
+        // wrong dtype must fail
+        assert!(read_binary::<f32, _>(&p).is_err());
+        std::fs::remove_file(p).ok();
+    }
+}

@@ -1,0 +1,10 @@
+//! Sparse matrices: SELL-C-sigma (the GHOST format, section 5.1), CRS
+//! (== SELL-1-1, the baseline), file I/O, and permutation support.
+
+pub mod crs;
+pub mod io;
+pub mod permute;
+pub mod sell;
+
+pub use crs::Crs;
+pub use sell::SellMat;

@@ -1,0 +1,225 @@
+//! Global/local permutation support (section 3.1).
+//!
+//! - RCM (reverse Cuthill-McKee) bandwidth reduction — the in-repo
+//!   stand-in for PT-SCOTCH's communication-reducing global reordering.
+//! - Greedy distance-1 coloring — the stand-in for ColPack, enabling
+//!   conflict-free row groups for Kaczmarz / Gauss-Seidel style updates.
+
+use super::crs::Crs;
+use crate::core::{Result, Scalar};
+
+/// Symmetrized adjacency (pattern of A + A^T without diagonal).
+fn adjacency<S: Scalar>(a: &Crs<S>) -> Vec<Vec<usize>> {
+    let n = a.nrows();
+    let mut adj = vec![Vec::new(); n];
+    for i in 0..n {
+        for &c in a.row(i).0 {
+            let j = c as usize;
+            if i != j && j < n {
+                adj[i].push(j);
+                adj[j].push(i);
+            }
+        }
+    }
+    for l in &mut adj {
+        l.sort_unstable();
+        l.dedup();
+    }
+    adj
+}
+
+/// Reverse Cuthill-McKee ordering. Returns `perm` with new-index ->
+/// old-index semantics (use with [`Crs::permute_symmetric`]).
+pub fn rcm<S: Scalar>(a: &Crs<S>) -> Result<Vec<usize>> {
+    crate::ensure!(
+        a.nrows() == a.ncols(),
+        InvalidArg,
+        "RCM needs a square matrix"
+    );
+    let n = a.nrows();
+    let adj = adjacency(a);
+    let deg: Vec<usize> = adj.iter().map(|l| l.len()).collect();
+    let mut visited = vec![false; n];
+    let mut order = Vec::with_capacity(n);
+    // process all connected components
+    let mut seeds: Vec<usize> = (0..n).collect();
+    seeds.sort_by_key(|&i| deg[i]);
+    for &seed in &seeds {
+        if visited[seed] {
+            continue;
+        }
+        // BFS from pseudo-peripheral-ish (min degree) seed
+        let mut queue = std::collections::VecDeque::new();
+        visited[seed] = true;
+        queue.push_back(seed);
+        while let Some(u) = queue.pop_front() {
+            order.push(u);
+            let mut nbrs: Vec<usize> = adj[u]
+                .iter()
+                .copied()
+                .filter(|&v| !visited[v])
+                .collect();
+            nbrs.sort_by_key(|&v| deg[v]);
+            for v in nbrs {
+                visited[v] = true;
+                queue.push_back(v);
+            }
+        }
+    }
+    order.reverse();
+    Ok(order)
+}
+
+/// Greedy distance-1 coloring of the matrix graph. Returns (colors,
+/// ncolors); rows with equal color share no nonzero pattern connection
+/// and may be updated concurrently (Kaczmarz / Gauss-Seidel, section 3.1).
+pub fn greedy_coloring<S: Scalar>(a: &Crs<S>) -> (Vec<usize>, usize) {
+    let n = a.nrows();
+    let adj = adjacency(a);
+    let mut color = vec![usize::MAX; n];
+    let mut ncolors = 0usize;
+    let mut forbidden = vec![usize::MAX; n.max(1)]; // stamp buffer
+    for i in 0..n {
+        for &j in &adj[i] {
+            if color[j] != usize::MAX {
+                forbidden[color[j]] = i;
+            }
+        }
+        let mut c = 0;
+        while c < n && forbidden[c] == i {
+            c += 1;
+        }
+        color[i] = c;
+        ncolors = ncolors.max(c + 1);
+    }
+    (color, ncolors)
+}
+
+/// Build a permutation grouping rows by color: all color-0 rows first,
+/// then color-1, etc. Returns (perm, group boundaries).
+pub fn coloring_permutation(colors: &[usize], ncolors: usize) -> (Vec<usize>, Vec<usize>) {
+    let mut perm = Vec::with_capacity(colors.len());
+    let mut bounds = Vec::with_capacity(ncolors + 1);
+    bounds.push(0);
+    for c in 0..ncolors {
+        for (i, &ci) in colors.iter().enumerate() {
+            if ci == c {
+                perm.push(i);
+            }
+        }
+        bounds.push(perm.len());
+    }
+    (perm, bounds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::prop::prop_check;
+    use crate::core::{Lidx, Rng};
+
+    fn random_sym(rng: &mut Rng, n: usize, avg: usize) -> Crs<f64> {
+        // symmetric pattern via A + A^T on a random matrix
+        let a = Crs::<f64>::from_row_fn(n, n, |i, cols, vals| {
+            cols.push(i as Lidx);
+            vals.push(4.0);
+            for c in rng.sample_distinct(n, avg.min(n)) {
+                if c != i {
+                    cols.push(c as Lidx);
+                    vals.push(1.0);
+                }
+            }
+        })
+        .unwrap();
+        let t = a.transpose();
+        Crs::from_row_fn(n, n, |i, cols, vals| {
+            let mut set: Vec<usize> = a.row(i).0.iter().map(|&c| c as usize).collect();
+            set.extend(t.row(i).0.iter().map(|&c| c as usize));
+            set.sort_unstable();
+            set.dedup();
+            for c in set {
+                cols.push(c as Lidx);
+                vals.push(if c == i { 4.0 } else { 1.0 });
+            }
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn rcm_is_permutation_and_reduces_bandwidth() {
+        let mut rng = Rng::new(3);
+        // a "shuffled band" matrix: band matrix under random relabeling
+        let n = 200;
+        let mut relabel: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut relabel);
+        let a = Crs::<f64>::from_row_fn(n, n, |i, cols, vals| {
+            let oi = relabel[i];
+            let mut cs: Vec<usize> = (-2i64..=2)
+                .map(|d| (oi as i64 + d).rem_euclid(n as i64) as usize)
+                .map(|oj| relabel.iter().position(|&x| x == oj).unwrap())
+                .collect();
+            cs.sort_unstable();
+            cs.dedup();
+            for c in cs {
+                cols.push(c as Lidx);
+                vals.push(1.0);
+            }
+        })
+        .unwrap();
+        let perm = rcm(&a).unwrap();
+        let mut sorted = perm.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..n).collect::<Vec<_>>());
+        let p = a.permute_symmetric(&perm).unwrap();
+        assert!(
+            p.bandwidth() < a.bandwidth(),
+            "rcm bandwidth {} !< original {}",
+            p.bandwidth(),
+            a.bandwidth()
+        );
+    }
+
+    #[test]
+    fn coloring_is_proper() {
+        prop_check(20, 41, |g| {
+            let n = g.usize(1, 60);
+            let a = random_sym(g.rng(), n, 4);
+            let (colors, nc) = greedy_coloring(&a);
+            assert!(nc >= 1 && colors.iter().all(|&c| c < nc));
+            // properness: adjacent rows (via pattern) differ in color
+            for i in 0..n {
+                for &c in a.row(i).0 {
+                    let j = c as usize;
+                    if i != j {
+                        assert_ne!(colors[i], colors[j], "rows {i},{j}");
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn coloring_permutation_groups() {
+        let mut rng = Rng::new(6);
+        let a = random_sym(&mut rng, 50, 3);
+        let (colors, nc) = greedy_coloring(&a);
+        let (perm, bounds) = coloring_permutation(&colors, nc);
+        assert_eq!(perm.len(), 50);
+        assert_eq!(bounds.len(), nc + 1);
+        for c in 0..nc {
+            for k in bounds[c]..bounds[c + 1] {
+                assert_eq!(colors[perm[k]], c);
+            }
+        }
+    }
+
+    #[test]
+    fn rcm_rejects_rectangular() {
+        let a = Crs::<f64>::from_row_fn(2, 3, |_i, cols, vals| {
+            cols.push(0);
+            vals.push(1.0);
+        })
+        .unwrap();
+        assert!(rcm(&a).is_err());
+    }
+}

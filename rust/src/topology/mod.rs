@@ -1,0 +1,319 @@
+//! Machine topology and device model — the hwloc stand-in (section 4.2)
+//! plus the Table 1 device presets used by the heterogeneous work
+//! distribution (section 4.1).
+//!
+//! The topology is *simulated*: a machine tree of sockets, cores and PUs
+//! (hardware threads) with NUMA nodes per socket. The tasking layer
+//! (taskq) reserves PUs from this map exactly like GHOST's pumap; on
+//! Linux the reservation can optionally be backed by real
+//! sched_setaffinity pinning when the simulated PU count does not exceed
+//! the physical one.
+
+use crate::core::Result;
+
+/// Device classes of the paper (section 2.1). The PHI runs in native
+/// mode, i.e., acts as a standalone CPU node.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum DeviceKind {
+    Cpu,
+    Gpu,
+    Phi,
+}
+
+impl std::fmt::Display for DeviceKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DeviceKind::Cpu => write!(f, "CPU"),
+            DeviceKind::Gpu => write!(f, "GPU"),
+            DeviceKind::Phi => write!(f, "PHI"),
+        }
+    }
+}
+
+/// One row of the paper's Table 1.
+#[derive(Clone, Debug)]
+pub struct DeviceSpec {
+    pub kind: DeviceKind,
+    pub model: &'static str,
+    pub clock_mhz: u32,
+    pub simd_bytes: u32,
+    pub cores: u32,
+    /// Attainable (STREAM) memory bandwidth, GB/s.
+    pub bandwidth_gbs: f64,
+    /// Theoretical peak, Gflop/s.
+    pub peak_gflops: f64,
+}
+
+/// Intel Xeon E5-2660 v2 (one socket of the Emmy node).
+pub fn emmy_cpu_socket() -> DeviceSpec {
+    DeviceSpec {
+        kind: DeviceKind::Cpu,
+        model: "Intel Xeon E5-2660 v2",
+        clock_mhz: 2200,
+        simd_bytes: 32,
+        cores: 10,
+        bandwidth_gbs: 50.0,
+        peak_gflops: 176.0,
+    }
+}
+
+/// Nvidia Tesla K20m.
+pub fn emmy_gpu() -> DeviceSpec {
+    DeviceSpec {
+        kind: DeviceKind::Gpu,
+        model: "Nvidia Tesla K20m",
+        clock_mhz: 706,
+        simd_bytes: 128, // 4-byte data; up to 512 for complex double
+        cores: 13,       // SMX count
+        bandwidth_gbs: 150.0,
+        peak_gflops: 1174.0,
+    }
+}
+
+/// Intel Xeon Phi 5110P.
+pub fn emmy_phi() -> DeviceSpec {
+    DeviceSpec {
+        kind: DeviceKind::Phi,
+        model: "Intel Xeon Phi 5110P",
+        clock_mhz: 1050,
+        simd_bytes: 64,
+        cores: 60,
+        bandwidth_gbs: 150.0,
+        peak_gflops: 1008.0,
+    }
+}
+
+/// One processing unit (hardware thread).
+#[derive(Clone, Copy, Debug)]
+pub struct Pu {
+    pub id: usize,
+    pub socket: usize,
+    pub core: usize,
+    pub smt: usize,
+    pub numanode: usize,
+}
+
+/// A simulated compute node: sockets x cores x SMT, plus attached
+/// accelerator devices.
+#[derive(Clone, Debug)]
+pub struct Machine {
+    pub sockets: usize,
+    pub cores_per_socket: usize,
+    pub smt: usize,
+    pus: Vec<Pu>,
+    pub accelerators: Vec<DeviceSpec>,
+    pub cpu_socket_spec: DeviceSpec,
+}
+
+impl Machine {
+    pub fn new(
+        sockets: usize,
+        cores_per_socket: usize,
+        smt: usize,
+        cpu_socket_spec: DeviceSpec,
+        accelerators: Vec<DeviceSpec>,
+    ) -> Self {
+        let mut pus = Vec::new();
+        // PU numbering: socket-major, then core, then SMT — one NUMA node
+        // per socket (the ccNUMA layout of Fig 1a)
+        for s in 0..sockets {
+            for c in 0..cores_per_socket {
+                for t in 0..smt {
+                    pus.push(Pu {
+                        id: pus.len(),
+                        socket: s,
+                        core: c,
+                        smt: t,
+                        numanode: s,
+                    });
+                }
+            }
+        }
+        Machine {
+            sockets,
+            cores_per_socket,
+            smt,
+            pus,
+            accelerators,
+            cpu_socket_spec,
+        }
+    }
+
+    /// The example node of Fig 1a: 2 sockets x 10 cores x 2 SMT,
+    /// one K20m GPU and one Xeon Phi.
+    pub fn emmy_node() -> Self {
+        Machine::new(
+            2,
+            10,
+            2,
+            emmy_cpu_socket(),
+            vec![emmy_gpu(), emmy_phi()],
+        )
+    }
+
+    /// A small node matching the actual test host (for fast CI runs).
+    pub fn small_node(ncores: usize) -> Self {
+        let mut spec = emmy_cpu_socket();
+        spec.cores = ncores as u32;
+        Machine::new(1, ncores.max(1), 1, spec, vec![emmy_gpu()])
+    }
+
+    pub fn num_pus(&self) -> usize {
+        self.pus.len()
+    }
+
+    pub fn pus(&self) -> &[Pu] {
+        &self.pus
+    }
+
+    pub fn numa_nodes(&self) -> usize {
+        self.sockets
+    }
+
+    /// PUs belonging to a NUMA node.
+    pub fn pus_of_numanode(&self, node: usize) -> Vec<usize> {
+        self.pus
+            .iter()
+            .filter(|p| p.numanode == node)
+            .map(|p| p.id)
+            .collect()
+    }
+}
+
+/// One planned process of the Fig 1b placement.
+#[derive(Clone, Debug)]
+pub struct ProcessPlan {
+    pub rank: usize,
+    pub device: DeviceSpec,
+    /// PUs assigned to this rank (empty for native-mode PHI, which lives
+    /// on its own card).
+    pub pus: Vec<usize>,
+}
+
+/// Suggest the process placement of section 4.1 / Fig 1b:
+/// - one process per CPU socket,
+/// - one process per GPU (stealing one core from the socket its PCIe bus
+///   hangs off — socket 0 here),
+/// - one native process per PHI (no host PUs).
+pub fn suggest_placement(m: &Machine) -> Result<Vec<ProcessPlan>> {
+    crate::ensure!(m.sockets >= 1, InvalidArg, "machine has no sockets");
+    let ngpu = m
+        .accelerators
+        .iter()
+        .filter(|d| d.kind == DeviceKind::Gpu)
+        .count();
+    let mut plans = Vec::new();
+    // CPU socket processes first (types assigned per section 4.1)
+    for s in 0..m.sockets {
+        let mut pus = m.pus_of_numanode(s);
+        if s == 0 {
+            // each GPU process steals one core (all SMT siblings) from
+            // socket 0
+            let steal = (ngpu * m.smt).min(pus.len().saturating_sub(m.smt));
+            pus.truncate(pus.len() - steal);
+        }
+        plans.push(ProcessPlan {
+            rank: plans.len(),
+            device: m.cpu_socket_spec.clone(),
+            pus,
+        });
+    }
+    for acc in &m.accelerators {
+        match acc.kind {
+            DeviceKind::Gpu => {
+                // host core driving the GPU: the stolen core on socket 0
+                let gpu_idx = plans
+                    .iter()
+                    .filter(|p| p.device.kind == DeviceKind::Gpu)
+                    .count();
+                let socket0 = m.pus_of_numanode(0);
+                let base = socket0.len() - (gpu_idx + 1) * m.smt;
+                let pus = socket0[base..base + m.smt].to_vec();
+                plans.push(ProcessPlan {
+                    rank: plans.len(),
+                    device: acc.clone(),
+                    pus,
+                });
+            }
+            DeviceKind::Phi => {
+                plans.push(ProcessPlan {
+                    rank: plans.len(),
+                    device: acc.clone(),
+                    pus: vec![],
+                });
+            }
+            DeviceKind::Cpu => {}
+        }
+    }
+    Ok(plans)
+}
+
+/// Bandwidth-proportional work weights for a set of devices
+/// (section 4.1: "the device-specific maximum attainable bandwidth ...
+/// has been chosen as the work distribution criterion").
+pub fn bandwidth_weights(devices: &[DeviceSpec]) -> Vec<f64> {
+    let total: f64 = devices.iter().map(|d| d.bandwidth_gbs).sum();
+    devices
+        .iter()
+        .map(|d| d.bandwidth_gbs / total)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn emmy_matches_table1() {
+        let m = Machine::emmy_node();
+        assert_eq!(m.num_pus(), 40); // 2 x 10 x 2
+        assert_eq!(m.numa_nodes(), 2);
+        assert_eq!(m.accelerators.len(), 2);
+        assert_eq!(m.cpu_socket_spec.bandwidth_gbs, 50.0);
+        assert_eq!(emmy_gpu().peak_gflops, 1174.0);
+        assert_eq!(emmy_phi().cores, 60);
+    }
+
+    #[test]
+    fn placement_fig1b() {
+        let m = Machine::emmy_node();
+        let plans = suggest_placement(&m).unwrap();
+        // 2 CPU sockets + 1 GPU + 1 PHI = 4 processes (Fig 1b)
+        assert_eq!(plans.len(), 4);
+        // process 0: socket 0 minus the GPU core
+        assert_eq!(plans[0].pus.len(), 18); // 20 PUs - 1 core (2 SMT)
+        assert_eq!(plans[1].pus.len(), 20);
+        // GPU process holds exactly one core's PUs, on socket 0
+        let gpu = plans.iter().find(|p| p.device.kind == DeviceKind::Gpu).unwrap();
+        assert_eq!(gpu.pus.len(), 2);
+        // PHI is native: no host PUs
+        let phi = plans.iter().find(|p| p.device.kind == DeviceKind::Phi).unwrap();
+        assert!(phi.pus.is_empty());
+        // no PU assigned twice
+        let mut all: Vec<usize> = plans.iter().flat_map(|p| p.pus.clone()).collect();
+        let before = all.len();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), before);
+    }
+
+    #[test]
+    fn weights_proportional_to_bandwidth() {
+        // CPU socket : GPU : PHI = 50 : 150 : 150
+        let devs = vec![emmy_cpu_socket(), emmy_gpu(), emmy_phi()];
+        let w = bandwidth_weights(&devs);
+        assert!((w[0] - 50.0 / 350.0).abs() < 1e-12);
+        assert!((w[1] - w[2]).abs() < 1e-12);
+        assert!((w.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn numa_partition() {
+        let m = Machine::emmy_node();
+        let n0 = m.pus_of_numanode(0);
+        let n1 = m.pus_of_numanode(1);
+        assert_eq!(n0.len(), 20);
+        assert_eq!(n1.len(), 20);
+        assert!(n0.iter().all(|p| !n1.contains(p)));
+    }
+}

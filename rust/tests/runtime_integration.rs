@@ -1,0 +1,230 @@
+//! Integration tests over the full AOT bridge: JAX/Pallas artifacts
+//! (built by `make artifacts`) loaded and executed through PJRT, checked
+//! against the native rust kernels. These tests require ./artifacts to
+//! exist; they are skipped (with a loud message) otherwise so plain
+//! `cargo test` works before the first `make artifacts`.
+
+use ghost::core::Rng;
+use ghost::densemat::{DenseMat, Layout};
+use ghost::kernels::spmv::{sell_spmv, SpmvVariant};
+use ghost::runtime::{lit, Runtime};
+use ghost::sparsemat::{Crs, SellMat};
+
+fn runtime() -> Option<Runtime> {
+    let dir = std::env::var("GHOST_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    if !std::path::Path::new(&dir).join("manifest.txt").exists() {
+        eprintln!("SKIP: no artifacts at {dir}; run `make artifacts` first");
+        return None;
+    }
+    Some(Runtime::load(dir).expect("artifact compilation failed"))
+}
+
+fn random_sell(seed: u64, nchunks: usize, c: usize, w: usize) -> SellMat<f64> {
+    let n = nchunks * c;
+    let mut rng = Rng::new(seed);
+    let a = Crs::from_row_fn(n, n, |_i, cols, vals| {
+        let k = rng.range(1, w + 1);
+        for col in rng.sample_distinct(n, k) {
+            cols.push(col as i32);
+            vals.push(rng.normal());
+        }
+    })
+    .unwrap();
+    SellMat::from_crs(&a, c, 1).unwrap()
+}
+
+#[test]
+fn manifest_lists_all_kernels() {
+    let Some(rt) = runtime() else { return };
+    let names = rt.names();
+    for want in [
+        "spmv_f64_s",
+        "spmv_f64_m",
+        "spmmv_f64_s_v4",
+        "fused_f64_s_v4",
+        "tsmttsm_f64_m4_k4",
+        "tsmm_f64_m4_k4",
+        "cg_step_f64_s",
+        "kpm_step_f64_s_v2",
+    ] {
+        assert!(names.contains(&want), "missing artifact {want}");
+    }
+    assert!(!rt.platform().is_empty());
+}
+
+#[test]
+fn pjrt_spmv_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let art = rt.get("spmv_f64_s").unwrap();
+    let (bn, c, bw, nx) = (
+        art.meta.get_usize("nchunks").unwrap(),
+        art.meta.get_usize("c").unwrap(),
+        art.meta.get_usize("w").unwrap(),
+        art.meta.get_usize("nx").unwrap(),
+    );
+    // a matrix smaller than the bucket: pad up
+    let sell = random_sell(1, bn / 2, c, bw.min(8));
+    let (val, col) = sell.to_slabs(bn, bw).unwrap();
+    let mut rng = Rng::new(2);
+    let mut x = vec![0.0f64; nx];
+    for v in x.iter_mut().take(sell.nrows()) {
+        *v = rng.normal();
+    }
+    let inputs = vec![
+        lit::f64_slab(&val, &[bn as i64, c as i64, bw as i64]).unwrap(),
+        lit::i32_slab(&col, &[bn as i64, c as i64, bw as i64]).unwrap(),
+        lit::f64_slab(&x, &[nx as i64]).unwrap(),
+    ];
+    let outs = art.execute_f64(&inputs).unwrap();
+    assert_eq!(outs.len(), 1);
+    let y_pjrt = &outs[0];
+    assert_eq!(y_pjrt.len(), bn * c);
+
+    let mut y_native = vec![0.0f64; sell.nrows_padded()];
+    sell_spmv(&sell, &x, &mut y_native, SpmvVariant::Vectorized);
+    for i in 0..sell.nrows_padded() {
+        assert!(
+            (y_pjrt[i] - y_native[i]).abs() < 1e-12,
+            "row {i}: {} vs {}",
+            y_pjrt[i],
+            y_native[i]
+        );
+    }
+    // padded rows beyond the real matrix must be exactly zero
+    for i in sell.nrows_padded()..bn * c {
+        assert_eq!(y_pjrt[i], 0.0, "padding row {i} leaked");
+    }
+}
+
+#[test]
+fn pjrt_tsmttsm_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let art = rt.get("tsmttsm_f64_m4_k4").unwrap();
+    let n = art.meta.get_usize("nrows").unwrap();
+    let (m, k) = (
+        art.meta.get_usize("m").unwrap(),
+        art.meta.get_usize("k").unwrap(),
+    );
+    let v = DenseMat::<f64>::random(n, m, Layout::RowMajor, 3);
+    let w = DenseMat::<f64>::random(n, k, Layout::RowMajor, 4);
+    let inputs = vec![
+        lit::f64_slab(v.as_slice(), &[n as i64, m as i64]).unwrap(),
+        lit::f64_slab(w.as_slice(), &[n as i64, k as i64]).unwrap(),
+    ];
+    let outs = art.execute_f64(&inputs).unwrap();
+    let x_pjrt = &outs[0];
+
+    let mut x_native = DenseMat::<f64>::zeros(m, k, Layout::RowMajor);
+    ghost::densemat::tsm::tsmttsm(&mut x_native, 1.0, &v, &w, 0.0).unwrap();
+    for jm in 0..m {
+        for jk in 0..k {
+            let want = x_native.at(jm, jk);
+            let got = x_pjrt[jm * k + jk];
+            assert!(
+                (got - want).abs() < 1e-8 * (1.0 + want.abs()),
+                "({jm},{jk}): {got} vs {want}"
+            );
+        }
+    }
+}
+
+#[test]
+fn pjrt_cg_step_converges() {
+    // Drive the whole-iteration CG artifact from rust on an SPD system.
+    let Some(rt) = runtime() else { return };
+    let art = rt.get("cg_step_f64_s").unwrap();
+    let (bn, c, bw) = (
+        art.meta.get_usize("nchunks").unwrap(),
+        art.meta.get_usize("c").unwrap(),
+        art.meta.get_usize("w").unwrap(),
+    );
+    let n = bn * c;
+    // SPD tridiagonal system fits any bucket width >= 3
+    assert!(bw >= 3);
+    let a = Crs::<f64>::from_row_fn(n, n, |i, cols, vals| {
+        if i > 0 {
+            cols.push((i - 1) as i32);
+            vals.push(-1.0);
+        }
+        cols.push(i as i32);
+        vals.push(2.5);
+        if i + 1 < n {
+            cols.push((i + 1) as i32);
+            vals.push(-1.0);
+        }
+    })
+    .unwrap();
+    let sell = SellMat::from_crs(&a, c, 1).unwrap();
+    let (val, col) = sell.to_slabs(bn, bw).unwrap();
+    let val_l = lit::f64_slab(&val, &[bn as i64, c as i64, bw as i64]).unwrap();
+    let col_l = lit::i32_slab(&col, &[bn as i64, c as i64, bw as i64]).unwrap();
+
+    let mut rng = Rng::new(9);
+    let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let mut x = vec![0.0f64; n];
+    let mut r = b.clone();
+    let mut p = b.clone();
+    let mut rr: f64 = r.iter().map(|v| v * v).sum();
+    for _ in 0..200 {
+        let inputs = vec![
+            val_l.clone(),
+            col_l.clone(),
+            lit::f64_slab(&x, &[n as i64]).unwrap(),
+            lit::f64_slab(&r, &[n as i64]).unwrap(),
+            lit::f64_slab(&p, &[n as i64]).unwrap(),
+            lit::f64_scalar(rr),
+        ];
+        let outs = art.execute_f64(&inputs).unwrap();
+        x = outs[0].clone();
+        r = outs[1].clone();
+        p = outs[2].clone();
+        rr = outs[3][0];
+        if rr < 1e-22 {
+            break;
+        }
+    }
+    // verify A x = b via the native kernel
+    let mut ax = vec![0.0f64; n];
+    a.spmv(&x, &mut ax);
+    let err: f64 = ax
+        .iter()
+        .zip(&b)
+        .map(|(u, v)| (u - v) * (u - v))
+        .sum::<f64>()
+        .sqrt();
+    assert!(err < 1e-8, "CG through PJRT did not converge: {err}");
+}
+
+#[test]
+fn hetero_cpu_gpu_pjrt_end_to_end() {
+    // One native "CPU socket" rank + one PJRT "GPU" rank computing a
+    // single distributed SpMV — the section 4.1 scenario in miniature.
+    let Some(_rt) = runtime() else { return };
+    use ghost::comm::CommConfig;
+    use ghost::hetero::{presets, HeteroSpmv};
+    let dir = std::env::var("GHOST_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    // matrix sized to fit the spmv_f64_m bucket on the GPU rank:
+    // bucket nchunks=256, C=32 -> up to 8192 gpu-local rows, W<=16
+    let a = ghost::matgen::poisson7::<f64>(16, 16, 16); // n=4096, W=7
+    let n = a.nrows();
+    let mut rng = Rng::new(11);
+    let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let engine = HeteroSpmv::new(presets::cpu_gpu(dir.into(), 2))
+        .with_comm(CommConfig::instant())
+        .with_time_scale(1e9);
+    let (reports, y) = engine.run(&a, &x, 2).unwrap();
+    assert_eq!(reports.len(), 2);
+    // GPU (150 GB/s) gets 3x the CPU socket rows (50 GB/s)
+    let ratio = reports[1].rows as f64 / reports[0].rows as f64;
+    assert!((ratio - 3.0).abs() < 0.2, "bandwidth weighting off: {ratio}");
+    let mut want = vec![0.0; n];
+    a.spmv(&x, &mut want);
+    for i in 0..n {
+        assert!(
+            (y[i] - want[i]).abs() < 1e-10,
+            "row {i}: {} vs {}",
+            y[i],
+            want[i]
+        );
+    }
+}

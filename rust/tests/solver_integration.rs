@@ -1,0 +1,132 @@
+//! Cross-module integration tests: solvers over the distributed fabric
+//! with both kernel modes, and mode-equivalence of the full eigensolver
+//! (the Fig 11 precondition: both backends walk the same convergence
+//! path, only kernel speed differs).
+
+use ghost::comm::context::Partition;
+use ghost::comm::{CommConfig, World};
+use ghost::core::Scalar;
+use ghost::matgen;
+use ghost::solvers::cg::cg;
+use ghost::solvers::krylov_schur::{eigs_largest_real, EigOpts};
+use ghost::solvers::lanczos::lanczos;
+use ghost::solvers::{KernelMode, LocalCrsOp, MpiOp, Operator};
+
+#[test]
+fn eigensolver_modes_agree_distributed() {
+    let a = matgen::matpde::<f64>(12);
+    let n = a.nrows();
+    let opts = EigOpts {
+        nev: 4,
+        m: 18,
+        tol: 1e-6,
+        max_restarts: 1000,
+        seed: 42,
+    };
+    // local reference
+    let mut op = LocalCrsOp::new(a.clone());
+    let r_ref = eigs_largest_real(&mut op, &opts).unwrap();
+    assert!(r_ref.converged);
+
+    for mode in [KernelMode::Ghost, KernelMode::Baseline] {
+        for nranks in [1usize, 3] {
+            let aref = &a;
+            let o = opts.clone();
+            let results = World::run(nranks, CommConfig::instant(), move |comm| {
+                let part = Partition::uniform(n, comm.nranks());
+                let mut op = MpiOp::build(aref, &part, comm.clone(), mode, 1).unwrap();
+                eigs_largest_real(&mut op, &o).unwrap()
+            });
+            let r = &results[0];
+            assert!(r.converged, "{mode:?}/{nranks}");
+            assert_eq!(r.eigenvalues.len(), r_ref.eigenvalues.len());
+            for (got, want) in r.eigenvalues.iter().zip(&r_ref.eigenvalues) {
+                assert!(
+                    (*got - *want).abs() < 1e-4 * want.abs().max(1.0),
+                    "{mode:?}/{nranks}: {got:?} vs {want:?}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn cg_modes_and_rank_counts_agree() {
+    let a = matgen::poisson7::<f64>(8, 8, 4);
+    let n = a.nrows();
+    let b: Vec<f64> = (0..n).map(|i| ((i * 7) % 13) as f64 - 6.0).collect();
+    let mut x_ref = vec![0.0; n];
+    let mut op = LocalCrsOp::new(a.clone());
+    let st = cg(&mut op, &b, &mut x_ref, 1e-11, 5000).unwrap();
+    assert!(st.converged);
+    for mode in [KernelMode::Ghost, KernelMode::Baseline] {
+        for nranks in [2usize, 4] {
+            let aref = &a;
+            let bref = &b;
+            let xref = &x_ref;
+            World::run(nranks, CommConfig::instant(), move |comm| {
+                let part = Partition::uniform(n, comm.nranks());
+                let mut op = MpiOp::build(aref, &part, comm.clone(), mode, 1).unwrap();
+                let r0 = op.row0();
+                let nl = op.nlocal();
+                let mut xl = vec![0.0; nl];
+                let st = cg(&mut op, &bref[r0..r0 + nl], &mut xl, 1e-11, 5000).unwrap();
+                assert!(st.converged);
+                for i in 0..nl {
+                    assert!(
+                        (xl[i] - xref[r0 + i]).abs() < 1e-7,
+                        "{mode:?}/{nranks} row {}",
+                        r0 + i
+                    );
+                }
+            });
+        }
+    }
+}
+
+#[test]
+fn lanczos_distributed_top_ritz_agrees() {
+    // start vectors differ between local and distributed runs (per-rank
+    // RNG streams), but the extreme Ritz value of a 40-step reorth
+    // Lanczos is converged well below the comparison tolerance
+    let a = matgen::anderson::<f64>(16, 2.0, 5);
+    let n = a.nrows();
+    let mut op = LocalCrsOp::new(a.clone());
+    let r_local = lanczos(&mut op, 40, true, 3).unwrap();
+    let aref = &a;
+    let results = World::run(2, CommConfig::instant(), move |comm| {
+        let part = Partition::uniform(n, comm.nranks());
+        let mut op = MpiOp::build(aref, &part, comm.clone(), KernelMode::Ghost, 1).unwrap();
+        lanczos(&mut op, 40, true, 3).unwrap()
+    });
+    let l1 = *r_local.eigenvalues.last().unwrap();
+    let l2 = *results[0].eigenvalues.last().unwrap();
+    assert!((l1 - l2).abs() < 1e-5, "{l1} vs {l2}");
+}
+
+#[test]
+fn deterministic_across_repeated_runs() {
+    // seeded solver: iteration counts must be identical between runs with
+    // the same rank count (the paper's reproducibility requirement)
+    let a = matgen::matpde::<f64>(10);
+    let n = a.nrows();
+    let opts = EigOpts {
+        nev: 3,
+        m: 15,
+        tol: 1e-6,
+        max_restarts: 500,
+        seed: 1,
+    };
+    let run = |nranks: usize| {
+        let aref = &a;
+        let o = opts.clone();
+        let results = World::run(nranks, CommConfig::instant(), move |comm| {
+            let part = Partition::uniform(n, comm.nranks());
+            let mut op =
+                MpiOp::build(aref, &part, comm.clone(), KernelMode::Ghost, 1).unwrap();
+            eigs_largest_real(&mut op, &o).unwrap()
+        });
+        (results[0].restarts, results[0].matvecs)
+    };
+    assert_eq!(run(2), run(2));
+}
