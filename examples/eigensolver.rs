@@ -15,12 +15,12 @@ use std::time::Instant;
 use ghost::benchutil::Table;
 use ghost::comm::context::Partition;
 use ghost::comm::{CommConfig, World};
-use ghost::core::{Scalar, C64};
+use ghost::core::{Result, Scalar, C64};
 use ghost::matgen;
 use ghost::solvers::krylov_schur::{eigs_largest_real, EigOpts};
 use ghost::solvers::{KernelMode, LocalCrsOp, MpiOp};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let grid: usize = std::env::args()
         .nth(1)
         .and_then(|s| s.parse().ok())
@@ -47,7 +47,11 @@ fn main() -> anyhow::Result<()> {
     let mut op = LocalCrsOp::new(a.clone());
     let r = eigs_largest_real(&mut op, &opts)?;
     let t_ref = t0.elapsed();
-    anyhow::ensure!(r.converged, "reference run did not converge: {r:?}");
+    ghost::ensure!(
+        r.converged,
+        NoConvergence,
+        "reference run did not converge: {r:?}"
+    );
     println!("\nconverged in {} restarts, {} matvecs, {:.2}s", r.restarts, r.matvecs, t_ref.as_secs_f64());
     let spectrum = if n <= 1600 { dense_spectrum(&a) } else { vec![] };
     println!(

@@ -8,10 +8,11 @@
 use std::time::Instant;
 
 use ghost::benchutil::Table;
+use ghost::core::Result;
 use ghost::matgen;
 use ghost::solvers::kpm::{kpm_dos, kpm_moments, KpmConfig, KpmVariant};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let mut args = std::env::args().skip(1);
     let l: usize = args.next().and_then(|s| s.parse().ok()).unwrap_or(96);
     let nmoments: usize = args.next().and_then(|s| s.parse().ok()).unwrap_or(128);
@@ -42,7 +43,11 @@ fn main() -> anyhow::Result<()> {
                 .zip(&mu)
                 .map(|(a, b)| (a - b).abs())
                 .fold(0.0f64, f64::max);
-            anyhow::ensure!(maxdiff < 1e-6 * l as f64, "variants disagree: {maxdiff}");
+            ghost::ensure!(
+                maxdiff < 1e-6 * l as f64,
+                NoConvergence,
+                "variants disagree: {maxdiff}"
+            );
         } else {
             mu_ref = Some(mu.clone());
             t_naive = dt;

@@ -4,13 +4,13 @@
 //!
 //!     cargo run --release --example quickstart
 
-use ghost::core::Rng;
+use ghost::core::{Result, Rng};
 use ghost::kernels::spmv::{sell_spmv, unpermute, SpmvVariant};
 use ghost::solvers::cg::cg;
 use ghost::solvers::LocalSellOp;
 use ghost::sparsemat::{Crs, SellMat};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     // 2-D Laplacian on a 64x64 grid, built row by row (ghost_sparsemat
     // construction callback)
     let nx = 64usize;

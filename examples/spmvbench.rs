@@ -3,22 +3,30 @@
 //! Reproduces the paper's listings: CPU-socket-only, GPU-only, CPU+GPU
 //! with bandwidth weights (1 : 2.75 in the paper, derived from the
 //! single-device runs), and the full node including the PHI. "GPU"/"PHI"
-//! ranks execute through the AOT-compiled JAX/Pallas artifact via PJRT;
-//! CPU ranks run the native SELL kernels. Each device enforces its
-//! Table 1 bandwidth as a modeled time floor, so the *relative* numbers
-//! follow the paper (see DESIGN.md "Performance realism").
+//! ranks execute through the AOT-compiled JAX/Pallas artifact via PJRT
+//! (requires the `pjrt` feature); CPU ranks run the native SELL kernels.
+//! Each device enforces its Table 1 bandwidth as a modeled time floor, so
+//! the *relative* numbers follow the paper (see DESIGN.md "Performance
+//! realism").
+//!
+//! The SELL parameters are no longer hard-coded: the perfmodel-guided
+//! autotuner (`ghost::tune`) sweeps (C, sigma, variant) for the benchmark
+//! matrix, and a second tune of the same matrix reuses the cached
+//! decision (demonstrated below before the engine runs).
 //!
 //!     cargo run --release --example spmvbench [-- <iters>]
 
 use ghost::benchutil::Table;
 use ghost::comm::CommConfig;
+use ghost::core::Result;
 use ghost::hetero::{presets, Backend, HeteroSpmv, RankSetup};
 use ghost::matgen;
 use ghost::perfmodel;
 use ghost::sparsemat::SellMat;
 use ghost::topology;
+use ghost::tune;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let iters: usize = std::env::args()
         .nth(1)
         .and_then(|s| s.parse().ok())
@@ -34,14 +42,43 @@ fn main() -> anyhow::Result<()> {
     // ML_Geer stand-in: 3-D stencil, W<=16 so it fits the spmv_f64_m bucket
     let a = matgen::poisson7::<f64>(16, 16, 16);
     let n = a.nrows();
+
+    // --- autotune (C, sigma, variant): the perfmodel prunes dominated
+    // candidates, the survivors are measured, and the winner is cached by
+    // sparsity fingerprint
+    let first = tune::tune(&a)?;
     println!(
-        "matrix: poisson7 (ML_Geer stand-in), n = {n}, nnz = {}, SELL-32-1",
-        a.nnz()
+        "autotune: SELL-{}-{} {:?} — {:.2} Gflop/s measured vs {:.2} roofline \
+         ({} candidates measured, {} pruned by the model, cache {})",
+        first.config.c,
+        first.config.sigma,
+        first.config.variant,
+        first.measured_gflops,
+        first.model_gflops,
+        first.candidates_measured,
+        first.candidates_pruned,
+        if first.cache_hit { "hit" } else { "miss" },
+    );
+    // the second solve of the same matrix reuses the cached decision
+    let second = tune::tune(&a)?;
+    assert!(second.cache_hit, "repeated tune must hit the cache");
+    assert_eq!(second.config, first.config);
+    println!(
+        "autotune (second solve): cache hit, sweep skipped, same SELL-{}-{} {:?}",
+        second.config.c, second.config.sigma, second.config.variant
+    );
+
+    let cfg = first.config;
+    println!(
+        "\nmatrix: poisson7 (ML_Geer stand-in), n = {n}, nnz = {}, SELL-{}-{}",
+        a.nnz(),
+        cfg.c,
+        cfg.sigma
     );
     let x = vec![1.0f64; n];
 
-    // roofline context per device (Table 1)
-    let sell = SellMat::from_crs(&a, 32, 1)?;
+    // roofline context per device (Table 1), on the tuned storage
+    let sell = SellMat::from_crs(&a, cfg.c, cfg.sigma)?;
     for dev in [
         topology::emmy_cpu_socket(),
         topology::emmy_gpu(),
@@ -68,12 +105,22 @@ fn main() -> anyhow::Result<()> {
     let scale = 2e-4;
 
     let mut run = |name: &str, setups: Vec<RankSetup>, weights: Option<Vec<f64>>| {
-        let mut engine = HeteroSpmv::new(setups)
+        let engine = match HeteroSpmv::new(setups)
             .with_comm(CommConfig::default())
-            .with_time_scale(scale);
-        if let Some(w) = weights {
-            engine = engine.with_weights(w);
-        }
+            .with_time_scale(scale)
+            .with_autotune(&a)
+        {
+            Ok(e) => e,
+            Err(e) => {
+                eprintln!("{name}: autotune FAILED: {e}");
+                return;
+            }
+        };
+        let engine = if let Some(w) = weights {
+            engine.with_weights(w)
+        } else {
+            engine
+        };
         match engine.run(&a, &x, iters) {
             Ok((reports, y)) => {
                 // validate the heterogeneous result
@@ -115,12 +162,12 @@ fn main() -> anyhow::Result<()> {
         let dir = std::path::PathBuf::from(&artifact_dir);
         run(
             "GPU only (PJRT)",
-            vec![RankSetup {
-                device: topology::emmy_gpu(),
-                backend: Backend::Pjrt {
+            vec![RankSetup::new(
+                topology::emmy_gpu(),
+                Backend::Pjrt {
                     artifact_dir: dir.clone(),
                 },
-            }],
+            )],
             None,
         );
         // paper: CPU:GPU = 1 : 2.75 measured; bandwidth weights 50:150

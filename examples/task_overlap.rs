@@ -19,11 +19,12 @@ use ghost::benchutil::Table;
 use ghost::comm::context::{build_contexts, Partition};
 use ghost::comm::exchange::{dist_spmv, DistMatrix, OverlapMode};
 use ghost::comm::{CommConfig, World};
+use ghost::core::Result;
 use ghost::matgen;
 use ghost::taskq::TaskQueue;
 use ghost::topology::Machine;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let mut args = std::env::args().skip(1);
     let n: usize = args.next().and_then(|s| s.parse().ok()).unwrap_or(40_000);
     let iters: usize = args.next().and_then(|s| s.parse().ok()).unwrap_or(30);

@@ -1,0 +1,3 @@
+# Marks python/tests as a package so pytest anchors module resolution at
+# python/ — `import compile` and the relative `.util` imports both resolve
+# regardless of the invocation directory.

@@ -1,0 +1,49 @@
+# Collection guard for the JAX/Pallas AOT test suite.
+#
+# The suite needs `jax` (every kernel/AOT module) and `hypothesis` (the
+# property sweeps). CI runners without the accelerator stack must SKIP
+# those modules, not error: the rust tier-1 gate owns correctness there,
+# this suite owns the L1/L2 layers wherever jax exists. A plain
+# `importorskip` in a conftest aborts pytest with a usage error, so the
+# guard works through `collect_ignore` instead; test_environment.py always
+# collects, keeping the exit code at 0 even when everything else is
+# ignored.
+
+import os
+import sys
+
+# Anchor `import compile` at python/ no matter where pytest was launched.
+_PYTHON_DIR = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _PYTHON_DIR not in sys.path:
+    sys.path.insert(0, _PYTHON_DIR)
+
+try:
+    import jax  # noqa: F401
+
+    HAVE_JAX = True
+except ImportError:
+    HAVE_JAX = False
+
+try:
+    import hypothesis  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+collect_ignore = []
+if not HAVE_JAX:
+    # every module below imports compile/, which imports jax at load time
+    collect_ignore += [
+        "test_aot.py",
+        "test_model.py",
+        "test_sell_kernels.py",
+        "test_tsm_kernels.py",
+    ]
+elif not HAVE_HYPOTHESIS:
+    # the property-based sweeps additionally need hypothesis
+    collect_ignore += [
+        "test_model.py",
+        "test_sell_kernels.py",
+        "test_tsm_kernels.py",
+    ]

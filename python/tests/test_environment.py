@@ -1,0 +1,32 @@
+# Always-collectable smoke test: reports (and survives) runners without
+# the jax/hypothesis stack. Keeps `python -m pytest python/tests -q` green
+# with an explicit skip record instead of a collection error or the
+# "no tests collected" exit code when conftest ignores every other module.
+
+import os
+
+import pytest
+
+from . import conftest
+
+
+def test_repo_layout_present():
+    python_dir = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    assert os.path.isdir(os.path.join(python_dir, "compile"))
+    assert os.path.isfile(os.path.join(python_dir, "compile", "aot.py"))
+
+
+def test_jax_stack_or_explicit_skip():
+    if not conftest.HAVE_JAX:
+        pytest.skip("jax not installed: kernel/AOT test modules were ignored")
+    import jax
+
+    assert jax.__version__
+
+
+def test_hypothesis_or_explicit_skip():
+    if not conftest.HAVE_HYPOTHESIS:
+        pytest.skip("hypothesis not installed: property-test modules were ignored")
+    import hypothesis
+
+    assert hypothesis.__version__

@@ -105,11 +105,22 @@ pub fn dist_spmv<S: Scalar>(
     nthreads: usize,
     taskq: Option<&TaskQueue>,
 ) -> Result<()> {
-    dist_spmv_floored(dm, comm, xbuf, y_sell, mode, nthreads, taskq, None)
+    dist_spmv_floored(
+        dm,
+        comm,
+        xbuf,
+        y_sell,
+        mode,
+        nthreads,
+        taskq,
+        None,
+        SpmvVariant::Vectorized,
+    )
 }
 
 /// [`dist_spmv`] with an optional modeled *compute* time floor (device
-/// model for scaling studies, DESIGN.md "Performance realism"). The floor
+/// model for scaling studies, DESIGN.md "Performance realism") and an
+/// explicit kernel [`SpmvVariant`] (autotuned by `ghost::tune`). The floor
 /// is charged where the compute happens: inside the overlap region for
 /// the local part, after the exchange for the remote part — so overlap
 /// modes genuinely hide communication behind (modeled) compute while
@@ -124,6 +135,7 @@ pub fn dist_spmv_floored<S: Scalar>(
     nthreads: usize,
     taskq: Option<&TaskQueue>,
     compute_floor: Option<std::time::Duration>,
+    variant: SpmvVariant,
 ) -> Result<()> {
     crate::ensure!(
         xbuf.len() >= dm.xbuf_len(),
@@ -156,27 +168,21 @@ pub fn dist_spmv_floored<S: Scalar>(
             post_sends(dm, comm, xbuf, /*nonblocking=*/ false)?;
             receive_halo(dm, comm, xbuf)?;
             let t0 = std::time::Instant::now();
-            sell_spmv_mt(&dm.full, xbuf, y_sell, SpmvVariant::Vectorized, nthreads);
+            sell_spmv_mt(&dm.full, xbuf, y_sell, variant, nthreads);
             floored(t0, compute_floor);
         }
         OverlapMode::NaiveOverlap => {
             // rely on MPI to progress the Isends while we compute
             let reqs = post_sends(dm, comm, xbuf, /*nonblocking=*/ true)?;
             let t0 = std::time::Instant::now();
-            sell_spmv_mt(
-                &dm.local_part,
-                xbuf,
-                y_sell,
-                SpmvVariant::Vectorized,
-                nthreads,
-            );
+            sell_spmv_mt(&dm.local_part, xbuf, y_sell, variant, nthreads);
             floored(t0, floor_of(dm.local_part.nnz()));
             for r in reqs {
                 r.wait()?;
             }
             receive_halo(dm, comm, xbuf)?;
             let t0 = std::time::Instant::now();
-            add_remote(dm, xbuf, y_sell, nthreads);
+            add_remote(dm, xbuf, y_sell, nthreads, variant);
             floored(t0, floor_of(dm.remote_part.nnz()));
         }
         OverlapMode::TaskMode => {
@@ -227,7 +233,7 @@ pub fn dist_spmv_floored<S: Scalar>(
                 &dm.local_part,
                 xbuf,
                 y_sell,
-                SpmvVariant::Vectorized,
+                variant,
                 nthreads.saturating_sub(1).max(1),
             );
             floored(t0, floor_of(dm.local_part.nnz()));
@@ -237,7 +243,7 @@ pub fn dist_spmv_floored<S: Scalar>(
                     .copy_from_slice(&data);
             }
             let t0 = std::time::Instant::now();
-            add_remote(dm, xbuf, y_sell, nthreads);
+            add_remote(dm, xbuf, y_sell, nthreads, variant);
             floored(t0, floor_of(dm.remote_part.nnz()));
         }
     }
@@ -283,16 +289,16 @@ fn receive_halo<S: Scalar>(dm: &DistMatrix<S>, comm: &Comm, xbuf: &mut [S]) -> R
     Ok(())
 }
 
-fn add_remote<S: Scalar>(dm: &DistMatrix<S>, xbuf: &[S], y_sell: &mut [S], nthreads: usize) {
+fn add_remote<S: Scalar>(
+    dm: &DistMatrix<S>,
+    xbuf: &[S],
+    y_sell: &mut [S],
+    nthreads: usize,
+    variant: SpmvVariant,
+) {
     // remote part: compute into a temp and add (rows share the SELL perm)
     let mut tmp = vec![S::ZERO; dm.remote_part.nrows_padded()];
-    sell_spmv_mt(
-        &dm.remote_part,
-        xbuf,
-        &mut tmp,
-        SpmvVariant::Vectorized,
-        nthreads,
-    );
+    sell_spmv_mt(&dm.remote_part, xbuf, &mut tmp, variant, nthreads);
     for (y, t) in y_sell.iter_mut().zip(&tmp) {
         *y += *t;
     }

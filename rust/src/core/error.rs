@@ -1,36 +1,60 @@
 //! Library error type. Mirrors GHOST's error codes (ghost_error) but as a
-//! proper Rust enum.
+//! proper Rust enum. Implemented by hand — thiserror is not vendorable
+//! offline and the derive buys little at this size.
 
-use thiserror::Error;
+use std::fmt;
 
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum GhostError {
-    #[error("invalid argument: {0}")]
     InvalidArg(String),
-    #[error("dimension mismatch: {0}")]
     DimMismatch(String),
-    #[error("index overflow: {0}")]
     IndexOverflow(String),
-    #[error("unsupported dtype for this path: {0}")]
     Dtype(String),
-    #[error("i/o error: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("parse error: {0}")]
+    Io(std::io::Error),
     Parse(String),
-    #[error("runtime (PJRT/XLA) error: {0}")]
     Runtime(String),
-    #[error("artifact not found: {0}")]
     ArtifactNotFound(String),
-    #[error("communication error: {0}")]
     Comm(String),
-    #[error("task error: {0}")]
     Task(String),
-    #[error("solver did not converge: {0}")]
     NoConvergence(String),
+}
+
+impl fmt::Display for GhostError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            GhostError::InvalidArg(m) => write!(f, "invalid argument: {m}"),
+            GhostError::DimMismatch(m) => write!(f, "dimension mismatch: {m}"),
+            GhostError::IndexOverflow(m) => write!(f, "index overflow: {m}"),
+            GhostError::Dtype(m) => write!(f, "unsupported dtype for this path: {m}"),
+            GhostError::Io(e) => write!(f, "i/o error: {e}"),
+            GhostError::Parse(m) => write!(f, "parse error: {m}"),
+            GhostError::Runtime(m) => write!(f, "runtime (PJRT/XLA) error: {m}"),
+            GhostError::ArtifactNotFound(m) => write!(f, "artifact not found: {m}"),
+            GhostError::Comm(m) => write!(f, "communication error: {m}"),
+            GhostError::Task(m) => write!(f, "task error: {m}"),
+            GhostError::NoConvergence(m) => write!(f, "solver did not converge: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for GhostError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            GhostError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for GhostError {
+    fn from(e: std::io::Error) -> Self {
+        GhostError::Io(e)
+    }
 }
 
 pub type Result<T> = std::result::Result<T, GhostError>;
 
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for GhostError {
     fn from(e: xla::Error) -> Self {
         GhostError::Runtime(e.to_string())
@@ -44,4 +68,30 @@ macro_rules! ensure {
             return Err($crate::core::error::GhostError::$kind(format!($($arg)*)));
         }
     };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_matches_ghost_error_codes() {
+        assert_eq!(
+            GhostError::InvalidArg("x".into()).to_string(),
+            "invalid argument: x"
+        );
+        assert_eq!(
+            GhostError::NoConvergence("cg".into()).to_string(),
+            "solver did not converge: cg"
+        );
+    }
+
+    #[test]
+    fn io_errors_convert_and_chain() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: GhostError = io.into();
+        assert!(e.to_string().contains("gone"));
+        use std::error::Error;
+        assert!(e.source().is_some());
+    }
 }

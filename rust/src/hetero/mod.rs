@@ -17,9 +17,10 @@ use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
 use crate::comm::context::{build_contexts, Partition};
-use crate::comm::exchange::{dist_spmv, DistMatrix, OverlapMode};
+use crate::comm::exchange::{dist_spmv, dist_spmv_floored, DistMatrix, OverlapMode};
 use crate::comm::{Comm, CommConfig, World};
 use crate::core::{Result, Scalar};
+use crate::kernels::spmv::SpmvVariant;
 use crate::runtime::Runtime;
 use crate::sparsemat::Crs;
 use crate::topology::{bandwidth_weights, DeviceKind, DeviceSpec};
@@ -29,17 +30,32 @@ use crate::topology::{bandwidth_weights, DeviceKind, DeviceSpec};
 /// PJRT client handles are not Send (Rc + raw pointers inside the xla
 /// crate), so a Pjrt backend carries the artifact directory and each rank
 /// thread compiles its own runtime — exactly like a real accelerator
-/// process owning its device context.
+/// process owning its device context. (Executing the artifacts requires
+/// the `pjrt` cargo feature; without it a Pjrt rank fails at run time
+/// with a descriptive error.)
 #[derive(Clone)]
 pub enum Backend {
     Native { nthreads: usize },
     Pjrt { artifact_dir: PathBuf },
 }
 
-/// Per-rank configuration for a heterogeneous run.
+/// Per-rank configuration for a heterogeneous run: the device model, the
+/// execution backend and the native-kernel variant the rank uses
+/// (autotuned by [`HeteroSpmv::with_autotune`]).
 pub struct RankSetup {
     pub device: DeviceSpec,
     pub backend: Backend,
+    pub variant: SpmvVariant,
+}
+
+impl RankSetup {
+    pub fn new(device: DeviceSpec, backend: Backend) -> Self {
+        RankSetup {
+            device,
+            backend,
+            variant: SpmvVariant::Vectorized,
+        }
+    }
 }
 
 /// Time-throttle scale: model_seconds = bytes / (bandwidth_gbs * SCALE).
@@ -104,6 +120,21 @@ impl HeteroSpmv {
     pub fn with_time_scale(mut self, s: f64) -> Self {
         self.time_scale = s;
         self
+    }
+
+    /// Autotune (C, sigma, variant) for `a` through [`crate::tune`] and
+    /// apply the decision to this engine: the SELL parameters replace the
+    /// hard-coded defaults and every Native rank adopts the tuned kernel
+    /// variant. Repeated runs over the same sparsity pattern hit the
+    /// tuner's fingerprint cache.
+    pub fn with_autotune<S: Scalar>(mut self, a: &Crs<S>) -> Result<Self> {
+        let tuned = crate::tune::tune(a)?;
+        self.c = tuned.config.c;
+        self.sigma = tuned.config.sigma;
+        for setup in &mut self.setups {
+            setup.variant = tuned.config.variant;
+        }
+        Ok(self)
     }
 
     /// Run `iters` SpMV iterations of y = A x (x constant — the paper's
@@ -179,7 +210,17 @@ fn run_rank<S: Scalar>(
         let it0 = Instant::now();
         match &setup.backend {
             Backend::Native { nthreads } => {
-                dist_spmv(dm, comm, &mut xbuf, &mut y_sell, overlap, *nthreads, None)?;
+                dist_spmv_floored(
+                    dm,
+                    comm,
+                    &mut xbuf,
+                    &mut y_sell,
+                    overlap,
+                    *nthreads,
+                    None,
+                    None,
+                    setup.variant,
+                )?;
             }
             Backend::Pjrt { .. } => {
                 // exchange halo synchronously, then run the AOT artifact
@@ -220,6 +261,7 @@ fn run_rank<S: Scalar>(
 /// Prepared PJRT execution plan for one rank's local SpMV: the matrix
 /// slab literals are built once; only the x vector is re-uploaded per
 /// iteration (the real accelerator analogue: the matrix stays on device).
+#[cfg(feature = "pjrt")]
 struct PjrtPlan {
     artifact: String,
     /// Device-resident matrix slabs (uploaded once; the accelerator
@@ -231,6 +273,30 @@ struct PjrtPlan {
     active: bool,
 }
 
+/// Without the `pjrt` feature the plan is a unit type: [`Runtime::load`]
+/// already failed before any plan could be built, so these stubs only
+/// keep `run_rank` compiling in both configurations.
+#[cfg(not(feature = "pjrt"))]
+struct PjrtPlan;
+
+#[cfg(not(feature = "pjrt"))]
+fn build_pjrt_plan<S: Scalar>(_dm: &DistMatrix<S>, _rt: &Runtime) -> Result<PjrtPlan> {
+    Ok(PjrtPlan)
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_spmv_planned<S: Scalar>(
+    _plan: &PjrtPlan,
+    _rt: &Runtime,
+    _xbuf: &[S],
+    _y_sell: &mut [S],
+) -> Result<()> {
+    Err(crate::core::GhostError::Runtime(
+        "pjrt feature disabled".into(),
+    ))
+}
+
+#[cfg(feature = "pjrt")]
 fn build_pjrt_plan<S: Scalar>(dm: &DistMatrix<S>, rt: &Runtime) -> Result<PjrtPlan> {
     if S::NAME != "f64" {
         return Ok(PjrtPlan {
@@ -270,6 +336,7 @@ fn build_pjrt_plan<S: Scalar>(dm: &DistMatrix<S>, rt: &Runtime) -> Result<PjrtPl
 }
 
 /// Execute the local SpMV through the prepared PJRT plan.
+#[cfg(feature = "pjrt")]
 fn pjrt_spmv_planned<S: Scalar>(
     plan: &PjrtPlan,
     rt: &Runtime,
@@ -309,54 +376,50 @@ pub mod presets {
 
     pub fn cpu_only(nsockets: usize, threads_per_socket: usize) -> Vec<RankSetup> {
         (0..nsockets)
-            .map(|_| RankSetup {
-                device: topology::emmy_cpu_socket(),
-                backend: Backend::Native {
-                    nthreads: threads_per_socket,
-                },
+            .map(|_| {
+                RankSetup::new(
+                    topology::emmy_cpu_socket(),
+                    Backend::Native {
+                        nthreads: threads_per_socket,
+                    },
+                )
             })
             .collect()
     }
 
     pub fn cpu_gpu(artifact_dir: PathBuf, threads_per_socket: usize) -> Vec<RankSetup> {
         vec![
-            RankSetup {
-                device: topology::emmy_cpu_socket(),
-                backend: Backend::Native {
+            RankSetup::new(
+                topology::emmy_cpu_socket(),
+                Backend::Native {
                     nthreads: threads_per_socket,
                 },
-            },
-            RankSetup {
-                device: topology::emmy_gpu(),
-                backend: Backend::Pjrt { artifact_dir },
-            },
+            ),
+            RankSetup::new(topology::emmy_gpu(), Backend::Pjrt { artifact_dir }),
         ]
     }
 
     pub fn full_node(artifact_dir: PathBuf, threads_per_socket: usize) -> Vec<RankSetup> {
         vec![
-            RankSetup {
-                device: topology::emmy_cpu_socket(),
-                backend: Backend::Native {
+            RankSetup::new(
+                topology::emmy_cpu_socket(),
+                Backend::Native {
                     nthreads: threads_per_socket,
                 },
-            },
-            RankSetup {
-                device: topology::emmy_cpu_socket(),
-                backend: Backend::Native {
+            ),
+            RankSetup::new(
+                topology::emmy_cpu_socket(),
+                Backend::Native {
                     nthreads: threads_per_socket,
                 },
-            },
-            RankSetup {
-                device: topology::emmy_gpu(),
-                backend: Backend::Pjrt {
+            ),
+            RankSetup::new(
+                topology::emmy_gpu(),
+                Backend::Pjrt {
                     artifact_dir: artifact_dir.clone(),
                 },
-            },
-            RankSetup {
-                device: topology::emmy_phi(),
-                backend: Backend::Pjrt { artifact_dir },
-            },
+            ),
+            RankSetup::new(topology::emmy_phi(), Backend::Pjrt { artifact_dir }),
         ]
     }
 }
@@ -389,6 +452,29 @@ mod tests {
     }
 
     #[test]
+    fn autotuned_engine_stays_numerically_exact() {
+        // with_autotune replaces the hard-coded (C, sigma) and rank
+        // variants; the distributed result must still match the global
+        // reference bit-for-bit within fp tolerance
+        let a = matgen::poisson7::<f64>(8, 8, 4);
+        let n = a.nrows();
+        let x: Vec<f64> = (0..n).map(|i| (i as f64 * 0.05).sin()).collect();
+        let engine = HeteroSpmv::new(presets::cpu_only(2, 1))
+            .with_comm(CommConfig::instant())
+            .with_time_scale(1e9)
+            .with_autotune(&a)
+            .unwrap();
+        assert!(engine.c >= 1 && engine.sigma >= 1);
+        let (reports, y) = engine.run(&a, &x, 2).unwrap();
+        assert_eq!(reports.len(), 2);
+        let mut want = vec![0.0; n];
+        a.spmv(&x, &mut want);
+        for i in 0..n {
+            assert!((y[i] - want[i]).abs() < 1e-10, "row {i}");
+        }
+    }
+
+    #[test]
     fn bandwidth_weighting_reduces_makespan() {
         // The point of bandwidth-proportional weights (section 4.1): with
         // an equal row split the fast device idles behind the slow one
@@ -404,14 +490,8 @@ mod tests {
             let mut fast = crate::topology::emmy_cpu_socket();
             fast.bandwidth_gbs = 100.0;
             vec![
-                RankSetup {
-                    device: slow,
-                    backend: Backend::Native { nthreads: 1 },
-                },
-                RankSetup {
-                    device: fast,
-                    backend: Backend::Native { nthreads: 1 },
-                },
+                RankSetup::new(slow, Backend::Native { nthreads: 1 }),
+                RankSetup::new(fast, Backend::Native { nthreads: 1 }),
             ]
         };
         // strong throttle so the modeled floors dominate thread noise

@@ -119,7 +119,7 @@ pub fn sell_spmv_fused<S: Scalar>(
     // fused kernel). Falls back to the generic indexed loop otherwise.
     let rowmajor = x.layout() == Layout::RowMajor
         && y.layout() == Layout::RowMajor
-        && z.as_ref().map_or(true, |z| z.layout() == Layout::RowMajor);
+        && z.as_ref().is_none_or(|z| z.layout() == Layout::RowMajor);
     if rowmajor {
         macro_rules! fused_dispatch {
             ($($w:literal),+) => {

@@ -24,6 +24,7 @@ pub mod solvers;
 pub mod sparsemat;
 pub mod taskq;
 pub mod topology;
+pub mod tune;
 
 pub fn version() -> &'static str {
     env!("CARGO_PKG_VERSION")

@@ -3,7 +3,9 @@
 //! Subcommands:
 //!   info                         topology, Table-1 devices, artifacts
 //!   spmv   [--matrix M] [--n N] [--c C] [--sigma S] [--iters I]
-//!   cg     [--matrix M] [--n N] [--tol T]
+//!          (without --c/--sigma the perfmodel-guided autotuner picks
+//!           (C, sigma, variant) — see ghost::tune)
+//!   cg     [--matrix M] [--n N] [--tol T] [--threads T]
 //!   eig    [--matrix M] [--n N] [--nev K] [--space M] [--tol T]
 //!   kpm    [--n N] [--moments M] [--vectors R]
 //!
@@ -15,7 +17,8 @@ use std::collections::HashMap;
 use std::time::Instant;
 
 use ghost::benchutil::{gflops, Table};
-use ghost::kernels::spmv::{sell_spmv_mt, SpmvVariant};
+use ghost::core::Result;
+use ghost::kernels::spmv::sell_spmv_mt;
 use ghost::matgen;
 use ghost::perfmodel;
 use ghost::solvers::cg::cg;
@@ -24,6 +27,7 @@ use ghost::solvers::krylov_schur::{eigs_largest_real, EigOpts};
 use ghost::solvers::{LocalCrsOp, LocalSellOp};
 use ghost::sparsemat::{Crs, SellMat};
 use ghost::topology;
+use ghost::tune;
 
 struct Args {
     flags: HashMap<String, String>,
@@ -148,14 +152,35 @@ fn cmd_info() {
     }
 }
 
-fn cmd_spmv(a: &Args) -> anyhow::Result<()> {
+fn cmd_spmv(a: &Args) -> Result<()> {
     let n: usize = a.get("n", 100_000);
     let mname = a.str("matrix", "poisson7");
-    let c: usize = a.get("c", 32);
-    let sigma: usize = a.get("sigma", 256);
     let iters: usize = a.get("iters", 50);
     let nthreads: usize = a.get("threads", 4);
     let m = build_matrix(&mname, n);
+    // explicit --c/--sigma override the autotuner (a lone flag is honored
+    // too, the other taking its documented default); otherwise the
+    // perfmodel-guided sweep picks (C, sigma, variant) for this matrix
+    let manual = a.flags.contains_key("c") || a.flags.contains_key("sigma");
+    let (c, sigma, variant) = if manual {
+        (
+            a.get("c", 32),
+            a.get("sigma", 256),
+            ghost::kernels::spmv::SpmvVariant::Vectorized,
+        )
+    } else {
+        let t = tune::tune(&m)?;
+        println!(
+            "autotuned: SELL-{}-{} {:?} ({} measured, {} pruned by the roofline model, cache {})",
+            t.config.c,
+            t.config.sigma,
+            t.config.variant,
+            t.candidates_measured,
+            t.candidates_pruned,
+            if t.cache_hit { "hit" } else { "miss" },
+        );
+        (t.config.c, t.config.sigma, t.config.variant)
+    };
     let sell = SellMat::from_crs(&m, c, sigma)?;
     println!(
         "{mname}: n = {}, nnz = {}, SELL-{c}-{sigma} beta = {:.3}",
@@ -169,7 +194,7 @@ fn cmd_spmv(a: &Args) -> anyhow::Result<()> {
     let mut y = vec![0.0f64; sell.nrows_padded()];
     let t0 = Instant::now();
     for _ in 0..iters {
-        sell_spmv_mt(&sell, &xs, &mut y, SpmvVariant::Vectorized, nthreads);
+        sell_spmv_mt(&sell, &xs, &mut y, variant, nthreads);
     }
     let per = t0.elapsed() / iters as u32;
     let fl = perfmodel::spmv_flops(&sell, 1);
@@ -181,14 +206,22 @@ fn cmd_spmv(a: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_cg(a: &Args) -> anyhow::Result<()> {
+fn cmd_cg(a: &Args) -> Result<()> {
     let n: usize = a.get("n", 50_000);
     let mname = a.str("matrix", "poisson7");
     let tol: f64 = a.get("tol", 1e-8);
+    let nthreads: usize = a.get("threads", 4);
     let m = build_matrix(&mname, n);
     let b = vec![1.0f64; m.nrows()];
     let mut x = vec![0.0f64; m.nrows()];
-    let mut op = LocalSellOp::new(&m, 32, 256, 4)?;
+    // autotuned operator setup: no hard-coded (C, sigma) literal
+    let mut op = LocalSellOp::new_tuned(&m, nthreads)?;
+    println!(
+        "operator: SELL-{}-{} {:?} (autotuned)",
+        op.sell().chunk_height(),
+        op.sell().sigma(),
+        op.variant()
+    );
     let t0 = Instant::now();
     let st = cg(&mut op, &b, &mut x, tol, 10_000)?;
     println!(
@@ -202,7 +235,7 @@ fn cmd_cg(a: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_eig(a: &Args) -> anyhow::Result<()> {
+fn cmd_eig(a: &Args) -> Result<()> {
     let n: usize = a.get("n", 576);
     let mname = a.str("matrix", "matpde");
     let opts = EigOpts {
@@ -229,7 +262,7 @@ fn cmd_eig(a: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_kpm(a: &Args) -> anyhow::Result<()> {
+fn cmd_kpm(a: &Args) -> Result<()> {
     let l: usize = a.get("n", 64);
     let cfg = KpmConfig {
         nmoments: a.get("moments", 64),
@@ -251,7 +284,7 @@ fn cmd_kpm(a: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let cmd = argv.first().map(|s| s.as_str()).unwrap_or("info");
     let args = Args::parse(&argv[1.min(argv.len())..]);

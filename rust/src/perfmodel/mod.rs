@@ -4,7 +4,7 @@
 //! implementations.
 
 use crate::core::Scalar;
-use crate::sparsemat::SellMat;
+use crate::sparsemat::{Crs, SellMat};
 use crate::topology::DeviceSpec;
 
 /// Minimum data traffic of one SpM(M)V in bytes, following the paper's
@@ -19,6 +19,13 @@ pub fn spmv_min_bytes<S: Scalar>(a: &SellMat<S>, nvecs: usize) -> usize {
 /// Flops of one SpM(M)V (2 per stored nonzero per vector; complex
 /// multiplies count 8 flops as usual).
 pub fn spmv_flops<S: Scalar>(a: &SellMat<S>, nvecs: usize) -> f64 {
+    let per_nnz = if S::IS_COMPLEX { 8.0 } else { 2.0 };
+    per_nnz * a.nnz() as f64 * nvecs as f64
+}
+
+/// Same flop count from the CRS operand (storage format does not change
+/// the arithmetic) — used by the autotuner before any SELL build exists.
+pub fn spmv_flops_crs<S: Scalar>(a: &Crs<S>, nvecs: usize) -> f64 {
     let per_nnz = if S::IS_COMPLEX { 8.0 } else { 2.0 };
     per_nnz * a.nnz() as f64 * nvecs as f64
 }

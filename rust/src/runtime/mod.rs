@@ -7,6 +7,11 @@
 //!
 //! Interchange is HLO *text* — see aot.py for why serialized protos from
 //! jax >= 0.5 cannot be loaded by xla_extension 0.5.1.
+//!
+//! The executor half of this module requires the `pjrt` cargo feature
+//! (which pulls the `xla` dependency). Without it, manifest parsing and
+//! artifact metadata stay available, and [`Runtime::load`] returns a
+//! runtime error so callers degrade gracefully on bare runners.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -36,7 +41,7 @@ impl ArtifactMeta {
             .map_err(|_| GhostError::Parse(format!("manifest key {key} not an int")))
     }
 
-    fn parse(line: &str) -> Result<Self> {
+    pub fn parse(line: &str) -> Result<Self> {
         let mut fields = HashMap::new();
         for item in line.split_whitespace() {
             let (k, v) = item
@@ -64,11 +69,13 @@ impl ArtifactMeta {
 }
 
 /// A compiled artifact: PJRT executable + its metadata.
+#[cfg(feature = "pjrt")]
 pub struct Artifact {
     pub meta: ArtifactMeta,
     exe: xla::PjRtLoadedExecutable,
 }
 
+#[cfg(feature = "pjrt")]
 impl Artifact {
     /// Execute with literal inputs; returns the flattened output tuple.
     pub fn execute(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
@@ -97,12 +104,14 @@ impl Artifact {
 
 /// Registry of all compiled artifacts, keyed by name. Compilation happens
 /// once at load; execution is cheap and reentrant.
+#[cfg(feature = "pjrt")]
 pub struct Runtime {
     client: xla::PjRtClient,
     artifacts: HashMap<String, Artifact>,
     dir: PathBuf,
 }
 
+#[cfg(feature = "pjrt")]
 impl Runtime {
     /// Load `<dir>/manifest.txt` and compile every artifact on the PJRT
     /// CPU client.
@@ -184,7 +193,7 @@ impl Runtime {
             let (bn, bw) = (a.meta.get_usize("nchunks")?, a.meta.get_usize("w")?);
             if bn >= nchunks && bw >= w {
                 let waste = bn * bw;
-                if best.map_or(true, |(_, bwaste)| waste < bwaste) {
+                if best.is_none_or(|(_, bwaste)| waste < bwaste) {
                     best = Some((a, waste));
                 }
             }
@@ -197,7 +206,45 @@ impl Runtime {
     }
 }
 
+/// API-compatible stand-in when the crate is built without the `pjrt`
+/// feature: loading always fails with a descriptive runtime error, so
+/// CPU-only builds degrade gracefully instead of failing to compile.
+#[cfg(not(feature = "pjrt"))]
+pub struct Runtime {
+    dir: PathBuf,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Runtime {
+    pub fn load<P: AsRef<Path>>(dir: P) -> Result<Self> {
+        let _ = dir.as_ref();
+        Err(GhostError::Runtime(
+            "ghost was built without the `pjrt` feature; \
+             rebuild with `--features pjrt` to load AOT artifacts"
+                .into(),
+        ))
+    }
+
+    pub fn load_default() -> Result<Self> {
+        let dir = std::env::var("GHOST_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Self::load(dir)
+    }
+
+    pub fn platform(&self) -> String {
+        "none (pjrt feature disabled)".to_string()
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        Vec::new()
+    }
+}
+
 /// Helpers to build literals in the artifact layouts.
+#[cfg(feature = "pjrt")]
 pub mod lit {
     use crate::core::Result;
 
@@ -235,5 +282,12 @@ mod tests {
     fn manifest_parse_errors() {
         assert!(ArtifactMeta::parse("name=x no_equals_here").is_err());
         assert!(ArtifactMeta::parse("file=f kind=k dtype=d nouts=1").is_err());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_runtime_reports_missing_feature() {
+        let err = Runtime::load("does/not/matter").unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
     }
 }

@@ -83,15 +83,12 @@ pub fn eigs_largest_real<O: Operator<f64>>(op: &mut O, opts: &EigOpts) -> Result
             let mut w = vec![0.0f64; n];
             op.apply(&v_basis[j], &mut w);
             orthogonalize(op, &mut w, &locked);
-            // MGS against the Arnoldi basis, one reorth pass
+            // MGS against the Arnoldi basis, one reorth pass (the small
+            // correction coefficients accumulate into the same H entry)
             for _pass in 0..2 {
                 for (i, vi) in v_basis.iter().enumerate() {
                     let hij = op.dot(vi, &w);
-                    if _pass == 0 {
-                        h[i * m + j] += hij;
-                    } else {
-                        h[i * m + j] += hij;
-                    }
+                    h[i * m + j] += hij;
                     slice_axpy(&mut w, -hij, vi);
                 }
             }

@@ -49,11 +49,23 @@ pub struct LocalSellOp<S> {
     xs: Vec<S>,
     ys: Vec<S>,
     nthreads: usize,
+    variant: SpmvVariant,
     count: usize,
 }
 
 impl<S: Scalar> LocalSellOp<S> {
     pub fn new(a: &Crs<S>, c: usize, sigma: usize, nthreads: usize) -> Result<Self> {
+        Self::with_variant(a, c, sigma, nthreads, SpmvVariant::Vectorized)
+    }
+
+    /// Like [`LocalSellOp::new`] with an explicit kernel variant.
+    pub fn with_variant(
+        a: &Crs<S>,
+        c: usize,
+        sigma: usize,
+        nthreads: usize,
+        variant: SpmvVariant,
+    ) -> Result<Self> {
         let sell = SellMat::from_crs(a, c, sigma)?;
         let np = sell.nrows_padded();
         Ok(LocalSellOp {
@@ -61,12 +73,33 @@ impl<S: Scalar> LocalSellOp<S> {
             ys: vec![S::ZERO; np],
             sell,
             nthreads,
+            variant,
             count: 0,
         })
     }
 
+    /// Build with an autotuned (C, sigma, variant) from [`crate::tune`]:
+    /// the perfmodel-guided sweep replaces the hard-coded literals, and a
+    /// second operator over the same sparsity pattern reuses the cached
+    /// decision.
+    pub fn new_tuned(a: &Crs<S>, nthreads: usize) -> Result<Self> {
+        let tuned = crate::tune::tune(a)?;
+        Self::with_variant(
+            a,
+            tuned.config.c,
+            tuned.config.sigma,
+            nthreads,
+            tuned.config.variant,
+        )
+    }
+
     pub fn sell(&self) -> &SellMat<S> {
         &self.sell
+    }
+
+    /// The kernel variant this operator applies with.
+    pub fn variant(&self) -> SpmvVariant {
+        self.variant
     }
 }
 
@@ -84,7 +117,7 @@ impl<S: Scalar> Operator<S> for LocalSellOp<S> {
             &self.sell,
             &self.xs,
             &mut self.ys,
-            SpmvVariant::Vectorized,
+            self.variant,
             self.nthreads,
         );
         spmv::unpermute(&self.sell, &self.ys, y);
@@ -233,8 +266,6 @@ impl<S: Scalar> Operator<S> for MpiOp<S> {
             KernelMode::Ghost => SpmvVariant::Vectorized,
             KernelMode::Baseline => SpmvVariant::Scalar,
         };
-        let _ = variant; // dist_spmv uses the vectorized kernel; the
-                         // baseline penalty comes from C=1 structure
         let _ = t0;
         crate::comm::exchange::dist_spmv_floored(
             &self.dm,
@@ -245,6 +276,7 @@ impl<S: Scalar> Operator<S> for MpiOp<S> {
             self.nthreads,
             None,
             self.time_floor,
+            variant,
         )
         .expect("dist_spmv failed");
         self.dm.unpermute(&self.ysell, y);

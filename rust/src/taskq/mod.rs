@@ -254,7 +254,7 @@ impl TaskQueue {
         }
         let prefer = |pu: usize| -> bool {
             t.numanode
-                .map_or(true, |n| machine.pus()[pu].numanode == n)
+                .is_none_or(|n| machine.pus()[pu].numanode == n)
         };
         // preferred node first
         for pu in 0..st.pu_busy.len() {

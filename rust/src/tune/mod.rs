@@ -1,0 +1,495 @@
+//! Perfmodel-guided SELL-C-sigma autotuner.
+//!
+//! GHOST justifies every kernel choice with a roofline model (section
+//! 2.2/4.1), and the KPM companion paper shows the right (C, sigma,
+//! kernel-variant) choice is *matrix-dependent*. This module makes that
+//! choice automatic: given a [`Crs`] matrix it
+//!
+//! 1. enumerates candidate (chunk height C, sort scope sigma)
+//!    configurations and *predicts* each one's SpMV roofline from the
+//!    padding it would introduce (no SELL matrix is built for this —
+//!    padded storage is computed from the row-length profile alone);
+//! 2. prunes candidates whose roofline bound cannot compete with the best
+//!    candidate's bound (the perfmodel-guided part: candidates that lose
+//!    on modeled traffic are never measured);
+//! 3. measures the survivors with short [`benchutil`] runs over both
+//!    [`SpmvVariant`]s and scores them by measured Gflop/s, with a small
+//!    margin in favor of the vectorizable kernel (the paper's Fig 9
+//!    argument: at C >= the SIMD width the chunk-column kernel is never
+//!    structurally worse, so `Scalar` must win by a clear margin to be
+//!    selected);
+//! 4. caches the winner keyed by a sparsity fingerprint (nrows, nnz,
+//!    row-length mean/variance, max row length, dtype) so repeated solves
+//!    of structurally-identical matrices skip the sweep entirely.
+//!
+//! Consumers: [`crate::solvers::LocalSellOp::new_tuned`],
+//! [`crate::hetero::HeteroSpmv::with_autotune`], `ghost spmv`/`ghost cg`
+//! in `main.rs`, and `examples/spmvbench.rs`.
+
+use std::collections::HashMap;
+use std::sync::{Mutex, OnceLock};
+use std::time::Duration;
+
+use crate::benchutil::{bench_for, gflops};
+use crate::core::{Lidx, Result, Scalar};
+use crate::kernels::spmv::{sell_spmv_mt, SpmvVariant};
+use crate::perfmodel;
+use crate::sparsemat::{Crs, SellMat};
+use crate::topology::{self, DeviceSpec};
+
+/// Sparsity fingerprint used as the autotune cache key. Matrices with the
+/// same fingerprint share a tuning decision: the SpMV cost profile is a
+/// function of size, density and row-length dispersion, not of the
+/// numerical values.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub struct Fingerprint {
+    pub dtype: &'static str,
+    pub nrows: usize,
+    pub ncols: usize,
+    pub nnz: usize,
+    /// Row-length variance, fixed-point (1/1024 units) for a stable
+    /// hash. (The mean is nnz/nrows — already determined by the fields
+    /// above — so only the dispersion is stored.)
+    pub row_var_q: u64,
+    pub max_row_len: usize,
+}
+
+/// Compute the sparsity fingerprint of a matrix.
+pub fn fingerprint<S: Scalar>(a: &Crs<S>) -> Fingerprint {
+    let n = a.nrows().max(1) as f64;
+    let mean = a.nnz() as f64 / n;
+    let var = (0..a.nrows())
+        .map(|i| {
+            let d = a.row_len(i) as f64 - mean;
+            d * d
+        })
+        .sum::<f64>()
+        / n;
+    Fingerprint {
+        dtype: S::NAME,
+        nrows: a.nrows(),
+        ncols: a.ncols(),
+        nnz: a.nnz(),
+        row_var_q: (var * 1024.0).round() as u64,
+        max_row_len: a.max_row_len(),
+    }
+}
+
+/// A tuned SELL-C-sigma configuration.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct TunedConfig {
+    pub c: usize,
+    pub sigma: usize,
+    pub variant: SpmvVariant,
+}
+
+/// Outcome of one [`Autotuner::tune`] call.
+#[derive(Clone, Copy, Debug)]
+pub struct TuneOutcome {
+    pub config: TunedConfig,
+    /// Measured Gflop/s of the winning configuration.
+    pub measured_gflops: f64,
+    /// Roofline bound of the winning configuration on the tuner's device.
+    pub model_gflops: f64,
+    /// Chunk occupancy of the winning configuration.
+    pub beta: f64,
+    /// True when the sweep was skipped because the fingerprint was cached.
+    pub cache_hit: bool,
+    /// (C, sigma) candidates actually measured.
+    pub candidates_measured: usize,
+    /// Candidates discarded by the perfmodel bound without measurement.
+    pub candidates_pruned: usize,
+}
+
+/// Sweep configuration.
+#[derive(Clone, Debug)]
+pub struct TuneOptions {
+    /// Candidate chunk heights C.
+    pub chunk_heights: Vec<usize>,
+    /// Candidate sigma scopes as multiples of C; factor 1 means sigma = 1
+    /// (no sorting), factor f > 1 means sigma = f * C.
+    pub sigma_factors: Vec<usize>,
+    /// Kernel variants to measure per surviving (C, sigma).
+    pub variants: Vec<SpmvVariant>,
+    /// Threads used for the measurement kernel.
+    pub nthreads: usize,
+    /// Wall-clock budget per (candidate, variant) measurement.
+    pub budget: Duration,
+    /// Minimum timed repetitions per measurement.
+    pub min_reps: usize,
+    /// Candidates whose roofline bound is below `prune_fraction` times
+    /// the best candidate's bound are pruned without measurement.
+    pub prune_fraction: f64,
+    /// `Scalar` must beat the best vectorized measurement by this
+    /// fraction to be selected (SIMD-friendliness tie-break, Fig 9).
+    pub scalar_margin: f64,
+}
+
+impl Default for TuneOptions {
+    fn default() -> Self {
+        TuneOptions {
+            chunk_heights: vec![4, 8, 16, 32],
+            sigma_factors: vec![1, 8, 32],
+            variants: vec![SpmvVariant::Vectorized, SpmvVariant::Scalar],
+            nthreads: 1,
+            budget: Duration::from_millis(20),
+            min_reps: 2,
+            prune_fraction: 0.6,
+            scalar_margin: 0.10,
+        }
+    }
+}
+
+#[derive(Clone, Copy)]
+struct CacheEntry {
+    config: TunedConfig,
+    measured_gflops: f64,
+    model_gflops: f64,
+    beta: f64,
+    candidates_measured: usize,
+    candidates_pruned: usize,
+}
+
+/// The autotuner: a device model (for the roofline bound), sweep options
+/// and the fingerprint-keyed decision cache.
+pub struct Autotuner {
+    device: DeviceSpec,
+    opts: TuneOptions,
+    cache: Mutex<HashMap<Fingerprint, CacheEntry>>,
+}
+
+impl Autotuner {
+    pub fn new(device: DeviceSpec, opts: TuneOptions) -> Self {
+        Autotuner {
+            device,
+            opts,
+            cache: Mutex::new(HashMap::new()),
+        }
+    }
+
+    pub fn device(&self) -> &DeviceSpec {
+        &self.device
+    }
+
+    /// Number of cached tuning decisions.
+    pub fn cache_len(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    pub fn clear_cache(&self) {
+        self.cache.lock().unwrap().clear();
+    }
+
+    /// Predicted SpMV traffic (bytes) of SELL-C-sigma storage for `a`
+    /// *without building the matrix*: padding is derived from the
+    /// row-length profile exactly as [`SellMat::from_crs`] would pad.
+    /// Matches [`perfmodel::spmv_min_bytes`] on the built matrix.
+    pub fn predicted_bytes<S: Scalar>(a: &Crs<S>, c: usize, sigma: usize) -> usize {
+        let nrows = a.nrows();
+        let nchunks = nrows.div_ceil(c.max(1));
+        let npadded = nchunks * c;
+        let scope = if sigma == 1 { 1 } else { sigma.max(c) };
+        let mut lens: Vec<usize> = (0..npadded)
+            .map(|i| if i < nrows { a.row_len(i) } else { 0 })
+            .collect();
+        if scope > 1 {
+            for s0 in (0..npadded).step_by(scope) {
+                let s1 = (s0 + scope).min(npadded);
+                lens[s0..s1].sort_unstable_by(|x, y| y.cmp(x));
+            }
+        }
+        let mut entries = 0usize;
+        for ch in 0..nchunks {
+            let w = lens[ch * c..(ch + 1) * c]
+                .iter()
+                .copied()
+                .max()
+                .unwrap_or(0)
+                .max(1);
+            entries += w * c;
+        }
+        // matrix stream + y load/store + amortized x (perfmodel layout)
+        entries * (S::bytes() + std::mem::size_of::<Lidx>())
+            + npadded * S::bytes() * 2
+            + a.ncols() * S::bytes()
+    }
+
+    /// Roofline bound (Gflop/s) for a candidate, from predicted traffic.
+    pub fn predicted_gflops<S: Scalar>(&self, a: &Crs<S>, c: usize, sigma: usize) -> f64 {
+        let flops = if S::IS_COMPLEX { 8.0 } else { 2.0 } * a.nnz() as f64;
+        perfmodel::roofline_gflops(
+            &self.device,
+            Self::predicted_bytes(a, c, sigma) as f64,
+            flops,
+        )
+    }
+
+    /// Tune (C, sigma, variant) for `a`. Cached by [`fingerprint`]; the
+    /// sweep runs at most once per sparsity structure.
+    pub fn tune<S: Scalar>(&self, a: &Crs<S>) -> Result<TuneOutcome> {
+        crate::ensure!(a.nrows() > 0 && a.nnz() > 0, InvalidArg, "empty matrix");
+        let fp = fingerprint(a);
+        if let Some(e) = self.cache.lock().unwrap().get(&fp) {
+            return Ok(outcome_of(e, true));
+        }
+        let entry = self.sweep(a)?;
+        self.cache.lock().unwrap().insert(fp, entry);
+        Ok(outcome_of(&entry, false))
+    }
+
+    fn sweep<S: Scalar>(&self, a: &Crs<S>) -> Result<CacheEntry> {
+        crate::ensure!(
+            !self.opts.variants.is_empty(),
+            InvalidArg,
+            "no kernel variants configured"
+        );
+        // --- model pass: roofline bound per (C, sigma), no SELL builds
+        let mut cands: Vec<(usize, usize, f64)> = Vec::new();
+        for &c in &self.opts.chunk_heights {
+            if c == 0 {
+                continue;
+            }
+            for &f in &self.opts.sigma_factors {
+                let sigma = if f <= 1 { 1 } else { f * c };
+                if cands.iter().any(|&(cc, ss, _)| cc == c && ss == sigma) {
+                    continue;
+                }
+                cands.push((c, sigma, self.predicted_gflops(a, c, sigma)));
+            }
+        }
+        crate::ensure!(!cands.is_empty(), InvalidArg, "no tuning candidates");
+        // best-modeled candidates first; prune the clearly-dominated tail
+        cands.sort_by(|x, y| y.2.partial_cmp(&x.2).unwrap());
+        let best_model = cands[0].2;
+        let cutoff = best_model * self.opts.prune_fraction;
+        let (survivors, pruned): (Vec<_>, Vec<_>) =
+            cands.into_iter().partition(|&(_, _, m)| m >= cutoff);
+        let candidates_pruned = pruned.len();
+
+        // --- measurement pass over the survivors
+        let flops = perfmodel::spmv_flops_crs(a, 1);
+        let mut best: Option<(TunedConfig, f64, f64, f64, f64)> = None; // (cfg, raw, adj, model, beta)
+        let mut candidates_measured = 0usize;
+        for (c, sigma, model) in survivors {
+            let sell = SellMat::from_crs(a, c, sigma)?;
+            let mut xs = vec![S::ONE; sell.nrows_padded().max(sell.ncols())];
+            for (i, v) in xs.iter_mut().enumerate() {
+                *v = S::from_f64(0.5 + ((i % 7) as f64) * 0.125);
+            }
+            let mut ys = vec![S::ZERO; sell.nrows_padded()];
+            candidates_measured += 1;
+            for &variant in &self.opts.variants {
+                let st = bench_for(self.opts.budget, self.opts.min_reps, || {
+                    sell_spmv_mt(&sell, &xs, &mut ys, variant, self.opts.nthreads);
+                });
+                let raw = gflops(flops, st.min);
+                let adj = if variant == SpmvVariant::Scalar {
+                    raw * (1.0 - self.opts.scalar_margin)
+                } else {
+                    raw
+                };
+                let better = best.is_none_or(|(_, _, best_adj, _, _)| adj > best_adj);
+                if better {
+                    best = Some((
+                        TunedConfig { c, sigma, variant },
+                        raw,
+                        adj,
+                        model,
+                        sell.beta(),
+                    ));
+                }
+            }
+        }
+        let (config, measured_gflops, _, model_gflops, beta) =
+            best.expect("at least one candidate measured");
+        Ok(CacheEntry {
+            config,
+            measured_gflops,
+            model_gflops,
+            beta,
+            candidates_measured,
+            candidates_pruned,
+        })
+    }
+}
+
+fn outcome_of(e: &CacheEntry, cache_hit: bool) -> TuneOutcome {
+    TuneOutcome {
+        config: e.config,
+        measured_gflops: e.measured_gflops,
+        model_gflops: e.model_gflops,
+        beta: e.beta,
+        cache_hit,
+        candidates_measured: e.candidates_measured,
+        candidates_pruned: e.candidates_pruned,
+    }
+}
+
+static GLOBAL: OnceLock<Autotuner> = OnceLock::new();
+
+/// The process-wide autotuner (Table 1 CPU-socket device model, default
+/// sweep options). All library consumers share this cache.
+pub fn global() -> &'static Autotuner {
+    GLOBAL.get_or_init(|| Autotuner::new(topology::emmy_cpu_socket(), TuneOptions::default()))
+}
+
+/// Tune through the process-wide autotuner.
+pub fn tune<S: Scalar>(a: &Crs<S>) -> Result<TuneOutcome> {
+    global().tune(a)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matgen;
+
+    fn quick_opts() -> TuneOptions {
+        TuneOptions {
+            chunk_heights: vec![4, 16],
+            sigma_factors: vec![1, 8],
+            budget: Duration::from_millis(2),
+            min_reps: 1,
+            ..TuneOptions::default()
+        }
+    }
+
+    #[test]
+    fn fingerprint_is_structural_not_numerical() {
+        let a = matgen::cage_like::<f64>(300, 7);
+        let mut b = a.clone();
+        for v in b.values_mut() {
+            *v *= -3.75;
+        }
+        assert_eq!(fingerprint(&a), fingerprint(&b));
+        // different structure -> different fingerprint
+        let c = matgen::cage_like::<f64>(300, 8);
+        assert_ne!(fingerprint(&a), fingerprint(&c));
+        // dtype is part of the key
+        let az = matgen::cage_like::<crate::core::C64>(300, 7);
+        assert_ne!(fingerprint(&a), fingerprint(&az));
+    }
+
+    #[test]
+    fn fingerprint_deterministic_across_calls() {
+        let a = matgen::poisson7::<f64>(8, 8, 4);
+        assert_eq!(fingerprint(&a), fingerprint(&a));
+    }
+
+    #[test]
+    fn predicted_bytes_match_perfmodel_on_built_matrix() {
+        let a = matgen::cage_like::<f64>(400, 3);
+        for (c, sigma) in [(1usize, 1usize), (8, 64), (32, 1), (16, 128)] {
+            let sell = SellMat::from_crs(&a, c, sigma).unwrap();
+            assert_eq!(
+                Autotuner::predicted_bytes(&a, c, sigma),
+                perfmodel::spmv_min_bytes(&sell, 1),
+                "C={c} sigma={sigma}"
+            );
+        }
+    }
+
+    #[test]
+    fn cache_hit_on_repeated_tune() {
+        let tuner = Autotuner::new(topology::emmy_cpu_socket(), quick_opts());
+        let a = matgen::poisson7::<f64>(8, 8, 8);
+        let first = tuner.tune(&a).unwrap();
+        assert!(!first.cache_hit);
+        assert_eq!(tuner.cache_len(), 1);
+        let second = tuner.tune(&a).unwrap();
+        assert!(second.cache_hit);
+        assert_eq!(second.config, first.config);
+        assert_eq!(tuner.cache_len(), 1);
+        // same structure, different values: still a hit
+        let mut b = a.clone();
+        for v in b.values_mut() {
+            *v += 1.0;
+        }
+        assert!(tuner.tune(&b).unwrap().cache_hit);
+        tuner.clear_cache();
+        assert_eq!(tuner.cache_len(), 0);
+    }
+
+    #[test]
+    fn pruning_discards_dominated_candidates() {
+        // strongly skewed row lengths: sigma = 1 at large C pads heavily,
+        // so its roofline bound falls below the cutoff and is pruned
+        let n = 2048;
+        let a = Crs::<f64>::from_row_fn(n, n, |i, cols, vals| {
+            let k = if i % 64 == 0 { 64 } else { 1 };
+            for d in 0..k {
+                cols.push(((i + d * 3) % n) as Lidx);
+                vals.push(1.0);
+            }
+        })
+        .unwrap();
+        let tuner = Autotuner::new(
+            topology::emmy_cpu_socket(),
+            TuneOptions {
+                chunk_heights: vec![32],
+                sigma_factors: vec![1, 32],
+                prune_fraction: 0.9,
+                budget: Duration::from_millis(2),
+                min_reps: 1,
+                ..TuneOptions::default()
+            },
+        );
+        let out = tuner.tune(&a).unwrap();
+        assert!(out.candidates_pruned >= 1, "{out:?}");
+        // the sorted configuration must win on this matrix
+        assert!(out.config.sigma > 1, "{out:?}");
+        // sigma-sorting packs the 64-long rows together: beta well above
+        // the unsorted ~0.06 (the pruned candidate's occupancy)
+        assert!(out.beta > 0.5, "{out:?}");
+    }
+
+    #[test]
+    fn tuned_variant_is_vectorized_on_rhs_dominated_matrix() {
+        // paper-style RHS-dominated matrix: long uniform rows, C = 32.
+        // The chunk-column kernel streams val/col contiguously while the
+        // Scalar variant walks stride-C; with the SIMD-friendly margin the
+        // tuner must never pick Scalar here. The margin is raised well
+        // above the default for this test so a debug-build (`cargo test`,
+        // opt-level 0) timing wobble on a noisy runner cannot flip the
+        // selection: Scalar would have to beat the streaming kernel by
+        // >1.5x, which its strided access pattern cannot do on a
+        // multi-megabyte working set.
+        let n = 8192;
+        let a = Crs::<f64>::from_row_fn(n, n, |i, cols, vals| {
+            for d in 0..32usize {
+                cols.push(((i + d * 11) % n) as Lidx);
+                vals.push(1.0 + (d as f64) * 0.03125);
+            }
+        })
+        .unwrap();
+        let tuner = Autotuner::new(
+            topology::emmy_cpu_socket(),
+            TuneOptions {
+                chunk_heights: vec![32],
+                sigma_factors: vec![1],
+                budget: Duration::from_millis(60),
+                min_reps: 5,
+                scalar_margin: 0.35,
+                ..TuneOptions::default()
+            },
+        );
+        let out = tuner.tune(&a).unwrap();
+        assert_eq!(out.config.variant, SpmvVariant::Vectorized, "{out:?}");
+        assert_eq!(out.config.c, 32);
+        assert!(out.measured_gflops > 0.0 && out.model_gflops > 0.0);
+    }
+
+    #[test]
+    fn global_tuner_is_shared_and_caches() {
+        let a = matgen::anderson::<f64>(24, 1.0, 9);
+        let first = tune(&a).unwrap();
+        let second = tune(&a).unwrap();
+        assert!(second.cache_hit);
+        assert_eq!(first.config, second.config);
+    }
+
+    #[test]
+    fn empty_matrix_rejected() {
+        let a = Crs::<f64>::from_row_fn(4, 4, |_i, _c, _v| {}).unwrap();
+        assert!(global().tune(&a).is_err());
+    }
+}

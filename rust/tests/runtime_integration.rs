@@ -1,8 +1,11 @@
 //! Integration tests over the full AOT bridge: JAX/Pallas artifacts
 //! (built by `make artifacts`) loaded and executed through PJRT, checked
-//! against the native rust kernels. These tests require ./artifacts to
-//! exist; they are skipped (with a loud message) otherwise so plain
-//! `cargo test` works before the first `make artifacts`.
+//! against the native rust kernels. These tests require the `pjrt` cargo
+//! feature (the whole file is compiled out without it — a bare runner has
+//! no xla/PJRT stack) AND ./artifacts to exist; they are skipped (with a
+//! loud message) otherwise so plain `cargo test` works before the first
+//! `make artifacts`.
+#![cfg(feature = "pjrt")]
 
 use ghost::core::Rng;
 use ghost::densemat::{DenseMat, Layout};

@@ -5,7 +5,6 @@
 
 use ghost::comm::context::Partition;
 use ghost::comm::{CommConfig, World};
-use ghost::core::Scalar;
 use ghost::matgen;
 use ghost::solvers::cg::cg;
 use ghost::solvers::krylov_schur::{eigs_largest_real, EigOpts};

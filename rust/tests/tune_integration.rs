@@ -1,0 +1,86 @@
+//! Integration tests for the perfmodel-guided autotuner through its
+//! public consumers: the global cache shared across `LocalSellOp`,
+//! `HeteroSpmv` and direct `tune::tune` calls, and numerical equivalence
+//! of tuned operators with the untuned reference path.
+
+use ghost::comm::CommConfig;
+use ghost::hetero::{presets, HeteroSpmv};
+use ghost::matgen;
+use ghost::solvers::cg::cg;
+use ghost::solvers::{LocalSellOp, Operator};
+use ghost::tune;
+
+#[test]
+fn tuned_operator_matches_reference_spmv() {
+    let a = matgen::matpde::<f64>(16);
+    let n = a.nrows();
+    let x: Vec<f64> = (0..n).map(|i| ((i % 17) as f64 - 8.0) * 0.25).collect();
+    let mut want = vec![0.0; n];
+    a.spmv(&x, &mut want);
+    let mut op = LocalSellOp::new_tuned(&a, 1).unwrap();
+    let mut got = vec![0.0; n];
+    op.apply(&x, &mut got);
+    for i in 0..n {
+        assert!((got[i] - want[i]).abs() < 1e-11, "row {i}");
+    }
+}
+
+#[test]
+fn second_tuned_operator_hits_the_shared_cache() {
+    let a = matgen::poisson7::<f64>(10, 10, 6);
+    let _op1 = LocalSellOp::new_tuned(&a, 1).unwrap();
+    // the operator setup populated the global cache: a direct tune of the
+    // same sparsity pattern must be a hit (the sweep is skipped)
+    let out = tune::tune(&a).unwrap();
+    assert!(out.cache_hit);
+    let _op2 = LocalSellOp::new_tuned(&a, 1).unwrap();
+    assert_eq!(_op2.sell().chunk_height(), out.config.c);
+    assert_eq!(_op2.sell().sigma(), out.config.sigma);
+    assert_eq!(_op2.variant(), out.config.variant);
+}
+
+#[test]
+fn tuned_cg_converges_like_fixed_config() {
+    let a = matgen::poisson7::<f64>(6, 6, 6);
+    let n = a.nrows();
+    let b: Vec<f64> = (0..n).map(|i| 1.0 + (i % 3) as f64).collect();
+
+    let mut x_fixed = vec![0.0; n];
+    let mut op_fixed = LocalSellOp::new(&a, 8, 64, 1).unwrap();
+    let st_fixed = cg(&mut op_fixed, &b, &mut x_fixed, 1e-10, 2000).unwrap();
+    assert!(st_fixed.converged);
+
+    let mut x_tuned = vec![0.0; n];
+    let mut op_tuned = LocalSellOp::new_tuned(&a, 1).unwrap();
+    let st_tuned = cg(&mut op_tuned, &b, &mut x_tuned, 1e-10, 2000).unwrap();
+    assert!(st_tuned.converged);
+    for i in 0..n {
+        assert!((x_fixed[i] - x_tuned[i]).abs() < 1e-6, "row {i}");
+    }
+}
+
+#[test]
+fn hetero_engine_autotune_reuses_cache_between_engines() {
+    let a = matgen::poisson7::<f64>(8, 8, 4);
+    let n = a.nrows();
+    let x = vec![1.0f64; n];
+    let run = || {
+        let engine = HeteroSpmv::new(presets::cpu_only(2, 1))
+            .with_comm(CommConfig::instant())
+            .with_time_scale(1e9)
+            .with_autotune(&a)
+            .unwrap();
+        let (_, y) = engine.run(&a, &x, 1).unwrap();
+        y
+    };
+    let y1 = run();
+    // second engine over the same matrix: decision comes from the cache
+    assert!(tune::tune(&a).unwrap().cache_hit);
+    let y2 = run();
+    let mut want = vec![0.0; n];
+    a.spmv(&x, &mut want);
+    for i in 0..n {
+        assert!((y1[i] - want[i]).abs() < 1e-10);
+        assert_eq!(y1[i], y2[i], "tuned engines must agree exactly");
+    }
+}
