@@ -68,6 +68,20 @@ fn main() -> Result<()> {
         second.config.c, second.config.sigma, second.config.variant
     );
 
+    // --- the nvecs axis: for a block workload (8 rhs) the tuner also
+    // picks the SpMMV processing width; block solvers (block CG, blocked
+    // KPM) consume their right-hand sides in rounds of that width
+    let blocked = tune::tune_block(&a, 8)?;
+    println!(
+        "autotune (block, 8 rhs): SELL-{}-{} width {} — {:.2} Gflop/s measured \
+         vs {:.2} roofline",
+        blocked.config.c,
+        blocked.config.sigma,
+        blocked.config.nvecs,
+        blocked.measured_gflops,
+        blocked.model_gflops,
+    );
+
     let cfg = first.config;
     println!(
         "\nmatrix: poisson7 (ML_Geer stand-in), n = {n}, nnz = {}, SELL-{}-{}",

@@ -10,6 +10,9 @@
 use super::context::RankContext;
 use super::Comm;
 use crate::core::{Result, Scalar};
+use crate::densemat::{DenseMat, Layout};
+use crate::kernels::fused::{flags, FusedDots, SpmvOpts};
+use crate::kernels::spmmv::sell_spmmv;
 use crate::kernels::spmv::{sell_spmv_mt, SpmvVariant};
 use crate::sparsemat::{Crs, SellMat};
 use crate::taskq::{flags as tflags, TaskOpts, TaskQueue};
@@ -83,12 +86,53 @@ impl<S: Scalar> DistMatrix<S> {
         crate::kernels::spmv::unpermute(&self.full, y_sell, y);
     }
 
+    /// Block-vector variant of [`DistMatrix::unpermute`]: the first
+    /// `nlocal` rows of `y` receive the SELL-order block result.
+    pub fn unpermute_block(&self, y_sell: &DenseMat<S>, y: &mut DenseMat<S>) {
+        let inv = self.full.inv_perm();
+        for i in 0..self.nlocal {
+            for j in 0..y.ncols() {
+                *y.at_mut(i, j) = y_sell.at(inv[i], j);
+            }
+        }
+    }
+
     /// Bytes sent per SpMV (communication volume).
     pub fn send_volume_bytes(&self) -> usize {
         self.send_plan
             .iter()
             .map(|(_, v)| v.len() * S::bytes())
             .sum()
+    }
+}
+
+/// Execution options for one distributed SpMV, bundling the overlap
+/// mode, compute parallelism, the optional task queue (required for
+/// [`OverlapMode::TaskMode`]), the optional modeled *compute* time floor
+/// (device model for scaling studies, DESIGN.md "Performance realism")
+/// and the kernel [`SpmvVariant`] (autotuned by `ghost::tune`). The
+/// floor is charged where the compute happens: inside the overlap region
+/// for the local part, after the exchange for the remote part — so
+/// overlap modes genuinely hide communication behind (modeled) compute
+/// while NoOverlap pays them serially.
+#[derive(Clone, Copy)]
+pub struct SpmvExchangeOpts<'q> {
+    pub mode: OverlapMode,
+    pub nthreads: usize,
+    pub taskq: Option<&'q TaskQueue>,
+    pub compute_floor: Option<std::time::Duration>,
+    pub variant: SpmvVariant,
+}
+
+impl Default for SpmvExchangeOpts<'_> {
+    fn default() -> Self {
+        SpmvExchangeOpts {
+            mode: OverlapMode::NoOverlap,
+            nthreads: 1,
+            taskq: None,
+            compute_floor: None,
+            variant: SpmvVariant::Vectorized,
+        }
     }
 }
 
@@ -105,38 +149,35 @@ pub fn dist_spmv<S: Scalar>(
     nthreads: usize,
     taskq: Option<&TaskQueue>,
 ) -> Result<()> {
-    dist_spmv_floored(
+    dist_spmv_opts(
         dm,
         comm,
         xbuf,
         y_sell,
-        mode,
-        nthreads,
-        taskq,
-        None,
-        SpmvVariant::Vectorized,
+        &SpmvExchangeOpts {
+            mode,
+            nthreads,
+            taskq,
+            ..Default::default()
+        },
     )
 }
 
-/// [`dist_spmv`] with an optional modeled *compute* time floor (device
-/// model for scaling studies, DESIGN.md "Performance realism") and an
-/// explicit kernel [`SpmvVariant`] (autotuned by `ghost::tune`). The floor
-/// is charged where the compute happens: inside the overlap region for
-/// the local part, after the exchange for the remote part — so overlap
-/// modes genuinely hide communication behind (modeled) compute while
-/// NoOverlap pays them serially.
-#[allow(clippy::too_many_arguments)]
-pub fn dist_spmv_floored<S: Scalar>(
+/// [`dist_spmv`] with full control through [`SpmvExchangeOpts`].
+pub fn dist_spmv_opts<S: Scalar>(
     dm: &DistMatrix<S>,
     comm: &Comm,
     xbuf: &mut [S],
     y_sell: &mut [S],
-    mode: OverlapMode,
-    nthreads: usize,
-    taskq: Option<&TaskQueue>,
-    compute_floor: Option<std::time::Duration>,
-    variant: SpmvVariant,
+    xopts: &SpmvExchangeOpts<'_>,
 ) -> Result<()> {
+    let SpmvExchangeOpts {
+        mode,
+        nthreads,
+        taskq,
+        compute_floor,
+        variant,
+    } = *xopts;
     crate::ensure!(
         xbuf.len() >= dm.xbuf_len(),
         DimMismatch,
@@ -302,6 +343,278 @@ fn add_remote<S: Scalar>(
     for (y, t) in y_sell.iter_mut().zip(&tmp) {
         *y += *t;
     }
+}
+
+/// The augmentation tail of a fused distributed SpMV: the local-row-order
+/// in/out vector `y` (read when AXPBY is set, then overwritten), the
+/// optional chain target `z`, and the [`SpmvOpts`] selecting
+/// shift/scale/axpby/dot augmentations.
+pub struct FusedTail<'a, S> {
+    pub y: &'a mut [S],
+    pub z: Option<&'a mut [S]>,
+    pub opts: &'a SpmvOpts<S>,
+}
+
+/// Distributed augmented SpMV (section 5.3 over the fabric): runs the
+/// halo exchange + local/remote product of [`dist_spmv_opts`], then ONE
+/// fused epilogue stream over the local rows combining un-permutation,
+/// `y = alpha (A - gamma I) x + beta y`, `z = delta z + eta y` and the
+/// local dot partials — instead of re-streaming x/y/z through memory for
+/// every BLAS-1 tail. The partials are reduced through `comm` in rank
+/// order, so the returned *global* dots are bitwise identical on every
+/// rank and deterministic per rank count.
+///
+/// `xbuf` follows the [`dist_spmv`] convention (first `nlocal` entries
+/// hold the local x; the halo region is scratch).
+pub fn dist_spmv_fused<S: Scalar>(
+    dm: &DistMatrix<S>,
+    comm: &Comm,
+    xbuf: &mut [S],
+    y_sell: &mut [S],
+    tail: FusedTail<'_, S>,
+    xopts: &SpmvExchangeOpts<'_>,
+) -> Result<FusedDots<S>> {
+    let FusedTail { y, z, opts } = tail;
+    let mut z = z;
+    let n = dm.nlocal;
+    crate::ensure!(y.len() >= n, DimMismatch, "fused: y too small");
+    if opts.wants(flags::VSHIFT) {
+        crate::ensure!(
+            opts.gamma.len() == 1,
+            DimMismatch,
+            "fused single-vector: gamma len {} != 1",
+            opts.gamma.len()
+        );
+    }
+    if opts.wants(flags::CHAIN_AXPBY) {
+        crate::ensure!(
+            z.as_ref().is_some_and(|z| z.len() >= n),
+            InvalidArg,
+            "CHAIN_AXPBY requires a matching z"
+        );
+    }
+    dist_spmv_opts(dm, comm, xbuf, y_sell, xopts)?;
+    let inv = dm.full.inv_perm();
+    let vshift = opts.wants(flags::VSHIFT);
+    let axpby = opts.wants(flags::AXPBY);
+    let chain = opts.wants(flags::CHAIN_AXPBY);
+    let want_yy = opts.wants(flags::DOT_YY);
+    let want_xy = opts.wants(flags::DOT_XY);
+    let want_xx = opts.wants(flags::DOT_XX);
+    let gamma = if vshift { opts.gamma[0] } else { S::ZERO };
+    let (mut yy, mut xy, mut xx) = (S::ZERO, S::ZERO, S::ZERO);
+    for i in 0..n {
+        let xi = xbuf[i];
+        let mut ax = y_sell[inv[i]];
+        if vshift {
+            ax -= gamma * xi;
+        }
+        let mut ynew = opts.alpha * ax;
+        if axpby {
+            ynew += opts.beta * y[i];
+        }
+        y[i] = ynew;
+        if chain {
+            if let Some(z) = z.as_deref_mut() {
+                z[i] = opts.delta * z[i] + opts.eta * ynew;
+            }
+        }
+        if want_yy {
+            yy += ynew.conj() * ynew;
+        }
+        if want_xy {
+            xy += xi.conj() * ynew;
+        }
+        if want_xx {
+            xx += xi.conj() * xi;
+        }
+    }
+    reduce_dots(comm, &[yy], &[xy], &[xx], opts)
+}
+
+/// Block-vector augmentation tail for [`dist_spmmv_fused`].
+pub struct FusedBlockTail<'a, S> {
+    pub y: &'a mut DenseMat<S>,
+    pub z: Option<&'a mut DenseMat<S>>,
+    pub opts: &'a SpmvOpts<S>,
+}
+
+/// One distributed block SpMMV: Y_sell = A X for nv right-hand sides.
+/// `xblk` is (xbuf_len, nv) row-major with the local x in its first
+/// `nlocal` rows; the halo rows are filled by ONE packed message per
+/// peer (count * nv values) — the bandwidth argument for block vectors
+/// applies to the halo exchange as much as to the matrix stream.
+/// `y_sell` is (nrows_padded, nv) row-major.
+pub fn dist_spmmv<S: Scalar>(
+    dm: &DistMatrix<S>,
+    comm: &Comm,
+    xblk: &mut DenseMat<S>,
+    y_sell: &mut DenseMat<S>,
+) -> Result<()> {
+    let nv = xblk.ncols();
+    crate::ensure!(
+        xblk.layout() == Layout::RowMajor && y_sell.layout() == Layout::RowMajor,
+        InvalidArg,
+        "dist_spmmv needs row-major block vectors"
+    );
+    crate::ensure!(
+        xblk.nrows() >= dm.xbuf_len()
+            && y_sell.nrows() >= dm.full.nrows_padded()
+            && y_sell.ncols() == nv,
+        DimMismatch,
+        "dist_spmmv block shapes"
+    );
+    // packed halo exchange: whole block rows per peer, one message each
+    let mut reqs = Vec::new();
+    for (peer, idxs) in &dm.send_plan {
+        let mut buf = Vec::with_capacity(idxs.len() * nv);
+        for &i in idxs {
+            buf.extend_from_slice(&xblk.row(i)[..nv]);
+        }
+        reqs.push(comm.isend(*peer, HALO_TAG, &buf)?);
+    }
+    for r in reqs {
+        r.wait()?;
+    }
+    for &(peer, off, count) in &dm.recv_plan {
+        let data: Vec<S> = comm.recv(peer, HALO_TAG)?;
+        crate::ensure!(
+            data.len() == count * nv,
+            Comm,
+            "block halo from {peer}: got {} want {}",
+            data.len(),
+            count * nv
+        );
+        for k in 0..count {
+            xblk.row_mut(dm.nlocal + off + k)[..nv]
+                .copy_from_slice(&data[k * nv..(k + 1) * nv]);
+        }
+    }
+    sell_spmmv(&dm.full, xblk, y_sell);
+    Ok(())
+}
+
+/// [`dist_spmmv`] plus the fused block epilogue: a single pass over the
+/// local rows applies un-permutation, per-column shift, scale, axpby and
+/// the chained axpby while accumulating per-column dot partials, which
+/// are reduced through `comm` in rank order (global dots are bitwise
+/// identical on every rank).
+pub fn dist_spmmv_fused<S: Scalar>(
+    dm: &DistMatrix<S>,
+    comm: &Comm,
+    xblk: &mut DenseMat<S>,
+    y_sell: &mut DenseMat<S>,
+    tail: FusedBlockTail<'_, S>,
+) -> Result<FusedDots<S>> {
+    let FusedBlockTail { y, z, opts } = tail;
+    let mut z = z;
+    let n = dm.nlocal;
+    let nv = xblk.ncols();
+    crate::ensure!(
+        y.nrows() >= n && y.ncols() == nv,
+        DimMismatch,
+        "fused block: y ({},{}) vs need ({n},{nv})",
+        y.nrows(),
+        y.ncols()
+    );
+    if opts.wants(flags::VSHIFT) {
+        crate::ensure!(
+            opts.gamma.len() == nv || opts.gamma.len() == 1,
+            DimMismatch,
+            "gamma len {} for {nv} columns",
+            opts.gamma.len()
+        );
+    }
+    if opts.wants(flags::CHAIN_AXPBY) {
+        crate::ensure!(
+            z.as_ref().is_some_and(|z| z.nrows() >= n && z.ncols() == nv),
+            InvalidArg,
+            "CHAIN_AXPBY requires a matching z"
+        );
+    }
+    dist_spmmv(dm, comm, xblk, y_sell)?;
+    let inv = dm.full.inv_perm();
+    let vshift = opts.wants(flags::VSHIFT);
+    let axpby = opts.wants(flags::AXPBY);
+    let chain = opts.wants(flags::CHAIN_AXPBY);
+    let want_yy = opts.wants(flags::DOT_YY);
+    let want_xy = opts.wants(flags::DOT_XY);
+    let want_xx = opts.wants(flags::DOT_XX);
+    let mut yy = vec![S::ZERO; nv];
+    let mut xy = vec![S::ZERO; nv];
+    let mut xx = vec![S::ZERO; nv];
+    for i in 0..n {
+        let si = inv[i];
+        for v in 0..nv {
+            let xi = xblk.at(i, v);
+            let mut ax = y_sell.at(si, v);
+            if vshift {
+                ax -= opts.gamma_at(v) * xi;
+            }
+            let mut ynew = opts.alpha * ax;
+            if axpby {
+                ynew += opts.beta * y.at(i, v);
+            }
+            *y.at_mut(i, v) = ynew;
+            if chain {
+                if let Some(z) = z.as_deref_mut() {
+                    let zv = z.at(i, v);
+                    *z.at_mut(i, v) = opts.delta * zv + opts.eta * ynew;
+                }
+            }
+            if want_yy {
+                yy[v] += ynew.conj() * ynew;
+            }
+            if want_xy {
+                xy[v] += xi.conj() * ynew;
+            }
+            if want_xx {
+                xx[v] += xi.conj() * xi;
+            }
+        }
+    }
+    reduce_dots(comm, &yy, &xy, &xx, opts)
+}
+
+/// Reduce per-column local dot partials through the communicator. The
+/// allreduce sums rank contributions in rank order, so every rank sees
+/// the same bits and repeated runs at a fixed rank count are
+/// deterministic.
+fn reduce_dots<S: Scalar>(
+    comm: &Comm,
+    yy: &[S],
+    xy: &[S],
+    xx: &[S],
+    opts: &SpmvOpts<S>,
+) -> Result<FusedDots<S>> {
+    let mut dots = FusedDots::default();
+    if !opts.wants(flags::DOT_ANY) {
+        return Ok(dots);
+    }
+    let mut local: Vec<S> = Vec::new();
+    if opts.wants(flags::DOT_YY) {
+        local.extend_from_slice(yy);
+    }
+    if opts.wants(flags::DOT_XY) {
+        local.extend_from_slice(xy);
+    }
+    if opts.wants(flags::DOT_XX) {
+        local.extend_from_slice(xx);
+    }
+    let red = comm.allreduce_sum_scalar(&local)?;
+    let mut off = 0usize;
+    if opts.wants(flags::DOT_YY) {
+        dots.yy = red[off..off + yy.len()].to_vec();
+        off += yy.len();
+    }
+    if opts.wants(flags::DOT_XY) {
+        dots.xy = red[off..off + xy.len()].to_vec();
+        off += xy.len();
+    }
+    if opts.wants(flags::DOT_XX) {
+        dots.xx = red[off..off + xx.len()].to_vec();
+    }
+    Ok(dots)
 }
 
 #[cfg(test)]

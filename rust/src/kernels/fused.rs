@@ -55,6 +55,25 @@ impl<S: Scalar> Default for SpmvOpts<S> {
     }
 }
 
+impl<S: Scalar> SpmvOpts<S> {
+    /// True when `flag` (one or more [`flags`] bits) is requested.
+    #[inline(always)]
+    pub fn wants(&self, flag: u32) -> bool {
+        self.flags & flag != 0
+    }
+
+    /// Shift for column `v` (a single gamma broadcasts to every column).
+    /// Only meaningful when the VSHIFT flag is set.
+    #[inline(always)]
+    pub fn gamma_at(&self, v: usize) -> S {
+        if self.gamma.len() == 1 {
+            self.gamma[0]
+        } else {
+            self.gamma[v]
+        }
+    }
+}
+
 /// Dot products produced by the fused kernel (empty when not requested).
 #[derive(Clone, Debug, Default)]
 pub struct FusedDots<S> {
@@ -127,7 +146,6 @@ pub fn sell_spmv_fused<S: Scalar>(
                     $( $w => {
                         fused_rowmajor_fixed::<S, $w>(
                             a, x, y, z.as_deref_mut(), opts, &mut dots,
-                            want_yy, want_xy, want_xx,
                         );
                         return Ok(dots);
                     } )+
@@ -142,13 +160,6 @@ pub fn sell_spmv_fused<S: Scalar>(
     let col = a.colidx();
     let cptr = a.chunk_ptr();
     let clen = a.chunk_len();
-    let gamma_at = |v: usize| -> S {
-        if opts.gamma.len() == 1 {
-            opts.gamma[0]
-        } else {
-            opts.gamma[v]
-        }
-    };
 
     let mut acc = vec![S::ZERO; nv]; // per-row accumulator (A x)
     for ch in 0..a.nchunks() {
@@ -178,7 +189,7 @@ pub fn sell_spmv_fused<S: Scalar>(
                 let xrv = x.at(row, v);
                 let mut ax = acc[v];
                 if opts.flags & flags::VSHIFT != 0 {
-                    ax -= gamma_at(v) * xrv;
+                    ax -= opts.gamma_at(v) * xrv;
                 }
                 let mut ynew = opts.alpha * ax;
                 if opts.flags & flags::AXPBY != 0 {
@@ -208,8 +219,9 @@ pub fn sell_spmv_fused<S: Scalar>(
 
 /// Width-specialized row-major fused kernel: chunk-column traversal (the
 /// vectorizable SELL order), a (C x NV) accumulator tile, and slice-based
-/// augmentation tails — no per-element layout dispatch.
-#[allow(clippy::too_many_arguments)]
+/// augmentation tails — no per-element layout dispatch. The requested
+/// dot products are read off `opts.flags`; `dots` must be pre-sized by
+/// the caller for every requested flag.
 fn fused_rowmajor_fixed<S: Scalar, const NV: usize>(
     a: &SellMat<S>,
     x: &DenseMat<S>,
@@ -217,9 +229,6 @@ fn fused_rowmajor_fixed<S: Scalar, const NV: usize>(
     mut z: Option<&mut DenseMat<S>>,
     opts: &SpmvOpts<S>,
     dots: &mut FusedDots<S>,
-    want_yy: bool,
-    want_xy: bool,
-    want_xx: bool,
 ) {
     let c = a.chunk_height();
     let val = a.values();
@@ -231,20 +240,19 @@ fn fused_rowmajor_fixed<S: Scalar, const NV: usize>(
     let xs = x.as_slice();
     let gamma: [S; NV] = {
         let mut g = [S::ZERO; NV];
-        if opts.flags & flags::VSHIFT != 0 {
+        if opts.wants(flags::VSHIFT) {
             for (v, gv) in g.iter_mut().enumerate() {
-                *gv = if opts.gamma.len() == 1 {
-                    opts.gamma[0]
-                } else {
-                    opts.gamma[v]
-                };
+                *gv = opts.gamma_at(v);
             }
         }
         g
     };
-    let vshift = opts.flags & flags::VSHIFT != 0;
-    let axpby = opts.flags & flags::AXPBY != 0;
-    let chain = opts.flags & flags::CHAIN_AXPBY != 0;
+    let vshift = opts.wants(flags::VSHIFT);
+    let axpby = opts.wants(flags::AXPBY);
+    let chain = opts.wants(flags::CHAIN_AXPBY);
+    let want_yy = opts.wants(flags::DOT_YY);
+    let want_xy = opts.wants(flags::DOT_XY);
+    let want_xx = opts.wants(flags::DOT_XX);
     let mut acc = vec![S::ZERO; c * NV];
     let mut dyy = [S::ZERO; NV];
     let mut dxy = [S::ZERO; NV];

@@ -3,11 +3,15 @@
 //! Subcommands:
 //!   info                         topology, Table-1 devices, artifacts
 //!   spmv   [--matrix M] [--n N] [--c C] [--sigma S] [--iters I]
+//!          [--nvecs V]
 //!          (without --c/--sigma the perfmodel-guided autotuner picks
-//!           (C, sigma, variant) — see ghost::tune)
+//!           (C, sigma, variant) — see ghost::tune; with --nvecs > 1 the
+//!           tuner's nvecs axis also picks the SpMMV processing width)
 //!   cg     [--matrix M] [--n N] [--tol T] [--threads T]
 //!   eig    [--matrix M] [--n N] [--nev K] [--space M] [--tol T]
 //!   kpm    [--n N] [--moments M] [--vectors R]
+//!          (the blocked-fused moments run at the width the nvecs-axis
+//!           autotune picks for the random-vector block)
 //!
 //! Matrices: poisson7 | stencil27 | matpde | anderson | cage | random.
 //! (clap is not vendorable offline; flags are parsed by the tiny parser
@@ -18,11 +22,13 @@ use std::time::Instant;
 
 use ghost::benchutil::{gflops, Table};
 use ghost::core::Result;
+use ghost::densemat::{DenseMat, Layout};
+use ghost::kernels::spmmv::sell_spmmv;
 use ghost::kernels::spmv::sell_spmv_mt;
 use ghost::matgen;
 use ghost::perfmodel;
 use ghost::solvers::cg::cg;
-use ghost::solvers::kpm::{kpm_moments, KpmConfig, KpmVariant};
+use ghost::solvers::kpm::{kpm_moments_width, KpmConfig, KpmVariant};
 use ghost::solvers::krylov_schur::{eigs_largest_real, EigOpts};
 use ghost::solvers::{LocalCrsOp, LocalSellOp};
 use ghost::sparsemat::{Crs, SellMat};
@@ -157,7 +163,53 @@ fn cmd_spmv(a: &Args) -> Result<()> {
     let mname = a.str("matrix", "poisson7");
     let iters: usize = a.get("iters", 50);
     let nthreads: usize = a.get("threads", 4);
+    let nvecs: usize = a.get("nvecs", 1);
     let m = build_matrix(&mname, n);
+    if nvecs > 1 {
+        // block workload: the tuner's nvecs axis picks (C, sigma, width)
+        let t = tune::tune_block(&m, nvecs)?;
+        let w = t.config.nvecs;
+        println!(
+            "autotuned block: SELL-{}-{} width {w} of {nvecs} rhs \
+             ({} measured, {} pruned by the roofline model, cache {})",
+            t.config.c,
+            t.config.sigma,
+            t.candidates_measured,
+            t.candidates_pruned,
+            if t.cache_hit { "hit" } else { "miss" },
+        );
+        let sell = SellMat::from_crs(&m, t.config.c, t.config.sigma)?;
+        println!(
+            "{mname}: n = {}, nnz = {}, SELL-{}-{} beta = {:.3}",
+            m.nrows(),
+            m.nnz(),
+            t.config.c,
+            t.config.sigma,
+            sell.beta()
+        );
+        let nxrows = sell.nrows_padded().max(m.ncols());
+        let x = DenseMat::<f64>::from_fn(nxrows, w, Layout::RowMajor, |i, j| {
+            1.0 + ((i + j) % 3) as f64 * 0.5
+        });
+        let mut y = DenseMat::<f64>::zeros(sell.nrows_padded(), w, Layout::RowMajor);
+        let rounds = nvecs.div_ceil(w);
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            for _ in 0..rounds {
+                sell_spmmv(&sell, &x, &mut y);
+            }
+        }
+        let per = t0.elapsed() / iters as u32;
+        let fl = perfmodel::spmv_flops(&sell, nvecs);
+        println!(
+            "{iters} block iterations ({nvecs} rhs in rounds of {w}, 1 thread — \
+             the SpMMV kernel is single-threaded; --threads applies to the \
+             single-vector path only): {:.3} ms/iter, {:.2} Gflop/s measured",
+            per.as_secs_f64() * 1e3,
+            gflops(fl, per)
+        );
+        return Ok(());
+    }
     // explicit --c/--sigma override the autotuner (a lone flag is honored
     // too, the other taking its documented default); otherwise the
     // perfmodel-guided sweep picks (C, sigma, variant) for this matrix
@@ -271,8 +323,26 @@ fn cmd_kpm(a: &Args) -> Result<()> {
         seed: a.get("seed", 7),
     };
     let (h, _, _) = matgen::scaled_hamiltonian::<f64>(l, 2.0, 42);
+    // nvecs-axis autotune: (C, sigma) plus the SpMMV width at which the
+    // blocked-fused recurrence consumes the random-vector block
+    let t = tune::tune_block(&h, cfg.nrandom)?;
+    println!(
+        "autotuned: SELL-{}-{}, block width {} of {} vectors (cache {})",
+        t.config.c,
+        t.config.sigma,
+        t.config.nvecs,
+        cfg.nrandom,
+        if t.cache_hit { "hit" } else { "miss" },
+    );
+    let mut op = LocalSellOp::with_variant(
+        &h,
+        t.config.c,
+        t.config.sigma,
+        a.get("threads", 1),
+        t.config.variant,
+    )?;
     let t0 = Instant::now();
-    let mu = kpm_moments(&h, &cfg)?;
+    let mu = kpm_moments_width(&mut op, &cfg, t.config.nvecs)?;
     println!(
         "KPM on anderson {l}x{l}: {} moments, {} vectors, {:.3}s; mu0 = {:.1}, mu2 = {:.3}",
         cfg.nmoments,

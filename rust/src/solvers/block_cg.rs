@@ -1,13 +1,15 @@
 //! Block Conjugate Gradient (O'Leary [33]) — the classic block method the
 //! paper's section 5.2 motivates: multiple right-hand sides share every
-//! matrix stream through the SpMMV kernel, and the small projected
-//! systems run through the tall-skinny kernels (tsmttsm).
+//! matrix stream through the operator's block SpMMV path
+//! ([`Operator::apply_block`]), and the small projected systems are built
+//! with the tall-skinny kernels through [`Operator::block_dot`] — which
+//! also performs the global reduction, so the solver runs unchanged on
+//! local, distributed and heterogeneous operators.
 
+use super::Operator;
 use crate::core::{Result, Scalar};
 use crate::densemat::ops as dops;
 use crate::densemat::{tsm, DenseMat, Layout};
-use crate::kernels::spmmv::sell_spmmv;
-use crate::sparsemat::{Crs, SellMat};
 
 #[derive(Clone, Debug)]
 pub struct BlockCgStats {
@@ -16,93 +18,73 @@ pub struct BlockCgStats {
     pub converged: bool,
 }
 
-/// Solve A X = B for `nrhs` right-hand sides simultaneously (A SPD,
-/// local). Block vectors are row-major; one SpMMV per iteration feeds all
-/// systems. Small (nrhs x nrhs) matrices are solved densely.
-pub fn block_cg<S: Scalar>(
-    a: &Crs<S>,
+/// Frobenius norm of a block vector from its projected Gram matrix
+/// (sqrt of the trace of R^H R) — global when `block_dot` is global.
+fn gram_norm<S: Scalar>(g: &DenseMat<S>) -> f64 {
+    (0..g.nrows()).map(|j| g.at(j, j).re()).sum::<f64>().max(0.0).sqrt()
+}
+
+/// Solve A X = B for `nrhs` right-hand sides simultaneously (A SPD).
+/// Block vectors are row-major in local row order; one block apply per
+/// iteration feeds all systems. Small (nrhs x nrhs) matrices are solved
+/// densely.
+pub fn block_cg<S: Scalar, O: Operator<S>>(
+    op: &mut O,
     b: &DenseMat<S>,
     x: &mut DenseMat<S>,
-    c: usize,
-    sigma: usize,
     tol: f64,
     max_iters: usize,
 ) -> Result<BlockCgStats> {
-    let n = a.nrows();
+    let n = op.nlocal();
     let nrhs = b.ncols();
     crate::ensure!(
         b.nrows() == n && x.nrows() == n && x.ncols() == nrhs,
         DimMismatch,
         "block_cg sizes"
     );
-    let sell = SellMat::from_crs_opts(a, c, sigma, true)?;
-    let np = sell.nrows_padded();
-    let perm = sell.perm();
-    let to_sell = |m: &DenseMat<S>| {
-        DenseMat::from_fn(np, nrhs, Layout::RowMajor, |i, j| {
-            if perm[i] < n {
-                m.at(perm[i], j)
-            } else {
-                S::ZERO
-            }
-        })
-    };
-    let bs = to_sell(b);
-    let mut xs = to_sell(x);
-    let bnorm = bs.norm_fro().max(1e-300);
+    let bnorm = gram_norm(&op.block_dot(b, b)?).max(1e-300);
 
     // R = B - A X, P = R
-    let mut q = DenseMat::<S>::zeros(np, nrhs, Layout::RowMajor);
-    sell_spmmv(&sell, &xs, &mut q);
-    let mut r = bs.clone();
+    let mut q = DenseMat::<S>::zeros(n, nrhs, Layout::RowMajor);
+    op.apply_block(x, &mut q)?;
+    let mut r = b.clone();
     dops::axpy(&mut r, -S::ONE, &q)?;
     let mut p = r.clone();
-    // RR = R^H R
-    let mut rr = DenseMat::<S>::zeros(nrhs, nrhs, Layout::RowMajor);
-    tsm::tsmttsm(&mut rr, S::ONE, &r, &r, S::ZERO)?;
+    // RR = R^H R (globally reduced by the operator)
+    let mut rr = op.block_dot(&r, &r)?;
 
     let mut iterations = 0usize;
     let mut converged = false;
     while iterations < max_iters {
-        if r.norm_fro() <= tol * bnorm {
+        if gram_norm(&rr) <= tol * bnorm {
             converged = true;
             break;
         }
         // Q = A P (one streaming pass for all systems)
-        sell_spmmv(&sell, &p, &mut q);
-        // PQ = P^H Q  (nrhs x nrhs via tall-skinny kernel)
-        let mut pq = DenseMat::<S>::zeros(nrhs, nrhs, Layout::RowMajor);
-        tsm::tsmttsm(&mut pq, S::ONE, &p, &q, S::ZERO)?;
+        op.apply_block(&p, &mut q)?;
+        // PQ = P^H Q  (nrhs x nrhs via the tall-skinny kernel + reduce)
+        let pq = op.block_dot(&p, &q)?;
         // alpha = PQ^{-1} RR (small dense solve, one column at a time)
         let alpha = solve_small(&pq, &rr)?;
         // X += P alpha, R -= Q alpha
-        let mut pa = DenseMat::<S>::zeros(np, nrhs, Layout::RowMajor);
+        let mut pa = DenseMat::<S>::zeros(n, nrhs, Layout::RowMajor);
         tsm::tsmm(&mut pa, S::ONE, &p, &alpha, S::ZERO)?;
-        dops::axpy(&mut xs, S::ONE, &pa)?;
-        let mut qa = DenseMat::<S>::zeros(np, nrhs, Layout::RowMajor);
+        dops::axpy(x, S::ONE, &pa)?;
+        let mut qa = DenseMat::<S>::zeros(n, nrhs, Layout::RowMajor);
         tsm::tsmm(&mut qa, S::ONE, &q, &alpha, S::ZERO)?;
         dops::axpy(&mut r, -S::ONE, &qa)?;
         // RR_new, beta = RR^{-1} RR_new
-        let mut rr_new = DenseMat::<S>::zeros(nrhs, nrhs, Layout::RowMajor);
-        tsm::tsmttsm(&mut rr_new, S::ONE, &r, &r, S::ZERO)?;
+        let rr_new = op.block_dot(&r, &r)?;
         let beta = solve_small(&rr, &rr_new)?;
         // P = R + P beta   (tsmm_inplace-style update)
-        let mut pb = DenseMat::<S>::zeros(np, nrhs, Layout::RowMajor);
+        let mut pb = DenseMat::<S>::zeros(n, nrhs, Layout::RowMajor);
         tsm::tsmm(&mut pb, S::ONE, &p, &beta, S::ZERO)?;
         p = r.clone();
         dops::axpy(&mut p, S::ONE, &pb)?;
         rr = rr_new;
         iterations += 1;
     }
-    let final_residual = r.norm_fro() / bnorm;
-    // un-permute
-    for (i, &src) in perm.iter().enumerate() {
-        if src < n {
-            for j in 0..nrhs {
-                *x.at_mut(src, j) = xs.at(i, j);
-            }
-        }
-    }
+    let final_residual = gram_norm(&rr) / bnorm;
     Ok(BlockCgStats {
         iterations,
         final_residual,
@@ -182,13 +164,14 @@ mod tests {
         let nrhs = 4;
         let b = DenseMat::<f64>::random(n, nrhs, Layout::RowMajor, 3);
         let mut x = DenseMat::<f64>::zeros(n, nrhs, Layout::RowMajor);
-        let st = block_cg(&a, &b, &mut x, 8, 64, 1e-10, 1000).unwrap();
+        let mut op = LocalSellOp::new(&a, 8, 64, 1).unwrap();
+        let st = block_cg(&mut op, &b, &mut x, 1e-10, 1000).unwrap();
         assert!(st.converged, "{st:?}");
         for j in 0..nrhs {
             let bj: Vec<f64> = (0..n).map(|i| b.at(i, j)).collect();
             let mut xj = vec![0.0; n];
-            let mut op = LocalSellOp::new(&a, 8, 64, 1).unwrap();
-            cg(&mut op, &bj, &mut xj, 1e-12, 2000).unwrap();
+            let mut op1 = LocalSellOp::new(&a, 8, 64, 1).unwrap();
+            cg(&mut op1, &bj, &mut xj, 1e-12, 2000).unwrap();
             for i in 0..n {
                 assert!((x.at(i, j) - xj[i]).abs() < 1e-6, "rhs {j} row {i}");
             }
@@ -211,18 +194,62 @@ mod tests {
         let n = shifted.nrows();
         let b = DenseMat::<f64>::random(n, 4, Layout::RowMajor, 9);
         let mut x = DenseMat::<f64>::zeros(n, 4, Layout::RowMajor);
-        let st = block_cg(&shifted, &b, &mut x, 8, 64, 1e-9, 500).unwrap();
+        let mut op = LocalSellOp::new(&shifted, 8, 64, 1).unwrap();
+        let st = block_cg(&mut op, &b, &mut x, 1e-9, 500).unwrap();
         assert!(st.converged);
         let bj: Vec<f64> = (0..n).map(|i| b.at(i, 0)).collect();
         let mut xj = vec![0.0; n];
-        let mut op = LocalSellOp::new(&shifted, 8, 64, 1).unwrap();
-        let single = cg(&mut op, &bj, &mut xj, 1e-9, 500).unwrap();
+        let mut op1 = LocalSellOp::new(&shifted, 8, 64, 1).unwrap();
+        let single = cg(&mut op1, &bj, &mut xj, 1e-9, 500).unwrap();
         assert!(
             st.iterations <= single.iterations + 2,
             "block {} vs single {}",
             st.iterations,
             single.iterations
         );
+    }
+
+    #[test]
+    fn block_cg_distributed_matches_local() {
+        // the same solver source runs on MpiOp: apply_block exchanges one
+        // packed halo message per peer, block_dot allreduces the
+        // projections — results match the local run per right-hand side
+        use crate::comm::context::Partition;
+        use crate::comm::{CommConfig, World};
+        use crate::solvers::{KernelMode, MpiOp};
+        let a = matgen::poisson7::<f64>(6, 6, 3);
+        let n = a.nrows();
+        let nrhs = 3;
+        let b = DenseMat::<f64>::random(n, nrhs, Layout::RowMajor, 11);
+        let mut x_ref = DenseMat::<f64>::zeros(n, nrhs, Layout::RowMajor);
+        let mut op = LocalSellOp::new(&a, 8, 64, 1).unwrap();
+        let st = block_cg(&mut op, &b, &mut x_ref, 1e-10, 1000).unwrap();
+        assert!(st.converged);
+        let aref = &a;
+        let bref = &b;
+        let xref = &x_ref;
+        World::run(3, CommConfig::instant(), move |comm| {
+            let part = Partition::uniform(n, comm.nranks());
+            let mut op =
+                MpiOp::build(aref, &part, comm.clone(), KernelMode::Ghost, 1).unwrap();
+            let r0 = op.row0();
+            let nl = op.nlocal();
+            let bl = DenseMat::<f64>::from_fn(nl, nrhs, Layout::RowMajor, |i, j| {
+                bref.at(r0 + i, j)
+            });
+            let mut xl = DenseMat::<f64>::zeros(nl, nrhs, Layout::RowMajor);
+            let st = block_cg(&mut op, &bl, &mut xl, 1e-10, 1000).unwrap();
+            assert!(st.converged, "{st:?}");
+            for i in 0..nl {
+                for j in 0..nrhs {
+                    assert!(
+                        (xl.at(i, j) - xref.at(r0 + i, j)).abs() < 1e-6,
+                        "row {} rhs {j}",
+                        r0 + i
+                    );
+                }
+            }
+        });
     }
 
     #[test]

@@ -9,9 +9,8 @@
 
 use super::Operator;
 use crate::core::{Result, Rng, Scalar};
-use crate::densemat::ops as dops;
-use crate::densemat::tsm;
 use crate::densemat::{DenseMat, Layout};
+use crate::kernels::fused::{flags, SpmvOpts};
 
 /// Apply the degree-`deg` Zhou-Saad Chebyshev filter: eigendirections in
 /// the *damped* interval [damp_lo, damp_hi] are suppressed while those
@@ -41,47 +40,45 @@ pub fn chebyshev_filter<S: Scalar, O: Operator<S>>(
     let sigma1 = e / (c - target);
     let nv = x.ncols();
     let mut sigma = sigma1;
-    // Y = (H - c)/e * X * sigma1
+    // Y = sigma1/e (H - c I) X — one fused block pass (VSHIFT folds the
+    // shift into the SpMMV, alpha folds the scaling; section 5.3)
     let mut y = DenseMat::<S>::zeros(n, nv, Layout::RowMajor);
-    apply_shifted(op, x, &mut y, c, e)?;
-    dops::scal(&mut y, S::from_f64(sigma1));
+    op.apply_block_fused(
+        x,
+        &mut y,
+        None,
+        &SpmvOpts {
+            flags: flags::VSHIFT,
+            alpha: S::from_f64(sigma1 / e),
+            gamma: vec![S::from_f64(c)],
+            ..Default::default()
+        },
+    )?;
     let mut x_prev = x.clone();
     let mut x_cur = y;
     for _ in 2..=deg.max(2) {
         let sigma_new = 1.0 / (2.0 / sigma1 - sigma);
-        // X_next = 2 sigma_new / e (H - c) X_cur - sigma sigma_new X_prev
-        let mut t = DenseMat::<S>::zeros(n, nv, Layout::RowMajor);
-        apply_shifted(op, &x_cur, &mut t, c, e)?;
-        dops::scal(&mut t, S::from_f64(2.0 * sigma_new));
-        dops::axpy(&mut t, S::from_f64(-sigma * sigma_new), &x_prev)?;
+        // X_next = 2 sigma_new/e (H - c I) X_cur - sigma sigma_new X_prev:
+        // the whole three-term step is ONE fused block pass (VSHIFT +
+        // AXPBY into the preloaded X_prev)
+        let mut t = x_prev.clone();
+        op.apply_block_fused(
+            &x_cur,
+            &mut t,
+            None,
+            &SpmvOpts {
+                flags: flags::VSHIFT | flags::AXPBY,
+                alpha: S::from_f64(2.0 * sigma_new / e),
+                beta: S::from_f64(-sigma * sigma_new),
+                gamma: vec![S::from_f64(c)],
+                ..Default::default()
+            },
+        )?;
         x_prev = x_cur;
         x_cur = t;
         sigma = sigma_new;
     }
     *x = x_cur;
-    Ok(())
-}
-
-/// y[:, j] = (H - c I) x[:, j] / e, column by column through the operator.
-fn apply_shifted<S: Scalar, O: Operator<S>>(
-    op: &mut O,
-    x: &DenseMat<S>,
-    y: &mut DenseMat<S>,
-    c: f64,
-    e: f64,
-) -> Result<()> {
-    let n = op.nlocal();
-    let mut xv = vec![S::ZERO; n];
-    let mut yv = vec![S::ZERO; n];
-    for j in 0..x.ncols() {
-        for i in 0..n {
-            xv[i] = x.at(i, j);
-        }
-        op.apply(&xv, &mut yv);
-        for i in 0..n {
-            *y.at_mut(i, j) = (yv[i] - S::from_f64(c) * xv[i]) * S::from_f64(1.0 / e);
-        }
-    }
     Ok(())
 }
 
@@ -118,23 +115,12 @@ pub fn chebfd<S: Scalar, O: Operator<S>>(
         filter_applications += 1;
         orthonormalize(&mut x)?;
     }
-    // Rayleigh-Ritz: G = X^T (H X), S = X^T X (== I after orth)
+    // Rayleigh-Ritz: G = X^H (H X), S = X^H X (== I after orth). H X is
+    // one block pass; the projection goes through the operator's global
+    // tall-skinny product.
     let mut hx = DenseMat::<S>::zeros(n, nb, Layout::RowMajor);
-    {
-        let mut xv = vec![S::ZERO; n];
-        let mut yv = vec![S::ZERO; n];
-        for j in 0..nb {
-            for i in 0..n {
-                xv[i] = x.at(i, j);
-            }
-            op.apply(&xv, &mut yv);
-            for i in 0..n {
-                *hx.at_mut(i, j) = yv[i];
-            }
-        }
-    }
-    let mut g = DenseMat::<S>::zeros(nb, nb, Layout::RowMajor);
-    tsm::tsmttsm(&mut g, S::ONE, &x, &hx, S::ZERO)?;
+    op.apply_block(&x, &mut hx)?;
+    let g = op.block_dot(&x, &hx)?;
     // symmetric tridiagonalization shortcut: G is symmetric nb x nb;
     // use Jacobi sweeps for eigenvalues (nb is small)
     let eigenvalues = jacobi_eigenvalues(&g)?;
@@ -222,6 +208,7 @@ fn jacobi_eigenvalues<S: Scalar>(g: &DenseMat<S>) -> Result<Vec<f64>> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::densemat::tsm;
     use crate::solvers::LocalSellOp;
 
     fn laplacian_1d(n: usize) -> crate::sparsemat::Crs<f64> {

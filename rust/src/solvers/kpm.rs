@@ -6,19 +6,23 @@
 //! Three implementation variants reproduce the section 5.3 ablation
 //! ("a 2.5-fold performance gain for the overall solver could be achieved
 //! by using block vectors and augmenting the SpMV"):
-//! - `Naive`: plain SpMV + separate BLAS-1 + separate dots per random
+//! - `Naive`: plain `apply` + separate BLAS-1 + separate dots per random
 //!   vector;
-//! - `Fused`: the augmented SpMV computes the recurrence update and both
-//!   moments in one matrix pass (still one vector at a time);
-//! - `BlockedFused`: fused + all random vectors processed as one block
-//!   vector (SpMMV).
+//! - `Fused`: [`Operator::apply_block_fused`] computes the recurrence
+//!   update and both moments in one matrix pass (one vector at a time);
+//! - `BlockedFused`: fused + the random vectors processed as block
+//!   vectors (SpMMV), in rounds of a configurable width — the width the
+//!   autotuner's nvecs axis picks (`ghost::tune::tune_block`).
+//!
+//! Everything goes through the [`Operator`] trait, so the same moment
+//! code runs on local, distributed and heterogeneous operators.
 
+use super::Operator;
 use crate::core::{Result, Rng, Scalar};
 use crate::densemat::{DenseMat, Layout};
-use crate::kernels::fused::{flags, sell_spmv_fused, SpmvOpts};
-use crate::kernels::spmmv::sell_spmmv;
-use crate::kernels::spmv::{sell_spmv, SpmvVariant};
-use crate::sparsemat::{Crs, SellMat};
+use crate::kernels::fused::{flags, SpmvOpts};
+use crate::solvers::LocalSellOp;
+use crate::sparsemat::Crs;
 
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
 pub enum KpmVariant {
@@ -37,37 +41,57 @@ pub struct KpmConfig {
     pub seed: u64,
 }
 
-/// Chebyshev moments mu_m = (1/R) sum_r <v_r, T_m(H) v_r>, m < nmoments.
+/// Chebyshev moments mu_m = (1/R) sum_r <v_r, T_m(H) v_r>, m < nmoments,
+/// over a local SELL-32-256 operator (the paper's KPM storage choice).
 pub fn kpm_moments<S: Scalar>(h: &Crs<S>, cfg: &KpmConfig) -> Result<Vec<f64>> {
+    let mut op = LocalSellOp::new(h, 32, 256, 1)?;
+    kpm_moments_op(&mut op, cfg)
+}
+
+/// [`kpm_moments`] over any [`Operator`].
+pub fn kpm_moments_op<S: Scalar, O: Operator<S>>(
+    op: &mut O,
+    cfg: &KpmConfig,
+) -> Result<Vec<f64>> {
     crate::ensure!(cfg.nmoments >= 2, InvalidArg, "need >= 2 moments");
     crate::ensure!(cfg.nrandom >= 1, InvalidArg, "need >= 1 random vector");
-    let sell = SellMat::from_crs_opts(h, 32, 256, true)?;
     match cfg.variant {
-        KpmVariant::Naive => kpm_naive(&sell, cfg),
-        KpmVariant::Fused => kpm_fused(&sell, cfg, 1),
-        KpmVariant::BlockedFused => kpm_fused(&sell, cfg, cfg.nrandom),
+        KpmVariant::Naive => kpm_naive(op, cfg),
+        KpmVariant::Fused => kpm_fused(op, cfg, 1),
+        KpmVariant::BlockedFused => kpm_fused(op, cfg, cfg.nrandom),
     }
 }
 
-/// All R random vectors for the run, generated once so every variant
-/// sees the *same* stochastic estimator (the variants must agree to
-/// machine precision, not just in expectation). Column r depends only on
-/// (seed, r, i).
-fn random_block<S: Scalar>(np: usize, n: usize, r0: usize, nv: usize, seed: u64) -> DenseMat<S> {
-    DenseMat::from_fn(np, nv, Layout::RowMajor, |i, j| {
-        if i < n {
-            // Rademacher vectors: the standard stochastic trace estimator
-            let h = (seed ^ 0x9E3779B97F4A7C15)
-                .wrapping_add(((r0 + j) as u64) << 32)
-                .wrapping_add(i as u64);
-            let mut rng = Rng::new(h);
-            if rng.bool(0.5) {
-                S::ONE
-            } else {
-                -S::ONE
-            }
+/// BlockedFused moments with an explicit processing width: the random
+/// vectors are consumed in rounds of `width` columns. This is the hook
+/// for the autotuner's nvecs axis (`ghost::tune::tune_block` picks the
+/// width whose SpMMV throughput per column is best).
+pub fn kpm_moments_width<S: Scalar, O: Operator<S>>(
+    op: &mut O,
+    cfg: &KpmConfig,
+    width: usize,
+) -> Result<Vec<f64>> {
+    crate::ensure!(cfg.nmoments >= 2, InvalidArg, "need >= 2 moments");
+    crate::ensure!(cfg.nrandom >= 1, InvalidArg, "need >= 1 random vector");
+    crate::ensure!(width >= 1, InvalidArg, "block width must be >= 1");
+    kpm_fused(op, cfg, width.min(cfg.nrandom))
+}
+
+/// Random vectors for the run, generated so every variant sees the
+/// *same* stochastic estimator (the variants must agree to machine
+/// precision, not just in expectation). Column r depends only on
+/// (seed, r, i) in local row order.
+fn random_block<S: Scalar>(n: usize, r0: usize, nv: usize, seed: u64) -> DenseMat<S> {
+    DenseMat::from_fn(n, nv, Layout::RowMajor, |i, j| {
+        // Rademacher vectors: the standard stochastic trace estimator
+        let h = (seed ^ 0x9E3779B97F4A7C15)
+            .wrapping_add(((r0 + j) as u64) << 32)
+            .wrapping_add(i as u64);
+        let mut rng = Rng::new(h);
+        if rng.bool(0.5) {
+            S::ONE
         } else {
-            S::ZERO
+            -S::ONE
         }
     })
 }
@@ -78,35 +102,34 @@ fn random_block<S: Scalar>(np: usize, n: usize, r0: usize, nv: usize, seed: u64)
 ///   t_{m+1} = 2 H t_m - t_{m-1}
 ///   mu_{2m}   = 2 <t_m, t_m>     - mu_0
 ///   mu_{2m+1} = 2 <t_{m+1}, t_m> - mu_1
-fn kpm_naive<S: Scalar>(sell: &SellMat<S>, cfg: &KpmConfig) -> Result<Vec<f64>> {
-    let np = sell.nrows_padded();
-    let n = sell.nrows();
+fn kpm_naive<S: Scalar, O: Operator<S>>(op: &mut O, cfg: &KpmConfig) -> Result<Vec<f64>> {
+    let n = op.nlocal();
     let mm = cfg.nmoments;
     let mut mu = vec![0.0f64; mm];
     for r in 0..cfg.nrandom {
-        let v = random_block::<S>(np, n, r, 1, cfg.seed);
-        let v: Vec<S> = (0..np).map(|i| v.at(i, 0)).collect();
+        let vb = random_block::<S>(n, r, 1, cfg.seed);
+        let v: Vec<S> = (0..n).map(|i| vb.at(i, 0)).collect();
         let mut t_prev = v.clone();
-        let mut t_cur = vec![S::ZERO; np];
+        let mut t_cur = vec![S::ZERO; n];
         // t1 = H v (separate kernel calls: SpMV, then dots)
-        sell_spmv(sell, &v, &mut t_cur, SpmvVariant::Vectorized);
-        let mu0 = dot_re(&v, &v);
-        let mu1 = dot_re(&v, &t_cur);
+        op.apply(&v, &mut t_cur);
+        let mu0 = op.dot(&v, &v).re();
+        let mu1 = op.dot(&v, &t_cur).re();
         mu[0] += mu0;
         if mm > 1 {
             mu[1] += mu1;
         }
         let mut m = 1usize;
-        let mut t_next = vec![S::ZERO; np];
+        let mut t_next = vec![S::ZERO; n];
         while 2 * m < mm {
             // t_next = 2 H t_cur - t_prev : SpMV then separate axpby
-            sell_spmv(sell, &t_cur, &mut t_next, SpmvVariant::Vectorized);
-            for i in 0..np {
+            op.apply(&t_cur, &mut t_next);
+            for i in 0..n {
                 t_next[i] = S::from_f64(2.0) * t_next[i] - t_prev[i];
             }
             // two separate dot kernels
-            let eta0 = dot_re(&t_cur, &t_cur);
-            let eta1 = dot_re(&t_next, &t_cur);
+            let eta0 = op.dot(&t_cur, &t_cur).re();
+            let eta1 = op.dot(&t_next, &t_cur).re();
             mu[2 * m] += 2.0 * eta0 - mu0;
             if 2 * m + 1 < mm {
                 mu[2 * m + 1] += 2.0 * eta1 - mu1;
@@ -122,35 +145,41 @@ fn kpm_naive<S: Scalar>(sell: &SellMat<S>, cfg: &KpmConfig) -> Result<Vec<f64>> 
     Ok(mu)
 }
 
-/// Fused variant: one augmented SpMMV per recurrence step computes
+/// Fused variant: one augmented block apply per recurrence step computes
 /// t_next = 2 H t_cur - t_prev (alpha=2, AXPBY with beta=-1 into t_prev's
 /// storage) plus both dots, for nv vectors at once.
-fn kpm_fused<S: Scalar>(sell: &SellMat<S>, cfg: &KpmConfig, nv: usize) -> Result<Vec<f64>> {
-    let np = sell.nrows_padded();
-    let n = sell.nrows();
+fn kpm_fused<S: Scalar, O: Operator<S>>(
+    op: &mut O,
+    cfg: &KpmConfig,
+    nv: usize,
+) -> Result<Vec<f64>> {
+    let n = op.nlocal();
     let mm = cfg.nmoments;
     let mut mu = vec![0.0f64; mm];
+    let nv = nv.clamp(1, cfg.nrandom);
     let rounds = cfg.nrandom.div_ceil(nv);
     let opts = SpmvOpts {
-        flags: flags::AXPBY | flags::DOT_YY | flags::DOT_XY,
+        flags: flags::AXPBY | flags::DOT_XX | flags::DOT_XY,
         alpha: S::from_f64(2.0),
         beta: S::from_f64(-1.0),
         ..Default::default()
     };
     for round in 0..rounds {
         let nv_here = nv.min(cfg.nrandom - round * nv);
-        let v = random_block::<S>(np, n, round * nv, nv_here, cfg.seed);
-        let mut t_cur = DenseMat::<S>::zeros(np, nv_here, Layout::RowMajor);
-        // t1 = H v
-        sell_spmmv(sell, &v, &mut t_cur);
-        let mut mu0 = vec![0.0f64; nv_here];
-        let mut mu1 = vec![0.0f64; nv_here];
-        for j in 0..nv_here {
-            for i in 0..np {
-                mu0[j] += (v.at(i, j).conj() * v.at(i, j)).re();
-                mu1[j] += (v.at(i, j).conj() * t_cur.at(i, j)).re();
-            }
-        }
+        let v = random_block::<S>(n, round * nv, nv_here, cfg.seed);
+        let mut t_cur = DenseMat::<S>::zeros(n, nv_here, Layout::RowMajor);
+        // t1 = H v with mu0 = <v,v>, mu1 = <v, t1> from the same pass
+        let first = op.apply_block_fused(
+            &v,
+            &mut t_cur,
+            None,
+            &SpmvOpts {
+                flags: flags::DOT_XX | flags::DOT_XY,
+                ..Default::default()
+            },
+        )?;
+        let mu0: Vec<f64> = first.xx.iter().map(|d| d.re()).collect();
+        let mu1: Vec<f64> = first.xy.iter().map(|d| d.re()).collect();
         for j in 0..nv_here {
             mu[0] += mu0[j];
             if mm > 1 {
@@ -162,18 +191,8 @@ fn kpm_fused<S: Scalar>(sell: &SellMat<S>, cfg: &KpmConfig, nv: usize) -> Result
         let mut t_prev = v;
         let mut m = 1usize;
         while 2 * m < mm {
-            // ONE fused pass: SpMMV + axpby + <y,y>(t_next,t_next is not
-            // needed) -> we need <x,x>=eta0 and <x,y>=eta1:
-            let dots = sell_spmv_fused(
-                sell,
-                &t_cur,
-                &mut t_prev,
-                None,
-                &SpmvOpts {
-                    flags: opts.flags | flags::DOT_XX,
-                    ..opts.clone()
-                },
-            )?;
+            // ONE fused pass: SpMMV + axpby + <x,x> = eta0, <x,y> = eta1
+            let dots = op.apply_block_fused(&t_cur, &mut t_prev, None, &opts)?;
             // after the call t_prev holds t_next
             for j in 0..nv_here {
                 let eta0 = dots.xx[j].re();
@@ -191,14 +210,6 @@ fn kpm_fused<S: Scalar>(sell: &SellMat<S>, cfg: &KpmConfig, nv: usize) -> Result
         *v /= cfg.nrandom as f64;
     }
     Ok(mu)
-}
-
-fn dot_re<S: Scalar>(a: &[S], b: &[S]) -> f64 {
-    let mut acc = 0.0;
-    for (x, y) in a.iter().zip(b) {
-        acc += (x.conj() * *y).re();
-    }
-    acc
 }
 
 /// Jackson-kernel DOS reconstruction on `npoints` Chebyshev nodes from
@@ -260,6 +271,32 @@ mod tests {
         for m in 0..16 {
             assert!((a[m] - b[m]).abs() < 1e-8, "naive vs fused moment {m}");
             assert!((b[m] - c[m]).abs() < 1e-8, "fused vs blocked moment {m}");
+        }
+    }
+
+    #[test]
+    fn explicit_width_matches_full_block() {
+        // processing the random vectors in rounds of 2 or 3 (ragged)
+        // must reproduce the full-block moments exactly
+        let (h, _, _) = matgen::scaled_hamiltonian::<f64>(12, 2.0, 3);
+        let cfg = KpmConfig {
+            nmoments: 12,
+            nrandom: 5,
+            variant: KpmVariant::BlockedFused,
+            seed: 9,
+        };
+        let full = kpm_moments(&h, &cfg).unwrap();
+        for width in [1usize, 2, 3, 5, 8] {
+            let mut op = LocalSellOp::new(&h, 32, 256, 1).unwrap();
+            let w = kpm_moments_width(&mut op, &cfg, width).unwrap();
+            for m in 0..12 {
+                assert!(
+                    (full[m] - w[m]).abs() < 1e-8,
+                    "width {width} moment {m}: {} vs {}",
+                    w[m],
+                    full[m]
+                );
+            }
         }
     }
 

@@ -15,6 +15,7 @@
 use super::eig_dense::{eigenvector_inverse_iteration, hessenberg_eigenvalues};
 use super::{slice_axpy, slice_scal, Operator};
 use crate::core::{Result, Rng, Scalar, C64};
+use crate::kernels::fused::{flags, SpmvOpts};
 
 #[derive(Clone, Debug)]
 pub struct EigOpts {
@@ -249,18 +250,33 @@ pub fn eigs_largest_real<O: Operator<f64>>(op: &mut O, opts: &EigOpts) -> Result
                 }) {
                     handled[jc] = true;
                 }
-                // v <- (A^2 - 2 Re(mu) A + |mu|^2) v
+                // v <- (A^2 - 2 Re(mu) A + |mu|^2) v: the second apply is
+                // fused with its shift (tmp2 = (A - 2 Re(mu) I) tmp)
                 op.apply(&v, &mut tmp);
-                op.apply(&tmp, &mut tmp2);
-                for i in 0..n {
-                    tmp2[i] += -2.0 * mu.re * tmp[i] + mu.abs2() * v[i];
-                }
+                op.apply_fused(
+                    &tmp,
+                    &mut tmp2,
+                    None,
+                    &SpmvOpts {
+                        flags: flags::VSHIFT,
+                        gamma: vec![2.0 * mu.re],
+                        ..Default::default()
+                    },
+                )?;
+                slice_axpy(&mut tmp2, mu.abs2(), &v);
                 v.copy_from_slice(&tmp2);
             } else {
-                op.apply(&v, &mut tmp);
-                for i in 0..n {
-                    tmp[i] -= mu.re * v[i];
-                }
+                // v <- (A - mu I) v in one fused pass
+                op.apply_fused(
+                    &v,
+                    &mut tmp,
+                    None,
+                    &SpmvOpts {
+                        flags: flags::VSHIFT,
+                        gamma: vec![mu.re],
+                        ..Default::default()
+                    },
+                )?;
                 v.copy_from_slice(&tmp);
             }
             orthogonalize(op, &mut v, &locked);
@@ -287,10 +303,15 @@ pub fn eigs_largest_real<O: Operator<f64>>(op: &mut O, opts: &EigOpts) -> Result
         let d = locked.len();
         let mut b = vec![0.0f64; d * d];
         let mut aq = vec![0.0f64; n];
+        let popts = SpmvOpts {
+            flags: flags::DOT_XY,
+            ..Default::default()
+        };
         for j in 0..d {
-            op.apply(&locked[j], &mut aq);
+            // the diagonal projection <q_j, A q_j> rides the apply
+            let dots = op.apply_fused(&locked[j], &mut aq, None, &popts)?;
             for (i, qi) in locked.iter().enumerate() {
-                b[i * d + j] = op.dot(qi, &aq);
+                b[i * d + j] = if i == j { dots.xy[0] } else { op.dot(qi, &aq) };
             }
         }
         let projected = super::eig_dense::dense_eigenvalues(b, d);

@@ -2,9 +2,15 @@
 //! eigensolver application. Plain Lanczos with optional full
 //! reorthogonalization; the projected tridiagonal problem is solved with
 //! the in-repo QL algorithm (eig_dense).
+//!
+//! The three-term recurrence runs through [`Operator::apply_fused`]:
+//! `w = A v - beta_prev v_prev` (AXPBY into the preloaded w) and the
+//! projection `alpha = <v, w>` come out of ONE matrix pass instead of an
+//! SpMV plus two extra vector streams.
 
 use super::{local_dot, slice_axpy, slice_scal, Operator};
 use crate::core::{Result, Rng, Scalar};
+use crate::kernels::fused::{flags, SpmvOpts};
 
 #[derive(Clone, Debug)]
 pub struct LanczosResult {
@@ -34,11 +40,20 @@ pub fn lanczos<S: Scalar, O: Operator<S>>(
     let mut basis: Vec<Vec<S>> = if full_reorth { vec![v.clone()] } else { vec![] };
     let mut beta_prev = 0.0f64;
     for j in 0..m {
-        op.apply(&v, &mut w);
-        if j > 0 {
-            slice_axpy(&mut w, S::from_f64(-beta_prev), &v_prev);
-        }
-        let alpha = op.dot(&v, &w).re();
+        // fused: w = A v - beta_prev v_prev AND alpha = <v, w> in one
+        // pass (v_prev is zero on the first step, so AXPBY is a no-op)
+        w.copy_from_slice(&v_prev);
+        let dots = op.apply_fused(
+            &v,
+            &mut w,
+            None,
+            &SpmvOpts {
+                flags: flags::AXPBY | flags::DOT_XY,
+                beta: S::from_f64(-beta_prev),
+                ..Default::default()
+            },
+        )?;
+        let alpha = dots.xy[0].re();
         alphas.push(alpha);
         slice_axpy(&mut w, S::from_f64(-alpha), &v);
         if full_reorth {

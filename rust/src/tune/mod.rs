@@ -19,19 +19,30 @@
 //!    structurally worse, so `Scalar` must win by a clear margin to be
 //!    selected);
 //! 4. caches the winner keyed by a sparsity fingerprint (nrows, nnz,
-//!    row-length mean/variance, max row length, dtype) so repeated solves
-//!    of structurally-identical matrices skip the sweep entirely.
+//!    row-length mean/variance, max row length, dtype — plus the block
+//!    width for SpMMV workloads) so repeated solves of
+//!    structurally-identical matrices skip the sweep entirely; the cache
+//!    optionally persists across processes as a JSON-lines file
+//!    (`GHOST_TUNE_CACHE`, default `target/ghost_tune_cache.jsonl` for
+//!    the global tuner);
+//! 5. for block workloads ([`tune_block`]), additionally sweeps the
+//!    SpMMV *processing width* (the nvecs axis): a block of nvecs
+//!    right-hand sides is consumed in rounds of the width whose measured
+//!    per-block throughput is best.
 //!
 //! Consumers: [`crate::solvers::LocalSellOp::new_tuned`],
 //! [`crate::hetero::HeteroSpmv::with_autotune`], `ghost spmv`/`ghost cg`
-//! in `main.rs`, and `examples/spmvbench.rs`.
+//! /`ghost kpm` in `main.rs`, and `examples/spmvbench.rs`.
 
 use std::collections::HashMap;
+use std::path::PathBuf;
 use std::sync::{Mutex, OnceLock};
 use std::time::Duration;
 
 use crate::benchutil::{bench_for, gflops};
 use crate::core::{Lidx, Result, Scalar};
+use crate::densemat::{DenseMat, Layout};
+use crate::kernels::spmmv::sell_spmmv;
 use crate::kernels::spmv::{sell_spmv_mt, SpmvVariant};
 use crate::perfmodel;
 use crate::sparsemat::{Crs, SellMat};
@@ -40,7 +51,8 @@ use crate::topology::{self, DeviceSpec};
 /// Sparsity fingerprint used as the autotune cache key. Matrices with the
 /// same fingerprint share a tuning decision: the SpMV cost profile is a
 /// function of size, density and row-length dispersion, not of the
-/// numerical values.
+/// numerical values. The workload block width (`nvecs`) is part of the
+/// key because the best (C, sigma, width) differs between SpMV and SpMMV.
 #[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
 pub struct Fingerprint {
     pub dtype: &'static str,
@@ -52,10 +64,17 @@ pub struct Fingerprint {
     /// above — so only the dispersion is stored.)
     pub row_var_q: u64,
     pub max_row_len: usize,
+    /// Workload block width (1 = single-vector SpMV).
+    pub nvecs: usize,
 }
 
-/// Compute the sparsity fingerprint of a matrix.
+/// Compute the sparsity fingerprint of a matrix (single-vector workload).
 pub fn fingerprint<S: Scalar>(a: &Crs<S>) -> Fingerprint {
+    fingerprint_block(a, 1)
+}
+
+/// [`fingerprint`] for a block workload of `nvecs` right-hand sides.
+pub fn fingerprint_block<S: Scalar>(a: &Crs<S>, nvecs: usize) -> Fingerprint {
     let n = a.nrows().max(1) as f64;
     let mean = a.nnz() as f64 / n;
     let var = (0..a.nrows())
@@ -72,15 +91,19 @@ pub fn fingerprint<S: Scalar>(a: &Crs<S>) -> Fingerprint {
         nnz: a.nnz(),
         row_var_q: (var * 1024.0).round() as u64,
         max_row_len: a.max_row_len(),
+        nvecs,
     }
 }
 
-/// A tuned SELL-C-sigma configuration.
+/// A tuned SELL-C-sigma configuration. `nvecs` is the SpMMV processing
+/// width (1 for single-vector SpMV workloads): block solvers consume
+/// their right-hand sides in rounds of this many columns.
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
 pub struct TunedConfig {
     pub c: usize,
     pub sigma: usize,
     pub variant: SpmvVariant,
+    pub nvecs: usize,
 }
 
 /// Outcome of one [`Autotuner::tune`] call.
@@ -111,6 +134,9 @@ pub struct TuneOptions {
     pub sigma_factors: Vec<usize>,
     /// Kernel variants to measure per surviving (C, sigma).
     pub variants: Vec<SpmvVariant>,
+    /// Candidate SpMMV processing widths for [`Autotuner::tune_block`]
+    /// (filtered to <= nvecs; nvecs itself is always a candidate).
+    pub block_widths: Vec<usize>,
     /// Threads used for the measurement kernel.
     pub nthreads: usize,
     /// Wall-clock budget per (candidate, variant) measurement.
@@ -131,6 +157,7 @@ impl Default for TuneOptions {
             chunk_heights: vec![4, 8, 16, 32],
             sigma_factors: vec![1, 8, 32],
             variants: vec![SpmvVariant::Vectorized, SpmvVariant::Scalar],
+            block_widths: vec![1, 2, 4, 8, 16],
             nthreads: 1,
             budget: Duration::from_millis(20),
             min_reps: 2,
@@ -150,12 +177,20 @@ struct CacheEntry {
     candidates_pruned: usize,
 }
 
+/// In-memory cache plus the lazily-loaded-from-disk marker.
+struct CacheState {
+    map: HashMap<Fingerprint, CacheEntry>,
+    loaded: bool,
+}
+
 /// The autotuner: a device model (for the roofline bound), sweep options
-/// and the fingerprint-keyed decision cache.
+/// and the fingerprint-keyed decision cache — optionally persisted as a
+/// JSON-lines file so the sweep survives process restarts.
 pub struct Autotuner {
     device: DeviceSpec,
     opts: TuneOptions,
-    cache: Mutex<HashMap<Fingerprint, CacheEntry>>,
+    cache: Mutex<CacheState>,
+    cache_path: Option<PathBuf>,
 }
 
 impl Autotuner {
@@ -163,21 +198,93 @@ impl Autotuner {
         Autotuner {
             device,
             opts,
-            cache: Mutex::new(HashMap::new()),
+            cache: Mutex::new(CacheState {
+                map: HashMap::new(),
+                loaded: true,
+            }),
+            cache_path: None,
         }
+    }
+
+    /// Persist the decision cache to `path` (JSON lines, one decision per
+    /// line): existing entries are loaded lazily on the first tune, and
+    /// every new sweep result is appended. Unparseable lines are skipped,
+    /// so stale or corrupt caches degrade to a plain re-sweep.
+    pub fn with_cache_file(mut self, path: PathBuf) -> Self {
+        self.cache_path = Some(path);
+        self.cache.lock().unwrap().loaded = false;
+        self
+    }
+
+    /// The persistence path, if any.
+    pub fn cache_path(&self) -> Option<&std::path::Path> {
+        self.cache_path.as_deref()
     }
 
     pub fn device(&self) -> &DeviceSpec {
         &self.device
     }
 
-    /// Number of cached tuning decisions.
+    /// Number of cached tuning decisions (including any loaded from the
+    /// persistence file).
     pub fn cache_len(&self) -> usize {
-        self.cache.lock().unwrap().len()
+        let mut st = self.cache.lock().unwrap();
+        self.ensure_loaded(&mut st);
+        st.map.len()
     }
 
+    /// Drop every cached decision, including the persisted file.
     pub fn clear_cache(&self) {
-        self.cache.lock().unwrap().clear();
+        let mut st = self.cache.lock().unwrap();
+        st.map.clear();
+        st.loaded = true;
+        if let Some(p) = &self.cache_path {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+
+    fn ensure_loaded(&self, st: &mut CacheState) {
+        if st.loaded {
+            return;
+        }
+        st.loaded = true;
+        let Some(path) = &self.cache_path else { return };
+        let Ok(text) = std::fs::read_to_string(path) else { return };
+        let device = self.device.model.to_string();
+        let osig = opts_sig(&self.opts);
+        for line in text.lines() {
+            // entries recorded under a different device model or sweep
+            // candidate space are skipped: a decision is only valid for
+            // the configuration that measured it
+            if let Some((fp, e)) = parse_cache_line(line, &device, osig) {
+                st.map.entry(fp).or_insert(e);
+            }
+        }
+    }
+
+    /// Best-effort append of one decision to the persistence file.
+    fn persist(&self, fp: &Fingerprint, e: &CacheEntry) {
+        let Some(path) = &self.cache_path else { return };
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                let _ = std::fs::create_dir_all(dir);
+            }
+        }
+        let line = cache_line(fp, e, &self.device.model.to_string(), opts_sig(&self.opts));
+        let res = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .and_then(|mut f| {
+                use std::io::Write;
+                writeln!(f, "{line}")
+            });
+        if let Err(err) = res {
+            eprintln!(
+                "ghost::tune: failed to persist cache to {}: {err}",
+                path.display()
+            );
+        }
     }
 
     /// Predicted SpMV traffic (bytes) of SELL-C-sigma storage for `a`
@@ -185,6 +292,18 @@ impl Autotuner {
     /// row-length profile exactly as [`SellMat::from_crs`] would pad.
     /// Matches [`perfmodel::spmv_min_bytes`] on the built matrix.
     pub fn predicted_bytes<S: Scalar>(a: &Crs<S>, c: usize, sigma: usize) -> usize {
+        Self::predicted_bytes_nv(a, c, sigma, 1)
+    }
+
+    /// [`Autotuner::predicted_bytes`] for an SpMMV of `nvecs` columns:
+    /// the matrix stream is read once while the x/y vector traffic
+    /// scales with the width — the reason block operations win.
+    pub fn predicted_bytes_nv<S: Scalar>(
+        a: &Crs<S>,
+        c: usize,
+        sigma: usize,
+        nvecs: usize,
+    ) -> usize {
         let nrows = a.nrows();
         let nchunks = nrows.div_ceil(c.max(1));
         let npadded = nchunks * c;
@@ -210,30 +329,71 @@ impl Autotuner {
         }
         // matrix stream + y load/store + amortized x (perfmodel layout)
         entries * (S::bytes() + std::mem::size_of::<Lidx>())
-            + npadded * S::bytes() * 2
-            + a.ncols() * S::bytes()
+            + npadded * S::bytes() * 2 * nvecs
+            + a.ncols() * S::bytes() * nvecs
     }
 
     /// Roofline bound (Gflop/s) for a candidate, from predicted traffic.
     pub fn predicted_gflops<S: Scalar>(&self, a: &Crs<S>, c: usize, sigma: usize) -> f64 {
-        let flops = if S::IS_COMPLEX { 8.0 } else { 2.0 } * a.nnz() as f64;
+        self.predicted_gflops_nv(a, c, sigma, 1)
+    }
+
+    /// Block-workload roofline bound (Gflop/s) for a candidate.
+    pub fn predicted_gflops_nv<S: Scalar>(
+        &self,
+        a: &Crs<S>,
+        c: usize,
+        sigma: usize,
+        nvecs: usize,
+    ) -> f64 {
+        let flops =
+            (if S::IS_COMPLEX { 8.0 } else { 2.0 }) * a.nnz() as f64 * nvecs as f64;
         perfmodel::roofline_gflops(
             &self.device,
-            Self::predicted_bytes(a, c, sigma) as f64,
+            Self::predicted_bytes_nv(a, c, sigma, nvecs) as f64,
             flops,
         )
     }
 
-    /// Tune (C, sigma, variant) for `a`. Cached by [`fingerprint`]; the
-    /// sweep runs at most once per sparsity structure.
+    /// Tune (C, sigma, variant) for a single-vector SpMV workload.
+    /// Cached by [`fingerprint`]; the sweep runs at most once per
+    /// sparsity structure (and at most once per *process set* when a
+    /// persistence file is configured).
     pub fn tune<S: Scalar>(&self, a: &Crs<S>) -> Result<TuneOutcome> {
+        self.tune_impl(a, 1)
+    }
+
+    /// Tune (C, sigma, variant, processing width) for a block workload of
+    /// `nvecs` right-hand sides: the (C, sigma) survivors of the roofline
+    /// prune are measured with the SpMMV kernel at every candidate width
+    /// w <= nvecs ([`TuneOptions::block_widths`] plus nvecs itself),
+    /// scored by the measured throughput of processing the whole block in
+    /// div_ceil(nvecs, w) rounds. Cached like [`Autotuner::tune`], with
+    /// nvecs folded into the fingerprint.
+    pub fn tune_block<S: Scalar>(&self, a: &Crs<S>, nvecs: usize) -> Result<TuneOutcome> {
+        crate::ensure!(nvecs >= 1, InvalidArg, "nvecs must be >= 1");
+        self.tune_impl(a, nvecs)
+    }
+
+    fn tune_impl<S: Scalar>(&self, a: &Crs<S>, nvecs: usize) -> Result<TuneOutcome> {
         crate::ensure!(a.nrows() > 0 && a.nnz() > 0, InvalidArg, "empty matrix");
-        let fp = fingerprint(a);
-        if let Some(e) = self.cache.lock().unwrap().get(&fp) {
-            return Ok(outcome_of(e, true));
+        let fp = fingerprint_block(a, nvecs);
+        {
+            let mut st = self.cache.lock().unwrap();
+            self.ensure_loaded(&mut st);
+            if let Some(e) = st.map.get(&fp) {
+                return Ok(outcome_of(e, true));
+            }
         }
-        let entry = self.sweep(a)?;
-        self.cache.lock().unwrap().insert(fp, entry);
+        let entry = if nvecs == 1 {
+            self.sweep(a)?
+        } else {
+            self.sweep_block(a, nvecs)?
+        };
+        let mut st = self.cache.lock().unwrap();
+        st.map.insert(fp, entry);
+        self.persist(&fp, &entry);
+        drop(st);
         Ok(outcome_of(&entry, false))
     }
 
@@ -291,7 +451,12 @@ impl Autotuner {
                 let better = best.is_none_or(|(_, _, best_adj, _, _)| adj > best_adj);
                 if better {
                     best = Some((
-                        TunedConfig { c, sigma, variant },
+                        TunedConfig {
+                            c,
+                            sigma,
+                            variant,
+                            nvecs: 1,
+                        },
                         raw,
                         adj,
                         model,
@@ -301,6 +466,94 @@ impl Autotuner {
             }
         }
         let (config, measured_gflops, _, model_gflops, beta) =
+            best.expect("at least one candidate measured");
+        Ok(CacheEntry {
+            config,
+            measured_gflops,
+            model_gflops,
+            beta,
+            candidates_measured,
+            candidates_pruned,
+        })
+    }
+
+    /// Block-workload sweep: the (C, sigma) model prune of [`sweep`]
+    /// with block-scaled traffic, then an SpMMV measurement per surviving
+    /// (C, sigma) x candidate width. The chunk-column SpMMV kernel is
+    /// width-specialized internally, so no Scalar/Vectorized axis exists
+    /// here; the stored variant is `Vectorized`.
+    ///
+    /// [`sweep`]: Autotuner::sweep
+    fn sweep_block<S: Scalar>(&self, a: &Crs<S>, nvecs: usize) -> Result<CacheEntry> {
+        // --- model pass: roofline bound per (C, sigma), no SELL builds
+        let mut cands: Vec<(usize, usize, f64)> = Vec::new();
+        for &c in &self.opts.chunk_heights {
+            if c == 0 {
+                continue;
+            }
+            for &f in &self.opts.sigma_factors {
+                let sigma = if f <= 1 { 1 } else { f * c };
+                if cands.iter().any(|&(cc, ss, _)| cc == c && ss == sigma) {
+                    continue;
+                }
+                cands.push((c, sigma, self.predicted_gflops_nv(a, c, sigma, nvecs)));
+            }
+        }
+        crate::ensure!(!cands.is_empty(), InvalidArg, "no tuning candidates");
+        cands.sort_by(|x, y| y.2.partial_cmp(&x.2).unwrap());
+        let cutoff = cands[0].2 * self.opts.prune_fraction;
+        let (survivors, pruned): (Vec<_>, Vec<_>) =
+            cands.into_iter().partition(|&(_, _, m)| m >= cutoff);
+        let candidates_pruned = pruned.len();
+
+        // --- measurement pass: widths per surviving (C, sigma)
+        let mut widths: Vec<usize> = self
+            .opts
+            .block_widths
+            .iter()
+            .copied()
+            .filter(|&w| w >= 1 && w <= nvecs)
+            .collect();
+        if !widths.contains(&nvecs) {
+            widths.push(nvecs);
+        }
+        let flops = perfmodel::spmv_flops_crs(a, nvecs);
+        let mut best: Option<(TunedConfig, f64, f64, f64)> = None; // (cfg, gflops, model, beta)
+        let mut candidates_measured = 0usize;
+        for (c, sigma, model) in survivors {
+            let sell = SellMat::from_crs(a, c, sigma)?;
+            let nxrows = sell.nrows_padded().max(sell.ncols());
+            candidates_measured += 1;
+            for &w in &widths {
+                let x = DenseMat::<S>::from_fn(nxrows, w, Layout::RowMajor, |i, j| {
+                    S::from_f64(0.5 + (((i + j) % 7) as f64) * 0.125)
+                });
+                let mut y =
+                    DenseMat::<S>::zeros(sell.nrows_padded(), w, Layout::RowMajor);
+                let rounds = nvecs.div_ceil(w);
+                let st = bench_for(self.opts.budget, self.opts.min_reps, || {
+                    for _ in 0..rounds {
+                        sell_spmmv(&sell, &x, &mut y);
+                    }
+                });
+                let eff = gflops(flops, st.min);
+                let better = best.is_none_or(|(_, b, _, _)| eff > b);
+                if better {
+                    best = Some((
+                        TunedConfig {
+                            c,
+                            sigma,
+                            variant: SpmvVariant::Vectorized,
+                            nvecs: w,
+                        },
+                        eff,
+                        model,
+                        sell.beta(),
+                    ));
+                }
+            }
+        }
+        let (config, measured_gflops, model_gflops, beta) =
             best.expect("at least one candidate measured");
         Ok(CacheEntry {
             config,
@@ -325,17 +578,160 @@ fn outcome_of(e: &CacheEntry, cache_hit: bool) -> TuneOutcome {
     }
 }
 
+/// Signature of the *structural* sweep knobs (the candidate space).
+/// Decisions are only shared between tuners whose candidate spaces
+/// match; measurement-quality knobs (budget, min_reps, margins) are
+/// deliberately excluded.
+fn opts_sig(o: &TuneOptions) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325; // FNV-1a
+    let mut eat = |v: u64| {
+        h ^= v;
+        h = h.wrapping_mul(0x100000001b3);
+    };
+    for &c in &o.chunk_heights {
+        eat(c as u64 + 1);
+    }
+    eat(u64::MAX);
+    for &f in &o.sigma_factors {
+        eat(f as u64 + 1);
+    }
+    eat(u64::MAX - 1);
+    for &v in &o.variants {
+        eat(match v {
+            SpmvVariant::Vectorized => 2,
+            SpmvVariant::Scalar => 3,
+        });
+    }
+    eat(u64::MAX - 2);
+    for &w in &o.block_widths {
+        eat(w as u64 + 1);
+    }
+    h
+}
+
+/// One decision as a JSON line (hand-rolled: the crate is
+/// dependency-free, see Cargo.toml). The tuner's device model and sweep
+/// signature are recorded so a cache file shared between differently
+/// configured tuners cannot cross-contaminate.
+fn cache_line(fp: &Fingerprint, e: &CacheEntry, device: &str, osig: u64) -> String {
+    format!(
+        "{{\"device\":\"{}\",\"osig\":{},\"dtype\":\"{}\",\"nrows\":{},\"ncols\":{},\
+         \"nnz\":{},\"row_var_q\":{},\
+         \"max_row_len\":{},\"nvecs\":{},\"c\":{},\"sigma\":{},\"variant\":\"{:?}\",\
+         \"width\":{},\"measured_gflops\":{},\"model_gflops\":{},\"beta\":{},\
+         \"measured\":{},\"pruned\":{}}}",
+        device,
+        osig,
+        fp.dtype,
+        fp.nrows,
+        fp.ncols,
+        fp.nnz,
+        fp.row_var_q,
+        fp.max_row_len,
+        fp.nvecs,
+        e.config.c,
+        e.config.sigma,
+        e.config.variant,
+        e.config.nvecs,
+        e.measured_gflops,
+        e.model_gflops,
+        e.beta,
+        e.candidates_measured,
+        e.candidates_pruned
+    )
+}
+
+/// Extract the raw text of `"key":value` from a flat JSON line.
+fn json_field<'a>(line: &'a str, key: &str) -> Option<&'a str> {
+    let pat = format!("\"{key}\":");
+    let start = line.find(&pat)? + pat.len();
+    let rest = &line[start..];
+    let end = rest.find(&[',', '}'][..])?;
+    Some(rest[..end].trim().trim_matches('"'))
+}
+
+/// Parse one [`cache_line`], accepting it only when it was recorded
+/// under the same device model and sweep signature; `None` on any
+/// mismatch (the entry is then simply re-swept).
+fn parse_cache_line(line: &str, device: &str, osig: u64) -> Option<(Fingerprint, CacheEntry)> {
+    let line = line.trim();
+    if !line.starts_with('{') {
+        return None;
+    }
+    if json_field(line, "device")? != device {
+        return None;
+    }
+    if json_field(line, "osig")?.parse::<u64>().ok()? != osig {
+        return None;
+    }
+    let dtype: &'static str = match json_field(line, "dtype")? {
+        "f32" => "f32",
+        "f64" => "f64",
+        "c32" => "c32",
+        "c64" => "c64",
+        _ => return None,
+    };
+    let fp = Fingerprint {
+        dtype,
+        nrows: json_field(line, "nrows")?.parse().ok()?,
+        ncols: json_field(line, "ncols")?.parse().ok()?,
+        nnz: json_field(line, "nnz")?.parse().ok()?,
+        row_var_q: json_field(line, "row_var_q")?.parse().ok()?,
+        max_row_len: json_field(line, "max_row_len")?.parse().ok()?,
+        nvecs: json_field(line, "nvecs")?.parse().ok()?,
+    };
+    let variant = match json_field(line, "variant")? {
+        "Vectorized" => SpmvVariant::Vectorized,
+        "Scalar" => SpmvVariant::Scalar,
+        _ => return None,
+    };
+    let entry = CacheEntry {
+        config: TunedConfig {
+            c: json_field(line, "c")?.parse().ok()?,
+            sigma: json_field(line, "sigma")?.parse().ok()?,
+            variant,
+            nvecs: json_field(line, "width")?.parse().ok()?,
+        },
+        measured_gflops: json_field(line, "measured_gflops")?.parse().ok()?,
+        model_gflops: json_field(line, "model_gflops")?.parse().ok()?,
+        beta: json_field(line, "beta")?.parse().ok()?,
+        candidates_measured: json_field(line, "measured")?.parse().ok()?,
+        candidates_pruned: json_field(line, "pruned")?.parse().ok()?,
+    };
+    Some((fp, entry))
+}
+
 static GLOBAL: OnceLock<Autotuner> = OnceLock::new();
 
 /// The process-wide autotuner (Table 1 CPU-socket device model, default
-/// sweep options). All library consumers share this cache.
+/// sweep options). All library consumers share this cache, which
+/// persists across processes: the path comes from `GHOST_TUNE_CACHE`
+/// (set it empty to disable persistence) and defaults to
+/// `target/ghost_tune_cache.jsonl`.
 pub fn global() -> &'static Autotuner {
-    GLOBAL.get_or_init(|| Autotuner::new(topology::emmy_cpu_socket(), TuneOptions::default()))
+    GLOBAL.get_or_init(|| {
+        let t = Autotuner::new(topology::emmy_cpu_socket(), TuneOptions::default());
+        let path = match std::env::var("GHOST_TUNE_CACHE") {
+            Ok(p) if p.is_empty() => None,
+            Ok(p) => Some(PathBuf::from(p)),
+            Err(_) => Some(PathBuf::from("target/ghost_tune_cache.jsonl")),
+        };
+        match path {
+            Some(p) => t.with_cache_file(p),
+            None => t,
+        }
+    })
 }
 
 /// Tune through the process-wide autotuner.
 pub fn tune<S: Scalar>(a: &Crs<S>) -> Result<TuneOutcome> {
     global().tune(a)
+}
+
+/// Block-workload tune ((C, sigma, variant, width) for `nvecs`
+/// right-hand sides) through the process-wide autotuner.
+pub fn tune_block<S: Scalar>(a: &Crs<S>, nvecs: usize) -> Result<TuneOutcome> {
+    global().tune_block(a, nvecs)
 }
 
 #[cfg(test)]
@@ -476,6 +872,75 @@ mod tests {
         assert_eq!(out.config.variant, SpmvVariant::Vectorized, "{out:?}");
         assert_eq!(out.config.c, 32);
         assert!(out.measured_gflops > 0.0 && out.model_gflops > 0.0);
+    }
+
+    #[test]
+    fn tune_block_picks_a_width_and_caches() {
+        let tuner = Autotuner::new(topology::emmy_cpu_socket(), quick_opts());
+        let a = matgen::poisson7::<f64>(8, 8, 4);
+        let out = tuner.tune_block(&a, 6).unwrap();
+        assert!(!out.cache_hit);
+        assert!(out.config.nvecs >= 1 && out.config.nvecs <= 6, "{out:?}");
+        assert!(out.measured_gflops > 0.0);
+        // block and single-vector decisions live under distinct keys
+        let single = tuner.tune(&a).unwrap();
+        assert!(!single.cache_hit);
+        assert_eq!(single.config.nvecs, 1);
+        assert_eq!(tuner.cache_len(), 2);
+        let again = tuner.tune_block(&a, 6).unwrap();
+        assert!(again.cache_hit);
+        assert_eq!(again.config, out.config);
+    }
+
+    #[test]
+    fn cache_round_trips_through_the_persistence_file() {
+        let path = std::env::temp_dir().join(format!(
+            "ghost_tune_cache_roundtrip_{}.jsonl",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_file(&path);
+        let a = matgen::poisson7::<f64>(8, 8, 8);
+        let t1 = Autotuner::new(topology::emmy_cpu_socket(), quick_opts())
+            .with_cache_file(path.clone());
+        let first = t1.tune(&a).unwrap();
+        assert!(!first.cache_hit);
+        let blocked = t1.tune_block(&a, 4).unwrap();
+        assert!(!blocked.cache_hit);
+        // a fresh tuner (stand-in for a fresh process) loads both
+        let t2 = Autotuner::new(topology::emmy_cpu_socket(), quick_opts())
+            .with_cache_file(path.clone());
+        let second = t2.tune(&a).unwrap();
+        assert!(second.cache_hit, "persisted decision must be a cache hit");
+        assert_eq!(second.config, first.config);
+        let blocked2 = t2.tune_block(&a, 4).unwrap();
+        assert!(blocked2.cache_hit);
+        assert_eq!(blocked2.config, blocked.config);
+        assert_eq!(t2.cache_len(), 2);
+        // a tuner with a different candidate space must not adopt
+        // decisions it never measured
+        let t4 = Autotuner::new(
+            topology::emmy_cpu_socket(),
+            TuneOptions {
+                chunk_heights: vec![8],
+                ..quick_opts()
+            },
+        )
+        .with_cache_file(path.clone());
+        assert_eq!(t4.cache_len(), 0);
+        // corrupt lines are skipped; parseable ones survive
+        {
+            use std::io::Write;
+            let mut f = std::fs::OpenOptions::new()
+                .append(true)
+                .open(&path)
+                .unwrap();
+            writeln!(f, "not json at all").unwrap();
+        }
+        let t3 = Autotuner::new(topology::emmy_cpu_socket(), quick_opts())
+            .with_cache_file(path.clone());
+        assert_eq!(t3.cache_len(), 2);
+        t3.clear_cache();
+        assert!(!path.exists());
     }
 
     #[test]

@@ -1,0 +1,350 @@
+//! Fused-vs-unfused equivalence suite: the augmented SpMV (section 5.3)
+//! must match the composition of unfused kernels for every flag
+//! combination, both block-vector layouts and representative chunk
+//! heights — at the kernel level, through every operator (local SELL,
+//! CRS baseline via the trait defaults, autotuned), and through `MpiOp`
+//! at 1, 2 and 4 simulated ranks, where the globally-reduced dots must
+//! additionally be bitwise identical on every rank.
+
+use ghost::comm::context::Partition;
+use ghost::comm::{CommConfig, World};
+use ghost::core::Rng;
+use ghost::densemat::{DenseMat, Layout};
+use ghost::kernels::fused::{flags, sell_spmv_fused, FusedDots, SpmvOpts};
+use ghost::kernels::spmmv::sell_spmmv;
+use ghost::matgen;
+use ghost::solvers::{KernelMode, LocalCrsOp, LocalSellOp, MpiOp, Operator};
+use ghost::sparsemat::{Crs, SellMat};
+
+fn random_square(rng: &mut Rng, n: usize) -> Crs<f64> {
+    Crs::from_row_fn(n, n, |i, cols, vals| {
+        let k = rng.range(1, 8.min(n) + 1);
+        let mut set = rng.sample_distinct(n, k);
+        if !set.contains(&i) {
+            set.push(i);
+            set.sort_unstable();
+        }
+        for c in set {
+            cols.push(c as i32);
+            vals.push(rng.normal());
+        }
+    })
+    .unwrap()
+}
+
+/// Compose the augmented operation from unfused pieces (SpMMV + separate
+/// elementwise passes + separate dot kernels), honoring exactly the
+/// requested flag subset.
+fn reference(
+    s: &SellMat<f64>,
+    x: &DenseMat<f64>,
+    y0: &DenseMat<f64>,
+    z0: &DenseMat<f64>,
+    opts: &SpmvOpts<f64>,
+) -> (DenseMat<f64>, DenseMat<f64>, FusedDots<f64>) {
+    let np = s.nrows_padded();
+    let nv = x.ncols();
+    let mut ax = DenseMat::<f64>::zeros(np, nv, Layout::RowMajor);
+    sell_spmmv(s, x, &mut ax);
+    let mut y = y0.clone();
+    for i in 0..np {
+        for v in 0..nv {
+            let mut t = ax.at(i, v);
+            if opts.wants(flags::VSHIFT) {
+                t -= opts.gamma_at(v) * x.at(i, v);
+            }
+            let mut ynew = opts.alpha * t;
+            if opts.wants(flags::AXPBY) {
+                ynew += opts.beta * y0.at(i, v);
+            }
+            *y.at_mut(i, v) = ynew;
+        }
+    }
+    let mut z = z0.clone();
+    if opts.wants(flags::CHAIN_AXPBY) {
+        for i in 0..np {
+            for v in 0..nv {
+                *z.at_mut(i, v) = opts.delta * z0.at(i, v) + opts.eta * y.at(i, v);
+            }
+        }
+    }
+    let mut dots = FusedDots::default();
+    let col_dot = |a: &DenseMat<f64>, b: &DenseMat<f64>, v: usize| -> f64 {
+        (0..np).map(|i| a.at(i, v) * b.at(i, v)).sum()
+    };
+    if opts.wants(flags::DOT_YY) {
+        dots.yy = (0..nv).map(|v| col_dot(&y, &y, v)).collect();
+    }
+    if opts.wants(flags::DOT_XY) {
+        dots.xy = (0..nv).map(|v| col_dot(x, &y, v)).collect();
+    }
+    if opts.wants(flags::DOT_XX) {
+        dots.xx = (0..nv).map(|v| col_dot(x, x, v)).collect();
+    }
+    (y, z, dots)
+}
+
+fn assert_dots_close(got: &[f64], want: &[f64], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what} length");
+    for (g, w) in got.iter().zip(want) {
+        assert!((g - w).abs() < 1e-8 * (1.0 + w.abs()), "{what}: {g} vs {w}");
+    }
+}
+
+#[test]
+fn kernel_fused_matches_composition_for_all_flag_combinations() {
+    let mut rng = Rng::new(11);
+    let a = random_square(&mut rng, 73);
+    for &c in &[1usize, 4, 32] {
+        let s = SellMat::from_crs_opts(&a, c, 4 * c, true).unwrap();
+        let np = s.nrows_padded();
+        for &nv in &[1usize, 3, 4] {
+            for &layout in &[Layout::RowMajor, Layout::ColMajor] {
+                for bits in 0..64u32 {
+                    let opts = SpmvOpts {
+                        flags: bits,
+                        alpha: 1.25,
+                        beta: -0.75,
+                        gamma: (0..nv).map(|v| 0.3 + 0.1 * v as f64).collect(),
+                        delta: 0.5,
+                        eta: -1.5,
+                    };
+                    let seed = (c * 1000 + nv * 100 + bits as usize) as u64;
+                    let x = DenseMat::<f64>::random(np, nv, layout, seed);
+                    let y0 = DenseMat::<f64>::random(np, nv, layout, seed + 1);
+                    let z0 = DenseMat::<f64>::random(np, nv, layout, seed + 2);
+                    let mut y = y0.clone();
+                    let mut z = z0.clone();
+                    let zarg = if bits & flags::CHAIN_AXPBY != 0 {
+                        Some(&mut z)
+                    } else {
+                        None
+                    };
+                    let dots = sell_spmv_fused(&s, &x, &mut y, zarg, &opts).unwrap();
+                    let (yr, zr, dr) = reference(&s, &x, &y0, &z0, &opts);
+                    let ctx = format!("C={c} nv={nv} {layout:?} flags={bits:#08b}");
+                    assert!(y.max_abs_diff(&yr) < 1e-10, "y mismatch ({ctx})");
+                    if bits & flags::CHAIN_AXPBY != 0 {
+                        assert!(z.max_abs_diff(&zr) < 1e-10, "z mismatch ({ctx})");
+                    } else {
+                        assert_eq!(z.max_abs_diff(&z0), 0.0, "z touched ({ctx})");
+                    }
+                    assert_dots_close(&dots.yy, &dr.yy, &format!("yy ({ctx})"));
+                    assert_dots_close(&dots.xy, &dr.xy, &format!("xy ({ctx})"));
+                    assert_dots_close(&dots.xx, &dr.xx, &format!("xx ({ctx})"));
+                }
+            }
+        }
+    }
+}
+
+/// All augmentations + all dots through `apply_fused`, checked against
+/// the unfused composition built from the same operator's `apply`/`dot`.
+fn check_operator_fused<O: Operator<f64>>(op: &mut O, seed: u64) {
+    let n = op.nlocal();
+    let opts = SpmvOpts {
+        flags: flags::VSHIFT
+            | flags::AXPBY
+            | flags::CHAIN_AXPBY
+            | flags::DOT_YY
+            | flags::DOT_XY
+            | flags::DOT_XX,
+        alpha: 1.1,
+        beta: -0.4,
+        gamma: vec![0.25],
+        delta: 0.6,
+        eta: 0.9,
+    };
+    let mut rng = Rng::new(seed);
+    let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let y0: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let z0: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    // unfused reference
+    let mut ax = vec![0.0; n];
+    op.apply(&x, &mut ax);
+    let mut yr = vec![0.0; n];
+    for i in 0..n {
+        yr[i] = opts.alpha * (ax[i] - opts.gamma[0] * x[i]) + opts.beta * y0[i];
+    }
+    let mut zr = vec![0.0; n];
+    for i in 0..n {
+        zr[i] = opts.delta * z0[i] + opts.eta * yr[i];
+    }
+    let dyy = op.dot(&yr, &yr);
+    let dxy = op.dot(&x, &yr);
+    let dxx = op.dot(&x, &x);
+    // fused
+    let mut y = y0.clone();
+    let mut z = z0.clone();
+    let dots = op.apply_fused(&x, &mut y, Some(&mut z), &opts).unwrap();
+    for i in 0..n {
+        assert!((y[i] - yr[i]).abs() < 1e-9, "y[{i}]");
+        assert!((z[i] - zr[i]).abs() < 1e-9, "z[{i}]");
+    }
+    assert!((dots.yy[0] - dyy).abs() < 1e-7 * (1.0 + dyy.abs()), "yy");
+    assert!((dots.xy[0] - dxy).abs() < 1e-7 * (1.0 + dxy.abs()), "xy");
+    assert!((dots.xx[0] - dxx).abs() < 1e-7 * (1.0 + dxx.abs()), "xx");
+}
+
+/// Block apply vs column-by-column apply, and fused block apply with
+/// per-column shifts + dots vs the composed reference.
+fn check_operator_block<O: Operator<f64>>(op: &mut O, seed: u64) {
+    let n = op.nlocal();
+    let nv = 3usize;
+    let x = DenseMat::<f64>::random(n, nv, Layout::RowMajor, seed);
+    // reference: column loop through apply
+    let mut want = DenseMat::<f64>::zeros(n, nv, Layout::RowMajor);
+    let mut xv = vec![0.0; n];
+    let mut yv = vec![0.0; n];
+    for j in 0..nv {
+        for i in 0..n {
+            xv[i] = x.at(i, j);
+        }
+        op.apply(&xv, &mut yv);
+        for i in 0..n {
+            *want.at_mut(i, j) = yv[i];
+        }
+    }
+    let mut y = DenseMat::<f64>::zeros(n, nv, Layout::RowMajor);
+    op.apply_block(&x, &mut y).unwrap();
+    assert!(y.max_abs_diff(&want) < 1e-10, "apply_block");
+    // fused block: per-column VSHIFT + DOT_XY
+    let gamma = [0.1, -0.2, 0.3];
+    let opts = SpmvOpts {
+        flags: flags::VSHIFT | flags::DOT_XY,
+        gamma: gamma.to_vec(),
+        ..Default::default()
+    };
+    let mut yf = DenseMat::<f64>::zeros(n, nv, Layout::RowMajor);
+    let dots = op.apply_block_fused(&x, &mut yf, None, &opts).unwrap();
+    for j in 0..nv {
+        for i in 0..n {
+            let w = want.at(i, j) - gamma[j] * x.at(i, j);
+            assert!((yf.at(i, j) - w).abs() < 1e-9, "col {j} row {i}");
+        }
+        let mut xj = vec![0.0; n];
+        let mut wj = vec![0.0; n];
+        for i in 0..n {
+            xj[i] = x.at(i, j);
+            wj[i] = yf.at(i, j);
+        }
+        let dref = op.dot(&xj, &wj);
+        assert!(
+            (dots.xy[j] - dref).abs() < 1e-7 * (1.0 + dref.abs()),
+            "xy col {j}"
+        );
+    }
+}
+
+#[test]
+fn operators_fused_match_unfused_local_and_tuned() {
+    let a = matgen::poisson7::<f64>(6, 6, 3);
+    // native fused kernels
+    let mut sell_op = LocalSellOp::new(&a, 8, 64, 2).unwrap();
+    check_operator_fused(&mut sell_op, 3);
+    check_operator_block(&mut sell_op, 4);
+    // trait defaults (unfused composition path)
+    let mut crs_op = LocalCrsOp::new(a.clone());
+    check_operator_fused(&mut crs_op, 5);
+    check_operator_block(&mut crs_op, 6);
+    // autotuned operator
+    let mut tuned_op = LocalSellOp::new_tuned(&a, 1).unwrap();
+    check_operator_fused(&mut tuned_op, 7);
+    check_operator_block(&mut tuned_op, 8);
+}
+
+#[test]
+fn operators_fused_match_unfused_mpi_at_multiple_rank_counts() {
+    let a = matgen::poisson7::<f64>(6, 6, 4);
+    let n = a.nrows();
+    for nranks in [1usize, 2, 4] {
+        for mode in [KernelMode::Ghost, KernelMode::Baseline] {
+            let aref = &a;
+            World::run(nranks, CommConfig::instant(), move |comm| {
+                let part = Partition::uniform(n, comm.nranks());
+                let mut op =
+                    MpiOp::build(aref, &part, comm.clone(), mode, 1).unwrap();
+                check_operator_fused(&mut op, 7);
+                check_operator_block(&mut op, 8);
+            });
+        }
+    }
+}
+
+#[test]
+fn mpi_fused_matches_single_process_reference_and_ranks_agree_bitwise() {
+    let a = matgen::poisson7::<f64>(6, 6, 4);
+    let n = a.nrows();
+    let mut rng = Rng::new(21);
+    let xg: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let yg: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let zg: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let opts = SpmvOpts {
+        flags: flags::VSHIFT
+            | flags::AXPBY
+            | flags::CHAIN_AXPBY
+            | flags::DOT_YY
+            | flags::DOT_XY
+            | flags::DOT_XX,
+        alpha: 0.8,
+        beta: 0.3,
+        gamma: vec![-0.5],
+        delta: 1.1,
+        eta: -0.2,
+    };
+    // one-process reference via the trait's composed default
+    let mut op_ref = LocalCrsOp::new(a.clone());
+    let mut y_ref = yg.clone();
+    let mut z_ref = zg.clone();
+    let d_ref = op_ref
+        .apply_fused(&xg, &mut y_ref, Some(&mut z_ref), &opts)
+        .unwrap();
+    for nranks in [1usize, 2, 4] {
+        let aref = &a;
+        let xr = &xg;
+        let yr = &yg;
+        let zr = &zg;
+        let o = &opts;
+        let out = World::run(nranks, CommConfig::instant(), move |comm| {
+            let part = Partition::uniform(n, comm.nranks());
+            let mut op =
+                MpiOp::build(aref, &part, comm.clone(), KernelMode::Ghost, 1).unwrap();
+            let r0 = op.row0();
+            let nl = op.nlocal();
+            let mut yl = yr[r0..r0 + nl].to_vec();
+            let mut zl = zr[r0..r0 + nl].to_vec();
+            let dots = op
+                .apply_fused(&xr[r0..r0 + nl], &mut yl, Some(&mut zl), o)
+                .unwrap();
+            (r0, yl, zl, dots)
+        });
+        // every rank must see the exact same global dots (the reduction
+        // sums rank partials in rank order — bitwise deterministic)
+        let d0 = out[0].3.clone();
+        for (_, _, _, d) in &out {
+            assert_eq!(d.yy[0].to_bits(), d0.yy[0].to_bits(), "nranks={nranks}");
+            assert_eq!(d.xy[0].to_bits(), d0.xy[0].to_bits(), "nranks={nranks}");
+            assert_eq!(d.xx[0].to_bits(), d0.xx[0].to_bits(), "nranks={nranks}");
+        }
+        // and the distributed vectors/dots match the one-process run
+        for (r0, yl, zl, _) in out {
+            for (i, v) in yl.iter().enumerate() {
+                assert!(
+                    (v - y_ref[r0 + i]).abs() < 1e-9,
+                    "nranks={nranks} y row {}",
+                    r0 + i
+                );
+            }
+            for (i, v) in zl.iter().enumerate() {
+                assert!(
+                    (v - z_ref[r0 + i]).abs() < 1e-9,
+                    "nranks={nranks} z row {}",
+                    r0 + i
+                );
+            }
+        }
+        assert!((d0.yy[0] - d_ref.yy[0]).abs() < 1e-7 * (1.0 + d_ref.yy[0].abs()));
+        assert!((d0.xy[0] - d_ref.xy[0]).abs() < 1e-7 * (1.0 + d_ref.xy[0].abs()));
+        assert!((d0.xx[0] - d_ref.xx[0]).abs() < 1e-7 * (1.0 + d_ref.xx[0].abs()));
+    }
+}
