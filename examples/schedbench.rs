@@ -1,0 +1,195 @@
+//! schedbench — throughput benchmark for the asynchronous solve service.
+//!
+//! Submits a mixed stream of solve jobs (single-RHS CG, block CG,
+//! Lanczos, KPM) against two matrices and measures end-to-end jobs/s and
+//! aggregate Gflop/s in two scheduler configurations:
+//!
+//! - **serial**: batching off — every job solves alone (operators are
+//!   still cached);
+//! - **batched**: concurrent single-RHS CG jobs targeting the same
+//!   cached operator are coalesced into block solves through
+//!   `apply_block`, so the matrix is streamed once per iteration for the
+//!   whole batch (section 5.2 economics applied to the request stream).
+//!
+//! The per-job *results* are bitwise identical between the two modes —
+//! the batcher's bundled CG keeps every column's recurrence independent
+//! — which this binary asserts before printing the comparison.
+//!
+//!     cargo run --release --example schedbench [-- <jobs>] [--quick]
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use ghost::benchutil::Table;
+use ghost::core::Result;
+use ghost::matgen;
+use ghost::sched::{
+    BatchPolicy, JobOutput, JobReport, JobScheduler, JobSpec, MatrixSource, Priority,
+    SchedConfig, SolverKind,
+};
+use ghost::sparsemat::Crs;
+use ghost::topology::Machine;
+
+struct RunOutcome {
+    reports: Vec<JobReport>,
+    elapsed: std::time::Duration,
+    batches: u64,
+    widest: usize,
+    cache_hits: u64,
+}
+
+fn mixed_jobs(a: &Arc<Crs<f64>>, b: &Arc<Crs<f64>>, jobs: usize) -> Vec<JobSpec> {
+    (0..jobs)
+        .map(|i| {
+            let mut spec = match i % 8 {
+                // the CG lanes dominate: that is the batchable traffic
+                0 | 1 | 2 | 3 => JobSpec::new(
+                    MatrixSource::Mat(a.clone()),
+                    SolverKind::Cg {
+                        tol: 1e-8,
+                        max_iters: 2000,
+                    },
+                ),
+                4 => JobSpec::new(
+                    MatrixSource::Mat(b.clone()),
+                    SolverKind::Cg {
+                        tol: 1e-8,
+                        max_iters: 2000,
+                    },
+                ),
+                5 => JobSpec::new(
+                    MatrixSource::Mat(a.clone()),
+                    SolverKind::BlockCg {
+                        nrhs: 4,
+                        tol: 1e-8,
+                        max_iters: 2000,
+                    },
+                ),
+                6 => JobSpec::new(MatrixSource::Mat(b.clone()), SolverKind::Lanczos { steps: 20 }),
+                _ => JobSpec::new(
+                    MatrixSource::Mat(a.clone()),
+                    SolverKind::ChebFilter {
+                        degree: 8,
+                        block: 4,
+                    },
+                ),
+            };
+            spec.seed = i as u64;
+            if i % 11 == 0 {
+                spec.priority = Priority::High;
+            }
+            spec
+        })
+        .collect()
+}
+
+fn run(policy: BatchPolicy, specs: &[JobSpec], pus: usize) -> Result<RunOutcome> {
+    let sched = JobScheduler::new(
+        Machine::small_node(pus),
+        SchedConfig {
+            nshepherds: pus,
+            batching: policy,
+            ..SchedConfig::default()
+        },
+    );
+    let t0 = Instant::now();
+    let handles: Vec<_> = specs
+        .iter()
+        .map(|s| sched.submit(s.clone()))
+        .collect::<Result<_>>()?;
+    let reports: Vec<JobReport> = handles
+        .into_iter()
+        .map(|h| h.wait())
+        .collect::<Result<_>>()?;
+    let elapsed = t0.elapsed();
+    sched.drain();
+    let stats = sched.stats();
+    sched.shutdown();
+    Ok(RunOutcome {
+        reports,
+        elapsed,
+        batches: stats.batches,
+        widest: stats.max_batch_width,
+        cache_hits: stats.cache.hits,
+    })
+}
+
+fn gflops(reports: &[JobReport], secs: f64) -> f64 {
+    reports
+        .iter()
+        .map(|r| 2.0 * r.nnz as f64 * r.matvecs as f64)
+        .sum::<f64>()
+        / secs
+        / 1e9
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let jobs: usize = args
+        .iter()
+        .find_map(|a| a.parse().ok())
+        .unwrap_or(if quick { 12 } else { 24 });
+    let (ga, gb) = if quick {
+        (matgen::poisson7::<f64>(8, 8, 8), matgen::anderson::<f64>(20, 1.0, 5))
+    } else {
+        (
+            matgen::poisson7::<f64>(16, 16, 8),
+            matgen::anderson::<f64>(40, 1.0, 5),
+        )
+    };
+    println!(
+        "schedbench: {jobs} mixed jobs over 2 matrices (n = {}, n = {})",
+        ga.nrows(),
+        gb.nrows()
+    );
+    let a = Arc::new(ga);
+    let b = Arc::new(gb);
+    let specs = mixed_jobs(&a, &b, jobs);
+    let pus = 4;
+
+    let serial = run(BatchPolicy::Off, &specs, pus)?;
+    let batched = run(BatchPolicy::Auto, &specs, pus)?;
+
+    // coalescing must be invisible in the numbers: demultiplexed CG
+    // solutions are bitwise identical to solo solves
+    for (s, bt) in serial.reports.iter().zip(&batched.reports) {
+        if let (
+            JobOutput::Solve { x: xs, .. },
+            JobOutput::Solve { x: xb, .. },
+        ) = (&s.output, &bt.output)
+        {
+            assert_eq!(xs.len(), xb.len());
+            for (cs, cb) in xs.iter().zip(xb) {
+                for (u, v) in cs.iter().zip(cb) {
+                    assert_eq!(u.to_bits(), v.to_bits(), "batched result diverged");
+                }
+            }
+        }
+    }
+    println!("result check: batched solutions bitwise-match serial ✓");
+
+    let mut t = Table::new(&[
+        "mode",
+        "jobs/s",
+        "Gflop/s",
+        "batches",
+        "widest",
+        "cache hits",
+        "wall s",
+    ]);
+    for (name, o) in [("serial", &serial), ("batched", &batched)] {
+        let secs = o.elapsed.as_secs_f64().max(1e-9);
+        t.row(&[
+            name.to_string(),
+            format!("{:.1}", o.reports.len() as f64 / secs),
+            format!("{:.2}", gflops(&o.reports, secs)),
+            o.batches.to_string(),
+            o.widest.to_string(),
+            o.cache_hits.to_string(),
+            format!("{secs:.3}"),
+        ]);
+    }
+    t.print();
+    Ok(())
+}

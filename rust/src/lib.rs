@@ -20,6 +20,7 @@ pub mod kernels;
 pub mod matgen;
 pub mod perfmodel;
 pub mod runtime;
+pub mod sched;
 pub mod solvers;
 pub mod sparsemat;
 pub mod taskq;

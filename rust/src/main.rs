@@ -12,6 +12,14 @@
 //!   kpm    [--n N] [--moments M] [--vectors R]
 //!          (the blocked-fused moments run at the width the nvecs-axis
 //!           autotune picks for the random-vector block)
+//!   serve  --requests F.jsonl [--oneshot] [--pus P] [--shepherds S]
+//!          [--cache-mb M] [--max-batch W] [--no-batch]
+//!          (the asynchronous solve service: jobs from a JSONL request
+//!           file are scheduled on the task queue, operators are cached
+//!           by sparsity fingerprint, and concurrent single-RHS CG jobs
+//!           are coalesced into block solves — see ghost::sched. With
+//!           --oneshot the file is processed once and a throughput
+//!           summary printed; without it the file is tailed forever.)
 //!
 //! Matrices: poisson7 | stencil27 | matpde | anderson | cage | random.
 //! (clap is not vendorable offline; flags are parsed by the tiny parser
@@ -354,6 +362,73 @@ fn cmd_kpm(a: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_serve(a: &Args) -> Result<()> {
+    use ghost::sched::{request, BatchPolicy, JobScheduler, SchedConfig};
+    let path = a.str("requests", "");
+    ghost::ensure!(
+        !path.is_empty(),
+        InvalidArg,
+        "serve needs --requests <file.jsonl>"
+    );
+    let pus: usize = a.get(
+        "pus",
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+    );
+    let cfg = SchedConfig {
+        nshepherds: a.get("shepherds", pus.max(2)),
+        cache_budget_bytes: a.get::<usize>("cache-mb", 256) << 20,
+        batching: if a.flags.contains_key("no-batch") {
+            BatchPolicy::Off
+        } else {
+            BatchPolicy::Auto
+        },
+        max_batch: a.get("max-batch", 8),
+    };
+    let oneshot = a.flags.contains_key("oneshot");
+    println!(
+        "solve service: {pus} PUs, {} shepherds, {} MiB operator cache, batching {:?}",
+        cfg.nshepherds,
+        cfg.cache_budget_bytes >> 20,
+        cfg.batching
+    );
+    let sched = JobScheduler::new(topology::Machine::small_node(pus), cfg);
+    let mut out = std::io::stdout();
+    if oneshot {
+        let s = request::serve_oneshot(&sched, std::path::Path::new(&path), &mut out)?;
+        println!(
+            "served {} jobs ({} failed) in {:.3}s — {:.1} jobs/s, {:.2} Gflop/s",
+            s.jobs,
+            s.failed,
+            s.elapsed.as_secs_f64(),
+            s.jobs_per_sec,
+            s.gflops
+        );
+        println!(
+            "operator cache: {} hits / {} misses, {} evictions, {:.1} MiB resident; \
+             batches: {} ({} jobs coalesced, widest {})",
+            s.stats.cache.hits,
+            s.stats.cache.misses,
+            s.stats.cache.evictions,
+            s.stats.cache.resident_bytes as f64 / (1 << 20) as f64,
+            s.stats.batches,
+            s.stats.batched_jobs,
+            s.stats.max_batch_width
+        );
+        let cancelled = sched.shutdown();
+        ghost::ensure!(cancelled == 0, Task, "{cancelled} jobs stranded at shutdown");
+        ghost::ensure!(s.failed == 0, Task, "{} request(s) failed", s.failed);
+    } else {
+        eprintln!("tailing {path} (Ctrl-C to stop)");
+        request::serve_follow(
+            &sched,
+            std::path::Path::new(&path),
+            std::time::Duration::from_millis(200),
+            &mut out,
+        )?;
+    }
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let cmd = argv.first().map(|s| s.as_str()).unwrap_or("info");
@@ -364,9 +439,12 @@ fn main() -> Result<()> {
         "cg" => cmd_cg(&args)?,
         "eig" => cmd_eig(&args)?,
         "kpm" => cmd_kpm(&args)?,
+        "serve" => cmd_serve(&args)?,
         "version" => println!("ghost {}", ghost::version()),
         other => {
-            eprintln!("unknown command '{other}'; see the module docs (info|spmv|cg|eig|kpm)");
+            eprintln!(
+                "unknown command '{other}'; see the module docs (info|spmv|cg|eig|kpm|serve)"
+            );
             std::process::exit(2);
         }
     }

@@ -1,0 +1,237 @@
+//! Request batching: bundled multi-RHS CG for the solve service.
+//!
+//! The batcher coalesces concurrent single-RHS CG jobs that target the
+//! same cached operator into one *block* solve so the matrix is streamed
+//! once per iteration for all of them ([`Operator::apply_block`],
+//! section 5.2 — the point of SpMMV). Unlike O'Leary block CG
+//! ([`crate::solvers::block_cg`]), the columns here are mathematically
+//! *independent*: every column keeps its own alpha/beta/residual
+//! recurrence and only the matrix pass is shared. That is exactly what a
+//! batcher needs — demultiplexed per-column results are bitwise
+//! identical to running each job alone (the SpMMV kernel accumulates
+//! each column independently in the same order at every width), so
+//! callers cannot observe whether their request was coalesced.
+//!
+//! Columns converge (or fail) individually: a finished column is frozen
+//! — its x/r/p state stops updating — while the remaining columns keep
+//! iterating, and per-column tolerances and iteration caps are honored.
+
+use crate::core::{GhostError, Result, Scalar};
+use crate::densemat::{DenseMat, Layout};
+use crate::solvers::Operator;
+
+/// Per-column outcome of a [`batch_cg`] run.
+#[derive(Debug)]
+pub struct ColumnStats {
+    pub iterations: usize,
+    pub final_residual: f64,
+    pub converged: bool,
+    /// Breakdown error for this column, if any (the other columns of the
+    /// batch are unaffected).
+    pub error: Option<GhostError>,
+}
+
+/// Gather column `j` of the local rows into a reusable contiguous
+/// buffer (the iteration loop must not allocate per dot product).
+fn fill_col<S: Scalar>(m: &DenseMat<S>, j: usize, buf: &mut [S]) {
+    for (i, v) in buf.iter_mut().enumerate() {
+        *v = m.at(i, j);
+    }
+}
+
+/// Solve A x_j = b_j for every column j *independently* while sharing
+/// each matrix pass across all columns through
+/// [`Operator::apply_block`]. Per-column `tols` / `max_iters` are
+/// honored; finished columns are frozen while the rest iterate. Each
+/// column's arithmetic is identical to a single-column run, so results
+/// demultiplex bitwise-exactly.
+pub fn batch_cg<S: Scalar, O: Operator<S>>(
+    op: &mut O,
+    b: &DenseMat<S>,
+    x: &mut DenseMat<S>,
+    tols: &[f64],
+    max_iters: &[usize],
+) -> Result<Vec<ColumnStats>> {
+    let n = op.nlocal();
+    let nv = b.ncols();
+    crate::ensure!(
+        b.nrows() >= n && x.nrows() >= n && x.ncols() == nv,
+        DimMismatch,
+        "batch_cg sizes"
+    );
+    crate::ensure!(
+        tols.len() == nv && max_iters.len() == nv,
+        DimMismatch,
+        "batch_cg per-column parameter counts"
+    );
+    // reusable column scratch: the iteration loop performs its dots on
+    // gathered contiguous columns without allocating
+    let mut ca = vec![S::ZERO; n];
+    let mut cb = vec![S::ZERO; n];
+    // per-column ||b|| through the operator's global reduction
+    let bnorm: Vec<f64> = (0..nv)
+        .map(|j| {
+            fill_col(b, j, &mut ca);
+            op.dot(&ca, &ca).re().sqrt().max(1e-300)
+        })
+        .collect();
+    // R = B - A X, P = R (one block pass)
+    let mut q = DenseMat::<S>::zeros(n, nv, Layout::RowMajor);
+    op.apply_block(x, &mut q)?;
+    let mut r = DenseMat::<S>::from_fn(n, nv, Layout::RowMajor, |i, j| {
+        b.at(i, j) - q.at(i, j)
+    });
+    let mut p = r.clone();
+    let mut rr: Vec<S> = (0..nv)
+        .map(|j| {
+            fill_col(&r, j, &mut ca);
+            op.dot(&ca, &ca)
+        })
+        .collect();
+    let mut stats: Vec<ColumnStats> = (0..nv)
+        .map(|_| ColumnStats {
+            iterations: 0,
+            final_residual: f64::NAN,
+            converged: false,
+            error: None,
+        })
+        .collect();
+    let mut active: Vec<bool> = vec![true; nv];
+    let mut it = 0usize;
+    loop {
+        // top-of-loop convergence / iteration-cap checks, mirroring
+        // solvers::cg exactly (iterations count completed updates)
+        for j in 0..nv {
+            if !active[j] {
+                continue;
+            }
+            let rnorm = rr[j].re().sqrt();
+            if rnorm <= tols[j] * bnorm[j] {
+                active[j] = false;
+                stats[j].iterations = it;
+                stats[j].final_residual = rnorm / bnorm[j];
+                stats[j].converged = true;
+            } else if it >= max_iters[j] {
+                active[j] = false;
+                stats[j].iterations = it;
+                stats[j].final_residual = rnorm / bnorm[j];
+                stats[j].converged = false;
+            }
+        }
+        if !active.iter().any(|&a| a) {
+            break;
+        }
+        // Q = A P: ONE streaming pass shared by every active column
+        // (frozen columns ride along; their stale output is ignored —
+        // column independence of the SpMMV kernel makes this free of
+        // numerical cross-talk)
+        op.apply_block(&p, &mut q)?;
+        for j in 0..nv {
+            if !active[j] {
+                continue;
+            }
+            fill_col(&p, j, &mut ca);
+            fill_col(&q, j, &mut cb);
+            let pq = op.dot(&ca, &cb);
+            if pq.abs() < 1e-300 {
+                active[j] = false;
+                stats[j].iterations = it;
+                stats[j].final_residual = rr[j].re().sqrt() / bnorm[j];
+                stats[j].error = Some(GhostError::NoConvergence(
+                    "CG breakdown: <p,Ap> = 0".into(),
+                ));
+                continue;
+            }
+            let alpha = rr[j] / pq;
+            for i in 0..n {
+                *x.at_mut(i, j) += alpha * p.at(i, j);
+                *r.at_mut(i, j) -= alpha * q.at(i, j);
+            }
+            fill_col(&r, j, &mut ca);
+            let rr_new = op.dot(&ca, &ca);
+            let beta = rr_new / rr[j];
+            rr[j] = rr_new;
+            // p_j = r_j + beta p_j
+            for i in 0..n {
+                let v = r.at(i, j) + beta * p.at(i, j);
+                *p.at_mut(i, j) = v;
+            }
+        }
+        it += 1;
+    }
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matgen;
+    use crate::solvers::LocalSellOp;
+
+    #[test]
+    fn batched_columns_are_bitwise_identical_to_width_one_runs() {
+        let a = matgen::poisson7::<f64>(6, 6, 4);
+        let n = a.nrows();
+        let nv = 4;
+        let b = DenseMat::<f64>::random(n, nv, Layout::RowMajor, 17);
+        // batched solve at width nv
+        let mut op = LocalSellOp::new(&a, 8, 64, 1).unwrap();
+        let mut xb = DenseMat::<f64>::zeros(n, nv, Layout::RowMajor);
+        let st = batch_cg(&mut op, &b, &mut xb, &[1e-10; 4], &[1000; 4]).unwrap();
+        assert!(st.iter().all(|s| s.converged), "{st:?}");
+        // each column alone at width 1 must match bit for bit
+        for j in 0..nv {
+            let bj = DenseMat::<f64>::from_fn(n, 1, Layout::RowMajor, |i, _| b.at(i, j));
+            let mut op1 = LocalSellOp::new(&a, 8, 64, 1).unwrap();
+            let mut xj = DenseMat::<f64>::zeros(n, 1, Layout::RowMajor);
+            let s1 = batch_cg(&mut op1, &bj, &mut xj, &[1e-10], &[1000]).unwrap();
+            assert_eq!(s1[0].iterations, st[j].iterations, "col {j}");
+            assert_eq!(s1[0].final_residual.to_bits(), st[j].final_residual.to_bits());
+            for i in 0..n {
+                assert_eq!(
+                    xb.at(i, j).to_bits(),
+                    xj.at(i, 0).to_bits(),
+                    "col {j} row {i}: batched and solo runs must be bitwise equal"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn per_column_tolerances_and_caps_are_honored() {
+        let a = matgen::poisson7::<f64>(5, 5, 5);
+        let n = a.nrows();
+        let b = DenseMat::<f64>::random(n, 3, Layout::RowMajor, 3);
+        let mut op = LocalSellOp::new(&a, 8, 64, 1).unwrap();
+        let mut x = DenseMat::<f64>::zeros(n, 3, Layout::RowMajor);
+        let st = batch_cg(
+            &mut op,
+            &b,
+            &mut x,
+            &[1e-10, 1e-4, 1e-10],
+            &[1000, 1000, 2],
+        )
+        .unwrap();
+        assert!(st[0].converged && st[1].converged);
+        assert!(st[1].iterations <= st[0].iterations);
+        assert!(!st[2].converged, "{st:?}");
+        assert_eq!(st[2].iterations, 2);
+        // the capped column must not have poisoned the others
+        let mut ax = vec![0.0; n];
+        let x0: Vec<f64> = (0..n).map(|i| x.at(i, 0)).collect();
+        a.spmv(&x0, &mut ax);
+        for i in 0..n {
+            assert!((ax[i] - b.at(i, 0)).abs() < 1e-7, "row {i}");
+        }
+    }
+
+    #[test]
+    fn dimension_mismatch_rejected() {
+        let a = matgen::poisson7::<f64>(4, 4, 4);
+        let n = a.nrows();
+        let mut op = LocalSellOp::new(&a, 4, 16, 1).unwrap();
+        let b = DenseMat::<f64>::random(n, 2, Layout::RowMajor, 1);
+        let mut x = DenseMat::<f64>::zeros(n, 2, Layout::RowMajor);
+        assert!(batch_cg(&mut op, &b, &mut x, &[1e-8], &[10, 10]).is_err());
+    }
+}

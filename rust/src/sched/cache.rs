@@ -1,0 +1,374 @@
+//! Operator cache: memoized assembled-and-autotuned operators.
+//!
+//! Assembling a solve operator is expensive — the perfmodel-guided
+//! (C, sigma, variant) sweep of [`crate::tune`] plus the SELL-C-sigma
+//! build — and the solve service sees the *same* matrices over and over.
+//! The cache memoizes finished [`LocalSellOp`]s keyed by [`MatrixKey`]
+//! (the tuner's sparsity [`Fingerprint`] plus a content digest), so a
+//! repeated solve skips both assembly and the sweep. Eviction is LRU by
+//! *resident bytes* (SELL storage plus
+//! operator scratch), bounded by a byte budget; hit/miss/eviction
+//! counters are exported through [`CacheStats`] for the service's
+//! telemetry.
+//!
+//! Assembly happens under the cache lock: a second request for the same
+//! structure waits for the first assembly and then hits, instead of
+//! duplicating the sweep. (The lock is per-cache; per-entry building
+//! states are a ROADMAP follow-up if assembly latency under mixed
+//! traffic ever matters.)
+//!
+//! An evicted entry that is still referenced by a running job stays
+//! alive through its `Arc` until the job finishes; `resident_bytes`
+//! counts cache-owned entries only.
+//!
+//! The cache key is [`MatrixKey`], NOT the tuner's structural
+//! fingerprint alone: tuning decisions are value-independent (the SpMV
+//! cost profile depends only on structure), but a cached *operator*
+//! carries the matrix values — two matrices with identical sparsity
+//! structure and different values must not share one. The key therefore
+//! adds a digest of the column indices and value bit patterns.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::core::Result;
+use crate::solvers::LocalSellOp;
+use crate::sparsemat::Crs;
+use crate::tune::{self, Fingerprint, TunedConfig};
+
+/// Identity of an assembled operator: the tuner's structural
+/// fingerprint plus a content digest (column indices + value bits), so
+/// structurally-identical matrices with different numbers never share a
+/// cached operator or a batch bucket.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub struct MatrixKey {
+    pub fp: Fingerprint,
+    pub content: u64,
+}
+
+/// Compute the cache/bucket key for `a` (O(nnz) FNV-1a digest). The
+/// digest eats the row boundaries too: flattened colidx/values alone
+/// would collide for matrices that distribute the same entry stream
+/// over different rows.
+pub fn matrix_key(a: &Crs<f64>) -> MatrixKey {
+    let mut h: u64 = 0xcbf29ce484222325;
+    let mut eat = |v: u64| {
+        h ^= v;
+        h = h.wrapping_mul(0x100000001b3);
+    };
+    for &r in a.rowptr() {
+        eat(r as u64 + 1);
+    }
+    eat(u64::MAX - 1);
+    for &c in a.colidx() {
+        eat(c as u64 + 1);
+    }
+    eat(u64::MAX);
+    for &v in a.values() {
+        eat(v.to_bits());
+    }
+    MatrixKey {
+        fp: tune::fingerprint(a),
+        content: h,
+    }
+}
+
+/// A cached operator, shared between jobs. The mutex serializes solves
+/// on the same operator (its scratch buffers make `apply*` `&mut`).
+pub type SharedOp = Arc<Mutex<LocalSellOp<f64>>>;
+
+/// Cache telemetry counters.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    /// Bytes of all cache-owned operators.
+    pub resident_bytes: usize,
+    pub entries: usize,
+}
+
+struct Entry {
+    op: SharedOp,
+    bytes: usize,
+    last_used: u64,
+    config: TunedConfig,
+}
+
+#[derive(Default)]
+struct Inner {
+    map: HashMap<MatrixKey, Entry>,
+    /// Memoized batch-width decisions (tune_block) — independent of
+    /// operator entries, so the sweep runs once per matrix even when
+    /// the width is asked for before (or after) the entry is evicted.
+    widths: HashMap<MatrixKey, usize>,
+    tick: u64,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+    resident_bytes: usize,
+}
+
+/// LRU-by-bytes cache of assembled, autotuned operators.
+pub struct OperatorCache {
+    budget_bytes: usize,
+    inner: Mutex<Inner>,
+}
+
+impl OperatorCache {
+    /// Create a cache that keeps at most `budget_bytes` of resident
+    /// operator storage (always at least the most recent entry, even
+    /// when that single entry exceeds the budget).
+    pub fn new(budget_bytes: usize) -> Self {
+        OperatorCache {
+            budget_bytes,
+            inner: Mutex::new(Inner::default()),
+        }
+    }
+
+    pub fn budget_bytes(&self) -> usize {
+        self.budget_bytes
+    }
+
+    /// Fetch the operator for `a`'s sparsity structure, assembling (and
+    /// autotuning) it on a miss. Returns `(op, cache_hit)`. `nthreads`
+    /// only seeds the assembly; each job re-binds the operator to its
+    /// own PU reservation via `LocalSellOp::set_nthreads` after locking
+    /// it (the cached structure is thread-count independent).
+    pub fn get_or_assemble(&self, a: &Crs<f64>, nthreads: usize) -> Result<(SharedOp, bool)> {
+        self.get_or_assemble_keyed(matrix_key(a), a, nthreads)
+    }
+
+    /// [`OperatorCache::get_or_assemble`] with a precomputed key: the
+    /// O(nnz) digest is a full scan of the matrix, so callers that
+    /// already hold the key (the batch runner got it from the bucket)
+    /// must not pay for it again.
+    pub fn get_or_assemble_keyed(
+        &self,
+        key: MatrixKey,
+        a: &Crs<f64>,
+        nthreads: usize,
+    ) -> Result<(SharedOp, bool)> {
+        let mut guard = self.inner.lock().unwrap();
+        let g = &mut *guard;
+        g.tick += 1;
+        let now = g.tick;
+        if let Some(e) = g.map.get_mut(&key) {
+            e.last_used = now;
+            g.hits += 1;
+            return Ok((e.op.clone(), true));
+        }
+        g.misses += 1;
+        // assemble under the lock: a concurrent request for the same
+        // structure waits here, then hits (see module docs)
+        let tuned = tune::tune(a)?;
+        let op = LocalSellOp::with_variant(
+            a,
+            tuned.config.c,
+            tuned.config.sigma,
+            nthreads.max(1),
+            tuned.config.variant,
+        )?;
+        let bytes = op.resident_bytes();
+        let shared: SharedOp = Arc::new(Mutex::new(op));
+        g.map.insert(
+            key,
+            Entry {
+                op: shared.clone(),
+                bytes,
+                last_used: now,
+                config: tuned.config,
+            },
+        );
+        g.resident_bytes += bytes;
+        // LRU eviction by byte budget; the entry just inserted survives
+        while g.resident_bytes > self.budget_bytes && g.map.len() > 1 {
+            let lru = g
+                .map
+                .iter()
+                .filter(|&(k, _)| *k != key)
+                .min_by_key(|&(_, e)| e.last_used)
+                .map(|(k, _)| *k);
+            let Some(lru) = lru else { break };
+            if let Some(e) = g.map.remove(&lru) {
+                g.resident_bytes -= e.bytes;
+                g.evictions += 1;
+            }
+        }
+        Ok((shared, false))
+    }
+
+    /// The batch width the request batcher may coalesce up to for this
+    /// matrix: the nvecs-axis decision of [`tune::tune_block`] capped at
+    /// `max_width`. The sweep result is memoized (independently of the
+    /// operator entry, under the cache lock — concurrent runners for a
+    /// fresh matrix wait rather than duplicating the measurement); the
+    /// memo records the first caller's sweep, so callers should use a
+    /// consistent `max_width` (the scheduler's `max_batch` is fixed).
+    pub fn block_width(&self, a: &Crs<f64>, max_width: usize) -> Result<usize> {
+        self.block_width_keyed(matrix_key(a), a, max_width)
+    }
+
+    /// [`OperatorCache::block_width`] with a precomputed key.
+    pub fn block_width_keyed(
+        &self,
+        key: MatrixKey,
+        a: &Crs<f64>,
+        max_width: usize,
+    ) -> Result<usize> {
+        let max_width = max_width.max(1);
+        let mut g = self.inner.lock().unwrap();
+        if let Some(&w) = g.widths.get(&key) {
+            return Ok(w.min(max_width));
+        }
+        let w = tune::tune_block(a, max_width)?.config.nvecs.clamp(1, max_width);
+        // bound the memo for long-lived services (decisions are tiny,
+        // but never-evicted growth is still growth)
+        if g.widths.len() >= 1024 {
+            g.widths.clear();
+        }
+        g.widths.insert(key, w);
+        Ok(w)
+    }
+
+    /// Tuned configuration of a cached matrix, if present.
+    pub fn config_of(&self, a: &Crs<f64>) -> Option<TunedConfig> {
+        let key = matrix_key(a);
+        self.inner.lock().unwrap().map.get(&key).map(|e| e.config)
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        let g = self.inner.lock().unwrap();
+        CacheStats {
+            hits: g.hits,
+            misses: g.misses,
+            evictions: g.evictions,
+            resident_bytes: g.resident_bytes,
+            entries: g.map.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matgen;
+    use crate::solvers::Operator;
+
+    #[test]
+    fn hit_on_same_matrix_miss_on_same_structure_different_values() {
+        let cache = OperatorCache::new(1 << 30);
+        let a = matgen::poisson7::<f64>(6, 6, 4);
+        let (_op, hit) = cache.get_or_assemble(&a, 1).unwrap();
+        assert!(!hit);
+        let (_op, hit) = cache.get_or_assemble(&a, 1).unwrap();
+        assert!(hit);
+        // same sparsity structure, different values: the structural
+        // tuning fingerprint matches, but the *operator* must not be
+        // shared — that would silently solve the wrong system
+        let mut b = a.clone();
+        for v in b.values_mut() {
+            *v *= 2.0;
+        }
+        assert_eq!(
+            crate::tune::fingerprint(&a),
+            crate::tune::fingerprint(&b),
+            "precondition: structurally identical"
+        );
+        assert_ne!(matrix_key(&a), matrix_key(&b));
+        let (opb, hit) = cache.get_or_assemble(&b, 1).unwrap();
+        assert!(!hit, "value-different matrix must miss");
+        // and the operator it returns really applies b, not a
+        let n = b.nrows();
+        let x = vec![1.0; n];
+        let mut yb = vec![0.0; n];
+        opb.lock().unwrap().apply(&x, &mut yb);
+        let mut want = vec![0.0; n];
+        b.spmv(&x, &mut want);
+        for i in 0..n {
+            assert!((yb[i] - want[i]).abs() < 1e-12, "row {i}");
+        }
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 2, 2));
+        assert!(s.resident_bytes > 0);
+    }
+
+    #[test]
+    fn matrix_key_distinguishes_row_boundaries() {
+        // same flattened colidx [0,1,2,0] and values, same row-length
+        // multiset {3,1} (same structural fingerprint) — only the row
+        // boundaries differ; the content digest must separate them
+        let a = crate::sparsemat::Crs::<f64>::from_row_fn(2, 3, |i, cols, vals| {
+            if i == 0 {
+                for c in [0, 1, 2] {
+                    cols.push(c);
+                    vals.push(1.0 + c as f64);
+                }
+            } else {
+                cols.push(0);
+                vals.push(4.0);
+            }
+        })
+        .unwrap();
+        let b = crate::sparsemat::Crs::<f64>::from_row_fn(2, 3, |i, cols, vals| {
+            if i == 0 {
+                cols.push(0);
+                vals.push(1.0);
+            } else {
+                for (c, v) in [(1, 2.0), (2, 3.0), (0, 4.0)] {
+                    cols.push(c);
+                    vals.push(v);
+                }
+            }
+        })
+        .unwrap();
+        assert_eq!(crate::tune::fingerprint(&a), crate::tune::fingerprint(&b));
+        assert_eq!(a.colidx(), b.colidx());
+        assert_ne!(matrix_key(&a), matrix_key(&b));
+    }
+
+    #[test]
+    fn eviction_respects_byte_budget_and_lru_order() {
+        // budget sized to hold roughly two of the three operators
+        let mats: Vec<_> = [(6usize, 6, 4), (7, 7, 4), (8, 8, 4)]
+            .iter()
+            .map(|&(x, y, z)| matgen::poisson7::<f64>(x, y, z))
+            .collect();
+        let probe = OperatorCache::new(1 << 30);
+        let mut sizes = Vec::new();
+        for m in &mats {
+            let (op, _) = probe.get_or_assemble(m, 1).unwrap();
+            sizes.push(op.lock().unwrap().resident_bytes());
+        }
+        let budget = sizes[0] + sizes[1] + sizes[2] / 2;
+        let cache = OperatorCache::new(budget);
+        cache.get_or_assemble(&mats[0], 1).unwrap();
+        cache.get_or_assemble(&mats[1], 1).unwrap();
+        // touch mats[0] so mats[1] is LRU when mats[2] arrives
+        cache.get_or_assemble(&mats[0], 1).unwrap();
+        cache.get_or_assemble(&mats[2], 1).unwrap();
+        let s = cache.stats();
+        assert!(s.evictions >= 1, "{s:?}");
+        assert!(
+            s.resident_bytes <= budget,
+            "resident {} > budget {budget}",
+            s.resident_bytes
+        );
+        // mats[1] (LRU) was evicted; mats[0] survived
+        let (_op, hit) = cache.get_or_assemble(&mats[0], 1).unwrap();
+        assert!(hit, "recently-used entry must survive eviction");
+        let (_op, hit) = cache.get_or_assemble(&mats[1], 1).unwrap();
+        assert!(!hit, "LRU entry must have been evicted");
+    }
+
+    #[test]
+    fn block_width_is_memoized_and_capped() {
+        let cache = OperatorCache::new(1 << 30);
+        let a = matgen::poisson7::<f64>(6, 6, 4);
+        cache.get_or_assemble(&a, 1).unwrap();
+        let w = cache.block_width(&a, 8).unwrap();
+        assert!((1..=8).contains(&w));
+        assert_eq!(cache.block_width(&a, 8).unwrap(), w);
+        assert!(cache.block_width(&a, 2).unwrap() <= 2);
+    }
+}

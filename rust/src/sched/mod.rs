@@ -1,0 +1,790 @@
+//! Asynchronous solve service (the production consumer of the GHOST
+//! building blocks).
+//!
+//! GHOST's tasking layer exists so asynchronous work can run alongside
+//! compute (section 4.2); this module builds the layer above it that the
+//! paper's case study implies: a long-lived, resource-arbitrated solver
+//! engine that accepts concurrent solve requests and arbitrates PUs,
+//! operators and batches for them — the pattern task-based sparse
+//! solver runtimes converge on (Lacoste et al., arXiv:1405.2636). Three
+//! cooperating parts:
+//!
+//! - **[`JobScheduler`]** — accepts [`JobSpec`]s (matrix source, solver
+//!   kind, tolerance, priority, PU hints) and executes them
+//!   asynchronously on [`taskq::TaskQueue`] with typed [`JobHandle`]
+//!   futures. PRIO_HIGH jobs take the queue's fast lane; per-job
+//!   `nthreads`/NUMA hints become the task's PU reservation.
+//! - **[`cache::OperatorCache`]** — memoizes assembled-and-autotuned
+//!   operators keyed by the tuner's sparsity fingerprint plus a matrix
+//!   content digest ([`cache::MatrixKey`]), LRU-evicted by resident
+//!   bytes, so repeated solves against the same matrix skip SELL
+//!   assembly and the (C, sigma, variant) sweep.
+//! - **the request batcher** ([`batch`]) — coalesces concurrent
+//!   single-RHS CG jobs that target the same cached operator into one
+//!   block solve through [`Operator::apply_block`] (width capped by the
+//!   tuner's nvecs axis), then demultiplexes per-job solutions and
+//!   residuals — bitwise identical to solo execution, so callers cannot
+//!   observe coalescing.
+//!
+//! The `ghost serve` CLI mode drives this engine from a JSONL request
+//! file (see [`request`]), and `examples/schedbench.rs` measures the
+//! throughput win of batching + caching over serial dispatch.
+//!
+//! [`Operator::apply_block`]: crate::solvers::Operator::apply_block
+//! [`taskq::TaskQueue`]: crate::taskq::TaskQueue
+
+pub mod batch;
+pub mod cache;
+pub mod request;
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::core::{GhostError, Result, Rng};
+use crate::densemat::{DenseMat, Layout};
+use crate::matgen;
+use crate::solvers::block_cg::block_cg;
+use crate::solvers::cheb_filter::chebfd;
+use crate::solvers::kpm::{kpm_moments_op, KpmConfig, KpmVariant};
+use crate::solvers::lanczos::{lanczos, spectral_bounds};
+use crate::solvers::Operator;
+use crate::sparsemat::Crs;
+use crate::taskq::{flags as tflags, TaskOpts, TaskQueue};
+use crate::topology::Machine;
+use batch::batch_cg;
+use cache::{matrix_key, CacheStats, MatrixKey, OperatorCache};
+
+/// Where a job's matrix comes from.
+#[derive(Clone)]
+pub enum MatrixSource {
+    /// A named generator (see [`build_named_matrix`]) with a target
+    /// size. Named matrices are memoized per scheduler, so eight jobs
+    /// against two matrices build each matrix once.
+    Named { name: String, n: usize },
+    /// A caller-assembled matrix handle.
+    Mat(Arc<Crs<f64>>),
+}
+
+/// Which solver a job runs.
+#[derive(Clone, Debug)]
+pub enum SolverKind {
+    /// Single-RHS CG — the batchable kind: concurrent Cg jobs on the
+    /// same matrix coalesce into one block pass.
+    Cg { tol: f64, max_iters: usize },
+    /// O'Leary block CG over `nrhs` random right-hand sides.
+    BlockCg {
+        nrhs: usize,
+        tol: f64,
+        max_iters: usize,
+    },
+    /// `steps` Lanczos iterations (full reorthogonalization).
+    Lanczos { steps: usize },
+    /// KPM Chebyshev moments (matrix must be pre-scaled to [-1, 1],
+    /// e.g. the `hamiltonian` named source).
+    Kpm { moments: usize, vectors: usize },
+    /// Chebyshev filter diagonalization over a `block`-column subspace.
+    ChebFilter { degree: usize, block: usize },
+}
+
+impl SolverKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SolverKind::Cg { .. } => "cg",
+            SolverKind::BlockCg { .. } => "block_cg",
+            SolverKind::Lanczos { .. } => "lanczos",
+            SolverKind::Kpm { .. } => "kpm",
+            SolverKind::ChebFilter { .. } => "cheb_filter",
+        }
+    }
+}
+
+/// Job priority: `High` maps to the task queue's PRIO_HIGH fast lane.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Priority {
+    Normal,
+    High,
+}
+
+/// One solve request.
+#[derive(Clone)]
+pub struct JobSpec {
+    pub matrix: MatrixSource,
+    pub solver: SolverKind,
+    pub priority: Priority,
+    /// PU reservation hint for the executing task (clamped to the
+    /// machine by the task queue).
+    pub nthreads: usize,
+    /// NUMA placement hint (best effort; see taskq flags).
+    pub numanode: Option<usize>,
+    /// Seed for generated right-hand sides / start vectors.
+    pub seed: u64,
+    /// Explicit right-hand side for Cg jobs; generated from `seed`
+    /// ([`default_rhs`]) when absent.
+    pub rhs: Option<Vec<f64>>,
+}
+
+impl JobSpec {
+    pub fn new(matrix: MatrixSource, solver: SolverKind) -> Self {
+        JobSpec {
+            matrix,
+            solver,
+            priority: Priority::Normal,
+            nthreads: 1,
+            numanode: None,
+            seed: 0,
+            rhs: None,
+        }
+    }
+}
+
+/// Deterministic right-hand side for jobs that do not carry one.
+pub fn default_rhs(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed ^ 0xD1B5_4A32_D192_ED03);
+    (0..n).map(|_| rng.normal()).collect()
+}
+
+/// Build one of the named matrices the service understands. Unlike the
+/// CLI's lenient fallback, unknown names are an error — a service must
+/// not silently substitute a different workload.
+pub fn build_named_matrix(name: &str, n: usize) -> Result<Crs<f64>> {
+    let cbrt = |n: usize| (n as f64).cbrt().ceil() as usize;
+    Ok(match name {
+        "poisson7" => matgen::poisson7(cbrt(n), cbrt(n), cbrt(n)),
+        "stencil27" => matgen::stencil27(cbrt(n), cbrt(n), cbrt(n)),
+        "matpde" => matgen::matpde((n as f64).sqrt().ceil() as usize),
+        "anderson" => matgen::anderson((n as f64).sqrt().ceil() as usize, 2.0, 42),
+        "cage" => matgen::cage_like(n, 11),
+        "random" => matgen::random_sparse(n, 8, 13),
+        // spectrum pre-scaled to [-1, 1]: the KPM workload
+        "hamiltonian" => {
+            matgen::scaled_hamiltonian((n as f64).sqrt().ceil() as usize, 2.0, 42).0
+        }
+        other => {
+            return Err(GhostError::InvalidArg(format!(
+                "unknown matrix source '{other}'"
+            )))
+        }
+    })
+}
+
+/// Solver output, per kind.
+#[derive(Clone, Debug)]
+pub enum JobOutput {
+    /// Cg / BlockCg: solution columns (one for Cg) plus convergence
+    /// info. For a batched Cg job these are *this job's* demultiplexed
+    /// column and residual.
+    Solve {
+        x: Vec<Vec<f64>>,
+        iterations: usize,
+        final_residual: f64,
+        converged: bool,
+    },
+    /// Lanczos: Ritz values (ascending).
+    Eigenvalues { values: Vec<f64>, iterations: usize },
+    /// KPM: Chebyshev moments.
+    Moments { mu: Vec<f64> },
+    /// ChebFilter: Ritz values in the filtered window.
+    Filtered {
+        eigenvalues: Vec<f64>,
+        filter_applications: usize,
+    },
+}
+
+/// Completed-job report handed back through [`JobHandle::wait`].
+#[derive(Clone, Debug)]
+pub struct JobReport {
+    pub id: u64,
+    pub output: JobOutput,
+    /// nnz of the job's matrix (flop accounting: ~2 nnz flops per
+    /// matrix column pass).
+    pub nnz: usize,
+    /// Matrix column passes attributed to this job (approximate for
+    /// batched jobs: iterations + 1 per column).
+    pub matvecs: usize,
+    /// Number of right-hand sides solved in the block this job rode in
+    /// (1 = it ran alone; >= 2 = the batcher coalesced it).
+    pub batched_width: usize,
+    /// Whether the operator came out of the cache.
+    pub cache_hit: bool,
+    /// Submit-to-completion latency.
+    pub elapsed: Duration,
+    /// Completion timestamp (ordering diagnostics).
+    pub completed_at: Instant,
+}
+
+struct JobState {
+    id: u64,
+    result: Mutex<Option<Result<JobReport>>>,
+    done: Condvar,
+}
+
+/// Typed future for a submitted job. `wait` blocks until the job
+/// completes and surfaces solver errors as `Err`.
+pub struct JobHandle {
+    state: Arc<JobState>,
+}
+
+impl JobHandle {
+    pub fn id(&self) -> u64 {
+        self.state.id
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.state.result.lock().unwrap().is_some()
+    }
+
+    /// Block until the job finishes; returns its report or the solver /
+    /// scheduler error that failed it.
+    pub fn wait(self) -> Result<JobReport> {
+        let mut r = self.state.result.lock().unwrap();
+        while r.is_none() {
+            r = self.state.done.wait(r).unwrap();
+        }
+        r.take().expect("job result present")
+    }
+}
+
+/// How the batcher coalesces single-RHS CG jobs.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum BatchPolicy {
+    /// No coalescing: every job solves alone (still width-1 through the
+    /// same bundled-CG path, so results are identical to batched runs).
+    Off,
+    /// Coalesce up to exactly this many right-hand sides.
+    Fixed(usize),
+    /// Width chosen by the autotuner's nvecs axis
+    /// ([`crate::tune::tune_block`]) for each matrix, capped by
+    /// [`SchedConfig::max_batch`].
+    Auto,
+}
+
+/// Scheduler configuration.
+#[derive(Clone, Debug)]
+pub struct SchedConfig {
+    /// Shepherd threads of the underlying task queue.
+    pub nshepherds: usize,
+    /// Operator-cache byte budget.
+    pub cache_budget_bytes: usize,
+    pub batching: BatchPolicy,
+    /// Hard cap on coalesced width (also the nvecs the Auto policy
+    /// tunes for).
+    pub max_batch: usize,
+}
+
+impl Default for SchedConfig {
+    fn default() -> Self {
+        SchedConfig {
+            nshepherds: 4,
+            cache_budget_bytes: 256 << 20,
+            batching: BatchPolicy::Auto,
+            max_batch: 8,
+        }
+    }
+}
+
+/// Scheduler telemetry.
+#[derive(Clone, Copy, Debug)]
+pub struct SchedStats {
+    pub submitted: u64,
+    pub completed: u64,
+    pub failed: u64,
+    /// Coalesced block solves executed (width >= 2).
+    pub batches: u64,
+    /// Jobs that rode in a coalesced block.
+    pub batched_jobs: u64,
+    pub max_batch_width: usize,
+    pub cache: CacheStats,
+}
+
+#[derive(Default)]
+struct Counters {
+    submitted: u64,
+    completed: u64,
+    failed: u64,
+    batches: u64,
+    batched_jobs: u64,
+    max_batch_width: usize,
+}
+
+/// A single-RHS CG job parked in a batch bucket.
+struct PendingCg {
+    state: Arc<JobState>,
+    b: Vec<f64>,
+    tol: f64,
+    max_iters: usize,
+    submitted_at: Instant,
+}
+
+/// A non-batched job, bundled for the executing task.
+struct DirectJob {
+    solver: SolverKind,
+    rhs: Option<Vec<f64>>,
+    seed: u64,
+    id: u64,
+    submitted_at: Instant,
+}
+
+struct SchedInner {
+    batching: BatchPolicy,
+    max_batch: usize,
+    /// Batch buckets: pending single-RHS CG jobs per matrix (keyed by
+    /// structure + content so value-different matrices never coalesce).
+    pending: Mutex<HashMap<MatrixKey, VecDeque<PendingCg>>>,
+    /// Named-matrix memo (build each generator once per scheduler).
+    mats: Mutex<HashMap<(String, usize), Arc<Crs<f64>>>>,
+    /// Every submitted-but-not-yet-completed job, so shutdown can fail
+    /// (rather than strand) jobs whose task never ran.
+    jobs: Mutex<HashMap<u64, Arc<JobState>>>,
+    next_id: AtomicU64,
+    counters: Mutex<Counters>,
+}
+
+/// The solve service: submit [`JobSpec`]s, get [`JobHandle`]s.
+#[derive(Clone)]
+pub struct JobScheduler {
+    queue: TaskQueue,
+    cache: Arc<OperatorCache>,
+    inner: Arc<SchedInner>,
+}
+
+impl JobScheduler {
+    pub fn new(machine: Machine, cfg: SchedConfig) -> Self {
+        JobScheduler {
+            queue: TaskQueue::new(machine, cfg.nshepherds.max(1)),
+            cache: Arc::new(OperatorCache::new(cfg.cache_budget_bytes)),
+            inner: Arc::new(SchedInner {
+                batching: cfg.batching,
+                max_batch: cfg.max_batch.max(1),
+                pending: Mutex::new(HashMap::new()),
+                mats: Mutex::new(HashMap::new()),
+                jobs: Mutex::new(HashMap::new()),
+                next_id: AtomicU64::new(0),
+                counters: Mutex::new(Counters::default()),
+            }),
+        }
+    }
+
+    /// The underlying task queue (e.g. to co-schedule non-solve work).
+    pub fn queue(&self) -> &TaskQueue {
+        &self.queue
+    }
+
+    /// The operator cache (telemetry).
+    pub fn cache(&self) -> &OperatorCache {
+        &self.cache
+    }
+
+    pub fn stats(&self) -> SchedStats {
+        let c = self.inner.counters.lock().unwrap();
+        SchedStats {
+            submitted: c.submitted,
+            completed: c.completed,
+            failed: c.failed,
+            batches: c.batches,
+            batched_jobs: c.batched_jobs,
+            max_batch_width: c.max_batch_width,
+            cache: self.cache.stats(),
+        }
+    }
+
+    /// Wait until every submitted job has completed.
+    pub fn drain(&self) {
+        self.queue.drain();
+    }
+
+    /// Drain-free stop: running jobs finish (the task queue joins its
+    /// shepherds), then every job whose task never ran — cancelled
+    /// pending tasks and right-hand sides still parked in batch buckets
+    /// — is failed with a cancellation error instead of stranding its
+    /// waiter. Returns the number of jobs cancelled this way.
+    pub fn shutdown(&self) -> usize {
+        self.queue.shutdown();
+        // buckets first (their runners are gone), then any registered
+        // job whose result never arrived
+        {
+            let mut pend = self.inner.pending.lock().unwrap();
+            pend.clear();
+        }
+        let stranded: Vec<Arc<JobState>> =
+            self.inner.jobs.lock().unwrap().drain().map(|(_, s)| s).collect();
+        let mut cancelled = 0usize;
+        for state in stranded {
+            // shepherds are joined: a result-less job can no longer be
+            // completed by anyone else
+            if state.result.lock().unwrap().is_none() {
+                cancelled += 1;
+                self.complete(
+                    &state,
+                    Err(GhostError::Task(
+                        "job cancelled by scheduler shutdown before execution".into(),
+                    )),
+                );
+            }
+        }
+        cancelled
+    }
+
+    fn complete(&self, state: &JobState, res: Result<JobReport>) {
+        self.inner.jobs.lock().unwrap().remove(&state.id);
+        let mut slot = state.result.lock().unwrap();
+        if slot.is_some() {
+            return; // already completed (shutdown race insurance)
+        }
+        {
+            let mut c = self.inner.counters.lock().unwrap();
+            if res.is_ok() {
+                c.completed += 1;
+            } else {
+                c.failed += 1;
+            }
+        }
+        *slot = Some(res);
+        drop(slot);
+        state.done.notify_all();
+    }
+
+    fn resolve_matrix(&self, src: &MatrixSource) -> Result<Arc<Crs<f64>>> {
+        match src {
+            MatrixSource::Mat(a) => Ok(a.clone()),
+            MatrixSource::Named { name, n } => {
+                let key = (name.clone(), *n);
+                let mut mats = self.inner.mats.lock().unwrap();
+                if let Some(a) = mats.get(&key) {
+                    return Ok(a.clone());
+                }
+                let a = Arc::new(build_named_matrix(name, *n)?);
+                // bound the memo: a long-lived service seeing many
+                // distinct (name, n) pairs must not grow without limit
+                // (jobs holding an Arc keep their matrix alive; dropping
+                // the memo only costs a rebuild)
+                if mats.len() >= 32 {
+                    mats.clear();
+                }
+                mats.insert(key, a.clone());
+                Ok(a)
+            }
+        }
+    }
+
+    /// Submit a job for asynchronous execution. Matrix resolution (and
+    /// fingerprinting, for batch bucketing) happens here; assembly,
+    /// autotuning and the solve itself run later on a shepherd under
+    /// the job's PU reservation.
+    pub fn submit(&self, spec: JobSpec) -> Result<JobHandle> {
+        let a = self.resolve_matrix(&spec.matrix)?;
+        if let Some(b) = &spec.rhs {
+            crate::ensure!(
+                b.len() == a.nrows(),
+                DimMismatch,
+                "rhs length {} != matrix rows {}",
+                b.len(),
+                a.nrows()
+            );
+        }
+        let id = self.inner.next_id.fetch_add(1, Ordering::SeqCst) + 1;
+        let state = Arc::new(JobState {
+            id,
+            result: Mutex::new(None),
+            done: Condvar::new(),
+        });
+        {
+            let mut c = self.inner.counters.lock().unwrap();
+            c.submitted += 1;
+        }
+        self.inner.jobs.lock().unwrap().insert(id, state.clone());
+        let JobSpec {
+            solver,
+            priority,
+            nthreads,
+            numanode,
+            seed,
+            rhs,
+            ..
+        } = spec;
+        let topts = TaskOpts {
+            nthreads: nthreads.max(1),
+            numanode,
+            flags: match priority {
+                Priority::High => tflags::PRIO_HIGH,
+                Priority::Normal => tflags::DEFAULT,
+            },
+            deps: vec![],
+        };
+        let submitted_at = Instant::now();
+        let task = match (solver, self.inner.batching) {
+            (SolverKind::Cg { tol, max_iters }, policy) if policy != BatchPolicy::Off => {
+                // park in the batch bucket, then enqueue a runner; the
+                // first runner to execute drains every compatible job
+                // parked so far into one block solve. High-priority
+                // right-hand sides park at the *front* so the fast-lane
+                // runner solves them in its own batch rather than
+                // spending its slot on earlier normal traffic.
+                let n = a.nrows();
+                let b = rhs.unwrap_or_else(|| default_rhs(n, seed));
+                let fp = matrix_key(&a);
+                let pending = PendingCg {
+                    state: state.clone(),
+                    b,
+                    tol,
+                    max_iters,
+                    submitted_at,
+                };
+                {
+                    let mut pend = self.inner.pending.lock().unwrap();
+                    let bucket = pend.entry(fp).or_default();
+                    match priority {
+                        Priority::High => bucket.push_front(pending),
+                        Priority::Normal => bucket.push_back(pending),
+                    }
+                }
+                let sched = self.clone();
+                self.queue.enqueue(topts, move |ctx| {
+                    sched.run_batch(fp, &a, ctx.nthreads());
+                })
+            }
+            (solver, _) => {
+                let sched = self.clone();
+                let st = state.clone();
+                let job = DirectJob {
+                    solver,
+                    rhs,
+                    seed,
+                    id,
+                    submitted_at,
+                };
+                self.queue.enqueue(topts, move |ctx| {
+                    let res = sched.run_direct(&a, job, ctx.nthreads());
+                    sched.complete(&st, res);
+                })
+            }
+        };
+        if task.is_cancelled() {
+            // the queue shut down (or the reservation was structurally
+            // unsatisfiable) before the task could park: fail the job
+            // now instead of stranding its waiter. For a batched job
+            // the parked right-hand side is unparked too — its runner
+            // will never execute.
+            {
+                let mut pend = self.inner.pending.lock().unwrap();
+                for bucket in pend.values_mut() {
+                    bucket.retain(|p| !Arc::ptr_eq(&p.state, &state));
+                }
+            }
+            self.complete(
+                &state,
+                Err(GhostError::Task(
+                    "job rejected: task queue is shut down or the PU reservation \
+                     can never be satisfied"
+                        .into(),
+                )),
+            );
+        }
+        Ok(JobHandle { state })
+    }
+
+    /// The coalesce cap for one batch against `a` (already keyed: the
+    /// O(nnz) digest from submit is reused, not recomputed).
+    fn width_cap(&self, key: MatrixKey, a: &Crs<f64>) -> usize {
+        match self.inner.batching {
+            BatchPolicy::Off => 1,
+            BatchPolicy::Fixed(w) => w.clamp(1, self.inner.max_batch),
+            BatchPolicy::Auto => self
+                .cache
+                .block_width_keyed(key, a, self.inner.max_batch)
+                .unwrap_or(1),
+        }
+    }
+
+    /// Batch-runner body: drain the bucket for `fp` (up to the width
+    /// cap) and solve the drained right-hand sides as one block.
+    fn run_batch(&self, fp: MatrixKey, a: &Crs<f64>, nthreads: usize) {
+        let cap = self.width_cap(fp, a);
+        let taken: Vec<PendingCg> = {
+            let mut pend = self.inner.pending.lock().unwrap();
+            match pend.get_mut(&fp) {
+                Some(q) => {
+                    let k = q.len().min(cap.max(1));
+                    q.drain(..k).collect()
+                }
+                None => Vec::new(),
+            }
+        };
+        if taken.is_empty() {
+            // an earlier runner already coalesced this job
+            return;
+        }
+        let k = taken.len();
+        let n = a.nrows();
+        let run = || -> Result<(DenseMat<f64>, Vec<batch::ColumnStats>, bool)> {
+            let (op, hit) = self.cache.get_or_assemble_keyed(fp, a, nthreads)?;
+            let mut op = op.lock().unwrap();
+            // a cached operator adopts THIS job's PU reservation
+            op.set_nthreads(nthreads);
+            let b = DenseMat::<f64>::from_fn(n, k, Layout::RowMajor, |i, j| taken[j].b[i]);
+            let mut x = DenseMat::<f64>::zeros(n, k, Layout::RowMajor);
+            let tols: Vec<f64> = taken.iter().map(|j| j.tol).collect();
+            let iters: Vec<usize> = taken.iter().map(|j| j.max_iters).collect();
+            let stats = batch_cg(&mut *op, &b, &mut x, &tols, &iters)?;
+            Ok((x, stats, hit))
+        };
+        match run() {
+            Ok((x, stats, hit)) => {
+                if k >= 2 {
+                    let mut c = self.inner.counters.lock().unwrap();
+                    c.batches += 1;
+                    c.batched_jobs += k as u64;
+                    c.max_batch_width = c.max_batch_width.max(k);
+                }
+                let now = Instant::now();
+                for (j, (s, job)) in stats.into_iter().zip(taken).enumerate() {
+                    let res = match s.error {
+                        Some(e) => Err(e),
+                        None => Ok(JobReport {
+                            id: job.state.id,
+                            output: JobOutput::Solve {
+                                x: vec![(0..n).map(|i| x.at(i, j)).collect()],
+                                iterations: s.iterations,
+                                final_residual: s.final_residual,
+                                converged: s.converged,
+                            },
+                            nnz: a.nnz(),
+                            matvecs: s.iterations + 1,
+                            batched_width: k,
+                            cache_hit: hit,
+                            elapsed: now.duration_since(job.submitted_at),
+                            completed_at: now,
+                        }),
+                    };
+                    self.complete(&job.state, res);
+                }
+            }
+            Err(e) => {
+                // assembly / block-solve failure: fail every coalesced
+                // job with the same (stringified — GhostError is not
+                // Clone) cause
+                let msg = e.to_string();
+                for job in taken {
+                    self.complete(
+                        &job.state,
+                        Err(GhostError::Task(format!("batched solve failed: {msg}"))),
+                    );
+                }
+            }
+        }
+    }
+
+    /// Direct (non-batched) job body.
+    fn run_direct(&self, a: &Crs<f64>, job: DirectJob, nthreads: usize) -> Result<JobReport> {
+        let DirectJob {
+            solver,
+            rhs,
+            seed,
+            id,
+            submitted_at,
+        } = job;
+        let n = a.nrows();
+        let (op, cache_hit) = self.cache.get_or_assemble(a, nthreads)?;
+        let mut op = op.lock().unwrap();
+        // a cached operator adopts THIS job's PU reservation
+        op.set_nthreads(nthreads);
+        let mv0 = op.matvecs();
+        let mut batched_width = 1usize;
+        let output = match solver {
+            SolverKind::Cg { tol, max_iters } => {
+                // width-1 pass through the same bundled-CG kernel the
+                // batcher uses, so batched and serial runs demultiplex
+                // to bitwise-identical results
+                let bvec = match rhs {
+                    Some(b) => {
+                        crate::ensure!(b.len() == n, DimMismatch, "rhs length");
+                        b
+                    }
+                    None => default_rhs(n, seed),
+                };
+                let b = DenseMat::<f64>::from_fn(n, 1, Layout::RowMajor, |i, _| bvec[i]);
+                let mut x = DenseMat::<f64>::zeros(n, 1, Layout::RowMajor);
+                let mut st = batch_cg(&mut *op, &b, &mut x, &[tol], &[max_iters])?;
+                if let Some(e) = st[0].error.take() {
+                    return Err(e);
+                }
+                JobOutput::Solve {
+                    x: vec![(0..n).map(|i| x.at(i, 0)).collect()],
+                    iterations: st[0].iterations,
+                    final_residual: st[0].final_residual,
+                    converged: st[0].converged,
+                }
+            }
+            SolverKind::BlockCg {
+                nrhs,
+                tol,
+                max_iters,
+            } => {
+                crate::ensure!(nrhs >= 1, InvalidArg, "block_cg needs nrhs >= 1");
+                batched_width = nrhs;
+                let b = DenseMat::<f64>::random(n, nrhs, Layout::RowMajor, seed);
+                let mut x = DenseMat::<f64>::zeros(n, nrhs, Layout::RowMajor);
+                let st = block_cg(&mut *op, &b, &mut x, tol, max_iters)?;
+                JobOutput::Solve {
+                    x: (0..nrhs)
+                        .map(|j| (0..n).map(|i| x.at(i, j)).collect())
+                        .collect(),
+                    iterations: st.iterations,
+                    final_residual: st.final_residual,
+                    converged: st.converged,
+                }
+            }
+            SolverKind::Lanczos { steps } => {
+                let r = lanczos(&mut *op, steps, true, seed)?;
+                JobOutput::Eigenvalues {
+                    values: r.eigenvalues,
+                    iterations: r.iterations,
+                }
+            }
+            SolverKind::Kpm { moments, vectors } => {
+                let mu = kpm_moments_op(
+                    &mut *op,
+                    &KpmConfig {
+                        nmoments: moments,
+                        nrandom: vectors,
+                        variant: KpmVariant::BlockedFused,
+                        seed,
+                    },
+                )?;
+                JobOutput::Moments { mu }
+            }
+            SolverKind::ChebFilter { degree, block } => {
+                crate::ensure!(block >= 1, InvalidArg, "cheb_filter needs block >= 1");
+                let (lmin, lmax) = spectral_bounds(&mut *op, 20.min(n.max(2)), seed)?;
+                let span = (lmax - lmin).max(1e-12);
+                let r = chebfd(
+                    &mut *op,
+                    lmin,
+                    lmin + 0.2 * span,
+                    lmin,
+                    lmax,
+                    block,
+                    degree,
+                    2,
+                    seed,
+                )?;
+                JobOutput::Filtered {
+                    eigenvalues: r.eigenvalues,
+                    filter_applications: r.filter_applications,
+                }
+            }
+        };
+        let now = Instant::now();
+        Ok(JobReport {
+            id,
+            output,
+            nnz: a.nnz(),
+            matvecs: op.matvecs() - mv0,
+            batched_width,
+            cache_hit,
+            elapsed: now.duration_since(submitted_at),
+            completed_at: now,
+        })
+    }
+}

@@ -1,0 +1,420 @@
+//! JSONL request intake for `ghost serve`.
+//!
+//! One request per line, flat JSON (hand-rolled parser shared with the
+//! tune cache — the crate is dependency-free). Example:
+//!
+//! ```text
+//! {"id":1,"solver":"cg","matrix":"poisson7","n":4096,"tol":1e-8,"max_iters":500,"prio":"high"}
+//! {"id":2,"solver":"block_cg","matrix":"poisson7","n":4096,"nrhs":4,"tol":1e-8}
+//! {"id":3,"solver":"lanczos","matrix":"anderson","n":400,"steps":30}
+//! {"id":4,"solver":"kpm","matrix":"hamiltonian","n":1024,"moments":64,"vectors":4}
+//! {"id":5,"solver":"cheb_filter","matrix":"poisson7","n":1000,"degree":16,"block":4}
+//! ```
+//!
+//! `id` is the client's correlation label (echoed in the response line;
+//! the scheduler id is used when absent). Blank lines and lines starting
+//! with `#` are skipped. A malformed line produces an error *response*,
+//! not a server failure.
+//!
+//! Two drive modes: [`serve_oneshot`] processes the file once and
+//! returns a throughput summary (the CI smoke path), [`serve_follow`]
+//! tails the file forever, submitting new lines as they are appended —
+//! the long-lived service loop, stopped externally.
+
+use std::io::Write;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use crate::core::{GhostError, Result};
+use crate::tune::json_field;
+
+use super::{
+    JobHandle, JobOutput, JobReport, JobScheduler, JobSpec, MatrixSource, Priority,
+    SchedStats, SolverKind,
+};
+
+/// A parsed request line: the client's correlation id (if any) plus the
+/// job to run.
+pub struct Request {
+    pub client_id: Option<u64>,
+    pub spec: JobSpec,
+}
+
+fn num<T: std::str::FromStr>(line: &str, key: &str) -> Option<T> {
+    json_field(line, key).and_then(|v| v.parse().ok())
+}
+
+/// Parse one request line. `Ok(None)` for blank / comment lines.
+pub fn parse_request(line: &str) -> Result<Option<Request>> {
+    let line = line.trim();
+    if line.is_empty() || line.starts_with('#') {
+        return Ok(None);
+    }
+    crate::ensure!(line.starts_with('{'), Parse, "request is not a JSON object: {line}");
+    let solver_name = json_field(line, "solver")
+        .ok_or_else(|| GhostError::Parse(format!("missing \"solver\": {line}")))?;
+    let tol: f64 = num(line, "tol").unwrap_or(1e-8);
+    let max_iters: usize = num(line, "max_iters").unwrap_or(1000);
+    let solver = match solver_name {
+        "cg" => SolverKind::Cg { tol, max_iters },
+        "block_cg" => SolverKind::BlockCg {
+            nrhs: num(line, "nrhs").unwrap_or(4),
+            tol,
+            max_iters,
+        },
+        "lanczos" => SolverKind::Lanczos {
+            steps: num(line, "steps").unwrap_or(30),
+        },
+        "kpm" => SolverKind::Kpm {
+            moments: num(line, "moments").unwrap_or(32),
+            vectors: num(line, "vectors").unwrap_or(4),
+        },
+        "cheb_filter" => SolverKind::ChebFilter {
+            degree: num(line, "degree").unwrap_or(12),
+            block: num(line, "block").unwrap_or(4),
+        },
+        other => {
+            return Err(GhostError::Parse(format!("unknown solver '{other}'")));
+        }
+    };
+    let matrix = json_field(line, "matrix")
+        .ok_or_else(|| GhostError::Parse(format!("missing \"matrix\": {line}")))?;
+    let mut spec = JobSpec::new(
+        MatrixSource::Named {
+            name: matrix.to_string(),
+            n: num(line, "n").unwrap_or(1000),
+        },
+        solver,
+    );
+    if json_field(line, "prio") == Some("high") {
+        spec.priority = Priority::High;
+    }
+    spec.nthreads = num(line, "nthreads").unwrap_or(1);
+    spec.numanode = num(line, "numanode");
+    spec.seed = num(line, "seed").unwrap_or(0);
+    Ok(Some(Request {
+        client_id: num(line, "id"),
+        spec,
+    }))
+}
+
+fn fmt_float(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:e}")
+    } else {
+        "null".into()
+    }
+}
+
+/// Escape a message for embedding in a JSON string literal (error
+/// strings echo raw request text, which may contain quotes, backslashes
+/// or control characters — the response must stay parseable).
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render one completed job as a flat JSON response line.
+pub fn response_line(label: u64, solver: &str, res: &Result<JobReport>) -> String {
+    match res {
+        Ok(r) => {
+            let detail = match &r.output {
+                JobOutput::Solve {
+                    iterations,
+                    final_residual,
+                    converged,
+                    ..
+                } => format!(
+                    "\"iterations\":{iterations},\"residual\":{},\"converged\":{converged}",
+                    fmt_float(*final_residual)
+                ),
+                JobOutput::Eigenvalues { values, iterations } => format!(
+                    "\"eigenvalues\":{},\"iterations\":{iterations},\"lmin\":{},\"lmax\":{}",
+                    values.len(),
+                    fmt_float(values.first().copied().unwrap_or(f64::NAN)),
+                    fmt_float(values.last().copied().unwrap_or(f64::NAN)),
+                ),
+                JobOutput::Moments { mu } => format!(
+                    "\"moments\":{},\"mu0\":{}",
+                    mu.len(),
+                    fmt_float(mu.first().copied().unwrap_or(f64::NAN))
+                ),
+                JobOutput::Filtered {
+                    eigenvalues,
+                    filter_applications,
+                } => format!(
+                    "\"ritz_values\":{},\"filter_applications\":{filter_applications}",
+                    eigenvalues.len()
+                ),
+            };
+            format!(
+                "{{\"id\":{label},\"ok\":true,\"solver\":\"{solver}\",{detail},\
+                 \"batched\":{},\"cache_hit\":{},\"ms\":{:.3}}}",
+                r.batched_width,
+                r.cache_hit,
+                r.elapsed.as_secs_f64() * 1e3
+            )
+        }
+        Err(e) => format!(
+            "{{\"id\":{label},\"ok\":false,\"solver\":\"{solver}\",\"error\":\"{}\"}}",
+            json_escape(&e.to_string())
+        ),
+    }
+}
+
+/// Outcome of a [`serve_oneshot`] run.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeSummary {
+    pub jobs: usize,
+    pub failed: usize,
+    pub elapsed: Duration,
+    pub jobs_per_sec: f64,
+    /// Aggregate solver throughput (2 nnz flops per matrix column pass).
+    pub gflops: f64,
+    pub stats: SchedStats,
+}
+
+struct Inflight {
+    label: u64,
+    solver: &'static str,
+    handle: JobHandle,
+}
+
+fn submit_line(
+    sched: &JobScheduler,
+    line: &str,
+    lineno: usize,
+    out: &mut dyn Write,
+) -> Result<Option<Inflight>> {
+    match parse_request(line) {
+        Ok(None) => Ok(None),
+        Ok(Some(req)) => {
+            let solver = req.spec.solver.name();
+            match sched.submit(req.spec) {
+                Ok(handle) => Ok(Some(Inflight {
+                    label: req.client_id.unwrap_or_else(|| handle.id()),
+                    solver,
+                    handle,
+                })),
+                Err(e) => {
+                    // a bad request fails its response, not the server
+                    writeln!(
+                        out,
+                        "{}",
+                        response_line(req.client_id.unwrap_or(0), solver, &Err(e))
+                    )?;
+                    Ok(None)
+                }
+            }
+        }
+        Err(e) => {
+            writeln!(
+                out,
+                "{{\"line\":{lineno},\"ok\":false,\"error\":\"{}\"}}",
+                json_escape(&e.to_string())
+            )?;
+            Ok(None)
+        }
+    }
+}
+
+/// Process every request in `path` once: submit all (so batching and
+/// caching can bite across them), wait for all, write one response line
+/// per request, and return the throughput summary.
+pub fn serve_oneshot(
+    sched: &JobScheduler,
+    path: &Path,
+    out: &mut dyn Write,
+) -> Result<ServeSummary> {
+    let text = std::fs::read_to_string(path)?;
+    let t0 = Instant::now();
+    let mut inflight = Vec::new();
+    let mut failed = 0usize;
+    for (lineno, line) in text.lines().enumerate() {
+        match submit_line(sched, line, lineno + 1, out)? {
+            Some(f) => inflight.push(f),
+            None => {
+                if !line.trim().is_empty() && !line.trim().starts_with('#') {
+                    failed += 1;
+                }
+            }
+        }
+    }
+    let jobs = inflight.len();
+    let mut flops = 0.0f64;
+    for f in inflight {
+        let res = f.handle.wait();
+        if let Ok(r) = &res {
+            flops += 2.0 * r.nnz as f64 * r.matvecs as f64;
+        } else {
+            failed += 1;
+        }
+        writeln!(out, "{}", response_line(f.label, f.solver, &res))?;
+    }
+    sched.drain();
+    let elapsed = t0.elapsed();
+    let secs = elapsed.as_secs_f64().max(1e-9);
+    Ok(ServeSummary {
+        jobs,
+        failed,
+        elapsed,
+        jobs_per_sec: jobs as f64 / secs,
+        gflops: flops / secs / 1e9,
+        stats: sched.stats(),
+    })
+}
+
+/// Read the complete lines appended to `path` past `offset` (seeking,
+/// so an idle poll costs one `stat` and a poll with new data reads only
+/// the suffix). Only whole lines are consumed — a writer appending a
+/// request is never seen half-written. A shrunken file (truncation /
+/// rotation) resets the offset to 0; a suffix that is not valid UTF-8
+/// (in-place rewrite landing the stale offset mid-character) does too,
+/// instead of panicking the serve loop.
+fn read_fresh_lines(path: &Path, offset: &mut u64) -> Vec<String> {
+    use std::io::{Read, Seek, SeekFrom};
+    let len = std::fs::metadata(path).map(|m| m.len()).unwrap_or(0);
+    if len < *offset {
+        *offset = 0;
+    }
+    if len == *offset {
+        return Vec::new();
+    }
+    let Ok(mut f) = std::fs::File::open(path) else { return Vec::new() };
+    if f.seek(SeekFrom::Start(*offset)).is_err() {
+        return Vec::new();
+    }
+    let mut fresh = String::new();
+    if f.read_to_string(&mut fresh).is_err() {
+        // not valid UTF-8 from this offset: the file was rewritten in
+        // place under us — start over from the top next poll
+        *offset = 0;
+        return Vec::new();
+    }
+    // consume only up to the last complete line
+    let Some(end) = fresh.rfind('\n') else { return Vec::new() };
+    let lines = fresh[..end].lines().map(str::to_string).collect();
+    *offset += end as u64 + 1;
+    lines
+}
+
+/// Tail `path` forever: newly appended complete lines are submitted as
+/// they arrive and responses stream to `out` as jobs finish. Runs until
+/// the process is stopped.
+pub fn serve_follow(
+    sched: &JobScheduler,
+    path: &Path,
+    poll: Duration,
+    out: &mut dyn Write,
+) -> Result<()> {
+    let mut offset = 0u64;
+    let mut lineno = 0usize;
+    let mut inflight: Vec<Inflight> = Vec::new();
+    loop {
+        for line in read_fresh_lines(path, &mut offset) {
+            lineno += 1;
+            if let Some(f) = submit_line(sched, &line, lineno, out)? {
+                inflight.push(f);
+            }
+        }
+        // stream responses for completed jobs
+        let mut i = 0;
+        while i < inflight.len() {
+            if inflight[i].handle.is_done() {
+                let f = inflight.swap_remove(i);
+                let res = f.handle.wait();
+                writeln!(out, "{}", response_line(f.label, f.solver, &res))?;
+                out.flush()?;
+            } else {
+                i += 1;
+            }
+        }
+        std::thread::sleep(poll);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_documented_request_shapes() {
+        let r = parse_request(
+            "{\"id\":7,\"solver\":\"cg\",\"matrix\":\"poisson7\",\"n\":500,\
+             \"tol\":1e-6,\"max_iters\":200,\"prio\":\"high\",\"nthreads\":2,\"seed\":3}",
+        )
+        .unwrap()
+        .unwrap();
+        assert_eq!(r.client_id, Some(7));
+        assert_eq!(r.spec.priority, Priority::High);
+        assert_eq!(r.spec.nthreads, 2);
+        assert_eq!(r.spec.seed, 3);
+        match r.spec.solver {
+            SolverKind::Cg { tol, max_iters } => {
+                assert!((tol - 1e-6).abs() < 1e-18);
+                assert_eq!(max_iters, 200);
+            }
+            other => panic!("wrong solver: {other:?}"),
+        }
+        let r = parse_request("{\"solver\":\"lanczos\",\"matrix\":\"anderson\",\"steps\":12}")
+            .unwrap()
+            .unwrap();
+        assert!(r.client_id.is_none());
+        assert!(matches!(r.spec.solver, SolverKind::Lanczos { steps: 12 }));
+        assert!(parse_request("").unwrap().is_none());
+        assert!(parse_request("# a comment").unwrap().is_none());
+        assert!(parse_request("{\"matrix\":\"poisson7\"}").is_err());
+        assert!(parse_request("{\"solver\":\"sor\",\"matrix\":\"poisson7\"}").is_err());
+        assert!(parse_request("not json").is_err());
+    }
+
+    #[test]
+    fn read_fresh_lines_tails_appends_and_survives_truncation() {
+        let path = std::env::temp_dir().join(format!(
+            "ghost_follow_tail_{}.jsonl",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_file(&path);
+        let mut offset = 0u64;
+        std::fs::write(&path, "a\nb\n").unwrap();
+        assert_eq!(read_fresh_lines(&path, &mut offset), ["a", "b"]);
+        // a half-written line is not consumed until its newline arrives
+        let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+        write!(f, "c").unwrap();
+        drop(f);
+        assert!(read_fresh_lines(&path, &mut offset).is_empty());
+        let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+        writeln!(f, "\nd").unwrap();
+        drop(f);
+        assert_eq!(read_fresh_lines(&path, &mut offset), ["c", "d"]);
+        // truncation / rotation resets to the top instead of slicing at
+        // a stale offset
+        std::fs::write(&path, "x\n").unwrap();
+        assert_eq!(read_fresh_lines(&path, &mut offset), ["x"]);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn response_lines_escape_error_text_into_valid_json() {
+        let err: Result<JobReport> =
+            Err(GhostError::InvalidArg("bad \"thing\"\\ with\tcontrol\n".into()));
+        let line = response_line(3, "cg", &err);
+        assert!(line.contains("\"id\":3"));
+        assert!(line.contains("\"ok\":false"));
+        // quotes, backslashes and control characters are escaped so the
+        // response line stays parseable JSON
+        assert!(line.contains("bad \\\"thing\\\"\\\\ with\\tcontrol\\n"), "{line}");
+        assert!(!line.contains('\t') && !line.contains('\n'), "{line}");
+    }
+}

@@ -359,6 +359,21 @@ impl<S: Scalar> LocalSellOp<S> {
     pub fn variant(&self) -> SpmvVariant {
         self.variant
     }
+
+    /// Set the worker-thread count for subsequent applies. The solve
+    /// service calls this when it hands a *cached* operator to a job,
+    /// so the operator's parallelism matches that job's PU reservation
+    /// rather than the reservation of whichever job assembled it.
+    pub fn set_nthreads(&mut self, nthreads: usize) {
+        self.nthreads = nthreads.max(1);
+    }
+
+    /// Resident bytes of this operator: the SELL storage plus the
+    /// permuted scratch vectors. The accounting unit of the solve
+    /// service's operator cache ([`crate::sched::cache::OperatorCache`]).
+    pub fn resident_bytes(&self) -> usize {
+        self.sell.bytes() + (self.xs.len() + self.ys.len()) * S::bytes()
+    }
 }
 
 impl<S: Scalar> Operator<S> for LocalSellOp<S> {

@@ -12,6 +12,25 @@
 //! NUMANODE_STRICT (only run on the given NUMA node), NOT_ALLOW_CHILD
 //! (children may not steal this task's PUs), NOT_PIN (reserve nothing).
 //!
+//! Scheduling scans the whole queue in order: a task whose PU
+//! reservation cannot be satisfied *right now* (e.g. a wide task at the
+//! head while most PUs are busy) does not stall runnable tasks queued
+//! behind it. The queue order still decides priority among
+//! simultaneously-runnable tasks, so PRIO_HIGH (push-front) keeps its
+//! fast-lane semantics. Every completion re-runs the scan from the
+//! front, which favors a waiting wide task whenever enough PUs drain —
+//! but there is no aging: under sustained narrow traffic that never
+//! lets the required PUs be simultaneously free, a wide task can wait
+//! unboundedly (callers who need a latency bound should reserve
+//! fewer PUs or quiesce the queue with [`TaskQueue::drain`]).
+//!
+//! Lifecycle: [`TaskQueue::drain`] blocks until every enqueued task has
+//! finished (the clean stop for long-lived services), and
+//! [`TaskQueue::shutdown`] joins the shepherd threads and *cancels* any
+//! still-pending tasks, returning their ids instead of silently dropping
+//! them; waiters on a cancelled task wake up and [`TaskHandle::wait`]
+//! reports the cancellation as an error.
+//!
 //! On Linux, reservation is backed by best-effort sched_setaffinity
 //! pinning when the simulated PU ids fit the physical CPU count.
 
@@ -37,6 +56,8 @@ enum TState {
     Enqueued,
     Running,
     Done,
+    /// Cancelled by [`TaskQueue::shutdown`] before it could run.
+    Cancelled,
 }
 
 type TaskFn = Box<dyn FnOnce(&TaskCtx) + Send + 'static>;
@@ -63,16 +84,29 @@ pub struct Task {
 }
 
 impl Task {
-    /// Block until the task has finished (ghost_task_wait).
+    /// Block until the task has finished or was cancelled by shutdown
+    /// (ghost_task_wait).
     pub fn wait(&self) {
         let mut st = self.inner.state.lock().unwrap();
-        while *st != TState::Done {
+        while !matches!(*st, TState::Done | TState::Cancelled) {
             st = self.inner.done.wait(st).unwrap();
         }
     }
 
     pub fn is_done(&self) -> bool {
         *self.inner.state.lock().unwrap() == TState::Done
+    }
+
+    /// True when the task was cancelled by [`TaskQueue::shutdown`]
+    /// before it could run.
+    pub fn is_cancelled(&self) -> bool {
+        *self.inner.state.lock().unwrap() == TState::Cancelled
+    }
+
+    /// The queue-assigned task id (reported by shutdown for cancelled
+    /// tasks).
+    pub fn id(&self) -> u64 {
+        self.inner.id
     }
 
     /// The queue this task was enqueued on.
@@ -108,6 +142,13 @@ impl TaskCtx {
 }
 
 /// Task creation options (the user-relevant ghost_task fields).
+///
+/// `nthreads` is clamped at enqueue time to what the machine can ever
+/// satisfy — the total PU count, or the target node's PU count under
+/// NUMANODE_STRICT (unless NOT_PIN is set): a reservation that can
+/// never be satisfied would otherwise wedge the queue forever. A
+/// NUMANODE_STRICT task naming a node with no PUs is cancelled
+/// immediately for the same reason.
 #[derive(Clone)]
 pub struct TaskOpts {
     pub nthreads: usize,
@@ -130,6 +171,8 @@ impl Default for TaskOpts {
 struct QState {
     queue: VecDeque<Arc<TaskInner>>,
     pu_busy: Vec<bool>,
+    /// Tasks currently executing on a shepherd (for [`TaskQueue::drain`]).
+    running: usize,
     shutdown: bool,
 }
 
@@ -139,6 +182,8 @@ struct QInner {
     cond: Condvar,
     machine: Machine,
     next_id: Mutex<u64>,
+    /// Shepherd join handles, taken (and joined) by shutdown.
+    shepherds: Mutex<Vec<std::thread::JoinHandle<()>>>,
 }
 
 /// The process-wide task queue with its shepherd thread pool.
@@ -156,20 +201,26 @@ impl TaskQueue {
             state: Mutex::new(QState {
                 queue: VecDeque::new(),
                 pu_busy: vec![false; npus],
+                running: 0,
                 shutdown: false,
             }),
             cond: Condvar::new(),
             machine,
             next_id: Mutex::new(0),
+            shepherds: Mutex::new(Vec::new()),
         });
         let q = TaskQueue { inner };
+        let mut handles = Vec::with_capacity(nshepherds.max(1));
         for sid in 0..nshepherds.max(1) {
             let qq = q.clone();
-            std::thread::Builder::new()
-                .name(format!("ghost-shepherd-{sid}"))
-                .spawn(move || qq.shepherd_loop())
-                .expect("spawn shepherd");
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("ghost-shepherd-{sid}"))
+                    .spawn(move || qq.shepherd_loop())
+                    .expect("spawn shepherd"),
+            );
         }
+        *q.inner.shepherds.lock().unwrap() = handles;
         q
     }
 
@@ -199,9 +250,25 @@ impl TaskQueue {
             *n += 1;
             *n
         };
+        // clamp the reservation to what the machine can ever satisfy
+        // (see TaskOpts docs): the whole machine, or the target node
+        // under a strict NUMA placement
+        let npus = self.inner.machine.num_pus().max(1);
+        let strict_node_cap = if opts.flags & flags::NUMANODE_STRICT != 0 {
+            opts.numanode
+                .map(|node| self.inner.machine.pus_of_numanode(node).len())
+        } else {
+            None
+        };
+        let nthreads = if opts.flags & flags::NOT_PIN != 0 {
+            opts.nthreads
+        } else {
+            opts.nthreads.min(strict_node_cap.unwrap_or(npus).min(npus))
+        };
+        let unsatisfiable = strict_node_cap == Some(0) && opts.flags & flags::NOT_PIN == 0;
         let t = Arc::new(TaskInner {
             id,
-            nthreads: opts.nthreads,
+            nthreads,
             numanode: opts.numanode,
             flags: opts.flags,
             deps: opts.deps.iter().map(|d| d.inner.clone()).collect(),
@@ -210,8 +277,30 @@ impl TaskQueue {
             done: Condvar::new(),
             parent_pus,
         });
+        if unsatisfiable {
+            // NUMANODE_STRICT on a node with no PUs can never reserve:
+            // cancel instead of parking the task forever (waiters wake
+            // and TaskHandle::wait reports the cancellation)
+            *t.state.lock().unwrap() = TState::Cancelled;
+            t.done.notify_all();
+            return Task {
+                inner: t,
+                queue: self.clone(),
+            };
+        }
         {
             let mut st = self.inner.state.lock().unwrap();
+            if st.shutdown {
+                // the shepherds are gone (or going): never park a task
+                // that nothing will ever pick up
+                drop(st);
+                *t.state.lock().unwrap() = TState::Cancelled;
+                t.done.notify_all();
+                return Task {
+                    inner: t,
+                    queue: self.clone(),
+                };
+            }
             if opts.flags & flags::PRIO_HIGH != 0 {
                 st.queue.push_front(t.clone());
             } else {
@@ -294,26 +383,50 @@ impl TaskQueue {
                     if st.shutdown {
                         return;
                     }
-                    // first runnable task with satisfiable resources
-                    let mut found = None;
-                    for (i, t) in st.queue.iter().enumerate() {
+                    // Scan the whole queue in order: the first task that
+                    // is both dependency-ready AND reservable runs. An
+                    // unsatisfiable reservation at the head (e.g. a wide
+                    // task while PUs are busy) must not stall runnable
+                    // tasks queued behind it — queue order only breaks
+                    // ties among simultaneously-runnable tasks.
+                    let mut picked = None;
+                    let mut i = 0;
+                    while i < st.queue.len() {
+                        let t = st.queue[i].clone();
+                        let mut dep_cancelled = false;
                         let deps_done = t.deps.iter().all(|d| {
-                            *d.state.lock().unwrap() == TState::Done
+                            let s = *d.state.lock().unwrap();
+                            if s == TState::Cancelled {
+                                dep_cancelled = true;
+                            }
+                            s == TState::Done
                         });
-                        if !deps_done {
+                        if dep_cancelled {
+                            // a cancelled dependency can never become
+                            // Done: cascade the cancellation instead of
+                            // parking this task (and its waiters) forever.
+                            // The queue changed, so wake drain()/other
+                            // shepherds too, not just the task's waiters.
+                            st.queue.remove(i);
+                            *t.state.lock().unwrap() = TState::Cancelled;
+                            t.done.notify_all();
+                            self.inner.cond.notify_all();
                             continue;
                         }
-                        found = Some(i);
-                        break;
-                    }
-                    if let Some(i) = found {
-                        let t = st.queue[i].clone();
-                        if let Some(pus) =
-                            Self::try_reserve(&mut st, &self.inner.machine, &t)
-                        {
-                            st.queue.remove(i);
-                            break (t, pus);
+                        if deps_done {
+                            if let Some(pus) =
+                                Self::try_reserve(&mut st, &self.inner.machine, &t)
+                            {
+                                st.queue.remove(i);
+                                picked = Some((t, pus));
+                                break;
+                            }
                         }
+                        i += 1;
+                    }
+                    if let Some((t, pus)) = picked {
+                        st.running += 1;
+                        break (t, pus);
                     }
                     st = self.inner.cond.wait(st).unwrap();
                 }
@@ -336,18 +449,55 @@ impl TaskQueue {
                         st.pu_busy[pu] = false;
                     }
                 }
+                st.running -= 1;
             }
             *task.state.lock().unwrap() = TState::Done;
             task.done.notify_all();
             self.inner.cond.notify_all();
-            let _ = task.id;
         }
     }
 
-    /// Stop all shepherds (finalization). Pending tasks are dropped.
-    pub fn shutdown(&self) {
-        self.inner.state.lock().unwrap().shutdown = true;
+    /// Block until every enqueued task has finished (queue empty and no
+    /// task running). The clean stop for a long-lived service: call
+    /// `drain()` then [`TaskQueue::shutdown`]. Tasks enqueued while
+    /// draining are waited for too. Returns immediately after shutdown.
+    pub fn drain(&self) {
+        let mut st = self.inner.state.lock().unwrap();
+        while !(st.queue.is_empty() && st.running == 0) {
+            if st.shutdown {
+                return;
+            }
+            st = self.inner.cond.wait(st).unwrap();
+        }
+    }
+
+    /// Stop the queue deterministically (finalization): running tasks
+    /// finish, the shepherd threads are joined, and every still-pending
+    /// task is *cancelled* — marked so its waiters wake up — and
+    /// reported back by id rather than silently dropped. Must not be
+    /// called from inside a task (joining your own shepherd would
+    /// deadlock; the self-handle is skipped as insurance).
+    pub fn shutdown(&self) -> Vec<u64> {
+        let pending: Vec<Arc<TaskInner>> = {
+            let mut st = self.inner.state.lock().unwrap();
+            st.shutdown = true;
+            st.queue.drain(..).collect()
+        };
         self.inner.cond.notify_all();
+        let mut cancelled = Vec::with_capacity(pending.len());
+        for t in pending {
+            *t.state.lock().unwrap() = TState::Cancelled;
+            t.done.notify_all();
+            cancelled.push(t.id);
+        }
+        let handles: Vec<_> = std::mem::take(&mut *self.inner.shepherds.lock().unwrap());
+        let me = std::thread::current().id();
+        for h in handles {
+            if h.thread().id() != me {
+                let _ = h.join();
+            }
+        }
+        cancelled
     }
 }
 
@@ -360,6 +510,11 @@ pub struct TaskHandle<T> {
 impl<T> TaskHandle<T> {
     pub fn wait(self) -> Result<T> {
         self.task.wait();
+        if self.task.is_cancelled() {
+            return Err(GhostError::Task(
+                "task cancelled by queue shutdown before it could run".into(),
+            ));
+        }
         self.slot
             .lock()
             .unwrap()
@@ -541,6 +696,182 @@ mod tests {
             },
         );
         assert!(h.wait().unwrap());
+        q.shutdown();
+    }
+
+    #[test]
+    fn unsatisfiable_head_does_not_stall_runnable_tasks() {
+        // 2 PUs; a long 1-PU task runs, then a 2-PU task is enqueued
+        // (unsatisfiable while the long task holds a PU), then a 1-PU
+        // task. The 1-PU task must run on the free PU instead of
+        // stalling behind the wide head until the long task finishes.
+        let q = queue(2);
+        let log = Arc::new(Mutex::new(Vec::new()));
+        let l0 = log.clone();
+        let long = q.enqueue(TaskOpts::default(), move |_| {
+            std::thread::sleep(Duration::from_millis(80));
+            l0.lock().unwrap().push("long");
+        });
+        std::thread::sleep(Duration::from_millis(10));
+        let l1 = log.clone();
+        let wide = q.enqueue(
+            TaskOpts {
+                nthreads: 2,
+                ..Default::default()
+            },
+            move |_| {
+                l1.lock().unwrap().push("wide");
+            },
+        );
+        let l2 = log.clone();
+        let small = q.enqueue(TaskOpts::default(), move |_| {
+            l2.lock().unwrap().push("small");
+        });
+        small.wait();
+        assert!(
+            !long.is_done(),
+            "small should have run on the free PU while long still holds its PU"
+        );
+        long.wait();
+        wide.wait();
+        let order = log.lock().unwrap().clone();
+        assert_eq!(order.first(), Some(&"small"), "{order:?}");
+        q.shutdown();
+    }
+
+    #[test]
+    fn shutdown_joins_and_reports_cancelled_pending_tasks() {
+        let q = TaskQueue::new(Machine::small_node(1), 1);
+        // occupy the single PU, then stack pending tasks behind it
+        let blocker = q.enqueue(TaskOpts::default(), |_| {
+            std::thread::sleep(Duration::from_millis(40));
+        });
+        std::thread::sleep(Duration::from_millis(5));
+        let pending: Vec<Task> = (0..3)
+            .map(|_| q.enqueue(TaskOpts::default(), |_| {}))
+            .collect();
+        let pending_res = q.enqueue_with_result(TaskOpts::default(), |_| 7);
+        let cancelled = q.shutdown();
+        assert!(blocker.is_done(), "shutdown must join in-flight work");
+        assert_eq!(cancelled.len(), 4, "{cancelled:?}");
+        for t in &pending {
+            assert!(cancelled.contains(&t.id()));
+            t.wait(); // must not hang
+            assert!(t.is_cancelled());
+            assert!(!t.is_done());
+        }
+        // a cancelled result-task surfaces the cancellation as an error
+        assert!(pending_res.wait().is_err());
+        // enqueue after shutdown: immediately cancelled, wait returns
+        let late = q.enqueue(TaskOpts::default(), |_| {});
+        late.wait();
+        assert!(late.is_cancelled());
+        // second shutdown is a no-op
+        assert!(q.shutdown().is_empty());
+    }
+
+    #[test]
+    fn drain_waits_for_all_enqueued_work() {
+        let q = queue(2);
+        let count = Arc::new(AtomicUsize::new(0));
+        for _ in 0..6 {
+            let c = count.clone();
+            q.enqueue(TaskOpts::default(), move |_| {
+                std::thread::sleep(Duration::from_millis(10));
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        q.drain();
+        assert_eq!(count.load(Ordering::SeqCst), 6);
+        // drain on an idle queue returns immediately
+        q.drain();
+        q.shutdown();
+        // drain after shutdown returns immediately instead of hanging
+        q.drain();
+    }
+
+    #[test]
+    fn oversized_reservation_is_clamped_to_the_machine() {
+        let q = queue(2);
+        let h = q.enqueue_with_result(
+            TaskOpts {
+                nthreads: 64,
+                ..Default::default()
+            },
+            |ctx| ctx.pus.len(),
+        );
+        assert_eq!(h.wait().unwrap(), 2);
+        q.shutdown();
+    }
+
+    #[test]
+    fn strict_numa_reservations_clamp_to_the_node_or_cancel() {
+        // 2 nodes x 2 PUs: a strict 3-PU request on node 0 can never be
+        // satisfied by the node — it must clamp to the node size rather
+        // than wedge the queue forever
+        let m = Machine::new(2, 2, 1, crate::topology::emmy_cpu_socket(), vec![]);
+        let q = TaskQueue::new(m, 2);
+        let h = q.enqueue_with_result(
+            TaskOpts {
+                nthreads: 3,
+                numanode: Some(0),
+                flags: flags::NUMANODE_STRICT,
+                ..Default::default()
+            },
+            |ctx| ctx.pus.clone(),
+        );
+        let pus = h.wait().unwrap();
+        assert_eq!(pus.len(), 2, "clamped to the node's 2 PUs: {pus:?}");
+        assert!(pus.iter().all(|&p| p < 2), "strict NUMA violated: {pus:?}");
+        // a strict request on a nonexistent node is cancelled, not parked
+        let h = q.enqueue_with_result(
+            TaskOpts {
+                nthreads: 1,
+                numanode: Some(9),
+                flags: flags::NUMANODE_STRICT,
+                ..Default::default()
+            },
+            |_| 1,
+        );
+        assert!(h.wait().is_err(), "unsatisfiable strict task must cancel");
+        q.drain();
+        q.shutdown();
+    }
+
+    #[test]
+    fn cancellation_cascades_to_dependent_tasks() {
+        let q = queue(2);
+        // dead is cancelled at enqueue (strict placement on a node that
+        // does not exist in a 1-socket machine)
+        let dead = q.enqueue(
+            TaskOpts {
+                numanode: Some(9),
+                flags: flags::NUMANODE_STRICT,
+                ..Default::default()
+            },
+            |_| {},
+        );
+        assert!(dead.is_cancelled());
+        // a task depending on it must be cancelled too — not parked
+        // forever (which would also wedge drain())
+        let child = q.enqueue_with_result(
+            TaskOpts {
+                deps: vec![dead.clone()],
+                ..Default::default()
+            },
+            |_| 1,
+        );
+        let grandchild = q.enqueue(
+            TaskOpts {
+                deps: vec![child.task.clone()],
+                ..Default::default()
+            },
+            |_| {},
+        );
+        grandchild.wait();
+        assert!(grandchild.is_cancelled());
+        assert!(child.wait().is_err());
+        q.drain(); // must return: nothing can be left parked
         q.shutdown();
     }
 

@@ -177,10 +177,34 @@ struct CacheEntry {
     candidates_pruned: usize,
 }
 
-/// In-memory cache plus the lazily-loaded-from-disk marker.
+/// Version of the persisted cache-line schema. Bumped whenever the line
+/// format changes; lines recorded under any other version are rejected
+/// at load (and re-swept) instead of being half-parsed forever.
+pub const CACHE_FORMAT_VERSION: u32 = 1;
+
+/// Default cap on cached decisions (in memory and on disk). Least
+/// recently used entries beyond the cap are evicted and truncated from
+/// the persistence file.
+pub const DEFAULT_CACHE_CAP: usize = 256;
+
+/// In-memory cache plus the lazily-loaded-from-disk marker. `order`
+/// tracks recency (front = least recently used) for the entry cap.
 struct CacheState {
     map: HashMap<Fingerprint, CacheEntry>,
+    order: Vec<Fingerprint>,
     loaded: bool,
+}
+
+impl CacheState {
+    /// Mark `fp` most recently used. O(1) when it already is (the
+    /// common repeated-solve case); O(len) otherwise.
+    fn touch(&mut self, fp: Fingerprint) {
+        if self.order.last() == Some(&fp) {
+            return;
+        }
+        self.order.retain(|f| f != &fp);
+        self.order.push(fp);
+    }
 }
 
 /// The autotuner: a device model (for the roofline bound), sweep options
@@ -191,6 +215,7 @@ pub struct Autotuner {
     opts: TuneOptions,
     cache: Mutex<CacheState>,
     cache_path: Option<PathBuf>,
+    cache_cap: usize,
 }
 
 impl Autotuner {
@@ -200,19 +225,33 @@ impl Autotuner {
             opts,
             cache: Mutex::new(CacheState {
                 map: HashMap::new(),
+                order: Vec::new(),
                 loaded: true,
             }),
             cache_path: None,
+            cache_cap: DEFAULT_CACHE_CAP,
         }
     }
 
     /// Persist the decision cache to `path` (JSON lines, one decision per
     /// line): existing entries are loaded lazily on the first tune, and
-    /// every new sweep result is appended. Unparseable lines are skipped,
-    /// so stale or corrupt caches degrade to a plain re-sweep.
+    /// every new sweep result is appended. Lines carry a format version
+    /// ([`CACHE_FORMAT_VERSION`]); stale-format, corrupt or
+    /// foreign-device lines are rejected at load, so old caches degrade
+    /// to a plain re-sweep. The file is LRU-truncated to the entry cap
+    /// ([`Autotuner::with_cache_cap`]).
     pub fn with_cache_file(mut self, path: PathBuf) -> Self {
         self.cache_path = Some(path);
         self.cache.lock().unwrap().loaded = false;
+        self
+    }
+
+    /// Cap the number of cached decisions (default
+    /// [`DEFAULT_CACHE_CAP`]). When a new decision pushes the cache over
+    /// the cap, the least recently used entry is evicted and the
+    /// persistence file (if any) is rewritten without it.
+    pub fn with_cache_cap(mut self, cap: usize) -> Self {
+        self.cache_cap = cap.max(1);
         self
     }
 
@@ -237,6 +276,7 @@ impl Autotuner {
     pub fn clear_cache(&self) {
         let mut st = self.cache.lock().unwrap();
         st.map.clear();
+        st.order.clear();
         st.loaded = true;
         if let Some(p) = &self.cache_path {
             let _ = std::fs::remove_file(p);
@@ -253,12 +293,51 @@ impl Autotuner {
         let device = self.device.model.to_string();
         let osig = opts_sig(&self.opts);
         for line in text.lines() {
-            // entries recorded under a different device model or sweep
-            // candidate space are skipped: a decision is only valid for
-            // the configuration that measured it
+            // entries recorded under a stale format version, a different
+            // device model or another sweep candidate space are rejected:
+            // a decision is only valid for the configuration that
+            // measured it. Later lines win (they are newer decisions).
             if let Some((fp, e)) = parse_cache_line(line, &device, osig) {
-                st.map.entry(fp).or_insert(e);
+                st.map.insert(fp, e);
+                st.touch(fp);
             }
+        }
+        // LRU truncation: the cap bounds both memory and file growth
+        let mut truncated = false;
+        while st.map.len() > self.cache_cap {
+            let oldest = st.order.remove(0);
+            st.map.remove(&oldest);
+            truncated = true;
+        }
+        if truncated {
+            self.rewrite(st);
+        }
+    }
+
+    /// Rewrite the persistence file from the current cache contents
+    /// (LRU order preserved; used after an eviction so the file never
+    /// grows past the cap).
+    fn rewrite(&self, st: &CacheState) {
+        let Some(path) = &self.cache_path else { return };
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                let _ = std::fs::create_dir_all(dir);
+            }
+        }
+        let device = self.device.model.to_string();
+        let osig = opts_sig(&self.opts);
+        let mut text = String::new();
+        for fp in &st.order {
+            if let Some(e) = st.map.get(fp) {
+                text.push_str(&cache_line(fp, e, &device, osig));
+                text.push('\n');
+            }
+        }
+        if let Err(err) = std::fs::write(path, text) {
+            eprintln!(
+                "ghost::tune: failed to rewrite cache {}: {err}",
+                path.display()
+            );
         }
     }
 
@@ -381,8 +460,9 @@ impl Autotuner {
         {
             let mut st = self.cache.lock().unwrap();
             self.ensure_loaded(&mut st);
-            if let Some(e) = st.map.get(&fp) {
-                return Ok(outcome_of(e, true));
+            if let Some(e) = st.map.get(&fp).copied() {
+                st.touch(fp);
+                return Ok(outcome_of(&e, true));
             }
         }
         let entry = if nvecs == 1 {
@@ -392,7 +472,18 @@ impl Autotuner {
         };
         let mut st = self.cache.lock().unwrap();
         st.map.insert(fp, entry);
-        self.persist(&fp, &entry);
+        st.touch(fp);
+        if st.map.len() > self.cache_cap {
+            // evict the least recently used decision(s) and rewrite the
+            // file so it never grows past the cap
+            while st.map.len() > self.cache_cap {
+                let oldest = st.order.remove(0);
+                st.map.remove(&oldest);
+            }
+            self.rewrite(&st);
+        } else {
+            self.persist(&fp, &entry);
+        }
         drop(st);
         Ok(outcome_of(&entry, false))
     }
@@ -610,16 +701,18 @@ fn opts_sig(o: &TuneOptions) -> u64 {
 }
 
 /// One decision as a JSON line (hand-rolled: the crate is
-/// dependency-free, see Cargo.toml). The tuner's device model and sweep
-/// signature are recorded so a cache file shared between differently
-/// configured tuners cannot cross-contaminate.
+/// dependency-free, see Cargo.toml). The format version, the tuner's
+/// device model and the sweep signature are recorded so a stale-format
+/// file or a cache shared between differently configured tuners cannot
+/// cross-contaminate.
 fn cache_line(fp: &Fingerprint, e: &CacheEntry, device: &str, osig: u64) -> String {
     format!(
-        "{{\"device\":\"{}\",\"osig\":{},\"dtype\":\"{}\",\"nrows\":{},\"ncols\":{},\
+        "{{\"v\":{},\"device\":\"{}\",\"osig\":{},\"dtype\":\"{}\",\"nrows\":{},\"ncols\":{},\
          \"nnz\":{},\"row_var_q\":{},\
          \"max_row_len\":{},\"nvecs\":{},\"c\":{},\"sigma\":{},\"variant\":\"{:?}\",\
          \"width\":{},\"measured_gflops\":{},\"model_gflops\":{},\"beta\":{},\
          \"measured\":{},\"pruned\":{}}}",
+        CACHE_FORMAT_VERSION,
         device,
         osig,
         fp.dtype,
@@ -642,7 +735,9 @@ fn cache_line(fp: &Fingerprint, e: &CacheEntry, device: &str, osig: u64) -> Stri
 }
 
 /// Extract the raw text of `"key":value` from a flat JSON line.
-fn json_field<'a>(line: &'a str, key: &str) -> Option<&'a str> {
+/// (Shared with the solve service's request parser — see
+/// `crate::sched::request`.)
+pub(crate) fn json_field<'a>(line: &'a str, key: &str) -> Option<&'a str> {
     let pat = format!("\"{key}\":");
     let start = line.find(&pat)? + pat.len();
     let rest = &line[start..];
@@ -651,11 +746,15 @@ fn json_field<'a>(line: &'a str, key: &str) -> Option<&'a str> {
 }
 
 /// Parse one [`cache_line`], accepting it only when it was recorded
-/// under the same device model and sweep signature; `None` on any
-/// mismatch (the entry is then simply re-swept).
+/// under the current format version, the same device model and the same
+/// sweep signature; `None` on any mismatch (the entry is then simply
+/// re-swept).
 fn parse_cache_line(line: &str, device: &str, osig: u64) -> Option<(Fingerprint, CacheEntry)> {
     let line = line.trim();
     if !line.starts_with('{') {
+        return None;
+    }
+    if json_field(line, "v")?.parse::<u32>().ok()? != CACHE_FORMAT_VERSION {
         return None;
     }
     if json_field(line, "device")? != device {
@@ -941,6 +1040,70 @@ mod tests {
         assert_eq!(t3.cache_len(), 2);
         t3.clear_cache();
         assert!(!path.exists());
+    }
+
+    #[test]
+    fn stale_format_cache_lines_are_rejected() {
+        let path = std::env::temp_dir().join(format!(
+            "ghost_tune_cache_version_{}.jsonl",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_file(&path);
+        let a = matgen::poisson7::<f64>(8, 8, 4);
+        let t1 = Autotuner::new(topology::emmy_cpu_socket(), quick_opts())
+            .with_cache_file(path.clone());
+        t1.tune(&a).unwrap();
+        // rewrite the file under a bogus format version: a fresh tuner
+        // must reject every line instead of tolerating the stale format
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains(&format!("\"v\":{CACHE_FORMAT_VERSION}")));
+        let stale = text.replace(
+            &format!("\"v\":{CACHE_FORMAT_VERSION}"),
+            "\"v\":999",
+        );
+        std::fs::write(&path, stale).unwrap();
+        let t2 = Autotuner::new(topology::emmy_cpu_socket(), quick_opts())
+            .with_cache_file(path.clone());
+        assert_eq!(t2.cache_len(), 0, "stale-format lines must be rejected");
+        assert!(!t2.tune(&a).unwrap().cache_hit);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn cache_cap_evicts_lru_and_truncates_the_file() {
+        let path = std::env::temp_dir().join(format!(
+            "ghost_tune_cache_cap_{}.jsonl",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_file(&path);
+        let tuner = Autotuner::new(topology::emmy_cpu_socket(), quick_opts())
+            .with_cache_file(path.clone())
+            .with_cache_cap(2);
+        let a1 = matgen::poisson7::<f64>(6, 6, 4);
+        let a2 = matgen::poisson7::<f64>(7, 7, 4);
+        let a3 = matgen::poisson7::<f64>(8, 8, 4);
+        tuner.tune(&a1).unwrap();
+        tuner.tune(&a2).unwrap();
+        // touch a1 so a2 is the least recently used when a3 lands
+        assert!(tuner.tune(&a1).unwrap().cache_hit);
+        tuner.tune(&a3).unwrap();
+        assert_eq!(tuner.cache_len(), 2);
+        assert!(tuner.tune(&a1).unwrap().cache_hit, "recently used survives");
+        assert!(tuner.tune(&a3).unwrap().cache_hit, "newest survives");
+        // the persisted file was truncated along with the eviction
+        let lines = std::fs::read_to_string(&path)
+            .unwrap()
+            .lines()
+            .filter(|l| !l.trim().is_empty())
+            .count();
+        assert!(lines <= 2, "file has {lines} lines, cap is 2");
+        // a fresh tuner sees the capped set and a2 was evicted
+        let t2 = Autotuner::new(topology::emmy_cpu_socket(), quick_opts())
+            .with_cache_file(path.clone())
+            .with_cache_cap(2);
+        assert_eq!(t2.cache_len(), 2);
+        assert!(!t2.tune(&a2).unwrap().cache_hit, "evicted entry re-sweeps");
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

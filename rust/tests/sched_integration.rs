@@ -1,0 +1,407 @@
+//! Integration tests for the asynchronous solve service
+//! (`ghost::sched`): concurrent mixed-solver traffic, operator-cache
+//! reuse, request batching through the block path, priority fast-lane
+//! semantics and error surfacing.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use ghost::matgen;
+use ghost::sched::request::{parse_request, serve_oneshot};
+use ghost::sched::{
+    BatchPolicy, JobOutput, JobReport, JobScheduler, JobSpec, MatrixSource, Priority,
+    SchedConfig, SolverKind,
+};
+use ghost::sparsemat::Crs;
+use ghost::taskq::TaskOpts;
+use ghost::topology::Machine;
+
+fn sched_with(policy: BatchPolicy, pus: usize) -> JobScheduler {
+    JobScheduler::new(
+        Machine::small_node(pus),
+        SchedConfig {
+            nshepherds: pus,
+            batching: policy,
+            ..SchedConfig::default()
+        },
+    )
+}
+
+/// Occupy every PU so submitted jobs pile up in the queue (and CG jobs
+/// in the batch buckets) until the blocker releases.
+fn block_all_pus(sched: &JobScheduler, pus: usize, hold: Duration) {
+    sched.queue().enqueue(
+        TaskOpts {
+            nthreads: pus,
+            ..Default::default()
+        },
+        move |_| std::thread::sleep(hold),
+    );
+    // give a shepherd time to actually reserve the PUs
+    std::thread::sleep(Duration::from_millis(20));
+}
+
+fn residual(a: &Crs<f64>, x: &[f64], b: &[f64]) -> f64 {
+    let mut ax = vec![0.0; a.nrows()];
+    a.spmv(x, &mut ax);
+    ax.iter()
+        .zip(b)
+        .map(|(u, v)| (u - v) * (u - v))
+        .sum::<f64>()
+        .sqrt()
+}
+
+/// The acceptance scenario: >= 8 concurrent mixed-solver jobs against
+/// <= 2 distinct matrices. All must complete correctly, the operator
+/// cache must report hits, and at least one batch must have coalesced
+/// >= 2 right-hand sides through the block path.
+#[test]
+fn concurrent_mixed_jobs_batch_and_hit_the_cache() {
+    let pus = 4;
+    let sched = sched_with(BatchPolicy::Fixed(4), pus);
+    let a = Arc::new(matgen::poisson7::<f64>(6, 6, 4)); // SPD, symmetric
+    let h = Arc::new(matgen::scaled_hamiltonian::<f64>(14, 2.0, 42).0); // KPM-ready
+    let n = a.nrows();
+
+    // park everything behind a blocker so all 9 jobs are genuinely
+    // concurrent: the 4 CG jobs land in one batch bucket before any
+    // runner executes
+    block_all_pus(&sched, pus, Duration::from_millis(150));
+
+    let mut handles = Vec::new();
+    let mut rhss = Vec::new();
+    for seed in 0..4u64 {
+        let b = ghost::sched::default_rhs(n, seed);
+        rhss.push(b.clone());
+        let mut spec = JobSpec::new(
+            MatrixSource::Mat(a.clone()),
+            SolverKind::Cg {
+                tol: 1e-9,
+                max_iters: 2000,
+            },
+        );
+        spec.seed = seed;
+        spec.rhs = Some(b);
+        if seed == 0 {
+            spec.priority = Priority::High;
+        }
+        handles.push(sched.submit(spec).unwrap());
+    }
+    handles.push(
+        sched
+            .submit(JobSpec::new(
+                MatrixSource::Mat(a.clone()),
+                SolverKind::BlockCg {
+                    nrhs: 3,
+                    tol: 1e-9,
+                    max_iters: 2000,
+                },
+            ))
+            .unwrap(),
+    );
+    handles.push(
+        sched
+            .submit(JobSpec::new(
+                MatrixSource::Mat(a.clone()),
+                SolverKind::Lanczos { steps: 15 },
+            ))
+            .unwrap(),
+    );
+    handles.push(
+        sched
+            .submit(JobSpec::new(
+                MatrixSource::Mat(a.clone()),
+                SolverKind::ChebFilter {
+                    degree: 8,
+                    block: 3,
+                },
+            ))
+            .unwrap(),
+    );
+    for seed in [5u64, 6] {
+        let mut spec = JobSpec::new(
+            MatrixSource::Mat(h.clone()),
+            SolverKind::Kpm {
+                moments: 16,
+                vectors: 3,
+            },
+        );
+        spec.seed = seed;
+        handles.push(sched.submit(spec).unwrap());
+    }
+    assert_eq!(handles.len(), 9);
+
+    let reports: Vec<JobReport> = handles
+        .into_iter()
+        .map(|hd| hd.wait().expect("job must complete"))
+        .collect();
+    sched.drain();
+
+    // every job completed with a correct result
+    for (i, r) in reports.iter().enumerate() {
+        match &r.output {
+            JobOutput::Solve { x, converged, .. } => {
+                assert!(*converged, "job {i} did not converge");
+                if i < 4 {
+                    // the coalesced CG jobs: verify against their own rhs
+                    assert!(
+                        residual(&a, &x[0], &rhss[i]) < 1e-5,
+                        "job {i} residual too large"
+                    );
+                }
+            }
+            JobOutput::Eigenvalues { values, .. } => {
+                assert!(!values.is_empty());
+                assert!(values.windows(2).all(|w| w[0] <= w[1]), "unsorted Ritz values");
+                // poisson7 spectrum is contained in (0, 12)
+                assert!(*values.first().unwrap() > -1e-8);
+                assert!(*values.last().unwrap() < 12.0 + 1e-8);
+            }
+            JobOutput::Moments { mu } => {
+                assert_eq!(mu.len(), 16);
+                assert!(mu[0].is_finite() && mu[0] > 0.0);
+            }
+            JobOutput::Filtered { eigenvalues, .. } => {
+                assert!(!eigenvalues.is_empty());
+                assert!(eigenvalues.iter().all(|v| v.is_finite()));
+            }
+        }
+    }
+
+    let stats = sched.stats();
+    assert_eq!(stats.completed, 9, "{stats:?}");
+    assert_eq!(stats.failed, 0, "{stats:?}");
+    // the operator cache was exercised: two structures, many consumers
+    assert!(stats.cache.hits >= 1, "{stats:?}");
+    assert_eq!(stats.cache.entries, 2, "{stats:?}");
+    // at least one batch coalesced >= 2 right-hand sides through
+    // apply_block
+    assert!(stats.batches >= 1, "{stats:?}");
+    assert!(stats.max_batch_width >= 2, "{stats:?}");
+    let widest = reports
+        .iter()
+        .map(|r| r.batched_width)
+        .max()
+        .unwrap();
+    assert!(widest >= 2, "no job reports riding a coalesced batch");
+    assert_eq!(sched.shutdown(), 0);
+}
+
+/// Batched execution must be invisible in the numbers: demultiplexed
+/// solutions and residuals are bitwise identical to a batching-off run.
+#[test]
+fn batch_demultiplexing_is_bitwise_identical_to_serial() {
+    let a = Arc::new(matgen::poisson7::<f64>(6, 6, 4));
+    let mk_specs = |a: &Arc<Crs<f64>>| -> Vec<JobSpec> {
+        (0..4u64)
+            .map(|seed| {
+                let mut s = JobSpec::new(
+                    MatrixSource::Mat(a.clone()),
+                    SolverKind::Cg {
+                        tol: 1e-10,
+                        max_iters: 2000,
+                    },
+                );
+                s.seed = seed;
+                s
+            })
+            .collect()
+    };
+    let run = |policy: BatchPolicy, force_concurrent: bool| -> Vec<JobReport> {
+        let pus = 2;
+        let sched = sched_with(policy, pus);
+        if force_concurrent {
+            block_all_pus(&sched, pus, Duration::from_millis(120));
+        }
+        let handles: Vec<_> = mk_specs(&a)
+            .into_iter()
+            .map(|s| sched.submit(s).unwrap())
+            .collect();
+        let reports: Vec<JobReport> =
+            handles.into_iter().map(|h| h.wait().unwrap()).collect();
+        let st = sched.stats();
+        if force_concurrent {
+            assert!(st.batches >= 1, "expected coalescing: {st:?}");
+        }
+        sched.shutdown();
+        reports
+    };
+    let batched = run(BatchPolicy::Fixed(4), true);
+    let serial = run(BatchPolicy::Off, false);
+    for (b, s) in batched.iter().zip(&serial) {
+        let (
+            JobOutput::Solve {
+                x: xb,
+                iterations: ib,
+                final_residual: rb,
+                ..
+            },
+            JobOutput::Solve {
+                x: xs,
+                iterations: is_,
+                final_residual: rs,
+                ..
+            },
+        ) = (&b.output, &s.output)
+        else {
+            panic!("unexpected outputs");
+        };
+        assert_eq!(ib, is_, "iteration counts must match");
+        assert_eq!(rb.to_bits(), rs.to_bits(), "residuals must be bitwise equal");
+        for (u, v) in xb[0].iter().zip(&xs[0]) {
+            assert_eq!(u.to_bits(), v.to_bits(), "solutions must be bitwise equal");
+        }
+    }
+}
+
+/// PRIO_HIGH jobs take the fast lane: under a saturated queue a
+/// high-priority job submitted *after* normal jobs completes first.
+#[test]
+fn priority_jobs_overtake_a_saturated_queue() {
+    let pus = 1;
+    let sched = sched_with(BatchPolicy::Off, pus);
+    let a = Arc::new(matgen::poisson7::<f64>(5, 5, 4));
+    block_all_pus(&sched, pus, Duration::from_millis(120));
+    let mk = |prio: Priority, seed: u64| {
+        let mut s = JobSpec::new(
+            MatrixSource::Mat(a.clone()),
+            SolverKind::Cg {
+                tol: 1e-8,
+                max_iters: 2000,
+            },
+        );
+        s.priority = prio;
+        s.seed = seed;
+        s
+    };
+    let normal1 = sched.submit(mk(Priority::Normal, 1)).unwrap();
+    let normal2 = sched.submit(mk(Priority::Normal, 2)).unwrap();
+    let high = sched.submit(mk(Priority::High, 3)).unwrap();
+    let rh = high.wait().unwrap();
+    let r1 = normal1.wait().unwrap();
+    let r2 = normal2.wait().unwrap();
+    assert!(
+        rh.completed_at <= r1.completed_at && rh.completed_at <= r2.completed_at,
+        "PRIO_HIGH job must finish before normal jobs submitted earlier"
+    );
+    sched.shutdown();
+}
+
+/// JobHandle::wait surfaces solver errors instead of panicking or
+/// hanging; submission errors surface immediately.
+#[test]
+fn errors_surface_through_handles_and_submit() {
+    let sched = sched_with(BatchPolicy::Auto, 2);
+    // unknown named matrix: rejected at submit
+    let err = sched.submit(JobSpec::new(
+        MatrixSource::Named {
+            name: "nosuch".into(),
+            n: 100,
+        },
+        SolverKind::Cg {
+            tol: 1e-8,
+            max_iters: 10,
+        },
+    ));
+    assert!(err.is_err());
+    // invalid solver parameter: surfaces through wait()
+    let a = Arc::new(matgen::poisson7::<f64>(4, 4, 4));
+    let h = sched
+        .submit(JobSpec::new(
+            MatrixSource::Mat(a.clone()),
+            SolverKind::Lanczos { steps: 0 },
+        ))
+        .unwrap();
+    let e = h.wait();
+    assert!(e.is_err(), "lanczos with 0 steps must fail");
+    // wrong-length rhs: rejected at submit
+    let mut bad = JobSpec::new(
+        MatrixSource::Mat(a.clone()),
+        SolverKind::Cg {
+            tol: 1e-8,
+            max_iters: 10,
+        },
+    );
+    bad.rhs = Some(vec![1.0; 3]);
+    assert!(sched.submit(bad).is_err());
+    let stats = sched.stats();
+    assert_eq!(stats.failed, 1, "{stats:?}");
+    sched.shutdown();
+}
+
+/// Shutdown fails parked jobs instead of stranding their waiters.
+#[test]
+fn shutdown_fails_parked_jobs_instead_of_hanging() {
+    let pus = 1;
+    let sched = sched_with(BatchPolicy::Fixed(4), pus);
+    let a = Arc::new(matgen::poisson7::<f64>(5, 5, 4));
+    block_all_pus(&sched, pus, Duration::from_millis(200));
+    let h1 = sched
+        .submit(JobSpec::new(
+            MatrixSource::Mat(a.clone()),
+            SolverKind::Cg {
+                tol: 1e-8,
+                max_iters: 100,
+            },
+        ))
+        .unwrap();
+    let h2 = sched
+        .submit(JobSpec::new(
+            MatrixSource::Mat(a.clone()),
+            SolverKind::Lanczos { steps: 5 },
+        ))
+        .unwrap();
+    let cancelled = sched.shutdown();
+    assert_eq!(cancelled, 2, "both never-ran jobs must be cancelled");
+    assert!(h1.wait().is_err());
+    assert!(h2.wait().is_err());
+}
+
+/// End-to-end JSONL round trip through serve_oneshot: mixed requests,
+/// responses for every line, and batching + caching visible in the
+/// summary.
+#[test]
+fn serve_oneshot_round_trip() {
+    let dir = std::env::temp_dir();
+    let path = dir.join(format!("ghost_serve_{}.jsonl", std::process::id()));
+    let requests = r#"# solve-service smoke traffic
+{"id":1,"solver":"cg","matrix":"poisson7","n":216,"tol":1e-8,"seed":1}
+{"id":2,"solver":"cg","matrix":"poisson7","n":216,"tol":1e-8,"seed":2,"prio":"high"}
+{"id":3,"solver":"cg","matrix":"poisson7","n":216,"tol":1e-8,"seed":3}
+{"id":4,"solver":"block_cg","matrix":"poisson7","n":216,"nrhs":3,"tol":1e-8}
+{"id":5,"solver":"lanczos","matrix":"poisson7","n":216,"steps":12}
+{"id":6,"solver":"kpm","matrix":"hamiltonian","n":196,"moments":16,"vectors":2}
+"#;
+    std::fs::write(&path, requests).unwrap();
+    let sched = sched_with(BatchPolicy::Fixed(4), 2);
+    let mut out = Vec::new();
+    let summary = serve_oneshot(&sched, &path, &mut out).unwrap();
+    let text = String::from_utf8(out).unwrap();
+    assert_eq!(summary.jobs, 6);
+    assert_eq!(summary.failed, 0, "{text}");
+    for id in 1..=6 {
+        assert!(
+            text.contains(&format!("\"id\":{id},\"ok\":true")),
+            "missing ok response for {id}: {text}"
+        );
+    }
+    assert!(summary.jobs_per_sec > 0.0 && summary.gflops >= 0.0);
+    // two named matrices built, many consumers: the cache must hit
+    assert!(summary.stats.cache.hits >= 1, "{:?}", summary.stats);
+    assert_eq!(sched.shutdown(), 0);
+    let _ = std::fs::remove_file(&path);
+}
+
+/// The documented request grammar parses (doc examples stay honest).
+#[test]
+fn request_grammar_examples_parse() {
+    for line in [
+        r#"{"id":1,"solver":"cg","matrix":"poisson7","n":4096,"tol":1e-8,"max_iters":500,"prio":"high"}"#,
+        r#"{"id":2,"solver":"block_cg","matrix":"poisson7","n":4096,"nrhs":4,"tol":1e-8}"#,
+        r#"{"id":3,"solver":"lanczos","matrix":"anderson","n":400,"steps":30}"#,
+        r#"{"id":4,"solver":"kpm","matrix":"hamiltonian","n":1024,"moments":64,"vectors":4}"#,
+        r#"{"id":5,"solver":"cheb_filter","matrix":"poisson7","n":1000,"degree":16,"block":4}"#,
+    ] {
+        assert!(parse_request(line).unwrap().is_some(), "{line}");
+    }
+}
