@@ -15,17 +15,27 @@
 //! the batcher's bundled CG keeps every column's recurrence independent
 //! — which this binary asserts before printing the comparison.
 //!
+//! A second comparison shards the stream: the same mixed workload over
+//! **four distinct matrices** is pushed through one 4-PU scheduler and
+//! through `ShardedScheduler` with 4 single-PU nodes (affinity
+//! routing, instant fabric). Per-request results must again be bitwise
+//! identical; the sharded side wins wall-clock because the four
+//! assemble-and-autotune misses run on four independent operator
+//! caches instead of serializing under one cache lock.
+//!
 //!     cargo run --release --example schedbench [-- <jobs>] [--quick]
 
 use std::sync::Arc;
 use std::time::Instant;
 
 use ghost::benchutil::Table;
+use ghost::comm::CommConfig;
 use ghost::core::Result;
 use ghost::matgen;
 use ghost::sched::{
-    BatchPolicy, JobOutput, JobReport, JobScheduler, JobSpec, MatrixSource, Priority,
-    SchedConfig, SolverKind,
+    matrix_key, BatchPolicy, JobOutput, JobReport, JobScheduler, JobSpec, MatrixSource,
+    Priority, RoutePolicy, SchedConfig, ShardConfig, ShardedScheduler, SolveService,
+    SolverKind,
 };
 use ghost::sparsemat::Crs;
 use ghost::topology::Machine;
@@ -83,6 +93,29 @@ fn mixed_jobs(a: &Arc<Crs<f64>>, b: &Arc<Crs<f64>>, jobs: usize) -> Vec<JobSpec>
         .collect()
 }
 
+/// Push `specs` through any [`SolveService`] and collect the reports.
+fn run_service(svc: &dyn SolveService, specs: &[JobSpec]) -> Result<RunOutcome> {
+    let t0 = Instant::now();
+    let handles: Vec<_> = specs
+        .iter()
+        .map(|s| svc.submit(s.clone()))
+        .collect::<Result<_>>()?;
+    let reports: Vec<JobReport> = handles
+        .into_iter()
+        .map(|h| h.wait())
+        .collect::<Result<_>>()?;
+    let elapsed = t0.elapsed();
+    svc.drain();
+    let stats = svc.stats();
+    Ok(RunOutcome {
+        reports,
+        elapsed,
+        batches: stats.batches,
+        widest: stats.max_batch_width,
+        cache_hits: stats.cache.hits,
+    })
+}
+
 fn run(policy: BatchPolicy, specs: &[JobSpec], pus: usize) -> Result<RunOutcome> {
     let sched = JobScheduler::new(
         Machine::small_node(pus),
@@ -92,26 +125,60 @@ fn run(policy: BatchPolicy, specs: &[JobSpec], pus: usize) -> Result<RunOutcome>
             ..SchedConfig::default()
         },
     );
-    let t0 = Instant::now();
-    let handles: Vec<_> = specs
-        .iter()
-        .map(|s| sched.submit(s.clone()))
-        .collect::<Result<_>>()?;
-    let reports: Vec<JobReport> = handles
-        .into_iter()
-        .map(|h| h.wait())
-        .collect::<Result<_>>()?;
-    let elapsed = t0.elapsed();
-    sched.drain();
-    let stats = sched.stats();
+    let out = run_service(&sched, specs)?;
     sched.shutdown();
-    Ok(RunOutcome {
-        reports,
-        elapsed,
-        batches: stats.batches,
-        widest: stats.max_batch_width,
-        cache_hits: stats.cache.hits,
-    })
+    Ok(out)
+}
+
+/// Assert bitwise-equal Solve outputs between two runs of the same
+/// specs (coalescing and sharding must both be invisible in the
+/// numbers).
+fn assert_bitwise(label: &str, a: &[JobReport], b: &[JobReport]) {
+    for (s, bt) in a.iter().zip(b) {
+        if let (JobOutput::Solve { x: xs, .. }, JobOutput::Solve { x: xb, .. }) =
+            (&s.output, &bt.output)
+        {
+            assert_eq!(xs.len(), xb.len());
+            for (cs, cb) in xs.iter().zip(xb) {
+                for (u, v) in cs.iter().zip(cb) {
+                    assert_eq!(u.to_bits(), v.to_bits(), "{label}: result diverged");
+                }
+            }
+        }
+    }
+}
+
+/// The sharding workload: a mixed stream over >= 4 distinct matrices,
+/// every caller-assembled matrix carrying its precomputed key so the
+/// router never digests on the hot path.
+fn sharded_jobs(mats: &[Arc<Crs<f64>>], jobs: usize) -> Vec<JobSpec> {
+    (0..jobs)
+        .map(|i| {
+            let a = &mats[i % mats.len()];
+            let key = matrix_key(a);
+            let mut spec = match i % 5 {
+                0 | 1 | 2 => JobSpec::new(
+                    MatrixSource::Mat(a.clone()),
+                    SolverKind::Cg {
+                        tol: 1e-8,
+                        max_iters: 2000,
+                    },
+                ),
+                3 => JobSpec::new(MatrixSource::Mat(a.clone()), SolverKind::Lanczos { steps: 15 }),
+                _ => JobSpec::new(
+                    MatrixSource::Mat(a.clone()),
+                    SolverKind::BlockCg {
+                        nrhs: 3,
+                        tol: 1e-8,
+                        max_iters: 2000,
+                    },
+                ),
+            }
+            .with_matrix_key(key);
+            spec.seed = i as u64;
+            spec
+        })
+        .collect()
 }
 
 fn gflops(reports: &[JobReport], secs: f64) -> f64 {
@@ -153,21 +220,51 @@ fn main() -> Result<()> {
 
     // coalescing must be invisible in the numbers: demultiplexed CG
     // solutions are bitwise identical to solo solves
-    for (s, bt) in serial.reports.iter().zip(&batched.reports) {
-        if let (
-            JobOutput::Solve { x: xs, .. },
-            JobOutput::Solve { x: xb, .. },
-        ) = (&s.output, &bt.output)
-        {
-            assert_eq!(xs.len(), xb.len());
-            for (cs, cb) in xs.iter().zip(xb) {
-                for (u, v) in cs.iter().zip(cb) {
-                    assert_eq!(u.to_bits(), v.to_bits(), "batched result diverged");
-                }
-            }
-        }
-    }
+    assert_bitwise("batched vs serial", &serial.reports, &batched.reports);
     println!("result check: batched solutions bitwise-match serial ✓");
+
+    // --- sharded vs single-node on a >= 4-distinct-matrix stream
+    let nodes = 4usize;
+    let mats: Vec<Arc<Crs<f64>>> = if quick {
+        vec![
+            Arc::new(matgen::poisson7::<f64>(7, 7, 7)),
+            Arc::new(matgen::anderson::<f64>(18, 1.0, 5)),
+            Arc::new(matgen::matpde::<f64>(18)),
+            Arc::new(matgen::random_sparse::<f64>(320, 8, 13)),
+        ]
+    } else {
+        vec![
+            Arc::new(matgen::poisson7::<f64>(12, 12, 8)),
+            Arc::new(matgen::anderson::<f64>(34, 1.0, 5)),
+            Arc::new(matgen::matpde::<f64>(34)),
+            Arc::new(matgen::random_sparse::<f64>(1150, 8, 13)),
+        ]
+    };
+    let sjobs = sharded_jobs(&mats, jobs.max(2 * nodes));
+    println!(
+        "\nsharding: {} mixed jobs over {} distinct matrices, {nodes} nodes",
+        sjobs.len(),
+        mats.len()
+    );
+    let single = run(BatchPolicy::Auto, &sjobs, nodes)?;
+    let shard = ShardedScheduler::new(ShardConfig {
+        nodes,
+        policy: RoutePolicy::Affinity,
+        pus_per_node: 1,
+        sched: SchedConfig {
+            nshepherds: 1,
+            batching: BatchPolicy::Auto,
+            ..SchedConfig::default()
+        },
+        comm: CommConfig::instant(),
+        ..ShardConfig::default()
+    })?;
+    let sharded = run_service(&shard, &sjobs)?;
+    let shard_detail = shard.shard_stats();
+    shard.shutdown();
+    // sharding must be invisible in the numbers too
+    assert_bitwise("sharded vs single", &single.reports, &sharded.reports);
+    println!("result check: sharded solutions bitwise-match single-node ✓");
 
     let mut t = Table::new(&[
         "mode",
@@ -178,7 +275,12 @@ fn main() -> Result<()> {
         "cache hits",
         "wall s",
     ]);
-    for (name, o) in [("serial", &serial), ("batched", &batched)] {
+    for (name, o) in [
+        ("serial", &serial),
+        ("batched", &batched),
+        ("single x1", &single),
+        ("sharded x4", &sharded),
+    ] {
         let secs = o.elapsed.as_secs_f64().max(1e-9);
         t.row(&[
             name.to_string(),
@@ -191,5 +293,20 @@ fn main() -> Result<()> {
         ]);
     }
     t.print();
+    for (i, n) in shard_detail.per_node.iter().enumerate() {
+        println!(
+            "node {i}: {} routed ({} handoffs), peak queue {}, {} cache hits",
+            n.routed, n.handoffs, n.peak_outstanding, n.sched.cache.hits
+        );
+    }
+    let speedup = single.elapsed.as_secs_f64() / sharded.elapsed.as_secs_f64().max(1e-9);
+    println!("sharded/single speedup on the distinct-matrix stream: {speedup:.2}x");
+    if speedup < 1.0 {
+        println!(
+            "note: sharded ran below single-node this time — expected only on \
+             noisy machines; the distinct-matrix misses otherwise assemble \
+             concurrently across the per-node operator caches"
+        );
+    }
     Ok(())
 }

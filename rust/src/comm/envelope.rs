@@ -1,0 +1,363 @@
+//! Binary request/result envelopes for services that ship work across
+//! the simulated-MPI fabric.
+//!
+//! The sharded solve service ([`crate::sched::shard`]) routes solve
+//! requests from a front-end rank to per-node schedulers and streams
+//! results back. Those messages travel through [`super::Comm`] as raw
+//! byte payloads, so they need a framing layer: a tiny, dependency-free
+//! little-endian codec ([`ByteWriter`] / [`ByteReader`]) plus a
+//! versioned envelope header ([`Envelope`]) that tags each payload with
+//! its kind. Decoding is total — a truncated or foreign payload
+//! produces a [`GhostError::Parse`], never a panic, because a service
+//! must survive a malformed peer.
+//!
+//! The codec is deliberately *not* self-describing (no field names):
+//! both ends are the same binary, the format version in the envelope
+//! header is the compatibility gate, and the encoded sizes are on the
+//! SpMV hot path when a request carries a caller-assembled matrix.
+
+use crate::core::{GhostError, Result};
+
+/// Version of the on-fabric envelope layout. Bumped whenever any
+/// payload schema changes; a mismatched peer is rejected at decode.
+pub const ENVELOPE_VERSION: u16 = 1;
+
+/// Little-endian append-only byte sink.
+#[derive(Default)]
+pub struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    pub fn new() -> Self {
+        ByteWriter { buf: Vec::new() }
+    }
+
+    pub fn with_capacity(cap: usize) -> Self {
+        ByteWriter {
+            buf: Vec::with_capacity(cap),
+        }
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn put_u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_usize(&mut self, v: usize) {
+        self.put_u64(v as u64);
+    }
+
+    pub fn put_bool(&mut self, v: bool) {
+        self.put_u8(v as u8);
+    }
+
+    pub fn put_f64(&mut self, v: f64) {
+        // bit-exact: results demultiplexed from an envelope must be
+        // indistinguishable from in-process results
+        self.put_u64(v.to_bits());
+    }
+
+    pub fn put_str(&mut self, s: &str) {
+        self.put_usize(s.len());
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    pub fn put_f64_slice(&mut self, v: &[f64]) {
+        self.put_usize(v.len());
+        for &x in v {
+            self.put_f64(x);
+        }
+    }
+
+    pub fn put_usize_slice(&mut self, v: &[usize]) {
+        self.put_usize(v.len());
+        for &x in v {
+            self.put_usize(x);
+        }
+    }
+
+    pub fn put_i32_slice(&mut self, v: &[i32]) {
+        self.put_usize(v.len());
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    pub fn put_opt_u64(&mut self, v: Option<u64>) {
+        match v {
+            Some(x) => {
+                self.put_bool(true);
+                self.put_u64(x);
+            }
+            None => self.put_bool(false),
+        }
+    }
+}
+
+/// Cursor over a received payload. Every accessor checks bounds and
+/// fails with [`GhostError::Parse`] on truncation.
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        ByteReader { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        crate::ensure!(
+            self.remaining() >= n,
+            Parse,
+            "envelope truncated: need {n} bytes, have {}",
+            self.remaining()
+        );
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn get_u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn get_u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    pub fn get_u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn get_usize(&mut self) -> Result<usize> {
+        Ok(self.get_u64()? as usize)
+    }
+
+    pub fn get_bool(&mut self) -> Result<bool> {
+        Ok(self.get_u8()? != 0)
+    }
+
+    pub fn get_f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.get_u64()?))
+    }
+
+    pub fn get_str(&mut self) -> Result<String> {
+        let n = self.checked_len()?;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| GhostError::Parse("envelope string is not UTF-8".into()))
+    }
+
+    /// Read a length prefix, rejecting lengths the remaining payload
+    /// cannot possibly hold (a corrupt length must not trigger a huge
+    /// allocation before the bounds check fails).
+    fn checked_len(&mut self) -> Result<usize> {
+        let n = self.get_usize()?;
+        crate::ensure!(
+            n <= self.remaining(),
+            Parse,
+            "envelope length {n} exceeds remaining {} bytes",
+            self.remaining()
+        );
+        Ok(n)
+    }
+
+    pub fn get_f64_vec(&mut self) -> Result<Vec<f64>> {
+        let n = self.get_usize()?;
+        crate::ensure!(
+            n.checked_mul(8).is_some_and(|b| b <= self.remaining()),
+            Parse,
+            "envelope f64 slice of {n} exceeds remaining {} bytes",
+            self.remaining()
+        );
+        (0..n).map(|_| self.get_f64()).collect()
+    }
+
+    pub fn get_usize_vec(&mut self) -> Result<Vec<usize>> {
+        let n = self.get_usize()?;
+        crate::ensure!(
+            n.checked_mul(8).is_some_and(|b| b <= self.remaining()),
+            Parse,
+            "envelope usize slice of {n} exceeds remaining {} bytes",
+            self.remaining()
+        );
+        (0..n).map(|_| self.get_usize()).collect()
+    }
+
+    pub fn get_i32_vec(&mut self) -> Result<Vec<i32>> {
+        let n = self.get_usize()?;
+        crate::ensure!(
+            n.checked_mul(4).is_some_and(|b| b <= self.remaining()),
+            Parse,
+            "envelope i32 slice of {n} exceeds remaining {} bytes",
+            self.remaining()
+        );
+        (0..n)
+            .map(|_| Ok(i32::from_le_bytes(self.take(4)?.try_into().unwrap())))
+            .collect()
+    }
+
+    pub fn get_opt_u64(&mut self) -> Result<Option<u64>> {
+        Ok(if self.get_bool()? {
+            Some(self.get_u64()?)
+        } else {
+            None
+        })
+    }
+
+    /// All bytes consumed — decoders call this last so a trailing
+    /// garbage suffix (version skew symptom) is caught, not ignored.
+    pub fn finish(&self) -> Result<()> {
+        crate::ensure!(
+            self.remaining() == 0,
+            Parse,
+            "envelope has {} trailing bytes",
+            self.remaining()
+        );
+        Ok(())
+    }
+}
+
+/// A framed fabric message: version + kind tag + opaque payload. The
+/// kind space is owned by the service that speaks the protocol (the
+/// sharded solve service defines its kinds in [`crate::sched::shard`]).
+pub struct Envelope {
+    pub kind: u8,
+    pub payload: Vec<u8>,
+}
+
+impl Envelope {
+    pub fn new(kind: u8, payload: Vec<u8>) -> Self {
+        Envelope { kind, payload }
+    }
+
+    /// Serialize for [`super::Comm::send_bytes`].
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = ByteWriter::with_capacity(self.payload.len() + 11);
+        w.put_u16(ENVELOPE_VERSION);
+        w.put_u8(self.kind);
+        w.put_usize(self.payload.len());
+        let mut out = w.into_bytes();
+        out.extend_from_slice(&self.payload);
+        out
+    }
+
+    /// Parse a received byte message; rejects version skew, truncation
+    /// and trailing garbage.
+    pub fn decode(bytes: &[u8]) -> Result<Envelope> {
+        let mut r = ByteReader::new(bytes);
+        let v = r.get_u16()?;
+        crate::ensure!(
+            v == ENVELOPE_VERSION,
+            Parse,
+            "envelope version {v} != {ENVELOPE_VERSION}"
+        );
+        let kind = r.get_u8()?;
+        let len = r.get_usize()?;
+        let payload = r.take(len)?.to_vec();
+        r.finish()?;
+        Ok(Envelope { kind, payload })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_and_slice_round_trip_bit_exact() {
+        let mut w = ByteWriter::new();
+        w.put_u8(7);
+        w.put_u16(65535);
+        w.put_u64(u64::MAX - 3);
+        w.put_bool(true);
+        w.put_f64(-0.0); // signed zero must survive
+        w.put_f64(f64::NAN);
+        w.put_str("poisson7");
+        w.put_f64_slice(&[1.5, -2.25, 1e-300]);
+        w.put_usize_slice(&[0, 1, 9]);
+        w.put_i32_slice(&[-1, 0, i32::MAX]);
+        w.put_opt_u64(Some(42));
+        w.put_opt_u64(None);
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        assert_eq!(r.get_u8().unwrap(), 7);
+        assert_eq!(r.get_u16().unwrap(), 65535);
+        assert_eq!(r.get_u64().unwrap(), u64::MAX - 3);
+        assert!(r.get_bool().unwrap());
+        assert_eq!(r.get_f64().unwrap().to_bits(), (-0.0f64).to_bits());
+        assert!(r.get_f64().unwrap().is_nan());
+        assert_eq!(r.get_str().unwrap(), "poisson7");
+        assert_eq!(r.get_f64_vec().unwrap(), vec![1.5, -2.25, 1e-300]);
+        assert_eq!(r.get_usize_vec().unwrap(), vec![0, 1, 9]);
+        assert_eq!(r.get_i32_vec().unwrap(), vec![-1, 0, i32::MAX]);
+        assert_eq!(r.get_opt_u64().unwrap(), Some(42));
+        assert_eq!(r.get_opt_u64().unwrap(), None);
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn truncation_and_corrupt_lengths_error_instead_of_panicking() {
+        let mut w = ByteWriter::new();
+        w.put_f64_slice(&[1.0, 2.0, 3.0]);
+        let bytes = w.into_bytes();
+        // every prefix of a valid message decodes to an error, not a panic
+        for cut in 0..bytes.len() {
+            let mut r = ByteReader::new(&bytes[..cut]);
+            assert!(r.get_f64_vec().is_err(), "prefix of {cut} bytes");
+        }
+        // a corrupt (huge) length prefix fails the bounds check before
+        // any allocation
+        let mut w = ByteWriter::new();
+        w.put_u64(u64::MAX / 2);
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        assert!(r.get_f64_vec().is_err());
+        let mut r = ByteReader::new(&bytes);
+        assert!(r.get_str().is_err());
+    }
+
+    #[test]
+    fn envelope_rejects_version_skew_and_trailing_garbage() {
+        let env = Envelope::new(3, vec![1, 2, 3]);
+        let bytes = env.encode();
+        let back = Envelope::decode(&bytes).unwrap();
+        assert_eq!(back.kind, 3);
+        assert_eq!(back.payload, vec![1, 2, 3]);
+        // version skew
+        let mut bad = bytes.clone();
+        bad[0] ^= 0xFF;
+        assert!(Envelope::decode(&bad).is_err());
+        // trailing garbage
+        let mut long = bytes.clone();
+        long.push(0);
+        assert!(Envelope::decode(&long).is_err());
+        // truncation
+        assert!(Envelope::decode(&bytes[..bytes.len() - 1]).is_err());
+    }
+}

@@ -17,6 +17,7 @@
 //! with thread sleeps (scaled so benches run in milliseconds).
 
 pub mod context;
+pub mod envelope;
 pub mod exchange;
 
 use std::collections::HashMap;

@@ -14,12 +14,16 @@
 //!           autotune picks for the random-vector block)
 //!   serve  --requests F.jsonl [--oneshot] [--pus P] [--shepherds S]
 //!          [--cache-mb M] [--max-batch W] [--no-batch]
+//!          [--nodes N] [--route affinity|hash|load] [--node-pus P]
 //!          (the asynchronous solve service: jobs from a JSONL request
 //!           file are scheduled on the task queue, operators are cached
 //!           by sparsity fingerprint, and concurrent single-RHS CG jobs
 //!           are coalesced into block solves — see ghost::sched. With
 //!           --oneshot the file is processed once and a throughput
-//!           summary printed; without it the file is tailed forever.)
+//!           summary printed; without it the file is tailed forever.
+//!           With --nodes N > 1 the request stream is sharded across N
+//!           simulated-MPI node schedulers, routed by matrix affinity
+//!           (or hash / least-loaded) — see ghost::sched::shard.)
 //!
 //! Matrices: poisson7 | stencil27 | matpde | anderson | cage | random.
 //! (clap is not vendorable offline; flags are parsed by the tiny parser
@@ -363,7 +367,10 @@ fn cmd_kpm(a: &Args) -> Result<()> {
 }
 
 fn cmd_serve(a: &Args) -> Result<()> {
-    use ghost::sched::{request, BatchPolicy, JobScheduler, SchedConfig};
+    use ghost::sched::{
+        request, BatchPolicy, JobScheduler, RoutePolicy, SchedConfig, ShardConfig,
+        ShardedScheduler, SolveService,
+    };
     let path = a.str("requests", "");
     ghost::ensure!(
         !path.is_empty(),
@@ -374,6 +381,8 @@ fn cmd_serve(a: &Args) -> Result<()> {
         "pus",
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
     );
+    let nodes: usize = a.get("nodes", 1);
+    ghost::ensure!(nodes >= 1, InvalidArg, "--nodes must be >= 1");
     let cfg = SchedConfig {
         nshepherds: a.get("shepherds", pus.max(2)),
         cache_budget_bytes: a.get::<usize>("cache-mb", 256) << 20,
@@ -385,16 +394,54 @@ fn cmd_serve(a: &Args) -> Result<()> {
         max_batch: a.get("max-batch", 8),
     };
     let oneshot = a.flags.contains_key("oneshot");
-    println!(
-        "solve service: {pus} PUs, {} shepherds, {} MiB operator cache, batching {:?}",
-        cfg.nshepherds,
-        cfg.cache_budget_bytes >> 20,
-        cfg.batching
-    );
-    let sched = JobScheduler::new(topology::Machine::small_node(pus), cfg);
+    // one scheduler, or one per simulated node behind the shard router
+    let sharded = if nodes > 1 {
+        let policy = RoutePolicy::parse(&a.str("route", "affinity"))?;
+        // split the PU budget across the nodes unless overridden
+        let node_pus: usize = a.get("node-pus", (pus / nodes).max(1));
+        // shepherds scale with the node, not the whole machine: the
+        // single-node default (total PUs) times N nodes would
+        // oversubscribe the host; an explicit --shepherds still wins
+        let mut node_cfg = cfg.clone();
+        if !a.flags.contains_key("shepherds") {
+            node_cfg.nshepherds = node_pus.max(2);
+        }
+        println!(
+            "sharded solve service: {nodes} nodes x {node_pus} PUs, {} routing, \
+             {} shepherds/node, {} MiB operator cache/node, batching {:?}",
+            policy.name(),
+            node_cfg.nshepherds,
+            node_cfg.cache_budget_bytes >> 20,
+            node_cfg.batching
+        );
+        Some(ShardedScheduler::new(ShardConfig {
+            nodes,
+            policy,
+            pus_per_node: node_pus,
+            sched: node_cfg,
+            ..ShardConfig::default()
+        })?)
+    } else {
+        println!(
+            "solve service: {pus} PUs, {} shepherds, {} MiB operator cache, batching {:?}",
+            cfg.nshepherds,
+            cfg.cache_budget_bytes >> 20,
+            cfg.batching
+        );
+        None
+    };
+    let single = if sharded.is_none() {
+        Some(JobScheduler::new(topology::Machine::small_node(pus), cfg))
+    } else {
+        None
+    };
+    let sched: &dyn SolveService = match &sharded {
+        Some(s) => s,
+        None => single.as_ref().unwrap(),
+    };
     let mut out = std::io::stdout();
     if oneshot {
-        let s = request::serve_oneshot(&sched, std::path::Path::new(&path), &mut out)?;
+        let s = request::serve_oneshot(sched, std::path::Path::new(&path), &mut out)?;
         println!(
             "served {} jobs ({} failed) in {:.3}s — {:.1} jobs/s, {:.2} Gflop/s",
             s.jobs,
@@ -414,13 +461,27 @@ fn cmd_serve(a: &Args) -> Result<()> {
             s.stats.batched_jobs,
             s.stats.max_batch_width
         );
+        if let Some(shard) = &sharded {
+            let st = shard.shard_stats();
+            for (i, n) in st.per_node.iter().enumerate() {
+                println!(
+                    "  node {i}: {} routed ({} handoffs), peak queue {}, \
+                     {:.1} MiB peak resident, {} cache hits",
+                    n.routed,
+                    n.handoffs,
+                    n.peak_outstanding,
+                    n.peak_resident_bytes as f64 / (1 << 20) as f64,
+                    n.sched.cache.hits
+                );
+            }
+        }
         let cancelled = sched.shutdown();
         ghost::ensure!(cancelled == 0, Task, "{cancelled} jobs stranded at shutdown");
         ghost::ensure!(s.failed == 0, Task, "{} request(s) failed", s.failed);
     } else {
         eprintln!("tailing {path} (Ctrl-C to stop)");
         request::serve_follow(
-            &sched,
+            sched,
             std::path::Path::new(&path),
             std::time::Duration::from_millis(200),
             &mut out,

@@ -26,9 +26,17 @@
 //!   residuals — bitwise identical to solo execution, so callers cannot
 //!   observe coalescing.
 //!
+//! Above the single-node engine sits the **sharded service**
+//! ([`shard`]): one scheduler per simulated-MPI rank, with a front-end
+//! that routes requests over the fabric by matrix-fingerprint affinity
+//! (hash and least-loaded policies too), keeps per-node load accounts
+//! and hands jobs off when a node backs up. Both layers implement
+//! [`SolveService`], so every consumer below drives either one.
+//!
 //! The `ghost serve` CLI mode drives this engine from a JSONL request
-//! file (see [`request`]), and `examples/schedbench.rs` measures the
-//! throughput win of batching + caching over serial dispatch.
+//! file (see [`request`]; `--nodes N` selects the sharded service), and
+//! `examples/schedbench.rs` measures the throughput win of batching +
+//! caching over serial dispatch and of sharding over a single node.
 //!
 //! [`Operator::apply_block`]: crate::solvers::Operator::apply_block
 //! [`taskq::TaskQueue`]: crate::taskq::TaskQueue
@@ -36,6 +44,10 @@
 pub mod batch;
 pub mod cache;
 pub mod request;
+pub mod shard;
+
+pub use cache::{matrix_key, MatrixKey};
+pub use shard::{NodeStats, RoutePolicy, ShardConfig, ShardStats, ShardedScheduler};
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -53,8 +65,9 @@ use crate::solvers::Operator;
 use crate::sparsemat::Crs;
 use crate::taskq::{flags as tflags, TaskOpts, TaskQueue};
 use crate::topology::Machine;
+use crate::tune;
 use batch::batch_cg;
-use cache::{matrix_key, CacheStats, MatrixKey, OperatorCache};
+use cache::{CacheStats, OperatorCache};
 
 /// Where a job's matrix comes from.
 #[derive(Clone)]
@@ -123,6 +136,17 @@ pub struct JobSpec {
     /// Explicit right-hand side for Cg jobs; generated from `seed`
     /// ([`default_rhs`]) when absent.
     pub rhs: Option<Vec<f64>>,
+    /// Client-provided identity of a [`MatrixSource::Mat`] matrix
+    /// (obtained once via [`matrix_key`]). High-rate intake of the same
+    /// large matrix then skips the per-submit O(nnz) content digest on
+    /// the routing/batching hot path: the scheduler only re-checks the
+    /// O(nrows) structural fingerprint ([`tune::fingerprint`]) against
+    /// the key and rejects a mismatch. The *content* half of the key is
+    /// trusted — a caller who reuses a key across matrices with
+    /// identical structure but different values gets exactly the stale
+    /// operator it asked for, which is why the key must come from
+    /// [`matrix_key`] on the actual matrix, not be invented.
+    pub matrix_key: Option<MatrixKey>,
 }
 
 impl JobSpec {
@@ -135,8 +159,42 @@ impl JobSpec {
             numanode: None,
             seed: 0,
             rhs: None,
+            matrix_key: None,
         }
     }
+
+    /// Attach a precomputed [`matrix_key`] (see the field docs).
+    pub fn with_matrix_key(mut self, key: MatrixKey) -> Self {
+        self.matrix_key = Some(key);
+        self
+    }
+}
+
+/// Verify a client-provided key against the matrix it claims to
+/// identify: the structural fingerprint (O(nrows) — row lengths, sizes,
+/// dispersion) must match; the content digest is the part the key
+/// exists to skip. Shared by the local scheduler and the shard router.
+pub(crate) fn verify_client_key(key: MatrixKey, a: &Crs<f64>) -> Result<MatrixKey> {
+    let fp = tune::fingerprint(a);
+    crate::ensure!(
+        key.fp == fp,
+        InvalidArg,
+        "client matrix_key does not belong to this matrix: structural \
+         fingerprint mismatch (key {:?} vs matrix {:?})",
+        key.fp,
+        fp
+    );
+    Ok(key)
+}
+
+/// Whether `name` is a matrix source [`build_named_matrix`] understands
+/// (cheap validation for routers that must reject unknown names without
+/// building anything).
+pub fn is_known_matrix(name: &str) -> bool {
+    matches!(
+        name,
+        "poisson7" | "stencil27" | "matpde" | "anderson" | "cage" | "random" | "hamiltonian"
+    )
 }
 
 /// Deterministic right-hand side for jobs that do not carry one.
@@ -220,6 +278,40 @@ struct JobState {
     done: Condvar,
 }
 
+impl JobState {
+    fn new(id: u64) -> Arc<JobState> {
+        Arc::new(JobState {
+            id,
+            result: Mutex::new(None),
+            done: Condvar::new(),
+        })
+    }
+
+    /// Install the result unless one is already present (shutdown-race
+    /// insurance) and wake the waiters. Returns whether *this* call
+    /// resolved the job.
+    fn fulfill(&self, res: Result<JobReport>) -> bool {
+        self.fulfill_then(res, || {})
+    }
+
+    /// [`JobState::fulfill`] with a callback that runs *after* the
+    /// result is installed but *before* any waiter can observe it (the
+    /// slot lock is still held). Completion counters go through here so
+    /// a thread that wakes from `wait()` — or sees `drain()` return —
+    /// never reads stats that lag the result it just observed.
+    fn fulfill_then(&self, res: Result<JobReport>, after_install: impl FnOnce()) -> bool {
+        let mut slot = self.result.lock().unwrap();
+        if slot.is_some() {
+            return false;
+        }
+        *slot = Some(res);
+        after_install();
+        drop(slot);
+        self.done.notify_all();
+        true
+    }
+}
+
 /// Typed future for a submitted job. `wait` blocks until the job
 /// completes and surfaces solver errors as `Err`.
 pub struct JobHandle {
@@ -285,7 +377,7 @@ impl Default for SchedConfig {
 }
 
 /// Scheduler telemetry.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, Default)]
 pub struct SchedStats {
     pub submitted: u64,
     pub completed: u64,
@@ -324,6 +416,9 @@ struct DirectJob {
     seed: u64,
     id: u64,
     submitted_at: Instant,
+    /// Verified client key, when provided: the shepherd then skips the
+    /// O(nnz) digest and goes straight to the keyed cache lookup.
+    key: Option<MatrixKey>,
 }
 
 struct SchedInner {
@@ -339,6 +434,38 @@ struct SchedInner {
     jobs: Mutex<HashMap<u64, Arc<JobState>>>,
     next_id: AtomicU64,
     counters: Mutex<Counters>,
+}
+
+/// The uniform front door of a solve service. The single-node
+/// [`JobScheduler`] and the sharded [`ShardedScheduler`] both implement
+/// it, so the request loops ([`request::serve_oneshot`] /
+/// [`request::serve_follow`]), the benches and the CLI drive either
+/// interchangeably.
+pub trait SolveService {
+    /// Submit a job for asynchronous execution.
+    fn submit(&self, spec: JobSpec) -> Result<JobHandle>;
+    /// Block until every submitted job has completed.
+    fn drain(&self);
+    /// Aggregate telemetry (summed across nodes for sharded services).
+    fn stats(&self) -> SchedStats;
+    /// Stop the service; running jobs finish, jobs that never ran are
+    /// failed with a cancellation error. Returns how many were failed.
+    fn shutdown(&self) -> usize;
+}
+
+impl SolveService for JobScheduler {
+    fn submit(&self, spec: JobSpec) -> Result<JobHandle> {
+        JobScheduler::submit(self, spec)
+    }
+    fn drain(&self) {
+        JobScheduler::drain(self)
+    }
+    fn stats(&self) -> SchedStats {
+        JobScheduler::stats(self)
+    }
+    fn shutdown(&self) -> usize {
+        JobScheduler::shutdown(self)
+    }
 }
 
 /// The solve service: submit [`JobSpec`]s, get [`JobHandle`]s.
@@ -427,22 +554,18 @@ impl JobScheduler {
     }
 
     fn complete(&self, state: &JobState, res: Result<JobReport>) {
-        self.inner.jobs.lock().unwrap().remove(&state.id);
-        let mut slot = state.result.lock().unwrap();
-        if slot.is_some() {
-            return; // already completed (shutdown race insurance)
-        }
-        {
+        let ok = res.is_ok();
+        // counters are updated under the result lock, before the
+        // waiters wake: wait()-then-stats() never undercounts
+        state.fulfill_then(res, || {
             let mut c = self.inner.counters.lock().unwrap();
-            if res.is_ok() {
+            if ok {
                 c.completed += 1;
             } else {
                 c.failed += 1;
             }
-        }
-        *slot = Some(res);
-        drop(slot);
-        state.done.notify_all();
+        });
+        self.inner.jobs.lock().unwrap().remove(&state.id);
     }
 
     fn resolve_matrix(&self, src: &MatrixSource) -> Result<Arc<Crs<f64>>> {
@@ -483,12 +606,14 @@ impl JobScheduler {
                 a.nrows()
             );
         }
+        // a client-provided key is verified (cheaply, by structure)
+        // here so a bad key is a submit-time error, not a wrong answer
+        let client_key = match spec.matrix_key {
+            Some(k) => Some(verify_client_key(k, &a)?),
+            None => None,
+        };
         let id = self.inner.next_id.fetch_add(1, Ordering::SeqCst) + 1;
-        let state = Arc::new(JobState {
-            id,
-            result: Mutex::new(None),
-            done: Condvar::new(),
-        });
+        let state = JobState::new(id);
         {
             let mut c = self.inner.counters.lock().unwrap();
             c.submitted += 1;
@@ -523,7 +648,7 @@ impl JobScheduler {
                 // spending its slot on earlier normal traffic.
                 let n = a.nrows();
                 let b = rhs.unwrap_or_else(|| default_rhs(n, seed));
-                let fp = matrix_key(&a);
+                let fp = client_key.unwrap_or_else(|| matrix_key(&a));
                 let pending = PendingCg {
                     state: state.clone(),
                     b,
@@ -553,6 +678,7 @@ impl JobScheduler {
                     seed,
                     id,
                     submitted_at,
+                    key: client_key,
                 };
                 self.queue.enqueue(topts, move |ctx| {
                     let res = sched.run_direct(&a, job, ctx.nthreads());
@@ -683,9 +809,13 @@ impl JobScheduler {
             seed,
             id,
             submitted_at,
+            key,
         } = job;
         let n = a.nrows();
-        let (op, cache_hit) = self.cache.get_or_assemble(a, nthreads)?;
+        let (op, cache_hit) = match key {
+            Some(k) => self.cache.get_or_assemble_keyed(k, a, nthreads)?,
+            None => self.cache.get_or_assemble(a, nthreads)?,
+        };
         let mut op = op.lock().unwrap();
         // a cached operator adopts THIS job's PU reservation
         op.set_nthreads(nthreads);

@@ -29,8 +29,8 @@ use crate::core::{GhostError, Result};
 use crate::tune::json_field;
 
 use super::{
-    JobHandle, JobOutput, JobReport, JobScheduler, JobSpec, MatrixSource, Priority,
-    SchedStats, SolverKind,
+    JobHandle, JobOutput, JobReport, JobSpec, MatrixSource, Priority, SchedStats,
+    SolveService, SolverKind,
 };
 
 /// A parsed request line: the client's correlation id (if any) plus the
@@ -192,7 +192,7 @@ struct Inflight {
 }
 
 fn submit_line(
-    sched: &JobScheduler,
+    sched: &dyn SolveService,
     line: &str,
     lineno: usize,
     out: &mut dyn Write,
@@ -231,9 +231,10 @@ fn submit_line(
 
 /// Process every request in `path` once: submit all (so batching and
 /// caching can bite across them), wait for all, write one response line
-/// per request, and return the throughput summary.
+/// per request, and return the throughput summary. Drives any
+/// [`SolveService`] — the single-node scheduler or the sharded one.
 pub fn serve_oneshot(
-    sched: &JobScheduler,
+    sched: &dyn SolveService,
     path: &Path,
     out: &mut dyn Write,
 ) -> Result<ServeSummary> {
@@ -313,7 +314,7 @@ fn read_fresh_lines(path: &Path, offset: &mut u64) -> Vec<String> {
 /// they arrive and responses stream to `out` as jobs finish. Runs until
 /// the process is stopped.
 pub fn serve_follow(
-    sched: &JobScheduler,
+    sched: &dyn SolveService,
     path: &Path,
     poll: Duration,
     out: &mut dyn Write,

@@ -1,0 +1,1250 @@
+//! Sharded solve service: one [`JobScheduler`] per simulated-MPI rank,
+//! with a routing front-end.
+//!
+//! GHOST is "MPI+X" — resource arbitration and the task queue only see
+//! production-shaped load when requests flow *across* nodes, not just
+//! across shepherds inside one process. This module scales the PR-3
+//! solve service out over the simulated fabric ([`crate::comm`]): a
+//! front-end rank accepts [`JobSpec`]s, routes each to one of N node
+//! ranks, and every node runs its own scheduler (own task queue, own
+//! operator cache) driven by request/result envelopes
+//! ([`crate::comm::envelope`]) — the affinity-aware job routing that
+//! task-based hybrid sparse solvers converge on (Lacoste et al.,
+//! arXiv:1405.2636).
+//!
+//! Routing policies ([`RoutePolicy`]):
+//!
+//! - **Affinity** (default): jobs are routed by *matrix fingerprint* —
+//!   the same matrix always lands on the same node, so its assembled,
+//!   autotuned operator stays warm in that node's cache and repeated
+//!   requests hit instead of re-assembling per node. A key's first
+//!   sighting uses hash-based fallback placement, diverted to the
+//!   least-loaded node when the hash home is already backed up (the
+//!   divert becomes the sticky home). When the home node's queue depth
+//!   exceeds [`ShardConfig::steal_threshold`] and another node is
+//!   markedly lighter, the job is handed off to the least-loaded node
+//!   (work stealing — the handoff is one-off, the affinity table keeps
+//!   pointing at the home node).
+//! - **Hash**: stateless `key % nodes` placement.
+//! - **Load**: always the node with the fewest outstanding jobs.
+//!
+//! The router keeps per-node load accounts ([`NodeStats`]):
+//! outstanding-job and resident-bytes watermarks, routed/handoff
+//! counts, and the latest node-scheduler telemetry carried piggyback on
+//! result envelopes.
+//!
+//! Determinism: results are *bitwise identical* to a single-node serve.
+//! Batching already demultiplexes bitwise (see [`super::batch`]), every
+//! solver is deterministic in its seed, and all nodes share the
+//! process-wide autotuner decision cache, so where a job runs — and
+//! with whom it was coalesced — is unobservable in its numbers.
+//!
+//! Job identity on the hot path: the router never builds a named matrix
+//! and, when the client attached a [`MatrixKey`] to the spec (see
+//! [`JobSpec::matrix_key`]), never digests a caller-assembled one —
+//! only the O(nrows) structural fingerprint check runs per submit.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::time::{Duration, Instant};
+
+use crate::comm::envelope::{ByteReader, ByteWriter, Envelope};
+use crate::comm::{Comm, CommConfig, World};
+use crate::core::{GhostError, Result};
+use crate::sparsemat::Crs;
+use crate::topology::Machine;
+use crate::tune::Fingerprint;
+
+use super::cache::{matrix_key, CacheStats, MatrixKey};
+use super::{
+    is_known_matrix, verify_client_key, JobHandle, JobOutput, JobReport, JobScheduler,
+    JobSpec, JobState, MatrixSource, Priority, SchedConfig, SchedStats, SolveService,
+    SolverKind,
+};
+
+/// How the front-end picks a node for each job.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum RoutePolicy {
+    /// Matrix-fingerprint affinity (same matrix → same node → warm
+    /// operator cache) with work-stealing handoff under overload.
+    Affinity,
+    /// Stateless `key % nodes`.
+    Hash,
+    /// Least outstanding jobs.
+    Load,
+}
+
+impl RoutePolicy {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "affinity" => RoutePolicy::Affinity,
+            "hash" => RoutePolicy::Hash,
+            "load" => RoutePolicy::Load,
+            other => {
+                return Err(GhostError::InvalidArg(format!(
+                    "unknown routing policy '{other}' (affinity|hash|load)"
+                )))
+            }
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RoutePolicy::Affinity => "affinity",
+            RoutePolicy::Hash => "hash",
+            RoutePolicy::Load => "load",
+        }
+    }
+}
+
+/// Sharded-service configuration.
+#[derive(Clone, Debug)]
+pub struct ShardConfig {
+    /// Simulated nodes (each gets its own scheduler + operator cache).
+    pub nodes: usize,
+    pub policy: RoutePolicy,
+    /// Affinity only: home-node queue depth at which a job is handed
+    /// off to the least-loaded node (when that node trails by >= 2).
+    pub steal_threshold: usize,
+    /// PUs of each simulated node's machine.
+    pub pus_per_node: usize,
+    /// Per-node scheduler configuration (shepherds, cache budget,
+    /// batching).
+    pub sched: SchedConfig,
+    /// Fabric model the envelopes travel through.
+    pub comm: CommConfig,
+}
+
+impl Default for ShardConfig {
+    fn default() -> Self {
+        ShardConfig {
+            nodes: 2,
+            policy: RoutePolicy::Affinity,
+            steal_threshold: 4,
+            pus_per_node: 2,
+            sched: SchedConfig::default(),
+            comm: CommConfig::default(),
+        }
+    }
+}
+
+/// Per-node load account kept by the router.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NodeStats {
+    /// Jobs routed to this node.
+    pub routed: u64,
+    /// Jobs that landed here via work-stealing handoff (their affinity
+    /// home was overloaded).
+    pub handoffs: u64,
+    /// Jobs routed but not yet completed.
+    pub outstanding: usize,
+    /// Outstanding-job watermark.
+    pub peak_outstanding: usize,
+    /// Last reported operator-cache residency of the node.
+    pub resident_bytes: usize,
+    /// Resident-bytes watermark.
+    pub peak_resident_bytes: usize,
+    /// Node-scheduler telemetry, merged from result envelopes
+    /// (monotone counters keep their maximum seen — envelopes from
+    /// concurrent node waiters may arrive out of order).
+    pub sched: SchedStats,
+}
+
+/// Front-end telemetry: global counters plus the per-node accounts.
+#[derive(Clone, Debug)]
+pub struct ShardStats {
+    pub submitted: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub per_node: Vec<NodeStats>,
+}
+
+// ---------------------------------------------------------------------------
+// fabric protocol
+// ---------------------------------------------------------------------------
+
+/// Front-end → node requests.
+const TAG_REQ: u64 = 0x5AED_0001;
+/// Node → front-end results.
+const TAG_RES: u64 = 0x5AED_0002;
+
+const K_SUBMIT: u8 = 1;
+const K_SHUTDOWN: u8 = 2;
+const K_RESULT: u8 = 3;
+const K_ACK: u8 = 4;
+
+fn put_fingerprint(w: &mut ByteWriter, fp: &Fingerprint) {
+    w.put_str(fp.dtype);
+    w.put_usize(fp.nrows);
+    w.put_usize(fp.ncols);
+    w.put_usize(fp.nnz);
+    w.put_u64(fp.row_var_q);
+    w.put_usize(fp.max_row_len);
+    w.put_usize(fp.nvecs);
+}
+
+fn get_fingerprint(r: &mut ByteReader) -> Result<Fingerprint> {
+    let dtype: &'static str = match r.get_str()?.as_str() {
+        "f32" => "f32",
+        "f64" => "f64",
+        "c32" => "c32",
+        "c64" => "c64",
+        other => {
+            return Err(GhostError::Parse(format!(
+                "unknown dtype '{other}' in fingerprint envelope"
+            )))
+        }
+    };
+    Ok(Fingerprint {
+        dtype,
+        nrows: r.get_usize()?,
+        ncols: r.get_usize()?,
+        nnz: r.get_usize()?,
+        row_var_q: r.get_u64()?,
+        max_row_len: r.get_usize()?,
+        nvecs: r.get_usize()?,
+    })
+}
+
+fn put_spec(w: &mut ByteWriter, spec: &JobSpec) {
+    match &spec.matrix {
+        MatrixSource::Named { name, n } => {
+            w.put_u8(0);
+            w.put_str(name);
+            w.put_usize(*n);
+        }
+        MatrixSource::Mat(a) => {
+            w.put_u8(1);
+            w.put_usize(a.nrows());
+            w.put_usize(a.ncols());
+            w.put_usize_slice(a.rowptr());
+            w.put_i32_slice(a.colidx());
+            w.put_f64_slice(a.values());
+        }
+    }
+    match &spec.solver {
+        SolverKind::Cg { tol, max_iters } => {
+            w.put_u8(0);
+            w.put_f64(*tol);
+            w.put_usize(*max_iters);
+        }
+        SolverKind::BlockCg {
+            nrhs,
+            tol,
+            max_iters,
+        } => {
+            w.put_u8(1);
+            w.put_usize(*nrhs);
+            w.put_f64(*tol);
+            w.put_usize(*max_iters);
+        }
+        SolverKind::Lanczos { steps } => {
+            w.put_u8(2);
+            w.put_usize(*steps);
+        }
+        SolverKind::Kpm { moments, vectors } => {
+            w.put_u8(3);
+            w.put_usize(*moments);
+            w.put_usize(*vectors);
+        }
+        SolverKind::ChebFilter { degree, block } => {
+            w.put_u8(4);
+            w.put_usize(*degree);
+            w.put_usize(*block);
+        }
+    }
+    w.put_u8(match spec.priority {
+        Priority::Normal => 0,
+        Priority::High => 1,
+    });
+    w.put_usize(spec.nthreads);
+    w.put_opt_u64(spec.numanode.map(|n| n as u64));
+    w.put_u64(spec.seed);
+    match &spec.rhs {
+        Some(b) => {
+            w.put_bool(true);
+            w.put_f64_slice(b);
+        }
+        None => w.put_bool(false),
+    }
+    match &spec.matrix_key {
+        Some(k) => {
+            w.put_bool(true);
+            put_fingerprint(w, &k.fp);
+            w.put_u64(k.content);
+        }
+        None => w.put_bool(false),
+    }
+}
+
+fn get_spec(r: &mut ByteReader) -> Result<JobSpec> {
+    let matrix = match r.get_u8()? {
+        0 => MatrixSource::Named {
+            name: r.get_str()?,
+            n: r.get_usize()?,
+        },
+        1 => {
+            let nrows = r.get_usize()?;
+            let ncols = r.get_usize()?;
+            let rowptr = r.get_usize_vec()?;
+            let col = r.get_i32_vec()?;
+            let val = r.get_f64_vec()?;
+            MatrixSource::Mat(Arc::new(Crs::new(nrows, ncols, rowptr, col, val)?))
+        }
+        k => {
+            return Err(GhostError::Parse(format!(
+                "unknown matrix-source kind {k} in envelope"
+            )))
+        }
+    };
+    let solver = match r.get_u8()? {
+        0 => SolverKind::Cg {
+            tol: r.get_f64()?,
+            max_iters: r.get_usize()?,
+        },
+        1 => SolverKind::BlockCg {
+            nrhs: r.get_usize()?,
+            tol: r.get_f64()?,
+            max_iters: r.get_usize()?,
+        },
+        2 => SolverKind::Lanczos {
+            steps: r.get_usize()?,
+        },
+        3 => SolverKind::Kpm {
+            moments: r.get_usize()?,
+            vectors: r.get_usize()?,
+        },
+        4 => SolverKind::ChebFilter {
+            degree: r.get_usize()?,
+            block: r.get_usize()?,
+        },
+        k => {
+            return Err(GhostError::Parse(format!(
+                "unknown solver kind {k} in envelope"
+            )))
+        }
+    };
+    let priority = if r.get_u8()? == 1 {
+        Priority::High
+    } else {
+        Priority::Normal
+    };
+    let nthreads = r.get_usize()?;
+    let numanode = r.get_opt_u64()?.map(|n| n as usize);
+    let seed = r.get_u64()?;
+    let rhs = if r.get_bool()? {
+        Some(r.get_f64_vec()?)
+    } else {
+        None
+    };
+    let matrix_key = if r.get_bool()? {
+        Some(MatrixKey {
+            fp: get_fingerprint(r)?,
+            content: r.get_u64()?,
+        })
+    } else {
+        None
+    };
+    Ok(JobSpec {
+        matrix,
+        solver,
+        priority,
+        nthreads,
+        numanode,
+        seed,
+        rhs,
+        matrix_key,
+    })
+}
+
+fn put_sched_stats(w: &mut ByteWriter, s: &SchedStats) {
+    w.put_u64(s.submitted);
+    w.put_u64(s.completed);
+    w.put_u64(s.failed);
+    w.put_u64(s.batches);
+    w.put_u64(s.batched_jobs);
+    w.put_usize(s.max_batch_width);
+    w.put_u64(s.cache.hits);
+    w.put_u64(s.cache.misses);
+    w.put_u64(s.cache.evictions);
+    w.put_usize(s.cache.resident_bytes);
+    w.put_usize(s.cache.entries);
+}
+
+fn get_sched_stats(r: &mut ByteReader) -> Result<SchedStats> {
+    // field order mirrors put_sched_stats exactly (struct-literal field
+    // initializers evaluate in source order)
+    Ok(SchedStats {
+        submitted: r.get_u64()?,
+        completed: r.get_u64()?,
+        failed: r.get_u64()?,
+        batches: r.get_u64()?,
+        batched_jobs: r.get_u64()?,
+        max_batch_width: r.get_usize()?,
+        cache: CacheStats {
+            hits: r.get_u64()?,
+            misses: r.get_u64()?,
+            evictions: r.get_u64()?,
+            resident_bytes: r.get_usize()?,
+            entries: r.get_usize()?,
+        },
+    })
+}
+
+fn put_output(w: &mut ByteWriter, out: &JobOutput) {
+    match out {
+        JobOutput::Solve {
+            x,
+            iterations,
+            final_residual,
+            converged,
+        } => {
+            w.put_u8(0);
+            w.put_usize(x.len());
+            for col in x {
+                w.put_f64_slice(col);
+            }
+            w.put_usize(*iterations);
+            w.put_f64(*final_residual);
+            w.put_bool(*converged);
+        }
+        JobOutput::Eigenvalues { values, iterations } => {
+            w.put_u8(1);
+            w.put_f64_slice(values);
+            w.put_usize(*iterations);
+        }
+        JobOutput::Moments { mu } => {
+            w.put_u8(2);
+            w.put_f64_slice(mu);
+        }
+        JobOutput::Filtered {
+            eigenvalues,
+            filter_applications,
+        } => {
+            w.put_u8(3);
+            w.put_f64_slice(eigenvalues);
+            w.put_usize(*filter_applications);
+        }
+    }
+}
+
+fn get_output(r: &mut ByteReader) -> Result<JobOutput> {
+    Ok(match r.get_u8()? {
+        0 => {
+            let ncols = r.get_usize()?;
+            let mut x = Vec::with_capacity(ncols.min(1024));
+            for _ in 0..ncols {
+                x.push(r.get_f64_vec()?);
+            }
+            JobOutput::Solve {
+                x,
+                iterations: r.get_usize()?,
+                final_residual: r.get_f64()?,
+                converged: r.get_bool()?,
+            }
+        }
+        1 => JobOutput::Eigenvalues {
+            values: r.get_f64_vec()?,
+            iterations: r.get_usize()?,
+        },
+        2 => JobOutput::Moments {
+            mu: r.get_f64_vec()?,
+        },
+        3 => JobOutput::Filtered {
+            eigenvalues: r.get_f64_vec()?,
+            filter_applications: r.get_usize()?,
+        },
+        k => {
+            return Err(GhostError::Parse(format!(
+                "unknown job-output kind {k} in envelope"
+            )))
+        }
+    })
+}
+
+fn encode_submit(job_id: u64, spec: &JobSpec) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    w.put_u64(job_id);
+    put_spec(&mut w, spec);
+    Envelope::new(K_SUBMIT, w.into_bytes()).encode()
+}
+
+fn encode_shutdown() -> Vec<u8> {
+    Envelope::new(K_SHUTDOWN, Vec::new()).encode()
+}
+
+/// One completed (or failed) job plus a piggybacked node-stats
+/// snapshot. `job_id` is the *front-end* id — the node-local scheduler
+/// id is an implementation detail that never crosses the fabric.
+fn encode_result(job_id: u64, res: &Result<JobReport>, stats: &SchedStats) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    w.put_u64(job_id);
+    match res {
+        Ok(rep) => {
+            w.put_bool(true);
+            put_output(&mut w, &rep.output);
+            w.put_usize(rep.nnz);
+            w.put_usize(rep.matvecs);
+            w.put_usize(rep.batched_width);
+            w.put_bool(rep.cache_hit);
+            w.put_f64(rep.elapsed.as_secs_f64());
+        }
+        Err(e) => {
+            w.put_bool(false);
+            w.put_str(&e.to_string());
+        }
+    }
+    put_sched_stats(&mut w, stats);
+    Envelope::new(K_RESULT, w.into_bytes()).encode()
+}
+
+fn decode_result(payload: &[u8]) -> Result<(u64, Result<JobReport>, SchedStats)> {
+    let mut r = ByteReader::new(payload);
+    let job_id = r.get_u64()?;
+    let res = if r.get_bool()? {
+        let output = get_output(&mut r)?;
+        let nnz = r.get_usize()?;
+        let matvecs = r.get_usize()?;
+        let batched_width = r.get_usize()?;
+        let cache_hit = r.get_bool()?;
+        let elapsed = Duration::from_secs_f64(r.get_f64()?.max(0.0));
+        Ok(JobReport {
+            id: job_id,
+            output,
+            nnz,
+            matvecs,
+            batched_width,
+            cache_hit,
+            elapsed,
+            completed_at: Instant::now(),
+        })
+    } else {
+        Err(GhostError::Task(r.get_str()?))
+    };
+    let stats = get_sched_stats(&mut r)?;
+    r.finish()?;
+    Ok((job_id, res, stats))
+}
+
+fn encode_ack(cancelled: usize, stats: &SchedStats) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    w.put_usize(cancelled);
+    put_sched_stats(&mut w, stats);
+    Envelope::new(K_ACK, w.into_bytes()).encode()
+}
+
+fn decode_ack(payload: &[u8]) -> Result<(usize, SchedStats)> {
+    let mut r = ByteReader::new(payload);
+    let cancelled = r.get_usize()?;
+    let stats = get_sched_stats(&mut r)?;
+    r.finish()?;
+    Ok((cancelled, stats))
+}
+
+// ---------------------------------------------------------------------------
+// routing front-end
+// ---------------------------------------------------------------------------
+
+fn fnv(parts: &[u64]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &v in parts {
+        h ^= v;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+fn key_hash(k: &MatrixKey) -> u64 {
+    fnv(&[
+        k.content,
+        k.fp.nrows as u64,
+        k.fp.ncols as u64,
+        k.fp.nnz as u64,
+        k.fp.row_var_q,
+        k.fp.max_row_len as u64,
+    ])
+}
+
+fn named_hash(name: &str, n: usize) -> u64 {
+    let mut parts: Vec<u64> = name.bytes().map(|b| b as u64 + 1).collect();
+    parts.push(u64::MAX);
+    parts.push(n as u64);
+    fnv(&parts)
+}
+
+#[derive(Default)]
+struct FrontCounters {
+    submitted: u64,
+    completed: u64,
+    failed: u64,
+}
+
+struct Front {
+    nodes: usize,
+    policy: RoutePolicy,
+    steal_threshold: usize,
+    next_id: AtomicU64,
+    /// Jobs routed but not yet answered; paired with `idle` for drain.
+    jobs: Mutex<HashMap<u64, Arc<JobState>>>,
+    idle: Condvar,
+    /// Affinity table: route key → home node (bounded; see `route`).
+    table: Mutex<HashMap<u64, usize>>,
+    loads: Mutex<Vec<NodeStats>>,
+    counters: Mutex<FrontCounters>,
+    /// Sum of node-reported shutdown cancellations.
+    ack_cancelled: AtomicU64,
+}
+
+impl Front {
+    /// Pick a node for `rkey` and charge the load account. Returns
+    /// (node, was-a-handoff).
+    fn route(&self, rkey: u64) -> (usize, bool) {
+        let mut loads = self.loads.lock().unwrap();
+        let argmin = |loads: &[NodeStats]| -> usize {
+            loads
+                .iter()
+                .enumerate()
+                .min_by_key(|&(_, l)| l.outstanding)
+                .map(|(i, _)| i)
+                .unwrap_or(0)
+        };
+        let (node, handoff) = match self.policy {
+            RoutePolicy::Hash => ((rkey % self.nodes as u64) as usize, false),
+            RoutePolicy::Load => (argmin(&loads), false),
+            RoutePolicy::Affinity => {
+                let mut table = self.table.lock().unwrap();
+                // bound the table for long-lived services: dropping it
+                // only costs re-placing keys on their next sighting
+                if table.len() >= 4096 && !table.contains_key(&rkey) {
+                    table.clear();
+                }
+                let alt = argmin(&loads);
+                let overloaded = |home: usize| {
+                    loads[home].outstanding >= self.steal_threshold.max(1)
+                        && loads[alt].outstanding + 2 <= loads[home].outstanding
+                };
+                match table.get(&rkey).copied() {
+                    // sticky: the warm cache lives on the home node
+                    Some(home) if !overloaded(home) => (home, false),
+                    // work-stealing handoff: one-off — the table keeps
+                    // the home node so the warm cache stays the target
+                    // once the backlog clears
+                    Some(_) => (alt, true),
+                    // first sighting: hash-based fallback placement,
+                    // diverted to the least-loaded node when the hash
+                    // home is already backed up — and the divert
+                    // becomes the sticky home (this is what makes the
+                    // table more than `key % nodes`)
+                    None => {
+                        let hash_home = (rkey % self.nodes as u64) as usize;
+                        let home = if overloaded(hash_home) { alt } else { hash_home };
+                        table.insert(rkey, home);
+                        (home, false)
+                    }
+                }
+            }
+        };
+        let l = &mut loads[node];
+        l.routed += 1;
+        if handoff {
+            l.handoffs += 1;
+        }
+        l.outstanding += 1;
+        l.peak_outstanding = l.peak_outstanding.max(l.outstanding);
+        (node, handoff)
+    }
+
+    /// Merge a node-stats snapshot (monotone counters keep their max —
+    /// result envelopes from concurrent waiters can arrive out of
+    /// order; gauges take the latest value).
+    fn note_node_stats(&self, node: usize, s: SchedStats) {
+        let mut loads = self.loads.lock().unwrap();
+        let l = &mut loads[node];
+        let t = &mut l.sched;
+        t.submitted = t.submitted.max(s.submitted);
+        t.completed = t.completed.max(s.completed);
+        t.failed = t.failed.max(s.failed);
+        t.batches = t.batches.max(s.batches);
+        t.batched_jobs = t.batched_jobs.max(s.batched_jobs);
+        t.max_batch_width = t.max_batch_width.max(s.max_batch_width);
+        t.cache.hits = t.cache.hits.max(s.cache.hits);
+        t.cache.misses = t.cache.misses.max(s.cache.misses);
+        t.cache.evictions = t.cache.evictions.max(s.cache.evictions);
+        t.cache.resident_bytes = s.cache.resident_bytes;
+        t.cache.entries = s.cache.entries;
+        l.resident_bytes = s.cache.resident_bytes;
+        l.peak_resident_bytes = l.peak_resident_bytes.max(s.cache.resident_bytes);
+    }
+
+    /// Resolve one answered job: credit the node, fulfill the handle,
+    /// wake drain(). Ordering matters: counters are bumped under the
+    /// result lock (before the waiter can wake) and the job leaves the
+    /// map only afterwards (before drain() can observe it empty), so
+    /// neither wait()-then-stats() nor drain()-then-stats() undercounts.
+    fn complete(&self, node: usize, job_id: u64, res: Result<JobReport>) {
+        {
+            let mut loads = self.loads.lock().unwrap();
+            loads[node].outstanding = loads[node].outstanding.saturating_sub(1);
+        }
+        let state = self.jobs.lock().unwrap().get(&job_id).cloned();
+        let ok = res.is_ok();
+        if let Some(state) = state {
+            state.fulfill_then(res, || {
+                let mut c = self.counters.lock().unwrap();
+                if ok {
+                    c.completed += 1;
+                } else {
+                    c.failed += 1;
+                }
+            });
+        }
+        self.jobs.lock().unwrap().remove(&job_id);
+        self.idle.notify_all();
+    }
+}
+
+/// The sharded solve service. Dropping it shuts the fabric down.
+pub struct ShardedScheduler {
+    comm0: Comm,
+    front: Arc<Front>,
+    /// Write-locked by shutdown so no submit can slip an envelope into
+    /// the request FIFO after the shutdown envelope.
+    gate: RwLock<bool>,
+    threads: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl ShardedScheduler {
+    pub fn new(cfg: ShardConfig) -> Result<Self> {
+        crate::ensure!(cfg.nodes >= 1, InvalidArg, "sharding needs >= 1 node");
+        let world = World::new(cfg.nodes + 1, cfg.comm.clone());
+        let front = Arc::new(Front {
+            nodes: cfg.nodes,
+            policy: cfg.policy,
+            steal_threshold: cfg.steal_threshold,
+            next_id: AtomicU64::new(0),
+            jobs: Mutex::new(HashMap::new()),
+            idle: Condvar::new(),
+            table: Mutex::new(HashMap::new()),
+            loads: Mutex::new(vec![NodeStats::default(); cfg.nodes]),
+            counters: Mutex::new(FrontCounters::default()),
+            ack_cancelled: AtomicU64::new(0),
+        });
+        let mut threads = Vec::with_capacity(2 * cfg.nodes);
+        for i in 0..cfg.nodes {
+            let comm = world.rank(i + 1);
+            let scfg = cfg.sched.clone();
+            let pus = cfg.pus_per_node.max(1);
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("ghost-shard-node-{i}"))
+                    .spawn(move || node_service(comm, scfg, pus))
+                    .expect("spawn shard node"),
+            );
+            let comm = world.rank(0);
+            let f = front.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("ghost-shard-collect-{i}"))
+                    .spawn(move || collector(comm, f, i))
+                    .expect("spawn shard collector"),
+            );
+        }
+        Ok(ShardedScheduler {
+            comm0: world.rank(0),
+            front,
+            gate: RwLock::new(false),
+            threads: Mutex::new(threads),
+        })
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.front.nodes
+    }
+
+    /// Derive the routing key of a spec on the front-end — without
+    /// building named matrices, and without the O(nnz) digest when the
+    /// client attached a [`MatrixKey`]. Returns the key the node should
+    /// reuse (so caller-assembled matrices are digested at most once
+    /// per request stream, not once per hop).
+    fn route_key(&self, spec: &JobSpec) -> Result<(u64, Option<MatrixKey>)> {
+        match &spec.matrix {
+            MatrixSource::Named { name, n } => {
+                crate::ensure!(
+                    is_known_matrix(name),
+                    InvalidArg,
+                    "unknown matrix source '{name}'"
+                );
+                crate::ensure!(
+                    spec.matrix_key.is_none(),
+                    InvalidArg,
+                    "matrix_key only applies to caller-assembled matrices"
+                );
+                Ok((named_hash(name, *n), None))
+            }
+            MatrixSource::Mat(a) => {
+                let key = match spec.matrix_key {
+                    Some(k) => verify_client_key(k, a)?,
+                    None => matrix_key(a),
+                };
+                Ok((key_hash(&key), Some(key)))
+            }
+        }
+    }
+
+    /// Route a job to a node and ship it over the fabric.
+    pub fn submit(&self, mut spec: JobSpec) -> Result<JobHandle> {
+        let gate = self.gate.read().unwrap();
+        crate::ensure!(!*gate, Task, "sharded service is shut down");
+        let (rkey, key) = self.route_key(&spec)?;
+        // the node must not re-digest what the front already identified
+        spec.matrix_key = key;
+        let (node, _handoff) = self.front.route(rkey);
+        let id = self.front.next_id.fetch_add(1, Ordering::SeqCst) + 1;
+        let state = JobState::new(id);
+        self.front.jobs.lock().unwrap().insert(id, state.clone());
+        self.front.counters.lock().unwrap().submitted += 1;
+        if let Err(e) = self
+            .comm0
+            .send_bytes(node + 1, TAG_REQ, encode_submit(id, &spec))
+        {
+            self.front.complete(
+                node,
+                id,
+                Err(GhostError::Comm(format!("request envelope not sent: {e}"))),
+            );
+        }
+        drop(gate);
+        Ok(JobHandle { state })
+    }
+
+    /// Block until every routed job has been answered.
+    pub fn drain(&self) {
+        let mut jobs = self.front.jobs.lock().unwrap();
+        while !jobs.is_empty() {
+            jobs = self.front.idle.wait(jobs).unwrap();
+        }
+    }
+
+    /// Aggregate scheduler telemetry across all nodes. Submit/complete/
+    /// fail counts are the front-end's (authoritative); node-local
+    /// counters are summed from the latest piggybacked snapshots.
+    pub fn stats(&self) -> SchedStats {
+        let c = self.front.counters.lock().unwrap();
+        let loads = self.front.loads.lock().unwrap();
+        let mut s = SchedStats {
+            submitted: c.submitted,
+            completed: c.completed,
+            failed: c.failed,
+            ..SchedStats::default()
+        };
+        for l in loads.iter() {
+            s.batches += l.sched.batches;
+            s.batched_jobs += l.sched.batched_jobs;
+            s.max_batch_width = s.max_batch_width.max(l.sched.max_batch_width);
+            s.cache.hits += l.sched.cache.hits;
+            s.cache.misses += l.sched.cache.misses;
+            s.cache.evictions += l.sched.cache.evictions;
+            s.cache.resident_bytes += l.sched.cache.resident_bytes;
+            s.cache.entries += l.sched.cache.entries;
+        }
+        s
+    }
+
+    /// Router telemetry: per-node routed/handoff counts and
+    /// outstanding/resident watermarks.
+    pub fn shard_stats(&self) -> ShardStats {
+        let c = self.front.counters.lock().unwrap();
+        let loads = self.front.loads.lock().unwrap();
+        ShardStats {
+            submitted: c.submitted,
+            completed: c.completed,
+            failed: c.failed,
+            per_node: loads.clone(),
+        }
+    }
+
+    /// Stop every node scheduler: running jobs finish, parked jobs are
+    /// failed, their failure envelopes flow back, and the fabric
+    /// threads are joined. Returns the number of jobs failed by the
+    /// shutdown. Idempotent.
+    pub fn shutdown(&self) -> usize {
+        {
+            let mut gate = self.gate.write().unwrap();
+            if *gate {
+                return 0;
+            }
+            *gate = true;
+            // under the write gate no submit can enqueue after this:
+            // the shutdown envelope is the last message in each FIFO
+            for node in 0..self.front.nodes {
+                let _ = self.comm0.send_bytes(node + 1, TAG_REQ, encode_shutdown());
+            }
+        }
+        let threads: Vec<_> = std::mem::take(&mut *self.threads.lock().unwrap());
+        for t in threads {
+            let _ = t.join();
+        }
+        // failsafe: nothing can answer a job once the fabric is down
+        let stranded: Vec<Arc<JobState>> = self
+            .front
+            .jobs
+            .lock()
+            .unwrap()
+            .drain()
+            .map(|(_, s)| s)
+            .collect();
+        let mut failed_now = 0usize;
+        for state in stranded {
+            let err = Err(GhostError::Task(
+                "job cancelled by sharded-service shutdown".into(),
+            ));
+            if state.fulfill_then(err, || {
+                self.front.counters.lock().unwrap().failed += 1;
+            }) {
+                failed_now += 1;
+            }
+        }
+        self.front.idle.notify_all();
+        self.front.ack_cancelled.load(Ordering::SeqCst) as usize + failed_now
+    }
+}
+
+impl Drop for ShardedScheduler {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+impl SolveService for ShardedScheduler {
+    fn submit(&self, spec: JobSpec) -> Result<JobHandle> {
+        ShardedScheduler::submit(self, spec)
+    }
+    fn drain(&self) {
+        ShardedScheduler::drain(self)
+    }
+    fn stats(&self) -> SchedStats {
+        ShardedScheduler::stats(self)
+    }
+    fn shutdown(&self) -> usize {
+        ShardedScheduler::shutdown(self)
+    }
+}
+
+/// Front-end thread collecting result envelopes from one node.
+fn collector(comm: Comm, front: Arc<Front>, node: usize) {
+    loop {
+        let Ok(bytes) = comm.recv_bytes(node + 1, TAG_RES) else {
+            return;
+        };
+        let Ok(env) = Envelope::decode(&bytes) else {
+            continue; // malformed peer message: drop, never crash
+        };
+        match env.kind {
+            K_RESULT => match decode_result(&env.payload) {
+                Ok((job_id, res, stats)) => {
+                    front.note_node_stats(node, stats);
+                    front.complete(node, job_id, res);
+                }
+                Err(_) => continue,
+            },
+            K_ACK => {
+                if let Ok((cancelled, stats)) = decode_ack(&env.payload) {
+                    front.note_node_stats(node, stats);
+                    front
+                        .ack_cancelled
+                        .fetch_add(cancelled as u64, Ordering::SeqCst);
+                }
+                return;
+            }
+            _ => continue,
+        }
+    }
+}
+
+/// One simulated node: a local [`JobScheduler`] fed by request
+/// envelopes; every completed job is answered with a result envelope
+/// carrying the front-end job id and a node-stats snapshot.
+fn node_service(comm: Comm, cfg: SchedConfig, pus: usize) {
+    let sched = JobScheduler::new(Machine::small_node(pus), cfg);
+    let mut waiters: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    loop {
+        let Ok(bytes) = comm.recv_bytes(0, TAG_REQ) else {
+            break;
+        };
+        let Ok(env) = Envelope::decode(&bytes) else {
+            continue;
+        };
+        match env.kind {
+            K_SUBMIT => {
+                let mut r = ByteReader::new(&env.payload);
+                let Ok(job_id) = r.get_u64() else { continue };
+                let submitted = get_spec(&mut r)
+                    .and_then(|spec| r.finish().map(|_| spec))
+                    .and_then(|spec| sched.submit(spec));
+                match submitted {
+                    Ok(handle) => {
+                        let c = comm.clone();
+                        let s = sched.clone();
+                        let w = std::thread::Builder::new()
+                            .name("ghost-shard-waiter".into())
+                            .spawn(move || {
+                                let res = handle.wait();
+                                let env = encode_result(job_id, &res, &s.stats());
+                                let _ = c.send_bytes(0, TAG_RES, env);
+                            })
+                            .expect("spawn shard waiter");
+                        waiters.push(w);
+                    }
+                    Err(e) => {
+                        let _ = comm.send_bytes(
+                            0,
+                            TAG_RES,
+                            encode_result(job_id, &Err(e), &sched.stats()),
+                        );
+                    }
+                }
+                // reap finished waiters so a long-lived node does not
+                // accumulate join handles
+                let (done, live): (Vec<_>, Vec<_>) =
+                    waiters.drain(..).partition(|h| h.is_finished());
+                for h in done {
+                    let _ = h.join();
+                }
+                waiters = live;
+            }
+            K_SHUTDOWN => {
+                // cancel parked jobs; their waiters wake with the
+                // cancellation error and answer it over the fabric
+                // before the ack (same-tag FIFO keeps the order)
+                let cancelled = sched.shutdown();
+                for h in waiters.drain(..) {
+                    let _ = h.join();
+                }
+                let _ = comm.send_bytes(0, TAG_RES, encode_ack(cancelled, &sched.stats()));
+                break;
+            }
+            _ => continue,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matgen;
+
+    fn front(policy: RoutePolicy, nodes: usize, loads: Vec<usize>) -> Front {
+        Front {
+            nodes,
+            policy,
+            steal_threshold: 4,
+            next_id: AtomicU64::new(0),
+            jobs: Mutex::new(HashMap::new()),
+            idle: Condvar::new(),
+            table: Mutex::new(HashMap::new()),
+            loads: Mutex::new(
+                loads
+                    .into_iter()
+                    .map(|outstanding| NodeStats {
+                        outstanding,
+                        ..NodeStats::default()
+                    })
+                    .collect(),
+            ),
+            counters: Mutex::new(FrontCounters::default()),
+            ack_cancelled: AtomicU64::new(0),
+        }
+    }
+
+    #[test]
+    fn load_routing_picks_the_least_loaded_node() {
+        let f = front(RoutePolicy::Load, 4, vec![2, 0, 3, 1]);
+        let (node, handoff) = f.route(0xDEAD);
+        assert_eq!(node, 1);
+        assert!(!handoff);
+        // the account was charged
+        let loads = f.loads.lock().unwrap();
+        assert_eq!(loads[1].outstanding, 1);
+        assert_eq!(loads[1].routed, 1);
+        assert_eq!(loads[1].peak_outstanding, 1);
+    }
+
+    #[test]
+    fn load_routing_never_picks_a_busy_node_over_an_idle_one() {
+        let f = front(RoutePolicy::Load, 3, vec![2, 2, 0]);
+        for _ in 0..2 {
+            let (node, _) = f.route(7);
+            // node 2 starts idle: it must fill up to parity before any
+            // node with >= 2 queued jobs receives more work
+            assert_eq!(node, 2);
+        }
+        let loads = f.loads.lock().unwrap();
+        assert!(loads.iter().all(|l| l.outstanding == 2));
+    }
+
+    #[test]
+    fn affinity_routing_is_sticky_and_hands_off_under_overload() {
+        let f = front(RoutePolicy::Affinity, 2, vec![0, 0]);
+        let key = 42u64; // home = 42 % 2 = 0
+        let (n1, h1) = f.route(key);
+        let (n2, h2) = f.route(key);
+        assert_eq!((n1, h1), (0, false));
+        assert_eq!((n2, h2), (0, false), "same key must stay on its home node");
+        // pile up the home node past the steal threshold while node 1
+        // stays idle: the next job is handed off
+        {
+            let mut loads = f.loads.lock().unwrap();
+            loads[0].outstanding = 6;
+            loads[1].outstanding = 0;
+        }
+        let (n3, h3) = f.route(key);
+        assert_eq!((n3, h3), (1, true), "overloaded home must hand off");
+        // the affinity table still points home: once the backlog
+        // clears, the key returns to its warm cache
+        {
+            let mut loads = f.loads.lock().unwrap();
+            loads[0].outstanding = 0;
+        }
+        let (n4, h4) = f.route(key);
+        assert_eq!((n4, h4), (0, false));
+    }
+
+    #[test]
+    fn affinity_first_sighting_diverts_from_a_backed_up_hash_home_and_sticks() {
+        // hash home of key 4 on 2 nodes is node 0, which starts backed
+        // up while node 1 is idle: the first sighting must be placed on
+        // node 1 (a placement, not a handoff) ...
+        let f = front(RoutePolicy::Affinity, 2, vec![5, 0]);
+        let (n1, h1) = f.route(4);
+        assert_eq!((n1, h1), (1, false), "first sighting diverts to the idle node");
+        // ... and that placement is sticky even after the hash home
+        // frees up — the operator cache was warmed on node 1
+        {
+            let mut loads = f.loads.lock().unwrap();
+            loads[0].outstanding = 0;
+            loads[1].outstanding = 0;
+        }
+        let (n2, h2) = f.route(4);
+        assert_eq!((n2, h2), (1, false), "placement must stick to the warm cache");
+    }
+
+    #[test]
+    fn hash_routing_is_stateless_and_stable() {
+        let f = front(RoutePolicy::Hash, 3, vec![9, 9, 9]);
+        let a = f.route(10).0;
+        assert_eq!(a, f.route(10).0);
+        assert_eq!(a, (10 % 3) as usize);
+    }
+
+    #[test]
+    fn spec_and_result_envelopes_round_trip_bit_exact() {
+        let a = Arc::new(matgen::poisson7::<f64>(4, 4, 3));
+        let key = matrix_key(&a);
+        let mut spec = JobSpec::new(
+            MatrixSource::Mat(a.clone()),
+            SolverKind::Cg {
+                tol: 1e-9,
+                max_iters: 321,
+            },
+        )
+        .with_matrix_key(key);
+        spec.priority = Priority::High;
+        spec.nthreads = 3;
+        spec.numanode = Some(1);
+        spec.seed = 99;
+        spec.rhs = Some(vec![1.5; a.nrows()]);
+        let bytes = encode_submit(77, &spec);
+        let env = Envelope::decode(&bytes).unwrap();
+        assert_eq!(env.kind, K_SUBMIT);
+        let mut r = ByteReader::new(&env.payload);
+        assert_eq!(r.get_u64().unwrap(), 77);
+        let back = get_spec(&mut r).unwrap();
+        r.finish().unwrap();
+        assert_eq!(back.matrix_key, Some(key));
+        assert_eq!(back.priority, Priority::High);
+        assert_eq!(back.nthreads, 3);
+        assert_eq!(back.numanode, Some(1));
+        assert_eq!(back.seed, 99);
+        assert_eq!(back.rhs.as_deref(), Some(&vec![1.5; a.nrows()][..]));
+        match (&back.matrix, &back.solver) {
+            (MatrixSource::Mat(b), SolverKind::Cg { tol, max_iters }) => {
+                assert_eq!(b.rowptr(), a.rowptr());
+                assert_eq!(b.colidx(), a.colidx());
+                assert_eq!(b.values(), a.values());
+                assert_eq!(tol.to_bits(), 1e-9f64.to_bits());
+                assert_eq!(*max_iters, 321);
+            }
+            _ => panic!("wrong spec decoded"),
+        }
+        // result round trip, bit-exact solution columns
+        let rep = JobReport {
+            id: 5,
+            output: JobOutput::Solve {
+                x: vec![vec![1.0, -0.0, f64::MIN_POSITIVE]],
+                iterations: 12,
+                final_residual: 3.5e-11,
+                converged: true,
+            },
+            nnz: 1234,
+            matvecs: 13,
+            batched_width: 4,
+            cache_hit: true,
+            elapsed: Duration::from_millis(7),
+            completed_at: Instant::now(),
+        };
+        let stats = SchedStats {
+            submitted: 9,
+            ..SchedStats::default()
+        };
+        let bytes = encode_result(77, &Ok(rep), &stats);
+        let env = Envelope::decode(&bytes).unwrap();
+        let (job_id, res, st) = decode_result(&env.payload).unwrap();
+        assert_eq!(job_id, 77);
+        assert_eq!(st.submitted, 9);
+        let rep = res.unwrap();
+        assert_eq!(rep.id, 77, "front-end id wins on the wire");
+        match rep.output {
+            JobOutput::Solve { x, iterations, .. } => {
+                assert_eq!(x[0][1].to_bits(), (-0.0f64).to_bits());
+                assert_eq!(x[0][2], f64::MIN_POSITIVE);
+                assert_eq!(iterations, 12);
+            }
+            other => panic!("wrong output: {other:?}"),
+        }
+        // error results carry the message
+        let bytes = encode_result(3, &Err(GhostError::Task("boom".into())), &stats);
+        let env = Envelope::decode(&bytes).unwrap();
+        let (_, res, _) = decode_result(&env.payload).unwrap();
+        assert!(res.unwrap_err().to_string().contains("boom"));
+    }
+
+    #[test]
+    fn named_routes_are_validated_without_building_the_matrix() {
+        let s = ShardedScheduler::new(ShardConfig {
+            nodes: 2,
+            comm: CommConfig::instant(),
+            ..ShardConfig::default()
+        })
+        .unwrap();
+        let bad = JobSpec::new(
+            MatrixSource::Named {
+                name: "nosuch".into(),
+                n: 64,
+            },
+            SolverKind::Lanczos { steps: 3 },
+        );
+        assert!(s.submit(bad).is_err(), "unknown name must fail at submit");
+        assert_eq!(s.shutdown(), 0);
+        // idempotent + submit-after-shutdown rejected
+        assert_eq!(s.shutdown(), 0);
+        let late = JobSpec::new(
+            MatrixSource::Named {
+                name: "poisson7".into(),
+                n: 64,
+            },
+            SolverKind::Lanczos { steps: 3 },
+        );
+        assert!(s.submit(late).is_err());
+    }
+}

@@ -875,6 +875,85 @@ mod tests {
         q.shutdown();
     }
 
+    /// Stress the submit/cancel/shutdown/drain races: many submitter
+    /// threads racing a shutdown (with a drainer alongside) must leave
+    /// every handle resolved — Done or Cancelled, never stranded — with
+    /// no task both run and cancelled and no task run twice.
+    #[test]
+    fn stress_concurrent_submit_shutdown_drain_resolves_every_handle() {
+        const SUBMITTERS: usize = 4;
+        const PER_THREAD: usize = 30;
+        for round in 0..3 {
+            let q = TaskQueue::new(Machine::small_node(2), 2);
+            // one run-counter per task, indexed (submitter, i)
+            let runs: Vec<Vec<Arc<AtomicUsize>>> = (0..SUBMITTERS)
+                .map(|_| (0..PER_THREAD).map(|_| Arc::new(AtomicUsize::new(0))).collect())
+                .collect();
+            let handles: Arc<Mutex<Vec<(usize, usize, Task)>>> =
+                Arc::new(Mutex::new(Vec::new()));
+            std::thread::scope(|s| {
+                for t in 0..SUBMITTERS {
+                    let q = q.clone();
+                    let handles = handles.clone();
+                    let counters: Vec<_> = runs[t].clone();
+                    s.spawn(move || {
+                        for (i, c) in counters.into_iter().enumerate() {
+                            let task = q.enqueue(TaskOpts::default(), move |_| {
+                                c.fetch_add(1, Ordering::SeqCst);
+                                if i % 7 == 0 {
+                                    std::thread::sleep(Duration::from_micros(200));
+                                }
+                            });
+                            handles.lock().unwrap().push((t, i, task));
+                        }
+                    });
+                }
+                // a drainer racing the submitters and the shutdown must
+                // never wedge (drain returns immediately post-shutdown)
+                let qd = q.clone();
+                s.spawn(move || {
+                    for _ in 0..3 {
+                        qd.drain();
+                        std::thread::sleep(Duration::from_micros(300));
+                    }
+                });
+                // let some tasks run, then pull the rug mid-stream
+                std::thread::sleep(Duration::from_millis(2 + 3 * round));
+                q.shutdown();
+            });
+            // every submitted handle resolves without hanging, exactly
+            // one of Done/Cancelled, and ran iff Done — exactly once
+            let handles = Arc::try_unwrap(handles).ok().unwrap().into_inner().unwrap();
+            let (mut done, mut cancelled) = (0usize, 0usize);
+            for (t, i, task) in handles {
+                task.wait();
+                let ran = runs[t][i].load(Ordering::SeqCst);
+                assert!(ran <= 1, "task ({t},{i}) ran {ran} times");
+                match (task.is_done(), task.is_cancelled()) {
+                    (true, false) => {
+                        assert_eq!(ran, 1, "Done task ({t},{i}) never ran");
+                        done += 1;
+                    }
+                    (false, true) => {
+                        assert_eq!(ran, 0, "Cancelled task ({t},{i}) ran anyway");
+                        cancelled += 1;
+                    }
+                    other => panic!("task ({t},{i}) in impossible state {other:?}"),
+                }
+            }
+            assert_eq!(
+                done + cancelled,
+                SUBMITTERS * PER_THREAD,
+                "round {round}: stranded handles"
+            );
+            // post-shutdown: drain returns, late enqueues cancel cleanly
+            q.drain();
+            let late = q.enqueue(TaskOpts::default(), |_| {});
+            late.wait();
+            assert!(late.is_cancelled());
+        }
+    }
+
     #[test]
     fn prio_high_jumps_queue() {
         let q = TaskQueue::new(Machine::small_node(1), 1);

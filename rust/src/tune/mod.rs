@@ -1106,6 +1106,114 @@ mod tests {
         let _ = std::fs::remove_file(&path);
     }
 
+    /// A cache file cut off mid-line (crash during append, torn copy)
+    /// must never panic the loader: the torn line is skipped, complete
+    /// lines before it survive.
+    #[test]
+    fn loader_survives_a_file_truncated_mid_line() {
+        let path = std::env::temp_dir().join(format!(
+            "ghost_tune_cache_torn_{}.jsonl",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_file(&path);
+        let a = matgen::poisson7::<f64>(8, 8, 8);
+        let b = matgen::poisson7::<f64>(6, 6, 4);
+        let t1 = Autotuner::new(topology::emmy_cpu_socket(), quick_opts())
+            .with_cache_file(path.clone());
+        t1.tune(&a).unwrap();
+        t1.tune(&b).unwrap();
+        // truncate the file mid-way through the second line, leaving a
+        // torn suffix with no newline and a half-parsed number
+        let text = std::fs::read_to_string(&path).unwrap();
+        let second_start = text.find('\n').unwrap() + 1;
+        let cut = second_start + (text.len() - second_start) / 2;
+        std::fs::write(&path, &text.as_bytes()[..cut]).unwrap();
+        let t2 = Autotuner::new(topology::emmy_cpu_socket(), quick_opts())
+            .with_cache_file(path.clone());
+        assert_eq!(t2.cache_len(), 1, "only the complete line survives");
+        assert!(t2.tune(&a).unwrap().cache_hit, "complete entry must load");
+        assert!(!t2.tune(&b).unwrap().cache_hit, "torn entry must re-sweep");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    /// A file holding more decisions than the loader's cap is truncated
+    /// at load: memory and disk stay bounded, the newest entries win.
+    #[test]
+    fn cap_overflow_at_load_truncates_to_the_cap() {
+        let path = std::env::temp_dir().join(format!(
+            "ghost_tune_cache_loadcap_{}.jsonl",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_file(&path);
+        let mats = [
+            matgen::poisson7::<f64>(6, 6, 4),
+            matgen::poisson7::<f64>(7, 7, 4),
+            matgen::poisson7::<f64>(8, 8, 4),
+        ];
+        let writer = Autotuner::new(topology::emmy_cpu_socket(), quick_opts())
+            .with_cache_file(path.clone());
+        for m in &mats {
+            writer.tune(m).unwrap();
+        }
+        assert_eq!(writer.cache_len(), 3);
+        // a loader with a smaller cap truncates (oldest out) and
+        // rewrites the file so it cannot grow back past the cap
+        let small = Autotuner::new(topology::emmy_cpu_socket(), quick_opts())
+            .with_cache_file(path.clone())
+            .with_cache_cap(1);
+        assert_eq!(small.cache_len(), 1);
+        assert!(
+            small.tune(&mats[2]).unwrap().cache_hit,
+            "the newest decision must be the survivor"
+        );
+        let lines = std::fs::read_to_string(&path)
+            .unwrap()
+            .lines()
+            .filter(|l| !l.trim().is_empty())
+            .count();
+        assert!(lines <= 1, "file has {lines} lines after a cap-1 load");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    /// Two tuners (stand-ins for two processes) appending decisions to
+    /// the same cache file: the loader sees the union, never panics,
+    /// and every valid entry survives — the documented whole-line
+    /// append contract.
+    #[test]
+    fn concurrent_appenders_to_one_cache_file_merge_cleanly() {
+        let path = std::env::temp_dir().join(format!(
+            "ghost_tune_cache_shared_{}.jsonl",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_file(&path);
+        let a = matgen::poisson7::<f64>(8, 8, 8);
+        let b = matgen::poisson7::<f64>(6, 6, 4);
+        let p1 = Autotuner::new(topology::emmy_cpu_socket(), quick_opts())
+            .with_cache_file(path.clone());
+        let p2 = Autotuner::new(topology::emmy_cpu_socket(), quick_opts())
+            .with_cache_file(path.clone());
+        // p2 loads first (empty file), so its later decision for `a`
+        // appends a duplicate line for the fingerprint p1 also decided —
+        // the interleaving two real processes produce
+        p2.tune(&b).unwrap();
+        p1.tune(&a).unwrap();
+        assert!(p1.tune(&b).unwrap().cache_hit, "p1 adopts p2's append");
+        assert!(
+            !p2.tune(&a).unwrap().cache_hit,
+            "p2 loaded before p1 appended: it sweeps a independently"
+        );
+        let lines = std::fs::read_to_string(&path).unwrap().lines().count();
+        assert_eq!(lines, 3, "b, a(p1), a(p2) — duplicate fingerprint on disk");
+        // a third process sees the union — the duplicate resolves to the
+        // latest line — never panics, and re-sweeps nothing
+        let p3 = Autotuner::new(topology::emmy_cpu_socket(), quick_opts())
+            .with_cache_file(path.clone());
+        assert_eq!(p3.cache_len(), 2);
+        assert!(p3.tune(&a).unwrap().cache_hit);
+        assert!(p3.tune(&b).unwrap().cache_hit);
+        let _ = std::fs::remove_file(&path);
+    }
+
     #[test]
     fn global_tuner_is_shared_and_caches() {
         let a = matgen::anderson::<f64>(24, 1.0, 9);

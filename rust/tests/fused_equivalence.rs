@@ -236,6 +236,124 @@ fn check_operator_block<O: Operator<f64>>(op: &mut O, seed: u64) {
     }
 }
 
+/// Seeded randomized sweep: ~100 generator-driven sparse matrices with
+/// varying size, nnz/row, empty rows and duplicate-free *unsorted*
+/// column lists, each checked at a random (C, sigma, nvecs) — SELL-C-σ
+/// `apply`, `apply_block`, `apply_fused` and `apply_block_fused` must
+/// all agree with the CRS reference operator (trait-default unfused
+/// composition). Any failure reports the full case parameters, so a
+/// reproduction is one seed away.
+#[test]
+fn randomized_sell_c_sigma_equivalence_sweep() {
+    let mut rng = Rng::new(0x1507_8101);
+    let chunk_heights = [1usize, 2, 4, 8, 16, 32];
+    let close = |g: f64, w: f64| (g - w).abs() < 1e-9 * (1.0 + w.abs());
+    let mut cases = 0usize;
+    while cases < 100 {
+        let n = rng.range(2, 140);
+        let max_k = rng.range(1, 9.min(n) + 1);
+        // half the matrices carry empty rows (the padding path SELL
+        // must get right); columns are duplicate-free but deliberately
+        // NOT sorted — the kernels must not assume ordering
+        let empty_p = if rng.bool(0.5) { 0.15 } else { 0.0 };
+        let a = Crs::<f64>::from_row_fn(n, n, |_i, cols, vals| {
+            if rng.bool(empty_p) {
+                return;
+            }
+            let k = rng.range(1, max_k + 1);
+            let mut set = rng.sample_distinct(n, k);
+            rng.shuffle(&mut set);
+            for c in set {
+                cols.push(c as i32);
+                vals.push(rng.normal());
+            }
+        })
+        .unwrap();
+        if a.nnz() == 0 {
+            continue; // degenerate all-empty draw: redraw
+        }
+        cases += 1;
+        let c = chunk_heights[rng.below(chunk_heights.len())];
+        let sigma = match rng.below(4) {
+            0 => 1,
+            1 => c,
+            2 => 4 * c,
+            _ => 32 * c,
+        };
+        let nv = rng.range(1, 5);
+        let ctx = format!(
+            "case {cases}: n={n} nnz={} C={c} sigma={sigma} nv={nv}",
+            a.nnz()
+        );
+        let mut sell = LocalSellOp::new(&a, c, sigma, 1).unwrap();
+        let mut crs = LocalCrsOp::new(a.clone());
+
+        // --- apply
+        let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mut ys = vec![0.0; n];
+        let mut yc = vec![0.0; n];
+        sell.apply(&x, &mut ys);
+        crs.apply(&x, &mut yc);
+        for i in 0..n {
+            assert!(close(ys[i], yc[i]), "{ctx}: apply row {i}: {} vs {}", ys[i], yc[i]);
+        }
+
+        // --- apply_block at width nv
+        let xb = DenseMat::<f64>::random(n, nv, Layout::RowMajor, 1000 + cases as u64);
+        let mut yb = DenseMat::<f64>::zeros(n, nv, Layout::RowMajor);
+        let mut yr = DenseMat::<f64>::zeros(n, nv, Layout::RowMajor);
+        sell.apply_block(&xb, &mut yb).unwrap();
+        crs.apply_block(&xb, &mut yr).unwrap();
+        assert!(yb.max_abs_diff(&yr) < 1e-9, "{ctx}: apply_block");
+
+        // --- apply_fused, all augmentations + all dots
+        let opts = SpmvOpts {
+            flags: flags::VSHIFT
+                | flags::AXPBY
+                | flags::CHAIN_AXPBY
+                | flags::DOT_YY
+                | flags::DOT_XY
+                | flags::DOT_XX,
+            alpha: rng.range_f64(0.5, 1.5),
+            beta: rng.range_f64(-1.0, 1.0),
+            gamma: vec![rng.range_f64(-0.5, 0.5)],
+            delta: rng.range_f64(-1.0, 1.0),
+            eta: rng.range_f64(0.5, 1.5),
+        };
+        let y0: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let z0: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let (mut y_s, mut z_s) = (y0.clone(), z0.clone());
+        let (mut y_c, mut z_c) = (y0.clone(), z0.clone());
+        let ds = sell
+            .apply_fused(&x, &mut y_s, Some(&mut z_s), &opts)
+            .unwrap();
+        let dc = crs.apply_fused(&x, &mut y_c, Some(&mut z_c), &opts).unwrap();
+        for i in 0..n {
+            assert!(close(y_s[i], y_c[i]), "{ctx}: fused y row {i}");
+            assert!(close(z_s[i], z_c[i]), "{ctx}: fused z row {i}");
+        }
+        assert!(close(ds.yy[0], dc.yy[0]), "{ctx}: fused yy");
+        assert!(close(ds.xy[0], dc.xy[0]), "{ctx}: fused xy");
+        assert!(close(ds.xx[0], dc.xx[0]), "{ctx}: fused xx");
+
+        // --- apply_block_fused with per-column shifts + dots
+        let opts_b = SpmvOpts {
+            flags: flags::VSHIFT | flags::DOT_XY | flags::DOT_XX,
+            gamma: (0..nv).map(|_| rng.range_f64(-0.5, 0.5)).collect(),
+            ..Default::default()
+        };
+        let mut yfb = DenseMat::<f64>::zeros(n, nv, Layout::RowMajor);
+        let mut yfr = DenseMat::<f64>::zeros(n, nv, Layout::RowMajor);
+        let dbs = sell.apply_block_fused(&xb, &mut yfb, None, &opts_b).unwrap();
+        let dbc = crs.apply_block_fused(&xb, &mut yfr, None, &opts_b).unwrap();
+        assert!(yfb.max_abs_diff(&yfr) < 1e-9, "{ctx}: apply_block_fused");
+        for j in 0..nv {
+            assert!(close(dbs.xy[j], dbc.xy[j]), "{ctx}: block xy col {j}");
+            assert!(close(dbs.xx[j], dbc.xx[j]), "{ctx}: block xx col {j}");
+        }
+    }
+}
+
 #[test]
 fn operators_fused_match_unfused_local_and_tuned() {
     let a = matgen::poisson7::<f64>(6, 6, 3);
