@@ -23,7 +23,15 @@
 //! assemble-and-autotune misses run on four independent operator
 //! caches instead of serializing under one cache lock.
 //!
-//!     cargo run --release --example schedbench [-- <jobs>] [--quick]
+//! Part of the mixed stream carries `deadline_ms` targets, so the
+//! deadline-miss-rate column exercises the EDF lane end to end, and the
+//! sharded table reports how many parked buckets migrated.
+//!
+//! `--json <path>` writes the headline numbers (jobs/s, Gflop/s,
+//! batched-vs-serial speedup, deadline-miss rate, stolen buckets) as
+//! one machine-readable JSON object — the CI perf-trajectory artifact.
+//!
+//!     cargo run --release --example schedbench [-- <jobs>] [--quick] [--json <path>]
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -46,6 +54,26 @@ struct RunOutcome {
     batches: u64,
     widest: usize,
     cache_hits: u64,
+    stolen_buckets: u64,
+}
+
+/// (deadline jobs, misses) across a run's reports.
+fn deadline_counts(reports: &[JobReport]) -> (usize, usize) {
+    let jobs = reports.iter().filter(|r| r.deadline_missed.is_some()).count();
+    let missed = reports
+        .iter()
+        .filter(|r| r.deadline_missed == Some(true))
+        .count();
+    (jobs, missed)
+}
+
+fn miss_rate(reports: &[JobReport]) -> f64 {
+    let (jobs, missed) = deadline_counts(reports);
+    if jobs == 0 {
+        0.0
+    } else {
+        missed as f64 / jobs as f64
+    }
 }
 
 fn mixed_jobs(a: &Arc<Crs<f64>>, b: &Arc<Crs<f64>>, jobs: usize) -> Vec<JobSpec> {
@@ -88,6 +116,12 @@ fn mixed_jobs(a: &Arc<Crs<f64>>, b: &Arc<Crs<f64>>, jobs: usize) -> Vec<JobSpec>
             if i % 11 == 0 {
                 spec.priority = Priority::High;
             }
+            if i % 3 == 0 {
+                // a slice of the stream rides the EDF lane (generous
+                // targets: the miss-rate column should read 0 on any
+                // healthy machine, the lane itself is what's exercised)
+                spec.deadline_ms = Some(120_000);
+            }
             spec
         })
         .collect()
@@ -110,9 +144,10 @@ fn run_service(svc: &dyn SolveService, specs: &[JobSpec]) -> Result<RunOutcome> 
     Ok(RunOutcome {
         reports,
         elapsed,
-        batches: stats.batches,
+        batches: stats.batches + stats.block_batches,
         widest: stats.max_batch_width,
         cache_hits: stats.cache.hits,
+        stolen_buckets: stats.stolen_buckets,
     })
 }
 
@@ -193,6 +228,11 @@ fn gflops(reports: &[JobReport], secs: f64) -> f64 {
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let quick = args.iter().any(|a| a == "--quick");
+    let json_path: Option<String> = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
     let jobs: usize = args
         .iter()
         .find_map(|a| a.parse().ok())
@@ -273,6 +313,8 @@ fn main() -> Result<()> {
         "batches",
         "widest",
         "cache hits",
+        "miss %",
+        "stolen",
         "wall s",
     ]);
     for (name, o) in [
@@ -289,17 +331,31 @@ fn main() -> Result<()> {
             o.batches.to_string(),
             o.widest.to_string(),
             o.cache_hits.to_string(),
+            format!("{:.1}", 100.0 * miss_rate(&o.reports)),
+            o.stolen_buckets.to_string(),
             format!("{secs:.3}"),
         ]);
     }
     t.print();
     for (i, n) in shard_detail.per_node.iter().enumerate() {
         println!(
-            "node {i}: {} routed ({} handoffs), peak queue {}, {} cache hits",
-            n.routed, n.handoffs, n.peak_outstanding, n.sched.cache.hits
+            "node {i}: {} routed ({} handoffs), peak queue {}, {} cache hits, \
+             {} buckets yielded",
+            n.routed,
+            n.handoffs,
+            n.peak_outstanding,
+            n.sched.cache.hits,
+            n.sched.stolen_buckets
         );
     }
+    let (dl_jobs, dl_missed) = deadline_counts(&batched.reports);
+    println!(
+        "deadline lane: {dl_jobs} deadline jobs in the mixed stream, {dl_missed} missed"
+    );
+    let batched_speedup =
+        serial.elapsed.as_secs_f64() / batched.elapsed.as_secs_f64().max(1e-9);
     let speedup = single.elapsed.as_secs_f64() / sharded.elapsed.as_secs_f64().max(1e-9);
+    println!("batched/serial speedup on the mixed stream: {batched_speedup:.2}x");
     println!("sharded/single speedup on the distinct-matrix stream: {speedup:.2}x");
     if speedup < 1.0 {
         println!(
@@ -307,6 +363,25 @@ fn main() -> Result<()> {
              noisy machines; the distinct-matrix misses otherwise assemble \
              concurrently across the per-node operator caches"
         );
+    }
+    if let Some(path) = json_path {
+        // one flat JSON object: the CI perf-trajectory artifact
+        let secs = batched.elapsed.as_secs_f64().max(1e-9);
+        let line = format!(
+            "{{\"bench\":\"schedbench\",\"quick\":{quick},\"jobs\":{},\
+             \"jobs_per_sec\":{:.3},\"gflops\":{:.4},\
+             \"batched_vs_serial_speedup\":{batched_speedup:.3},\
+             \"sharded_vs_single_speedup\":{speedup:.3},\
+             \"deadline_jobs\":{dl_jobs},\"deadline_missed\":{dl_missed},\
+             \"deadline_miss_rate\":{:.4},\"stolen_buckets\":{}}}",
+            batched.reports.len(),
+            batched.reports.len() as f64 / secs,
+            gflops(&batched.reports, secs),
+            miss_rate(&batched.reports),
+            sharded.stolen_buckets,
+        );
+        std::fs::write(&path, format!("{line}\n"))?;
+        println!("wrote bench JSON to {path}");
     }
     Ok(())
 }

@@ -14,7 +14,11 @@
 //! matrix, and a second tune of the same matrix reuses the cached
 //! decision (demonstrated below before the engine runs).
 //!
-//!     cargo run --release --example spmvbench [-- <iters>]
+//! `--json <path>` writes the per-configuration model Gflop/s plus the
+//! autotuner's decision as one machine-readable JSON object — the CI
+//! perf-trajectory artifact.
+//!
+//!     cargo run --release --example spmvbench [-- <iters>] [--json <path>]
 
 use ghost::benchutil::Table;
 use ghost::comm::CommConfig;
@@ -27,9 +31,15 @@ use ghost::topology;
 use ghost::tune;
 
 fn main() -> Result<()> {
-    let iters: usize = std::env::args()
-        .nth(1)
-        .and_then(|s| s.parse().ok())
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let json_path: Option<String> = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+    let iters: usize = args
+        .iter()
+        .find_map(|s| s.parse().ok())
         .unwrap_or(5);
     let artifact_dir = std::env::var("GHOST_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
     let have_artifacts = std::path::Path::new(&artifact_dir)
@@ -117,6 +127,7 @@ fn main() -> Result<()> {
     // the real single-core kernel time; the reported model Gflop/s then
     // lands on each device's roofline (see perfmodel)
     let scale = 2e-4;
+    let mut json_rows: Vec<(String, f64)> = Vec::new();
 
     let mut run = |name: &str, setups: Vec<RankSetup>, weights: Option<Vec<f64>>| {
         let engine = match HeteroSpmv::new(setups)
@@ -165,6 +176,7 @@ fn main() -> Result<()> {
                     per,
                     format!("{total:.1}"),
                 ]);
+                json_rows.push((name.to_string(), total));
             }
             Err(e) => eprintln!("{name}: FAILED: {e}"),
         }
@@ -197,5 +209,25 @@ fn main() -> Result<()> {
         "\nExpected shape (paper section 4.1): GPU ~2.75-3x one CPU socket; \
          the heterogeneous run approaches the sum of its parts."
     );
+    if let Some(path) = json_path {
+        // one flat JSON object: the CI perf-trajectory artifact
+        let configs = json_rows
+            .iter()
+            .map(|(name, g)| format!("\"{name}\":{g:.4}"))
+            .collect::<Vec<_>>()
+            .join(",");
+        let line = format!(
+            "{{\"bench\":\"spmvbench\",\"iters\":{iters},\"n\":{n},\"nnz\":{},\
+             \"sell_c\":{},\"sell_sigma\":{},\"tuned_gflops\":{:.4},\
+             \"block_width\":{},\"model_gflops\":{{{configs}}}}}",
+            a.nnz(),
+            cfg.c,
+            cfg.sigma,
+            first.measured_gflops,
+            blocked.config.nvecs,
+        );
+        std::fs::write(&path, format!("{line}\n"))?;
+        println!("wrote bench JSON to {path}");
+    }
     Ok(())
 }

@@ -20,7 +20,11 @@ use crate::core::{GhostError, Result};
 
 /// Version of the on-fabric envelope layout. Bumped whenever any
 /// payload schema changes; a mismatched peer is rejected at decode.
-pub const ENVELOPE_VERSION: u16 = 1;
+/// v2: job specs carry `deadline_ms`, results carry the deadline-miss
+/// tag, scheduler-stats snapshots grew the deadline/batch/steal
+/// counters, and the bucket-steal kinds (steal / yield / batch — see
+/// [`crate::sched::shard`]) joined the protocol.
+pub const ENVELOPE_VERSION: u16 = 2;
 
 /// Little-endian append-only byte sink.
 #[derive(Default)]

@@ -14,16 +14,20 @@
 //!           autotune picks for the random-vector block)
 //!   serve  --requests F.jsonl [--oneshot] [--pus P] [--shepherds S]
 //!          [--cache-mb M] [--max-batch W] [--no-batch]
+//!          [--deadline-ms D]
 //!          [--nodes N] [--route affinity|hash|load] [--node-pus P]
 //!          (the asynchronous solve service: jobs from a JSONL request
 //!           file are scheduled on the task queue, operators are cached
-//!           by sparsity fingerprint, and concurrent single-RHS CG jobs
-//!           are coalesced into block solves — see ghost::sched. With
-//!           --oneshot the file is processed once and a throughput
-//!           summary printed; without it the file is tailed forever.
-//!           With --nodes N > 1 the request stream is sharded across N
-//!           simulated-MPI node schedulers, routed by matrix affinity
-//!           (or hash / least-loaded) — see ghost::sched::shard.)
+//!           by sparsity fingerprint, and concurrent single-RHS CG and
+//!           BlockCg jobs are coalesced into block solves — see
+//!           ghost::sched. With --oneshot the file is processed once
+//!           and a throughput summary printed; without it the file is
+//!           tailed forever. --deadline-ms D stamps a default EDF
+//!           deadline on every request that lacks a "deadline_ms"
+//!           field. With --nodes N > 1 the request stream is sharded
+//!           across N simulated-MPI node schedulers, routed by matrix
+//!           affinity (or hash / least-loaded) with parked-bucket
+//!           stealing under overload — see ghost::sched::shard.)
 //!
 //! Matrices: poisson7 | stencil27 | matpde | anderson | cage | random.
 //! (clap is not vendorable offline; flags are parsed by the tiny parser
@@ -394,6 +398,8 @@ fn cmd_serve(a: &Args) -> Result<()> {
         max_batch: a.get("max-batch", 8),
     };
     let oneshot = a.flags.contains_key("oneshot");
+    // default EDF deadline for requests that do not carry their own
+    let deadline_ms: Option<u64> = a.flags.get("deadline-ms").and_then(|v| v.parse().ok());
     // one scheduler, or one per simulated node behind the shard router
     let sharded = if nodes > 1 {
         let policy = RoutePolicy::parse(&a.str("route", "affinity"))?;
@@ -441,7 +447,7 @@ fn cmd_serve(a: &Args) -> Result<()> {
     };
     let mut out = std::io::stdout();
     if oneshot {
-        let s = request::serve_oneshot(sched, std::path::Path::new(&path), &mut out)?;
+        let s = request::serve_oneshot(sched, std::path::Path::new(&path), deadline_ms, &mut out)?;
         println!(
             "served {} jobs ({} failed) in {:.3}s — {:.1} jobs/s, {:.2} Gflop/s",
             s.jobs,
@@ -452,26 +458,40 @@ fn cmd_serve(a: &Args) -> Result<()> {
         );
         println!(
             "operator cache: {} hits / {} misses, {} evictions, {:.1} MiB resident; \
-             batches: {} ({} jobs coalesced, widest {})",
+             batches: {} ({} jobs coalesced, widest {}); block batches: {} \
+             ({} jobs fused)",
             s.stats.cache.hits,
             s.stats.cache.misses,
             s.stats.cache.evictions,
             s.stats.cache.resident_bytes as f64 / (1 << 20) as f64,
             s.stats.batches,
             s.stats.batched_jobs,
-            s.stats.max_batch_width
+            s.stats.max_batch_width,
+            s.stats.block_batches,
+            s.stats.block_batched_jobs
         );
+        if s.stats.deadline_jobs > 0 {
+            println!(
+                "deadlines: {} jobs, {} missed ({:.1}% miss rate)",
+                s.stats.deadline_jobs,
+                s.stats.deadline_missed,
+                100.0 * s.stats.deadline_missed as f64 / s.stats.deadline_jobs as f64
+            );
+        }
         if let Some(shard) = &sharded {
             let st = shard.shard_stats();
             for (i, n) in st.per_node.iter().enumerate() {
                 println!(
                     "  node {i}: {} routed ({} handoffs), peak queue {}, \
-                     {:.1} MiB peak resident, {} cache hits",
+                     {:.1} MiB peak resident, {} cache hits, {} buckets yielded \
+                     ({} jobs migrated)",
                     n.routed,
                     n.handoffs,
                     n.peak_outstanding,
                     n.peak_resident_bytes as f64 / (1 << 20) as f64,
-                    n.sched.cache.hits
+                    n.sched.cache.hits,
+                    n.sched.stolen_buckets,
+                    n.sched.stolen_jobs
                 );
             }
         }
@@ -484,6 +504,7 @@ fn cmd_serve(a: &Args) -> Result<()> {
             sched,
             std::path::Path::new(&path),
             std::time::Duration::from_millis(200),
+            deadline_ms,
             &mut out,
         )?;
     }

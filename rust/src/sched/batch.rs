@@ -15,9 +15,17 @@
 //! Columns converge (or fail) individually: a finished column is frozen
 //! — its x/r/p state stops updating — while the remaining columns keep
 //! iterating, and per-column tolerances and iteration caps are honored.
+//!
+//! [`batch_block_cg`] extends the same economics to *block* jobs:
+//! several independent O'Leary block-CG systems on the same operator
+//! fuse their A·P streams into one `apply_block` call per iteration
+//! while each group keeps its own projections and updates
+//! ([`BlockCgState`]) — so a coalesced BlockCg job demultiplexes
+//! bitwise-identically to a solo `block_cg` run.
 
 use crate::core::{GhostError, Result, Scalar};
 use crate::densemat::{DenseMat, Layout};
+use crate::solvers::block_cg::BlockCgState;
 use crate::solvers::Operator;
 
 /// Per-column outcome of a [`batch_cg`] run.
@@ -162,6 +170,152 @@ pub fn batch_cg<S: Scalar, O: Operator<S>>(
     Ok(stats)
 }
 
+/// Per-group outcome of a [`batch_block_cg`] run.
+#[derive(Debug)]
+pub struct GroupStats {
+    pub iterations: usize,
+    pub final_residual: f64,
+    pub converged: bool,
+    /// Breakdown (or projection) error for this group; the other groups
+    /// of the bundle are unaffected.
+    pub error: Option<GhostError>,
+}
+
+/// Copy a column range of `src` into the reusable per-group buffer
+/// `dst` (the group's view of a fused A·P result — the hot loop must
+/// not allocate per iteration).
+fn gather_cols<S: Scalar>(dst: &mut DenseMat<S>, src: &DenseMat<S>, off: usize) {
+    let (n, w) = (dst.nrows(), dst.ncols());
+    for i in 0..n {
+        for j in 0..w {
+            *dst.at_mut(i, j) = src.at(i, off + j);
+        }
+    }
+}
+
+/// Solve `k` independent block systems A X_g = B_g (each with its own
+/// width, tolerance and iteration cap) while fusing every matrix pass:
+/// per iteration ONE `apply_block` streams A over the concatenation of
+/// all groups' search blocks, then each group runs its own O'Leary
+/// update on its column range. Because the SpMMV kernel accumulates
+/// each column independently in the same order at every width, each
+/// group's arithmetic — and therefore its solution, residual and
+/// iteration count — is bitwise identical to a solo
+/// [`crate::solvers::block_cg::block_cg`] run. Groups converge, cap out
+/// or break down individually; a finished group's columns ride along
+/// frozen (their stale output is ignored).
+pub fn batch_block_cg<S: Scalar, O: Operator<S>>(
+    op: &mut O,
+    bs: &[DenseMat<S>],
+    xs: &mut [DenseMat<S>],
+    tols: &[f64],
+    max_iters: &[usize],
+) -> Result<Vec<GroupStats>> {
+    let n = op.nlocal();
+    let k = bs.len();
+    crate::ensure!(
+        xs.len() == k && tols.len() == k && max_iters.len() == k,
+        DimMismatch,
+        "batch_block_cg group counts"
+    );
+    for g in 0..k {
+        crate::ensure!(
+            bs[g].nrows() == n
+                && xs[g].nrows() == n
+                && xs[g].ncols() == bs[g].ncols()
+                && bs[g].ncols() >= 1,
+            DimMismatch,
+            "batch_block_cg group {g} sizes"
+        );
+    }
+    let widths: Vec<usize> = bs.iter().map(|b| b.ncols()).collect();
+    let offs: Vec<usize> = widths
+        .iter()
+        .scan(0usize, |acc, w| {
+            let o = *acc;
+            *acc += w;
+            Some(o)
+        })
+        .collect();
+    let total: usize = widths.iter().sum();
+    // column → (group, column-within-group), computed once so the hot
+    // loop's gathers are straight copies
+    let col_group: Vec<(usize, usize)> = widths
+        .iter()
+        .enumerate()
+        .flat_map(|(g, &w)| (0..w).map(move |j| (g, j)))
+        .collect();
+    // reusable fused-pass buffers: concat input, concat output, and one
+    // per-group output view — no allocation per iteration
+    let mut pc = DenseMat::<S>::zeros(n, total, Layout::RowMajor);
+    let mut qc = DenseMat::<S>::zeros(n, total, Layout::RowMajor);
+    let mut qgs: Vec<DenseMat<S>> = widths
+        .iter()
+        .map(|&w| DenseMat::<S>::zeros(n, w, Layout::RowMajor))
+        .collect();
+    // fused init pass: Q_all = A · [X_0 | X_1 | ...]
+    for i in 0..n {
+        for (jj, &(g, cj)) in col_group.iter().enumerate() {
+            *pc.at_mut(i, jj) = xs[g].at(i, cj);
+        }
+    }
+    op.apply_block(&pc, &mut qc)?;
+    let mut states: Vec<BlockCgState<S>> = Vec::with_capacity(k);
+    let mut errors: Vec<Option<GhostError>> = (0..k).map(|_| None).collect();
+    for g in 0..k {
+        gather_cols(&mut qgs[g], &qc, offs[g]);
+        states.push(BlockCgState::init(
+            op,
+            &bs[g],
+            xs[g].clone(),
+            &qgs[g],
+            tols[g],
+            max_iters[g],
+        )?);
+    }
+    loop {
+        let mut any = false;
+        for st in states.iter_mut() {
+            st.check();
+            any |= st.active();
+        }
+        if !any {
+            break;
+        }
+        // ONE streaming pass shared by every group (frozen groups ride
+        // along so the concat width stays stable; their stale output is
+        // ignored — column independence keeps this free of cross-talk)
+        for i in 0..n {
+            for (jj, &(g, cj)) in col_group.iter().enumerate() {
+                *pc.at_mut(i, jj) = states[g].p().at(i, cj);
+            }
+        }
+        op.apply_block(&pc, &mut qc)?;
+        for g in 0..k {
+            if !states[g].active() {
+                continue;
+            }
+            gather_cols(&mut qgs[g], &qc, offs[g]);
+            if let Err(e) = states[g].step(op, &qgs[g]) {
+                // breakdown freezes this group only
+                errors[g] = Some(e);
+                states[g].deactivate();
+            }
+        }
+    }
+    let mut out = Vec::with_capacity(k);
+    for (g, (st, err)) in states.into_iter().zip(errors).enumerate() {
+        out.push(GroupStats {
+            iterations: st.iterations(),
+            final_residual: st.final_residual(),
+            converged: st.converged(),
+            error: err,
+        });
+        xs[g] = st.x().clone();
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -223,6 +377,63 @@ mod tests {
         for i in 0..n {
             assert!((ax[i] - b.at(i, 0)).abs() < 1e-7, "row {i}");
         }
+    }
+
+    #[test]
+    fn batched_block_groups_are_bitwise_identical_to_solo_block_cg() {
+        use crate::solvers::block_cg::block_cg;
+        let a = matgen::poisson7::<f64>(6, 6, 4);
+        let n = a.nrows();
+        // three groups of different widths, tolerances and caps
+        let widths = [3usize, 2, 4];
+        let tols = [1e-10, 1e-6, 1e-10];
+        let iters = [1000usize, 1000, 7];
+        let bs: Vec<DenseMat<f64>> = widths
+            .iter()
+            .enumerate()
+            .map(|(g, &w)| DenseMat::random(n, w, Layout::RowMajor, 100 + g as u64))
+            .collect();
+        let mut xs: Vec<DenseMat<f64>> = widths
+            .iter()
+            .map(|&w| DenseMat::zeros(n, w, Layout::RowMajor))
+            .collect();
+        let mut op = LocalSellOp::new(&a, 8, 64, 1).unwrap();
+        let st = batch_block_cg(&mut op, &bs, &mut xs, &tols, &iters).unwrap();
+        assert!(st[0].converged && st[1].converged, "{st:?}");
+        assert!(!st[2].converged, "capped group must not converge: {st:?}");
+        assert_eq!(st[2].iterations, 7);
+        // each group solo must match bit for bit — iterations, residual
+        // and every solution entry
+        for g in 0..3 {
+            let mut op1 = LocalSellOp::new(&a, 8, 64, 1).unwrap();
+            let mut x1 = DenseMat::<f64>::zeros(n, widths[g], Layout::RowMajor);
+            let solo = block_cg(&mut op1, &bs[g], &mut x1, tols[g], iters[g]).unwrap();
+            assert_eq!(solo.iterations, st[g].iterations, "group {g}");
+            assert_eq!(
+                solo.final_residual.to_bits(),
+                st[g].final_residual.to_bits(),
+                "group {g}"
+            );
+            for i in 0..n {
+                for j in 0..widths[g] {
+                    assert_eq!(
+                        xs[g].at(i, j).to_bits(),
+                        x1.at(i, j).to_bits(),
+                        "group {g} ({i},{j}): fused and solo runs must be bitwise equal"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batch_block_cg_group_count_mismatch_rejected() {
+        let a = matgen::poisson7::<f64>(4, 4, 4);
+        let n = a.nrows();
+        let mut op = LocalSellOp::new(&a, 4, 16, 1).unwrap();
+        let bs = vec![DenseMat::<f64>::random(n, 2, Layout::RowMajor, 1)];
+        let mut xs = vec![DenseMat::<f64>::zeros(n, 2, Layout::RowMajor)];
+        assert!(batch_block_cg(&mut op, &bs, &mut xs, &[1e-8, 1e-8], &[10]).is_err());
     }
 
     #[test]

@@ -11,11 +11,16 @@
 //! counters are exported through [`CacheStats`] for the service's
 //! telemetry.
 //!
-//! Assembly happens under the cache lock: a second request for the same
-//! structure waits for the first assembly and then hits, instead of
-//! duplicating the sweep. (The lock is per-cache; per-entry building
-//! states are a ROADMAP follow-up if assembly latency under mixed
-//! traffic ever matters.)
+//! Assembly happens *off* the cache lock, behind a per-entry state: a
+//! miss installs an `Assembling` placeholder (with its own condvar) and
+//! releases the map lock before running the sweep + SELL build, so a
+//! slow assembly never serializes lookups of *other* matrices. A second
+//! request for the same key finds the placeholder, waits on that
+//! entry's condvar, and then hits — the sweep still runs exactly once
+//! per matrix. Width-tuning decisions ([`OperatorCache::block_width`])
+//! follow the same protocol. A failed assembly removes the placeholder
+//! and wakes the waiters, the first of which retries (and surfaces the
+//! error if it persists).
 //!
 //! An evicted entry that is still referenced by a running job stays
 //! alive through its `Arc` until the job finishes; `resident_bytes`
@@ -29,7 +34,7 @@
 //! adds a digest of the column indices and value bit patterns.
 
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 
 use crate::core::Result;
 use crate::solvers::LocalSellOp;
@@ -95,13 +100,28 @@ struct Entry {
     config: TunedConfig,
 }
 
+/// Per-entry assembly state. `Assembling` marks an in-flight sweep +
+/// SELL build running *off* the cache lock; same-key lookups wait on
+/// the entry's condvar (paired with the cache's inner mutex — std
+/// allows many condvars on one mutex), different-key lookups proceed.
+enum Slot {
+    Assembling(Arc<Condvar>),
+    Ready(Entry),
+}
+
+/// Same protocol for the tune_block width memo.
+enum WidthSlot {
+    Tuning(Arc<Condvar>),
+    Ready(usize),
+}
+
 #[derive(Default)]
 struct Inner {
-    map: HashMap<MatrixKey, Entry>,
+    map: HashMap<MatrixKey, Slot>,
     /// Memoized batch-width decisions (tune_block) — independent of
     /// operator entries, so the sweep runs once per matrix even when
     /// the width is asked for before (or after) the entry is evicted.
-    widths: HashMap<MatrixKey, usize>,
+    widths: HashMap<MatrixKey, WidthSlot>,
     tick: u64,
     hits: u64,
     misses: u64,
@@ -149,52 +169,100 @@ impl OperatorCache {
         a: &Crs<f64>,
         nthreads: usize,
     ) -> Result<(SharedOp, bool)> {
-        let mut guard = self.inner.lock().unwrap();
-        let g = &mut *guard;
-        g.tick += 1;
-        let now = g.tick;
-        if let Some(e) = g.map.get_mut(&key) {
-            e.last_used = now;
-            g.hits += 1;
-            return Ok((e.op.clone(), true));
+        // what the map says about `key` right now, extracted so the
+        // guard can be handed to the entry condvar without a live
+        // borrow of its interior
+        enum Seen {
+            Ready(SharedOp),
+            Wait(Arc<Condvar>),
+            Missing,
         }
-        g.misses += 1;
-        // assemble under the lock: a concurrent request for the same
-        // structure waits here, then hits (see module docs)
-        let tuned = tune::tune(a)?;
-        let op = LocalSellOp::with_variant(
-            a,
-            tuned.config.c,
-            tuned.config.sigma,
-            nthreads.max(1),
-            tuned.config.variant,
-        )?;
+        let cv = {
+            let mut guard = self.inner.lock().unwrap();
+            loop {
+                let seen = {
+                    let g = &mut *guard;
+                    match g.map.get_mut(&key) {
+                        Some(Slot::Ready(e)) => {
+                            g.tick += 1;
+                            e.last_used = g.tick;
+                            g.hits += 1;
+                            Seen::Ready(e.op.clone())
+                        }
+                        Some(Slot::Assembling(cv)) => Seen::Wait(cv.clone()),
+                        None => Seen::Missing,
+                    }
+                };
+                match seen {
+                    Seen::Ready(op) => return Ok((op, true)),
+                    // same key: wait for the in-flight assembly, then
+                    // hit (or retry it if it failed)
+                    Seen::Wait(cv) => guard = cv.wait(guard).unwrap(),
+                    Seen::Missing => break,
+                }
+            }
+            guard.misses += 1;
+            let cv = Arc::new(Condvar::new());
+            guard.map.insert(key, Slot::Assembling(cv.clone()));
+            cv
+        };
+        // assemble OFF the lock: unrelated lookups (and other
+        // assemblies) proceed concurrently; only same-key requests wait
+        let built = (|| {
+            let tuned = tune::tune(a)?;
+            let op = LocalSellOp::with_variant(
+                a,
+                tuned.config.c,
+                tuned.config.sigma,
+                nthreads.max(1),
+                tuned.config.variant,
+            )?;
+            Ok::<_, crate::core::GhostError>((tuned.config, op))
+        })();
+        let mut g = self.inner.lock().unwrap();
+        let (config, op) = match built {
+            Ok(ok) => ok,
+            Err(e) => {
+                // failed assembly: clear the placeholder and wake the
+                // waiters so one of them can retry
+                g.map.remove(&key);
+                cv.notify_all();
+                return Err(e);
+            }
+        };
         let bytes = op.resident_bytes();
         let shared: SharedOp = Arc::new(Mutex::new(op));
+        g.tick += 1;
+        let now = g.tick;
         g.map.insert(
             key,
-            Entry {
+            Slot::Ready(Entry {
                 op: shared.clone(),
                 bytes,
                 last_used: now,
-                config: tuned.config,
-            },
+                config,
+            }),
         );
         g.resident_bytes += bytes;
         // LRU eviction by byte budget; the entry just inserted survives
-        while g.resident_bytes > self.budget_bytes && g.map.len() > 1 {
+        // and in-flight Assembling placeholders are never evicted
+        while g.resident_bytes > self.budget_bytes {
             let lru = g
                 .map
                 .iter()
-                .filter(|&(k, _)| *k != key)
-                .min_by_key(|&(_, e)| e.last_used)
-                .map(|(k, _)| *k);
+                .filter_map(|(k, s)| match s {
+                    Slot::Ready(e) if *k != key => Some((*k, e.last_used)),
+                    _ => None,
+                })
+                .min_by_key(|&(_, last)| last)
+                .map(|(k, _)| k);
             let Some(lru) = lru else { break };
-            if let Some(e) = g.map.remove(&lru) {
+            if let Some(Slot::Ready(e)) = g.map.remove(&lru) {
                 g.resident_bytes -= e.bytes;
                 g.evictions += 1;
             }
         }
+        cv.notify_all();
         Ok((shared, false))
     }
 
@@ -209,7 +277,10 @@ impl OperatorCache {
         self.block_width_keyed(matrix_key(a), a, max_width)
     }
 
-    /// [`OperatorCache::block_width`] with a precomputed key.
+    /// [`OperatorCache::block_width`] with a precomputed key. The sweep
+    /// runs off the cache lock behind a `Tuning` placeholder, like
+    /// assembly: a concurrent width request for the same matrix waits
+    /// and reuses the decision, any other key proceeds.
     pub fn block_width_keyed(
         &self,
         key: MatrixKey,
@@ -217,24 +288,62 @@ impl OperatorCache {
         max_width: usize,
     ) -> Result<usize> {
         let max_width = max_width.max(1);
+        enum Seen {
+            Ready(usize),
+            Wait(Arc<Condvar>),
+            Missing,
+        }
+        let cv = {
+            let mut guard = self.inner.lock().unwrap();
+            loop {
+                let seen = match guard.widths.get(&key) {
+                    Some(WidthSlot::Ready(w)) => Seen::Ready(*w),
+                    Some(WidthSlot::Tuning(cv)) => Seen::Wait(cv.clone()),
+                    None => Seen::Missing,
+                };
+                match seen {
+                    Seen::Ready(w) => return Ok(w.min(max_width)),
+                    Seen::Wait(cv) => guard = cv.wait(guard).unwrap(),
+                    Seen::Missing => break,
+                }
+            }
+            let cv = Arc::new(Condvar::new());
+            // bound the memo for long-lived services (decisions are
+            // tiny, but never-evicted growth is still growth); only
+            // settled decisions are dropped — in-flight sweeps keep
+            // their waiters
+            if guard.widths.len() >= 1024 {
+                guard
+                    .widths
+                    .retain(|_, s| matches!(s, WidthSlot::Tuning(_)));
+            }
+            guard.widths.insert(key, WidthSlot::Tuning(cv.clone()));
+            cv
+        };
+        let swept = tune::tune_block(a, max_width);
         let mut g = self.inner.lock().unwrap();
-        if let Some(&w) = g.widths.get(&key) {
-            return Ok(w.min(max_width));
+        match swept {
+            Ok(t) => {
+                let w = t.config.nvecs.clamp(1, max_width);
+                g.widths.insert(key, WidthSlot::Ready(w));
+                cv.notify_all();
+                Ok(w)
+            }
+            Err(e) => {
+                g.widths.remove(&key);
+                cv.notify_all();
+                Err(e)
+            }
         }
-        let w = tune::tune_block(a, max_width)?.config.nvecs.clamp(1, max_width);
-        // bound the memo for long-lived services (decisions are tiny,
-        // but never-evicted growth is still growth)
-        if g.widths.len() >= 1024 {
-            g.widths.clear();
-        }
-        g.widths.insert(key, w);
-        Ok(w)
     }
 
-    /// Tuned configuration of a cached matrix, if present.
+    /// Tuned configuration of a cached matrix, if present (and ready).
     pub fn config_of(&self, a: &Crs<f64>) -> Option<TunedConfig> {
         let key = matrix_key(a);
-        self.inner.lock().unwrap().map.get(&key).map(|e| e.config)
+        match self.inner.lock().unwrap().map.get(&key) {
+            Some(Slot::Ready(e)) => Some(e.config),
+            _ => None,
+        }
     }
 
     pub fn stats(&self) -> CacheStats {
@@ -244,7 +353,12 @@ impl OperatorCache {
             misses: g.misses,
             evictions: g.evictions,
             resident_bytes: g.resident_bytes,
-            entries: g.map.len(),
+            // in-flight assemblies are not entries yet
+            entries: g
+                .map
+                .values()
+                .filter(|s| matches!(s, Slot::Ready(_)))
+                .count(),
         }
     }
 }
@@ -359,6 +473,106 @@ mod tests {
         assert!(hit, "recently-used entry must survive eviction");
         let (_op, hit) = cache.get_or_assemble(&mats[1], 1).unwrap();
         assert!(!hit, "LRU entry must have been evicted");
+    }
+
+    #[test]
+    fn an_in_flight_assembly_does_not_block_other_keys() {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        let cache = Arc::new(OperatorCache::new(1 << 30));
+        let a = matgen::poisson7::<f64>(6, 6, 4);
+        let b = matgen::anderson::<f64>(16, 1.0, 5);
+        let key_a = matrix_key(&a);
+        // simulate a slow in-flight assembly of `a` by parking its
+        // Assembling placeholder directly (deterministic: no timing on
+        // a real sweep)
+        let cv = Arc::new(Condvar::new());
+        cache
+            .inner
+            .lock()
+            .unwrap()
+            .map
+            .insert(key_a, Slot::Assembling(cv.clone()));
+        // lookups of a DIFFERENT matrix must miss, assemble and then
+        // hit while `a` is still assembling — the old
+        // whole-cache-lock design deadlocked exactly here
+        let (_opb, hit) = cache.get_or_assemble(&b, 1).unwrap();
+        assert!(!hit);
+        let (_opb, hit) = cache.get_or_assemble(&b, 1).unwrap();
+        assert!(hit, "unrelated hit path must stay open during assembly");
+        // a SAME-key lookup parks on the entry condvar...
+        let done = Arc::new(AtomicBool::new(false));
+        let waiter = {
+            let cache = cache.clone();
+            let a = a.clone();
+            let done = done.clone();
+            std::thread::spawn(move || {
+                let r = cache.get_or_assemble(&a, 1);
+                done.store(true, Ordering::SeqCst);
+                r
+            })
+        };
+        std::thread::sleep(std::time::Duration::from_millis(40));
+        assert!(
+            !done.load(Ordering::SeqCst),
+            "same-key request must wait for the in-flight assembly"
+        );
+        // ... until the assembler resolves; simulate a FAILED assembly
+        // (placeholder removed + waiters woken): the waiter retries and
+        // becomes the assembler itself
+        cache.inner.lock().unwrap().map.remove(&key_a);
+        cv.notify_all();
+        let (_opa, hit) = waiter.join().unwrap().unwrap();
+        assert!(!hit, "the retrying waiter assembles for itself");
+        let (_opa, hit) = cache.get_or_assemble(&a, 1).unwrap();
+        assert!(hit);
+    }
+
+    #[test]
+    fn concurrent_same_key_requests_assemble_exactly_once() {
+        let cache = Arc::new(OperatorCache::new(1 << 30));
+        let a = Arc::new(matgen::poisson7::<f64>(6, 6, 4));
+        let threads: Vec<_> = (0..4)
+            .map(|_| {
+                let cache = cache.clone();
+                let a = a.clone();
+                std::thread::spawn(move || cache.get_or_assemble(&a, 1).unwrap())
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        let s = cache.stats();
+        assert_eq!(s.misses, 1, "one sweep for four racing requests: {s:?}");
+        assert_eq!(s.hits, 3, "{s:?}");
+        assert_eq!(s.entries, 1);
+    }
+
+    #[test]
+    fn distinct_matrices_assemble_concurrently_without_interference() {
+        let cache = Arc::new(OperatorCache::new(1 << 30));
+        let mats: Vec<Arc<crate::sparsemat::Crs<f64>>> = vec![
+            Arc::new(matgen::poisson7::<f64>(6, 6, 4)),
+            Arc::new(matgen::anderson::<f64>(16, 1.0, 5)),
+        ];
+        let threads: Vec<_> = mats
+            .iter()
+            .map(|m| {
+                let cache = cache.clone();
+                let m = m.clone();
+                std::thread::spawn(move || cache.get_or_assemble(&m, 1).unwrap())
+            })
+            .collect();
+        for t in threads {
+            let (_op, hit) = t.join().unwrap();
+            assert!(!hit);
+        }
+        let s = cache.stats();
+        assert_eq!((s.misses, s.entries), (2, 2), "{s:?}");
+        // both are warm afterwards
+        for m in &mats {
+            let (_op, hit) = cache.get_or_assemble(m, 1).unwrap();
+            assert!(hit);
+        }
     }
 
     #[test]

@@ -10,28 +10,38 @@
 //! cooperating parts:
 //!
 //! - **[`JobScheduler`]** — accepts [`JobSpec`]s (matrix source, solver
-//!   kind, tolerance, priority, PU hints) and executes them
+//!   kind, tolerance, priority, deadline, PU hints) and executes them
 //!   asynchronously on [`taskq::TaskQueue`] with typed [`JobHandle`]
-//!   futures. PRIO_HIGH jobs take the queue's fast lane; per-job
-//!   `nthreads`/NUMA hints become the task's PU reservation.
+//!   futures. PRIO_HIGH jobs take the queue's fast lane; a
+//!   [`JobSpec::deadline_ms`] puts the job on the queue's EDF lane
+//!   (earliest deadline first, ahead of the whole FIFO/PRIO_HIGH
+//!   order — a late job completes and is *counted* missed, never
+//!   cancelled); per-job `nthreads`/NUMA hints become the task's PU
+//!   reservation.
 //! - **[`cache::OperatorCache`]** — memoizes assembled-and-autotuned
 //!   operators keyed by the tuner's sparsity fingerprint plus a matrix
 //!   content digest ([`cache::MatrixKey`]), LRU-evicted by resident
 //!   bytes, so repeated solves against the same matrix skip SELL
-//!   assembly and the (C, sigma, variant) sweep.
+//!   assembly and the (C, sigma, variant) sweep. Assembly runs *off*
+//!   the cache lock behind per-entry `Assembling` states, so a slow
+//!   sweep never serializes unrelated lookups.
 //! - **the request batcher** ([`batch`]) — coalesces concurrent
 //!   single-RHS CG jobs that target the same cached operator into one
 //!   block solve through [`Operator::apply_block`] (width capped by the
-//!   tuner's nvecs axis), then demultiplexes per-job solutions and
-//!   residuals — bitwise identical to solo execution, so callers cannot
-//!   observe coalescing.
+//!   tuner's nvecs axis), and concurrent `BlockCg` jobs into one fused
+//!   A·P stream with per-group O'Leary recurrences
+//!   ([`batch::batch_block_cg`]); demultiplexed per-job solutions and
+//!   residuals are bitwise identical to solo execution, so callers
+//!   cannot observe coalescing.
 //!
 //! Above the single-node engine sits the **sharded service**
 //! ([`shard`]): one scheduler per simulated-MPI rank, with a front-end
 //! that routes requests over the fabric by matrix-fingerprint affinity
-//! (hash and least-loaded policies too), keeps per-node load accounts
-//! and hands jobs off when a node backs up. Both layers implement
-//! [`SolveService`], so every consumer below drives either one.
+//! (hash and least-loaded policies too), keeps per-node load accounts,
+//! hands new arrivals off when a node backs up and *steals parked batch
+//! buckets* from overloaded nodes so the backlog itself migrates. Both
+//! layers implement [`SolveService`], so every consumer below drives
+//! either one.
 //!
 //! The `ghost serve` CLI mode drives this engine from a JSONL request
 //! file (see [`request`]; `--nodes N` selects the sharded service), and
@@ -66,7 +76,7 @@ use crate::sparsemat::Crs;
 use crate::taskq::{flags as tflags, TaskOpts, TaskQueue};
 use crate::topology::Machine;
 use crate::tune;
-use batch::batch_cg;
+use batch::{batch_block_cg, batch_cg};
 use cache::{CacheStats, OperatorCache};
 
 /// Where a job's matrix comes from.
@@ -147,6 +157,23 @@ pub struct JobSpec {
     /// operator it asked for, which is why the key must come from
     /// [`matrix_key`] on the actual matrix, not be invented.
     pub matrix_key: Option<MatrixKey>,
+    /// Completion deadline, milliseconds from submit. `Some` routes the
+    /// job's task through the queue's EDF lane (earliest deadline runs
+    /// first, ahead of the FIFO/PRIO_HIGH order) and its parked
+    /// right-hand side to the front of its batch bucket in deadline
+    /// order. A missed deadline never cancels the job — it completes
+    /// late and is reported ([`JobReport::deadline_missed`], the
+    /// deadline counters in [`SchedStats`]).
+    pub deadline_ms: Option<u64>,
+    /// True when this spec is a parked job migrating in a stolen bucket
+    /// (set by [`JobScheduler::take_parked_bucket`], carried across the
+    /// fabric). The receiving scheduler then skips the `deadline_jobs`
+    /// counter — the home node already counted the job — so aggregate
+    /// deadline telemetry counts each job once. `submitted` is still
+    /// counted on both nodes: per-node, a migrated job really is a
+    /// second submission, and the home's books close through
+    /// `stolen_jobs` (submitted = completed + failed + stolen_jobs).
+    pub(crate) migrated: bool,
 }
 
 impl JobSpec {
@@ -160,12 +187,20 @@ impl JobSpec {
             seed: 0,
             rhs: None,
             matrix_key: None,
+            deadline_ms: None,
+            migrated: false,
         }
     }
 
     /// Attach a precomputed [`matrix_key`] (see the field docs).
     pub fn with_matrix_key(mut self, key: MatrixKey) -> Self {
         self.matrix_key = Some(key);
+        self
+    }
+
+    /// Give the job a completion deadline (see the field docs).
+    pub fn with_deadline_ms(mut self, ms: u64) -> Self {
+        self.deadline_ms = Some(ms);
         self
     }
 }
@@ -266,6 +301,9 @@ pub struct JobReport {
     pub batched_width: usize,
     /// Whether the operator came out of the cache.
     pub cache_hit: bool,
+    /// `None`: the job carried no deadline. `Some(missed)`: whether it
+    /// completed after its [`JobSpec::deadline_ms`] target.
+    pub deadline_missed: Option<bool>,
     /// Submit-to-completion latency.
     pub elapsed: Duration,
     /// Completion timestamp (ordering diagnostics).
@@ -382,11 +420,28 @@ pub struct SchedStats {
     pub submitted: u64,
     pub completed: u64,
     pub failed: u64,
-    /// Coalesced block solves executed (width >= 2).
+    /// Coalesced single-RHS-CG block solves executed (width >= 2).
     pub batches: u64,
-    /// Jobs that rode in a coalesced block.
+    /// Single-RHS CG jobs that rode in a coalesced block.
     pub batched_jobs: u64,
+    /// Widest coalesced stream seen: CG columns, or the total fused
+    /// width of a coalesced BlockCg bundle.
     pub max_batch_width: usize,
+    /// Coalesced BlockCg bundles executed (>= 2 groups fused into one
+    /// A·P stream).
+    pub block_batches: u64,
+    /// BlockCg jobs that rode in a coalesced bundle.
+    pub block_batched_jobs: u64,
+    /// Jobs submitted with a [`JobSpec::deadline_ms`].
+    pub deadline_jobs: u64,
+    /// Deadline jobs that completed *after* their target (failures and
+    /// cancellations are not misses — only late completions).
+    pub deadline_missed: u64,
+    /// Parked batch buckets yielded to the shard fabric's bucket-steal
+    /// protocol (0 on a standalone scheduler).
+    pub stolen_buckets: u64,
+    /// Parked jobs that migrated in those buckets.
+    pub stolen_jobs: u64,
     pub cache: CacheStats,
 }
 
@@ -398,15 +453,88 @@ struct Counters {
     batches: u64,
     batched_jobs: u64,
     max_batch_width: usize,
+    block_batches: u64,
+    block_batched_jobs: u64,
+    deadline_jobs: u64,
+    deadline_missed: u64,
+    stolen_buckets: u64,
+    stolen_jobs: u64,
 }
 
-/// A single-RHS CG job parked in a batch bucket.
+/// A single-RHS CG job parked in a batch bucket. Carries everything
+/// needed to rebuild a full [`JobSpec`] if the bucket is stolen across
+/// the shard fabric.
 struct PendingCg {
     state: Arc<JobState>,
     b: Vec<f64>,
     tol: f64,
     max_iters: usize,
+    prio: Priority,
+    deadline: Option<Instant>,
+    nthreads: usize,
+    numanode: Option<usize>,
     submitted_at: Instant,
+}
+
+/// A BlockCg job parked in a block batch bucket (right-hand sides are
+/// regenerated from the seed, so only parameters park).
+struct PendingBlock {
+    state: Arc<JobState>,
+    nrhs: usize,
+    tol: f64,
+    max_iters: usize,
+    seed: u64,
+    prio: Priority,
+    deadline: Option<Instant>,
+    nthreads: usize,
+    numanode: Option<usize>,
+    submitted_at: Instant,
+}
+
+/// A batch bucket: the parked jobs plus the matrix they share (kept
+/// here so a stolen bucket can travel as self-contained request
+/// envelopes).
+struct Bucket<T> {
+    a: Arc<Crs<f64>>,
+    q: VecDeque<T>,
+}
+
+impl<T> Bucket<T> {
+    fn new(a: Arc<Crs<f64>>) -> Self {
+        Bucket {
+            a,
+            q: VecDeque::new(),
+        }
+    }
+}
+
+/// Bucket insertion index implementing the parking lanes: EDF entries
+/// first (ascending deadline, FIFO among ties), then PRIO_HIGH arrivals
+/// (LIFO, as before), then normal FIFO.
+fn park_index<T>(
+    q: &VecDeque<T>,
+    lane_of: impl Fn(&T) -> Option<Instant>,
+    deadline: Option<Instant>,
+    prio: Priority,
+) -> usize {
+    match deadline {
+        Some(d) => q
+            .iter()
+            .position(|e| match lane_of(e) {
+                Some(ed) => ed > d,
+                None => true,
+            })
+            .unwrap_or(q.len()),
+        None => match prio {
+            // front of the non-deadline region: the fast-lane runner
+            // solves the latest high-priority arrival first
+            Priority::High => q
+                .iter()
+                .position(|e| lane_of(e).is_none())
+                .unwrap_or(q.len()),
+            Priority::Normal => q.len(),
+        },
+    }
 }
 
 /// A non-batched job, bundled for the executing task.
@@ -415,6 +543,7 @@ struct DirectJob {
     rhs: Option<Vec<f64>>,
     seed: u64,
     id: u64,
+    deadline: Option<Instant>,
     submitted_at: Instant,
     /// Verified client key, when provided: the shepherd then skips the
     /// O(nnz) digest and goes straight to the keyed cache lookup.
@@ -426,7 +555,9 @@ struct SchedInner {
     max_batch: usize,
     /// Batch buckets: pending single-RHS CG jobs per matrix (keyed by
     /// structure + content so value-different matrices never coalesce).
-    pending: Mutex<HashMap<MatrixKey, VecDeque<PendingCg>>>,
+    pending: Mutex<HashMap<MatrixKey, Bucket<PendingCg>>>,
+    /// Block batch buckets: pending BlockCg jobs per matrix.
+    pending_block: Mutex<HashMap<MatrixKey, Bucket<PendingBlock>>>,
     /// Named-matrix memo (build each generator once per scheduler).
     mats: Mutex<HashMap<(String, usize), Arc<Crs<f64>>>>,
     /// Every submitted-but-not-yet-completed job, so shutdown can fail
@@ -485,6 +616,7 @@ impl JobScheduler {
                 batching: cfg.batching,
                 max_batch: cfg.max_batch.max(1),
                 pending: Mutex::new(HashMap::new()),
+                pending_block: Mutex::new(HashMap::new()),
                 mats: Mutex::new(HashMap::new()),
                 jobs: Mutex::new(HashMap::new()),
                 next_id: AtomicU64::new(0),
@@ -512,6 +644,12 @@ impl JobScheduler {
             batches: c.batches,
             batched_jobs: c.batched_jobs,
             max_batch_width: c.max_batch_width,
+            block_batches: c.block_batches,
+            block_batched_jobs: c.block_batched_jobs,
+            deadline_jobs: c.deadline_jobs,
+            deadline_missed: c.deadline_missed,
+            stolen_buckets: c.stolen_buckets,
+            stolen_jobs: c.stolen_jobs,
             cache: self.cache.stats(),
         }
     }
@@ -532,6 +670,10 @@ impl JobScheduler {
         // job whose result never arrived
         {
             let mut pend = self.inner.pending.lock().unwrap();
+            pend.clear();
+        }
+        {
+            let mut pend = self.inner.pending_block.lock().unwrap();
             pend.clear();
         }
         let stranded: Vec<Arc<JobState>> =
@@ -555,6 +697,10 @@ impl JobScheduler {
 
     fn complete(&self, state: &JobState, res: Result<JobReport>) {
         let ok = res.is_ok();
+        let missed = matches!(
+            &res,
+            Ok(r) if r.deadline_missed == Some(true)
+        );
         // counters are updated under the result lock, before the
         // waiters wake: wait()-then-stats() never undercounts
         state.fulfill_then(res, || {
@@ -563,6 +709,9 @@ impl JobScheduler {
                 c.completed += 1;
             } else {
                 c.failed += 1;
+            }
+            if missed {
+                c.deadline_missed += 1;
             }
         });
         self.inner.jobs.lock().unwrap().remove(&state.id);
@@ -617,6 +766,11 @@ impl JobScheduler {
         {
             let mut c = self.inner.counters.lock().unwrap();
             c.submitted += 1;
+            // a job migrating in a stolen bucket was already counted as
+            // a deadline job by the node it left
+            if spec.deadline_ms.is_some() && !spec.migrated {
+                c.deadline_jobs += 1;
+            }
         }
         self.inner.jobs.lock().unwrap().insert(id, state.clone());
         let JobSpec {
@@ -626,8 +780,11 @@ impl JobScheduler {
             numanode,
             seed,
             rhs,
+            deadline_ms,
             ..
         } = spec;
+        let submitted_at = Instant::now();
+        let deadline = deadline_ms.map(|ms| submitted_at + Duration::from_millis(ms));
         let topts = TaskOpts {
             nthreads: nthreads.max(1),
             numanode,
@@ -636,16 +793,18 @@ impl JobScheduler {
                 Priority::Normal => tflags::DEFAULT,
             },
             deps: vec![],
+            // a deadline job's task rides the queue's EDF lane
+            deadline,
         };
-        let submitted_at = Instant::now();
         let task = match (solver, self.inner.batching) {
             (SolverKind::Cg { tol, max_iters }, policy) if policy != BatchPolicy::Off => {
                 // park in the batch bucket, then enqueue a runner; the
                 // first runner to execute drains every compatible job
-                // parked so far into one block solve. High-priority
-                // right-hand sides park at the *front* so the fast-lane
-                // runner solves them in its own batch rather than
-                // spending its slot on earlier normal traffic.
+                // parked so far into one block solve. Deadline jobs
+                // park at the very front in EDF order; high-priority
+                // right-hand sides park ahead of normal traffic so the
+                // fast-lane runner solves them in its own batch rather
+                // than spending its slot on earlier arrivals.
                 let n = a.nrows();
                 let b = rhs.unwrap_or_else(|| default_rhs(n, seed));
                 let fp = client_key.unwrap_or_else(|| matrix_key(&a));
@@ -654,19 +813,62 @@ impl JobScheduler {
                     b,
                     tol,
                     max_iters,
+                    prio: priority,
+                    deadline,
+                    nthreads: nthreads.max(1),
+                    numanode,
                     submitted_at,
                 };
                 {
                     let mut pend = self.inner.pending.lock().unwrap();
-                    let bucket = pend.entry(fp).or_default();
-                    match priority {
-                        Priority::High => bucket.push_front(pending),
-                        Priority::Normal => bucket.push_back(pending),
-                    }
+                    let bucket = pend
+                        .entry(fp)
+                        .or_insert_with(|| Bucket::new(a.clone()));
+                    let at = park_index(&bucket.q, |p| p.deadline, deadline, priority);
+                    bucket.q.insert(at, pending);
                 }
                 let sched = self.clone();
                 self.queue.enqueue(topts, move |ctx| {
                     sched.run_batch(fp, &a, ctx.nthreads());
+                })
+            }
+            (
+                SolverKind::BlockCg {
+                    nrhs,
+                    tol,
+                    max_iters,
+                },
+                policy,
+            ) if policy != BatchPolicy::Off && nrhs >= 1 => {
+                // BlockCg coalesces too: groups park per matrix and the
+                // first runner fuses every parked group's A·P stream
+                // into one apply_block per iteration (the per-group
+                // recurrences stay independent — results demux bitwise
+                // identically to solo block_cg runs)
+                let fp = client_key.unwrap_or_else(|| matrix_key(&a));
+                let pending = PendingBlock {
+                    state: state.clone(),
+                    nrhs,
+                    tol,
+                    max_iters,
+                    seed,
+                    prio: priority,
+                    deadline,
+                    nthreads: nthreads.max(1),
+                    numanode,
+                    submitted_at,
+                };
+                {
+                    let mut pend = self.inner.pending_block.lock().unwrap();
+                    let bucket = pend
+                        .entry(fp)
+                        .or_insert_with(|| Bucket::new(a.clone()));
+                    let at = park_index(&bucket.q, |p| p.deadline, deadline, priority);
+                    bucket.q.insert(at, pending);
+                }
+                let sched = self.clone();
+                self.queue.enqueue(topts, move |ctx| {
+                    sched.run_batch_block(fp, ctx.nthreads());
                 })
             }
             (solver, _) => {
@@ -677,6 +879,7 @@ impl JobScheduler {
                     rhs,
                     seed,
                     id,
+                    deadline,
                     submitted_at,
                     key: client_key,
                 };
@@ -695,7 +898,13 @@ impl JobScheduler {
             {
                 let mut pend = self.inner.pending.lock().unwrap();
                 for bucket in pend.values_mut() {
-                    bucket.retain(|p| !Arc::ptr_eq(&p.state, &state));
+                    bucket.q.retain(|p| !Arc::ptr_eq(&p.state, &state));
+                }
+            }
+            {
+                let mut pend = self.inner.pending_block.lock().unwrap();
+                for bucket in pend.values_mut() {
+                    bucket.q.retain(|p| !Arc::ptr_eq(&p.state, &state));
                 }
             }
             self.complete(
@@ -729,16 +938,22 @@ impl JobScheduler {
         let cap = self.width_cap(fp, a);
         let taken: Vec<PendingCg> = {
             let mut pend = self.inner.pending.lock().unwrap();
-            match pend.get_mut(&fp) {
-                Some(q) => {
-                    let k = q.len().min(cap.max(1));
-                    q.drain(..k).collect()
-                }
-                None => Vec::new(),
+            let taken = if let Some(bucket) = pend.get_mut(&fp) {
+                let k = bucket.q.len().min(cap.max(1));
+                bucket.q.drain(..k).collect()
+            } else {
+                Vec::new()
+            };
+            // a drained-empty bucket is dropped so it does not pin its
+            // matrix alive for the life of the service
+            if pend.get(&fp).is_some_and(|b| b.q.is_empty()) {
+                pend.remove(&fp);
             }
+            taken
         };
         if taken.is_empty() {
-            // an earlier runner already coalesced this job
+            // an earlier runner already coalesced this job (or the
+            // bucket was stolen across the fabric)
             return;
         }
         let k = taken.len();
@@ -779,6 +994,7 @@ impl JobScheduler {
                             matvecs: s.iterations + 1,
                             batched_width: k,
                             cache_hit: hit,
+                            deadline_missed: job.deadline.map(|d| now > d),
                             elapsed: now.duration_since(job.submitted_at),
                             completed_at: now,
                         }),
@@ -801,6 +1017,110 @@ impl JobScheduler {
         }
     }
 
+    /// Block-batch-runner body: drain the block bucket for `fp` (groups
+    /// up to the width cap by total column count) and solve every
+    /// drained BlockCg job with its A·P streams fused into one
+    /// `apply_block` per iteration.
+    fn run_batch_block(&self, fp: MatrixKey, nthreads: usize) {
+        let Some((a, taken)) = ({
+            let mut pend = self.inner.pending_block.lock().unwrap();
+            let drained = if let Some(bucket) = pend.get_mut(&fp) {
+                // take groups while the fused width stays within the
+                // cap (always at least one group, whatever its width)
+                let cap = self.inner.max_batch.max(1);
+                let mut width = 0usize;
+                let mut k = 0usize;
+                for p in bucket.q.iter() {
+                    if k > 0 && width + p.nrhs > cap {
+                        break;
+                    }
+                    width += p.nrhs;
+                    k += 1;
+                }
+                Some((bucket.a.clone(), bucket.q.drain(..k).collect::<Vec<_>>()))
+            } else {
+                None
+            };
+            if pend.get(&fp).is_some_and(|b| b.q.is_empty()) {
+                pend.remove(&fp);
+            }
+            drained
+        }) else {
+            return;
+        };
+        if taken.is_empty() {
+            return;
+        }
+        let k = taken.len();
+        let n = a.nrows();
+        let total: usize = taken.iter().map(|p| p.nrhs).sum();
+        let run = || -> Result<(Vec<DenseMat<f64>>, Vec<batch::GroupStats>, bool)> {
+            let (op, hit) = self.cache.get_or_assemble_keyed(fp, &a, nthreads)?;
+            let mut op = op.lock().unwrap();
+            op.set_nthreads(nthreads);
+            let bs: Vec<DenseMat<f64>> = taken
+                .iter()
+                .map(|p| DenseMat::<f64>::random(n, p.nrhs, Layout::RowMajor, p.seed))
+                .collect();
+            let mut xs: Vec<DenseMat<f64>> = taken
+                .iter()
+                .map(|p| DenseMat::<f64>::zeros(n, p.nrhs, Layout::RowMajor))
+                .collect();
+            let tols: Vec<f64> = taken.iter().map(|p| p.tol).collect();
+            let iters: Vec<usize> = taken.iter().map(|p| p.max_iters).collect();
+            let stats = batch_block_cg(&mut *op, &bs, &mut xs, &tols, &iters)?;
+            Ok((xs, stats, hit))
+        };
+        match run() {
+            Ok((xs, stats, hit)) => {
+                if k >= 2 {
+                    let mut c = self.inner.counters.lock().unwrap();
+                    c.block_batches += 1;
+                    c.block_batched_jobs += k as u64;
+                    // the widest coalesced stream covers fused BlockCg
+                    // bundles too (total = sum of the fused widths)
+                    c.max_batch_width = c.max_batch_width.max(total);
+                }
+                let now = Instant::now();
+                for ((mut s, job), x) in stats.into_iter().zip(taken).zip(xs) {
+                    let res = match s.error.take() {
+                        Some(e) => Err(e),
+                        None => Ok(JobReport {
+                            id: job.state.id,
+                            output: JobOutput::Solve {
+                                x: (0..job.nrhs)
+                                    .map(|j| (0..n).map(|i| x.at(i, j)).collect())
+                                    .collect(),
+                                iterations: s.iterations,
+                                final_residual: s.final_residual,
+                                converged: s.converged,
+                            },
+                            nnz: a.nnz(),
+                            matvecs: s.iterations + 1,
+                            batched_width: total,
+                            cache_hit: hit,
+                            deadline_missed: job.deadline.map(|d| now > d),
+                            elapsed: now.duration_since(job.submitted_at),
+                            completed_at: now,
+                        }),
+                    };
+                    self.complete(&job.state, res);
+                }
+            }
+            Err(e) => {
+                let msg = e.to_string();
+                for job in taken {
+                    self.complete(
+                        &job.state,
+                        Err(GhostError::Task(format!(
+                            "batched block solve failed: {msg}"
+                        ))),
+                    );
+                }
+            }
+        }
+    }
+
     /// Direct (non-batched) job body.
     fn run_direct(&self, a: &Crs<f64>, job: DirectJob, nthreads: usize) -> Result<JobReport> {
         let DirectJob {
@@ -808,6 +1128,7 @@ impl JobScheduler {
             rhs,
             seed,
             id,
+            deadline,
             submitted_at,
             key,
         } = job;
@@ -913,8 +1234,183 @@ impl JobScheduler {
             matvecs: op.matvecs() - mv0,
             batched_width,
             cache_hit,
+            deadline_missed: deadline.map(|d| now > d),
             elapsed: now.duration_since(submitted_at),
             completed_at: now,
         })
     }
+
+    // -----------------------------------------------------------------
+    // parked-bucket stealing (driven by the shard fabric)
+    // -----------------------------------------------------------------
+
+    /// Extract the deepest parked batch bucket — CG or BlockCg,
+    /// whichever holds more parked jobs — as self-contained
+    /// [`JobSpec`]s so it can travel across the shard fabric and
+    /// re-coalesce on a lighter node. The drained entries are
+    /// atomically invisible to this scheduler's runners (which find an
+    /// empty bucket and return); the caller must then
+    /// [`JobScheduler::resolve_stolen`] the returned jobs so their
+    /// local waiters resolve. Returns an empty vec when nothing is
+    /// parked.
+    ///
+    /// Deadlines travel as *remaining* milliseconds (the envelope codec
+    /// has no absolute clock): the target re-bases them at resubmit, so
+    /// a migrated deadline stretches by the migration transit and the
+    /// reported `elapsed` restarts — the same approximation every
+    /// fabric-routed job already lives with.
+    pub(crate) fn take_parked_bucket(&self) -> Vec<StolenJob> {
+        // pick the deeper of the two deepest buckets (CG vs BlockCg);
+        // peeking the depths and draining are separate lock scopes, so
+        // re-check emptiness on the drain
+        let cg_depth = {
+            let pend = self.inner.pending.lock().unwrap();
+            pend.values().map(|b| b.q.len()).max().unwrap_or(0)
+        };
+        let block_depth = {
+            let pend = self.inner.pending_block.lock().unwrap();
+            pend.values().map(|b| b.q.len()).max().unwrap_or(0)
+        };
+        if cg_depth == 0 && block_depth == 0 {
+            return Vec::new();
+        }
+        if cg_depth >= block_depth {
+            let taken = self.take_cg_bucket();
+            if !taken.is_empty() {
+                return taken;
+            }
+            self.take_block_bucket()
+        } else {
+            let taken = self.take_block_bucket();
+            if !taken.is_empty() {
+                return taken;
+            }
+            self.take_cg_bucket()
+        }
+    }
+
+    fn take_cg_bucket(&self) -> Vec<StolenJob> {
+        let now = Instant::now();
+        let drained = {
+            let mut pend = self.inner.pending.lock().unwrap();
+            let deepest = pend
+                .iter()
+                .max_by_key(|(_, b)| b.q.len())
+                .map(|(k, _)| *k);
+            deepest
+                .filter(|k| !pend[k].q.is_empty())
+                .and_then(|k| pend.remove(&k).map(|b| (k, b)))
+        };
+        let Some((key, bucket)) = drained else {
+            return Vec::new();
+        };
+        let a = bucket.a;
+        bucket
+            .q
+            .into_iter()
+            .map(|p| {
+                let mut spec = JobSpec::new(
+                    MatrixSource::Mat(a.clone()),
+                    SolverKind::Cg {
+                        tol: p.tol,
+                        max_iters: p.max_iters,
+                    },
+                )
+                .with_matrix_key(key);
+                spec.priority = p.prio;
+                spec.nthreads = p.nthreads;
+                spec.numanode = p.numanode;
+                spec.rhs = Some(p.b);
+                spec.deadline_ms = remaining_deadline_ms(p.deadline, now);
+                spec.migrated = true;
+                StolenJob {
+                    state: p.state,
+                    spec,
+                }
+            })
+            .collect()
+    }
+
+    fn take_block_bucket(&self) -> Vec<StolenJob> {
+        let now = Instant::now();
+        let drained = {
+            let mut pend = self.inner.pending_block.lock().unwrap();
+            let deepest = pend
+                .iter()
+                .max_by_key(|(_, b)| b.q.len())
+                .map(|(k, _)| *k);
+            deepest
+                .filter(|k| !pend[k].q.is_empty())
+                .and_then(|k| pend.remove(&k).map(|b| (k, b)))
+        };
+        let Some((key, bucket)) = drained else {
+            return Vec::new();
+        };
+        let a = bucket.a;
+        bucket
+            .q
+            .into_iter()
+            .map(|p| {
+                let mut spec = JobSpec::new(
+                    MatrixSource::Mat(a.clone()),
+                    SolverKind::BlockCg {
+                        nrhs: p.nrhs,
+                        tol: p.tol,
+                        max_iters: p.max_iters,
+                    },
+                )
+                .with_matrix_key(key);
+                spec.priority = p.prio;
+                spec.nthreads = p.nthreads;
+                spec.numanode = p.numanode;
+                spec.seed = p.seed;
+                spec.deadline_ms = remaining_deadline_ms(p.deadline, now);
+                spec.migrated = true;
+                StolenJob {
+                    state: p.state,
+                    spec,
+                }
+            })
+            .collect()
+    }
+
+    /// Resolve the local states of a stolen bucket: each migrated job's
+    /// local handle is fulfilled with the migration sentinel (its
+    /// fabric waiter skips answering — the job's *real* result comes
+    /// from the node the bucket moved to) and the steal counters are
+    /// charged. Must be called after the caller has recorded which jobs
+    /// migrated, so no waiter races the bookkeeping.
+    pub(crate) fn resolve_stolen(&self, jobs: Vec<StolenJob>) {
+        if jobs.is_empty() {
+            return;
+        }
+        {
+            let mut c = self.inner.counters.lock().unwrap();
+            c.stolen_buckets += 1;
+            c.stolen_jobs += jobs.len() as u64;
+        }
+        for j in jobs {
+            j.state.fulfill(Err(GhostError::Task(STOLEN_SENTINEL.into())));
+            self.inner.jobs.lock().unwrap().remove(&j.state.id);
+        }
+    }
+}
+
+/// Remaining milliseconds until `deadline`, measured at `now` (how a
+/// deadline travels in a stolen bucket — the codec has no absolute
+/// clock).
+fn remaining_deadline_ms(deadline: Option<Instant>, now: Instant) -> Option<u64> {
+    deadline.map(|d| d.saturating_duration_since(now).as_millis() as u64)
+}
+
+/// Sentinel error text installed in a migrated job's *local* state
+/// (never surfaces to the client — the front-end resolves the job with
+/// the result from the node the bucket moved to).
+pub(crate) const STOLEN_SENTINEL: &str = "job migrated by parked-bucket steal";
+
+/// A parked job extracted for migration: the rebuilt self-contained
+/// spec plus the local state its fabric waiter is parked on.
+pub(crate) struct StolenJob {
+    pub(crate) state: Arc<JobState>,
+    pub(crate) spec: JobSpec,
 }

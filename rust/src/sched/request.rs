@@ -9,7 +9,13 @@
 //! {"id":3,"solver":"lanczos","matrix":"anderson","n":400,"steps":30}
 //! {"id":4,"solver":"kpm","matrix":"hamiltonian","n":1024,"moments":64,"vectors":4}
 //! {"id":5,"solver":"cheb_filter","matrix":"poisson7","n":1000,"degree":16,"block":4}
+//! {"id":6,"solver":"cg","matrix":"poisson7","n":4096,"tol":1e-8,"deadline_ms":250}
 //! ```
+//!
+//! `deadline_ms` puts the job on the scheduler's EDF lane and reports
+//! `"deadline_missed"` in the response; the serve loops can also stamp
+//! a default deadline on every request that lacks one (`ghost serve
+//! --deadline-ms`).
 //!
 //! `id` is the client's correlation label (echoed in the response line;
 //! the scheduler id is used when absent). Blank lines and lines starting
@@ -92,6 +98,7 @@ pub fn parse_request(line: &str) -> Result<Option<Request>> {
     spec.nthreads = num(line, "nthreads").unwrap_or(1);
     spec.numanode = num(line, "numanode");
     spec.seed = num(line, "seed").unwrap_or(0);
+    spec.deadline_ms = num(line, "deadline_ms");
     Ok(Some(Request {
         client_id: num(line, "id"),
         spec,
@@ -158,9 +165,13 @@ pub fn response_line(label: u64, solver: &str, res: &Result<JobReport>) -> Strin
                     eigenvalues.len()
                 ),
             };
+            let deadline = match r.deadline_missed {
+                Some(missed) => format!(",\"deadline_missed\":{missed}"),
+                None => String::new(),
+            };
             format!(
                 "{{\"id\":{label},\"ok\":true,\"solver\":\"{solver}\",{detail},\
-                 \"batched\":{},\"cache_hit\":{},\"ms\":{:.3}}}",
+                 \"batched\":{},\"cache_hit\":{}{deadline},\"ms\":{:.3}}}",
                 r.batched_width,
                 r.cache_hit,
                 r.elapsed.as_secs_f64() * 1e3
@@ -195,11 +206,17 @@ fn submit_line(
     sched: &dyn SolveService,
     line: &str,
     lineno: usize,
+    default_deadline_ms: Option<u64>,
     out: &mut dyn Write,
 ) -> Result<Option<Inflight>> {
     match parse_request(line) {
         Ok(None) => Ok(None),
-        Ok(Some(req)) => {
+        Ok(Some(mut req)) => {
+            // the serve-level default applies only to requests that do
+            // not set their own deadline
+            if req.spec.deadline_ms.is_none() {
+                req.spec.deadline_ms = default_deadline_ms;
+            }
             let solver = req.spec.solver.name();
             match sched.submit(req.spec) {
                 Ok(handle) => Ok(Some(Inflight {
@@ -233,9 +250,12 @@ fn submit_line(
 /// caching can bite across them), wait for all, write one response line
 /// per request, and return the throughput summary. Drives any
 /// [`SolveService`] — the single-node scheduler or the sharded one.
+/// `default_deadline_ms` stamps a deadline on every request that does
+/// not carry its own (`None` leaves requests as written).
 pub fn serve_oneshot(
     sched: &dyn SolveService,
     path: &Path,
+    default_deadline_ms: Option<u64>,
     out: &mut dyn Write,
 ) -> Result<ServeSummary> {
     let text = std::fs::read_to_string(path)?;
@@ -243,7 +263,7 @@ pub fn serve_oneshot(
     let mut inflight = Vec::new();
     let mut failed = 0usize;
     for (lineno, line) in text.lines().enumerate() {
-        match submit_line(sched, line, lineno + 1, out)? {
+        match submit_line(sched, line, lineno + 1, default_deadline_ms, out)? {
             Some(f) => inflight.push(f),
             None => {
                 if !line.trim().is_empty() && !line.trim().starts_with('#') {
@@ -317,6 +337,7 @@ pub fn serve_follow(
     sched: &dyn SolveService,
     path: &Path,
     poll: Duration,
+    default_deadline_ms: Option<u64>,
     out: &mut dyn Write,
 ) -> Result<()> {
     let mut offset = 0u64;
@@ -325,7 +346,7 @@ pub fn serve_follow(
     loop {
         for line in read_fresh_lines(path, &mut offset) {
             lineno += 1;
-            if let Some(f) = submit_line(sched, &line, lineno, out)? {
+            if let Some(f) = submit_line(sched, &line, lineno, default_deadline_ms, out)? {
                 inflight.push(f);
             }
         }
@@ -373,6 +394,13 @@ mod tests {
             .unwrap();
         assert!(r.client_id.is_none());
         assert!(matches!(r.spec.solver, SolverKind::Lanczos { steps: 12 }));
+        assert!(r.spec.deadline_ms.is_none());
+        let r = parse_request(
+            "{\"id\":8,\"solver\":\"cg\",\"matrix\":\"poisson7\",\"n\":216,\"deadline_ms\":250}",
+        )
+        .unwrap()
+        .unwrap();
+        assert_eq!(r.spec.deadline_ms, Some(250));
         assert!(parse_request("").unwrap().is_none());
         assert!(parse_request("# a comment").unwrap().is_none());
         assert!(parse_request("{\"matrix\":\"poisson7\"}").is_err());
@@ -404,6 +432,35 @@ mod tests {
         std::fs::write(&path, "x\n").unwrap();
         assert_eq!(read_fresh_lines(&path, &mut offset), ["x"]);
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn response_lines_report_deadline_outcomes() {
+        let mk = |deadline_missed| {
+            Ok(JobReport {
+                id: 1,
+                output: JobOutput::Solve {
+                    x: vec![vec![1.0]],
+                    iterations: 3,
+                    final_residual: 1e-9,
+                    converged: true,
+                },
+                nnz: 10,
+                matvecs: 4,
+                batched_width: 1,
+                cache_hit: false,
+                deadline_missed,
+                elapsed: std::time::Duration::from_millis(2),
+                completed_at: std::time::Instant::now(),
+            })
+        };
+        // no deadline: the field is absent entirely
+        let line = response_line(1, "cg", &mk(None));
+        assert!(!line.contains("deadline_missed"), "{line}");
+        let line = response_line(1, "cg", &mk(Some(false)));
+        assert!(line.contains("\"deadline_missed\":false"), "{line}");
+        let line = response_line(1, "cg", &mk(Some(true)));
+        assert!(line.contains("\"deadline_missed\":true"), "{line}");
     }
 
     #[test]

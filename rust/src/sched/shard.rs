@@ -43,8 +43,24 @@
 //! and, when the client attached a [`MatrixKey`] to the spec (see
 //! [`JobSpec::matrix_key`]), never digests a caller-assembled one —
 //! only the O(nrows) structural fingerprint check runs per submit.
+//!
+//! **Parked-bucket stealing** (work conservation beyond new arrivals):
+//! a new-arrival handoff helps the job being routed, but the jobs
+//! *already parked* in the overloaded node's batch buckets would still
+//! wait out the backlog. When an affinity handoff fires, the front also
+//! sends the home node a bucket-steal request; the node atomically
+//! extracts its deepest parked bucket (its runners then find the bucket
+//! empty and return) and ships it back as a batch of self-contained
+//! request envelopes (`K_YIELD`). The front re-routes the whole batch
+//! to the least-loaded node in one `K_BATCH` envelope, where the jobs
+//! re-park on the same matrix key and re-coalesce. Each migrated job's
+//! right-hand side travels bitwise (or regenerates from its seed), so
+//! the demultiplexed results are bitwise identical to a no-stealing
+//! run — stealing is pure scheduling, invisible in the numbers.
+//! [`SchedStats::stolen_buckets`]/[`SchedStats::stolen_jobs`] count the
+//! migrations on the yielding node.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::time::{Duration, Instant};
@@ -173,6 +189,14 @@ const K_SUBMIT: u8 = 1;
 const K_SHUTDOWN: u8 = 2;
 const K_RESULT: u8 = 3;
 const K_ACK: u8 = 4;
+/// Front → node: yield your deepest parked batch bucket.
+const K_STEAL: u8 = 5;
+/// Node → front: the stolen bucket as (job id, spec) request pairs,
+/// plus a node-stats snapshot (empty pair list = nothing was parked).
+const K_YIELD: u8 = 6;
+/// Front → node: a re-routed stolen bucket — submitted as one batch so
+/// the jobs re-park together and re-coalesce.
+const K_BATCH: u8 = 7;
 
 fn put_fingerprint(w: &mut ByteWriter, fp: &Fingerprint) {
     w.put_str(fp.dtype);
@@ -276,6 +300,8 @@ fn put_spec(w: &mut ByteWriter, spec: &JobSpec) {
         }
         None => w.put_bool(false),
     }
+    w.put_opt_u64(spec.deadline_ms);
+    w.put_bool(spec.migrated);
 }
 
 fn get_spec(r: &mut ByteReader) -> Result<JobSpec> {
@@ -346,6 +372,8 @@ fn get_spec(r: &mut ByteReader) -> Result<JobSpec> {
     } else {
         None
     };
+    let deadline_ms = r.get_opt_u64()?;
+    let migrated = r.get_bool()?;
     Ok(JobSpec {
         matrix,
         solver,
@@ -355,6 +383,8 @@ fn get_spec(r: &mut ByteReader) -> Result<JobSpec> {
         seed,
         rhs,
         matrix_key,
+        deadline_ms,
+        migrated,
     })
 }
 
@@ -365,6 +395,12 @@ fn put_sched_stats(w: &mut ByteWriter, s: &SchedStats) {
     w.put_u64(s.batches);
     w.put_u64(s.batched_jobs);
     w.put_usize(s.max_batch_width);
+    w.put_u64(s.block_batches);
+    w.put_u64(s.block_batched_jobs);
+    w.put_u64(s.deadline_jobs);
+    w.put_u64(s.deadline_missed);
+    w.put_u64(s.stolen_buckets);
+    w.put_u64(s.stolen_jobs);
     w.put_u64(s.cache.hits);
     w.put_u64(s.cache.misses);
     w.put_u64(s.cache.evictions);
@@ -382,6 +418,12 @@ fn get_sched_stats(r: &mut ByteReader) -> Result<SchedStats> {
         batches: r.get_u64()?,
         batched_jobs: r.get_u64()?,
         max_batch_width: r.get_usize()?,
+        block_batches: r.get_u64()?,
+        block_batched_jobs: r.get_u64()?,
+        deadline_jobs: r.get_u64()?,
+        deadline_missed: r.get_u64()?,
+        stolen_buckets: r.get_u64()?,
+        stolen_jobs: r.get_u64()?,
         cache: CacheStats {
             hits: r.get_u64()?,
             misses: r.get_u64()?,
@@ -488,6 +530,11 @@ fn encode_result(job_id: u64, res: &Result<JobReport>, stats: &SchedStats) -> Ve
             w.put_usize(rep.matvecs);
             w.put_usize(rep.batched_width);
             w.put_bool(rep.cache_hit);
+            w.put_u8(match rep.deadline_missed {
+                None => 0,
+                Some(false) => 1,
+                Some(true) => 2,
+            });
             w.put_f64(rep.elapsed.as_secs_f64());
         }
         Err(e) => {
@@ -508,6 +555,16 @@ fn decode_result(payload: &[u8]) -> Result<(u64, Result<JobReport>, SchedStats)>
         let matvecs = r.get_usize()?;
         let batched_width = r.get_usize()?;
         let cache_hit = r.get_bool()?;
+        let deadline_missed = match r.get_u8()? {
+            0 => None,
+            1 => Some(false),
+            2 => Some(true),
+            k => {
+                return Err(GhostError::Parse(format!(
+                    "unknown deadline-missed tag {k} in envelope"
+                )))
+            }
+        };
         let elapsed = Duration::from_secs_f64(r.get_f64()?.max(0.0));
         Ok(JobReport {
             id: job_id,
@@ -516,6 +573,7 @@ fn decode_result(payload: &[u8]) -> Result<(u64, Result<JobReport>, SchedStats)>
             matvecs,
             batched_width,
             cache_hit,
+            deadline_missed,
             elapsed,
             completed_at: Instant::now(),
         })
@@ -540,6 +598,63 @@ fn decode_ack(payload: &[u8]) -> Result<(usize, SchedStats)> {
     let stats = get_sched_stats(&mut r)?;
     r.finish()?;
     Ok((cancelled, stats))
+}
+
+fn encode_steal() -> Vec<u8> {
+    Envelope::new(K_STEAL, Vec::new()).encode()
+}
+
+/// (front job id, rebuilt spec) pairs shared by the yield and batch
+/// payloads — a stolen bucket travels as a batch of request envelopes.
+fn put_job_batch(w: &mut ByteWriter, jobs: &[(u64, JobSpec)]) {
+    w.put_usize(jobs.len());
+    for (id, spec) in jobs {
+        w.put_u64(*id);
+        put_spec(w, spec);
+    }
+}
+
+fn get_job_batch(r: &mut ByteReader) -> Result<Vec<(u64, JobSpec)>> {
+    let k = r.get_usize()?;
+    crate::ensure!(
+        k <= 1 << 20,
+        Parse,
+        "job batch of {k} entries exceeds any plausible bucket"
+    );
+    let mut jobs = Vec::with_capacity(k.min(1024));
+    for _ in 0..k {
+        let id = r.get_u64()?;
+        jobs.push((id, get_spec(r)?));
+    }
+    Ok(jobs)
+}
+
+fn encode_yield(jobs: &[(u64, JobSpec)], stats: &SchedStats) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    put_job_batch(&mut w, jobs);
+    put_sched_stats(&mut w, stats);
+    Envelope::new(K_YIELD, w.into_bytes()).encode()
+}
+
+fn decode_yield(payload: &[u8]) -> Result<(Vec<(u64, JobSpec)>, SchedStats)> {
+    let mut r = ByteReader::new(payload);
+    let jobs = get_job_batch(&mut r)?;
+    let stats = get_sched_stats(&mut r)?;
+    r.finish()?;
+    Ok((jobs, stats))
+}
+
+fn encode_batch(jobs: &[(u64, JobSpec)]) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    put_job_batch(&mut w, jobs);
+    Envelope::new(K_BATCH, w.into_bytes()).encode()
+}
+
+fn decode_batch(payload: &[u8]) -> Result<Vec<(u64, JobSpec)>> {
+    let mut r = ByteReader::new(payload);
+    let jobs = get_job_batch(&mut r)?;
+    r.finish()?;
+    Ok(jobs)
 }
 
 // ---------------------------------------------------------------------------
@@ -591,15 +706,22 @@ struct Front {
     /// Affinity table: route key → home node (bounded; see `route`).
     table: Mutex<HashMap<u64, usize>>,
     loads: Mutex<Vec<NodeStats>>,
+    /// One in-flight bucket-steal request per node (locked after
+    /// `loads` wherever both are held).
+    steal_inflight: Mutex<Vec<bool>>,
     counters: Mutex<FrontCounters>,
+    /// Write-locked by shutdown so no submit — and no stolen-bucket
+    /// re-route — can slip an envelope into a request FIFO after the
+    /// shutdown envelope.
+    gate: RwLock<bool>,
     /// Sum of node-reported shutdown cancellations.
     ack_cancelled: AtomicU64,
 }
 
 impl Front {
     /// Pick a node for `rkey` and charge the load account. Returns
-    /// (node, was-a-handoff).
-    fn route(&self, rkey: u64) -> (usize, bool) {
+    /// (node, was-a-handoff, steal-parked-bucket-from).
+    fn route(&self, rkey: u64) -> (usize, bool, Option<usize>) {
         let mut loads = self.loads.lock().unwrap();
         let argmin = |loads: &[NodeStats]| -> usize {
             loads
@@ -609,9 +731,9 @@ impl Front {
                 .map(|(i, _)| i)
                 .unwrap_or(0)
         };
-        let (node, handoff) = match self.policy {
-            RoutePolicy::Hash => ((rkey % self.nodes as u64) as usize, false),
-            RoutePolicy::Load => (argmin(&loads), false),
+        let (node, handoff, steal_from) = match self.policy {
+            RoutePolicy::Hash => ((rkey % self.nodes as u64) as usize, false, None),
+            RoutePolicy::Load => (argmin(&loads), false, None),
             RoutePolicy::Affinity => {
                 let mut table = self.table.lock().unwrap();
                 // bound the table for long-lived services: dropping it
@@ -626,11 +748,25 @@ impl Front {
                 };
                 match table.get(&rkey).copied() {
                     // sticky: the warm cache lives on the home node
-                    Some(home) if !overloaded(home) => (home, false),
+                    Some(home) if !overloaded(home) => (home, false, None),
                     // work-stealing handoff: one-off — the table keeps
                     // the home node so the warm cache stays the target
-                    // once the backlog clears
-                    Some(_) => (alt, true),
+                    // once the backlog clears. The handoff only helps
+                    // THIS job; the home's already-parked buckets are
+                    // the rest of the backlog, so ask it to yield one
+                    // (at most one steal in flight per node).
+                    Some(home) => {
+                        let steal = {
+                            let mut infl = self.steal_inflight.lock().unwrap();
+                            if infl[home] {
+                                None
+                            } else {
+                                infl[home] = true;
+                                Some(home)
+                            }
+                        };
+                        (alt, true, steal)
+                    }
                     // first sighting: hash-based fallback placement,
                     // diverted to the least-loaded node when the hash
                     // home is already backed up — and the divert
@@ -640,7 +776,7 @@ impl Front {
                         let hash_home = (rkey % self.nodes as u64) as usize;
                         let home = if overloaded(hash_home) { alt } else { hash_home };
                         table.insert(rkey, home);
-                        (home, false)
+                        (home, false, None)
                     }
                 }
             }
@@ -652,7 +788,49 @@ impl Front {
         }
         l.outstanding += 1;
         l.peak_outstanding = l.peak_outstanding.max(l.outstanding);
-        (node, handoff)
+        (node, handoff, steal_from)
+    }
+
+    /// Re-route a yielded bucket to the least-loaded node (≠ source) as
+    /// one batch envelope, or fail the migrated jobs if the fabric is
+    /// shutting down. Runs on the source node's collector thread; the
+    /// gate read-lock is held across the send so the shutdown envelope
+    /// can never overtake the batch in the target's FIFO.
+    fn reroute_stolen(&self, src: usize, jobs: Vec<(u64, JobSpec)>, comm: &Comm) {
+        let gate = self.gate.read().unwrap();
+        if *gate {
+            for (id, _) in jobs {
+                self.complete(
+                    src,
+                    id,
+                    Err(GhostError::Task(
+                        "job cancelled by sharded-service shutdown during bucket \
+                         migration"
+                            .into(),
+                    )),
+                );
+            }
+            return;
+        }
+        let target = {
+            let mut loads = self.loads.lock().unwrap();
+            let target = loads
+                .iter()
+                .enumerate()
+                .filter(|&(i, _)| i != src)
+                .min_by_key(|&(_, l)| l.outstanding)
+                .map(|(i, _)| i)
+                .unwrap_or(src);
+            let k = jobs.len();
+            loads[src].outstanding = loads[src].outstanding.saturating_sub(k);
+            let l = &mut loads[target];
+            l.outstanding += k;
+            l.handoffs += k as u64;
+            l.peak_outstanding = l.peak_outstanding.max(l.outstanding);
+            target
+        };
+        let _ = comm.send_bytes(target + 1, TAG_REQ, encode_batch(&jobs));
+        drop(gate);
     }
 
     /// Merge a node-stats snapshot (monotone counters keep their max —
@@ -668,6 +846,12 @@ impl Front {
         t.batches = t.batches.max(s.batches);
         t.batched_jobs = t.batched_jobs.max(s.batched_jobs);
         t.max_batch_width = t.max_batch_width.max(s.max_batch_width);
+        t.block_batches = t.block_batches.max(s.block_batches);
+        t.block_batched_jobs = t.block_batched_jobs.max(s.block_batched_jobs);
+        t.deadline_jobs = t.deadline_jobs.max(s.deadline_jobs);
+        t.deadline_missed = t.deadline_missed.max(s.deadline_missed);
+        t.stolen_buckets = t.stolen_buckets.max(s.stolen_buckets);
+        t.stolen_jobs = t.stolen_jobs.max(s.stolen_jobs);
         t.cache.hits = t.cache.hits.max(s.cache.hits);
         t.cache.misses = t.cache.misses.max(s.cache.misses);
         t.cache.evictions = t.cache.evictions.max(s.cache.evictions);
@@ -708,9 +892,6 @@ impl Front {
 pub struct ShardedScheduler {
     comm0: Comm,
     front: Arc<Front>,
-    /// Write-locked by shutdown so no submit can slip an envelope into
-    /// the request FIFO after the shutdown envelope.
-    gate: RwLock<bool>,
     threads: Mutex<Vec<std::thread::JoinHandle<()>>>,
 }
 
@@ -727,7 +908,9 @@ impl ShardedScheduler {
             idle: Condvar::new(),
             table: Mutex::new(HashMap::new()),
             loads: Mutex::new(vec![NodeStats::default(); cfg.nodes]),
+            steal_inflight: Mutex::new(vec![false; cfg.nodes]),
             counters: Mutex::new(FrontCounters::default()),
+            gate: RwLock::new(false),
             ack_cancelled: AtomicU64::new(0),
         });
         let mut threads = Vec::with_capacity(2 * cfg.nodes);
@@ -753,7 +936,6 @@ impl ShardedScheduler {
         Ok(ShardedScheduler {
             comm0: world.rank(0),
             front,
-            gate: RwLock::new(false),
             threads: Mutex::new(threads),
         })
     }
@@ -794,12 +976,12 @@ impl ShardedScheduler {
 
     /// Route a job to a node and ship it over the fabric.
     pub fn submit(&self, mut spec: JobSpec) -> Result<JobHandle> {
-        let gate = self.gate.read().unwrap();
+        let gate = self.front.gate.read().unwrap();
         crate::ensure!(!*gate, Task, "sharded service is shut down");
         let (rkey, key) = self.route_key(&spec)?;
         // the node must not re-digest what the front already identified
         spec.matrix_key = key;
-        let (node, _handoff) = self.front.route(rkey);
+        let (node, _handoff, steal_from) = self.front.route(rkey);
         let id = self.front.next_id.fetch_add(1, Ordering::SeqCst) + 1;
         let state = JobState::new(id);
         self.front.jobs.lock().unwrap().insert(id, state.clone());
@@ -813,6 +995,13 @@ impl ShardedScheduler {
                 id,
                 Err(GhostError::Comm(format!("request envelope not sent: {e}"))),
             );
+        }
+        if let Some(src) = steal_from {
+            // the routed job was handed off because `src` is backed up;
+            // ask it to also yield a parked bucket so the backlog
+            // itself migrates (the yield flows back on src's result
+            // stream and is re-routed by its collector)
+            let _ = self.comm0.send_bytes(src + 1, TAG_REQ, encode_steal());
         }
         drop(gate);
         Ok(JobHandle { state })
@@ -842,6 +1031,12 @@ impl ShardedScheduler {
             s.batches += l.sched.batches;
             s.batched_jobs += l.sched.batched_jobs;
             s.max_batch_width = s.max_batch_width.max(l.sched.max_batch_width);
+            s.block_batches += l.sched.block_batches;
+            s.block_batched_jobs += l.sched.block_batched_jobs;
+            s.deadline_jobs += l.sched.deadline_jobs;
+            s.deadline_missed += l.sched.deadline_missed;
+            s.stolen_buckets += l.sched.stolen_buckets;
+            s.stolen_jobs += l.sched.stolen_jobs;
             s.cache.hits += l.sched.cache.hits;
             s.cache.misses += l.sched.cache.misses;
             s.cache.evictions += l.sched.cache.evictions;
@@ -870,7 +1065,7 @@ impl ShardedScheduler {
     /// shutdown. Idempotent.
     pub fn shutdown(&self) -> usize {
         {
-            let mut gate = self.gate.write().unwrap();
+            let mut gate = self.front.gate.write().unwrap();
             if *gate {
                 return 0;
             }
@@ -931,7 +1126,10 @@ impl SolveService for ShardedScheduler {
     }
 }
 
-/// Front-end thread collecting result envelopes from one node.
+/// Front-end thread collecting result envelopes from one node. Also
+/// handles the node's bucket yields: a yielded batch is re-routed to
+/// the least-loaded node from right here (this thread owns no locks the
+/// shutdown path waits on across a blocking call).
 fn collector(comm: Comm, front: Arc<Front>, node: usize) {
     loop {
         let Ok(bytes) = comm.recv_bytes(node + 1, TAG_RES) else {
@@ -948,6 +1146,16 @@ fn collector(comm: Comm, front: Arc<Front>, node: usize) {
                 }
                 Err(_) => continue,
             },
+            K_YIELD => {
+                let Ok((jobs, stats)) = decode_yield(&env.payload) else {
+                    continue;
+                };
+                front.note_node_stats(node, stats);
+                front.steal_inflight.lock().unwrap()[node] = false;
+                if !jobs.is_empty() {
+                    front.reroute_stolen(node, jobs, &comm);
+                }
+            }
             K_ACK => {
                 if let Ok((cancelled, stats)) = decode_ack(&env.payload) {
                     front.note_node_stats(node, stats);
@@ -964,10 +1172,54 @@ fn collector(comm: Comm, front: Arc<Front>, node: usize) {
 
 /// One simulated node: a local [`JobScheduler`] fed by request
 /// envelopes; every completed job is answered with a result envelope
-/// carrying the front-end job id and a node-stats snapshot.
+/// carrying the front-end job id and a node-stats snapshot. Bookkeeping
+/// for the steal protocol: `locals` maps local scheduler ids to
+/// front-end ids (so a yielded bucket can name its jobs on the wire)
+/// and `stolen` marks front-end ids whose local handles were resolved
+/// by a migration — their waiters skip answering, because the node the
+/// bucket moved to owns the real result.
 fn node_service(comm: Comm, cfg: SchedConfig, pus: usize) {
     let sched = JobScheduler::new(Machine::small_node(pus), cfg);
     let mut waiters: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    let locals: Arc<Mutex<HashMap<u64, u64>>> = Arc::new(Mutex::new(HashMap::new()));
+    let stolen: Arc<Mutex<HashSet<u64>>> = Arc::new(Mutex::new(HashSet::new()));
+    let accept = |job_id: u64,
+                  spec_res: Result<JobSpec>,
+                  waiters: &mut Vec<std::thread::JoinHandle<()>>| {
+        let submitted = spec_res.and_then(|spec| sched.submit(spec));
+        match submitted {
+            Ok(handle) => {
+                locals.lock().unwrap().insert(handle.id(), job_id);
+                let c = comm.clone();
+                let s = sched.clone();
+                let locals = locals.clone();
+                let stolen = stolen.clone();
+                let local_id = handle.id();
+                let w = std::thread::Builder::new()
+                    .name("ghost-shard-waiter".into())
+                    .spawn(move || {
+                        let res = handle.wait();
+                        locals.lock().unwrap().remove(&local_id);
+                        if stolen.lock().unwrap().remove(&job_id) {
+                            // the job migrated in a stolen bucket; the
+                            // new node answers it
+                            return;
+                        }
+                        let env = encode_result(job_id, &res, &s.stats());
+                        let _ = c.send_bytes(0, TAG_RES, env);
+                    })
+                    .expect("spawn shard waiter");
+                waiters.push(w);
+            }
+            Err(e) => {
+                let _ = comm.send_bytes(
+                    0,
+                    TAG_RES,
+                    encode_result(job_id, &Err(e), &sched.stats()),
+                );
+            }
+        }
+    };
     loop {
         let Ok(bytes) = comm.recv_bytes(0, TAG_REQ) else {
             break;
@@ -979,31 +1231,8 @@ fn node_service(comm: Comm, cfg: SchedConfig, pus: usize) {
             K_SUBMIT => {
                 let mut r = ByteReader::new(&env.payload);
                 let Ok(job_id) = r.get_u64() else { continue };
-                let submitted = get_spec(&mut r)
-                    .and_then(|spec| r.finish().map(|_| spec))
-                    .and_then(|spec| sched.submit(spec));
-                match submitted {
-                    Ok(handle) => {
-                        let c = comm.clone();
-                        let s = sched.clone();
-                        let w = std::thread::Builder::new()
-                            .name("ghost-shard-waiter".into())
-                            .spawn(move || {
-                                let res = handle.wait();
-                                let env = encode_result(job_id, &res, &s.stats());
-                                let _ = c.send_bytes(0, TAG_RES, env);
-                            })
-                            .expect("spawn shard waiter");
-                        waiters.push(w);
-                    }
-                    Err(e) => {
-                        let _ = comm.send_bytes(
-                            0,
-                            TAG_RES,
-                            encode_result(job_id, &Err(e), &sched.stats()),
-                        );
-                    }
-                }
+                let spec = get_spec(&mut r).and_then(|spec| r.finish().map(|_| spec));
+                accept(job_id, spec, &mut waiters);
                 // reap finished waiters so a long-lived node does not
                 // accumulate join handles
                 let (done, live): (Vec<_>, Vec<_>) =
@@ -1012,6 +1241,40 @@ fn node_service(comm: Comm, cfg: SchedConfig, pus: usize) {
                     let _ = h.join();
                 }
                 waiters = live;
+            }
+            K_BATCH => {
+                // a stolen bucket re-routed here: submit back to back so
+                // the jobs re-park on their shared matrix key and the
+                // first runner re-coalesces them
+                if let Ok(jobs) = decode_batch(&env.payload) {
+                    for (job_id, spec) in jobs {
+                        accept(job_id, Ok(spec), &mut waiters);
+                    }
+                }
+            }
+            K_STEAL => {
+                // yield the deepest parked bucket: extract it (runners
+                // now find it empty), mark the migrating front ids
+                // BEFORE resolving the local states (so no waiter races
+                // the bookkeeping), then ship the batch back
+                let taken = sched.take_parked_bucket();
+                let batch: Vec<(u64, JobSpec)> = {
+                    let locals = locals.lock().unwrap();
+                    taken
+                        .iter()
+                        .filter_map(|j| {
+                            locals.get(&j.state.id).map(|&fid| (fid, j.spec.clone()))
+                        })
+                        .collect()
+                };
+                {
+                    let mut st = stolen.lock().unwrap();
+                    for (fid, _) in &batch {
+                        st.insert(*fid);
+                    }
+                }
+                sched.resolve_stolen(taken);
+                let _ = comm.send_bytes(0, TAG_RES, encode_yield(&batch, &sched.stats()));
             }
             K_SHUTDOWN => {
                 // cancel parked jobs; their waiters wake with the
@@ -1052,7 +1315,9 @@ mod tests {
                     })
                     .collect(),
             ),
+            steal_inflight: Mutex::new(vec![false; nodes]),
             counters: Mutex::new(FrontCounters::default()),
+            gate: RwLock::new(false),
             ack_cancelled: AtomicU64::new(0),
         }
     }
@@ -1060,9 +1325,10 @@ mod tests {
     #[test]
     fn load_routing_picks_the_least_loaded_node() {
         let f = front(RoutePolicy::Load, 4, vec![2, 0, 3, 1]);
-        let (node, handoff) = f.route(0xDEAD);
+        let (node, handoff, steal) = f.route(0xDEAD);
         assert_eq!(node, 1);
         assert!(!handoff);
+        assert!(steal.is_none(), "load routing never bucket-steals");
         // the account was charged
         let loads = f.loads.lock().unwrap();
         assert_eq!(loads[1].outstanding, 1);
@@ -1074,7 +1340,7 @@ mod tests {
     fn load_routing_never_picks_a_busy_node_over_an_idle_one() {
         let f = front(RoutePolicy::Load, 3, vec![2, 2, 0]);
         for _ in 0..2 {
-            let (node, _) = f.route(7);
+            let (node, _, _) = f.route(7);
             // node 2 starts idle: it must fill up to parity before any
             // node with >= 2 queued jobs receives more work
             assert_eq!(node, 2);
@@ -1087,27 +1353,45 @@ mod tests {
     fn affinity_routing_is_sticky_and_hands_off_under_overload() {
         let f = front(RoutePolicy::Affinity, 2, vec![0, 0]);
         let key = 42u64; // home = 42 % 2 = 0
-        let (n1, h1) = f.route(key);
-        let (n2, h2) = f.route(key);
-        assert_eq!((n1, h1), (0, false));
-        assert_eq!((n2, h2), (0, false), "same key must stay on its home node");
+        let (n1, h1, s1) = f.route(key);
+        let (n2, h2, s2) = f.route(key);
+        assert_eq!((n1, h1, s1), (0, false, None));
+        assert_eq!(
+            (n2, h2, s2),
+            (0, false, None),
+            "same key must stay on its home node"
+        );
         // pile up the home node past the steal threshold while node 1
-        // stays idle: the next job is handed off
+        // stays idle: the next job is handed off AND the home node is
+        // asked to yield a parked bucket
         {
             let mut loads = f.loads.lock().unwrap();
             loads[0].outstanding = 6;
             loads[1].outstanding = 0;
         }
-        let (n3, h3) = f.route(key);
+        let (n3, h3, s3) = f.route(key);
         assert_eq!((n3, h3), (1, true), "overloaded home must hand off");
+        assert_eq!(s3, Some(0), "a handoff requests a bucket steal from home");
+        // at most one steal in flight per node: the next handoff routes
+        // but does not re-request
+        {
+            let mut loads = f.loads.lock().unwrap();
+            loads[0].outstanding = 6;
+            loads[1].outstanding = 0;
+        }
+        let (n3b, h3b, s3b) = f.route(key);
+        assert_eq!((n3b, h3b, s3b), (1, true, None));
+        // the yield arrived: the slot reopens
+        f.steal_inflight.lock().unwrap()[0] = false;
         // the affinity table still points home: once the backlog
         // clears, the key returns to its warm cache
         {
             let mut loads = f.loads.lock().unwrap();
             loads[0].outstanding = 0;
+            loads[1].outstanding = 0;
         }
-        let (n4, h4) = f.route(key);
-        assert_eq!((n4, h4), (0, false));
+        let (n4, h4, s4) = f.route(key);
+        assert_eq!((n4, h4, s4), (0, false, None));
     }
 
     #[test]
@@ -1116,7 +1400,7 @@ mod tests {
         // up while node 1 is idle: the first sighting must be placed on
         // node 1 (a placement, not a handoff) ...
         let f = front(RoutePolicy::Affinity, 2, vec![5, 0]);
-        let (n1, h1) = f.route(4);
+        let (n1, h1, _) = f.route(4);
         assert_eq!((n1, h1), (1, false), "first sighting diverts to the idle node");
         // ... and that placement is sticky even after the hash home
         // frees up — the operator cache was warmed on node 1
@@ -1125,7 +1409,7 @@ mod tests {
             loads[0].outstanding = 0;
             loads[1].outstanding = 0;
         }
-        let (n2, h2) = f.route(4);
+        let (n2, h2, _) = f.route(4);
         assert_eq!((n2, h2), (1, false), "placement must stick to the warm cache");
     }
 
@@ -1154,6 +1438,7 @@ mod tests {
         spec.numanode = Some(1);
         spec.seed = 99;
         spec.rhs = Some(vec![1.5; a.nrows()]);
+        spec.deadline_ms = Some(2500);
         let bytes = encode_submit(77, &spec);
         let env = Envelope::decode(&bytes).unwrap();
         assert_eq!(env.kind, K_SUBMIT);
@@ -1167,6 +1452,7 @@ mod tests {
         assert_eq!(back.numanode, Some(1));
         assert_eq!(back.seed, 99);
         assert_eq!(back.rhs.as_deref(), Some(&vec![1.5; a.nrows()][..]));
+        assert_eq!(back.deadline_ms, Some(2500));
         match (&back.matrix, &back.solver) {
             (MatrixSource::Mat(b), SolverKind::Cg { tol, max_iters }) => {
                 assert_eq!(b.rowptr(), a.rowptr());
@@ -1190,6 +1476,7 @@ mod tests {
             matvecs: 13,
             batched_width: 4,
             cache_hit: true,
+            deadline_missed: Some(true),
             elapsed: Duration::from_millis(7),
             completed_at: Instant::now(),
         };
@@ -1204,6 +1491,7 @@ mod tests {
         assert_eq!(st.submitted, 9);
         let rep = res.unwrap();
         assert_eq!(rep.id, 77, "front-end id wins on the wire");
+        assert_eq!(rep.deadline_missed, Some(true));
         match rep.output {
             JobOutput::Solve { x, iterations, .. } => {
                 assert_eq!(x[0][1].to_bits(), (-0.0f64).to_bits());
@@ -1217,6 +1505,52 @@ mod tests {
         let env = Envelope::decode(&bytes).unwrap();
         let (_, res, _) = decode_result(&env.payload).unwrap();
         assert!(res.unwrap_err().to_string().contains("boom"));
+    }
+
+    #[test]
+    fn yield_and_batch_envelopes_round_trip() {
+        let a = Arc::new(matgen::poisson7::<f64>(4, 4, 3));
+        let key = matrix_key(&a);
+        let mut spec = JobSpec::new(
+            MatrixSource::Mat(a.clone()),
+            SolverKind::Cg {
+                tol: 1e-8,
+                max_iters: 500,
+            },
+        )
+        .with_matrix_key(key);
+        spec.rhs = Some(vec![2.5; a.nrows()]);
+        spec.deadline_ms = Some(750);
+        spec.migrated = true;
+        let jobs = vec![(11u64, spec.clone()), (12u64, spec)];
+        let stats = SchedStats {
+            stolen_buckets: 1,
+            stolen_jobs: 2,
+            ..SchedStats::default()
+        };
+        let env = Envelope::decode(&encode_yield(&jobs, &stats)).unwrap();
+        assert_eq!(env.kind, K_YIELD);
+        let (back, st) = decode_yield(&env.payload).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[0].0, 11);
+        assert_eq!(back[1].0, 12);
+        assert_eq!((st.stolen_buckets, st.stolen_jobs), (1, 2));
+        for (_, s) in &back {
+            assert_eq!(s.matrix_key, Some(key));
+            assert_eq!(s.deadline_ms, Some(750));
+            assert_eq!(s.rhs.as_deref(), Some(&vec![2.5; a.nrows()][..]));
+            assert!(s.migrated, "migration marker must survive the wire");
+        }
+        // the re-route leg carries the same pairs
+        let env = Envelope::decode(&encode_batch(&back)).unwrap();
+        assert_eq!(env.kind, K_BATCH);
+        let again = decode_batch(&env.payload).unwrap();
+        assert_eq!(again.len(), 2);
+        assert_eq!(again[0].0, 11);
+        // an empty yield (nothing was parked) decodes cleanly too
+        let env = Envelope::decode(&encode_yield(&[], &stats)).unwrap();
+        let (none, _) = decode_yield(&env.payload).unwrap();
+        assert!(none.is_empty());
     }
 
     #[test]

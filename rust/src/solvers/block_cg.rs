@@ -24,10 +24,143 @@ fn gram_norm<S: Scalar>(g: &DenseMat<S>) -> f64 {
     (0..g.nrows()).map(|j| g.at(j, j).re()).sum::<f64>().max(0.0).sqrt()
 }
 
+/// The O'Leary recurrence with the matrix pass *externalized*: the
+/// caller computes `q = A p` (or the init pass `q = A x0`) and hands it
+/// in, so several independent block systems can fuse their A·P streams
+/// into one `apply_block` call while each keeps its own projections and
+/// updates — the request batcher's grouped block-CG
+/// (`ghost::sched::batch::batch_block_cg`) drives many of these at
+/// once, and [`block_cg`] drives exactly one. The arithmetic per state
+/// is identical either way, which is what makes coalesced block solves
+/// bitwise-equal to solo runs.
+pub struct BlockCgState<S: Scalar> {
+    x: DenseMat<S>,
+    r: DenseMat<S>,
+    p: DenseMat<S>,
+    rr: DenseMat<S>,
+    bnorm: f64,
+    tol: f64,
+    max_iters: usize,
+    iterations: usize,
+    converged: bool,
+    active: bool,
+}
+
+impl<S: Scalar> BlockCgState<S> {
+    /// Set up the recurrence. `ax0` must hold A·`x0` (the caller's init
+    /// matrix pass, fused or not).
+    pub fn init<O: Operator<S>>(
+        op: &mut O,
+        b: &DenseMat<S>,
+        x0: DenseMat<S>,
+        ax0: &DenseMat<S>,
+        tol: f64,
+        max_iters: usize,
+    ) -> Result<Self> {
+        let bnorm = gram_norm(&op.block_dot(b, b)?).max(1e-300);
+        // R = B - A X, P = R
+        let mut r = b.clone();
+        dops::axpy(&mut r, -S::ONE, ax0)?;
+        let p = r.clone();
+        // RR = R^H R (globally reduced by the operator)
+        let rr = op.block_dot(&r, &r)?;
+        Ok(BlockCgState {
+            x: x0,
+            r,
+            p,
+            rr,
+            bnorm,
+            tol,
+            max_iters,
+            iterations: 0,
+            converged: false,
+            active: true,
+        })
+    }
+
+    /// Top-of-loop check: deactivates on the iteration cap or on
+    /// convergence (cap first, mirroring the solo loop's `while`).
+    pub fn check(&mut self) {
+        if !self.active {
+            return;
+        }
+        if self.iterations >= self.max_iters {
+            self.active = false;
+        } else if gram_norm(&self.rr) <= self.tol * self.bnorm {
+            self.converged = true;
+            self.active = false;
+        }
+    }
+
+    /// One O'Leary update. `q` must hold A·[`BlockCgState::p`] for this
+    /// state's *current* search block. A breakdown (singular projected
+    /// matrix) surfaces as `Err`; the caller decides whether it fails
+    /// the whole solve ([`block_cg`]) or just this group (the batcher).
+    pub fn step<O: Operator<S>>(&mut self, op: &mut O, q: &DenseMat<S>) -> Result<()> {
+        let n = self.x.nrows();
+        let nrhs = self.x.ncols();
+        // PQ = P^H Q  (nrhs x nrhs via the tall-skinny kernel + reduce)
+        let pq = op.block_dot(&self.p, q)?;
+        // alpha = PQ^{-1} RR (small dense solve, one column at a time)
+        let alpha = solve_small(&pq, &self.rr)?;
+        // X += P alpha, R -= Q alpha
+        let mut pa = DenseMat::<S>::zeros(n, nrhs, Layout::RowMajor);
+        tsm::tsmm(&mut pa, S::ONE, &self.p, &alpha, S::ZERO)?;
+        dops::axpy(&mut self.x, S::ONE, &pa)?;
+        let mut qa = DenseMat::<S>::zeros(n, nrhs, Layout::RowMajor);
+        tsm::tsmm(&mut qa, S::ONE, q, &alpha, S::ZERO)?;
+        dops::axpy(&mut self.r, -S::ONE, &qa)?;
+        // RR_new, beta = RR^{-1} RR_new
+        let rr_new = op.block_dot(&self.r, &self.r)?;
+        let beta = solve_small(&self.rr, &rr_new)?;
+        // P = R + P beta   (tsmm_inplace-style update)
+        let mut pb = DenseMat::<S>::zeros(n, nrhs, Layout::RowMajor);
+        tsm::tsmm(&mut pb, S::ONE, &self.p, &beta, S::ZERO)?;
+        self.p = self.r.clone();
+        dops::axpy(&mut self.p, S::ONE, &pb)?;
+        self.rr = rr_new;
+        self.iterations += 1;
+        Ok(())
+    }
+
+    /// Current search block (the next matrix pass input).
+    pub fn p(&self) -> &DenseMat<S> {
+        &self.p
+    }
+
+    /// Current iterate.
+    pub fn x(&self) -> &DenseMat<S> {
+        &self.x
+    }
+
+    pub fn iterations(&self) -> usize {
+        self.iterations
+    }
+
+    pub fn converged(&self) -> bool {
+        self.converged
+    }
+
+    /// Still iterating (not converged, capped or externally frozen).
+    pub fn active(&self) -> bool {
+        self.active
+    }
+
+    /// Freeze this state externally (the batcher uses this when a
+    /// sibling operation fails the group).
+    pub fn deactivate(&mut self) {
+        self.active = false;
+    }
+
+    pub fn final_residual(&self) -> f64 {
+        gram_norm(&self.rr) / self.bnorm
+    }
+}
+
 /// Solve A X = B for `nrhs` right-hand sides simultaneously (A SPD).
 /// Block vectors are row-major in local row order; one block apply per
 /// iteration feeds all systems. Small (nrhs x nrhs) matrices are solved
-/// densely.
+/// densely. Drives a single [`BlockCgState`].
 pub fn block_cg<S: Scalar, O: Operator<S>>(
     op: &mut O,
     b: &DenseMat<S>,
@@ -42,54 +175,25 @@ pub fn block_cg<S: Scalar, O: Operator<S>>(
         DimMismatch,
         "block_cg sizes"
     );
-    let bnorm = gram_norm(&op.block_dot(b, b)?).max(1e-300);
-
-    // R = B - A X, P = R
     let mut q = DenseMat::<S>::zeros(n, nrhs, Layout::RowMajor);
     op.apply_block(x, &mut q)?;
-    let mut r = b.clone();
-    dops::axpy(&mut r, -S::ONE, &q)?;
-    let mut p = r.clone();
-    // RR = R^H R (globally reduced by the operator)
-    let mut rr = op.block_dot(&r, &r)?;
-
-    let mut iterations = 0usize;
-    let mut converged = false;
-    while iterations < max_iters {
-        if gram_norm(&rr) <= tol * bnorm {
-            converged = true;
+    let mut st = BlockCgState::init(op, b, x.clone(), &q, tol, max_iters)?;
+    loop {
+        st.check();
+        if !st.active() {
             break;
         }
         // Q = A P (one streaming pass for all systems)
-        op.apply_block(&p, &mut q)?;
-        // PQ = P^H Q  (nrhs x nrhs via the tall-skinny kernel + reduce)
-        let pq = op.block_dot(&p, &q)?;
-        // alpha = PQ^{-1} RR (small dense solve, one column at a time)
-        let alpha = solve_small(&pq, &rr)?;
-        // X += P alpha, R -= Q alpha
-        let mut pa = DenseMat::<S>::zeros(n, nrhs, Layout::RowMajor);
-        tsm::tsmm(&mut pa, S::ONE, &p, &alpha, S::ZERO)?;
-        dops::axpy(x, S::ONE, &pa)?;
-        let mut qa = DenseMat::<S>::zeros(n, nrhs, Layout::RowMajor);
-        tsm::tsmm(&mut qa, S::ONE, &q, &alpha, S::ZERO)?;
-        dops::axpy(&mut r, -S::ONE, &qa)?;
-        // RR_new, beta = RR^{-1} RR_new
-        let rr_new = op.block_dot(&r, &r)?;
-        let beta = solve_small(&rr, &rr_new)?;
-        // P = R + P beta   (tsmm_inplace-style update)
-        let mut pb = DenseMat::<S>::zeros(n, nrhs, Layout::RowMajor);
-        tsm::tsmm(&mut pb, S::ONE, &p, &beta, S::ZERO)?;
-        p = r.clone();
-        dops::axpy(&mut p, S::ONE, &pb)?;
-        rr = rr_new;
-        iterations += 1;
+        op.apply_block(st.p(), &mut q)?;
+        st.step(op, &q)?;
     }
-    let final_residual = gram_norm(&rr) / bnorm;
-    Ok(BlockCgStats {
-        iterations,
-        final_residual,
-        converged,
-    })
+    let stats = BlockCgStats {
+        iterations: st.iterations,
+        final_residual: st.final_residual(),
+        converged: st.converged,
+    };
+    *x = st.x;
+    Ok(stats)
 }
 
 /// Solve M Y = N for small (k x k) matrices by Gaussian elimination.

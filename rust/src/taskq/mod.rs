@@ -24,6 +24,17 @@
 //! unboundedly (callers who need a latency bound should reserve
 //! fewer PUs or quiesce the queue with [`TaskQueue::drain`]).
 //!
+//! **Deadline (EDF) lane:** a task enqueued with
+//! [`TaskOpts::deadline`] joins an earliest-deadline-first lane that
+//! outranks queue order entirely: among all runnable tasks, the one
+//! with the earliest deadline runs first, and deadline tasks as a class
+//! run before deadline-free ones (PRIO_HIGH included — a fast-lane task
+//! that also needs a latency bound should carry a deadline, which then
+//! orders it within the EDF lane). An already-missed deadline still
+//! sorts earliest, so late tasks drain with maximum urgency instead of
+//! being dropped. Like the PRIO_HIGH lane there is no aging for the
+//! deadline-free: sustained deadline traffic can starve them.
+//!
 //! Lifecycle: [`TaskQueue::drain`] blocks until every enqueued task has
 //! finished (the clean stop for long-lived services), and
 //! [`TaskQueue::shutdown`] joins the shepherd threads and *cancels* any
@@ -36,6 +47,7 @@
 
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
 
 use crate::core::{GhostError, Result};
 use crate::topology::Machine;
@@ -67,6 +79,9 @@ struct TaskInner {
     nthreads: usize,
     numanode: Option<usize>,
     flags: u32,
+    /// EDF lane membership: runnable tasks with a deadline are selected
+    /// earliest-deadline-first, ahead of the whole FIFO/PRIO_HIGH order.
+    deadline: Option<Instant>,
     deps: Vec<Arc<TaskInner>>,
     func: Mutex<Option<TaskFn>>,
     state: Mutex<TState>,
@@ -155,6 +170,12 @@ pub struct TaskOpts {
     pub numanode: Option<usize>,
     pub flags: u32,
     pub deps: Vec<Task>,
+    /// Absolute completion target. `Some` puts the task on the EDF
+    /// lane: runnable deadline tasks are selected
+    /// earliest-deadline-first, before any deadline-free task (see the
+    /// module docs). The queue never drops a late task — a missed
+    /// deadline is the *caller's* telemetry, not a cancellation.
+    pub deadline: Option<Instant>,
 }
 
 impl Default for TaskOpts {
@@ -164,6 +185,7 @@ impl Default for TaskOpts {
             numanode: NUMANODE_ANY,
             flags: flags::DEFAULT,
             deps: vec![],
+            deadline: None,
         }
     }
 }
@@ -173,6 +195,11 @@ struct QState {
     pu_busy: Vec<bool>,
     /// Tasks currently executing on a shepherd (for [`TaskQueue::drain`]).
     running: usize,
+    /// Queued tasks carrying a deadline. When zero the shepherd scan
+    /// keeps the old early exit (first runnable in queue order wins);
+    /// otherwise the scan runs to the end so EDF can pick the earliest
+    /// deadline anywhere in the queue.
+    deadline_queued: usize,
     shutdown: bool,
 }
 
@@ -202,6 +229,7 @@ impl TaskQueue {
                 queue: VecDeque::new(),
                 pu_busy: vec![false; npus],
                 running: 0,
+                deadline_queued: 0,
                 shutdown: false,
             }),
             cond: Condvar::new(),
@@ -271,6 +299,7 @@ impl TaskQueue {
             nthreads,
             numanode: opts.numanode,
             flags: opts.flags,
+            deadline: opts.deadline,
             deps: opts.deps.iter().map(|d| d.inner.clone()).collect(),
             func: Mutex::new(Some(f)),
             state: Mutex::new(TState::Enqueued),
@@ -301,6 +330,9 @@ impl TaskQueue {
                     queue: self.clone(),
                 };
             }
+            if t.deadline.is_some() {
+                st.deadline_queued += 1;
+            }
             if opts.flags & flags::PRIO_HIGH != 0 {
                 st.queue.push_front(t.clone());
             } else {
@@ -324,12 +356,12 @@ impl TaskQueue {
         &self.inner.machine
     }
 
-    /// Try to reserve `n` PUs for a task. Returns None if impossible now.
-    fn try_reserve(
-        st: &mut QState,
-        machine: &Machine,
-        t: &TaskInner,
-    ) -> Option<Vec<usize>> {
+    /// Plan a reservation of `t.nthreads` PUs without committing it.
+    /// Returns None if impossible right now. The shepherd scan plans for
+    /// every candidate (so EDF can compare runnable tasks) and commits
+    /// only the winner — all under the same lock, so a plan stays valid
+    /// until [`TaskQueue::commit_reserve`] runs.
+    fn plan_reserve(st: &QState, machine: &Machine, t: &TaskInner) -> Option<Vec<usize>> {
         if t.flags & flags::NOT_PIN != 0 {
             return Some(vec![]);
         }
@@ -367,12 +399,17 @@ impl TaskQueue {
         if picked.len() < t.nthreads {
             return None;
         }
-        for &pu in &picked {
+        Some(picked)
+    }
+
+    /// Mark a planned reservation's PUs busy (parent-owned PUs stay as
+    /// they are — the parent already holds them).
+    fn commit_reserve(st: &mut QState, t: &TaskInner, picked: &[usize]) {
+        for &pu in picked {
             if !t.parent_pus.contains(&pu) {
                 st.pu_busy[pu] = true;
             }
         }
-        Some(picked)
     }
 
     fn shepherd_loop(&self) {
@@ -383,13 +420,17 @@ impl TaskQueue {
                     if st.shutdown {
                         return;
                     }
-                    // Scan the whole queue in order: the first task that
-                    // is both dependency-ready AND reservable runs. An
+                    // Scan the whole queue in order. Among runnable
+                    // (dependency-ready AND reservable-now) tasks the
+                    // EDF lane wins: the earliest deadline anywhere in
+                    // the queue runs first. With no runnable deadline
+                    // task the first runnable in queue order runs — an
                     // unsatisfiable reservation at the head (e.g. a wide
                     // task while PUs are busy) must not stall runnable
-                    // tasks queued behind it — queue order only breaks
+                    // tasks queued behind it; queue order only breaks
                     // ties among simultaneously-runnable tasks.
-                    let mut picked = None;
+                    let mut best_edf: Option<(Instant, usize, Vec<usize>)> = None;
+                    let mut first_fifo: Option<(usize, Vec<usize>)> = None;
                     let mut i = 0;
                     while i < st.queue.len() {
                         let t = st.queue[i].clone();
@@ -408,23 +449,54 @@ impl TaskQueue {
                             // The queue changed, so wake drain()/other
                             // shepherds too, not just the task's waiters.
                             st.queue.remove(i);
+                            if t.deadline.is_some() {
+                                st.deadline_queued -= 1;
+                            }
                             *t.state.lock().unwrap() = TState::Cancelled;
                             t.done.notify_all();
                             self.inner.cond.notify_all();
+                            // indices behind i shifted down; best/first
+                            // found so far sit before i and are unmoved
                             continue;
                         }
                         if deps_done {
                             if let Some(pus) =
-                                Self::try_reserve(&mut st, &self.inner.machine, &t)
+                                Self::plan_reserve(&st, &self.inner.machine, &t)
                             {
-                                st.queue.remove(i);
-                                picked = Some((t, pus));
-                                break;
+                                match t.deadline {
+                                    Some(d) => {
+                                        if best_edf
+                                            .as_ref()
+                                            .is_none_or(|(bd, _, _)| d < *bd)
+                                        {
+                                            best_edf = Some((d, i, pus));
+                                        }
+                                    }
+                                    None => {
+                                        if first_fifo.is_none() {
+                                            first_fifo = Some((i, pus));
+                                        }
+                                    }
+                                }
+                                // no deadline task queued: the first
+                                // runnable wins outright (old behavior)
+                                if st.deadline_queued == 0 {
+                                    break;
+                                }
                             }
                         }
                         i += 1;
                     }
-                    if let Some((t, pus)) = picked {
+                    let chosen = match best_edf {
+                        Some((_, i, pus)) => Some((i, pus)),
+                        None => first_fifo,
+                    };
+                    if let Some((i, pus)) = chosen {
+                        let t = st.queue.remove(i).expect("scanned index in range");
+                        if t.deadline.is_some() {
+                            st.deadline_queued -= 1;
+                        }
+                        Self::commit_reserve(&mut st, &t, &pus);
                         st.running += 1;
                         break (t, pus);
                     }
@@ -481,6 +553,7 @@ impl TaskQueue {
         let pending: Vec<Arc<TaskInner>> = {
             let mut st = self.inner.state.lock().unwrap();
             st.shutdown = true;
+            st.deadline_queued = 0;
             st.queue.drain(..).collect()
         };
         self.inner.cond.notify_all();
@@ -951,6 +1024,91 @@ mod tests {
             let late = q.enqueue(TaskOpts::default(), |_| {});
             late.wait();
             assert!(late.is_cancelled());
+        }
+    }
+
+    #[test]
+    fn edf_lane_orders_by_deadline_and_outranks_prio_high() {
+        let q = TaskQueue::new(Machine::small_node(1), 1);
+        let log = Arc::new(Mutex::new(Vec::new()));
+        // occupy the single PU so everything below queues up
+        let blocker = q.enqueue(TaskOpts::default(), |_| {
+            std::thread::sleep(Duration::from_millis(40));
+        });
+        std::thread::sleep(Duration::from_millis(5));
+        let now = Instant::now();
+        // enqueue out of deadline order, with a PRIO_HIGH and a normal
+        // task interleaved: the EDF lane must run strictly by deadline,
+        // before both deadline-free lanes
+        let mut tasks = Vec::new();
+        for (tag, dl, fl) in [
+            ("d300", Some(Duration::from_secs(300)), flags::DEFAULT),
+            ("normal", None, flags::DEFAULT),
+            ("d100", Some(Duration::from_secs(100)), flags::DEFAULT),
+            ("high", None, flags::PRIO_HIGH),
+            ("d200", Some(Duration::from_secs(200)), flags::PRIO_HIGH),
+        ] {
+            let l = log.clone();
+            tasks.push(q.enqueue(
+                TaskOpts {
+                    flags: fl,
+                    deadline: dl.map(|d| now + d),
+                    ..Default::default()
+                },
+                move |_| l.lock().unwrap().push(tag),
+            ));
+        }
+        blocker.wait();
+        for t in &tasks {
+            t.wait();
+        }
+        let order = log.lock().unwrap().clone();
+        let pos = |tag: &str| order.iter().position(|&x| x == tag).unwrap();
+        assert!(pos("d100") < pos("d200"), "{order:?}");
+        assert!(pos("d200") < pos("d300"), "{order:?}");
+        assert!(pos("d300") < pos("high"), "deadline lane outranks PRIO_HIGH: {order:?}");
+        assert!(pos("high") < pos("normal"), "{order:?}");
+        q.shutdown();
+    }
+
+    /// EDF under saturation, property-style: random submission orders of
+    /// distinct-deadline tasks on a 1-PU queue always execute in
+    /// deadline order (a later deadline never overtakes an earlier one).
+    #[test]
+    fn edf_never_lets_a_later_deadline_overtake_under_saturation() {
+        for round in 0..5u64 {
+            let q = TaskQueue::new(Machine::small_node(1), 1);
+            let log = Arc::new(Mutex::new(Vec::new()));
+            let blocker = q.enqueue(TaskOpts::default(), |_| {
+                std::thread::sleep(Duration::from_millis(30));
+            });
+            std::thread::sleep(Duration::from_millis(5));
+            let now = Instant::now();
+            // a seeded shuffle of 8 distinct deadlines
+            let mut order: Vec<u64> = (0..8).collect();
+            let mut rng = crate::core::Rng::new(0xEDF0 + round);
+            for i in (1..order.len()).rev() {
+                let j = (rng.next_u64() % (i as u64 + 1)) as usize;
+                order.swap(i, j);
+            }
+            let mut tasks = Vec::new();
+            for &d in &order {
+                let l = log.clone();
+                tasks.push(q.enqueue(
+                    TaskOpts {
+                        deadline: Some(now + Duration::from_secs(100 + d)),
+                        ..Default::default()
+                    },
+                    move |_| l.lock().unwrap().push(d),
+                ));
+            }
+            blocker.wait();
+            for t in &tasks {
+                t.wait();
+            }
+            let ran = log.lock().unwrap().clone();
+            assert_eq!(ran, (0..8).collect::<Vec<_>>(), "submit order {order:?}");
+            q.shutdown();
         }
     }
 

@@ -375,7 +375,7 @@ fn serve_oneshot_round_trip() {
     std::fs::write(&path, requests).unwrap();
     let sched = sched_with(BatchPolicy::Fixed(4), 2);
     let mut out = Vec::new();
-    let summary = serve_oneshot(&sched, &path, &mut out).unwrap();
+    let summary = serve_oneshot(&sched, &path, None, &mut out).unwrap();
     let text = String::from_utf8(out).unwrap();
     assert_eq!(summary.jobs, 6);
     assert_eq!(summary.failed, 0, "{text}");
@@ -390,6 +390,194 @@ fn serve_oneshot_round_trip() {
     assert!(summary.stats.cache.hits >= 1, "{:?}", summary.stats);
     assert_eq!(sched.shutdown(), 0);
     let _ = std::fs::remove_file(&path);
+}
+
+/// EDF property under saturation: on a 1-PU queue with batching off,
+/// deadline jobs submitted in shuffled order always complete in
+/// deadline order — a later-deadline job never overtakes an earlier one
+/// on the same queue.
+#[test]
+fn edf_deadline_jobs_complete_in_deadline_order_under_saturation() {
+    let pus = 1;
+    let sched = sched_with(BatchPolicy::Off, pus);
+    // structure unique to this test (tests share the process-wide tuner
+    // decision cache)
+    let a = Arc::new(matgen::poisson7::<f64>(6, 5, 4));
+    // several shuffled submission orders of the same deadline set
+    // (deadlines far in the future: the property is about *ordering*,
+    // not about misses)
+    let orders: [[u64; 5]; 3] = [
+        [300_000, 100_000, 500_000, 200_000, 400_000],
+        [500_000, 400_000, 300_000, 200_000, 100_000],
+        [200_000, 500_000, 100_000, 400_000, 300_000],
+    ];
+    for order in orders {
+        // saturate the PU so the whole shuffled set is queued at once
+        block_all_pus(&sched, pus, Duration::from_millis(80));
+        let handles: Vec<_> = order
+            .iter()
+            .map(|&d| {
+                let mut s = JobSpec::new(
+                    MatrixSource::Mat(a.clone()),
+                    SolverKind::Cg {
+                        tol: 1e-8,
+                        max_iters: 2000,
+                    },
+                );
+                s.seed = d;
+                s.deadline_ms = Some(d);
+                sched.submit(s).unwrap()
+            })
+            .collect();
+        let reports: Vec<JobReport> = handles
+            .into_iter()
+            .map(|h| h.wait().unwrap())
+            .collect();
+        for (i, ri) in reports.iter().enumerate() {
+            for (j, rj) in reports.iter().enumerate() {
+                if order[i] < order[j] {
+                    assert!(
+                        ri.completed_at <= rj.completed_at,
+                        "deadline {} completed after deadline {} (order {order:?})",
+                        order[i],
+                        order[j]
+                    );
+                }
+            }
+        }
+        // nothing missed a far-future deadline
+        assert!(reports.iter().all(|r| r.deadline_missed == Some(false)));
+    }
+    let st = sched.stats();
+    assert_eq!(st.deadline_jobs, 15, "{st:?}");
+    assert_eq!(st.deadline_missed, 0, "{st:?}");
+    sched.shutdown();
+}
+
+/// Concurrent BlockCg jobs on the same matrix coalesce into one fused
+/// A·P stream — and the demultiplexed per-job results are bitwise
+/// identical to a batching-off run (solo `block_cg`).
+#[test]
+fn concurrent_block_cg_jobs_coalesce_and_demux_bitwise() {
+    let a = Arc::new(matgen::poisson7::<f64>(8, 6, 4));
+    let mk_specs = |a: &Arc<Crs<f64>>| -> Vec<JobSpec> {
+        (0..3u64)
+            .map(|i| {
+                let mut s = JobSpec::new(
+                    MatrixSource::Mat(a.clone()),
+                    SolverKind::BlockCg {
+                        nrhs: 2 + (i as usize % 2),
+                        tol: 1e-9,
+                        max_iters: 2000,
+                    },
+                );
+                s.seed = 40 + i;
+                s
+            })
+            .collect()
+    };
+    let run = |policy: BatchPolicy, force_concurrent: bool| -> (Vec<JobReport>, ghost::sched::SchedStats) {
+        let pus = 2;
+        let sched = sched_with(policy, pus);
+        if force_concurrent {
+            block_all_pus(&sched, pus, Duration::from_millis(120));
+        }
+        let handles: Vec<_> = mk_specs(&a)
+            .into_iter()
+            .map(|s| sched.submit(s).unwrap())
+            .collect();
+        let reports: Vec<JobReport> =
+            handles.into_iter().map(|h| h.wait().unwrap()).collect();
+        let st = sched.stats();
+        sched.shutdown();
+        (reports, st)
+    };
+    let (batched, bst) = run(BatchPolicy::Auto, true);
+    let (serial, _) = run(BatchPolicy::Off, false);
+    assert!(
+        bst.block_batches >= 1,
+        "expected a coalesced BlockCg bundle: {bst:?}"
+    );
+    assert_eq!(bst.block_batched_jobs, 3, "{bst:?}");
+    // the fused widths are visible to the jobs (2 + 3 + 2 columns)
+    assert!(
+        batched.iter().any(|r| r.batched_width == 7),
+        "{:?}",
+        batched.iter().map(|r| r.batched_width).collect::<Vec<_>>()
+    );
+    for (b, s) in batched.iter().zip(&serial) {
+        let (
+            JobOutput::Solve {
+                x: xb,
+                iterations: ib,
+                final_residual: rb,
+                ..
+            },
+            JobOutput::Solve {
+                x: xs,
+                iterations: is_,
+                final_residual: rs,
+                ..
+            },
+        ) = (&b.output, &s.output)
+        else {
+            panic!("unexpected outputs");
+        };
+        assert_eq!(ib, is_, "iteration counts must match");
+        assert_eq!(rb.to_bits(), rs.to_bits(), "residuals must be bitwise equal");
+        assert_eq!(xb.len(), xs.len());
+        for (cb, cs) in xb.iter().zip(xs) {
+            for (u, v) in cb.iter().zip(cs) {
+                assert_eq!(u.to_bits(), v.to_bits(), "solutions must be bitwise equal");
+            }
+        }
+    }
+}
+
+/// Deadline misses are counted and reported: an already-expired
+/// deadline completes late (never cancelled), a generous one does not.
+#[test]
+fn missed_deadlines_are_counted_not_cancelled() {
+    let sched = sched_with(BatchPolicy::Auto, 2);
+    let a = Arc::new(matgen::poisson7::<f64>(9, 5, 4));
+    let mut hot = JobSpec::new(
+        MatrixSource::Mat(a.clone()),
+        SolverKind::Cg {
+            tol: 1e-9,
+            max_iters: 2000,
+        },
+    );
+    hot.deadline_ms = Some(0); // expired at submit: must still run
+    let r = sched.submit(hot).unwrap().wait().unwrap();
+    assert_eq!(r.deadline_missed, Some(true));
+    match &r.output {
+        JobOutput::Solve { converged, .. } => assert!(converged),
+        other => panic!("wrong output: {other:?}"),
+    }
+    let mut calm = JobSpec::new(
+        MatrixSource::Mat(a.clone()),
+        SolverKind::Cg {
+            tol: 1e-9,
+            max_iters: 2000,
+        },
+    );
+    calm.deadline_ms = Some(600_000);
+    let r = sched.submit(calm).unwrap().wait().unwrap();
+    assert_eq!(r.deadline_missed, Some(false));
+    // a deadline-free job reports no deadline outcome at all
+    let free = JobSpec::new(
+        MatrixSource::Mat(a.clone()),
+        SolverKind::Cg {
+            tol: 1e-9,
+            max_iters: 2000,
+        },
+    );
+    let r = sched.submit(free).unwrap().wait().unwrap();
+    assert_eq!(r.deadline_missed, None);
+    let st = sched.stats();
+    assert_eq!(st.deadline_jobs, 2, "{st:?}");
+    assert_eq!(st.deadline_missed, 1, "{st:?}");
+    sched.shutdown();
 }
 
 /// The documented request grammar parses (doc examples stay honest).

@@ -359,6 +359,128 @@ fn client_matrix_keys_are_verified_by_the_fingerprint_check() {
     assert_eq!(svc.shutdown(), 0);
 }
 
+/// Parked-bucket stealing: pile slow direct jobs plus a parked CG
+/// bucket onto one affinity home node, then trigger overload — the
+/// home must yield its parked bucket to a lighter node, and every
+/// result must stay bitwise identical to a no-stealing single-node run.
+#[test]
+fn parked_buckets_are_stolen_under_overload_with_bitwise_parity() {
+    use std::time::Duration;
+    // structure unique to this test (shared tuner decision cache)
+    let a = Arc::new(matgen::poisson7::<f64>(7, 6, 4));
+    // phase 1: three slow direct jobs occupy the home node's single PU
+    // and its task queue, then CG jobs park in the home batch bucket
+    // behind them; phase 2 (after a settle pause): a CG burst pushes
+    // the home past the steal threshold, so the router hands off AND
+    // requests a bucket steal — the parked phase-1 CG jobs migrate.
+    let phase1: Vec<JobSpec> = (0..3u64)
+        .map(|seed| {
+            let mut s = JobSpec::new(
+                MatrixSource::Mat(a.clone()),
+                SolverKind::ChebFilter {
+                    degree: 16,
+                    block: 4,
+                },
+            );
+            s.seed = seed;
+            s
+        })
+        .chain((0..4u64).map(|seed| {
+            let mut s = JobSpec::new(
+                MatrixSource::Mat(a.clone()),
+                SolverKind::Cg {
+                    tol: 1e-9,
+                    max_iters: 2000,
+                },
+            );
+            s.seed = 10 + seed;
+            s
+        }))
+        .collect();
+    let phase2: Vec<JobSpec> = (0..4u64)
+        .map(|seed| {
+            let mut s = JobSpec::new(
+                MatrixSource::Mat(a.clone()),
+                SolverKind::Cg {
+                    tol: 1e-9,
+                    max_iters: 2000,
+                },
+            );
+            s.seed = 20 + seed;
+            s
+        })
+        .collect();
+    // single-node reference (no fabric, no stealing)
+    let single = JobScheduler::new(
+        Machine::small_node(2),
+        SchedConfig {
+            nshepherds: 2,
+            batching: BatchPolicy::Auto,
+            ..SchedConfig::default()
+        },
+    );
+    let mut all_specs = phase1.clone();
+    all_specs.extend(phase2.iter().cloned());
+    let want = run_through(&single, &all_specs);
+    assert_eq!(single.shutdown(), 0);
+    for &nodes in &[2usize, 4] {
+        // a few rounds of the same traffic: the steal fires on the
+        // first round on any normally-loaded machine (the ChebFilter
+        // jobs hold the home PU far longer than the settle pause), the
+        // retries only exist to keep this test robust on a machine
+        // under extreme load
+        let mut stolen_seen = false;
+        for _round in 0..3 {
+            let svc = ShardedScheduler::new(ShardConfig {
+                nodes,
+                policy: RoutePolicy::Affinity,
+                steal_threshold: phase1.len(),
+                pus_per_node: 1,
+                sched: SchedConfig {
+                    nshepherds: 1,
+                    batching: BatchPolicy::Auto,
+                    ..SchedConfig::default()
+                },
+                comm: CommConfig::instant(),
+            })
+            .unwrap();
+            let h1: Vec<_> = phase1
+                .iter()
+                .map(|s| svc.submit(s.clone()).expect("submit"))
+                .collect();
+            // let the home node ingest phase 1 so its CG jobs are
+            // genuinely parked when the steal request arrives
+            std::thread::sleep(Duration::from_millis(30));
+            let h2: Vec<_> = phase2
+                .iter()
+                .map(|s| svc.submit(s.clone()).expect("submit"))
+                .collect();
+            let got: Vec<JobReport> = h1
+                .into_iter()
+                .chain(h2)
+                .map(|h| h.wait().expect("job must complete"))
+                .collect();
+            svc.drain();
+            // stealing must be invisible in the numbers, steal or not
+            assert_outputs_bitwise_equal(nodes, &got, &want);
+            let st = svc.stats();
+            assert_eq!(st.failed, 0, "{st:?}");
+            if st.stolen_buckets >= 1 {
+                assert!(st.stolen_jobs >= 1, "{st:?}");
+                stolen_seen = true;
+            }
+            assert_eq!(svc.shutdown(), 0);
+            if stolen_seen {
+                break;
+            }
+        }
+        assert!(
+            stolen_seen,
+            "no parked bucket was ever stolen at nodes={nodes}"
+        );
+    }
+}
+
 /// Shutdown fails parked jobs across the fabric instead of stranding
 /// their front-end waiters.
 #[test]
@@ -413,7 +535,7 @@ fn serve_oneshot_round_trips_through_the_sharded_service() {
     std::fs::write(&path, requests).unwrap();
     let svc = shard(4, RoutePolicy::Affinity);
     let mut out = Vec::new();
-    let summary = serve_oneshot(&svc, &path, &mut out).unwrap();
+    let summary = serve_oneshot(&svc, &path, None, &mut out).unwrap();
     let text = String::from_utf8(out).unwrap();
     assert_eq!(summary.jobs, 6);
     assert_eq!(summary.failed, 0, "{text}");
@@ -431,7 +553,7 @@ fn serve_oneshot_round_trips_through_the_sharded_service() {
     )
     .unwrap();
     let mut out = Vec::new();
-    let summary = serve_oneshot(&svc, &path, &mut out).unwrap();
+    let summary = serve_oneshot(&svc, &path, None, &mut out).unwrap();
     let text = String::from_utf8(out).unwrap();
     assert_eq!(summary.jobs, 0);
     assert_eq!(summary.failed, 1);
