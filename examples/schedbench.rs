@@ -27,6 +27,16 @@
 //! deadline-miss-rate column exercises the EDF lane end to end, and the
 //! sharded table reports how many parked buckets migrated.
 //!
+//! A third comparison pushes the mixed stream through the **TCP
+//! ingress**: a loopback `NetServer` in front of the same scheduler,
+//! driven by a pipelined `SolveClient`. Results must again be bitwise
+//! identical to the in-process runs — the wire codec is invisible in
+//! the numbers — and the jobs/s of that series lands in the JSON
+//! artifact as `tcp_jobs_per_sec`, next to the in-process series.
+//!
+//! Every service in this binary is stood up through [`ServeConfig`] —
+//! the same validated configuration surface `ghost serve` uses.
+//!
 //! `--json <path>` writes the headline numbers (jobs/s, Gflop/s,
 //! batched-vs-serial speedup, deadline-miss rate, stolen buckets) as
 //! one machine-readable JSON object — the CI perf-trajectory artifact.
@@ -41,12 +51,10 @@ use ghost::comm::CommConfig;
 use ghost::core::Result;
 use ghost::matgen;
 use ghost::sched::{
-    matrix_key, BatchPolicy, JobOutput, JobReport, JobScheduler, JobSpec, MatrixSource,
-    Priority, RoutePolicy, SchedConfig, ShardConfig, ShardedScheduler, SolveService,
-    SolverKind,
+    matrix_key, BatchPolicy, JobOutput, JobReport, JobSpec, MatrixSource, NetServer,
+    Priority, RoutePolicy, ServeConfig, SolveClient, SolveService, SolverKind,
 };
 use ghost::sparsemat::Crs;
-use ghost::topology::Machine;
 
 struct RunOutcome {
     reports: Vec<JobReport>,
@@ -152,16 +160,13 @@ fn run_service(svc: &dyn SolveService, specs: &[JobSpec]) -> Result<RunOutcome> 
 }
 
 fn run(policy: BatchPolicy, specs: &[JobSpec], pus: usize) -> Result<RunOutcome> {
-    let sched = JobScheduler::new(
-        Machine::small_node(pus),
-        SchedConfig {
-            nshepherds: pus,
-            batching: policy,
-            ..SchedConfig::default()
-        },
-    );
-    let out = run_service(&sched, specs)?;
-    sched.shutdown();
+    let engine = ServeConfig::default()
+        .with_pus(pus)
+        .with_shepherds(pus)
+        .with_batching(policy)
+        .build()?;
+    let out = run_service(&engine, specs)?;
+    engine.shutdown();
     Ok(out)
 }
 
@@ -287,24 +292,59 @@ fn main() -> Result<()> {
         mats.len()
     );
     let single = run(BatchPolicy::Auto, &sjobs, nodes)?;
-    let shard = ShardedScheduler::new(ShardConfig {
-        nodes,
-        policy: RoutePolicy::Affinity,
-        pus_per_node: 1,
-        sched: SchedConfig {
-            nshepherds: 1,
-            batching: BatchPolicy::Auto,
-            ..SchedConfig::default()
-        },
-        comm: CommConfig::instant(),
-        ..ShardConfig::default()
-    })?;
+    let shard = ServeConfig::default()
+        .with_nodes(nodes)
+        .with_route(RoutePolicy::Affinity)
+        .with_node_pus(1)
+        .with_shepherds(1)
+        .with_batching(BatchPolicy::Auto)
+        .with_comm(CommConfig::instant())
+        .build()?;
     let sharded = run_service(&shard, &sjobs)?;
-    let shard_detail = shard.shard_stats();
+    let shard_detail = shard.shard_stats().expect("sharded engine has shard stats");
     shard.shutdown();
     // sharding must be invisible in the numbers too
     assert_bitwise("sharded vs single", &single.reports, &sharded.reports);
     println!("result check: sharded solutions bitwise-match single-node ✓");
+
+    // --- the same mixed stream through the TCP ingress (loopback):
+    // specs cross the wire as envelope frames, responses come back in
+    // completion order and are re-sorted by client id for the check
+    let tcp_svc = ServeConfig::default()
+        .with_pus(pus)
+        .with_shepherds(pus)
+        .with_batching(BatchPolicy::Auto)
+        .build_arc()?;
+    let server = NetServer::bind(tcp_svc.clone(), "127.0.0.1:0", None)?;
+    let addr = server.local_addr()?;
+    let runner = std::thread::spawn(move || server.run());
+    let t0 = Instant::now();
+    let mut client = SolveClient::connect(addr)?;
+    for s in &specs {
+        client.submit(s.clone())?;
+    }
+    let mut by_id: Vec<Option<JobReport>> = (0..specs.len()).map(|_| None).collect();
+    while client.pending() > 0 {
+        let resp = client.recv()?;
+        let id = resp.client_id as usize;
+        by_id[id - 1] = Some(resp.report()?);
+    }
+    let tcp_elapsed = t0.elapsed();
+    client.shutdown_server()?;
+    runner.join().expect("tcp listener thread")?;
+    let tcp_stats = tcp_svc.stats();
+    let tcp = RunOutcome {
+        reports: by_id.into_iter().map(|r| r.expect("response per request")).collect(),
+        elapsed: tcp_elapsed,
+        batches: tcp_stats.batches + tcp_stats.block_batches,
+        widest: tcp_stats.max_batch_width,
+        cache_hits: tcp_stats.cache.hits,
+        stolen_buckets: tcp_stats.stolen_buckets,
+    };
+    tcp_svc.shutdown();
+    // the wire codec must be invisible in the numbers as well
+    assert_bitwise("tcp vs batched", &batched.reports, &tcp.reports);
+    println!("result check: TCP-ingress solutions bitwise-match in-process ✓");
 
     let mut t = Table::new(&[
         "mode",
@@ -320,6 +360,7 @@ fn main() -> Result<()> {
     for (name, o) in [
         ("serial", &serial),
         ("batched", &batched),
+        ("tcp", &tcp),
         ("single x1", &single),
         ("sharded x4", &sharded),
     ] {
@@ -367,15 +408,17 @@ fn main() -> Result<()> {
     if let Some(path) = json_path {
         // one flat JSON object: the CI perf-trajectory artifact
         let secs = batched.elapsed.as_secs_f64().max(1e-9);
+        let tcp_secs = tcp.elapsed.as_secs_f64().max(1e-9);
         let line = format!(
             "{{\"bench\":\"schedbench\",\"quick\":{quick},\"jobs\":{},\
-             \"jobs_per_sec\":{:.3},\"gflops\":{:.4},\
+             \"jobs_per_sec\":{:.3},\"tcp_jobs_per_sec\":{:.3},\"gflops\":{:.4},\
              \"batched_vs_serial_speedup\":{batched_speedup:.3},\
              \"sharded_vs_single_speedup\":{speedup:.3},\
              \"deadline_jobs\":{dl_jobs},\"deadline_missed\":{dl_missed},\
              \"deadline_miss_rate\":{:.4},\"stolen_buckets\":{}}}",
             batched.reports.len(),
             batched.reports.len() as f64 / secs,
+            tcp.reports.len() as f64 / tcp_secs,
             gflops(&batched.reports, secs),
             miss_rate(&batched.reports),
             sharded.stolen_buckets,

@@ -24,7 +24,13 @@ use crate::core::{GhostError, Result};
 /// tag, scheduler-stats snapshots grew the deadline/batch/steal
 /// counters, and the bucket-steal kinds (steal / yield / batch — see
 /// [`crate::sched::shard`]) joined the protocol.
-pub const ENVELOPE_VERSION: u16 = 2;
+/// v3: the envelope became the client-facing wire format too — the
+/// request / response / reject / shutdown kinds of the TCP serve front
+/// ([`crate::sched::client`]) joined the kind space; on the fabric
+/// side, steal requests now carry a bucket budget and yields return a
+/// *list* of buckets (deadline-pressure-scaled multi-bucket stealing,
+/// see [`crate::sched::shard`]).
+pub const ENVELOPE_VERSION: u16 = 3;
 
 /// Little-endian append-only byte sink.
 #[derive(Default)]

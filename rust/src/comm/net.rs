@@ -1,0 +1,106 @@
+//! Length-prefixed TCP framing for the network serve front.
+//!
+//! The simulated-MPI fabric ([`super::Comm`]) delivers whole byte
+//! messages; a real socket delivers a byte *stream*. This module closes
+//! that gap with the smallest possible framing: every message is a
+//! little-endian `u64` length followed by that many payload bytes. What
+//! travels inside a frame is an [`super::envelope::Envelope`] — the same
+//! bounds-checked binary codec the fabric speaks, so the TCP ingress
+//! and the shard fabric share one wire format and one fuzz surface.
+//!
+//! Reading is total: a clean EOF between frames is `Ok(None)` (the peer
+//! hung up), a mid-frame EOF or an implausible length is an error —
+//! never a panic, never an unbounded allocation.
+
+use std::io::{Read, Write};
+
+use crate::core::{GhostError, Result};
+
+/// Hard cap on a single frame. Generous enough for a caller-assembled
+/// matrix of ~16M nonzeros; small enough that a corrupt or hostile
+/// length prefix cannot trigger a giant allocation.
+pub const MAX_FRAME: u64 = 1 << 30;
+
+/// Write one length-prefixed frame. The length prefix and payload go
+/// out in two writes; `flush` makes the frame visible to the peer even
+/// through a buffered writer.
+pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> Result<()> {
+    crate::ensure!(
+        (payload.len() as u64) <= MAX_FRAME,
+        InvalidArg,
+        "frame of {} bytes exceeds MAX_FRAME ({MAX_FRAME})",
+        payload.len()
+    );
+    w.write_all(&(payload.len() as u64).to_le_bytes())
+        .and_then(|_| w.write_all(payload))
+        .and_then(|_| w.flush())
+        .map_err(|e| GhostError::Comm(format!("frame write failed: {e}")))
+}
+
+/// Read one length-prefixed frame. `Ok(None)` on a clean EOF *between*
+/// frames; an EOF inside a frame (or a length above [`MAX_FRAME`]) is a
+/// [`GhostError::Comm`].
+pub fn read_frame(r: &mut impl Read) -> Result<Option<Vec<u8>>> {
+    let mut len_buf = [0u8; 8];
+    // the first byte distinguishes clean EOF from mid-frame truncation
+    let mut got = 0usize;
+    while got < len_buf.len() {
+        match r.read(&mut len_buf[got..]) {
+            Ok(0) if got == 0 => return Ok(None),
+            Ok(0) => {
+                return Err(GhostError::Comm(
+                    "connection closed mid-frame (inside the length prefix)".into(),
+                ))
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(GhostError::Comm(format!("frame read failed: {e}"))),
+        }
+    }
+    let len = u64::from_le_bytes(len_buf);
+    crate::ensure!(
+        len <= MAX_FRAME,
+        Comm,
+        "frame length {len} exceeds MAX_FRAME ({MAX_FRAME})"
+    );
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload)
+        .map_err(|e| GhostError::Comm(format!("connection closed mid-frame: {e}")))?;
+    Ok(Some(payload))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frames_round_trip_back_to_back() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        write_frame(&mut buf, b"").unwrap();
+        write_frame(&mut buf, &[7u8; 1000]).unwrap();
+        let mut r = &buf[..];
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), b"hello");
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), b"");
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), vec![7u8; 1000]);
+        // clean EOF between frames: the peer hung up
+        assert!(read_frame(&mut r).unwrap().is_none());
+    }
+
+    #[test]
+    fn truncation_and_corrupt_lengths_error() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"payload").unwrap();
+        // every nonzero cut inside the frame is an error, not a hang or
+        // a clean EOF
+        for cut in 1..buf.len() {
+            let mut r = &buf[..cut];
+            assert!(read_frame(&mut r).is_err(), "cut at {cut}");
+        }
+        // a length prefix above MAX_FRAME is rejected before allocating
+        let mut bad = (MAX_FRAME + 1).to_le_bytes().to_vec();
+        bad.extend_from_slice(&[0u8; 16]);
+        let mut r = &bad[..];
+        assert!(read_frame(&mut r).is_err());
+    }
+}

@@ -12,22 +12,33 @@
 //!   kpm    [--n N] [--moments M] [--vectors R]
 //!          (the blocked-fused moments run at the width the nvecs-axis
 //!           autotune picks for the random-vector block)
-//!   serve  --requests F.jsonl [--oneshot] [--pus P] [--shepherds S]
-//!          [--cache-mb M] [--max-batch W] [--no-batch]
-//!          [--deadline-ms D]
-//!          [--nodes N] [--route affinity|hash|load] [--node-pus P]
-//!          (the asynchronous solve service: jobs from a JSONL request
-//!           file are scheduled on the task queue, operators are cached
-//!           by sparsity fingerprint, and concurrent single-RHS CG and
-//!           BlockCg jobs are coalesced into block solves — see
-//!           ghost::sched. With --oneshot the file is processed once
-//!           and a throughput summary printed; without it the file is
-//!           tailed forever. --deadline-ms D stamps a default EDF
-//!           deadline on every request that lacks a "deadline_ms"
-//!           field. With --nodes N > 1 the request stream is sharded
-//!           across N simulated-MPI node schedulers, routed by matrix
+//!   serve  (--requests F.jsonl [--oneshot] | --listen HOST:PORT)
+//!          [--pus P] [--shepherds S] [--cache-mb M] [--max-batch W]
+//!          [--no-batch] [--deadline-ms D]
+//!          [--nodes N] [--fronts F] [--route affinity|hash|load]
+//!          [--node-pus P] [--max-outstanding J] [--min-deadline-ms D]
+//!          (the asynchronous solve service: jobs are scheduled on the
+//!           task queue, operators are cached by sparsity fingerprint,
+//!           and concurrent single-RHS CG and BlockCg jobs are
+//!           coalesced into block solves — see ghost::sched. Ingress is
+//!           either a JSONL request file (--oneshot processes it once
+//!           and prints a throughput summary; without it the file is
+//!           tailed forever) or a TCP listener (--listen; stop it with
+//!           `ghost client --shutdown`). --deadline-ms D stamps a
+//!           default EDF deadline on every request that lacks a
+//!           "deadline_ms" field. With --nodes N > 1 (or --fronts > 1)
+//!           requests are sharded across N simulated-MPI node
+//!           schedulers behind F router fronts, routed by matrix
 //!           affinity (or hash / least-loaded) with parked-bucket
-//!           stealing under overload — see ghost::sched::shard.)
+//!           stealing under overload — see ghost::sched::shard.
+//!           --max-outstanding / --min-deadline-ms arm admission
+//!           control: saturated or infeasible requests are answered
+//!           with typed rejections instead of queueing unboundedly.)
+//!   client --connect HOST:PORT [--requests F.jsonl] [--shutdown]
+//!          (drive a `serve --listen` service over TCP: submit every
+//!           JSONL request pipelined, print one response line per
+//!           request as results arrive; --shutdown then asks the
+//!           listener to stop — see ghost::sched::client.)
 //!
 //! Matrices: poisson7 | stencil27 | matpde | anderson | cage | random.
 //! (clap is not vendorable offline; flags are parsed by the tiny parser
@@ -370,81 +381,79 @@ fn cmd_kpm(a: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_serve(a: &Args) -> Result<()> {
-    use ghost::sched::{
-        request, BatchPolicy, JobScheduler, RoutePolicy, SchedConfig, ShardConfig,
-        ShardedScheduler, SolveService,
-    };
-    let path = a.str("requests", "");
-    ghost::ensure!(
-        !path.is_empty(),
-        InvalidArg,
-        "serve needs --requests <file.jsonl>"
-    );
+/// Collapse the serve flags into one validated [`ServeConfig`] — every
+/// consumer (file serve, TCP serve, schedbench, the CI smokes) builds
+/// its service through this surface, so defaults cannot drift.
+fn serve_config(a: &Args) -> Result<ghost::sched::ServeConfig> {
+    use ghost::sched::{AdmissionControl, BatchPolicy, RoutePolicy, ServeConfig};
     let pus: usize = a.get(
         "pus",
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
     );
-    let nodes: usize = a.get("nodes", 1);
-    ghost::ensure!(nodes >= 1, InvalidArg, "--nodes must be >= 1");
-    let cfg = SchedConfig {
-        nshepherds: a.get("shepherds", pus.max(2)),
-        cache_budget_bytes: a.get::<usize>("cache-mb", 256) << 20,
-        batching: if a.flags.contains_key("no-batch") {
-            BatchPolicy::Off
-        } else {
-            BatchPolicy::Auto
-        },
-        max_batch: a.get("max-batch", 8),
-    };
+    let mut cfg = ServeConfig::default()
+        .with_pus(pus)
+        .with_cache_mb(a.get("cache-mb", 256))
+        .with_max_batch(a.get("max-batch", 8))
+        .with_nodes(a.get("nodes", 1))
+        .with_fronts(a.get("fronts", 1))
+        .with_route(RoutePolicy::parse(&a.str("route", "affinity"))?)
+        .with_admission(AdmissionControl {
+            max_outstanding: a.flags.get("max-outstanding").and_then(|v| v.parse().ok()),
+            min_deadline_ms: a.flags.get("min-deadline-ms").and_then(|v| v.parse().ok()),
+        });
+    if a.flags.contains_key("no-batch") {
+        cfg = cfg.with_batching(BatchPolicy::Off);
+    }
+    // explicit values win over the builder's derivations
+    if let Some(s) = a.flags.get("shepherds").and_then(|v| v.parse().ok()) {
+        cfg = cfg.with_shepherds(s);
+    }
+    if let Some(p) = a.flags.get("node-pus").and_then(|v| v.parse().ok()) {
+        cfg = cfg.with_node_pus(p);
+    }
+    if let Some(d) = a.flags.get("deadline-ms").and_then(|v| v.parse().ok()) {
+        cfg = cfg.with_deadline_ms(d);
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_serve(a: &Args) -> Result<()> {
+    use ghost::sched::{request, NetServer, SolveService};
+    let path = a.str("requests", "");
+    let listen = a.str("listen", "");
+    ghost::ensure!(
+        !path.is_empty() || !listen.is_empty(),
+        InvalidArg,
+        "serve needs an ingress: --requests <file.jsonl> or --listen <host:port>"
+    );
+    ghost::ensure!(
+        path.is_empty() || listen.is_empty(),
+        InvalidArg,
+        "--requests and --listen are separate ingresses; run one serve process per front"
+    );
+    let cfg = serve_config(a)?;
+    let deadline_ms = cfg.deadline_ms;
+    println!("{}", cfg.describe());
+    if !listen.is_empty() {
+        let svc = cfg.build_arc()?;
+        let server = NetServer::bind(svc.clone(), listen.as_str(), deadline_ms)?;
+        eprintln!(
+            "listening on {} — stop with `ghost client --connect <addr> --shutdown`",
+            server.local_addr()?
+        );
+        let s = server.run()?;
+        println!(
+            "listener done: {} connection(s), {} request(s) — {} ok, {} failed, {} rejected",
+            s.connections, s.requests, s.ok, s.failed, s.rejected
+        );
+        let cancelled = svc.shutdown();
+        ghost::ensure!(cancelled == 0, Task, "{cancelled} jobs stranded at shutdown");
+        return Ok(());
+    }
     let oneshot = a.flags.contains_key("oneshot");
-    // default EDF deadline for requests that do not carry their own
-    let deadline_ms: Option<u64> = a.flags.get("deadline-ms").and_then(|v| v.parse().ok());
-    // one scheduler, or one per simulated node behind the shard router
-    let sharded = if nodes > 1 {
-        let policy = RoutePolicy::parse(&a.str("route", "affinity"))?;
-        // split the PU budget across the nodes unless overridden
-        let node_pus: usize = a.get("node-pus", (pus / nodes).max(1));
-        // shepherds scale with the node, not the whole machine: the
-        // single-node default (total PUs) times N nodes would
-        // oversubscribe the host; an explicit --shepherds still wins
-        let mut node_cfg = cfg.clone();
-        if !a.flags.contains_key("shepherds") {
-            node_cfg.nshepherds = node_pus.max(2);
-        }
-        println!(
-            "sharded solve service: {nodes} nodes x {node_pus} PUs, {} routing, \
-             {} shepherds/node, {} MiB operator cache/node, batching {:?}",
-            policy.name(),
-            node_cfg.nshepherds,
-            node_cfg.cache_budget_bytes >> 20,
-            node_cfg.batching
-        );
-        Some(ShardedScheduler::new(ShardConfig {
-            nodes,
-            policy,
-            pus_per_node: node_pus,
-            sched: node_cfg,
-            ..ShardConfig::default()
-        })?)
-    } else {
-        println!(
-            "solve service: {pus} PUs, {} shepherds, {} MiB operator cache, batching {:?}",
-            cfg.nshepherds,
-            cfg.cache_budget_bytes >> 20,
-            cfg.batching
-        );
-        None
-    };
-    let single = if sharded.is_none() {
-        Some(JobScheduler::new(topology::Machine::small_node(pus), cfg))
-    } else {
-        None
-    };
-    let sched: &dyn SolveService = match &sharded {
-        Some(s) => s,
-        None => single.as_ref().unwrap(),
-    };
+    let engine = cfg.build()?;
+    let sched: &dyn SolveService = &engine;
     let mut out = std::io::stdout();
     if oneshot {
         let s = request::serve_oneshot(sched, std::path::Path::new(&path), deadline_ms, &mut out)?;
@@ -478,8 +487,15 @@ fn cmd_serve(a: &Args) -> Result<()> {
                 100.0 * s.stats.deadline_missed as f64 / s.stats.deadline_jobs as f64
             );
         }
-        if let Some(shard) = &sharded {
-            let st = shard.shard_stats();
+        if let Some(st) = engine.shard_stats() {
+            if st.per_front.len() > 1 {
+                for (f, fs) in st.per_front.iter().enumerate() {
+                    println!(
+                        "  front {f}: {} submitted, {} completed, {} failed",
+                        fs.submitted, fs.completed, fs.failed
+                    );
+                }
+            }
             for (i, n) in st.per_node.iter().enumerate() {
                 println!(
                     "  node {i}: {} routed ({} handoffs), peak queue {}, \
@@ -511,6 +527,78 @@ fn cmd_serve(a: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_client(a: &Args) -> Result<()> {
+    use ghost::core::GhostError;
+    use ghost::sched::{request, Outcome, SolveClient};
+    let addr = a.str("connect", "");
+    ghost::ensure!(
+        !addr.is_empty(),
+        InvalidArg,
+        "client needs --connect <host:port>"
+    );
+    let path = a.str("requests", "");
+    let shutdown = a.flags.contains_key("shutdown");
+    ghost::ensure!(
+        !path.is_empty() || shutdown,
+        InvalidArg,
+        "client needs work: --requests <file.jsonl> and/or --shutdown"
+    );
+    let mut client = SolveClient::connect(addr.as_str())?;
+    if !path.is_empty() {
+        let text = std::fs::read_to_string(&path)?;
+        // pipelined: submit everything, then drain responses as they
+        // complete. Wire ids are our own counter; the line's "id" (when
+        // present) is only the printed label, so duplicate labels in
+        // the file never collide in flight.
+        let mut labels: HashMap<u64, (u64, &'static str)> = HashMap::new();
+        let mut wire = 0u64;
+        for (lineno, line) in text.lines().enumerate() {
+            match request::parse_request(line) {
+                Ok(None) => {}
+                Ok(Some(req)) => {
+                    let label = req.client_id;
+                    let solver = req.spec.solver.name();
+                    let mut sreq = req.into_request();
+                    wire += 1;
+                    sreq.client_id = wire;
+                    labels.insert(wire, (label.unwrap_or(wire), solver));
+                    client.submit_request(sreq)?;
+                }
+                Err(e) => println!(
+                    "{{\"line\":{},\"ok\":false,\"error\":\"{}\"}}",
+                    lineno + 1,
+                    request::json_escape(&e.to_string())
+                ),
+            }
+        }
+        let mut failed = 0usize;
+        while client.pending() > 0 {
+            let resp = client.recv()?;
+            let (label, solver) = labels
+                .remove(&resp.client_id)
+                .unwrap_or((resp.client_id, "?"));
+            let line = match resp.outcome {
+                Outcome::Report(rep) => request::response_line(label, solver, &Ok(rep)),
+                Outcome::Failed(msg) => {
+                    failed += 1;
+                    request::response_line(label, solver, &Err(GhostError::Task(msg)))
+                }
+                Outcome::Rejected { reason, detail } => {
+                    failed += 1;
+                    request::reject_line_of(label, solver, reason, &detail)
+                }
+            };
+            println!("{line}");
+        }
+        eprintln!("{} request(s) answered, {} not ok", wire, failed);
+    }
+    if shutdown {
+        client.shutdown_server()?;
+        eprintln!("asked the listener to stop");
+    }
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let cmd = argv.first().map(|s| s.as_str()).unwrap_or("info");
@@ -522,10 +610,12 @@ fn main() -> Result<()> {
         "eig" => cmd_eig(&args)?,
         "kpm" => cmd_kpm(&args)?,
         "serve" => cmd_serve(&args)?,
+        "client" => cmd_client(&args)?,
         "version" => println!("ghost {}", ghost::version()),
         other => {
             eprintln!(
-                "unknown command '{other}'; see the module docs (info|spmv|cg|eig|kpm|serve)"
+                "unknown command '{other}'; see the module docs \
+                 (info|spmv|cg|eig|kpm|serve|client)"
             );
             std::process::exit(2);
         }

@@ -155,6 +155,15 @@ impl OperatorCache {
     /// only seeds the assembly; each job re-binds the operator to its
     /// own PU reservation via `LocalSellOp::set_nthreads` after locking
     /// it (the cached structure is thread-count independent).
+    ///
+    /// Recomputes the O(nnz) content digest on *every* call — the
+    /// scheduler resolves a [`MatrixKey`] once per submit and goes
+    /// through [`OperatorCache::get_or_assemble_keyed`], and so should
+    /// any other repeat caller.
+    #[deprecated(
+        since = "0.6.0",
+        note = "resolve a MatrixKey once (matrix_key) and use get_or_assemble_keyed"
+    )]
     pub fn get_or_assemble(&self, a: &Crs<f64>, nthreads: usize) -> Result<(SharedOp, bool)> {
         self.get_or_assemble_keyed(matrix_key(a), a, nthreads)
     }
@@ -364,6 +373,10 @@ impl OperatorCache {
 }
 
 #[cfg(test)]
+// the unkeyed convenience wrapper is deprecated for production callers
+// (the scheduler keys every path now) but remains the natural way to
+// exercise the cache in isolation
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::matgen;

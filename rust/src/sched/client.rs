@@ -1,0 +1,648 @@
+//! The one public way to talk to a solve service:
+//! [`SolveClient`] / [`SolveRequest`] / [`SolveResponse`].
+//!
+//! A client speaks the same envelope protocol whether the service is a
+//! TCP listener ([`super::server::NetServer`]) on the other end of a
+//! socket or a [`SolveService`] in this process — submit a
+//! [`SolveRequest`], receive a [`SolveResponse`], with responses
+//! arriving in *completion* order and matched back to requests by
+//! `client_id`. The JSONL request file front
+//! ([`super::request`]) is a thin adapter that parses lines into
+//! `SolveRequest`s; the TCP listener decodes the same frames this
+//! module encodes.
+//!
+//! Wire format (TCP): every frame is a length prefix
+//! ([`crate::comm::net`]) around a [`crate::comm::envelope::Envelope`]
+//! — the same version-gated, bounds-checked binary codec the shard
+//! fabric uses, with client-facing kinds:
+//!
+//! | kind | direction | payload |
+//! |------|-----------|---------|
+//! | [`K_CLIENT_REQUEST`]  | client → server | `v: u64`, `client_id: u64`, job spec |
+//! | [`K_CLIENT_RESPONSE`] | server → client | `client_id: u64`, job result |
+//! | [`K_CLIENT_REJECT`]   | server → client | `client_id: u64`, `code: u8`, detail string |
+//! | [`K_CLIENT_SHUTDOWN`] | client → server | empty — stop accepting, then stop the listener |
+//!
+//! **Versioning:** a request carries the schema version of its
+//! producer ([`SolveRequest::v`]). A service accepts every version
+//! from 1 up to its own [`REQUEST_SCHEMA_VERSION`] — fields added
+//! since the producer's version take their documented defaults — and
+//! answers anything newer with a typed [`RejectReason::Invalid`]
+//! naming both versions, so an old service never mis-parses a new
+//! client silently.
+//!
+//! **Backpressure is data, not failure:** an admission refusal
+//! ([`super::SubmitError`]) travels as [`Outcome::Rejected`] with a
+//! machine-readable [`RejectReason`]; transport errors are the only
+//! thing [`SolveClient`] surfaces as `Err`.
+
+use std::collections::VecDeque;
+use std::io::BufReader;
+use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::Arc;
+
+use crate::comm::envelope::{ByteReader, ByteWriter, Envelope};
+use crate::comm::net::{read_frame, write_frame};
+use crate::core::{GhostError, Result};
+
+use super::proto::{get_job_result, get_spec, put_job_result, put_spec};
+use super::{JobHandle, JobReport, JobSpec, SolveService, SubmitError};
+
+/// Version of the request schema this build produces and the highest
+/// it accepts. History:
+///
+/// - **v1**: the PR-3 JSONL schema (no version field — absence means 1).
+/// - **v2**: explicit `"v"` field; adds `deadline_ms` and typed
+///   rejection responses. All v1 requests remain valid v2 requests.
+pub const REQUEST_SCHEMA_VERSION: u64 = 2;
+
+/// Client → server: a versioned solve request.
+pub(crate) const K_CLIENT_REQUEST: u8 = 16;
+/// Server → client: a completed (or failed) job.
+pub(crate) const K_CLIENT_RESPONSE: u8 = 17;
+/// Server → client: the request was refused at the door.
+pub(crate) const K_CLIENT_REJECT: u8 = 18;
+/// Client → server: stop the listener (drains in-flight work first).
+pub(crate) const K_CLIENT_SHUTDOWN: u8 = 19;
+
+/// Why a service refused a request at the door. The numeric code is
+/// shared with [`SubmitError::code`] — what a local service returns as
+/// a typed error is exactly what crosses the wire.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum RejectReason {
+    /// Every node is at its outstanding-job watermark.
+    QueueFull,
+    /// The requested deadline is beneath the service's feasibility
+    /// floor.
+    DeadlineInfeasible,
+    /// The service is shutting down.
+    Shutdown,
+    /// The request itself is malformed (bad spec, unknown matrix,
+    /// unsupported schema version).
+    Invalid,
+}
+
+impl RejectReason {
+    pub fn code(&self) -> u8 {
+        match self {
+            RejectReason::QueueFull => 1,
+            RejectReason::DeadlineInfeasible => 2,
+            RejectReason::Shutdown => 3,
+            RejectReason::Invalid => 4,
+        }
+    }
+
+    pub fn from_code(code: u8) -> Option<RejectReason> {
+        Some(match code {
+            1 => RejectReason::QueueFull,
+            2 => RejectReason::DeadlineInfeasible,
+            3 => RejectReason::Shutdown,
+            4 => RejectReason::Invalid,
+            _ => return None,
+        })
+    }
+
+    /// Stable machine-readable name (used in JSONL response lines).
+    pub fn name(&self) -> &'static str {
+        match self {
+            RejectReason::QueueFull => "queue_full",
+            RejectReason::DeadlineInfeasible => "deadline_infeasible",
+            RejectReason::Shutdown => "shutdown",
+            RejectReason::Invalid => "invalid",
+        }
+    }
+
+    pub fn of(e: &SubmitError) -> RejectReason {
+        match e {
+            SubmitError::QueueFull { .. } => RejectReason::QueueFull,
+            SubmitError::DeadlineInfeasible { .. } => RejectReason::DeadlineInfeasible,
+            SubmitError::Shutdown => RejectReason::Shutdown,
+            SubmitError::Invalid(_) => RejectReason::Invalid,
+        }
+    }
+}
+
+/// One versioned solve request: the caller's correlation id plus the
+/// job to run.
+#[derive(Clone, Debug)]
+pub struct SolveRequest {
+    /// Request schema version ([`REQUEST_SCHEMA_VERSION`]); JSONL
+    /// lines without a `"v"` field parse as 1.
+    pub v: u64,
+    /// Caller-chosen correlation id, echoed on the response.
+    pub client_id: u64,
+    pub spec: JobSpec,
+}
+
+impl SolveRequest {
+    /// A current-version request. The client stamps `client_id` at
+    /// submit time.
+    pub fn new(spec: JobSpec) -> SolveRequest {
+        SolveRequest {
+            v: REQUEST_SCHEMA_VERSION,
+            client_id: 0,
+            spec,
+        }
+    }
+
+    /// The compatibility gate: versions `1..=`
+    /// [`REQUEST_SCHEMA_VERSION`] are accepted, anything newer (or 0)
+    /// is refused naming both versions.
+    pub fn validate(&self) -> Result<()> {
+        crate::ensure!(
+            (1..=REQUEST_SCHEMA_VERSION).contains(&self.v),
+            InvalidArg,
+            "unsupported request schema v{} (this service speaks v1..=v{REQUEST_SCHEMA_VERSION})",
+            self.v
+        );
+        Ok(())
+    }
+}
+
+/// How a request resolved.
+#[derive(Debug)]
+pub enum Outcome {
+    /// The job ran; here is its report.
+    Report(JobReport),
+    /// The job was accepted but failed (solver error, cancellation).
+    Failed(String),
+    /// The service refused the request at the door — backpressure or a
+    /// malformed request, distinguished by [`RejectReason`].
+    Rejected { reason: RejectReason, detail: String },
+}
+
+/// A service's answer to one [`SolveRequest`].
+#[derive(Debug)]
+pub struct SolveResponse {
+    /// The `client_id` of the request this answers.
+    pub client_id: u64,
+    pub outcome: Outcome,
+}
+
+impl SolveResponse {
+    pub fn is_rejected(&self) -> bool {
+        matches!(self.outcome, Outcome::Rejected { .. })
+    }
+
+    /// Collapse the outcome into a `Result` (rejections and failures
+    /// both become errors, rejections prefixed with their reason name).
+    pub fn report(self) -> Result<JobReport> {
+        match self.outcome {
+            Outcome::Report(rep) => Ok(rep),
+            Outcome::Failed(msg) => Err(GhostError::Task(msg)),
+            Outcome::Rejected { reason, detail } => Err(GhostError::Task(format!(
+                "rejected ({}): {detail}",
+                reason.name()
+            ))),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// client wire codec (the server decodes requests and encodes answers
+// with these exact layouts — see super::server)
+// ---------------------------------------------------------------------------
+
+pub(crate) fn encode_request(req: &SolveRequest) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    w.put_u64(req.v);
+    w.put_u64(req.client_id);
+    put_spec(&mut w, &req.spec);
+    Envelope::new(K_CLIENT_REQUEST, w.into_bytes()).encode()
+}
+
+/// Strict total decode of a request payload (the server reads the
+/// header separately so it can reject — rather than drop — a request
+/// whose spec fails to parse).
+pub(crate) fn decode_request(payload: &[u8]) -> Result<SolveRequest> {
+    let mut r = ByteReader::new(payload);
+    let v = r.get_u64()?;
+    let client_id = r.get_u64()?;
+    let spec = get_spec(&mut r)?;
+    r.finish()?;
+    Ok(SolveRequest { v, client_id, spec })
+}
+
+pub(crate) fn encode_response(client_id: u64, res: &Result<JobReport>) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    w.put_u64(client_id);
+    put_job_result(&mut w, res);
+    Envelope::new(K_CLIENT_RESPONSE, w.into_bytes()).encode()
+}
+
+pub(crate) fn encode_reject(client_id: u64, reason: RejectReason, detail: &str) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    w.put_u64(client_id);
+    w.put_u8(reason.code());
+    w.put_str(detail);
+    Envelope::new(K_CLIENT_REJECT, w.into_bytes()).encode()
+}
+
+/// Decode one server → client envelope into a [`SolveResponse`].
+pub(crate) fn decode_server_frame(bytes: &[u8]) -> Result<SolveResponse> {
+    let env = Envelope::decode(bytes)?;
+    match env.kind {
+        K_CLIENT_RESPONSE => {
+            let mut r = ByteReader::new(&env.payload);
+            let client_id = r.get_u64()?;
+            let res = get_job_result(&mut r, client_id)?;
+            r.finish()?;
+            Ok(SolveResponse {
+                client_id,
+                outcome: match res {
+                    Ok(rep) => Outcome::Report(rep),
+                    Err(e) => Outcome::Failed(e.to_string()),
+                },
+            })
+        }
+        K_CLIENT_REJECT => {
+            let mut r = ByteReader::new(&env.payload);
+            let client_id = r.get_u64()?;
+            let code = r.get_u8()?;
+            let detail = r.get_str()?;
+            r.finish()?;
+            let reason = RejectReason::from_code(code).ok_or_else(|| {
+                GhostError::Parse(format!("unknown reject code {code} in response frame"))
+            })?;
+            Ok(SolveResponse {
+                client_id,
+                outcome: Outcome::Rejected { reason, detail },
+            })
+        }
+        k => Err(GhostError::Parse(format!(
+            "unexpected envelope kind {k} from server"
+        ))),
+    }
+}
+
+pub(crate) fn encode_client_shutdown() -> Vec<u8> {
+    Envelope::new(K_CLIENT_SHUTDOWN, Vec::new()).encode()
+}
+
+// ---------------------------------------------------------------------------
+// the client
+// ---------------------------------------------------------------------------
+
+enum LocalPending {
+    Handle(JobHandle),
+    Ready(Outcome),
+}
+
+enum Transport {
+    Tcp {
+        reader: BufReader<TcpStream>,
+        writer: TcpStream,
+        /// Requests written minus responses read — `recv` on zero is a
+        /// caller bug, not a hang.
+        inflight: usize,
+    },
+    Local {
+        svc: Arc<dyn SolveService + Send + Sync>,
+        /// FIFO of submitted-but-unread requests; rejected submits park
+        /// a ready outcome so the transports answer identically.
+        inflight: VecDeque<(u64, LocalPending)>,
+    },
+}
+
+/// A connection to a solve service — over TCP ([`SolveClient::connect`])
+/// or directly in process ([`SolveClient::in_process`]). Pipelined:
+/// submit any number of requests, then [`recv`](SolveClient::recv)
+/// responses as they complete (completion order, not submit order —
+/// match by [`SolveResponse::client_id`], or use
+/// [`call`](SolveClient::call) for lock-step request/response).
+pub struct SolveClient {
+    transport: Transport,
+    next_id: u64,
+    /// Responses read while waiting for a specific id in `call`.
+    stash: Vec<SolveResponse>,
+}
+
+impl SolveClient {
+    /// Connect to a [`super::server::NetServer`] listener.
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> Result<SolveClient> {
+        let writer = TcpStream::connect(addr)
+            .map_err(|e| GhostError::Comm(format!("connect failed: {e}")))?;
+        let _ = writer.set_nodelay(true);
+        let reader = BufReader::new(
+            writer
+                .try_clone()
+                .map_err(|e| GhostError::Comm(format!("socket clone failed: {e}")))?,
+        );
+        Ok(SolveClient {
+            transport: Transport::Tcp {
+                reader,
+                writer,
+                inflight: 0,
+            },
+            next_id: 0,
+            stash: Vec::new(),
+        })
+    }
+
+    /// Wrap an in-process service in the same client surface (the
+    /// JSONL fronts and tests go through this, so every ingress
+    /// exercises one code path).
+    pub fn in_process(svc: Arc<dyn SolveService + Send + Sync>) -> SolveClient {
+        SolveClient {
+            transport: Transport::Local {
+                svc,
+                inflight: VecDeque::new(),
+            },
+            next_id: 0,
+            stash: Vec::new(),
+        }
+    }
+
+    /// Submit a spec as a current-version request; returns the
+    /// assigned `client_id`.
+    pub fn submit(&mut self, spec: JobSpec) -> Result<u64> {
+        self.next_id += 1;
+        let mut req = SolveRequest::new(spec);
+        req.client_id = self.next_id;
+        self.submit_request(req)
+    }
+
+    /// Submit a fully-formed request (caller-chosen `client_id` and
+    /// version — the ids must be unique among in-flight requests).
+    /// `Err` means the transport failed; a service *refusing* the
+    /// request is a normal [`Outcome::Rejected`] response.
+    pub fn submit_request(&mut self, req: SolveRequest) -> Result<u64> {
+        let id = req.client_id;
+        match &mut self.transport {
+            Transport::Tcp {
+                writer, inflight, ..
+            } => {
+                write_frame(writer, &encode_request(&req))?;
+                *inflight += 1;
+            }
+            Transport::Local { svc, inflight } => {
+                // mirror the server: version gate, then admission —
+                // refusals become ready responses, not errors
+                let pending = match req.validate() {
+                    Err(e) => LocalPending::Ready(Outcome::Rejected {
+                        reason: RejectReason::Invalid,
+                        detail: e.to_string(),
+                    }),
+                    Ok(()) => match svc.submit(req.spec) {
+                        Ok(handle) => LocalPending::Handle(handle),
+                        Err(e) => LocalPending::Ready(Outcome::Rejected {
+                            reason: RejectReason::of(&e),
+                            detail: e.to_string(),
+                        }),
+                    },
+                };
+                inflight.push_back((id, pending));
+            }
+        }
+        Ok(id)
+    }
+
+    /// Responses not yet received (including stashed ones).
+    pub fn pending(&self) -> usize {
+        self.stash.len()
+            + match &self.transport {
+                Transport::Tcp { inflight, .. } => *inflight,
+                Transport::Local { inflight, .. } => inflight.len(),
+            }
+    }
+
+    /// Receive the next response (completion order for TCP, submit
+    /// order in process). Errors if nothing is in flight or the
+    /// transport drops mid-stream.
+    pub fn recv(&mut self) -> Result<SolveResponse> {
+        if !self.stash.is_empty() {
+            return Ok(self.stash.remove(0));
+        }
+        self.recv_transport()
+    }
+
+    fn recv_transport(&mut self) -> Result<SolveResponse> {
+        match &mut self.transport {
+            Transport::Tcp {
+                reader, inflight, ..
+            } => {
+                crate::ensure!(*inflight > 0, InvalidArg, "no request in flight");
+                let frame = read_frame(reader)?.ok_or_else(|| {
+                    GhostError::Comm(format!(
+                        "server closed the connection with {inflight} response(s) outstanding"
+                    ))
+                })?;
+                let resp = decode_server_frame(&frame)?;
+                *inflight -= 1;
+                Ok(resp)
+            }
+            Transport::Local { inflight, .. } => {
+                let (client_id, pending) = inflight
+                    .pop_front()
+                    .ok_or_else(|| GhostError::InvalidArg("no request in flight".into()))?;
+                let outcome = match pending {
+                    LocalPending::Ready(o) => o,
+                    LocalPending::Handle(h) => match h.wait() {
+                        Ok(rep) => Outcome::Report(rep),
+                        Err(e) => Outcome::Failed(e.to_string()),
+                    },
+                };
+                Ok(SolveResponse { client_id, outcome })
+            }
+        }
+    }
+
+    /// Receive the response to a specific request, stashing others
+    /// that arrive first.
+    pub fn recv_for(&mut self, client_id: u64) -> Result<SolveResponse> {
+        if let Some(i) = self.stash.iter().position(|r| r.client_id == client_id) {
+            return Ok(self.stash.remove(i));
+        }
+        loop {
+            let resp = self.recv_transport()?;
+            if resp.client_id == client_id {
+                return Ok(resp);
+            }
+            self.stash.push(resp);
+        }
+    }
+
+    /// Lock-step request/response.
+    pub fn call(&mut self, spec: JobSpec) -> Result<SolveResponse> {
+        let id = self.submit(spec)?;
+        self.recv_for(id)
+    }
+
+    /// Ask the remote listener to stop (in process: shut the service
+    /// down). Responses to requests still in flight arrive first — the
+    /// server drains before it stops.
+    pub fn shutdown_server(&mut self) -> Result<()> {
+        match &mut self.transport {
+            Transport::Tcp { writer, .. } => write_frame(writer, &encode_client_shutdown()),
+            Transport::Local { svc, .. } => {
+                svc.shutdown();
+                Ok(())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{
+        AdmissionControl, JobScheduler, MatrixSource, SchedConfig, SolverKind,
+    };
+    use super::*;
+    use crate::topology::Machine;
+
+    fn cg_spec(n: usize) -> JobSpec {
+        JobSpec::new(
+            MatrixSource::Named {
+                name: "poisson7".into(),
+                n,
+            },
+            SolverKind::Cg {
+                tol: 1e-8,
+                max_iters: 500,
+            },
+        )
+    }
+
+    #[test]
+    fn request_and_response_frames_round_trip() {
+        let mut req = SolveRequest::new(cg_spec(64));
+        req.client_id = 7;
+        req.spec.deadline_ms = Some(1234);
+        let env = Envelope::decode(&encode_request(&req)).unwrap();
+        assert_eq!(env.kind, K_CLIENT_REQUEST);
+        let back = decode_request(&env.payload).unwrap();
+        assert_eq!(back.v, REQUEST_SCHEMA_VERSION);
+        assert_eq!(back.client_id, 7);
+        assert_eq!(back.spec.deadline_ms, Some(1234));
+        match &back.spec.matrix {
+            MatrixSource::Named { name, n } => assert_eq!((name.as_str(), *n), ("poisson7", 64)),
+            other => panic!("wrong matrix source: {other:?}"),
+        }
+        // failed-job response
+        let resp =
+            decode_server_frame(&encode_response(7, &Err(GhostError::Task("boom".into()))))
+                .unwrap();
+        assert_eq!(resp.client_id, 7);
+        match resp.outcome {
+            Outcome::Failed(msg) => assert!(msg.contains("boom")),
+            other => panic!("expected Failed, got {other:?}"),
+        }
+        // typed rejection
+        let resp = decode_server_frame(&encode_reject(
+            9,
+            RejectReason::QueueFull,
+            "3 outstanding >= limit 3",
+        ))
+        .unwrap();
+        assert!(resp.is_rejected());
+        match resp.outcome {
+            Outcome::Rejected { reason, detail } => {
+                assert_eq!(reason, RejectReason::QueueFull);
+                assert_eq!(reason.name(), "queue_full");
+                assert!(detail.contains("limit 3"));
+            }
+            other => panic!("expected Rejected, got {other:?}"),
+        }
+        // reject codes are the SubmitError codes
+        for (e, want) in [
+            (
+                SubmitError::QueueFull {
+                    outstanding: 1,
+                    limit: 1,
+                },
+                RejectReason::QueueFull,
+            ),
+            (
+                SubmitError::DeadlineInfeasible {
+                    deadline_ms: 1,
+                    floor_ms: 2,
+                },
+                RejectReason::DeadlineInfeasible,
+            ),
+            (SubmitError::Shutdown, RejectReason::Shutdown),
+            (
+                SubmitError::Invalid(GhostError::InvalidArg("x".into())),
+                RejectReason::Invalid,
+            ),
+        ] {
+            let r = RejectReason::of(&e);
+            assert_eq!(r, want);
+            assert_eq!(r.code(), e.code());
+            assert_eq!(RejectReason::from_code(r.code()), Some(r));
+        }
+        assert_eq!(RejectReason::from_code(0), None);
+    }
+
+    #[test]
+    fn version_gate_accepts_history_and_refuses_the_future() {
+        let mut req = SolveRequest::new(cg_spec(27));
+        for v in 1..=REQUEST_SCHEMA_VERSION {
+            req.v = v;
+            assert!(req.validate().is_ok(), "v{v} is history and must parse");
+        }
+        req.v = REQUEST_SCHEMA_VERSION + 1;
+        let err = req.validate().unwrap_err().to_string();
+        assert!(
+            err.contains(&format!("v{}", REQUEST_SCHEMA_VERSION + 1))
+                && err.contains(&format!("v{REQUEST_SCHEMA_VERSION}")),
+            "the refusal must name both versions: {err}"
+        );
+        req.v = 0;
+        assert!(req.validate().is_err());
+    }
+
+    #[test]
+    fn in_process_client_answers_like_a_service_and_types_rejections() {
+        let svc = Arc::new(JobScheduler::new(
+            Machine::small_node(2),
+            SchedConfig {
+                nshepherds: 2,
+                admission: AdmissionControl {
+                    max_outstanding: None,
+                    min_deadline_ms: Some(1_000),
+                },
+                ..SchedConfig::default()
+            },
+        ));
+        let mut client = SolveClient::in_process(svc.clone());
+        // a normal request resolves to a report
+        let id = client.submit(cg_spec(64)).unwrap();
+        assert_eq!(client.pending(), 1);
+        let resp = client.recv().unwrap();
+        assert_eq!(resp.client_id, id);
+        let rep = resp.report().unwrap();
+        assert!(rep.matvecs > 0);
+        // an infeasible deadline comes back as a typed rejection, not
+        // an error — backpressure is data
+        let mut hot = cg_spec(64);
+        hot.deadline_ms = Some(1);
+        let resp = client.call(hot).unwrap();
+        match resp.outcome {
+            Outcome::Rejected { reason, .. } => {
+                assert_eq!(reason, RejectReason::DeadlineInfeasible)
+            }
+            other => panic!("expected a typed rejection, got {other:?}"),
+        }
+        // a stale schema version is rejected with both versions named
+        let mut req = SolveRequest::new(cg_spec(64));
+        req.v = REQUEST_SCHEMA_VERSION + 5;
+        req.client_id = 99;
+        client.submit_request(req).unwrap();
+        let resp = client.recv_for(99).unwrap();
+        match resp.outcome {
+            Outcome::Rejected { reason, detail } => {
+                assert_eq!(reason, RejectReason::Invalid);
+                assert!(detail.contains("schema"));
+            }
+            other => panic!("expected Invalid rejection, got {other:?}"),
+        }
+        assert_eq!(client.pending(), 0);
+        client.shutdown_server().unwrap();
+        // post-shutdown submits resolve to the typed shutdown refusal
+        let resp = client.call(cg_spec(64)).unwrap();
+        match resp.outcome {
+            Outcome::Rejected { reason, .. } => assert_eq!(reason, RejectReason::Shutdown),
+            other => panic!("expected Shutdown rejection, got {other:?}"),
+        }
+    }
+}

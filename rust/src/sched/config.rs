@@ -1,0 +1,403 @@
+//! One validated configuration surface for standing up a solve
+//! service: [`ServeConfig`] → [`ServiceEngine`].
+//!
+//! `ghost serve` grew flags faster than constructors: PUs, shepherds,
+//! cache budget, batching, node count, routing policy, per-node PUs,
+//! deadlines, admission, fronts… Every consumer (the CLI, schedbench,
+//! the CI smokes, tests) was assembling `SchedConfig`/`ShardConfig`
+//! literals by hand — and each grew its own defaults drift. This module
+//! is the one place those decisions live:
+//!
+//! ```
+//! use ghost::sched::{ServeConfig, SolveService};
+//!
+//! let engine = ServeConfig::default()
+//!     .with_nodes(4)
+//!     .with_fronts(2)
+//!     .with_cache_mb(64)
+//!     .build()
+//!     .unwrap();
+//! // … submit work through the SolveService trait …
+//! engine.shutdown();
+//! ```
+//!
+//! [`ServeConfig::build`] validates once and picks the engine: a plain
+//! [`JobScheduler`] for a single node, the sharded multi-front service
+//! when `nodes > 1` *or* `fronts > 1`. Derived defaults are documented
+//! on each field; an explicit builder call always wins.
+
+use std::sync::Arc;
+
+use crate::comm::CommConfig;
+use crate::core::Result;
+use crate::topology::Machine;
+
+use super::shard::{RoutePolicy, ShardConfig, ShardStats, ShardedScheduler};
+use super::{
+    AdmissionControl, BatchPolicy, JobScheduler, JobSpec, SchedConfig, SchedStats, SolveService,
+    SubmitResult,
+};
+
+/// Everything `ghost serve` (and every other service consumer) can
+/// configure, with validated defaults. Collapses the former flag
+/// sprawl into one builder; [`build`](ServeConfig::build) turns it
+/// into a running [`ServiceEngine`].
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Total PU budget of the (simulated) machine.
+    pub pus: usize,
+    /// Shepherd threads. `None` derives: total PUs for a single node,
+    /// per-node PUs for a sharded service (each floored at 2) — the
+    /// single-node default times N nodes would oversubscribe the host.
+    pub shepherds: Option<usize>,
+    /// Operator-cache budget, MiB (per node on a sharded service).
+    pub cache_mb: usize,
+    pub batching: BatchPolicy,
+    /// Hard cap on coalesced batch width.
+    pub max_batch: usize,
+    /// Simulated nodes; `> 1` selects the sharded service.
+    pub nodes: usize,
+    /// Router front ranks; `> 1` selects the sharded service even for
+    /// one node (the ingress itself scales out).
+    pub fronts: usize,
+    /// Routing policy of the sharded service.
+    pub route: RoutePolicy,
+    /// PUs per simulated node. `None` derives `pus / nodes` (min 1).
+    pub node_pus: Option<usize>,
+    /// Affinity handoff threshold (see [`ShardConfig::steal_threshold`]).
+    pub steal_threshold: usize,
+    /// Bucket-steal budget cap (see [`ShardConfig::max_yield_buckets`]).
+    pub max_yield_buckets: usize,
+    /// Default EDF deadline stamped on requests that lack their own
+    /// (consumed by the serve fronts, not by `build`).
+    pub deadline_ms: Option<u64>,
+    /// Admission control at the service door.
+    pub admission: AdmissionControl,
+    /// Fabric model between fronts and nodes (sharded service only).
+    pub comm: CommConfig,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        let sched = SchedConfig::default();
+        let shard = ShardConfig::default();
+        ServeConfig {
+            pus: 4,
+            shepherds: None,
+            cache_mb: sched.cache_budget_bytes >> 20,
+            batching: sched.batching,
+            max_batch: sched.max_batch,
+            nodes: 1,
+            fronts: 1,
+            route: shard.policy,
+            node_pus: None,
+            steal_threshold: shard.steal_threshold,
+            max_yield_buckets: shard.max_yield_buckets,
+            deadline_ms: None,
+            admission: AdmissionControl::default(),
+            comm: CommConfig::default(),
+        }
+    }
+}
+
+impl ServeConfig {
+    pub fn with_pus(mut self, pus: usize) -> Self {
+        self.pus = pus;
+        self
+    }
+
+    pub fn with_shepherds(mut self, shepherds: usize) -> Self {
+        self.shepherds = Some(shepherds);
+        self
+    }
+
+    pub fn with_cache_mb(mut self, cache_mb: usize) -> Self {
+        self.cache_mb = cache_mb;
+        self
+    }
+
+    pub fn with_batching(mut self, batching: BatchPolicy) -> Self {
+        self.batching = batching;
+        self
+    }
+
+    pub fn with_max_batch(mut self, max_batch: usize) -> Self {
+        self.max_batch = max_batch;
+        self
+    }
+
+    pub fn with_nodes(mut self, nodes: usize) -> Self {
+        self.nodes = nodes;
+        self
+    }
+
+    pub fn with_fronts(mut self, fronts: usize) -> Self {
+        self.fronts = fronts;
+        self
+    }
+
+    pub fn with_route(mut self, route: RoutePolicy) -> Self {
+        self.route = route;
+        self
+    }
+
+    pub fn with_node_pus(mut self, node_pus: usize) -> Self {
+        self.node_pus = Some(node_pus);
+        self
+    }
+
+    pub fn with_deadline_ms(mut self, deadline_ms: u64) -> Self {
+        self.deadline_ms = Some(deadline_ms);
+        self
+    }
+
+    pub fn with_admission(mut self, admission: AdmissionControl) -> Self {
+        self.admission = admission;
+        self
+    }
+
+    pub fn with_comm(mut self, comm: CommConfig) -> Self {
+        self.comm = comm;
+        self
+    }
+
+    /// Whether this configuration selects the sharded service.
+    pub fn sharded(&self) -> bool {
+        self.nodes > 1 || self.fronts > 1
+    }
+
+    /// Derived per-node PU budget.
+    pub fn node_pus(&self) -> usize {
+        self.node_pus
+            .unwrap_or_else(|| (self.pus / self.nodes.max(1)).max(1))
+    }
+
+    /// Derived shepherd count (see [`ServeConfig::shepherds`]).
+    pub fn nshepherds(&self) -> usize {
+        self.shepherds.unwrap_or_else(|| {
+            if self.sharded() {
+                self.node_pus().max(2)
+            } else {
+                self.pus.max(2)
+            }
+        })
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        crate::ensure!(self.pus >= 1, InvalidArg, "serve needs >= 1 PU");
+        crate::ensure!(self.nodes >= 1, InvalidArg, "serve needs >= 1 node");
+        crate::ensure!(self.fronts >= 1, InvalidArg, "serve needs >= 1 front");
+        crate::ensure!(self.max_batch >= 1, InvalidArg, "max_batch must be >= 1");
+        crate::ensure!(
+            self.steal_threshold >= 1,
+            InvalidArg,
+            "steal_threshold must be >= 1"
+        );
+        if let Some(s) = self.shepherds {
+            crate::ensure!(s >= 1, InvalidArg, "shepherds must be >= 1");
+        }
+        if let Some(p) = self.node_pus {
+            crate::ensure!(p >= 1, InvalidArg, "node_pus must be >= 1");
+        }
+        Ok(())
+    }
+
+    /// The per-scheduler configuration this selects (per node, on a
+    /// sharded service).
+    pub fn sched_config(&self) -> SchedConfig {
+        SchedConfig {
+            nshepherds: self.nshepherds(),
+            cache_budget_bytes: self.cache_mb << 20,
+            batching: self.batching,
+            max_batch: self.max_batch,
+            admission: self.admission,
+        }
+    }
+
+    /// The shard configuration this selects (meaningful when
+    /// [`sharded`](ServeConfig::sharded)).
+    pub fn shard_config(&self) -> ShardConfig {
+        ShardConfig {
+            nodes: self.nodes,
+            fronts: self.fronts,
+            policy: self.route,
+            steal_threshold: self.steal_threshold,
+            max_yield_buckets: self.max_yield_buckets,
+            pus_per_node: self.node_pus(),
+            sched: self.sched_config(),
+            admission: self.admission,
+            comm: self.comm.clone(),
+        }
+    }
+
+    /// Validate and stand the service up.
+    pub fn build(&self) -> Result<ServiceEngine> {
+        self.validate()?;
+        Ok(if self.sharded() {
+            ServiceEngine::Sharded(ShardedScheduler::new(self.shard_config())?)
+        } else {
+            ServiceEngine::Single(JobScheduler::new(
+                Machine::small_node(self.pus),
+                self.sched_config(),
+            ))
+        })
+    }
+
+    /// Convenience: build straight into the `Arc<dyn SolveService>`
+    /// most consumers want.
+    pub fn build_arc(&self) -> Result<Arc<dyn SolveService + Send + Sync>> {
+        Ok(Arc::new(self.build()?))
+    }
+
+    /// Human-readable one-liner of what `build` will stand up (the
+    /// serve banners print this).
+    pub fn describe(&self) -> String {
+        if self.sharded() {
+            format!(
+                "sharded solve service: {} nodes x {} PUs, {} front(s), {} routing, \
+                 {} shepherds/node, {} MiB operator cache/node, batching {:?}",
+                self.nodes,
+                self.node_pus(),
+                self.fronts,
+                self.route.name(),
+                self.nshepherds(),
+                self.cache_mb,
+                self.batching
+            )
+        } else {
+            format!(
+                "solve service: {} PUs, {} shepherds, {} MiB operator cache, batching {:?}",
+                self.pus,
+                self.nshepherds(),
+                self.cache_mb,
+                self.batching
+            )
+        }
+    }
+}
+
+/// A running solve service, either engine behind one type (and one
+/// [`SolveService`] impl) so consumers never match on topology.
+pub enum ServiceEngine {
+    Single(JobScheduler),
+    Sharded(ShardedScheduler),
+}
+
+impl ServiceEngine {
+    /// Router telemetry — `None` for the single-node engine.
+    pub fn shard_stats(&self) -> Option<ShardStats> {
+        match self {
+            ServiceEngine::Single(_) => None,
+            ServiceEngine::Sharded(s) => Some(s.shard_stats()),
+        }
+    }
+}
+
+impl SolveService for ServiceEngine {
+    fn submit(&self, spec: JobSpec) -> SubmitResult {
+        match self {
+            ServiceEngine::Single(s) => s.submit(spec),
+            ServiceEngine::Sharded(s) => s.submit(spec),
+        }
+    }
+    fn submit_from(&self, front: usize, spec: JobSpec) -> SubmitResult {
+        match self {
+            ServiceEngine::Single(s) => s.submit(spec),
+            ServiceEngine::Sharded(s) => s.submit_on(front, spec),
+        }
+    }
+    fn drain(&self) {
+        match self {
+            ServiceEngine::Single(s) => s.drain(),
+            ServiceEngine::Sharded(s) => s.drain(),
+        }
+    }
+    fn stats(&self) -> SchedStats {
+        match self {
+            ServiceEngine::Single(s) => s.stats(),
+            ServiceEngine::Sharded(s) => s.stats(),
+        }
+    }
+    fn shutdown(&self) -> usize {
+        match self {
+            ServiceEngine::Single(s) => s.shutdown(),
+            ServiceEngine::Sharded(s) => s.shutdown(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{MatrixSource, SolverKind};
+    use super::*;
+
+    #[test]
+    fn defaults_validate_and_derive_sensibly() {
+        let cfg = ServeConfig::default();
+        cfg.validate().unwrap();
+        assert!(!cfg.sharded());
+        assert_eq!(cfg.nshepherds(), 4, "single node: shepherds = PUs");
+        let sc = cfg.sched_config();
+        assert_eq!(sc.cache_budget_bytes, cfg.cache_mb << 20);
+        // sharded: per-node derivation kicks in
+        let cfg = cfg.with_nodes(4).with_pus(8);
+        assert!(cfg.sharded());
+        assert_eq!(cfg.node_pus(), 2);
+        assert_eq!(cfg.nshepherds(), 2, "sharded: shepherds = node PUs");
+        // explicit values always win over derivation
+        let cfg = cfg.with_shepherds(7).with_node_pus(3);
+        assert_eq!((cfg.nshepherds(), cfg.node_pus()), (7, 3));
+        let shard = cfg.shard_config();
+        assert_eq!(shard.nodes, 4);
+        assert_eq!(shard.sched.nshepherds, 7);
+        // fronts alone select the sharded engine
+        assert!(ServeConfig::default().with_fronts(2).sharded());
+    }
+
+    #[test]
+    fn validation_refuses_degenerate_configs() {
+        assert!(ServeConfig::default().with_pus(0).validate().is_err());
+        assert!(ServeConfig::default().with_nodes(0).validate().is_err());
+        assert!(ServeConfig::default().with_fronts(0).validate().is_err());
+        assert!(ServeConfig::default().with_max_batch(0).validate().is_err());
+        assert!(ServeConfig::default().with_shepherds(0).validate().is_err());
+        assert!(ServeConfig::default().with_node_pus(0).build().is_err());
+    }
+
+    #[test]
+    fn build_picks_the_engine_and_both_serve() {
+        let spec = || {
+            JobSpec::new(
+                MatrixSource::Named {
+                    name: "poisson7".into(),
+                    n: 64,
+                },
+                SolverKind::Cg {
+                    tol: 1e-8,
+                    max_iters: 500,
+                },
+            )
+        };
+        let single = ServeConfig::default().with_pus(2).build().unwrap();
+        assert!(matches!(single, ServiceEngine::Single(_)));
+        assert!(single.shard_stats().is_none());
+        let rep = single.submit(spec()).unwrap().wait().unwrap();
+        assert!(rep.matvecs > 0);
+        assert_eq!(single.shutdown(), 0);
+        let sharded = ServeConfig::default()
+            .with_pus(4)
+            .with_nodes(2)
+            .with_fronts(2)
+            .with_comm(CommConfig::instant())
+            .build()
+            .unwrap();
+        assert!(matches!(sharded, ServiceEngine::Sharded(_)));
+        let rep = sharded.submit(spec()).unwrap().wait().unwrap();
+        assert!(rep.matvecs > 0);
+        let st = sharded.shard_stats().unwrap();
+        assert_eq!(st.per_front.len(), 2);
+        assert_eq!(st.per_node.len(), 2);
+        assert_eq!(st.submitted, 1);
+        assert_eq!(sharded.shutdown(), 0);
+    }
+}

@@ -53,11 +53,22 @@
 
 pub mod batch;
 pub mod cache;
+pub mod client;
+pub mod config;
+pub(crate) mod proto;
 pub mod request;
+pub mod server;
 pub mod shard;
 
 pub use cache::{matrix_key, MatrixKey};
-pub use shard::{NodeStats, RoutePolicy, ShardConfig, ShardStats, ShardedScheduler};
+pub use client::{
+    Outcome, RejectReason, SolveClient, SolveRequest, SolveResponse, REQUEST_SCHEMA_VERSION,
+};
+pub use config::{ServeConfig, ServiceEngine};
+pub use server::{ListenSummary, NetServer};
+pub use shard::{
+    FrontStats, NodeStats, RoutePolicy, ShardConfig, ShardStats, ShardedScheduler,
+};
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -401,6 +412,9 @@ pub struct SchedConfig {
     /// Hard cap on coalesced width (also the nvecs the Auto policy
     /// tunes for).
     pub max_batch: usize,
+    /// Admission control at the submit door (default: admit everything,
+    /// the pre-backpressure behavior).
+    pub admission: AdmissionControl,
 }
 
 impl Default for SchedConfig {
@@ -410,9 +424,138 @@ impl Default for SchedConfig {
             cache_budget_bytes: 256 << 20,
             batching: BatchPolicy::Auto,
             max_batch: 8,
+            admission: AdmissionControl::default(),
         }
     }
 }
+
+/// Admission control: when to refuse a submit at the door instead of
+/// parking it without bound. Both knobs default to `None` (admit
+/// everything); a service under a watermark answers with a typed
+/// [`SubmitError`] whose reject reason travels over the wire
+/// ([`client::RejectReason`]) so clients can tell backpressure from
+/// failure.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AdmissionControl {
+    /// Refuse new submits while this many jobs are outstanding
+    /// (submitted but not completed). On the sharded service the
+    /// watermark is per node: a front only rejects when *every* node is
+    /// at the limit.
+    pub max_outstanding: Option<usize>,
+    /// Refuse deadlines shorter than this many milliseconds — the
+    /// service knows it cannot meet them, so it says so at submit time
+    /// instead of completing late.
+    pub min_deadline_ms: Option<u64>,
+}
+
+impl AdmissionControl {
+    /// Apply the policy to one submit. `outstanding` is the current
+    /// watermark; migrated bucket jobs must not come through here (they
+    /// were admitted by the node they left).
+    pub(crate) fn check(
+        &self,
+        outstanding: usize,
+        deadline_ms: Option<u64>,
+    ) -> std::result::Result<(), SubmitError> {
+        if let Some(limit) = self.max_outstanding {
+            let limit = limit.max(1);
+            if outstanding >= limit {
+                return Err(SubmitError::QueueFull { outstanding, limit });
+            }
+        }
+        if let (Some(floor), Some(d)) = (self.min_deadline_ms, deadline_ms) {
+            if d < floor {
+                return Err(SubmitError::DeadlineInfeasible {
+                    deadline_ms: d,
+                    floor_ms: floor,
+                });
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Why a service refused a submit. The admission variants are
+/// *backpressure*, not failure: the request was well-formed, the
+/// service chose not to take it, and a client should retry elsewhere
+/// or later. Each variant maps onto a wire reject reason
+/// ([`client::RejectReason`]), so in-process and TCP callers see the
+/// same taxonomy.
+#[derive(Debug)]
+pub enum SubmitError {
+    /// The outstanding-job watermark is at its configured limit
+    /// ([`AdmissionControl::max_outstanding`]) — on a sharded service,
+    /// at the limit on every node.
+    QueueFull { outstanding: usize, limit: usize },
+    /// The requested deadline is beneath the configured feasibility
+    /// floor ([`AdmissionControl::min_deadline_ms`]).
+    DeadlineInfeasible { deadline_ms: u64, floor_ms: u64 },
+    /// The service is shut down.
+    Shutdown,
+    /// The spec itself is malformed: unknown matrix name, rhs length
+    /// mismatch, a matrix key that fails its fingerprint check. The
+    /// inner error keeps the submit-time diagnostics callers match on.
+    Invalid(GhostError),
+}
+
+impl SubmitError {
+    /// Stable wire code (shared with the client protocol's reject
+    /// frames; 0 is reserved for "not a reject").
+    pub fn code(&self) -> u8 {
+        match self {
+            SubmitError::QueueFull { .. } => 1,
+            SubmitError::DeadlineInfeasible { .. } => 2,
+            SubmitError::Shutdown => 3,
+            SubmitError::Invalid(_) => 4,
+        }
+    }
+
+    /// Whether this refusal is load-dependent backpressure (retrying
+    /// later may succeed) rather than a property of the request.
+    pub fn is_backpressure(&self) -> bool {
+        matches!(
+            self,
+            SubmitError::QueueFull { .. } | SubmitError::Shutdown
+        )
+    }
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::QueueFull { outstanding, limit } => write!(
+                f,
+                "submit rejected: queue full ({outstanding} outstanding >= limit {limit})"
+            ),
+            SubmitError::DeadlineInfeasible {
+                deadline_ms,
+                floor_ms,
+            } => write!(
+                f,
+                "submit rejected: deadline {deadline_ms} ms is beneath the \
+                 feasibility floor ({floor_ms} ms)"
+            ),
+            SubmitError::Shutdown => write!(f, "submit rejected: service is shut down"),
+            SubmitError::Invalid(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+impl From<SubmitError> for GhostError {
+    fn from(e: SubmitError) -> Self {
+        match e {
+            // validation refusals keep their original typed error (test
+            // and caller diagnostics match on it)
+            SubmitError::Invalid(inner) => inner,
+            other => GhostError::Task(other.to_string()),
+        }
+    }
+}
+
+/// What [`SolveService::submit`] returns: a handle, or a typed refusal.
+pub type SubmitResult = std::result::Result<JobHandle, SubmitError>;
 
 /// Scheduler telemetry.
 #[derive(Clone, Copy, Debug, Default)]
@@ -545,9 +688,11 @@ struct DirectJob {
     id: u64,
     deadline: Option<Instant>,
     submitted_at: Instant,
-    /// Verified client key, when provided: the shepherd then skips the
-    /// O(nnz) digest and goes straight to the keyed cache lookup.
-    key: Option<MatrixKey>,
+    /// The matrix's cache identity, resolved at submit (the verified
+    /// client key, or the digest computed once there). The shepherd
+    /// always goes straight to the keyed cache lookup — there is no
+    /// unkeyed submit path anymore.
+    key: MatrixKey,
 }
 
 struct SchedInner {
@@ -561,10 +706,12 @@ struct SchedInner {
     /// Named-matrix memo (build each generator once per scheduler).
     mats: Mutex<HashMap<(String, usize), Arc<Crs<f64>>>>,
     /// Every submitted-but-not-yet-completed job, so shutdown can fail
-    /// (rather than strand) jobs whose task never ran.
+    /// (rather than strand) jobs whose task never ran. Its size is the
+    /// admission watermark.
     jobs: Mutex<HashMap<u64, Arc<JobState>>>,
     next_id: AtomicU64,
     counters: Mutex<Counters>,
+    admission: AdmissionControl,
 }
 
 /// The uniform front door of a solve service. The single-node
@@ -573,8 +720,19 @@ struct SchedInner {
 /// [`request::serve_follow`]), the benches and the CLI drive either
 /// interchangeably.
 pub trait SolveService {
-    /// Submit a job for asynchronous execution.
-    fn submit(&self, spec: JobSpec) -> Result<JobHandle>;
+    /// Submit a job for asynchronous execution. A refusal is typed
+    /// ([`SubmitError`]): admission backpressure, shutdown, or a
+    /// malformed spec — the same taxonomy the wire protocol's reject
+    /// frames carry.
+    fn submit(&self, spec: JobSpec) -> SubmitResult;
+    /// [`SolveService::submit`] attributed to ingress front `front`
+    /// (multi-front services charge that front's intake account and
+    /// route its replies; `front` wraps modulo the front count).
+    /// Single-front services ignore the hint.
+    fn submit_from(&self, front: usize, spec: JobSpec) -> SubmitResult {
+        let _ = front;
+        self.submit(spec)
+    }
     /// Block until every submitted job has completed.
     fn drain(&self);
     /// Aggregate telemetry (summed across nodes for sharded services).
@@ -585,7 +743,7 @@ pub trait SolveService {
 }
 
 impl SolveService for JobScheduler {
-    fn submit(&self, spec: JobSpec) -> Result<JobHandle> {
+    fn submit(&self, spec: JobSpec) -> SubmitResult {
         JobScheduler::submit(self, spec)
     }
     fn drain(&self) {
@@ -621,6 +779,7 @@ impl JobScheduler {
                 jobs: Mutex::new(HashMap::new()),
                 next_id: AtomicU64::new(0),
                 counters: Mutex::new(Counters::default()),
+                admission: cfg.admission,
             }),
         }
     }
@@ -743,22 +902,40 @@ impl JobScheduler {
     /// Submit a job for asynchronous execution. Matrix resolution (and
     /// fingerprinting, for batch bucketing) happens here; assembly,
     /// autotuning and the solve itself run later on a shepherd under
-    /// the job's PU reservation.
-    pub fn submit(&self, spec: JobSpec) -> Result<JobHandle> {
-        let a = self.resolve_matrix(&spec.matrix)?;
+    /// the job's PU reservation. Refusals are typed: admission
+    /// backpressure ([`AdmissionControl`]) before any matrix work,
+    /// validation errors as [`SubmitError::Invalid`], submits to a
+    /// stopped service as [`SubmitError::Shutdown`] (a shutdown that
+    /// *races* the submit instead resolves the returned handle with a
+    /// cancellation error — either way no waiter strands).
+    pub fn submit(&self, spec: JobSpec) -> SubmitResult {
+        if self.queue.is_shut_down() {
+            return Err(SubmitError::Shutdown);
+        }
+        // admission next — a refusal must be cheap (no matrix
+        // resolution, no digest). Migrated bucket jobs bypass it: the
+        // node they left already admitted them, and dropping a job
+        // mid-migration would strand its front-side waiter.
+        if !spec.migrated {
+            let outstanding = self.inner.jobs.lock().unwrap().len();
+            self.inner.admission.check(outstanding, spec.deadline_ms)?;
+        }
+        let a = self
+            .resolve_matrix(&spec.matrix)
+            .map_err(SubmitError::Invalid)?;
         if let Some(b) = &spec.rhs {
-            crate::ensure!(
-                b.len() == a.nrows(),
-                DimMismatch,
-                "rhs length {} != matrix rows {}",
-                b.len(),
-                a.nrows()
-            );
+            if b.len() != a.nrows() {
+                return Err(SubmitError::Invalid(GhostError::DimMismatch(format!(
+                    "rhs length {} != matrix rows {}",
+                    b.len(),
+                    a.nrows()
+                ))));
+            }
         }
         // a client-provided key is verified (cheaply, by structure)
         // here so a bad key is a submit-time error, not a wrong answer
         let client_key = match spec.matrix_key {
-            Some(k) => Some(verify_client_key(k, &a)?),
+            Some(k) => Some(verify_client_key(k, &a).map_err(SubmitError::Invalid)?),
             None => None,
         };
         let id = self.inner.next_id.fetch_add(1, Ordering::SeqCst) + 1;
@@ -881,7 +1058,11 @@ impl JobScheduler {
                     id,
                     deadline,
                     submitted_at,
-                    key: client_key,
+                    // every path is keyed now: direct jobs pay the
+                    // digest here (once, at submit) exactly like the
+                    // batched arms, and the shepherd goes straight to
+                    // the keyed cache lookup
+                    key: client_key.unwrap_or_else(|| matrix_key(&a)),
                 };
                 self.queue.enqueue(topts, move |ctx| {
                     let res = sched.run_direct(&a, job, ctx.nthreads());
@@ -1133,10 +1314,7 @@ impl JobScheduler {
             key,
         } = job;
         let n = a.nrows();
-        let (op, cache_hit) = match key {
-            Some(k) => self.cache.get_or_assemble_keyed(k, a, nthreads)?,
-            None => self.cache.get_or_assemble(a, nthreads)?,
-        };
+        let (op, cache_hit) = self.cache.get_or_assemble_keyed(key, a, nthreads)?;
         let mut op = op.lock().unwrap();
         // a cached operator adopts THIS job's PU reservation
         op.set_nthreads(nthreads);

@@ -1,0 +1,417 @@
+//! Shared binary codec for solve-service payloads.
+//!
+//! One place encodes and decodes [`JobSpec`]s, [`JobReport`]s and
+//! [`SchedStats`] snapshots, whoever ships them: the shard fabric
+//! ([`super::shard`]) between router and node ranks, and the TCP serve
+//! front ([`super::client`]) between clients and the service. Both
+//! speak [`crate::comm::envelope`] (same version gate, same
+//! bounds-checked total decoding), so a fuzz line against this module
+//! covers every wire the service owns.
+//!
+//! Everything here is `pub(crate)`: the codec is an implementation
+//! detail of the protocols, not API.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::comm::envelope::{ByteReader, ByteWriter};
+use crate::core::{GhostError, Result};
+use crate::sparsemat::Crs;
+use crate::tune::Fingerprint;
+
+use super::cache::{CacheStats, MatrixKey};
+use super::{JobOutput, JobReport, JobSpec, MatrixSource, Priority, SchedStats, SolverKind};
+
+pub(crate) fn put_fingerprint(w: &mut ByteWriter, fp: &Fingerprint) {
+    w.put_str(fp.dtype);
+    w.put_usize(fp.nrows);
+    w.put_usize(fp.ncols);
+    w.put_usize(fp.nnz);
+    w.put_u64(fp.row_var_q);
+    w.put_usize(fp.max_row_len);
+    w.put_usize(fp.nvecs);
+}
+
+pub(crate) fn get_fingerprint(r: &mut ByteReader) -> Result<Fingerprint> {
+    let dtype: &'static str = match r.get_str()?.as_str() {
+        "f32" => "f32",
+        "f64" => "f64",
+        "c32" => "c32",
+        "c64" => "c64",
+        other => {
+            return Err(GhostError::Parse(format!(
+                "unknown dtype '{other}' in fingerprint envelope"
+            )))
+        }
+    };
+    Ok(Fingerprint {
+        dtype,
+        nrows: r.get_usize()?,
+        ncols: r.get_usize()?,
+        nnz: r.get_usize()?,
+        row_var_q: r.get_u64()?,
+        max_row_len: r.get_usize()?,
+        nvecs: r.get_usize()?,
+    })
+}
+
+pub(crate) fn put_spec(w: &mut ByteWriter, spec: &JobSpec) {
+    match &spec.matrix {
+        MatrixSource::Named { name, n } => {
+            w.put_u8(0);
+            w.put_str(name);
+            w.put_usize(*n);
+        }
+        MatrixSource::Mat(a) => {
+            w.put_u8(1);
+            w.put_usize(a.nrows());
+            w.put_usize(a.ncols());
+            w.put_usize_slice(a.rowptr());
+            w.put_i32_slice(a.colidx());
+            w.put_f64_slice(a.values());
+        }
+    }
+    match &spec.solver {
+        SolverKind::Cg { tol, max_iters } => {
+            w.put_u8(0);
+            w.put_f64(*tol);
+            w.put_usize(*max_iters);
+        }
+        SolverKind::BlockCg {
+            nrhs,
+            tol,
+            max_iters,
+        } => {
+            w.put_u8(1);
+            w.put_usize(*nrhs);
+            w.put_f64(*tol);
+            w.put_usize(*max_iters);
+        }
+        SolverKind::Lanczos { steps } => {
+            w.put_u8(2);
+            w.put_usize(*steps);
+        }
+        SolverKind::Kpm { moments, vectors } => {
+            w.put_u8(3);
+            w.put_usize(*moments);
+            w.put_usize(*vectors);
+        }
+        SolverKind::ChebFilter { degree, block } => {
+            w.put_u8(4);
+            w.put_usize(*degree);
+            w.put_usize(*block);
+        }
+    }
+    w.put_u8(match spec.priority {
+        Priority::Normal => 0,
+        Priority::High => 1,
+    });
+    w.put_usize(spec.nthreads);
+    w.put_opt_u64(spec.numanode.map(|n| n as u64));
+    w.put_u64(spec.seed);
+    match &spec.rhs {
+        Some(b) => {
+            w.put_bool(true);
+            w.put_f64_slice(b);
+        }
+        None => w.put_bool(false),
+    }
+    match &spec.matrix_key {
+        Some(k) => {
+            w.put_bool(true);
+            put_fingerprint(w, &k.fp);
+            w.put_u64(k.content);
+        }
+        None => w.put_bool(false),
+    }
+    w.put_opt_u64(spec.deadline_ms);
+    w.put_bool(spec.migrated);
+}
+
+pub(crate) fn get_spec(r: &mut ByteReader) -> Result<JobSpec> {
+    let matrix = match r.get_u8()? {
+        0 => MatrixSource::Named {
+            name: r.get_str()?,
+            n: r.get_usize()?,
+        },
+        1 => {
+            let nrows = r.get_usize()?;
+            let ncols = r.get_usize()?;
+            let rowptr = r.get_usize_vec()?;
+            let col = r.get_i32_vec()?;
+            let val = r.get_f64_vec()?;
+            MatrixSource::Mat(Arc::new(Crs::new(nrows, ncols, rowptr, col, val)?))
+        }
+        k => {
+            return Err(GhostError::Parse(format!(
+                "unknown matrix-source kind {k} in envelope"
+            )))
+        }
+    };
+    let solver = match r.get_u8()? {
+        0 => SolverKind::Cg {
+            tol: r.get_f64()?,
+            max_iters: r.get_usize()?,
+        },
+        1 => SolverKind::BlockCg {
+            nrhs: r.get_usize()?,
+            tol: r.get_f64()?,
+            max_iters: r.get_usize()?,
+        },
+        2 => SolverKind::Lanczos {
+            steps: r.get_usize()?,
+        },
+        3 => SolverKind::Kpm {
+            moments: r.get_usize()?,
+            vectors: r.get_usize()?,
+        },
+        4 => SolverKind::ChebFilter {
+            degree: r.get_usize()?,
+            block: r.get_usize()?,
+        },
+        k => {
+            return Err(GhostError::Parse(format!(
+                "unknown solver kind {k} in envelope"
+            )))
+        }
+    };
+    let priority = if r.get_u8()? == 1 {
+        Priority::High
+    } else {
+        Priority::Normal
+    };
+    let nthreads = r.get_usize()?;
+    let numanode = r.get_opt_u64()?.map(|n| n as usize);
+    let seed = r.get_u64()?;
+    let rhs = if r.get_bool()? {
+        Some(r.get_f64_vec()?)
+    } else {
+        None
+    };
+    let matrix_key = if r.get_bool()? {
+        Some(MatrixKey {
+            fp: get_fingerprint(r)?,
+            content: r.get_u64()?,
+        })
+    } else {
+        None
+    };
+    let deadline_ms = r.get_opt_u64()?;
+    let migrated = r.get_bool()?;
+    Ok(JobSpec {
+        matrix,
+        solver,
+        priority,
+        nthreads,
+        numanode,
+        seed,
+        rhs,
+        matrix_key,
+        deadline_ms,
+        migrated,
+    })
+}
+
+pub(crate) fn put_sched_stats(w: &mut ByteWriter, s: &SchedStats) {
+    w.put_u64(s.submitted);
+    w.put_u64(s.completed);
+    w.put_u64(s.failed);
+    w.put_u64(s.batches);
+    w.put_u64(s.batched_jobs);
+    w.put_usize(s.max_batch_width);
+    w.put_u64(s.block_batches);
+    w.put_u64(s.block_batched_jobs);
+    w.put_u64(s.deadline_jobs);
+    w.put_u64(s.deadline_missed);
+    w.put_u64(s.stolen_buckets);
+    w.put_u64(s.stolen_jobs);
+    w.put_u64(s.cache.hits);
+    w.put_u64(s.cache.misses);
+    w.put_u64(s.cache.evictions);
+    w.put_usize(s.cache.resident_bytes);
+    w.put_usize(s.cache.entries);
+}
+
+pub(crate) fn get_sched_stats(r: &mut ByteReader) -> Result<SchedStats> {
+    // field order mirrors put_sched_stats exactly (struct-literal field
+    // initializers evaluate in source order)
+    Ok(SchedStats {
+        submitted: r.get_u64()?,
+        completed: r.get_u64()?,
+        failed: r.get_u64()?,
+        batches: r.get_u64()?,
+        batched_jobs: r.get_u64()?,
+        max_batch_width: r.get_usize()?,
+        block_batches: r.get_u64()?,
+        block_batched_jobs: r.get_u64()?,
+        deadline_jobs: r.get_u64()?,
+        deadline_missed: r.get_u64()?,
+        stolen_buckets: r.get_u64()?,
+        stolen_jobs: r.get_u64()?,
+        cache: CacheStats {
+            hits: r.get_u64()?,
+            misses: r.get_u64()?,
+            evictions: r.get_u64()?,
+            resident_bytes: r.get_usize()?,
+            entries: r.get_usize()?,
+        },
+    })
+}
+
+pub(crate) fn put_output(w: &mut ByteWriter, out: &JobOutput) {
+    match out {
+        JobOutput::Solve {
+            x,
+            iterations,
+            final_residual,
+            converged,
+        } => {
+            w.put_u8(0);
+            w.put_usize(x.len());
+            for col in x {
+                w.put_f64_slice(col);
+            }
+            w.put_usize(*iterations);
+            w.put_f64(*final_residual);
+            w.put_bool(*converged);
+        }
+        JobOutput::Eigenvalues { values, iterations } => {
+            w.put_u8(1);
+            w.put_f64_slice(values);
+            w.put_usize(*iterations);
+        }
+        JobOutput::Moments { mu } => {
+            w.put_u8(2);
+            w.put_f64_slice(mu);
+        }
+        JobOutput::Filtered {
+            eigenvalues,
+            filter_applications,
+        } => {
+            w.put_u8(3);
+            w.put_f64_slice(eigenvalues);
+            w.put_usize(*filter_applications);
+        }
+    }
+}
+
+pub(crate) fn get_output(r: &mut ByteReader) -> Result<JobOutput> {
+    Ok(match r.get_u8()? {
+        0 => {
+            let ncols = r.get_usize()?;
+            let mut x = Vec::with_capacity(ncols.min(1024));
+            for _ in 0..ncols {
+                x.push(r.get_f64_vec()?);
+            }
+            JobOutput::Solve {
+                x,
+                iterations: r.get_usize()?,
+                final_residual: r.get_f64()?,
+                converged: r.get_bool()?,
+            }
+        }
+        1 => JobOutput::Eigenvalues {
+            values: r.get_f64_vec()?,
+            iterations: r.get_usize()?,
+        },
+        2 => JobOutput::Moments {
+            mu: r.get_f64_vec()?,
+        },
+        3 => JobOutput::Filtered {
+            eigenvalues: r.get_f64_vec()?,
+            filter_applications: r.get_usize()?,
+        },
+        k => {
+            return Err(GhostError::Parse(format!(
+                "unknown job-output kind {k} in envelope"
+            )))
+        }
+    })
+}
+
+/// A job outcome: `true` + report fields, or `false` + error text.
+/// Shared by the fabric's result envelopes and the TCP response frames.
+pub(crate) fn put_job_result(w: &mut ByteWriter, res: &Result<JobReport>) {
+    match res {
+        Ok(rep) => {
+            w.put_bool(true);
+            put_output(w, &rep.output);
+            w.put_usize(rep.nnz);
+            w.put_usize(rep.matvecs);
+            w.put_usize(rep.batched_width);
+            w.put_bool(rep.cache_hit);
+            w.put_u8(match rep.deadline_missed {
+                None => 0,
+                Some(false) => 1,
+                Some(true) => 2,
+            });
+            w.put_f64(rep.elapsed.as_secs_f64());
+        }
+        Err(e) => {
+            w.put_bool(false);
+            w.put_str(&e.to_string());
+        }
+    }
+}
+
+/// Inverse of [`put_job_result`]. `job_id` stamps the decoded report
+/// (the wire carries the id separately — whoever frames the result owns
+/// the id field).
+pub(crate) fn get_job_result(r: &mut ByteReader, job_id: u64) -> Result<Result<JobReport>> {
+    if r.get_bool()? {
+        let output = get_output(r)?;
+        let nnz = r.get_usize()?;
+        let matvecs = r.get_usize()?;
+        let batched_width = r.get_usize()?;
+        let cache_hit = r.get_bool()?;
+        let deadline_missed = match r.get_u8()? {
+            0 => None,
+            1 => Some(false),
+            2 => Some(true),
+            k => {
+                return Err(GhostError::Parse(format!(
+                    "unknown deadline-missed tag {k} in envelope"
+                )))
+            }
+        };
+        let elapsed = Duration::from_secs_f64(r.get_f64()?.max(0.0));
+        Ok(Ok(JobReport {
+            id: job_id,
+            output,
+            nnz,
+            matvecs,
+            batched_width,
+            cache_hit,
+            deadline_missed,
+            elapsed,
+            completed_at: Instant::now(),
+        }))
+    } else {
+        Ok(Err(GhostError::Task(r.get_str()?)))
+    }
+}
+
+/// (front job id, rebuilt spec) pairs shared by the yield and batch
+/// payloads — a stolen bucket travels as a batch of request envelopes.
+pub(crate) fn put_job_batch(w: &mut ByteWriter, jobs: &[(u64, JobSpec)]) {
+    w.put_usize(jobs.len());
+    for (id, spec) in jobs {
+        w.put_u64(*id);
+        put_spec(w, spec);
+    }
+}
+
+pub(crate) fn get_job_batch(r: &mut ByteReader) -> Result<Vec<(u64, JobSpec)>> {
+    let k = r.get_usize()?;
+    crate::ensure!(
+        k <= 1 << 20,
+        Parse,
+        "job batch of {k} entries exceeds any plausible bucket"
+    );
+    let mut jobs = Vec::with_capacity(k.min(1024));
+    for _ in 0..k {
+        let id = r.get_u64()?;
+        jobs.push((id, get_spec(r)?));
+    }
+    Ok(jobs)
+}

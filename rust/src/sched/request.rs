@@ -1,4 +1,5 @@
-//! JSONL request intake for `ghost serve`.
+//! JSONL request intake for `ghost serve` — a thin adapter onto the
+//! client API ([`super::client::SolveRequest`]).
 //!
 //! One request per line, flat JSON (hand-rolled parser shared with the
 //! tune cache — the crate is dependency-free). Example:
@@ -10,7 +11,15 @@
 //! {"id":4,"solver":"kpm","matrix":"hamiltonian","n":1024,"moments":64,"vectors":4}
 //! {"id":5,"solver":"cheb_filter","matrix":"poisson7","n":1000,"degree":16,"block":4}
 //! {"id":6,"solver":"cg","matrix":"poisson7","n":4096,"tol":1e-8,"deadline_ms":250}
+//! {"v":2,"id":7,"solver":"cg","matrix":"poisson7","n":4096,"tol":1e-8}
 //! ```
+//!
+//! **Versioning:** `"v"` declares the request schema version the line
+//! was written against; absent means 1 (the PR-3 schema). The
+//! compatibility rule is [`REQUEST_SCHEMA_VERSION`]'s: versions
+//! `1..=current` are accepted (fields added later take their documented
+//! defaults), anything newer is answered with a typed
+//! `"reject":"invalid"` response naming both versions.
 //!
 //! `deadline_ms` puts the job on the scheduler's EDF lane and reports
 //! `"deadline_missed"` in the response; the serve loops can also stamp
@@ -20,12 +29,15 @@
 //! `id` is the client's correlation label (echoed in the response line;
 //! the scheduler id is used when absent). Blank lines and lines starting
 //! with `#` are skipped. A malformed line produces an error *response*,
-//! not a server failure.
+//! not a server failure; an admission refusal produces a response with
+//! a machine-readable `"reject"` reason ([`reject_line`]).
 //!
 //! Two drive modes: [`serve_oneshot`] processes the file once and
 //! returns a throughput summary (the CI smoke path), [`serve_follow`]
 //! tails the file forever, submitting new lines as they are appended —
-//! the long-lived service loop, stopped externally.
+//! the long-lived service loop, stopped externally. Network intake
+//! (the same requests as binary frames over TCP) lives in
+//! [`super::server`].
 
 use std::io::Write;
 use std::path::Path;
@@ -34,16 +46,32 @@ use std::time::{Duration, Instant};
 use crate::core::{GhostError, Result};
 use crate::tune::json_field;
 
+use super::client::{RejectReason, SolveRequest, REQUEST_SCHEMA_VERSION};
 use super::{
     JobHandle, JobOutput, JobReport, JobSpec, MatrixSource, Priority, SchedStats,
-    SolveService, SolverKind,
+    SolveService, SolverKind, SubmitError,
 };
 
-/// A parsed request line: the client's correlation id (if any) plus the
-/// job to run.
+/// A parsed request line: the client's correlation id (if any), the
+/// schema version the line declared, and the job to run.
 pub struct Request {
     pub client_id: Option<u64>,
+    /// Declared request schema version (`"v"` field; absent = 1).
+    pub v: u64,
     pub spec: JobSpec,
+}
+
+impl Request {
+    /// The client-API request this line is an adapter for. Lines
+    /// without an `"id"` get correlation id 0 (the serve loops relabel
+    /// with the scheduler id on submit).
+    pub fn into_request(self) -> SolveRequest {
+        SolveRequest {
+            v: self.v,
+            client_id: self.client_id.unwrap_or(0),
+            spec: self.spec,
+        }
+    }
 }
 
 fn num<T: std::str::FromStr>(line: &str, key: &str) -> Option<T> {
@@ -101,6 +129,7 @@ pub fn parse_request(line: &str) -> Result<Option<Request>> {
     spec.deadline_ms = num(line, "deadline_ms");
     Ok(Some(Request {
         client_id: num(line, "id"),
+        v: num(line, "v").unwrap_or(1),
         spec,
     }))
 }
@@ -116,7 +145,7 @@ fn fmt_float(v: f64) -> String {
 /// Escape a message for embedding in a JSON string literal (error
 /// strings echo raw request text, which may contain quotes, backslashes
 /// or control characters — the response must stay parseable).
-fn json_escape(s: &str) -> String {
+pub fn json_escape(s: &str) -> String {
     let mut out = String::with_capacity(s.len());
     for c in s.chars() {
         match c {
@@ -184,6 +213,25 @@ pub fn response_line(label: u64, solver: &str, res: &Result<JobReport>) -> Strin
     }
 }
 
+/// Render a typed submit refusal as a response line: `"reject"` carries
+/// the machine-readable [`RejectReason`] name (so a client can tell
+/// backpressure from failure), `"error"` the human detail.
+pub fn reject_line(label: u64, solver: &str, e: &SubmitError) -> String {
+    reject_line_of(label, solver, RejectReason::of(e), &e.to_string())
+}
+
+/// The same line from an already-decoded rejection — `ghost client`
+/// prints wire rejects ([`super::client::Outcome::Rejected`]) through
+/// this, so the TCP and JSONL fronts emit identical response lines.
+pub fn reject_line_of(label: u64, solver: &str, reason: RejectReason, detail: &str) -> String {
+    format!(
+        "{{\"id\":{label},\"ok\":false,\"solver\":\"{solver}\",\"reject\":\"{}\",\
+         \"error\":\"{}\"}}",
+        reason.name(),
+        json_escape(detail)
+    )
+}
+
 /// Outcome of a [`serve_oneshot`] run.
 #[derive(Clone, Copy, Debug)]
 pub struct ServeSummary {
@@ -211,26 +259,37 @@ fn submit_line(
 ) -> Result<Option<Inflight>> {
     match parse_request(line) {
         Ok(None) => Ok(None),
-        Ok(Some(mut req)) => {
+        Ok(Some(req)) => {
+            let client_id = req.client_id;
+            let solver = req.spec.solver.name();
+            let sreq = req.into_request();
+            // the client-API compatibility gate: a line written against
+            // a future schema is refused, not mis-parsed
+            if let Err(e) = sreq.validate() {
+                writeln!(
+                    out,
+                    "{}",
+                    reject_line(client_id.unwrap_or(0), solver, &SubmitError::Invalid(e))
+                )?;
+                return Ok(None);
+            }
+            let mut spec = sreq.spec;
             // the serve-level default applies only to requests that do
             // not set their own deadline
-            if req.spec.deadline_ms.is_none() {
-                req.spec.deadline_ms = default_deadline_ms;
+            if spec.deadline_ms.is_none() {
+                spec.deadline_ms = default_deadline_ms;
             }
-            let solver = req.spec.solver.name();
-            match sched.submit(req.spec) {
+            match sched.submit(spec) {
                 Ok(handle) => Ok(Some(Inflight {
-                    label: req.client_id.unwrap_or_else(|| handle.id()),
+                    label: client_id.unwrap_or_else(|| handle.id()),
                     solver,
                     handle,
                 })),
                 Err(e) => {
-                    // a bad request fails its response, not the server
-                    writeln!(
-                        out,
-                        "{}",
-                        response_line(req.client_id.unwrap_or(0), solver, &Err(e))
-                    )?;
+                    // a refused request rejects its response — typed,
+                    // so backpressure is distinguishable — not the
+                    // server
+                    writeln!(out, "{}", reject_line(client_id.unwrap_or(0), solver, &e))?;
                     Ok(None)
                 }
             }
@@ -401,6 +460,28 @@ mod tests {
         .unwrap()
         .unwrap();
         assert_eq!(r.spec.deadline_ms, Some(250));
+        // versioning: absent "v" means schema v1; a declared version is
+        // carried into the client-API request and gated there
+        assert_eq!(r.v, 1);
+        let r = parse_request(
+            "{\"v\":2,\"id\":9,\"solver\":\"cg\",\"matrix\":\"poisson7\",\"n\":216}",
+        )
+        .unwrap()
+        .unwrap();
+        assert_eq!(r.v, 2);
+        let req = r.into_request();
+        assert_eq!(req.client_id, 9);
+        assert!(req.validate().is_ok());
+        let r = parse_request(
+            "{\"v\":99,\"solver\":\"cg\",\"matrix\":\"poisson7\",\"n\":216}",
+        )
+        .unwrap()
+        .unwrap();
+        let err = r.into_request().validate().unwrap_err().to_string();
+        assert!(
+            err.contains("v99") && err.contains(&format!("v{REQUEST_SCHEMA_VERSION}")),
+            "the refusal must name both versions: {err}"
+        );
         assert!(parse_request("").unwrap().is_none());
         assert!(parse_request("# a comment").unwrap().is_none());
         assert!(parse_request("{\"matrix\":\"poisson7\"}").is_err());
@@ -461,6 +542,31 @@ mod tests {
         assert!(line.contains("\"deadline_missed\":false"), "{line}");
         let line = response_line(1, "cg", &mk(Some(true)));
         assert!(line.contains("\"deadline_missed\":true"), "{line}");
+    }
+
+    #[test]
+    fn reject_lines_carry_the_machine_readable_reason() {
+        let line = reject_line(
+            4,
+            "cg",
+            &SubmitError::QueueFull {
+                outstanding: 3,
+                limit: 3,
+            },
+        );
+        assert!(line.contains("\"id\":4"), "{line}");
+        assert!(line.contains("\"ok\":false"), "{line}");
+        assert!(line.contains("\"reject\":\"queue_full\""), "{line}");
+        assert!(line.contains("queue full"), "{line}");
+        let line = reject_line(
+            5,
+            "cg",
+            &SubmitError::DeadlineInfeasible {
+                deadline_ms: 5,
+                floor_ms: 10,
+            },
+        );
+        assert!(line.contains("\"reject\":\"deadline_infeasible\""), "{line}");
     }
 
     #[test]

@@ -1,0 +1,364 @@
+//! Network ingress for the solve service: a length-prefixed TCP
+//! listener ([`NetServer`]) in front of any [`SolveService`].
+//!
+//! Frames carry the envelopes [`super::client`] defines —
+//! request/response/reject/shutdown — so the TCP front, the in-process
+//! client and the shard fabric all speak the one bounds-checked codec
+//! ([`crate::comm::envelope`], framed by [`crate::comm::net`]).
+//!
+//! Shape of the server:
+//!
+//! - one accept loop (non-blocking, polled, so a stop request is seen
+//!   promptly even while idle);
+//! - one reader thread per client connection — connection `k` is
+//!   pinned to ingress front `k` ([`SolveService::submit_from`]), so on
+//!   a multi-front sharded service concurrent clients spread across
+//!   router ranks and the per-front intake accounts show it;
+//! - one waiter thread per in-flight job, writing the response frame
+//!   when the job resolves (responses leave in *completion* order,
+//!   interleaved by a mutex on the write half — clients match by
+//!   `client_id`).
+//!
+//! **Admission refusals are answers, not errors**: a typed
+//! [`SubmitError`] becomes a reject frame with the matching
+//! [`RejectReason`] code, and the connection stays up. Only protocol
+//! violations (unreadable framing, a corrupt envelope) drop a
+//! connection.
+//!
+//! **Nothing strands on stop**: a client shutdown frame (or
+//! [`NetServer::stop_handle`]) stops the accept loop, half-closes the
+//! read side of every live connection (so blocked readers wake with a
+//! clean EOF), and then every connection thread joins its waiters —
+//! each accepted request still gets its response frame before the
+//! socket closes.
+
+use std::io::BufReader;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::comm::envelope::{ByteReader, Envelope};
+use crate::comm::net::{read_frame, write_frame};
+use crate::core::{GhostError, Result};
+
+use super::client::{
+    encode_reject, encode_response, RejectReason, K_CLIENT_REQUEST, K_CLIENT_SHUTDOWN,
+    REQUEST_SCHEMA_VERSION,
+};
+use super::proto::get_spec;
+use super::SolveService;
+
+/// What a listener did over its lifetime.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ListenSummary {
+    pub connections: u64,
+    pub requests: u64,
+    /// Requests answered with a successful report.
+    pub ok: u64,
+    /// Requests accepted but failed in execution.
+    pub failed: u64,
+    /// Requests refused at the door (typed reject frames).
+    pub rejected: u64,
+}
+
+#[derive(Default)]
+struct Counters {
+    connections: AtomicU64,
+    requests: AtomicU64,
+    ok: AtomicU64,
+    failed: AtomicU64,
+    rejected: AtomicU64,
+}
+
+impl Counters {
+    fn summary(&self) -> ListenSummary {
+        ListenSummary {
+            connections: self.connections.load(Ordering::SeqCst),
+            requests: self.requests.load(Ordering::SeqCst),
+            ok: self.ok.load(Ordering::SeqCst),
+            failed: self.failed.load(Ordering::SeqCst),
+            rejected: self.rejected.load(Ordering::SeqCst),
+        }
+    }
+}
+
+/// A TCP listener serving a [`SolveService`]. Bind, then
+/// [`run`](NetServer::run) (blocking) until a client sends a shutdown
+/// frame or [`stop_handle`](NetServer::stop_handle) is raised. The
+/// service itself is *not* shut down by the listener — the caller owns
+/// its lifecycle (and can keep serving other fronts).
+pub struct NetServer {
+    svc: Arc<dyn SolveService + Send + Sync>,
+    listener: TcpListener,
+    default_deadline_ms: Option<u64>,
+    stop: Arc<AtomicBool>,
+    counters: Arc<Counters>,
+}
+
+impl NetServer {
+    /// Bind the listener (pass port 0 for an OS-assigned port;
+    /// [`local_addr`](NetServer::local_addr) reports it).
+    /// `default_deadline_ms` stamps an EDF deadline on every request
+    /// that lacks its own, mirroring `serve --deadline-ms`.
+    pub fn bind<A: ToSocketAddrs>(
+        svc: Arc<dyn SolveService + Send + Sync>,
+        addr: A,
+        default_deadline_ms: Option<u64>,
+    ) -> Result<NetServer> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| GhostError::Comm(format!("bind failed: {e}")))?;
+        Ok(NetServer {
+            svc,
+            listener,
+            default_deadline_ms,
+            stop: Arc::new(AtomicBool::new(false)),
+            counters: Arc::new(Counters::default()),
+        })
+    }
+
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        self.listener
+            .local_addr()
+            .map_err(|e| GhostError::Comm(format!("local_addr failed: {e}")))
+    }
+
+    /// Raise to stop the accept loop from another thread (a client
+    /// shutdown frame raises the same flag).
+    pub fn stop_handle(&self) -> Arc<AtomicBool> {
+        self.stop.clone()
+    }
+
+    /// Serve until stopped. Every accepted connection gets a reader
+    /// thread; on stop, live connections are read-half-closed, drained
+    /// of their in-flight responses, and joined before this returns —
+    /// no response is lost to the stop.
+    pub fn run(&self) -> Result<ListenSummary> {
+        self.listener
+            .set_nonblocking(true)
+            .map_err(|e| GhostError::Comm(format!("nonblocking listener failed: {e}")))?;
+        let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+        // read-half clones of live connections, for waking blocked
+        // readers at stop time
+        let live: Arc<Mutex<Vec<TcpStream>>> = Arc::new(Mutex::new(Vec::new()));
+        let mut conn_idx = 0usize;
+        while !self.stop.load(Ordering::SeqCst) {
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    let _ = stream.set_nodelay(true);
+                    if let Ok(clone) = stream.try_clone() {
+                        live.lock().unwrap().push(clone);
+                    }
+                    self.counters.connections.fetch_add(1, Ordering::SeqCst);
+                    let svc = self.svc.clone();
+                    let stop = self.stop.clone();
+                    let counters = self.counters.clone();
+                    let deadline = self.default_deadline_ms;
+                    let front = conn_idx;
+                    conns.push(
+                        std::thread::Builder::new()
+                            .name(format!("ghost-net-conn-{conn_idx}"))
+                            .spawn(move || {
+                                handle_conn(svc, stream, front, deadline, stop, counters)
+                            })
+                            .expect("spawn net connection"),
+                    );
+                    conn_idx += 1;
+                    // reap finished connection threads so a long-lived
+                    // listener does not accumulate join handles
+                    let (done, open): (Vec<_>, Vec<_>) =
+                        conns.drain(..).partition(|h| h.is_finished());
+                    for h in done {
+                        let _ = h.join();
+                    }
+                    conns = open;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(GhostError::Comm(format!("accept failed: {e}"))),
+            }
+        }
+        // wake every blocked reader with a clean EOF; the write halves
+        // stay open so in-flight responses still go out
+        for s in live.lock().unwrap().iter() {
+            let _ = s.shutdown(Shutdown::Read);
+        }
+        for h in conns {
+            let _ = h.join();
+        }
+        Ok(self.counters.summary())
+    }
+}
+
+/// Serve one client connection: decode request frames, submit through
+/// the service (pinned to ingress front `front`), answer each with a
+/// response or a typed reject. Joins its waiter threads before
+/// returning, so closing the connection never strands a response.
+fn handle_conn(
+    svc: Arc<dyn SolveService + Send + Sync>,
+    stream: TcpStream,
+    front: usize,
+    default_deadline_ms: Option<u64>,
+    stop: Arc<AtomicBool>,
+    counters: Arc<Counters>,
+) {
+    let Ok(read_half) = stream.try_clone() else {
+        return;
+    };
+    let mut reader = BufReader::new(read_half);
+    let writer = Arc::new(Mutex::new(stream));
+    let mut waiters: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    let reject = |client_id: u64, reason: RejectReason, detail: &str| {
+        counters.rejected.fetch_add(1, Ordering::SeqCst);
+        let _ = write_frame(
+            &mut *writer.lock().unwrap(),
+            &encode_reject(client_id, reason, detail),
+        );
+    };
+    loop {
+        let frame = match read_frame(&mut reader) {
+            Ok(Some(f)) => f,
+            // clean hangup, read-half close at stop, or a protocol
+            // violation: stop reading either way (responses in flight
+            // are joined below)
+            Ok(None) | Err(_) => break,
+        };
+        let Ok(env) = Envelope::decode(&frame) else {
+            break; // corrupt envelope: framing can no longer be trusted
+        };
+        match env.kind {
+            K_CLIENT_SHUTDOWN => {
+                stop.store(true, Ordering::SeqCst);
+                break;
+            }
+            K_CLIENT_REQUEST => {
+                counters.requests.fetch_add(1, Ordering::SeqCst);
+                let mut r = ByteReader::new(&env.payload);
+                let header = r.get_u64().and_then(|v| r.get_u64().map(|id| (v, id)));
+                let Ok((v, client_id)) = header else {
+                    break; // no id to answer to: protocol violation
+                };
+                // version gate first: a future schema may encode specs
+                // in ways this build cannot parse, so refuse before
+                // parsing — naming both versions
+                if !(1..=REQUEST_SCHEMA_VERSION).contains(&v) {
+                    reject(
+                        client_id,
+                        RejectReason::Invalid,
+                        &format!(
+                            "unsupported request schema v{v} (this service speaks \
+                             v1..=v{REQUEST_SCHEMA_VERSION})"
+                        ),
+                    );
+                    continue;
+                }
+                let spec = get_spec(&mut r).and_then(|s| r.finish().map(|_| s));
+                let mut spec = match spec {
+                    Ok(s) => s,
+                    Err(e) => {
+                        reject(client_id, RejectReason::Invalid, &e.to_string());
+                        continue;
+                    }
+                };
+                if spec.deadline_ms.is_none() {
+                    spec.deadline_ms = default_deadline_ms;
+                }
+                match svc.submit_from(front, spec) {
+                    Ok(handle) => {
+                        let writer = writer.clone();
+                        let counters = counters.clone();
+                        let w = std::thread::Builder::new()
+                            .name("ghost-net-waiter".into())
+                            .spawn(move || {
+                                let res = handle.wait();
+                                if res.is_ok() {
+                                    counters.ok.fetch_add(1, Ordering::SeqCst);
+                                } else {
+                                    counters.failed.fetch_add(1, Ordering::SeqCst);
+                                }
+                                let _ = write_frame(
+                                    &mut *writer.lock().unwrap(),
+                                    &encode_response(client_id, &res),
+                                );
+                            })
+                            .expect("spawn net waiter");
+                        waiters.push(w);
+                    }
+                    Err(e) => reject(client_id, RejectReason::of(&e), &e.to_string()),
+                }
+            }
+            // unknown kinds are ignored, not fatal: a newer client may
+            // speak frames this build does not know
+            _ => continue,
+        }
+    }
+    for w in waiters {
+        let _ = w.join();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{
+        JobScheduler, JobSpec, MatrixSource, Outcome, SchedConfig, SolveClient, SolverKind,
+    };
+    use super::*;
+    use crate::topology::Machine;
+
+    #[test]
+    fn loopback_round_trip_and_clean_stop() {
+        let svc = Arc::new(JobScheduler::new(
+            Machine::small_node(2),
+            SchedConfig {
+                nshepherds: 2,
+                ..SchedConfig::default()
+            },
+        ));
+        let server = NetServer::bind(svc.clone(), "127.0.0.1:0", Some(60_000)).unwrap();
+        let addr = server.local_addr().unwrap();
+        let runner = std::thread::spawn(move || server.run().unwrap());
+        let mut client = SolveClient::connect(addr).unwrap();
+        let resp = client
+            .call(JobSpec::new(
+                MatrixSource::Named {
+                    name: "poisson7".into(),
+                    n: 64,
+                },
+                SolverKind::Cg {
+                    tol: 1e-8,
+                    max_iters: 500,
+                },
+            ))
+            .unwrap();
+        let rep = resp.report().unwrap();
+        assert!(rep.matvecs > 0);
+        // the listener stamped the default deadline
+        assert!(rep.deadline_missed.is_some(), "default deadline not stamped");
+        // a malformed spec is a typed reject, and the connection
+        // survives it
+        let mut bad = JobSpec::new(
+            MatrixSource::Named {
+                name: "nosuch".into(),
+                n: 64,
+            },
+            SolverKind::Lanczos { steps: 3 },
+        );
+        bad.deadline_ms = Some(60_000);
+        let resp = client.call(bad).unwrap();
+        match resp.outcome {
+            Outcome::Rejected { reason, detail } => {
+                assert_eq!(reason, super::super::RejectReason::Invalid);
+                assert!(detail.contains("nosuch"), "{detail}");
+            }
+            other => panic!("expected a typed reject, got {other:?}"),
+        }
+        client.shutdown_server().unwrap();
+        let summary = runner.join().unwrap();
+        assert_eq!(summary.connections, 1);
+        assert_eq!(summary.requests, 2);
+        assert_eq!((summary.ok, summary.failed, summary.rejected), (1, 0, 1));
+        assert_eq!(svc.shutdown(), 0, "no stranded jobs after the listener stopped");
+    }
+}

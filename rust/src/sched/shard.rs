@@ -1,16 +1,21 @@
 //! Sharded solve service: one [`JobScheduler`] per simulated-MPI rank,
-//! with a routing front-end.
+//! with a routing front-end that itself scales out.
 //!
 //! GHOST is "MPI+X" — resource arbitration and the task queue only see
 //! production-shaped load when requests flow *across* nodes, not just
 //! across shepherds inside one process. This module scales the PR-3
-//! solve service out over the simulated fabric ([`crate::comm`]): a
-//! front-end rank accepts [`JobSpec`]s, routes each to one of N node
-//! ranks, and every node runs its own scheduler (own task queue, own
-//! operator cache) driven by request/result envelopes
+//! solve service out over the simulated fabric ([`crate::comm`]):
+//! **multiple front ranks** accept [`JobSpec`]s (any front routes to
+//! any node; clients are spread round-robin and the TCP ingress pins
+//! each connection to a front), route each to one of N node ranks, and
+//! every node runs its own scheduler (own task queue, own operator
+//! cache) driven by request/result envelopes
 //! ([`crate::comm::envelope`]) — the affinity-aware job routing that
 //! task-based hybrid sparse solvers converge on (Lacoste et al.,
-//! arXiv:1405.2636).
+//! arXiv:1405.2636). The fronts share one affinity table, one set of
+//! per-node load accounts and one job map, so routing decisions are
+//! consistent whichever front a request enters through, and per-front
+//! intake accounts ([`FrontStats`]) show how the ingress load spread.
 //!
 //! Routing policies ([`RoutePolicy`]):
 //!
@@ -21,17 +26,28 @@
 //!   sighting uses hash-based fallback placement, diverted to the
 //!   least-loaded node when the hash home is already backed up (the
 //!   divert becomes the sticky home). When the home node's queue depth
-//!   exceeds [`ShardConfig::steal_threshold`] and another node is
+//!   exceeds the *effective* steal threshold and another node is
 //!   markedly lighter, the job is handed off to the least-loaded node
 //!   (work stealing — the handoff is one-off, the affinity table keeps
 //!   pointing at the home node).
 //! - **Hash**: stateless `key % nodes` placement.
 //! - **Load**: always the node with the fewest outstanding jobs.
 //!
-//! The router keeps per-node load accounts ([`NodeStats`]):
-//! outstanding-job and resident-bytes watermarks, routed/handoff
-//! counts, and the latest node-scheduler telemetry carried piggyback on
-//! result envelopes.
+//! **Deadline-aware routing:** each node's load account tracks how many
+//! of its outstanding jobs carry deadlines
+//! ([`NodeStats::outstanding_deadlines`], the node's EDF pressure).
+//! Pressure lowers the effective steal threshold
+//! (`steal_threshold - pressure`, floored at 1), so a node sitting on
+//! deadline work sheds new arrivals earlier, and it scales the
+//! bucket-steal budget: one steal round may ask for up to
+//! [`ShardConfig::max_yield_buckets`] parked buckets instead of one.
+//!
+//! **Admission control:** a front refuses a submit with a typed
+//! [`SubmitError`] when every node is at the configured
+//! outstanding-job watermark, or when a requested deadline is beneath
+//! the feasibility floor ([`AdmissionControl`]) — backpressure at the
+//! door instead of unbounded parking. Migrated bucket jobs never pass
+//! through admission: the node they left already admitted them.
 //!
 //! Determinism: results are *bitwise identical* to a single-node serve.
 //! Batching already demultiplexes bitwise (see [`super::batch`]), every
@@ -48,35 +64,44 @@
 //! a new-arrival handoff helps the job being routed, but the jobs
 //! *already parked* in the overloaded node's batch buckets would still
 //! wait out the backlog. When an affinity handoff fires, the front also
-//! sends the home node a bucket-steal request; the node atomically
-//! extracts its deepest parked bucket (its runners then find the bucket
-//! empty and return) and ships it back as a batch of self-contained
-//! request envelopes (`K_YIELD`). The front re-routes the whole batch
-//! to the least-loaded node in one `K_BATCH` envelope, where the jobs
-//! re-park on the same matrix key and re-coalesce. Each migrated job's
-//! right-hand side travels bitwise (or regenerates from its seed), so
-//! the demultiplexed results are bitwise identical to a no-stealing
-//! run — stealing is pure scheduling, invisible in the numbers.
+//! sends the home node a bucket-steal request carrying a bucket budget;
+//! the node atomically extracts up to that many of its deepest parked
+//! buckets (its runners then find them empty and return) and ships them
+//! back as batches of self-contained request envelopes (`K_YIELD`). The
+//! front re-routes each bucket to the then-least-loaded node in one
+//! `K_BATCH` envelope, where the jobs re-park on the same matrix key
+//! and re-coalesce. Each migrated job's right-hand side travels bitwise
+//! (or regenerates from its seed), so the demultiplexed results are
+//! bitwise identical to a no-stealing run — stealing is pure
+//! scheduling, invisible in the numbers.
 //! [`SchedStats::stolen_buckets`]/[`SchedStats::stolen_jobs`] count the
 //! migrations on the yielding node.
+//!
+//! Rank layout: fronts are ranks `0..F`, node `i` is rank `F + i`.
+//! Nodes receive requests from *any* front
+//! ([`Comm::recv_bytes_any`]) and answer to the front each request
+//! came from; shutdown is a cross-front handshake (one shutdown
+//! envelope per node, a final sweep of every front's request queue on
+//! the node, then one ack per front so every collector exits).
 
 use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, RwLock};
-use std::time::{Duration, Instant};
 
 use crate::comm::envelope::{ByteReader, ByteWriter, Envelope};
 use crate::comm::{Comm, CommConfig, World};
 use crate::core::{GhostError, Result};
-use crate::sparsemat::Crs;
 use crate::topology::Machine;
-use crate::tune::Fingerprint;
 
-use super::cache::{matrix_key, CacheStats, MatrixKey};
+use super::cache::{matrix_key, MatrixKey};
+use super::proto::{
+    get_job_batch, get_job_result, get_sched_stats, get_spec, put_job_batch, put_job_result,
+    put_sched_stats, put_spec,
+};
 use super::{
-    is_known_matrix, verify_client_key, JobHandle, JobOutput, JobReport, JobScheduler,
-    JobSpec, JobState, MatrixSource, Priority, SchedConfig, SchedStats, SolveService,
-    SolverKind,
+    is_known_matrix, verify_client_key, AdmissionControl, JobHandle, JobReport, JobScheduler,
+    JobSpec, JobState, MatrixSource, SchedConfig, SchedStats, SolveService, SubmitError,
+    SubmitResult,
 };
 
 /// How the front-end picks a node for each job.
@@ -119,15 +144,31 @@ impl RoutePolicy {
 pub struct ShardConfig {
     /// Simulated nodes (each gets its own scheduler + operator cache).
     pub nodes: usize,
+    /// Router front ranks (>= 1). Every front routes to every node
+    /// through the shared affinity table; round-robin submit — and the
+    /// TCP ingress's per-connection pinning — spread intake across
+    /// them so the router itself is not a single rank.
+    pub fronts: usize,
     pub policy: RoutePolicy,
     /// Affinity only: home-node queue depth at which a job is handed
     /// off to the least-loaded node (when that node trails by >= 2).
+    /// The node's EDF pressure is subtracted first — see
+    /// [`NodeStats::outstanding_deadlines`].
     pub steal_threshold: usize,
+    /// Most parked buckets one steal round may yield. The request's
+    /// actual budget is `1 + pressure / steal_threshold`, capped here —
+    /// a deadline-free backlog still migrates one bucket per round.
+    pub max_yield_buckets: usize,
     /// PUs of each simulated node's machine.
     pub pus_per_node: usize,
     /// Per-node scheduler configuration (shepherds, cache budget,
-    /// batching).
+    /// batching). Its admission field is ignored — the fronts own
+    /// admission; a node must never bounce a job the front admitted.
     pub sched: SchedConfig,
+    /// Front-door admission control: a submit is refused only when
+    /// *every* node is at the outstanding-job watermark (or the
+    /// deadline is beneath the floor).
+    pub admission: AdmissionControl,
     /// Fabric model the envelopes travel through.
     pub comm: CommConfig,
 }
@@ -136,10 +177,13 @@ impl Default for ShardConfig {
     fn default() -> Self {
         ShardConfig {
             nodes: 2,
+            fronts: 1,
             policy: RoutePolicy::Affinity,
             steal_threshold: 4,
+            max_yield_buckets: 2,
             pus_per_node: 2,
             sched: SchedConfig::default(),
+            admission: AdmissionControl::default(),
             comm: CommConfig::default(),
         }
     }
@@ -157,6 +201,11 @@ pub struct NodeStats {
     pub outstanding: usize,
     /// Outstanding-job watermark.
     pub peak_outstanding: usize,
+    /// How many outstanding jobs carry deadlines — the node's EDF
+    /// pressure. Subtracted from the steal threshold (a node busy with
+    /// deadline work sheds new arrivals earlier) and scales the
+    /// bucket-steal budget.
+    pub outstanding_deadlines: usize,
     /// Last reported operator-cache residency of the node.
     pub resident_bytes: usize,
     /// Resident-bytes watermark.
@@ -167,13 +216,24 @@ pub struct NodeStats {
     pub sched: SchedStats,
 }
 
-/// Front-end telemetry: global counters plus the per-node accounts.
+/// Per-front intake account: how much of the request stream entered
+/// through this front and how it resolved.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FrontStats {
+    pub submitted: u64,
+    pub completed: u64,
+    pub failed: u64,
+}
+
+/// Front-end telemetry: global counters plus the per-node and
+/// per-front accounts.
 #[derive(Clone, Debug)]
 pub struct ShardStats {
     pub submitted: u64,
     pub completed: u64,
     pub failed: u64,
     pub per_node: Vec<NodeStats>,
+    pub per_front: Vec<FrontStats>,
 }
 
 // ---------------------------------------------------------------------------
@@ -189,321 +249,15 @@ const K_SUBMIT: u8 = 1;
 const K_SHUTDOWN: u8 = 2;
 const K_RESULT: u8 = 3;
 const K_ACK: u8 = 4;
-/// Front → node: yield your deepest parked batch bucket.
+/// Front → node: yield up to `budget` parked batch buckets.
 const K_STEAL: u8 = 5;
-/// Node → front: the stolen bucket as (job id, spec) request pairs,
-/// plus a node-stats snapshot (empty pair list = nothing was parked).
+/// Node → front: the stolen buckets, each a list of (job id, spec)
+/// request pairs, plus a node-stats snapshot (an empty bucket list =
+/// nothing was parked).
 const K_YIELD: u8 = 6;
 /// Front → node: a re-routed stolen bucket — submitted as one batch so
 /// the jobs re-park together and re-coalesce.
 const K_BATCH: u8 = 7;
-
-fn put_fingerprint(w: &mut ByteWriter, fp: &Fingerprint) {
-    w.put_str(fp.dtype);
-    w.put_usize(fp.nrows);
-    w.put_usize(fp.ncols);
-    w.put_usize(fp.nnz);
-    w.put_u64(fp.row_var_q);
-    w.put_usize(fp.max_row_len);
-    w.put_usize(fp.nvecs);
-}
-
-fn get_fingerprint(r: &mut ByteReader) -> Result<Fingerprint> {
-    let dtype: &'static str = match r.get_str()?.as_str() {
-        "f32" => "f32",
-        "f64" => "f64",
-        "c32" => "c32",
-        "c64" => "c64",
-        other => {
-            return Err(GhostError::Parse(format!(
-                "unknown dtype '{other}' in fingerprint envelope"
-            )))
-        }
-    };
-    Ok(Fingerprint {
-        dtype,
-        nrows: r.get_usize()?,
-        ncols: r.get_usize()?,
-        nnz: r.get_usize()?,
-        row_var_q: r.get_u64()?,
-        max_row_len: r.get_usize()?,
-        nvecs: r.get_usize()?,
-    })
-}
-
-fn put_spec(w: &mut ByteWriter, spec: &JobSpec) {
-    match &spec.matrix {
-        MatrixSource::Named { name, n } => {
-            w.put_u8(0);
-            w.put_str(name);
-            w.put_usize(*n);
-        }
-        MatrixSource::Mat(a) => {
-            w.put_u8(1);
-            w.put_usize(a.nrows());
-            w.put_usize(a.ncols());
-            w.put_usize_slice(a.rowptr());
-            w.put_i32_slice(a.colidx());
-            w.put_f64_slice(a.values());
-        }
-    }
-    match &spec.solver {
-        SolverKind::Cg { tol, max_iters } => {
-            w.put_u8(0);
-            w.put_f64(*tol);
-            w.put_usize(*max_iters);
-        }
-        SolverKind::BlockCg {
-            nrhs,
-            tol,
-            max_iters,
-        } => {
-            w.put_u8(1);
-            w.put_usize(*nrhs);
-            w.put_f64(*tol);
-            w.put_usize(*max_iters);
-        }
-        SolverKind::Lanczos { steps } => {
-            w.put_u8(2);
-            w.put_usize(*steps);
-        }
-        SolverKind::Kpm { moments, vectors } => {
-            w.put_u8(3);
-            w.put_usize(*moments);
-            w.put_usize(*vectors);
-        }
-        SolverKind::ChebFilter { degree, block } => {
-            w.put_u8(4);
-            w.put_usize(*degree);
-            w.put_usize(*block);
-        }
-    }
-    w.put_u8(match spec.priority {
-        Priority::Normal => 0,
-        Priority::High => 1,
-    });
-    w.put_usize(spec.nthreads);
-    w.put_opt_u64(spec.numanode.map(|n| n as u64));
-    w.put_u64(spec.seed);
-    match &spec.rhs {
-        Some(b) => {
-            w.put_bool(true);
-            w.put_f64_slice(b);
-        }
-        None => w.put_bool(false),
-    }
-    match &spec.matrix_key {
-        Some(k) => {
-            w.put_bool(true);
-            put_fingerprint(w, &k.fp);
-            w.put_u64(k.content);
-        }
-        None => w.put_bool(false),
-    }
-    w.put_opt_u64(spec.deadline_ms);
-    w.put_bool(spec.migrated);
-}
-
-fn get_spec(r: &mut ByteReader) -> Result<JobSpec> {
-    let matrix = match r.get_u8()? {
-        0 => MatrixSource::Named {
-            name: r.get_str()?,
-            n: r.get_usize()?,
-        },
-        1 => {
-            let nrows = r.get_usize()?;
-            let ncols = r.get_usize()?;
-            let rowptr = r.get_usize_vec()?;
-            let col = r.get_i32_vec()?;
-            let val = r.get_f64_vec()?;
-            MatrixSource::Mat(Arc::new(Crs::new(nrows, ncols, rowptr, col, val)?))
-        }
-        k => {
-            return Err(GhostError::Parse(format!(
-                "unknown matrix-source kind {k} in envelope"
-            )))
-        }
-    };
-    let solver = match r.get_u8()? {
-        0 => SolverKind::Cg {
-            tol: r.get_f64()?,
-            max_iters: r.get_usize()?,
-        },
-        1 => SolverKind::BlockCg {
-            nrhs: r.get_usize()?,
-            tol: r.get_f64()?,
-            max_iters: r.get_usize()?,
-        },
-        2 => SolverKind::Lanczos {
-            steps: r.get_usize()?,
-        },
-        3 => SolverKind::Kpm {
-            moments: r.get_usize()?,
-            vectors: r.get_usize()?,
-        },
-        4 => SolverKind::ChebFilter {
-            degree: r.get_usize()?,
-            block: r.get_usize()?,
-        },
-        k => {
-            return Err(GhostError::Parse(format!(
-                "unknown solver kind {k} in envelope"
-            )))
-        }
-    };
-    let priority = if r.get_u8()? == 1 {
-        Priority::High
-    } else {
-        Priority::Normal
-    };
-    let nthreads = r.get_usize()?;
-    let numanode = r.get_opt_u64()?.map(|n| n as usize);
-    let seed = r.get_u64()?;
-    let rhs = if r.get_bool()? {
-        Some(r.get_f64_vec()?)
-    } else {
-        None
-    };
-    let matrix_key = if r.get_bool()? {
-        Some(MatrixKey {
-            fp: get_fingerprint(r)?,
-            content: r.get_u64()?,
-        })
-    } else {
-        None
-    };
-    let deadline_ms = r.get_opt_u64()?;
-    let migrated = r.get_bool()?;
-    Ok(JobSpec {
-        matrix,
-        solver,
-        priority,
-        nthreads,
-        numanode,
-        seed,
-        rhs,
-        matrix_key,
-        deadline_ms,
-        migrated,
-    })
-}
-
-fn put_sched_stats(w: &mut ByteWriter, s: &SchedStats) {
-    w.put_u64(s.submitted);
-    w.put_u64(s.completed);
-    w.put_u64(s.failed);
-    w.put_u64(s.batches);
-    w.put_u64(s.batched_jobs);
-    w.put_usize(s.max_batch_width);
-    w.put_u64(s.block_batches);
-    w.put_u64(s.block_batched_jobs);
-    w.put_u64(s.deadline_jobs);
-    w.put_u64(s.deadline_missed);
-    w.put_u64(s.stolen_buckets);
-    w.put_u64(s.stolen_jobs);
-    w.put_u64(s.cache.hits);
-    w.put_u64(s.cache.misses);
-    w.put_u64(s.cache.evictions);
-    w.put_usize(s.cache.resident_bytes);
-    w.put_usize(s.cache.entries);
-}
-
-fn get_sched_stats(r: &mut ByteReader) -> Result<SchedStats> {
-    // field order mirrors put_sched_stats exactly (struct-literal field
-    // initializers evaluate in source order)
-    Ok(SchedStats {
-        submitted: r.get_u64()?,
-        completed: r.get_u64()?,
-        failed: r.get_u64()?,
-        batches: r.get_u64()?,
-        batched_jobs: r.get_u64()?,
-        max_batch_width: r.get_usize()?,
-        block_batches: r.get_u64()?,
-        block_batched_jobs: r.get_u64()?,
-        deadline_jobs: r.get_u64()?,
-        deadline_missed: r.get_u64()?,
-        stolen_buckets: r.get_u64()?,
-        stolen_jobs: r.get_u64()?,
-        cache: CacheStats {
-            hits: r.get_u64()?,
-            misses: r.get_u64()?,
-            evictions: r.get_u64()?,
-            resident_bytes: r.get_usize()?,
-            entries: r.get_usize()?,
-        },
-    })
-}
-
-fn put_output(w: &mut ByteWriter, out: &JobOutput) {
-    match out {
-        JobOutput::Solve {
-            x,
-            iterations,
-            final_residual,
-            converged,
-        } => {
-            w.put_u8(0);
-            w.put_usize(x.len());
-            for col in x {
-                w.put_f64_slice(col);
-            }
-            w.put_usize(*iterations);
-            w.put_f64(*final_residual);
-            w.put_bool(*converged);
-        }
-        JobOutput::Eigenvalues { values, iterations } => {
-            w.put_u8(1);
-            w.put_f64_slice(values);
-            w.put_usize(*iterations);
-        }
-        JobOutput::Moments { mu } => {
-            w.put_u8(2);
-            w.put_f64_slice(mu);
-        }
-        JobOutput::Filtered {
-            eigenvalues,
-            filter_applications,
-        } => {
-            w.put_u8(3);
-            w.put_f64_slice(eigenvalues);
-            w.put_usize(*filter_applications);
-        }
-    }
-}
-
-fn get_output(r: &mut ByteReader) -> Result<JobOutput> {
-    Ok(match r.get_u8()? {
-        0 => {
-            let ncols = r.get_usize()?;
-            let mut x = Vec::with_capacity(ncols.min(1024));
-            for _ in 0..ncols {
-                x.push(r.get_f64_vec()?);
-            }
-            JobOutput::Solve {
-                x,
-                iterations: r.get_usize()?,
-                final_residual: r.get_f64()?,
-                converged: r.get_bool()?,
-            }
-        }
-        1 => JobOutput::Eigenvalues {
-            values: r.get_f64_vec()?,
-            iterations: r.get_usize()?,
-        },
-        2 => JobOutput::Moments {
-            mu: r.get_f64_vec()?,
-        },
-        3 => JobOutput::Filtered {
-            eigenvalues: r.get_f64_vec()?,
-            filter_applications: r.get_usize()?,
-        },
-        k => {
-            return Err(GhostError::Parse(format!(
-                "unknown job-output kind {k} in envelope"
-            )))
-        }
-    })
-}
 
 fn encode_submit(job_id: u64, spec: &JobSpec) -> Vec<u8> {
     let mut w = ByteWriter::new();
@@ -522,26 +276,7 @@ fn encode_shutdown() -> Vec<u8> {
 fn encode_result(job_id: u64, res: &Result<JobReport>, stats: &SchedStats) -> Vec<u8> {
     let mut w = ByteWriter::new();
     w.put_u64(job_id);
-    match res {
-        Ok(rep) => {
-            w.put_bool(true);
-            put_output(&mut w, &rep.output);
-            w.put_usize(rep.nnz);
-            w.put_usize(rep.matvecs);
-            w.put_usize(rep.batched_width);
-            w.put_bool(rep.cache_hit);
-            w.put_u8(match rep.deadline_missed {
-                None => 0,
-                Some(false) => 1,
-                Some(true) => 2,
-            });
-            w.put_f64(rep.elapsed.as_secs_f64());
-        }
-        Err(e) => {
-            w.put_bool(false);
-            w.put_str(&e.to_string());
-        }
-    }
+    put_job_result(&mut w, res);
     put_sched_stats(&mut w, stats);
     Envelope::new(K_RESULT, w.into_bytes()).encode()
 }
@@ -549,37 +284,7 @@ fn encode_result(job_id: u64, res: &Result<JobReport>, stats: &SchedStats) -> Ve
 fn decode_result(payload: &[u8]) -> Result<(u64, Result<JobReport>, SchedStats)> {
     let mut r = ByteReader::new(payload);
     let job_id = r.get_u64()?;
-    let res = if r.get_bool()? {
-        let output = get_output(&mut r)?;
-        let nnz = r.get_usize()?;
-        let matvecs = r.get_usize()?;
-        let batched_width = r.get_usize()?;
-        let cache_hit = r.get_bool()?;
-        let deadline_missed = match r.get_u8()? {
-            0 => None,
-            1 => Some(false),
-            2 => Some(true),
-            k => {
-                return Err(GhostError::Parse(format!(
-                    "unknown deadline-missed tag {k} in envelope"
-                )))
-            }
-        };
-        let elapsed = Duration::from_secs_f64(r.get_f64()?.max(0.0));
-        Ok(JobReport {
-            id: job_id,
-            output,
-            nnz,
-            matvecs,
-            batched_width,
-            cache_hit,
-            deadline_missed,
-            elapsed,
-            completed_at: Instant::now(),
-        })
-    } else {
-        Err(GhostError::Task(r.get_str()?))
-    };
+    let res = get_job_result(&mut r, job_id)?;
     let stats = get_sched_stats(&mut r)?;
     r.finish()?;
     Ok((job_id, res, stats))
@@ -600,48 +305,45 @@ fn decode_ack(payload: &[u8]) -> Result<(usize, SchedStats)> {
     Ok((cancelled, stats))
 }
 
-fn encode_steal() -> Vec<u8> {
-    Envelope::new(K_STEAL, Vec::new()).encode()
-}
-
-/// (front job id, rebuilt spec) pairs shared by the yield and batch
-/// payloads — a stolen bucket travels as a batch of request envelopes.
-fn put_job_batch(w: &mut ByteWriter, jobs: &[(u64, JobSpec)]) {
-    w.put_usize(jobs.len());
-    for (id, spec) in jobs {
-        w.put_u64(*id);
-        put_spec(w, spec);
-    }
-}
-
-fn get_job_batch(r: &mut ByteReader) -> Result<Vec<(u64, JobSpec)>> {
-    let k = r.get_usize()?;
-    crate::ensure!(
-        k <= 1 << 20,
-        Parse,
-        "job batch of {k} entries exceeds any plausible bucket"
-    );
-    let mut jobs = Vec::with_capacity(k.min(1024));
-    for _ in 0..k {
-        let id = r.get_u64()?;
-        jobs.push((id, get_spec(r)?));
-    }
-    Ok(jobs)
-}
-
-fn encode_yield(jobs: &[(u64, JobSpec)], stats: &SchedStats) -> Vec<u8> {
+fn encode_steal(max_buckets: u64) -> Vec<u8> {
     let mut w = ByteWriter::new();
-    put_job_batch(&mut w, jobs);
+    w.put_u64(max_buckets);
+    Envelope::new(K_STEAL, w.into_bytes()).encode()
+}
+
+fn decode_steal(payload: &[u8]) -> Result<u64> {
+    let mut r = ByteReader::new(payload);
+    let budget = r.get_u64()?;
+    r.finish()?;
+    Ok(budget)
+}
+
+fn encode_yield(buckets: &[Vec<(u64, JobSpec)>], stats: &SchedStats) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    w.put_usize(buckets.len());
+    for b in buckets {
+        put_job_batch(&mut w, b);
+    }
     put_sched_stats(&mut w, stats);
     Envelope::new(K_YIELD, w.into_bytes()).encode()
 }
 
-fn decode_yield(payload: &[u8]) -> Result<(Vec<(u64, JobSpec)>, SchedStats)> {
+#[allow(clippy::type_complexity)]
+fn decode_yield(payload: &[u8]) -> Result<(Vec<Vec<(u64, JobSpec)>>, SchedStats)> {
     let mut r = ByteReader::new(payload);
-    let jobs = get_job_batch(&mut r)?;
+    let nb = r.get_usize()?;
+    crate::ensure!(
+        nb <= 1 << 10,
+        Parse,
+        "yield of {nb} buckets exceeds any plausible steal budget"
+    );
+    let mut buckets = Vec::with_capacity(nb.min(64));
+    for _ in 0..nb {
+        buckets.push(get_job_batch(&mut r)?);
+    }
     let stats = get_sched_stats(&mut r)?;
     r.finish()?;
-    Ok((jobs, stats))
+    Ok((buckets, stats))
 }
 
 fn encode_batch(jobs: &[(u64, JobSpec)]) -> Vec<u8> {
@@ -688,20 +390,27 @@ fn named_hash(name: &str, n: usize) -> u64 {
     fnv(&parts)
 }
 
-#[derive(Default)]
-struct FrontCounters {
-    submitted: u64,
-    completed: u64,
-    failed: u64,
+/// One routed-but-unanswered job: its waiter state, whether it charged
+/// a node's EDF pressure, and the front whose intake account owns it.
+struct FrontJob {
+    state: Arc<JobState>,
+    deadline: bool,
+    front: usize,
 }
 
+/// The routing state every front rank shares: one affinity table, one
+/// set of load accounts, one job map — a request routes identically
+/// whichever front it enters through.
 struct Front {
     nodes: usize,
+    fronts: usize,
     policy: RoutePolicy,
     steal_threshold: usize,
+    max_yield_buckets: usize,
+    admission: AdmissionControl,
     next_id: AtomicU64,
     /// Jobs routed but not yet answered; paired with `idle` for drain.
-    jobs: Mutex<HashMap<u64, Arc<JobState>>>,
+    jobs: Mutex<HashMap<u64, FrontJob>>,
     idle: Condvar,
     /// Affinity table: route key → home node (bounded; see `route`).
     table: Mutex<HashMap<u64, usize>>,
@@ -709,7 +418,8 @@ struct Front {
     /// One in-flight bucket-steal request per node (locked after
     /// `loads` wherever both are held).
     steal_inflight: Mutex<Vec<bool>>,
-    counters: Mutex<FrontCounters>,
+    /// Per-front intake accounts (index = front rank).
+    counters: Mutex<Vec<FrontStats>>,
     /// Write-locked by shutdown so no submit — and no stolen-bucket
     /// re-route — can slip an envelope into a request FIFO after the
     /// shutdown envelope.
@@ -719,9 +429,21 @@ struct Front {
 }
 
 impl Front {
+    /// Typed admission: refuse when every node is at the
+    /// outstanding-job watermark (a single backed-up node is a routing
+    /// problem, not an admission problem) or the deadline is beneath
+    /// the floor.
+    fn admit(&self, deadline_ms: Option<u64>) -> std::result::Result<(), SubmitError> {
+        let min_outstanding = {
+            let loads = self.loads.lock().unwrap();
+            loads.iter().map(|l| l.outstanding).min().unwrap_or(0)
+        };
+        self.admission.check(min_outstanding, deadline_ms)
+    }
+
     /// Pick a node for `rkey` and charge the load account. Returns
-    /// (node, was-a-handoff, steal-parked-bucket-from).
-    fn route(&self, rkey: u64) -> (usize, bool, Option<usize>) {
+    /// (node, was-a-handoff, steal request as (node, bucket budget)).
+    fn route(&self, rkey: u64, has_deadline: bool) -> (usize, bool, Option<(usize, u64)>) {
         let mut loads = self.loads.lock().unwrap();
         let argmin = |loads: &[NodeStats]| -> usize {
             loads
@@ -742,8 +464,14 @@ impl Front {
                     table.clear();
                 }
                 let alt = argmin(&loads);
+                // EDF pressure lowers the handoff bar: a node sitting
+                // on deadline work sheds new arrivals earlier
                 let overloaded = |home: usize| {
-                    loads[home].outstanding >= self.steal_threshold.max(1)
+                    let eff = self
+                        .steal_threshold
+                        .saturating_sub(loads[home].outstanding_deadlines)
+                        .max(1);
+                    loads[home].outstanding >= eff
                         && loads[alt].outstanding + 2 <= loads[home].outstanding
                 };
                 match table.get(&rkey).copied() {
@@ -753,8 +481,9 @@ impl Front {
                     // the home node so the warm cache stays the target
                     // once the backlog clears. The handoff only helps
                     // THIS job; the home's already-parked buckets are
-                    // the rest of the backlog, so ask it to yield one
-                    // (at most one steal in flight per node).
+                    // the rest of the backlog, so ask it to yield (at
+                    // most one steal in flight per node), with a bucket
+                    // budget scaled by its EDF pressure.
                     Some(home) => {
                         let steal = {
                             let mut infl = self.steal_inflight.lock().unwrap();
@@ -762,7 +491,11 @@ impl Front {
                                 None
                             } else {
                                 infl[home] = true;
-                                Some(home)
+                                let budget = (1 + loads[home].outstanding_deadlines
+                                    / self.steal_threshold.max(1))
+                                .min(self.max_yield_buckets.max(1))
+                                    as u64;
+                                Some((home, budget))
                             }
                         };
                         (alt, true, steal)
@@ -788,14 +521,18 @@ impl Front {
         }
         l.outstanding += 1;
         l.peak_outstanding = l.peak_outstanding.max(l.outstanding);
+        if has_deadline {
+            l.outstanding_deadlines += 1;
+        }
         (node, handoff, steal_from)
     }
 
     /// Re-route a yielded bucket to the least-loaded node (≠ source) as
     /// one batch envelope, or fail the migrated jobs if the fabric is
-    /// shutting down. Runs on the source node's collector thread; the
-    /// gate read-lock is held across the send so the shutdown envelope
-    /// can never overtake the batch in the target's FIFO.
+    /// shutting down. Runs on a collector thread of the front that
+    /// requested the steal; the gate read-lock is held across the send
+    /// so the shutdown envelope can never overtake the batch in the
+    /// target's FIFO.
     fn reroute_stolen(&self, src: usize, jobs: Vec<(u64, JobSpec)>, comm: &Comm) {
         let gate = self.gate.read().unwrap();
         if *gate {
@@ -822,14 +559,21 @@ impl Front {
                 .map(|(i, _)| i)
                 .unwrap_or(src);
             let k = jobs.len();
+            let dls = jobs
+                .iter()
+                .filter(|(_, s)| s.deadline_ms.is_some())
+                .count();
             loads[src].outstanding = loads[src].outstanding.saturating_sub(k);
+            loads[src].outstanding_deadlines =
+                loads[src].outstanding_deadlines.saturating_sub(dls);
             let l = &mut loads[target];
             l.outstanding += k;
+            l.outstanding_deadlines += dls;
             l.handoffs += k as u64;
             l.peak_outstanding = l.peak_outstanding.max(l.outstanding);
             target
         };
-        let _ = comm.send_bytes(target + 1, TAG_REQ, encode_batch(&jobs));
+        let _ = comm.send_bytes(self.fronts + target, TAG_REQ, encode_batch(&jobs));
         drop(gate);
     }
 
@@ -861,21 +605,32 @@ impl Front {
         l.peak_resident_bytes = l.peak_resident_bytes.max(s.cache.resident_bytes);
     }
 
-    /// Resolve one answered job: credit the node, fulfill the handle,
-    /// wake drain(). Ordering matters: counters are bumped under the
-    /// result lock (before the waiter can wake) and the job leaves the
-    /// map only afterwards (before drain() can observe it empty), so
-    /// neither wait()-then-stats() nor drain()-then-stats() undercounts.
+    /// Resolve one answered job: credit the node and the owning front,
+    /// fulfill the handle, wake drain(). Ordering matters: counters are
+    /// bumped under the result lock (before the waiter can wake) and
+    /// the job leaves the map only afterwards (before drain() can
+    /// observe it empty), so neither wait()-then-stats() nor
+    /// drain()-then-stats() undercounts.
     fn complete(&self, node: usize, job_id: u64, res: Result<JobReport>) {
+        let entry = self
+            .jobs
+            .lock()
+            .unwrap()
+            .get(&job_id)
+            .map(|j| (j.state.clone(), j.deadline, j.front));
         {
             let mut loads = self.loads.lock().unwrap();
             loads[node].outstanding = loads[node].outstanding.saturating_sub(1);
+            if matches!(entry, Some((_, true, _))) {
+                loads[node].outstanding_deadlines =
+                    loads[node].outstanding_deadlines.saturating_sub(1);
+            }
         }
-        let state = self.jobs.lock().unwrap().get(&job_id).cloned();
         let ok = res.is_ok();
-        if let Some(state) = state {
+        if let Some((state, _, fidx)) = entry {
             state.fulfill_then(res, || {
                 let mut c = self.counters.lock().unwrap();
+                let c = &mut c[fidx];
                 if ok {
                     c.completed += 1;
                 } else {
@@ -890,58 +645,76 @@ impl Front {
 
 /// The sharded solve service. Dropping it shuts the fabric down.
 pub struct ShardedScheduler {
-    comm0: Comm,
+    /// One fabric handle per front rank (index = front).
+    comms: Vec<Comm>,
     front: Arc<Front>,
+    /// Round-robin front assignment for un-pinned submits.
+    rr: AtomicU64,
     threads: Mutex<Vec<std::thread::JoinHandle<()>>>,
 }
 
 impl ShardedScheduler {
     pub fn new(cfg: ShardConfig) -> Result<Self> {
         crate::ensure!(cfg.nodes >= 1, InvalidArg, "sharding needs >= 1 node");
-        let world = World::new(cfg.nodes + 1, cfg.comm.clone());
+        let fronts = cfg.fronts.max(1);
+        let world = World::new(fronts + cfg.nodes, cfg.comm.clone());
         let front = Arc::new(Front {
             nodes: cfg.nodes,
+            fronts,
             policy: cfg.policy,
             steal_threshold: cfg.steal_threshold,
+            max_yield_buckets: cfg.max_yield_buckets.max(1),
+            admission: cfg.admission,
             next_id: AtomicU64::new(0),
             jobs: Mutex::new(HashMap::new()),
             idle: Condvar::new(),
             table: Mutex::new(HashMap::new()),
             loads: Mutex::new(vec![NodeStats::default(); cfg.nodes]),
             steal_inflight: Mutex::new(vec![false; cfg.nodes]),
-            counters: Mutex::new(FrontCounters::default()),
+            counters: Mutex::new(vec![FrontStats::default(); fronts]),
             gate: RwLock::new(false),
             ack_cancelled: AtomicU64::new(0),
         });
-        let mut threads = Vec::with_capacity(2 * cfg.nodes);
+        // the fronts own admission; a node must never bounce a job the
+        // front already admitted
+        let mut scfg = cfg.sched.clone();
+        scfg.admission = AdmissionControl::default();
+        let mut threads = Vec::with_capacity(cfg.nodes * (1 + fronts));
         for i in 0..cfg.nodes {
-            let comm = world.rank(i + 1);
-            let scfg = cfg.sched.clone();
+            let comm = world.rank(fronts + i);
+            let node_cfg = scfg.clone();
             let pus = cfg.pus_per_node.max(1);
             threads.push(
                 std::thread::Builder::new()
                     .name(format!("ghost-shard-node-{i}"))
-                    .spawn(move || node_service(comm, scfg, pus))
+                    .spawn(move || node_service(comm, fronts, node_cfg, pus))
                     .expect("spawn shard node"),
             );
-            let comm = world.rank(0);
-            let f = front.clone();
-            threads.push(
-                std::thread::Builder::new()
-                    .name(format!("ghost-shard-collect-{i}"))
-                    .spawn(move || collector(comm, f, i))
-                    .expect("spawn shard collector"),
-            );
+            for f in 0..fronts {
+                let comm = world.rank(f);
+                let fr = front.clone();
+                threads.push(
+                    std::thread::Builder::new()
+                        .name(format!("ghost-shard-collect-{f}-{i}"))
+                        .spawn(move || collector(comm, fr, i, f))
+                        .expect("spawn shard collector"),
+                );
+            }
         }
         Ok(ShardedScheduler {
-            comm0: world.rank(0),
+            comms: (0..fronts).map(|f| world.rank(f)).collect(),
             front,
+            rr: AtomicU64::new(0),
             threads: Mutex::new(threads),
         })
     }
 
     pub fn nodes(&self) -> usize {
         self.front.nodes
+    }
+
+    pub fn fronts(&self) -> usize {
+        self.front.fronts
     }
 
     /// Derive the routing key of a spec on the front-end — without
@@ -974,34 +747,59 @@ impl ShardedScheduler {
         }
     }
 
-    /// Route a job to a node and ship it over the fabric.
-    pub fn submit(&self, mut spec: JobSpec) -> Result<JobHandle> {
+    /// Route a job to a node and ship it over the fabric, spreading
+    /// un-pinned submits round-robin across the fronts.
+    pub fn submit(&self, spec: JobSpec) -> SubmitResult {
+        let f = (self.rr.fetch_add(1, Ordering::Relaxed) as usize) % self.front.fronts;
+        self.submit_on(f, spec)
+    }
+
+    /// Route a job through a specific ingress front (`front_idx` wraps
+    /// modulo the front count). The TCP listener pins each client
+    /// connection to a front so its intake account shows where load
+    /// entered.
+    pub fn submit_on(&self, front_idx: usize, mut spec: JobSpec) -> SubmitResult {
+        let f = front_idx % self.front.fronts;
         let gate = self.front.gate.read().unwrap();
-        crate::ensure!(!*gate, Task, "sharded service is shut down");
-        let (rkey, key) = self.route_key(&spec)?;
+        if *gate {
+            return Err(SubmitError::Shutdown);
+        }
+        // admission before any matrix work: a refusal must be cheap
+        self.front.admit(spec.deadline_ms)?;
+        let (rkey, key) = self.route_key(&spec).map_err(SubmitError::Invalid)?;
         // the node must not re-digest what the front already identified
         spec.matrix_key = key;
-        let (node, _handoff, steal_from) = self.front.route(rkey);
+        let has_deadline = spec.deadline_ms.is_some();
+        let (node, _handoff, steal) = self.front.route(rkey, has_deadline);
         let id = self.front.next_id.fetch_add(1, Ordering::SeqCst) + 1;
         let state = JobState::new(id);
-        self.front.jobs.lock().unwrap().insert(id, state.clone());
-        self.front.counters.lock().unwrap().submitted += 1;
-        if let Err(e) = self
-            .comm0
-            .send_bytes(node + 1, TAG_REQ, encode_submit(id, &spec))
-        {
+        self.front.jobs.lock().unwrap().insert(
+            id,
+            FrontJob {
+                state: state.clone(),
+                deadline: has_deadline,
+                front: f,
+            },
+        );
+        self.front.counters.lock().unwrap()[f].submitted += 1;
+        let node_rank = self.front.fronts + node;
+        if let Err(e) = self.comms[f].send_bytes(node_rank, TAG_REQ, encode_submit(id, &spec)) {
             self.front.complete(
                 node,
                 id,
                 Err(GhostError::Comm(format!("request envelope not sent: {e}"))),
             );
         }
-        if let Some(src) = steal_from {
+        if let Some((src, budget)) = steal {
             // the routed job was handed off because `src` is backed up;
-            // ask it to also yield a parked bucket so the backlog
-            // itself migrates (the yield flows back on src's result
-            // stream and is re-routed by its collector)
-            let _ = self.comm0.send_bytes(src + 1, TAG_REQ, encode_steal());
+            // ask it to also yield parked buckets so the backlog itself
+            // migrates (the yield flows back on src's result stream to
+            // this front and is re-routed by its collector)
+            let _ = self.comms[f].send_bytes(
+                self.front.fronts + src,
+                TAG_REQ,
+                encode_steal(budget),
+            );
         }
         drop(gate);
         Ok(JobHandle { state })
@@ -1016,17 +814,17 @@ impl ShardedScheduler {
     }
 
     /// Aggregate scheduler telemetry across all nodes. Submit/complete/
-    /// fail counts are the front-end's (authoritative); node-local
+    /// fail counts are the fronts' (authoritative, summed); node-local
     /// counters are summed from the latest piggybacked snapshots.
     pub fn stats(&self) -> SchedStats {
         let c = self.front.counters.lock().unwrap();
         let loads = self.front.loads.lock().unwrap();
-        let mut s = SchedStats {
-            submitted: c.submitted,
-            completed: c.completed,
-            failed: c.failed,
-            ..SchedStats::default()
-        };
+        let mut s = SchedStats::default();
+        for fc in c.iter() {
+            s.submitted += fc.submitted;
+            s.completed += fc.completed;
+            s.failed += fc.failed;
+        }
         for l in loads.iter() {
             s.batches += l.sched.batches;
             s.batched_jobs += l.sched.batched_jobs;
@@ -1046,23 +844,32 @@ impl ShardedScheduler {
         s
     }
 
-    /// Router telemetry: per-node routed/handoff counts and
-    /// outstanding/resident watermarks.
+    /// Router telemetry: per-node routed/handoff counts,
+    /// outstanding/resident watermarks, per-front intake accounts.
     pub fn shard_stats(&self) -> ShardStats {
         let c = self.front.counters.lock().unwrap();
         let loads = self.front.loads.lock().unwrap();
+        let (mut sub, mut comp, mut fail) = (0u64, 0u64, 0u64);
+        for fc in c.iter() {
+            sub += fc.submitted;
+            comp += fc.completed;
+            fail += fc.failed;
+        }
         ShardStats {
-            submitted: c.submitted,
-            completed: c.completed,
-            failed: c.failed,
+            submitted: sub,
+            completed: comp,
+            failed: fail,
             per_node: loads.clone(),
+            per_front: c.clone(),
         }
     }
 
     /// Stop every node scheduler: running jobs finish, parked jobs are
     /// failed, their failure envelopes flow back, and the fabric
-    /// threads are joined. Returns the number of jobs failed by the
-    /// shutdown. Idempotent.
+    /// threads are joined. One shutdown envelope per node suffices —
+    /// the node sweeps every front's request queue before stopping and
+    /// acks every front so all collectors exit. Returns the number of
+    /// jobs failed by the shutdown. Idempotent.
     pub fn shutdown(&self) -> usize {
         {
             let mut gate = self.front.gate.write().unwrap();
@@ -1070,10 +877,16 @@ impl ShardedScheduler {
                 return 0;
             }
             *gate = true;
-            // under the write gate no submit can enqueue after this:
-            // the shutdown envelope is the last message in each FIFO
+            // under the write gate no submit — from any front — can
+            // enqueue after this: every request envelope is already
+            // delivered, and the node's shutdown sweep picks up those
+            // recv_bytes_any's scan had not reached
             for node in 0..self.front.nodes {
-                let _ = self.comm0.send_bytes(node + 1, TAG_REQ, encode_shutdown());
+                let _ = self.comms[0].send_bytes(
+                    self.front.fronts + node,
+                    TAG_REQ,
+                    encode_shutdown(),
+                );
             }
         }
         let threads: Vec<_> = std::mem::take(&mut *self.threads.lock().unwrap());
@@ -1081,21 +894,21 @@ impl ShardedScheduler {
             let _ = t.join();
         }
         // failsafe: nothing can answer a job once the fabric is down
-        let stranded: Vec<Arc<JobState>> = self
+        let stranded: Vec<(Arc<JobState>, usize)> = self
             .front
             .jobs
             .lock()
             .unwrap()
             .drain()
-            .map(|(_, s)| s)
+            .map(|(_, j)| (j.state, j.front))
             .collect();
         let mut failed_now = 0usize;
-        for state in stranded {
+        for (state, fidx) in stranded {
             let err = Err(GhostError::Task(
                 "job cancelled by sharded-service shutdown".into(),
             ));
             if state.fulfill_then(err, || {
-                self.front.counters.lock().unwrap().failed += 1;
+                self.front.counters.lock().unwrap()[fidx].failed += 1;
             }) {
                 failed_now += 1;
             }
@@ -1112,8 +925,11 @@ impl Drop for ShardedScheduler {
 }
 
 impl SolveService for ShardedScheduler {
-    fn submit(&self, spec: JobSpec) -> Result<JobHandle> {
+    fn submit(&self, spec: JobSpec) -> SubmitResult {
         ShardedScheduler::submit(self, spec)
+    }
+    fn submit_from(&self, front: usize, spec: JobSpec) -> SubmitResult {
+        ShardedScheduler::submit_on(self, front, spec)
     }
     fn drain(&self) {
         ShardedScheduler::drain(self)
@@ -1126,13 +942,14 @@ impl SolveService for ShardedScheduler {
     }
 }
 
-/// Front-end thread collecting result envelopes from one node. Also
-/// handles the node's bucket yields: a yielded batch is re-routed to
-/// the least-loaded node from right here (this thread owns no locks the
-/// shutdown path waits on across a blocking call).
-fn collector(comm: Comm, front: Arc<Front>, node: usize) {
+/// Thread of front `front_idx` collecting result envelopes from one
+/// node. Also handles the node's bucket yields: each yielded bucket is
+/// re-routed to the then-least-loaded node from right here (this thread
+/// owns no locks the shutdown path waits on across a blocking call).
+fn collector(comm: Comm, front: Arc<Front>, node: usize, front_idx: usize) {
+    let node_rank = front.fronts + node;
     loop {
-        let Ok(bytes) = comm.recv_bytes(node + 1, TAG_RES) else {
+        let Ok(bytes) = comm.recv_bytes(node_rank, TAG_RES) else {
             return;
         };
         let Ok(env) = Envelope::decode(&bytes) else {
@@ -1147,21 +964,30 @@ fn collector(comm: Comm, front: Arc<Front>, node: usize) {
                 Err(_) => continue,
             },
             K_YIELD => {
-                let Ok((jobs, stats)) = decode_yield(&env.payload) else {
+                let Ok((buckets, stats)) = decode_yield(&env.payload) else {
                     continue;
                 };
                 front.note_node_stats(node, stats);
                 front.steal_inflight.lock().unwrap()[node] = false;
-                if !jobs.is_empty() {
-                    front.reroute_stolen(node, jobs, &comm);
+                // each bucket re-routes independently: the least-loaded
+                // target is re-picked after the previous bucket's jobs
+                // were charged, so a multi-bucket yield spreads out
+                for bucket in buckets {
+                    if !bucket.is_empty() {
+                        front.reroute_stolen(node, bucket, &comm);
+                    }
                 }
             }
             K_ACK => {
                 if let Ok((cancelled, stats)) = decode_ack(&env.payload) {
                     front.note_node_stats(node, stats);
-                    front
-                        .ack_cancelled
-                        .fetch_add(cancelled as u64, Ordering::SeqCst);
+                    // every front receives the ack; only one credits
+                    // the cancellation count
+                    if front_idx == 0 {
+                        front
+                            .ack_cancelled
+                            .fetch_add(cancelled as u64, Ordering::SeqCst);
+                    }
                 }
                 return;
             }
@@ -1171,22 +997,28 @@ fn collector(comm: Comm, front: Arc<Front>, node: usize) {
 }
 
 /// One simulated node: a local [`JobScheduler`] fed by request
-/// envelopes; every completed job is answered with a result envelope
-/// carrying the front-end job id and a node-stats snapshot. Bookkeeping
-/// for the steal protocol: `locals` maps local scheduler ids to
-/// front-end ids (so a yielded bucket can name its jobs on the wire)
-/// and `stolen` marks front-end ids whose local handles were resolved
-/// by a migration — their waiters skip answering, because the node the
-/// bucket moved to owns the real result.
-fn node_service(comm: Comm, cfg: SchedConfig, pus: usize) {
+/// envelopes from *any* front rank; every completed job is answered
+/// with a result envelope carrying the front-end job id and a
+/// node-stats snapshot, sent to the front the request entered through.
+/// Bookkeeping for the steal protocol: `locals` maps local scheduler
+/// ids to front-end ids (so a yielded bucket can name its jobs on the
+/// wire) and `stolen` marks front-end ids whose local handles were
+/// resolved by a migration — their waiters skip answering, because the
+/// node the bucket moved to owns the real result.
+fn node_service(comm: Comm, fronts: usize, cfg: SchedConfig, pus: usize) {
     let sched = JobScheduler::new(Machine::small_node(pus), cfg);
+    let front_ranks: Vec<usize> = (0..fronts).collect();
     let mut waiters: Vec<std::thread::JoinHandle<()>> = Vec::new();
     let locals: Arc<Mutex<HashMap<u64, u64>>> = Arc::new(Mutex::new(HashMap::new()));
     let stolen: Arc<Mutex<HashSet<u64>>> = Arc::new(Mutex::new(HashSet::new()));
-    let accept = |job_id: u64,
+    let accept = |reply_to: usize,
+                  job_id: u64,
                   spec_res: Result<JobSpec>,
                   waiters: &mut Vec<std::thread::JoinHandle<()>>| {
-        let submitted = spec_res.and_then(|spec| sched.submit(spec));
+        let submitted = match spec_res {
+            Ok(spec) => sched.submit(spec).map_err(GhostError::from),
+            Err(e) => Err(e),
+        };
         match submitted {
             Ok(handle) => {
                 locals.lock().unwrap().insert(handle.id(), job_id);
@@ -1206,14 +1038,14 @@ fn node_service(comm: Comm, cfg: SchedConfig, pus: usize) {
                             return;
                         }
                         let env = encode_result(job_id, &res, &s.stats());
-                        let _ = c.send_bytes(0, TAG_RES, env);
+                        let _ = c.send_bytes(reply_to, TAG_RES, env);
                     })
                     .expect("spawn shard waiter");
                 waiters.push(w);
             }
             Err(e) => {
                 let _ = comm.send_bytes(
-                    0,
+                    reply_to,
                     TAG_RES,
                     encode_result(job_id, &Err(e), &sched.stats()),
                 );
@@ -1221,7 +1053,7 @@ fn node_service(comm: Comm, cfg: SchedConfig, pus: usize) {
         }
     };
     loop {
-        let Ok(bytes) = comm.recv_bytes(0, TAG_REQ) else {
+        let Ok((src, bytes)) = comm.recv_bytes_any(&front_ranks, TAG_REQ) else {
             break;
         };
         let Ok(env) = Envelope::decode(&bytes) else {
@@ -1232,7 +1064,7 @@ fn node_service(comm: Comm, cfg: SchedConfig, pus: usize) {
                 let mut r = ByteReader::new(&env.payload);
                 let Ok(job_id) = r.get_u64() else { continue };
                 let spec = get_spec(&mut r).and_then(|spec| r.finish().map(|_| spec));
-                accept(job_id, spec, &mut waiters);
+                accept(src, job_id, spec, &mut waiters);
                 // reap finished waiters so a long-lived node does not
                 // accumulate join handles
                 let (done, live): (Vec<_>, Vec<_>) =
@@ -1248,43 +1080,87 @@ fn node_service(comm: Comm, cfg: SchedConfig, pus: usize) {
                 // first runner re-coalesces them
                 if let Ok(jobs) = decode_batch(&env.payload) {
                     for (job_id, spec) in jobs {
-                        accept(job_id, Ok(spec), &mut waiters);
+                        accept(src, job_id, Ok(spec), &mut waiters);
                     }
                 }
             }
             K_STEAL => {
-                // yield the deepest parked bucket: extract it (runners
-                // now find it empty), mark the migrating front ids
-                // BEFORE resolving the local states (so no waiter races
-                // the bookkeeping), then ship the batch back
-                let taken = sched.take_parked_bucket();
-                let batch: Vec<(u64, JobSpec)> = {
-                    let locals = locals.lock().unwrap();
-                    taken
-                        .iter()
-                        .filter_map(|j| {
-                            locals.get(&j.state.id).map(|&fid| (fid, j.spec.clone()))
-                        })
-                        .collect()
+                // yield up to `budget` of the deepest parked buckets:
+                // extract each (runners now find it empty), mark the
+                // migrating front ids BEFORE resolving the local states
+                // (so no waiter races the bookkeeping), then ship the
+                // batches back in one envelope
+                let Ok(budget) = decode_steal(&env.payload) else {
+                    continue;
                 };
-                {
-                    let mut st = stolen.lock().unwrap();
-                    for (fid, _) in &batch {
-                        st.insert(*fid);
+                let mut buckets: Vec<Vec<(u64, JobSpec)>> = Vec::new();
+                for _ in 0..budget.max(1) {
+                    let taken = sched.take_parked_bucket();
+                    if taken.is_empty() {
+                        break;
+                    }
+                    let batch: Vec<(u64, JobSpec)> = {
+                        let locals = locals.lock().unwrap();
+                        taken
+                            .iter()
+                            .filter_map(|j| {
+                                locals.get(&j.state.id).map(|&fid| (fid, j.spec.clone()))
+                            })
+                            .collect()
+                    };
+                    {
+                        let mut st = stolen.lock().unwrap();
+                        for (fid, _) in &batch {
+                            st.insert(*fid);
+                        }
+                    }
+                    sched.resolve_stolen(taken);
+                    if !batch.is_empty() {
+                        buckets.push(batch);
                     }
                 }
-                sched.resolve_stolen(taken);
-                let _ = comm.send_bytes(0, TAG_RES, encode_yield(&batch, &sched.stats()));
+                let _ = comm.send_bytes(src, TAG_RES, encode_yield(&buckets, &sched.stats()));
             }
             K_SHUTDOWN => {
+                // cross-front handshake: the gate guarantees every
+                // request envelope was delivered before this one, but
+                // recv_bytes_any's src-order scan may not have reached
+                // other fronts' queues — sweep them all before stopping
+                for &f in &front_ranks {
+                    while let Some(bytes) = comm.try_recv_bytes(f, TAG_REQ) {
+                        let Ok(env) = Envelope::decode(&bytes) else {
+                            continue;
+                        };
+                        match env.kind {
+                            K_SUBMIT => {
+                                let mut r = ByteReader::new(&env.payload);
+                                let Ok(job_id) = r.get_u64() else { continue };
+                                let spec =
+                                    get_spec(&mut r).and_then(|spec| r.finish().map(|_| spec));
+                                accept(f, job_id, spec, &mut waiters);
+                            }
+                            K_BATCH => {
+                                if let Ok(jobs) = decode_batch(&env.payload) {
+                                    for (job_id, spec) in jobs {
+                                        accept(f, job_id, Ok(spec), &mut waiters);
+                                    }
+                                }
+                            }
+                            // a late steal request yields nothing now
+                            _ => {}
+                        }
+                    }
+                }
                 // cancel parked jobs; their waiters wake with the
                 // cancellation error and answer it over the fabric
-                // before the ack (same-tag FIFO keeps the order)
+                // before the acks (same-tag FIFO keeps the order)
                 let cancelled = sched.shutdown();
                 for h in waiters.drain(..) {
                     let _ = h.join();
                 }
-                let _ = comm.send_bytes(0, TAG_RES, encode_ack(cancelled, &sched.stats()));
+                for &f in &front_ranks {
+                    let _ = comm.send_bytes(f, TAG_RES, encode_ack(cancelled, &sched.stats()));
+                }
                 break;
             }
             _ => continue,
@@ -1296,12 +1172,18 @@ fn node_service(comm: Comm, cfg: SchedConfig, pus: usize) {
 mod tests {
     use super::*;
     use crate::matgen;
+    use std::time::{Duration, Instant};
+
+    use super::super::{JobOutput, Priority};
 
     fn front(policy: RoutePolicy, nodes: usize, loads: Vec<usize>) -> Front {
         Front {
             nodes,
+            fronts: 1,
             policy,
             steal_threshold: 4,
+            max_yield_buckets: 2,
+            admission: AdmissionControl::default(),
             next_id: AtomicU64::new(0),
             jobs: Mutex::new(HashMap::new()),
             idle: Condvar::new(),
@@ -1316,7 +1198,7 @@ mod tests {
                     .collect(),
             ),
             steal_inflight: Mutex::new(vec![false; nodes]),
-            counters: Mutex::new(FrontCounters::default()),
+            counters: Mutex::new(vec![FrontStats::default()]),
             gate: RwLock::new(false),
             ack_cancelled: AtomicU64::new(0),
         }
@@ -1325,7 +1207,7 @@ mod tests {
     #[test]
     fn load_routing_picks_the_least_loaded_node() {
         let f = front(RoutePolicy::Load, 4, vec![2, 0, 3, 1]);
-        let (node, handoff, steal) = f.route(0xDEAD);
+        let (node, handoff, steal) = f.route(0xDEAD, false);
         assert_eq!(node, 1);
         assert!(!handoff);
         assert!(steal.is_none(), "load routing never bucket-steals");
@@ -1334,13 +1216,14 @@ mod tests {
         assert_eq!(loads[1].outstanding, 1);
         assert_eq!(loads[1].routed, 1);
         assert_eq!(loads[1].peak_outstanding, 1);
+        assert_eq!(loads[1].outstanding_deadlines, 0);
     }
 
     #[test]
     fn load_routing_never_picks_a_busy_node_over_an_idle_one() {
         let f = front(RoutePolicy::Load, 3, vec![2, 2, 0]);
         for _ in 0..2 {
-            let (node, _, _) = f.route(7);
+            let (node, _, _) = f.route(7, false);
             // node 2 starts idle: it must fill up to parity before any
             // node with >= 2 queued jobs receives more work
             assert_eq!(node, 2);
@@ -1353,8 +1236,8 @@ mod tests {
     fn affinity_routing_is_sticky_and_hands_off_under_overload() {
         let f = front(RoutePolicy::Affinity, 2, vec![0, 0]);
         let key = 42u64; // home = 42 % 2 = 0
-        let (n1, h1, s1) = f.route(key);
-        let (n2, h2, s2) = f.route(key);
+        let (n1, h1, s1) = f.route(key, false);
+        let (n2, h2, s2) = f.route(key, false);
         assert_eq!((n1, h1, s1), (0, false, None));
         assert_eq!(
             (n2, h2, s2),
@@ -1363,15 +1246,20 @@ mod tests {
         );
         // pile up the home node past the steal threshold while node 1
         // stays idle: the next job is handed off AND the home node is
-        // asked to yield a parked bucket
+        // asked to yield a parked bucket (budget 1 without deadline
+        // pressure)
         {
             let mut loads = f.loads.lock().unwrap();
             loads[0].outstanding = 6;
             loads[1].outstanding = 0;
         }
-        let (n3, h3, s3) = f.route(key);
+        let (n3, h3, s3) = f.route(key, false);
         assert_eq!((n3, h3), (1, true), "overloaded home must hand off");
-        assert_eq!(s3, Some(0), "a handoff requests a bucket steal from home");
+        assert_eq!(
+            s3,
+            Some((0, 1)),
+            "a handoff requests a bucket steal from home"
+        );
         // at most one steal in flight per node: the next handoff routes
         // but does not re-request
         {
@@ -1379,7 +1267,7 @@ mod tests {
             loads[0].outstanding = 6;
             loads[1].outstanding = 0;
         }
-        let (n3b, h3b, s3b) = f.route(key);
+        let (n3b, h3b, s3b) = f.route(key, false);
         assert_eq!((n3b, h3b, s3b), (1, true, None));
         // the yield arrived: the slot reopens
         f.steal_inflight.lock().unwrap()[0] = false;
@@ -1390,8 +1278,75 @@ mod tests {
             loads[0].outstanding = 0;
             loads[1].outstanding = 0;
         }
-        let (n4, h4, s4) = f.route(key);
+        let (n4, h4, s4) = f.route(key, false);
         assert_eq!((n4, h4, s4), (0, false, None));
+    }
+
+    #[test]
+    fn deadline_pressure_lowers_the_handoff_bar_and_scales_the_steal_budget() {
+        let f = front(RoutePolicy::Affinity, 2, vec![0, 0]);
+        let key = 42u64; // home = 0
+        let (n1, _, _) = f.route(key, true);
+        assert_eq!(n1, 0);
+        assert_eq!(f.loads.lock().unwrap()[0].outstanding_deadlines, 1);
+        // outstanding 3 is BELOW the configured threshold 4, but two
+        // outstanding deadline jobs lower the effective bar to 2: the
+        // next arrival hands off even though a deadline-free node would
+        // have kept it
+        {
+            let mut loads = f.loads.lock().unwrap();
+            loads[0].outstanding = 3;
+            loads[0].outstanding_deadlines = 2;
+            loads[1].outstanding = 0;
+        }
+        let (n2, h2, s2) = f.route(key, false);
+        assert_eq!((n2, h2), (1, true), "EDF pressure must lower the bar");
+        assert_eq!(s2, Some((0, 1)), "pressure 2 / threshold 4 → 1 bucket");
+        f.steal_inflight.lock().unwrap()[0] = false;
+        // heavy pressure scales the budget up to max_yield_buckets
+        {
+            let mut loads = f.loads.lock().unwrap();
+            loads[0].outstanding = 6;
+            loads[0].outstanding_deadlines = 4;
+            loads[1].outstanding = 0;
+        }
+        let (_, h3, s3) = f.route(key, false);
+        assert!(h3);
+        assert_eq!(s3, Some((0, 2)), "pressure 4 / threshold 4 → 2 buckets");
+        // completion drains the pressure gauge
+        f.loads.lock().unwrap()[0].outstanding_deadlines = 0;
+    }
+
+    #[test]
+    fn admission_rejects_only_when_every_node_is_at_the_watermark() {
+        let mut f = front(RoutePolicy::Load, 2, vec![3, 1]);
+        f.admission = AdmissionControl {
+            max_outstanding: Some(3),
+            min_deadline_ms: Some(10),
+        };
+        // node 1 is under the watermark: admitted (routing will send
+        // the job there)
+        assert!(f.admit(None).is_ok());
+        // both nodes saturated: typed queue-full refusal
+        f.loads.lock().unwrap()[1].outstanding = 3;
+        match f.admit(None) {
+            Err(SubmitError::QueueFull { outstanding, limit }) => {
+                assert_eq!((outstanding, limit), (3, 3));
+            }
+            other => panic!("expected QueueFull, got {other:?}"),
+        }
+        // an infeasible deadline is refused even with capacity
+        f.loads.lock().unwrap()[1].outstanding = 0;
+        match f.admit(Some(5)) {
+            Err(SubmitError::DeadlineInfeasible {
+                deadline_ms,
+                floor_ms,
+            }) => {
+                assert_eq!((deadline_ms, floor_ms), (5, 10));
+            }
+            other => panic!("expected DeadlineInfeasible, got {other:?}"),
+        }
+        assert!(f.admit(Some(10)).is_ok(), "the floor itself is feasible");
     }
 
     #[test]
@@ -1400,8 +1355,12 @@ mod tests {
         // up while node 1 is idle: the first sighting must be placed on
         // node 1 (a placement, not a handoff) ...
         let f = front(RoutePolicy::Affinity, 2, vec![5, 0]);
-        let (n1, h1, _) = f.route(4);
-        assert_eq!((n1, h1), (1, false), "first sighting diverts to the idle node");
+        let (n1, h1, _) = f.route(4, false);
+        assert_eq!(
+            (n1, h1),
+            (1, false),
+            "first sighting diverts to the idle node"
+        );
         // ... and that placement is sticky even after the hash home
         // frees up — the operator cache was warmed on node 1
         {
@@ -1409,15 +1368,19 @@ mod tests {
             loads[0].outstanding = 0;
             loads[1].outstanding = 0;
         }
-        let (n2, h2, _) = f.route(4);
-        assert_eq!((n2, h2), (1, false), "placement must stick to the warm cache");
+        let (n2, h2, _) = f.route(4, false);
+        assert_eq!(
+            (n2, h2),
+            (1, false),
+            "placement must stick to the warm cache"
+        );
     }
 
     #[test]
     fn hash_routing_is_stateless_and_stable() {
         let f = front(RoutePolicy::Hash, 3, vec![9, 9, 9]);
-        let a = f.route(10).0;
-        assert_eq!(a, f.route(10).0);
+        let a = f.route(10, false).0;
+        assert_eq!(a, f.route(10, false).0);
         assert_eq!(a, (10 % 3) as usize);
     }
 
@@ -1427,7 +1390,7 @@ mod tests {
         let key = matrix_key(&a);
         let mut spec = JobSpec::new(
             MatrixSource::Mat(a.clone()),
-            SolverKind::Cg {
+            super::super::SolverKind::Cg {
                 tol: 1e-9,
                 max_iters: 321,
             },
@@ -1454,7 +1417,7 @@ mod tests {
         assert_eq!(back.rhs.as_deref(), Some(&vec![1.5; a.nrows()][..]));
         assert_eq!(back.deadline_ms, Some(2500));
         match (&back.matrix, &back.solver) {
-            (MatrixSource::Mat(b), SolverKind::Cg { tol, max_iters }) => {
+            (MatrixSource::Mat(b), super::super::SolverKind::Cg { tol, max_iters }) => {
                 assert_eq!(b.rowptr(), a.rowptr());
                 assert_eq!(b.colidx(), a.colidx());
                 assert_eq!(b.values(), a.values());
@@ -1513,7 +1476,7 @@ mod tests {
         let key = matrix_key(&a);
         let mut spec = JobSpec::new(
             MatrixSource::Mat(a.clone()),
-            SolverKind::Cg {
+            super::super::SolverKind::Cg {
                 tol: 1e-8,
                 max_iters: 500,
             },
@@ -1522,27 +1485,32 @@ mod tests {
         spec.rhs = Some(vec![2.5; a.nrows()]);
         spec.deadline_ms = Some(750);
         spec.migrated = true;
-        let jobs = vec![(11u64, spec.clone()), (12u64, spec)];
+        let jobs = vec![(11u64, spec.clone()), (12u64, spec.clone())];
         let stats = SchedStats {
             stolen_buckets: 1,
             stolen_jobs: 2,
             ..SchedStats::default()
         };
-        let env = Envelope::decode(&encode_yield(&jobs, &stats)).unwrap();
+        // a multi-bucket yield round-trips bucket boundaries intact
+        let buckets = vec![jobs.clone(), vec![(13u64, spec)]];
+        let env = Envelope::decode(&encode_yield(&buckets, &stats)).unwrap();
         assert_eq!(env.kind, K_YIELD);
         let (back, st) = decode_yield(&env.payload).unwrap();
-        assert_eq!(back.len(), 2);
-        assert_eq!(back[0].0, 11);
-        assert_eq!(back[1].0, 12);
+        assert_eq!(back.len(), 2, "bucket boundaries must survive the wire");
+        assert_eq!(back[0].len(), 2);
+        assert_eq!(back[1].len(), 1);
+        assert_eq!(back[0][0].0, 11);
+        assert_eq!(back[0][1].0, 12);
+        assert_eq!(back[1][0].0, 13);
         assert_eq!((st.stolen_buckets, st.stolen_jobs), (1, 2));
-        for (_, s) in &back {
+        for (_, s) in back.iter().flatten() {
             assert_eq!(s.matrix_key, Some(key));
             assert_eq!(s.deadline_ms, Some(750));
             assert_eq!(s.rhs.as_deref(), Some(&vec![2.5; a.nrows()][..]));
             assert!(s.migrated, "migration marker must survive the wire");
         }
-        // the re-route leg carries the same pairs
-        let env = Envelope::decode(&encode_batch(&back)).unwrap();
+        // the re-route leg carries one bucket's pairs
+        let env = Envelope::decode(&encode_batch(&back[0])).unwrap();
         assert_eq!(env.kind, K_BATCH);
         let again = decode_batch(&env.payload).unwrap();
         assert_eq!(again.len(), 2);
@@ -1551,6 +1519,10 @@ mod tests {
         let env = Envelope::decode(&encode_yield(&[], &stats)).unwrap();
         let (none, _) = decode_yield(&env.payload).unwrap();
         assert!(none.is_empty());
+        // the steal request carries its bucket budget
+        let env = Envelope::decode(&encode_steal(2)).unwrap();
+        assert_eq!(env.kind, K_STEAL);
+        assert_eq!(decode_steal(&env.payload).unwrap(), 2);
     }
 
     #[test]
@@ -1566,19 +1538,23 @@ mod tests {
                 name: "nosuch".into(),
                 n: 64,
             },
-            SolverKind::Lanczos { steps: 3 },
+            super::super::SolverKind::Lanczos { steps: 3 },
         );
         assert!(s.submit(bad).is_err(), "unknown name must fail at submit");
         assert_eq!(s.shutdown(), 0);
-        // idempotent + submit-after-shutdown rejected
+        // idempotent + submit-after-shutdown rejected with the typed
+        // shutdown refusal
         assert_eq!(s.shutdown(), 0);
         let late = JobSpec::new(
             MatrixSource::Named {
                 name: "poisson7".into(),
                 n: 64,
             },
-            SolverKind::Lanczos { steps: 3 },
+            super::super::SolverKind::Lanczos { steps: 3 },
         );
-        assert!(s.submit(late).is_err());
+        match s.submit(late) {
+            Err(SubmitError::Shutdown) => {}
+            other => panic!("expected Shutdown refusal, got {other:?}"),
+        }
     }
 }

@@ -543,6 +543,14 @@ impl TaskQueue {
         }
     }
 
+    /// Whether [`TaskQueue::shutdown`] has run: enqueues are now
+    /// cancelled on arrival. Advisory — a racing shutdown can still
+    /// land between this check and an enqueue, so callers must handle
+    /// cancelled tasks either way.
+    pub fn is_shut_down(&self) -> bool {
+        self.inner.state.lock().unwrap().shutdown
+    }
+
     /// Stop the queue deterministically (finalization): running tasks
     /// finish, the shepherd threads are joined, and every still-pending
     /// task is *cancelled* — marked so its waiters wake up — and

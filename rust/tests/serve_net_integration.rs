@@ -1,0 +1,321 @@
+//! Integration tests for the network serve ingress
+//! (`ghost::sched::server` + `ghost::sched::client`): loopback TCP in
+//! front of the multi-front sharded service, with bitwise result
+//! parity against the in-process engine, typed backpressure under
+//! saturation, and the deadline admission floor — all stood up through
+//! [`ServeConfig`], the same surface `ghost serve` uses.
+
+use std::sync::Arc;
+
+use ghost::comm::CommConfig;
+use ghost::matgen;
+use ghost::sched::{
+    JobOutput, JobReport, JobSpec, MatrixSource, NetServer, Outcome, RejectReason,
+    RoutePolicy, ServeConfig, ServiceEngine, SolveClient, SolveService, SolverKind,
+};
+use ghost::sparsemat::Crs;
+
+/// Bitwise comparison of job outputs: the wire codec, the front fan-in
+/// and the shard fan-out must all be invisible in the numbers.
+fn assert_bitwise(got: &[JobReport], want: &[JobReport]) {
+    assert_eq!(got.len(), want.len());
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        match (&g.output, &w.output) {
+            (
+                JobOutput::Solve {
+                    x: xg,
+                    iterations: ig,
+                    final_residual: rg,
+                    ..
+                },
+                JobOutput::Solve {
+                    x: xw,
+                    iterations: iw,
+                    final_residual: rw,
+                    ..
+                },
+            ) => {
+                assert_eq!(ig, iw, "job {i} iterations");
+                assert_eq!(rg.to_bits(), rw.to_bits(), "job {i} residual");
+                assert_eq!(xg.len(), xw.len());
+                for (colg, colw) in xg.iter().zip(xw) {
+                    for (u, v) in colg.iter().zip(colw) {
+                        assert_eq!(
+                            u.to_bits(),
+                            v.to_bits(),
+                            "job {i}: solution diverged over TCP"
+                        );
+                    }
+                }
+            }
+            (
+                JobOutput::Eigenvalues { values: vg, .. },
+                JobOutput::Eigenvalues { values: vw, .. },
+            ) => {
+                assert_eq!(vg.len(), vw.len());
+                for (u, v) in vg.iter().zip(vw) {
+                    assert_eq!(u.to_bits(), v.to_bits(), "job {i}: Ritz values diverged");
+                }
+            }
+            other => panic!("job {i}: output kinds diverged: {other:?}"),
+        }
+    }
+}
+
+/// Submit `specs` pipelined over one TCP connection and return the
+/// reports in submit order (responses arrive in completion order and
+/// are re-sorted by client id).
+fn drive_client(addr: std::net::SocketAddr, specs: Vec<JobSpec>) -> Vec<JobReport> {
+    let mut client = SolveClient::connect(addr).expect("connect");
+    let ids: Vec<u64> = specs
+        .into_iter()
+        .map(|s| client.submit(s).expect("submit over TCP"))
+        .collect();
+    ids.into_iter()
+        .map(|id| {
+            client
+                .recv_for(id)
+                .expect("recv")
+                .report()
+                .expect("job must succeed")
+        })
+        .collect()
+}
+
+/// The acceptance scenario: 2 router fronts x 4 nodes behind a TCP
+/// listener, two concurrent clients — per-request results bitwise
+/// identical to the single-front in-process engine, both fronts'
+/// intake accounts charged, nothing stranded at stop.
+#[test]
+fn tcp_two_fronts_four_nodes_match_the_single_front_engine_bitwise() {
+    // structures unique to this test: tests in this binary run
+    // concurrently and share the tuner decision cache
+    let a: Arc<Crs<f64>> = Arc::new(matgen::poisson7::<f64>(7, 5, 4));
+    let h: Arc<Crs<f64>> = Arc::new(matgen::anderson::<f64>(19, 1.0, 5));
+    let mut specs = Vec::new();
+    for seed in 0..6u64 {
+        let mut s = JobSpec::new(
+            MatrixSource::Mat(if seed % 2 == 0 { a.clone() } else { h.clone() }),
+            SolverKind::Cg {
+                tol: 1e-9,
+                max_iters: 2000,
+            },
+        );
+        s.seed = seed;
+        specs.push(s);
+    }
+    specs.push(JobSpec::new(
+        MatrixSource::Mat(a.clone()),
+        SolverKind::BlockCg {
+            nrhs: 3,
+            tol: 1e-9,
+            max_iters: 2000,
+        },
+    ));
+    specs.push(JobSpec::new(
+        MatrixSource::Mat(h.clone()),
+        SolverKind::Lanczos { steps: 12 },
+    ));
+
+    // single-front in-process reference
+    let single = ServeConfig::default()
+        .with_pus(2)
+        .with_shepherds(2)
+        .build()
+        .unwrap();
+    let want: Vec<JobReport> = specs
+        .iter()
+        .map(|s| single.submit(s.clone()).unwrap())
+        .collect::<Vec<_>>()
+        .into_iter()
+        .map(|hd| hd.wait().unwrap())
+        .collect();
+    assert_eq!(single.shutdown(), 0);
+
+    // 2 fronts x 4 nodes behind the listener
+    let engine: Arc<ServiceEngine> = Arc::new(
+        ServeConfig::default()
+            .with_nodes(4)
+            .with_fronts(2)
+            .with_route(RoutePolicy::Affinity)
+            .with_node_pus(1)
+            .with_shepherds(1)
+            .with_comm(CommConfig::instant())
+            .build()
+            .unwrap(),
+    );
+    let server = NetServer::bind(engine.clone(), "127.0.0.1:0", None).unwrap();
+    let addr = server.local_addr().unwrap();
+    let runner = std::thread::spawn(move || server.run().unwrap());
+
+    // two concurrent clients split the stream; connection k is pinned
+    // to front k, so both router fronts take real traffic
+    let half = specs.len() / 2;
+    let (left, right) = (specs[..half].to_vec(), specs[half..].to_vec());
+    let t_left = std::thread::spawn(move || drive_client(addr, left));
+    let t_right = std::thread::spawn(move || drive_client(addr, right));
+    let got_left = t_left.join().unwrap();
+    let got_right = t_right.join().unwrap();
+    assert_bitwise(&got_left, &want[..half]);
+    assert_bitwise(&got_right, &want[half..]);
+
+    // both fronts' intake accounts saw the split, and they reconcile
+    let st = engine.shard_stats().expect("sharded engine");
+    assert_eq!(st.per_front.len(), 2);
+    let per_front: Vec<u64> = st.per_front.iter().map(|f| f.submitted).collect();
+    assert!(
+        per_front.iter().all(|&s| s >= 1),
+        "a front took no traffic: {per_front:?}"
+    );
+    assert_eq!(per_front.iter().sum::<u64>(), specs.len() as u64);
+    assert_eq!(st.submitted, specs.len() as u64);
+    assert_eq!(st.completed, specs.len() as u64);
+
+    // a control connection stops the listener; nothing strands
+    let mut control = SolveClient::connect(addr).unwrap();
+    control.shutdown_server().unwrap();
+    let summary = runner.join().unwrap();
+    assert_eq!(summary.connections, 3);
+    assert_eq!(summary.requests, specs.len() as u64);
+    assert_eq!(summary.ok, specs.len() as u64);
+    assert_eq!((summary.failed, summary.rejected), (0, 0));
+    assert_eq!(engine.shutdown(), 0, "stranded jobs after listener stop");
+}
+
+/// Saturation: a small outstanding-job watermark plus slow jobs forces
+/// the admission gate shut while the pipeline is still pouring in —
+/// the overflow comes back as typed `queue_full` rejections, every
+/// request gets exactly one response, and nothing is parked unboundedly
+/// or stranded.
+#[test]
+fn saturation_yields_typed_rejections_and_strands_nothing() {
+    use ghost::sched::AdmissionControl;
+    let engine: Arc<ServiceEngine> = Arc::new(
+        ServeConfig::default()
+            .with_nodes(2)
+            .with_fronts(2)
+            .with_route(RoutePolicy::Load)
+            .with_node_pus(1)
+            .with_shepherds(1)
+            .with_admission(AdmissionControl {
+                max_outstanding: Some(1),
+                min_deadline_ms: None,
+            })
+            .with_comm(CommConfig::instant())
+            .build()
+            .unwrap(),
+    );
+    let server = NetServer::bind(engine.clone(), "127.0.0.1:0", None).unwrap();
+    let addr = server.local_addr().unwrap();
+    let runner = std::thread::spawn(move || server.run().unwrap());
+
+    // slow jobs (named, so the wire stays light; assembly + a deep
+    // filter hold each single-PU node well past the submit burst)
+    let slow = || {
+        JobSpec::new(
+            MatrixSource::Named {
+                name: "poisson7".into(),
+                n: 1000,
+            },
+            SolverKind::ChebFilter {
+                degree: 16,
+                block: 4,
+            },
+        )
+    };
+    let total = 12usize;
+    let mut client = SolveClient::connect(addr).unwrap();
+    let ids: Vec<u64> = (0..total)
+        .map(|_| client.submit(slow()).expect("submit"))
+        .collect();
+    let mut ok = 0usize;
+    let mut rejected = 0usize;
+    let mut answered = std::collections::HashSet::new();
+    while client.pending() > 0 {
+        let resp = client.recv().unwrap();
+        assert!(
+            answered.insert(resp.client_id),
+            "duplicate response for {}",
+            resp.client_id
+        );
+        match resp.outcome {
+            Outcome::Report(_) => ok += 1,
+            Outcome::Rejected { reason, detail } => {
+                assert_eq!(reason, RejectReason::QueueFull, "{detail}");
+                assert!(detail.contains("watermark") || detail.contains("queue"), "{detail}");
+                rejected += 1;
+            }
+            Outcome::Failed(msg) => panic!("no job should fail outright: {msg}"),
+        }
+    }
+    // exactly one response per request, and the watermark really bit:
+    // with 2 nodes at limit 1 and a 12-deep burst, overflow is typed
+    // backpressure, not unbounded parking
+    assert_eq!(answered.len(), total);
+    assert!(ids.iter().all(|id| answered.contains(id)));
+    assert_eq!(ok + rejected, total);
+    assert!(ok >= 2, "the first submits must be admitted (ok = {ok})");
+    assert!(
+        rejected >= 1,
+        "a saturated service must reject, not queue unboundedly"
+    );
+    client.shutdown_server().unwrap();
+    let summary = runner.join().unwrap();
+    assert_eq!(summary.requests, total as u64);
+    assert_eq!(summary.ok, ok as u64);
+    assert_eq!(summary.rejected, rejected as u64);
+    assert_eq!(summary.failed, 0);
+    assert_eq!(engine.shutdown(), 0, "stranded jobs after saturation run");
+}
+
+/// The deadline admission floor crosses the wire as a typed
+/// `deadline_infeasible` rejection; feasible requests on the same
+/// connection keep flowing.
+#[test]
+fn deadline_floor_rejects_over_tcp() {
+    use ghost::sched::AdmissionControl;
+    let engine: Arc<ServiceEngine> = Arc::new(
+        ServeConfig::default()
+            .with_pus(2)
+            .with_shepherds(2)
+            .with_admission(AdmissionControl {
+                max_outstanding: None,
+                min_deadline_ms: Some(10_000),
+            })
+            .build()
+            .unwrap(),
+    );
+    let server = NetServer::bind(engine.clone(), "127.0.0.1:0", None).unwrap();
+    let addr = server.local_addr().unwrap();
+    let runner = std::thread::spawn(move || server.run().unwrap());
+    let mut client = SolveClient::connect(addr).unwrap();
+    let spec = || {
+        JobSpec::new(
+            MatrixSource::Named {
+                name: "poisson7".into(),
+                n: 216,
+            },
+            SolverKind::Cg {
+                tol: 1e-8,
+                max_iters: 1000,
+            },
+        )
+    };
+    let mut hot = spec();
+    hot.deadline_ms = Some(5);
+    let resp = client.call(hot).unwrap();
+    match resp.outcome {
+        Outcome::Rejected { reason, detail } => {
+            assert_eq!(reason, RejectReason::DeadlineInfeasible);
+            assert!(detail.contains("10000") || detail.contains("floor"), "{detail}");
+        }
+        other => panic!("expected deadline_infeasible, got {other:?}"),
+    }
+    // the connection survives the rejection and feasible work flows
+    let rep = client.call(spec()).unwrap().report().unwrap();
+    assert!(rep.matvecs > 0);
+    client.shutdown_server().unwrap();
+    let summary = runner.join().unwrap();
+    assert_eq!((summary.ok, summary.rejected), (1, 1));
+    assert_eq!(engine.shutdown(), 0);
+}

@@ -442,6 +442,7 @@ fn parked_buckets_are_stolen_under_overload_with_bitwise_parity() {
                     ..SchedConfig::default()
                 },
                 comm: CommConfig::instant(),
+                ..ShardConfig::default()
             })
             .unwrap();
             let h1: Vec<_> = phase1
