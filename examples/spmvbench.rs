@@ -15,20 +15,76 @@
 //! decision (demonstrated below before the engine runs).
 //!
 //! `--json <path>` writes the per-configuration model Gflop/s plus the
-//! autotuner's decision as one machine-readable JSON object — the CI
-//! perf-trajectory artifact.
+//! autotuner's decision — and the measured-vs-roofline `efficiency` of
+//! every swept kernel-variant configuration — as one machine-readable
+//! JSON object, the CI perf-trajectory artifact. `--compare-variants`
+//! prints the per-variant Gflop/s + efficiency table (Scalar vs
+//! Vectorized vs Simd at C in {8, 32}).
 //!
-//!     cargo run --release --example spmvbench [-- <iters>] [--json <path>]
+//!     cargo run --release --example spmvbench [-- <iters>] [--json <path>] [--compare-variants]
 
-use ghost::benchutil::Table;
+use std::time::Duration;
+
+use ghost::benchutil::{bench_for, gflops, Table};
 use ghost::comm::CommConfig;
 use ghost::core::Result;
 use ghost::hetero::{presets, Backend, HeteroSpmv, RankSetup};
+use ghost::kernels::spmv::{sell_spmv_mt, SpmvVariant};
 use ghost::matgen;
 use ghost::perfmodel;
 use ghost::sparsemat::SellMat;
 use ghost::topology;
 use ghost::tune;
+
+/// One measured (variant, C) point of the kernel-variant sweep.
+struct VariantRow {
+    variant: SpmvVariant,
+    c: usize,
+    gflops: f64,
+    model_gflops: f64,
+    efficiency: f64,
+}
+
+/// Sweep every kernel variant over C in {8, 32} (sigma = 4C) on the
+/// benchmark matrix, single-threaded so the variant axis — not the
+/// parallel scaling — is what the numbers compare. Every efficiency is
+/// asserted into (0, ~1.1]: the detected-device roofline is a ceiling
+/// (its bandwidth deliberately overestimates a single thread), so a
+/// value above ~1.1 means the perfmodel or the measurement is broken.
+fn compare_variants(a: &ghost::sparsemat::Crs<f64>) -> Result<Vec<VariantRow>> {
+    let dev = topology::detected_cpu_spec();
+    let flops = perfmodel::spmv_flops_crs(a, 1);
+    let mut rows = Vec::new();
+    for c in [8usize, 32] {
+        let sell = SellMat::from_crs(a, c, 4 * c)?;
+        let model = perfmodel::predict_spmmv(&dev, &sell, 1);
+        let mut xs = vec![0.0f64; sell.nrows_padded().max(sell.ncols())];
+        for (i, v) in xs.iter_mut().enumerate() {
+            *v = 0.5 + ((i % 7) as f64) * 0.125;
+        }
+        let mut ys = vec![0.0f64; sell.nrows_padded()];
+        for variant in SpmvVariant::ALL {
+            let st = bench_for(Duration::from_millis(100), 3, || {
+                sell_spmv_mt(&sell, &xs, &mut ys, variant, 1);
+            });
+            let g = gflops(flops, st.min);
+            let efficiency = g / model;
+            assert!(
+                efficiency > 0.0 && efficiency <= 1.1,
+                "{variant:?} C={c}: efficiency {efficiency:.3} outside (0, 1.1] \
+                 (measured {g:.2} vs roofline {model:.2} Gflop/s)"
+            );
+            rows.push(VariantRow {
+                variant,
+                c,
+                gflops: g,
+                model_gflops: model,
+                efficiency,
+            });
+        }
+    }
+    Ok(rows)
+}
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -37,6 +93,7 @@ fn main() -> Result<()> {
         .position(|a| a == "--json")
         .and_then(|i| args.get(i + 1))
         .cloned();
+    let want_compare = args.iter().any(|a| a == "--compare-variants");
     let iters: usize = args
         .iter()
         .find_map(|s| s.parse().ok())
@@ -83,14 +140,57 @@ fn main() -> Result<()> {
     // KPM) consume their right-hand sides in rounds of that width
     let blocked = tune::tune_block(&a, 8)?;
     println!(
-        "autotune (block, 8 rhs): SELL-{}-{} width {} — {:.2} Gflop/s measured \
-         vs {:.2} roofline",
+        "autotune (block, 8 rhs): SELL-{}-{} width {} {:?} — {:.2} Gflop/s \
+         measured vs {:.2} roofline",
         blocked.config.c,
         blocked.config.sigma,
         blocked.config.nvecs,
+        blocked.config.variant,
         blocked.measured_gflops,
         blocked.model_gflops,
     );
+
+    // --- measured-vs-model efficiency of the tuner's decisions. The
+    // tuned numbers may exceed the bandwidth roofline on a cache-resident
+    // matrix (the roofline assumes memory streaming), hence the looser
+    // 1.5 ceiling; a value past that means the model broke.
+    let tuned_efficiency = first.measured_gflops / first.model_gflops;
+    let block_efficiency = blocked.measured_gflops / blocked.model_gflops;
+    for (name, eff) in [("tuned", tuned_efficiency), ("block", block_efficiency)] {
+        assert!(
+            eff > 0.0 && eff <= 1.5,
+            "{name} efficiency {eff:.3} outside (0, 1.5]"
+        );
+    }
+    println!(
+        "efficiency(measured, model): tuned {tuned_efficiency:.3}, block {block_efficiency:.3}"
+    );
+
+    // --- the kernel-variant axis (tentpole sweep): Scalar vs Vectorized
+    // vs Simd at C in {8, 32}, each row with its roofline efficiency
+    let variant_rows = if want_compare || json_path.is_some() {
+        let rows = compare_variants(&a)?;
+        if want_compare {
+            let mut vt = Table::new(&["variant", "C", "Gflop/s", "model", "efficiency"]);
+            for r in &rows {
+                vt.row(&[
+                    format!("{:?}", r.variant),
+                    r.c.to_string(),
+                    format!("{:.2}", r.gflops),
+                    format!("{:.2}", r.model_gflops),
+                    format!("{:.3}", r.efficiency),
+                ]);
+            }
+            println!(
+                "\nkernel variants, single thread (simd feature {}):",
+                if cfg!(feature = "simd") { "on" } else { "off" }
+            );
+            vt.print();
+        }
+        rows
+    } else {
+        Vec::new()
+    };
 
     let cfg = first.config;
     println!(
@@ -216,15 +316,31 @@ fn main() -> Result<()> {
             .map(|(name, g)| format!("\"{name}\":{g:.4}"))
             .collect::<Vec<_>>()
             .join(",");
+        let variants_json = variant_rows
+            .iter()
+            .map(|r| {
+                format!(
+                    "{{\"variant\":\"{:?}\",\"c\":{},\"gflops\":{:.4},\
+                     \"model_gflops\":{:.4},\"efficiency\":{:.4}}}",
+                    r.variant, r.c, r.gflops, r.model_gflops, r.efficiency
+                )
+            })
+            .collect::<Vec<_>>()
+            .join(",");
         let line = format!(
             "{{\"bench\":\"spmvbench\",\"iters\":{iters},\"n\":{n},\"nnz\":{},\
              \"sell_c\":{},\"sell_sigma\":{},\"tuned_gflops\":{:.4},\
-             \"block_width\":{},\"model_gflops\":{{{configs}}}}}",
+             \"tuned_efficiency\":{tuned_efficiency:.4},\
+             \"block_efficiency\":{block_efficiency:.4},\
+             \"block_width\":{},\"simd_feature\":{},\
+             \"variants\":[{variants_json}],\
+             \"model_gflops\":{{{configs}}}}}",
             a.nnz(),
             cfg.c,
             cfg.sigma,
             first.measured_gflops,
             blocked.config.nvecs,
+            cfg!(feature = "simd"),
         );
         std::fs::write(&path, format!("{line}\n"))?;
         println!("wrote bench JSON to {path}");

@@ -435,7 +435,7 @@ fn fig9_vectorization() {
         });
         table.row(&["CRS (baseline)".into(), "1".into(), format!("{:.2}", gflops(fl, st.median))]);
     }
-    for variant in [SpmvVariant::Scalar, SpmvVariant::Vectorized] {
+    for variant in SpmvVariant::ALL {
         for nt in [1usize, 2, 4] {
             let mut ys = vec![C64::ZERO; sell.nrows_padded()];
             let st = bench_for(Duration::from_millis(200), 3, || {

@@ -162,6 +162,21 @@ pub trait Scalar:
     fn bytes() -> usize {
         std::mem::size_of::<Self>()
     }
+    /// View a slice of `Self` as `f64` when `Self` *is* `f64` — the safe
+    /// dispatch hook for the feature-gated x86 intrinsic kernels, which
+    /// only exist for double precision. Every other scalar returns
+    /// `None` and the portable kernels run instead.
+    #[inline(always)]
+    fn as_f64_slice(v: &[Self]) -> Option<&[f64]> {
+        let _ = v;
+        None
+    }
+    /// Mutable counterpart of [`Scalar::as_f64_slice`].
+    #[inline(always)]
+    fn as_f64_slice_mut(v: &mut [Self]) -> Option<&mut [f64]> {
+        let _ = v;
+        None
+    }
 }
 
 impl Scalar for f32 {
@@ -231,6 +246,14 @@ impl Scalar for f64 {
     #[inline(always)]
     fn mul_add(a: Self, b: Self, c: Self) -> Self {
         f64::mul_add(a, b, c)
+    }
+    #[inline(always)]
+    fn as_f64_slice(v: &[Self]) -> Option<&[f64]> {
+        Some(v)
+    }
+    #[inline(always)]
+    fn as_f64_slice_mut(v: &mut [Self]) -> Option<&mut [f64]> {
+        Some(v)
     }
 }
 

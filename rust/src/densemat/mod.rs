@@ -54,6 +54,34 @@ impl<S: Scalar> DenseMat<S> {
         Self::zeros(nrows, 1, Layout::ColMajor)
     }
 
+    /// [`DenseMat::zeros`] with first-touch NUMA placement: the buffer
+    /// is zero-initialized in stride-aligned blocks (whole rows for
+    /// row-major, whole columns for col-major) by threads pinned to the
+    /// owning NUMA node, so block-vector pages land next to the matrix
+    /// chunks that stream them.
+    pub fn zeros_numa(
+        nrows: usize,
+        ncols: usize,
+        layout: Layout,
+        numa: &crate::topology::NumaAlloc,
+    ) -> Self {
+        let stride = match layout {
+            Layout::RowMajor => ncols,
+            Layout::ColMajor => nrows,
+        };
+        let len = match layout {
+            Layout::RowMajor => nrows * stride,
+            Layout::ColMajor => ncols * stride,
+        };
+        DenseMat {
+            data: numa.alloc(len, stride.max(1), S::ZERO),
+            nrows,
+            ncols,
+            stride,
+            layout,
+        }
+    }
+
     pub fn from_fn(
         nrows: usize,
         ncols: usize,

@@ -15,6 +15,8 @@
 //! with `col_permute = true` (or sigma = 1) so A*x and the elementwise
 //! terms live in the same index space.
 
+use super::prefetch_read;
+use super::spmv::{SpmvVariant, PREFETCH_DIST};
 use crate::core::Scalar;
 use crate::densemat::{DenseMat, Layout};
 use crate::sparsemat::SellMat;
@@ -92,6 +94,26 @@ pub fn sell_spmv_fused<S: Scalar>(
     z: Option<&mut DenseMat<S>>,
     opts: &SpmvOpts<S>,
 ) -> crate::core::Result<FusedDots<S>> {
+    sell_spmv_fused_variant(a, x, y, z, opts, SpmvVariant::Vectorized)
+}
+
+/// [`sell_spmv_fused`] with an explicit kernel-variant request on the
+/// axis the autotuner sweeps:
+/// - `Simd` runs the width-specialized chunk-column kernel with software
+///   prefetch of the x gather rows;
+/// - `Vectorized` runs the same kernel without prefetch (the default);
+/// - `Scalar` forces the generic row-traversal loop.
+///
+/// Results (y, z and every dot) are bitwise identical across variants —
+/// all paths accumulate in the same order with separate multiply and add.
+pub fn sell_spmv_fused_variant<S: Scalar>(
+    a: &SellMat<S>,
+    x: &DenseMat<S>,
+    y: &mut DenseMat<S>,
+    z: Option<&mut DenseMat<S>>,
+    opts: &SpmvOpts<S>,
+    variant: SpmvVariant,
+) -> crate::core::Result<FusedDots<S>> {
     let nv = x.ncols();
     let c = a.chunk_height();
     let np = a.nrows_padded();
@@ -139,13 +161,14 @@ pub fn sell_spmv_fused<S: Scalar>(
     let rowmajor = x.layout() == Layout::RowMajor
         && y.layout() == Layout::RowMajor
         && z.as_ref().is_none_or(|z| z.layout() == Layout::RowMajor);
-    if rowmajor {
+    if rowmajor && variant != SpmvVariant::Scalar {
+        let prefetch = variant == SpmvVariant::Simd;
         macro_rules! fused_dispatch {
             ($($w:literal),+) => {
                 match nv {
                     $( $w => {
                         fused_rowmajor_fixed::<S, $w>(
-                            a, x, y, z.as_deref_mut(), opts, &mut dots,
+                            a, x, y, z.as_deref_mut(), opts, &mut dots, prefetch,
                         );
                         return Ok(dots);
                     } )+
@@ -221,7 +244,10 @@ pub fn sell_spmv_fused<S: Scalar>(
 /// vectorizable SELL order), a (C x NV) accumulator tile, and slice-based
 /// augmentation tails — no per-element layout dispatch. The requested
 /// dot products are read off `opts.flags`; `dots` must be pre-sized by
-/// the caller for every requested flag.
+/// the caller for every requested flag. With `prefetch` (the `Simd`
+/// variant) the x gather rows are software-prefetched [`PREFETCH_DIST`]
+/// chunk columns ahead — a hint only, results are unchanged.
+#[allow(clippy::too_many_arguments)]
 fn fused_rowmajor_fixed<S: Scalar, const NV: usize>(
     a: &SellMat<S>,
     x: &DenseMat<S>,
@@ -229,6 +255,7 @@ fn fused_rowmajor_fixed<S: Scalar, const NV: usize>(
     mut z: Option<&mut DenseMat<S>>,
     opts: &SpmvOpts<S>,
     dots: &mut FusedDots<S>,
+    prefetch: bool,
 ) {
     let c = a.chunk_height();
     let val = a.values();
@@ -264,6 +291,12 @@ fn fused_rowmajor_fixed<S: Scalar, const NV: usize>(
         for wi in 0..w {
             let vs = &val[base + wi * c..base + wi * c + c];
             let cs = &col[base + wi * c..base + wi * c + c];
+            if prefetch && wi + PREFETCH_DIST < w {
+                let k0 = base + (wi + PREFETCH_DIST) * c;
+                for &pc in &col[k0..k0 + c] {
+                    prefetch_read(xs, pc as usize * lx);
+                }
+            }
             for r in 0..c {
                 let av = vs[r];
                 let xrow = &xs[cs[r] as usize * lx..cs[r] as usize * lx + NV];
@@ -444,6 +477,46 @@ mod tests {
         let mut want = DenseMat::<f64>::zeros(np, 2, Layout::RowMajor);
         sell_spmmv(&s, &x, &mut want);
         assert!(y.max_abs_diff(&want) < 1e-13);
+    }
+
+    #[test]
+    fn variant_axis_is_bitwise_identical() {
+        let mut rng = Rng::new(23);
+        let a = random_square(&mut rng, 70);
+        let s = SellMat::from_crs_opts(&a, 8, 32, true).unwrap();
+        let np = s.nrows_padded();
+        for nv in [1usize, 3, 4] {
+            let x = DenseMat::<f64>::random(np, nv, Layout::RowMajor, 11);
+            let y0 = DenseMat::<f64>::random(np, nv, Layout::RowMajor, 12);
+            let z0 = DenseMat::<f64>::random(np, nv, Layout::RowMajor, 13);
+            let opts = SpmvOpts {
+                flags: flags::VSHIFT | flags::AXPBY | flags::CHAIN_AXPBY | flags::DOT_ANY,
+                alpha: 1.25,
+                beta: -0.5,
+                gamma: vec![0.3],
+                delta: 0.75,
+                eta: -1.5,
+            };
+            let mut outs = vec![];
+            for variant in crate::kernels::spmv::SpmvVariant::ALL {
+                let mut y = y0.clone();
+                let mut z = z0.clone();
+                let dots =
+                    sell_spmv_fused_variant(&s, &x, &mut y, Some(&mut z), &opts, variant)
+                        .unwrap();
+                outs.push((y, z, dots));
+            }
+            let (y0v, z0v, d0) = &outs[0];
+            for (y, z, d) in &outs[1..] {
+                assert_eq!(y.max_abs_diff(y0v), 0.0, "nv={nv}");
+                assert_eq!(z.max_abs_diff(z0v), 0.0, "nv={nv}");
+                for v in 0..nv {
+                    assert_eq!(d.yy[v].to_bits(), d0.yy[v].to_bits());
+                    assert_eq!(d.xy[v].to_bits(), d0.xy[v].to_bits());
+                    assert_eq!(d.xx[v].to_bits(), d0.xx[v].to_bits());
+                }
+            }
+        }
     }
 
     #[test]

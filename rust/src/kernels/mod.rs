@@ -4,12 +4,36 @@
 //! ("fused") SpMV of section 5.3.
 
 pub mod fused;
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+pub(crate) mod simd_x86;
 pub mod spmmv;
 pub mod spmv;
 
-pub use fused::{sell_spmv_fused, FusedDots, SpmvOpts};
-pub use spmmv::{sell_spmmv, sell_spmmv_generic, SpmmvVariant};
+pub use fused::{sell_spmv_fused, sell_spmv_fused_variant, FusedDots, SpmvOpts};
+pub use spmmv::{sell_spmmv, sell_spmmv_generic, sell_spmmv_variant, SpmmvVariant};
 pub use spmv::{crs_spmv, sell_spmv, sell_spmv_mt, SpmvVariant};
+
+/// Software prefetch of `xs[idx]` into all cache levels. The gather
+/// stream of the SELL kernels is the one access the hardware prefetcher
+/// cannot predict, so the `Simd` kernels issue this hint a few chunk
+/// columns ahead. No-op on architectures without a stable prefetch
+/// intrinsic (the hint affects performance only, never semantics).
+#[inline(always)]
+pub(crate) fn prefetch_read<T>(xs: &[T], idx: usize) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        use std::arch::x86_64::{_mm_prefetch, _MM_HINT_T0};
+        if idx < xs.len() {
+            // SAFETY: prefetch is a pure hint and never faults; the
+            // pointer is in bounds anyway.
+            unsafe { _mm_prefetch::<_MM_HINT_T0>(xs.as_ptr().add(idx) as *const i8) }
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        let _ = (xs, idx);
+    }
+}
 
 /// Code balance of the (double, 32-bit index) SpMV in bytes/flop: the
 /// paper's "1 Gflop/s corresponds to 6 GByte/s" (section 4.1) comes from

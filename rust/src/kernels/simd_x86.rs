@@ -1,0 +1,134 @@
+//! x86_64 AVX2 bodies for the `Simd` kernel variant, compiled only under
+//! the `simd` cargo feature and used only when AVX2 is detected at
+//! runtime — the feature-gated-intrinsics-plus-portable-fallback
+//! structure of the DBCSR Xeon Phi port. Only the f64 SpMV chunk body is
+//! specialized (it is the bandwidth-critical case of the paper); every
+//! other scalar type, chunk shape or host falls back to the portable
+//! wide-lane kernel in [`super::spmv`].
+//!
+//! The vector body loads four contiguous chunk values, gathers the four
+//! x operands through 32-bit indices, and accumulates with *separate*
+//! multiply and add (`_mm256_add_pd(_mm256_mul_pd(..))`, never an FMA):
+//! FMA contraction would change rounding and break the bitwise-equality
+//! contract between kernel variants that the equivalence suite asserts.
+
+use std::arch::x86_64::{
+    __m128i, _mm256_add_pd, _mm256_i32gather_pd, _mm256_loadu_pd, _mm256_mul_pd,
+    _mm256_setzero_pd, _mm256_storeu_pd, _mm_loadu_si128, _mm_prefetch, _MM_HINT_T0,
+};
+use std::sync::OnceLock;
+
+use super::spmv::PREFETCH_DIST;
+use crate::core::{Lidx, Scalar};
+
+/// Runtime AVX2 capability, detected once per process.
+pub(crate) fn avx2_available() -> bool {
+    static AVX2: OnceLock<bool> = OnceLock::new();
+    *AVX2.get_or_init(|| std::is_x86_feature_detected!("avx2"))
+}
+
+/// One SELL chunk of the `Simd` SpMV, intrinsic f64 body. Returns
+/// `false` (chunk not handled) when the scalar type is not f64, the
+/// chunk height is not a multiple of 4, or the host lacks AVX2 — the
+/// caller then runs the portable lane kernel on the same chunk.
+#[inline]
+pub(crate) fn spmv_chunk_f64<S: Scalar>(
+    val: &[S],
+    col: &[Lidx],
+    x: &[S],
+    yrow: &mut [S],
+    base: usize,
+    w: usize,
+    c: usize,
+) -> bool {
+    if c % 4 != 0 || !avx2_available() {
+        return false;
+    }
+    let (Some(vf), Some(xf)) = (S::as_f64_slice(val), S::as_f64_slice(x)) else {
+        return false;
+    };
+    let Some(yf) = S::as_f64_slice_mut(yrow) else {
+        return false;
+    };
+    // SAFETY: AVX2 presence was checked above; every lane index stays in
+    // bounds (the chunk occupies val/col[base .. base + w*c], col
+    // entries are valid x indices by SellMat construction, and yf has C
+    // rows).
+    unsafe { chunk_avx2(vf, col, xf, yf, base, w, c) };
+    true
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn chunk_avx2(
+    val: &[f64],
+    col: &[Lidx],
+    x: &[f64],
+    yrow: &mut [f64],
+    base: usize,
+    w: usize,
+    c: usize,
+) {
+    let xp = x.as_ptr();
+    for r in (0..c).step_by(4) {
+        let mut acc = _mm256_setzero_pd();
+        for wi in 0..w {
+            let k = base + wi * c + r;
+            if wi + PREFETCH_DIST < w {
+                let kp = k + PREFETCH_DIST * c;
+                for lane in 0..4 {
+                    let tgt = *col.get_unchecked(kp + lane) as usize;
+                    _mm_prefetch::<_MM_HINT_T0>(xp.add(tgt) as *const i8);
+                }
+            }
+            let v = _mm256_loadu_pd(val.as_ptr().add(k));
+            let idx = _mm_loadu_si128(col.as_ptr().add(k) as *const __m128i);
+            let g = _mm256_i32gather_pd::<8>(xp, idx);
+            // separate mul + add: bitwise parity with the portable kernels
+            acc = _mm256_add_pd(acc, _mm256_mul_pd(v, g));
+        }
+        _mm256_storeu_pd(yrow.as_mut_ptr().add(r), acc);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn non_f64_and_odd_chunks_fall_back() {
+        // c32 values: the intrinsic body must decline regardless of host
+        let val = [crate::core::C32::ZERO; 4];
+        let col = [0 as Lidx; 4];
+        let x = [crate::core::C32::ONE; 1];
+        let mut y = [crate::core::C32::ZERO; 4];
+        assert!(!spmv_chunk_f64(&val, &col, &x, &mut y, 0, 1, 4));
+        // f64 but C=2 (not a multiple of the gather width)
+        let val = [1.0f64; 2];
+        let x = [2.0f64; 1];
+        let mut y = [0.0f64; 2];
+        assert!(!spmv_chunk_f64(&val, &col[..2], &x, &mut y, 0, 1, 2));
+    }
+
+    #[test]
+    fn avx2_chunk_matches_portable_when_available() {
+        if !avx2_available() {
+            return;
+        }
+        // one chunk, C=8, w=3, indices deliberately scattered
+        let c = 8usize;
+        let w = 3usize;
+        let x: Vec<f64> = (0..32).map(|i| (i as f64) * 0.25 - 3.0).collect();
+        let val: Vec<f64> = (0..c * w).map(|i| (i as f64) * 0.5 - 5.0).collect();
+        let col: Vec<Lidx> = (0..c * w).map(|i| ((i * 7) % 32) as Lidx).collect();
+        let mut y = vec![0.0f64; c];
+        assert!(spmv_chunk_f64(&val, &col, &x, &mut y, 0, w, c));
+        for (r, yr) in y.iter().enumerate() {
+            let mut acc = 0.0f64;
+            for wi in 0..w {
+                let k = wi * c + r;
+                acc += val[k] * x[col[k] as usize];
+            }
+            assert_eq!(yr.to_bits(), acc.to_bits(), "row {r}");
+        }
+    }
+}

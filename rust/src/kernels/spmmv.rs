@@ -8,6 +8,8 @@
 //!   code-generation analogue) vs a generic runtime-width loop — Fig 10;
 //! - everything runs on the same SELL-C-sigma operand as SpMV.
 
+use super::prefetch_read;
+use super::spmv::{SpmvVariant, PREFETCH_DIST};
 use crate::core::Scalar;
 use crate::densemat::{DenseMat, Layout};
 use crate::sparsemat::SellMat;
@@ -18,6 +20,9 @@ pub enum SpmmvVariant {
     Specialized,
     /// Generic runtime-width loop.
     Generic,
+    /// Chunk-column wide-lane kernel with software prefetch of the x
+    /// gather rows (the block analogue of [`SpmvVariant::Simd`]).
+    Simd,
 }
 
 /// Widths instantiated at compile time (mirrors GHOST's build-time list).
@@ -106,6 +111,68 @@ macro_rules! spmmv_dispatch {
     };
 }
 
+/// Chunk-column wide-lane SpMMV with compile-time width NV — the block
+/// analogue of the `Simd` SpMV kernel: the chunk is traversed
+/// column-wise with a C x NV accumulator tile, the x gather rows are
+/// software-prefetched [`PREFETCH_DIST`] chunk columns ahead, and each
+/// (row, vector) accumulation runs in ascending chunk-column order with
+/// separate multiply and add — bitwise identical to the other kernels.
+fn spmmv_simd_rowmajor<S: Scalar, const NV: usize>(
+    a: &SellMat<S>,
+    x: &DenseMat<S>,
+    y: &mut DenseMat<S>,
+) {
+    debug_assert_eq!(x.layout(), Layout::RowMajor);
+    debug_assert_eq!(y.layout(), Layout::RowMajor);
+    let c = a.chunk_height();
+    let val = a.values();
+    let col = a.colidx();
+    let cptr = a.chunk_ptr();
+    let clen = a.chunk_len();
+    let lx = x.stride();
+    let ly = y.stride();
+    let xs = x.as_slice();
+    let ys = y.as_mut_slice();
+    let mut acc = vec![S::ZERO; c * NV];
+    for ch in 0..a.nchunks() {
+        let base = cptr[ch];
+        let w = clen[ch];
+        acc.fill(S::ZERO);
+        for wi in 0..w {
+            let k0 = base + wi * c;
+            let vs = &val[k0..k0 + c];
+            let cs = &col[k0..k0 + c];
+            if wi + PREFETCH_DIST < w {
+                let pf = &col[k0 + PREFETCH_DIST * c..k0 + (PREFETCH_DIST + 1) * c];
+                for &pc in pf {
+                    prefetch_read(xs, pc as usize * lx);
+                }
+            }
+            for r in 0..c {
+                let av = vs[r];
+                let xrow = &xs[cs[r] as usize * lx..cs[r] as usize * lx + NV];
+                let arow = &mut acc[r * NV..(r + 1) * NV];
+                for v in 0..NV {
+                    arow[v] += av * xrow[v];
+                }
+            }
+        }
+        for r in 0..c {
+            let row = ch * c + r;
+            ys[row * ly..row * ly + NV].copy_from_slice(&acc[r * NV..(r + 1) * NV]);
+        }
+    }
+}
+
+macro_rules! spmmv_simd_dispatch {
+    ($nv:expr, $a:expr, $x:expr, $y:expr, [$($w:literal),+]) => {
+        match $nv {
+            $( $w => { spmmv_simd_rowmajor::<S, $w>($a, $x, $y); true } )+
+            _ => false,
+        }
+    };
+}
+
 /// Y = A X with automatic variant selection (specialized row-major path
 /// when the width is in [`SPECIALIZED_WIDTHS`], generic loop otherwise).
 pub fn sell_spmmv<S: Scalar>(
@@ -122,6 +189,41 @@ pub fn sell_spmmv<S: Scalar>(
     }
     sell_spmmv_generic(a, x, y);
     SpmmvVariant::Generic
+}
+
+/// Y = A X with an explicit kernel-variant request on the single-vector
+/// [`SpmvVariant`] axis the autotuner sweeps:
+/// - `Simd` runs the wide-lane prefetching kernel when the layouts are
+///   row-major and the width is specialized, and otherwise degrades
+///   exactly like `Vectorized`;
+/// - `Vectorized` is the automatic selection of [`sell_spmmv`];
+/// - `Scalar` forces the generic runtime-width loop.
+///
+/// All paths produce bitwise-identical results; the return value reports
+/// which kernel actually ran.
+pub fn sell_spmmv_variant<S: Scalar>(
+    a: &SellMat<S>,
+    x: &DenseMat<S>,
+    y: &mut DenseMat<S>,
+    variant: SpmvVariant,
+) -> SpmmvVariant {
+    match variant {
+        SpmvVariant::Scalar => {
+            sell_spmmv_generic(a, x, y);
+            SpmmvVariant::Generic
+        }
+        SpmvVariant::Simd => {
+            let nv = x.ncols();
+            if x.layout() == Layout::RowMajor && y.layout() == Layout::RowMajor {
+                let hit = spmmv_simd_dispatch!(nv, a, x, y, [1, 2, 4, 8, 16]);
+                if hit {
+                    return SpmmvVariant::Simd;
+                }
+            }
+            sell_spmmv(a, x, y)
+        }
+        SpmvVariant::Vectorized => sell_spmmv(a, x, y),
+    }
 }
 
 #[cfg(test)]
@@ -207,6 +309,33 @@ mod tests {
             assert_eq!(sell_spmmv(&s, &x, &mut y1), SpmmvVariant::Specialized);
             sell_spmmv_generic(&s, &x, &mut y2);
             assert!(y1.max_abs_diff(&y2) < 1e-13);
+        }
+    }
+
+    #[test]
+    fn variant_axis_is_bitwise_identical() {
+        let mut rng = Rng::new(17);
+        let a = random_crs(&mut rng, 90, 7);
+        let s = SellMat::from_crs(&a, 8, 64).unwrap();
+        let np = s.nrows_padded();
+        for nv in [1usize, 3, 4, 8] {
+            let x = DenseMat::<f64>::random(np.max(90), nv, Layout::RowMajor, nv as u64);
+            let mut yv = DenseMat::<f64>::zeros(np, nv, Layout::RowMajor);
+            let mut yg = DenseMat::<f64>::zeros(np, nv, Layout::RowMajor);
+            let mut yi = DenseMat::<f64>::zeros(np, nv, Layout::RowMajor);
+            sell_spmmv_variant(&s, &x, &mut yv, SpmvVariant::Vectorized);
+            let gv = sell_spmmv_variant(&s, &x, &mut yg, SpmvVariant::Scalar);
+            let iv = sell_spmmv_variant(&s, &x, &mut yi, SpmvVariant::Simd);
+            assert_eq!(gv, SpmmvVariant::Generic);
+            if SPECIALIZED_WIDTHS.contains(&nv) {
+                assert_eq!(iv, SpmmvVariant::Simd);
+            }
+            for i in 0..np {
+                for v in 0..nv {
+                    assert_eq!(yv.at(i, v).to_bits(), yg.at(i, v).to_bits());
+                    assert_eq!(yv.at(i, v).to_bits(), yi.at(i, v).to_bits());
+                }
+            }
         }
     }
 }

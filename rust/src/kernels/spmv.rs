@@ -1,23 +1,71 @@
 //! Single-vector SpMV kernels.
 //!
-//! The SELL kernel exists in two structural variants reproducing the
+//! The SELL kernel exists in three structural variants extending the
 //! Fig 9 comparison:
 //! - `Vectorized`: chunk-column traversal — the inner loop runs over the
 //!   C rows of a chunk on *contiguous* val/col data, which LLVM
 //!   auto-vectorizes (the rust analogue of GHOST's AVX/MIC intrinsics).
 //! - `Scalar`: row-wise traversal inside the chunk — stride-C accesses
 //!   that defeat vectorization (the "no vectorization" baseline).
+//! - `Simd`: explicit wide-lane chunk-column traversal — rows are
+//!   processed in blocks of [`SIMD_LANES`] independent register
+//!   accumulators with software prefetch of the gather stream
+//!   `x[col[..]]` (the one access pattern the hardware prefetcher cannot
+//!   predict). With the `simd` cargo feature, on x86_64 hosts with AVX2,
+//!   the f64 lane body runs on explicit 256-bit intrinsics
+//!   ([`super::simd_x86`]); everywhere else the hand-unrolled portable
+//!   body runs. All paths accumulate each row's products in ascending
+//!   chunk-column order with separate multiply and add (no FMA
+//!   contraction), so every variant produces bitwise-identical results —
+//!   the property the equivalence suite asserts.
 //!
 //! `crs_spmv` is the CRS (= SELL-1-1) baseline playing the role of the
 //! vendor-library kernel in Fig 6/9.
 
+use super::prefetch_read;
 use crate::core::Scalar;
 use crate::sparsemat::{Crs, SellMat};
 
+/// Row-lane width of the portable `Simd` kernel: four independent
+/// accumulator chains per chunk-column step (one 256-bit register of
+/// f64s, two of f32s — wide enough to cover the FP pipelines without
+/// spilling accumulators for complex types).
+pub const SIMD_LANES: usize = 4;
+
+/// How many chunk columns ahead the `Simd` kernels prefetch the gather
+/// operands: far enough to cover DRAM latency at ~4 lanes per step,
+/// near enough that the lines are still resident when used.
+pub const PREFETCH_DIST: usize = 4;
+
+/// Structural kernel variants for the SELL-C-sigma SpMV — the axis the
+/// autotuner sweeps (listed in its default preference order, see
+/// [`SpmvVariant::ALL`]).
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
 pub enum SpmvVariant {
+    /// Chunk-column traversal on contiguous val/col data; relies on LLVM
+    /// auto-vectorization of the row loop (the Fig 9 "vectorized"
+    /// kernel). Bitwise identical to the other variants.
     Vectorized,
+    /// Row-wise traversal inside the chunk with stride-C accesses that
+    /// defeat vectorization — the "no vectorization" baseline the paper
+    /// compares against. Bitwise identical to the other variants.
     Scalar,
+    /// Explicit wide-lane chunk-column kernel: [`SIMD_LANES`] register
+    /// accumulators per step, software prefetch of the `x[col[..]]`
+    /// gather stream [`PREFETCH_DIST`] chunk columns ahead, and (with
+    /// the `simd` cargo feature on AVX2-capable x86_64 hosts, detected
+    /// at runtime) an intrinsic f64 body using 256-bit loads, gathers
+    /// and separate mul/add. Falls back to the portable wide-lane body
+    /// for other scalar types, chunk heights not divisible by 4, or
+    /// hosts without AVX2. Bitwise identical to the other variants.
+    Simd,
+}
+
+impl SpmvVariant {
+    /// Every variant, in the autotuner's default preference order (ties
+    /// in measured time resolve toward the earlier entry).
+    pub const ALL: [SpmvVariant; 3] =
+        [SpmvVariant::Vectorized, SpmvVariant::Simd, SpmvVariant::Scalar];
 }
 
 /// y = A x for CRS.
@@ -31,68 +79,7 @@ pub fn crs_spmv<S: Scalar>(a: &Crs<S>, x: &[S], y: &mut [S]) {
 pub fn sell_spmv<S: Scalar>(a: &SellMat<S>, x: &[S], y: &mut [S], variant: SpmvVariant) {
     debug_assert!(y.len() >= a.nrows_padded());
     debug_assert!(x.len() >= a.ncols());
-    match variant {
-        SpmvVariant::Vectorized => spmv_chunk_range_vec(a, x, y, 0, a.nchunks()),
-        SpmvVariant::Scalar => spmv_chunk_range_scalar(a, x, y, 0, a.nchunks()),
-    }
-}
-
-/// Chunk-column traversal: for each chunk column w, update all C rows.
-/// `val[base + w*C + r]` is contiguous in r — SIMD-friendly.
-fn spmv_chunk_range_vec<S: Scalar>(
-    a: &SellMat<S>,
-    x: &[S],
-    y: &mut [S],
-    ch0: usize,
-    ch1: usize,
-) {
-    let c = a.chunk_height();
-    let val = a.values();
-    let col = a.colidx();
-    let cptr = a.chunk_ptr();
-    let clen = a.chunk_len();
-    for ch in ch0..ch1 {
-        let base = cptr[ch];
-        let w = clen[ch];
-        let yrow = &mut y[ch * c..(ch + 1) * c];
-        yrow.fill(S::ZERO);
-        for wi in 0..w {
-            let vs = &val[base + wi * c..base + wi * c + c];
-            let cs = &col[base + wi * c..base + wi * c + c];
-            for r in 0..c {
-                // contiguous in r: vectorizes
-                yrow[r] += vs[r] * x[cs[r] as usize];
-            }
-        }
-    }
-}
-
-/// Row-wise traversal inside the chunk: stride-C access, no vectorization.
-fn spmv_chunk_range_scalar<S: Scalar>(
-    a: &SellMat<S>,
-    x: &[S],
-    y: &mut [S],
-    ch0: usize,
-    ch1: usize,
-) {
-    let c = a.chunk_height();
-    let val = a.values();
-    let col = a.colidx();
-    let cptr = a.chunk_ptr();
-    let clen = a.chunk_len();
-    for ch in ch0..ch1 {
-        let base = cptr[ch];
-        let w = clen[ch];
-        for r in 0..c {
-            let mut acc = S::ZERO;
-            let mut k = base + r;
-            for _ in 0..w {
-                acc += val[k] * x[col[k] as usize];
-                k += c; // stride-C: defeats vectorization
-            }
-            y[ch * c + r] = acc;
-        }
-    }
+    spmv_range_offset(a, x, y, 0, a.nchunks(), variant);
 }
 
 /// Multi-threaded SELL SpMV: chunks are divided into `nthreads` contiguous
@@ -129,15 +116,18 @@ pub fn sell_spmv_mt<S: Scalar>(
             let lo = (t * per).min(nchunks);
             let hi = ((t + 1) * per).min(nchunks);
             s.spawn(move || {
-                // ys is y[lo*c .. hi*c]; kernel indexes y[ch*c ..], so
-                // shift by viewing a local closure over offsets
+                // ys is y[lo*c .. hi*c]; the range kernels index it
+                // relative to lo
                 spmv_range_offset(a, x, ys, lo, hi, variant);
             });
         }
     });
 }
 
-fn spmv_range_offset<S: Scalar>(
+/// Dispatch one contiguous chunk range to the requested kernel variant;
+/// `yslice` holds the output rows of exactly chunks `ch0..ch1` (i.e. it
+/// is `y[ch0*C .. ch1*C]` of the full result).
+pub(crate) fn spmv_range_offset<S: Scalar>(
     a: &SellMat<S>,
     x: &[S],
     yslice: &mut [S],
@@ -145,6 +135,16 @@ fn spmv_range_offset<S: Scalar>(
     ch1: usize,
     variant: SpmvVariant,
 ) {
+    match variant {
+        SpmvVariant::Vectorized => spmv_chunks_vec(a, x, yslice, ch0, ch1),
+        SpmvVariant::Scalar => spmv_chunks_scalar(a, x, yslice, ch0, ch1),
+        SpmvVariant::Simd => spmv_chunks_simd(a, x, yslice, ch0, ch1),
+    }
+}
+
+/// Chunk-column traversal: for each chunk column w, update all C rows.
+/// `val[base + w*C + r]` is contiguous in r — SIMD-friendly.
+fn spmv_chunks_vec<S: Scalar>(a: &SellMat<S>, x: &[S], yslice: &mut [S], ch0: usize, ch1: usize) {
     let c = a.chunk_height();
     let val = a.values();
     let col = a.colidx();
@@ -154,28 +154,98 @@ fn spmv_range_offset<S: Scalar>(
         let base = cptr[ch];
         let w = clen[ch];
         let yrow = &mut yslice[(ch - ch0) * c..(ch - ch0 + 1) * c];
-        match variant {
-            SpmvVariant::Vectorized => {
-                yrow.fill(S::ZERO);
-                for wi in 0..w {
-                    let vs = &val[base + wi * c..base + wi * c + c];
-                    let cs = &col[base + wi * c..base + wi * c + c];
-                    for r in 0..c {
-                        yrow[r] += vs[r] * x[cs[r] as usize];
-                    }
-                }
+        yrow.fill(S::ZERO);
+        for wi in 0..w {
+            let vs = &val[base + wi * c..base + wi * c + c];
+            let cs = &col[base + wi * c..base + wi * c + c];
+            for r in 0..c {
+                // contiguous in r: vectorizes
+                yrow[r] += vs[r] * x[cs[r] as usize];
             }
-            SpmvVariant::Scalar => {
-                for r in 0..c {
-                    let mut acc = S::ZERO;
-                    let mut k = base + r;
-                    for _ in 0..w {
-                        acc += val[k] * x[col[k] as usize];
-                        k += c;
-                    }
-                    yrow[r] = acc;
-                }
+        }
+    }
+}
+
+/// Row-wise traversal inside the chunk: stride-C access, no vectorization.
+fn spmv_chunks_scalar<S: Scalar>(
+    a: &SellMat<S>,
+    x: &[S],
+    yslice: &mut [S],
+    ch0: usize,
+    ch1: usize,
+) {
+    let c = a.chunk_height();
+    let val = a.values();
+    let col = a.colidx();
+    let cptr = a.chunk_ptr();
+    let clen = a.chunk_len();
+    for ch in ch0..ch1 {
+        let base = cptr[ch];
+        let w = clen[ch];
+        for r in 0..c {
+            let mut acc = S::ZERO;
+            let mut k = base + r;
+            for _ in 0..w {
+                acc += val[k] * x[col[k] as usize];
+                k += c; // stride-C: defeats vectorization
             }
+            yslice[(ch - ch0) * c + r] = acc;
+        }
+    }
+}
+
+/// Explicit wide-lane chunk-column kernel (`SpmvVariant::Simd`): blocks
+/// of [`SIMD_LANES`] rows carry independent accumulator chains in
+/// registers while the gather stream is software-prefetched
+/// [`PREFETCH_DIST`] chunk columns ahead. Per row the products are added
+/// in ascending chunk-column order with separate multiply and add, so the
+/// result is bitwise identical to `Vectorized`/`Scalar`.
+fn spmv_chunks_simd<S: Scalar>(a: &SellMat<S>, x: &[S], yslice: &mut [S], ch0: usize, ch1: usize) {
+    let c = a.chunk_height();
+    let val = a.values();
+    let col = a.colidx();
+    let cptr = a.chunk_ptr();
+    let clen = a.chunk_len();
+    for ch in ch0..ch1 {
+        let base = cptr[ch];
+        let w = clen[ch];
+        let yrow = &mut yslice[(ch - ch0) * c..(ch - ch0 + 1) * c];
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        if super::simd_x86::spmv_chunk_f64(val, col, x, yrow, base, w, c) {
+            continue;
+        }
+        let mut r = 0;
+        while r + SIMD_LANES <= c {
+            let (mut a0, mut a1, mut a2, mut a3) = (S::ZERO, S::ZERO, S::ZERO, S::ZERO);
+            for wi in 0..w {
+                let k = base + wi * c + r;
+                if wi + PREFETCH_DIST < w {
+                    let kp = k + PREFETCH_DIST * c;
+                    prefetch_read(x, col[kp] as usize);
+                    prefetch_read(x, col[kp + 1] as usize);
+                    prefetch_read(x, col[kp + 2] as usize);
+                    prefetch_read(x, col[kp + 3] as usize);
+                }
+                a0 += val[k] * x[col[k] as usize];
+                a1 += val[k + 1] * x[col[k + 1] as usize];
+                a2 += val[k + 2] * x[col[k + 2] as usize];
+                a3 += val[k + 3] * x[col[k + 3] as usize];
+            }
+            yrow[r] = a0;
+            yrow[r + 1] = a1;
+            yrow[r + 2] = a2;
+            yrow[r + 3] = a3;
+            r += SIMD_LANES;
+        }
+        // remainder rows when C is not a multiple of the lane width
+        while r < c {
+            let mut acc = S::ZERO;
+            for wi in 0..w {
+                let k = base + wi * c + r;
+                acc += val[k] * x[col[k] as usize];
+            }
+            yrow[r] = acc;
+            r += 1;
         }
     }
 }
@@ -234,14 +304,16 @@ mod tests {
             // SELL works in permuted space
             let mut xs = vec![0.0; s.nrows_padded().max(n)];
             xs[..n].copy_from_slice(&x);
-            for variant in [SpmvVariant::Vectorized, SpmvVariant::Scalar] {
+            for variant in SpmvVariant::ALL {
                 let mut ys = vec![0.0; s.nrows_padded()];
                 sell_spmv(&s, &xs, &mut ys, variant);
                 let mut y = vec![0.0; n];
                 unpermute(&s, &ys, &mut y);
                 for i in 0..n {
+                    // all variants share the CRS accumulation order, so
+                    // agreement is bitwise, not approximate
                     assert!(
-                        (y[i] - y_crs[i]).abs() < 1e-10,
+                        y[i].to_bits() == y_crs[i].to_bits(),
                         "{variant:?} row {i}: {} vs {}",
                         y[i],
                         y_crs[i]
@@ -260,12 +332,14 @@ mod tests {
             let x = g.vec_normal(n);
             let mut xs = vec![0.0; s.nrows_padded().max(n)];
             xs[..n].copy_from_slice(&x);
-            let mut y1 = vec![0.0; s.nrows_padded()];
-            sell_spmv(&s, &xs, &mut y1, SpmvVariant::Vectorized);
-            for nt in [2usize, 3, 7] {
-                let mut y2 = vec![0.0; s.nrows_padded()];
-                sell_spmv_mt(&s, &xs, &mut y2, SpmvVariant::Vectorized, nt);
-                assert_eq!(y1, y2, "nthreads={nt}");
+            for variant in SpmvVariant::ALL {
+                let mut y1 = vec![0.0; s.nrows_padded()];
+                sell_spmv(&s, &xs, &mut y1, variant);
+                for nt in [2usize, 3, 7] {
+                    let mut y2 = vec![0.0; s.nrows_padded()];
+                    sell_spmv_mt(&s, &xs, &mut y2, variant, nt);
+                    assert_eq!(y1, y2, "{variant:?} nthreads={nt}");
+                }
             }
         });
     }
@@ -283,12 +357,14 @@ mod tests {
         a.spmv(&x, &mut y_crs);
         let mut xs = vec![C64::ZERO; s.nrows_padded().max(n)];
         xs[..n].copy_from_slice(&x);
-        let mut ys = vec![C64::ZERO; s.nrows_padded()];
-        sell_spmv(&s, &xs, &mut ys, SpmvVariant::Vectorized);
-        let mut y = vec![C64::ZERO; n];
-        unpermute(&s, &ys, &mut y);
-        for i in 0..n {
-            assert!((y[i] - y_crs[i]).abs() < 1e-12);
+        for variant in SpmvVariant::ALL {
+            let mut ys = vec![C64::ZERO; s.nrows_padded()];
+            sell_spmv(&s, &xs, &mut ys, variant);
+            let mut y = vec![C64::ZERO; n];
+            unpermute(&s, &ys, &mut y);
+            for i in 0..n {
+                assert!((y[i] - y_crs[i]).abs() < 1e-12);
+            }
         }
     }
 

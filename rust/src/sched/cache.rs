@@ -132,6 +132,7 @@ struct Inner {
 /// LRU-by-bytes cache of assembled, autotuned operators.
 pub struct OperatorCache {
     budget_bytes: usize,
+    numa: crate::topology::NumaAlloc,
     inner: Mutex<Inner>,
 }
 
@@ -142,8 +143,18 @@ impl OperatorCache {
     pub fn new(budget_bytes: usize) -> Self {
         OperatorCache {
             budget_bytes,
+            numa: crate::topology::NumaAlloc::single(),
             inner: Mutex::new(Inner::default()),
         }
+    }
+
+    /// Set the first-touch placement policy applied when operators are
+    /// assembled into this cache. The scheduler passes the policy of the
+    /// machine it runs on, so cached SELL storage is distributed across
+    /// the NUMA nodes that later compute on it (section 4.2).
+    pub fn with_numa(mut self, numa: crate::topology::NumaAlloc) -> Self {
+        self.numa = numa;
+        self
     }
 
     pub fn budget_bytes(&self) -> usize {
@@ -219,12 +230,13 @@ impl OperatorCache {
         // assemblies) proceed concurrently; only same-key requests wait
         let built = (|| {
             let tuned = tune::tune(a)?;
-            let op = LocalSellOp::with_variant(
+            let op = LocalSellOp::with_variant_numa(
                 a,
                 tuned.config.c,
                 tuned.config.sigma,
                 nthreads.max(1),
                 tuned.config.variant,
+                &self.numa,
             )?;
             Ok::<_, crate::core::GhostError>((tuned.config, op))
         })();

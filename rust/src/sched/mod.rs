@@ -767,9 +767,12 @@ pub struct JobScheduler {
 
 impl JobScheduler {
     pub fn new(machine: Machine, cfg: SchedConfig) -> Self {
+        // first-touch policy of the machine this scheduler runs on, so
+        // cached operators are assembled NUMA-node-local (section 4.2)
+        let numa = crate::topology::NumaAlloc::new(&machine);
         JobScheduler {
             queue: TaskQueue::new(machine, cfg.nshepherds.max(1)),
-            cache: Arc::new(OperatorCache::new(cfg.cache_budget_bytes)),
+            cache: Arc::new(OperatorCache::new(cfg.cache_budget_bytes).with_numa(numa)),
             inner: Arc::new(SchedInner {
                 batching: cfg.batching,
                 max_batch: cfg.max_batch.max(1),

@@ -26,10 +26,11 @@ use crate::comm::exchange::{
 use crate::comm::Comm;
 use crate::core::{Result, Scalar};
 use crate::densemat::{tsm, DenseMat, Layout};
-use crate::kernels::fused::sell_spmv_fused;
-use crate::kernels::spmmv::sell_spmmv;
+use crate::kernels::fused::sell_spmv_fused_variant;
+use crate::kernels::spmmv::sell_spmmv_variant;
 use crate::kernels::spmv::{self, SpmvVariant};
 use crate::sparsemat::{Crs, SellMat};
+use crate::topology::NumaAlloc;
 
 pub use crate::kernels::fused::{flags as spmv_flags, FusedDots, SpmvOpts};
 
@@ -324,11 +325,29 @@ impl<S: Scalar> LocalSellOp<S> {
         nthreads: usize,
         variant: SpmvVariant,
     ) -> Result<Self> {
-        let sell = SellMat::from_crs_opts(a, c, sigma, true)?;
+        Self::with_variant_numa(a, c, sigma, nthreads, variant, &NumaAlloc::single())
+    }
+
+    /// Like [`LocalSellOp::with_variant`] with a first-touch placement
+    /// policy: the SELL chunk arrays and the permuted scratch vectors
+    /// are initialized from threads pinned to the NUMA node that owns
+    /// each chunk range (section 4.2 data locality), so multi-socket
+    /// applies read node-local memory instead of whatever node the
+    /// assembling thread happened to run on.
+    pub fn with_variant_numa(
+        a: &Crs<S>,
+        c: usize,
+        sigma: usize,
+        nthreads: usize,
+        variant: SpmvVariant,
+        numa: &NumaAlloc,
+    ) -> Result<Self> {
+        let sell = SellMat::from_crs_numa(a, c, sigma, true, numa)?;
         let np = sell.nrows_padded();
+        let granule = c.max(1) * 64;
         Ok(LocalSellOp {
-            xs: vec![S::ZERO; np.max(a.ncols())],
-            ys: vec![S::ZERO; np],
+            xs: numa.alloc(np.max(a.ncols()), granule, S::ZERO),
+            ys: numa.alloc(np, granule, S::ZERO),
             sell,
             nthreads,
             variant,
@@ -421,7 +440,8 @@ impl<S: Scalar> Operator<S> for LocalSellOp<S> {
             DenseMat::<S>::zeros(self.sell.nrows_padded(), 1, Layout::RowMajor)
         };
         let mut zm = z.as_deref().map(|zz| to_sell_order(&self.sell, &zz[..n]));
-        let dots = sell_spmv_fused(&self.sell, &xm, &mut ym, zm.as_mut(), opts)?;
+        let dots =
+            sell_spmv_fused_variant(&self.sell, &xm, &mut ym, zm.as_mut(), opts, self.variant)?;
         from_sell_order(&self.sell, &ym, y);
         if let (Some(z), Some(zm)) = (z.as_deref_mut(), zm.as_ref()) {
             from_sell_order(&self.sell, zm, z);
@@ -440,7 +460,7 @@ impl<S: Scalar> Operator<S> for LocalSellOp<S> {
         self.count += nv;
         let xm = block_to_sell_order(&self.sell, x);
         let mut ym = DenseMat::<S>::zeros(self.sell.nrows_padded(), nv, Layout::RowMajor);
-        sell_spmmv(&self.sell, &xm, &mut ym);
+        sell_spmmv_variant(&self.sell, &xm, &mut ym, self.variant);
         block_from_sell_order(&self.sell, &ym, y);
         Ok(())
     }
@@ -476,7 +496,8 @@ impl<S: Scalar> Operator<S> for LocalSellOp<S> {
             DenseMat::<S>::zeros(self.sell.nrows_padded(), nv, Layout::RowMajor)
         };
         let mut zm = z.as_deref().map(|zz| block_to_sell_order(&self.sell, zz));
-        let dots = sell_spmv_fused(&self.sell, &xm, &mut ym, zm.as_mut(), opts)?;
+        let dots =
+            sell_spmv_fused_variant(&self.sell, &xm, &mut ym, zm.as_mut(), opts, self.variant)?;
         block_from_sell_order(&self.sell, &ym, y);
         if let (Some(z), Some(zm)) = (z.as_deref_mut(), zm.as_ref()) {
             block_from_sell_order(&self.sell, zm, z);
@@ -527,7 +548,8 @@ impl<S: Scalar> Operator<S> for LocalCrsOp<S> {
 /// Kernel mode for the distributed operator — the Fig 11 comparison axis.
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
 pub enum KernelMode {
-    /// SELL-C-sigma, vectorized kernels, task-mode overlap.
+    /// SELL-C-sigma, SIMD kernels (AVX2 under `--features simd`, the
+    /// lane-unrolled portable path otherwise), task-mode overlap.
     Ghost,
     /// CRS (SELL-1-1), no overlap — the Tpetra-like baseline.
     Baseline,
@@ -612,7 +634,10 @@ impl<S: Scalar> MpiOp<S> {
     /// Exchange options implied by the kernel mode (the Fig 11 axis).
     fn exchange_opts(&self) -> SpmvExchangeOpts<'static> {
         let (mode, variant) = match self.mode {
-            KernelMode::Ghost => (OverlapMode::NaiveOverlap, SpmvVariant::Vectorized),
+            // Simd is bitwise-identical to Vectorized (same w-ascending
+            // accumulation order), so the Fig 11 axis stays a pure
+            // performance comparison.
+            KernelMode::Ghost => (OverlapMode::NaiveOverlap, SpmvVariant::Simd),
             KernelMode::Baseline => (OverlapMode::NoOverlap, SpmvVariant::Scalar),
         };
         SpmvExchangeOpts {

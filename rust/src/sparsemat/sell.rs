@@ -12,6 +12,7 @@
 
 use super::crs::Crs;
 use crate::core::{Lidx, Result, Scalar};
+use crate::topology::NumaAlloc;
 
 #[derive(Clone, Debug)]
 pub struct SellMat<S> {
@@ -61,6 +62,22 @@ impl<S: Scalar> SellMat<S> {
         sigma: usize,
         col_permute: bool,
     ) -> Result<Self> {
+        Self::from_crs_numa(a, c, sigma, col_permute, &NumaAlloc::single())
+    }
+
+    /// [`SellMat::from_crs_opts`] with first-touch NUMA placement: the
+    /// val/col chunk arrays are initialized — and therefore page-placed
+    /// — by threads pinned to the NUMA node owning each chunk range per
+    /// `numa`'s partition, matching how the multithreaded kernels later
+    /// split chunks across threads. The resulting matrix is identical to
+    /// [`SellMat::from_crs_opts`] in every field.
+    pub fn from_crs_numa(
+        a: &Crs<S>,
+        c: usize,
+        sigma: usize,
+        col_permute: bool,
+        numa: &NumaAlloc,
+    ) -> Result<Self> {
         crate::ensure!(c >= 1, InvalidArg, "chunk height C must be >= 1");
         crate::ensure!(sigma >= 1, InvalidArg, "sigma must be >= 1");
         let nrows = a.nrows();
@@ -108,27 +125,42 @@ impl<S: Scalar> SellMat<S> {
                 "col_permute requires a square matrix"
             );
         }
-        let storage = *chunk_ptr.last().unwrap();
-        let mut val = vec![S::ZERO; storage];
-        let mut col = vec![0 as Lidx; storage];
-        for ch in 0..nchunks {
-            let base = chunk_ptr[ch];
+        // chunk arrays are built granule-per-chunk so the first touch of
+        // each chunk's pages happens on the NUMA node that owns it
+        let val = numa.build(&chunk_ptr, |ch, slab| {
+            for e in slab.iter_mut() {
+                e.write(S::ZERO);
+            }
             for r in 0..c {
                 let src = perm[ch * c + r];
                 if src >= nrows {
                     continue;
                 }
-                let (cs, vs) = a.row(src);
-                for (w, (&cc, &vv)) in cs.iter().zip(vs).enumerate() {
-                    val[base + w * c + r] = vv;
-                    col[base + w * c + r] = if col_permute {
+                let (_, vs) = a.row(src);
+                for (w, &vv) in vs.iter().enumerate() {
+                    slab[w * c + r].write(vv);
+                }
+            }
+        });
+        let col = numa.build(&chunk_ptr, |ch, slab| {
+            for e in slab.iter_mut() {
+                e.write(0 as Lidx);
+            }
+            for r in 0..c {
+                let src = perm[ch * c + r];
+                if src >= nrows {
+                    continue;
+                }
+                let (cs, _) = a.row(src);
+                for (w, &cc) in cs.iter().enumerate() {
+                    slab[w * c + r].write(if col_permute {
                         inv_perm[cc as usize] as Lidx
                     } else {
                         cc
-                    };
+                    });
                 }
             }
-        }
+        });
 
         Ok(SellMat {
             nrows,

@@ -11,6 +11,10 @@
 
 use crate::core::Result;
 
+pub mod numa;
+
+pub use numa::NumaAlloc;
+
 /// Device classes of the paper (section 2.1). The PHI runs in native
 /// mode, i.e., acts as a standalone CPU node.
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
@@ -158,6 +162,24 @@ impl Machine {
         Machine::new(1, ncores.max(1), 1, spec, vec![emmy_gpu()])
     }
 
+    /// Detect the host topology: NUMA node count from Linux sysfs
+    /// (`/sys/devices/system/node/node*`), total PU count from
+    /// `std::thread::available_parallelism`. Falls back to a single
+    /// node when sysfs is unavailable (non-Linux hosts, containers).
+    /// SMT is folded into the per-socket core count — placement only
+    /// needs the PU→node map, not the sibling structure.
+    pub fn detect() -> Self {
+        let pus = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        let sockets = detect_numa_node_count().clamp(1, pus);
+        let per_socket = pus.div_ceil(sockets);
+        let mut spec = emmy_cpu_socket();
+        spec.model = "detected host CPU";
+        spec.cores = per_socket as u32;
+        Machine::new(sockets, per_socket, 1, spec, vec![])
+    }
+
     pub fn num_pus(&self) -> usize {
         self.pus.len()
     }
@@ -248,6 +270,54 @@ pub fn suggest_placement(m: &Machine) -> Result<Vec<ProcessPlan>> {
     Ok(plans)
 }
 
+/// Number of NUMA nodes exposed by the OS (Linux sysfs), 1 elsewhere.
+fn detect_numa_node_count() -> usize {
+    #[cfg(target_os = "linux")]
+    {
+        if let Ok(rd) = std::fs::read_dir("/sys/devices/system/node") {
+            let n = rd
+                .filter_map(|e| e.ok())
+                .filter(|e| {
+                    let name = e.file_name();
+                    let s = name.to_string_lossy();
+                    s.len() > 4
+                        && s.starts_with("node")
+                        && s[4..].chars().all(|c| c.is_ascii_digit())
+                })
+                .count();
+            if n > 0 {
+                return n;
+            }
+        }
+    }
+    1
+}
+
+/// The autotuner's default [`DeviceSpec`]: the Table 1 CPU socket scaled
+/// by the *detected* topology instead of a hard-coded single socket, so
+/// model Gflop/s in bench output is meaningful on any machine. Bandwidth
+/// scales with the NUMA node count and is floored at 6 GB/s per detected
+/// PU — deliberately an upper bound, so the roofline stays a ceiling on
+/// real measurements and `efficiency(measured, model)` lands in (0, 1]
+/// even on hosts whose working set sits in cache. Peak Gflop/s keeps the
+/// Table 1 machine balance relative to that bandwidth.
+pub fn detected_cpu_spec() -> DeviceSpec {
+    let m = Machine::detect();
+    let base = emmy_cpu_socket();
+    let sockets = m.sockets.max(1) as f64;
+    let cores = m.num_pus().max(1) as u32;
+    let bandwidth = (base.bandwidth_gbs * sockets).max(6.0 * cores as f64);
+    DeviceSpec {
+        kind: DeviceKind::Cpu,
+        model: "detected host CPU",
+        clock_mhz: base.clock_mhz,
+        simd_bytes: base.simd_bytes,
+        cores,
+        bandwidth_gbs: bandwidth,
+        peak_gflops: bandwidth * (base.peak_gflops / base.bandwidth_gbs),
+    }
+}
+
 /// Bandwidth-proportional work weights for a set of devices
 /// (section 4.1: "the device-specific maximum attainable bandwidth ...
 /// has been chosen as the work distribution criterion").
@@ -305,6 +375,23 @@ mod tests {
         assert!((w[0] - 50.0 / 350.0).abs() < 1e-12);
         assert!((w[1] - w[2]).abs() < 1e-12);
         assert!((w.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn detected_machine_and_spec_are_sane() {
+        let m = Machine::detect();
+        assert!(m.num_pus() >= 1);
+        assert!(m.numa_nodes() >= 1);
+        assert!(m.numa_nodes() <= m.num_pus());
+        let d = detected_cpu_spec();
+        assert_eq!(d.kind, DeviceKind::Cpu);
+        assert!(d.cores as usize >= 1);
+        // bandwidth must be an upper bound: at least the per-PU floor and
+        // at least one Table 1 socket
+        assert!(d.bandwidth_gbs >= 6.0 * d.cores as f64);
+        assert!(d.bandwidth_gbs >= 50.0);
+        // machine balance preserved from Table 1 (peak/bw = 176/50)
+        assert!((d.peak_gflops / d.bandwidth_gbs - 176.0 / 50.0).abs() < 1e-12);
     }
 
     #[test]

@@ -1,0 +1,238 @@
+//! First-touch NUMA-aware allocation — the data-locality discipline of
+//! section 4.2 applied to operator assembly: on Linux, a page is placed
+//! in the locality domain of the thread that *first writes* it, so SELL
+//! chunk arrays and dense block vectors are initialized by threads
+//! pinned to the NUMA node that will later compute on them, instead of
+//! wherever the allocating thread happens to run.
+//!
+//! The partition (which thread first-touches which granule range) is the
+//! semantic contract and is what the tests verify; thread pinning itself
+//! is the same best-effort hint the taskq uses (without a libc
+//! dependency there is no stable affinity syscall surface, see
+//! `taskq::pin_current_thread`).
+
+use std::mem::MaybeUninit;
+use std::ops::Range;
+
+use super::Machine;
+
+/// First-touch allocation policy: one domain per NUMA node, each
+/// carrying the PU ids of that node (the pinning hint for the thread
+/// that initializes the domain's share of a buffer).
+#[derive(Clone, Debug)]
+pub struct NumaAlloc {
+    nodes: Vec<Vec<usize>>,
+}
+
+impl NumaAlloc {
+    /// One first-touch domain per NUMA node of `m`.
+    pub fn new(m: &Machine) -> Self {
+        let nodes: Vec<Vec<usize>> = (0..m.numa_nodes().max(1))
+            .map(|n| m.pus_of_numanode(n))
+            .collect();
+        NumaAlloc { nodes }
+    }
+
+    /// Single-domain policy: buffers are initialized inline by the
+    /// calling thread (no spawning) — the behavior of a plain `vec![]`,
+    /// and the right choice for single-socket hosts.
+    pub fn single() -> Self {
+        NumaAlloc {
+            nodes: vec![vec![]],
+        }
+    }
+
+    /// Policy for the detected host topology ([`Machine::detect`]).
+    pub fn detected() -> Self {
+        Self::new(&Machine::detect())
+    }
+
+    /// Number of first-touch domains.
+    pub fn nnodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// PU ids of domain `node` (the pinning hint).
+    pub fn pus(&self, node: usize) -> &[usize] {
+        &self.nodes[node]
+    }
+
+    /// Partition `count` granules into at most one contiguous granule
+    /// range per domain. The ranges are non-empty, ascending, disjoint
+    /// and cover `0..count` exactly once — the exactly-once property the
+    /// placement test asserts.
+    pub fn partition(&self, count: usize) -> Vec<(Range<usize>, usize)> {
+        let nn = self.nodes.len().max(1);
+        let per = count.div_ceil(nn).max(1);
+        let mut out = Vec::new();
+        for node in 0..nn {
+            let lo = (node * per).min(count);
+            let hi = ((node + 1) * per).min(count);
+            if lo < hi {
+                out.push((lo..hi, node));
+            }
+        }
+        out
+    }
+
+    /// First-touch initialization of a fresh buffer. `bounds` gives the
+    /// element range of each granule (`bounds[g]..bounds[g+1]`, with
+    /// `bounds.last()` the total length — a SELL `chunk_ptr` works
+    /// as-is); granules are distributed across domains by
+    /// [`NumaAlloc::partition`] and `write(g, slab)` must initialize
+    /// *every* element of its granule's slab, from a thread pinned to
+    /// the owning node (inline on the calling thread for a single
+    /// domain).
+    pub fn build<T, F>(&self, bounds: &[usize], write: F) -> Vec<T>
+    where
+        T: Copy + Send,
+        F: Fn(usize, &mut [MaybeUninit<T>]) + Sync,
+    {
+        assert!(!bounds.is_empty(), "bounds must at least hold the length");
+        let len = *bounds.last().unwrap();
+        let count = bounds.len() - 1;
+        let mut v: Vec<T> = Vec::with_capacity(len);
+        let parts = self.partition(count);
+        {
+            let spare = &mut v.spare_capacity_mut()[..len];
+            if parts.len() <= 1 {
+                for g in 0..count {
+                    write(g, &mut spare[bounds[g]..bounds[g + 1]]);
+                }
+            } else {
+                std::thread::scope(|s| {
+                    let mut rest = spare;
+                    for (gr, node) in parts {
+                        let take = bounds[gr.end] - bounds[gr.start];
+                        let (slab, tail) = rest.split_at_mut(take);
+                        rest = tail;
+                        let pus = &self.nodes[node];
+                        let write = &write;
+                        s.spawn(move || {
+                            pin_current_thread_to(pus);
+                            let mut slab = slab;
+                            for g in gr {
+                                let glen = bounds[g + 1] - bounds[g];
+                                let (head, tail) = slab.split_at_mut(glen);
+                                slab = tail;
+                                write(g, head);
+                            }
+                        });
+                    }
+                });
+            }
+        }
+        // SAFETY: `bounds` partitions 0..len into granules, partition()
+        // hands every granule to exactly one writer, and `write`'s
+        // contract is to initialize every element of its slab; T: Copy
+        // means no drop can ever observe an uninitialized element.
+        unsafe { v.set_len(len) };
+        v
+    }
+
+    /// First-touch allocation of `len` copies of `value`, distributed in
+    /// `granule`-element blocks (use the block-vector stride, or the
+    /// chunk height times the row width, as the granule so domain
+    /// boundaries align with compute boundaries).
+    pub fn alloc<T: Copy + Send>(&self, len: usize, granule: usize, value: T) -> Vec<T> {
+        let g = granule.max(1);
+        let count = len.div_ceil(g);
+        let bounds: Vec<usize> = (0..=count).map(|i| (i * g).min(len)).collect();
+        self.build(&bounds, |_, slab| {
+            for e in slab {
+                e.write(value);
+            }
+        })
+    }
+}
+
+/// Best-effort pinning of the initializing thread to `pus` — the same
+/// fallback story as `taskq::pin_current_thread`: without a libc
+/// dependency there is no stable affinity syscall surface in std, so
+/// this is a placement *hint* that becomes real pinning only where std
+/// grows support. The first-touch partition (which thread writes which
+/// granules) is the contract the tests verify.
+fn pin_current_thread_to(pus: &[usize]) {
+    let _ = pus;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn partition_covers_every_granule_exactly_once() {
+        for nn in [1usize, 2, 3, 4] {
+            let m = Machine::new(nn, 2, 1, super::super::emmy_cpu_socket(), vec![]);
+            let numa = NumaAlloc::new(&m);
+            assert_eq!(numa.nnodes(), nn);
+            for count in [0usize, 1, 2, 5, 7, 64, 101] {
+                let parts = numa.partition(count);
+                let mut seen = vec![0usize; count];
+                let mut last_end = 0;
+                for (r, node) in &parts {
+                    assert!(*node < nn);
+                    assert!(r.start >= last_end, "ranges must ascend");
+                    last_end = r.end;
+                    for g in r.clone() {
+                        seen[g] += 1;
+                    }
+                }
+                assert!(
+                    seen.iter().all(|&s| s == 1),
+                    "count={count} nn={nn}: every granule exactly once, got {seen:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn build_first_touches_every_chunk_exactly_once() {
+        // uneven granules, like a SELL chunk_ptr
+        let bounds = [0usize, 8, 8, 24, 30, 31, 79];
+        let nchunks = bounds.len() - 1;
+        let m = Machine::emmy_node();
+        let numa = NumaAlloc::new(&m);
+        let touches: Vec<AtomicUsize> = (0..nchunks).map(|_| AtomicUsize::new(0)).collect();
+        let v = numa.build(&bounds, |g, slab| {
+            assert_eq!(slab.len(), bounds[g + 1] - bounds[g]);
+            touches[g].fetch_add(1, Ordering::SeqCst);
+            for (i, e) in slab.iter_mut().enumerate() {
+                e.write((g * 1000 + i) as u64);
+            }
+        });
+        assert_eq!(v.len(), 79);
+        for (g, t) in touches.iter().enumerate() {
+            assert_eq!(t.load(Ordering::SeqCst), 1, "chunk {g} touched once");
+        }
+        for g in 0..nchunks {
+            for (i, &e) in v[bounds[g]..bounds[g + 1]].iter().enumerate() {
+                assert_eq!(e, (g * 1000 + i) as u64);
+            }
+        }
+    }
+
+    #[test]
+    fn single_domain_initializes_inline() {
+        let numa = NumaAlloc::single();
+        let main_id = std::thread::current().id();
+        let v = numa.build(&[0usize, 4, 9], |_, slab| {
+            assert_eq!(std::thread::current().id(), main_id);
+            for e in slab {
+                e.write(7i32);
+            }
+        });
+        assert_eq!(v, vec![7i32; 9]);
+    }
+
+    #[test]
+    fn alloc_matches_plain_vec() {
+        let numa = NumaAlloc::new(&Machine::emmy_node());
+        for len in [0usize, 1, 63, 64, 65, 1000] {
+            assert_eq!(numa.alloc(len, 64, 1.5f64), vec![1.5f64; len]);
+        }
+        // zero granule is clamped, not a panic
+        assert_eq!(numa.alloc(5, 0, 2u8), vec![2u8; 5]);
+    }
+}

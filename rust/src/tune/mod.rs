@@ -12,12 +12,12 @@
 //! 2. prunes candidates whose roofline bound cannot compete with the best
 //!    candidate's bound (the perfmodel-guided part: candidates that lose
 //!    on modeled traffic are never measured);
-//! 3. measures the survivors with short [`benchutil`] runs over both
-//!    [`SpmvVariant`]s and scores them by measured Gflop/s, with a small
-//!    margin in favor of the vectorizable kernel (the paper's Fig 9
-//!    argument: at C >= the SIMD width the chunk-column kernel is never
-//!    structurally worse, so `Scalar` must win by a clear margin to be
-//!    selected);
+//! 3. measures the survivors with short [`benchutil`] runs over every
+//!    configured [`SpmvVariant`] (`Vectorized`, `Simd`, `Scalar`) and
+//!    scores them by measured Gflop/s, with a small margin against the
+//!    scalar kernel (the paper's Fig 9 argument: at C >= the SIMD width
+//!    the chunk-column kernels are never structurally worse, so `Scalar`
+//!    must win by a clear margin to be selected);
 //! 4. caches the winner keyed by a sparsity fingerprint (nrows, nnz,
 //!    row-length mean/variance, max row length, dtype — plus the block
 //!    width for SpMMV workloads) so repeated solves of
@@ -42,7 +42,8 @@ use std::time::Duration;
 use crate::benchutil::{bench_for, gflops};
 use crate::core::{Lidx, Result, Scalar};
 use crate::densemat::{DenseMat, Layout};
-use crate::kernels::spmmv::sell_spmmv;
+use crate::kernels::fused::{flags, sell_spmv_fused_variant, SpmvOpts};
+use crate::kernels::spmmv::sell_spmmv_variant;
 use crate::kernels::spmv::{sell_spmv_mt, SpmvVariant};
 use crate::perfmodel;
 use crate::sparsemat::{Crs, SellMat};
@@ -156,7 +157,7 @@ impl Default for TuneOptions {
         TuneOptions {
             chunk_heights: vec![4, 8, 16, 32],
             sigma_factors: vec![1, 8, 32],
-            variants: vec![SpmvVariant::Vectorized, SpmvVariant::Scalar],
+            variants: SpmvVariant::ALL.to_vec(),
             block_widths: vec![1, 2, 4, 8, 16],
             nthreads: 1,
             budget: Duration::from_millis(20),
@@ -180,7 +181,10 @@ struct CacheEntry {
 /// Version of the persisted cache-line schema. Bumped whenever the line
 /// format changes; lines recorded under any other version are rejected
 /// at load (and re-swept) instead of being half-parsed forever.
-pub const CACHE_FORMAT_VERSION: u32 = 1;
+/// v2: `Simd` joined the variant axis and the device key gained
+/// cores/bandwidth (detected-topology device specs), so v1 decisions —
+/// measured without the new kernel — are deliberately invalidated.
+pub const CACHE_FORMAT_VERSION: u32 = 2;
 
 /// Default cap on cached decisions (in memory and on disk). Least
 /// recently used entries beyond the cap are evicted and truncated from
@@ -290,7 +294,7 @@ impl Autotuner {
         st.loaded = true;
         let Some(path) = &self.cache_path else { return };
         let Ok(text) = std::fs::read_to_string(path) else { return };
-        let device = self.device.model.to_string();
+        let device = device_sig(&self.device);
         let osig = opts_sig(&self.opts);
         for line in text.lines() {
             // entries recorded under a stale format version, a different
@@ -324,7 +328,7 @@ impl Autotuner {
                 let _ = std::fs::create_dir_all(dir);
             }
         }
-        let device = self.device.model.to_string();
+        let device = device_sig(&self.device);
         let osig = opts_sig(&self.opts);
         let mut text = String::new();
         for fp in &st.order {
@@ -349,7 +353,7 @@ impl Autotuner {
                 let _ = std::fs::create_dir_all(dir);
             }
         }
-        let line = cache_line(fp, e, &self.device.model.to_string(), opts_sig(&self.opts));
+        let line = cache_line(fp, e, &device_sig(&self.device), opts_sig(&self.opts));
         let res = std::fs::OpenOptions::new()
             .create(true)
             .append(true)
@@ -569,10 +573,15 @@ impl Autotuner {
     }
 
     /// Block-workload sweep: the (C, sigma) model prune of [`sweep`]
-    /// with block-scaled traffic, then an SpMMV measurement per surviving
-    /// (C, sigma) x candidate width. The chunk-column SpMMV kernel is
-    /// width-specialized internally, so no Scalar/Vectorized axis exists
-    /// here; the stored variant is `Vectorized`.
+    /// with block-scaled traffic, then a measurement per surviving
+    /// (C, sigma) x candidate width x kernel variant. Each candidate is
+    /// timed on *both* halves of a CG-like iteration — the plain SpMMV
+    /// and the fused SpMV+AXPBY+dot kernel of section 5.3 — and scored
+    /// by combined throughput, so the stored `(variant, nvecs)` pair is
+    /// the one that wins when the fused epilogue is in play, not just on
+    /// the bare product. `Scalar` is excluded from the block axis (it
+    /// exists as a baseline, not a contender); remaining variants come
+    /// from [`TuneOptions::variants`].
     ///
     /// [`sweep`]: Autotuner::sweep
     fn sweep_block<S: Scalar>(&self, a: &Crs<S>, nvecs: usize) -> Result<CacheEntry> {
@@ -608,6 +617,16 @@ impl Autotuner {
         if !widths.contains(&nvecs) {
             widths.push(nvecs);
         }
+        let mut block_variants: Vec<SpmvVariant> = self
+            .opts
+            .variants
+            .iter()
+            .copied()
+            .filter(|&v| v != SpmvVariant::Scalar)
+            .collect();
+        if block_variants.is_empty() {
+            block_variants.push(SpmvVariant::Vectorized);
+        }
         let flops = perfmodel::spmv_flops_crs(a, nvecs);
         let mut best: Option<(TunedConfig, f64, f64, f64)> = None; // (cfg, gflops, model, beta)
         let mut candidates_measured = 0usize;
@@ -622,25 +641,52 @@ impl Autotuner {
                 let mut y =
                     DenseMat::<S>::zeros(sell.nrows_padded(), w, Layout::RowMajor);
                 let rounds = nvecs.div_ceil(w);
-                let st = bench_for(self.opts.budget, self.opts.min_reps, || {
-                    for _ in 0..rounds {
-                        sell_spmmv(&sell, &x, &mut y);
+                // The fused half of the score: a CG-like epilogue
+                // (y = alpha*A*x + beta*y, plus the x.y dot) riding the
+                // same matrix pass.
+                let fused_opts = SpmvOpts {
+                    flags: flags::AXPBY | flags::DOT_XY,
+                    alpha: S::ONE,
+                    beta: S::from_f64(0.5),
+                    ..Default::default()
+                };
+                for &variant in &block_variants {
+                    let st_plain = bench_for(self.opts.budget, self.opts.min_reps, || {
+                        for _ in 0..rounds {
+                            sell_spmmv_variant(&sell, &x, &mut y, variant);
+                        }
+                    });
+                    let st_fused = bench_for(self.opts.budget, self.opts.min_reps, || {
+                        for _ in 0..rounds {
+                            sell_spmv_fused_variant(
+                                &sell,
+                                &x,
+                                &mut y,
+                                None,
+                                &fused_opts,
+                                variant,
+                            )
+                            .expect("fused sweep kernel on validated dims");
+                        }
+                    });
+                    // Combined throughput over both halves; the epilogue
+                    // flops are dropped (same small constant for every
+                    // candidate), so this stays comparable to `model`.
+                    let eff = gflops(2.0 * flops, st_plain.min + st_fused.min);
+                    let better = best.is_none_or(|(_, b, _, _)| eff > b);
+                    if better {
+                        best = Some((
+                            TunedConfig {
+                                c,
+                                sigma,
+                                variant,
+                                nvecs: w,
+                            },
+                            eff,
+                            model,
+                            sell.beta(),
+                        ));
                     }
-                });
-                let eff = gflops(flops, st.min);
-                let better = best.is_none_or(|(_, b, _, _)| eff > b);
-                if better {
-                    best = Some((
-                        TunedConfig {
-                            c,
-                            sigma,
-                            variant: SpmvVariant::Vectorized,
-                            nvecs: w,
-                        },
-                        eff,
-                        model,
-                        sell.beta(),
-                    ));
                 }
             }
         }
@@ -691,6 +737,7 @@ fn opts_sig(o: &TuneOptions) -> u64 {
         eat(match v {
             SpmvVariant::Vectorized => 2,
             SpmvVariant::Scalar => 3,
+            SpmvVariant::Simd => 4,
         });
     }
     eat(u64::MAX - 2);
@@ -698,6 +745,14 @@ fn opts_sig(o: &TuneOptions) -> u64 {
         eat(w as u64 + 1);
     }
     h
+}
+
+/// Cache identity of the tuner's device. The model string alone is not
+/// enough now that the default spec is *detected* ("detected host CPU"
+/// everywhere): decisions measured on a host with a different core count
+/// or bandwidth must not be adopted, so both join the key.
+fn device_sig(d: &DeviceSpec) -> String {
+    format!("{}#c{}#bw{}", d.model, d.cores, d.bandwidth_gbs)
 }
 
 /// One decision as a JSON line (hand-rolled: the crate is
@@ -782,6 +837,7 @@ fn parse_cache_line(line: &str, device: &str, osig: u64) -> Option<(Fingerprint,
     let variant = match json_field(line, "variant")? {
         "Vectorized" => SpmvVariant::Vectorized,
         "Scalar" => SpmvVariant::Scalar,
+        "Simd" => SpmvVariant::Simd,
         _ => return None,
     };
     let entry = CacheEntry {
@@ -802,14 +858,18 @@ fn parse_cache_line(line: &str, device: &str, osig: u64) -> Option<(Fingerprint,
 
 static GLOBAL: OnceLock<Autotuner> = OnceLock::new();
 
-/// The process-wide autotuner (Table 1 CPU-socket device model, default
-/// sweep options). All library consumers share this cache, which
-/// persists across processes: the path comes from `GHOST_TUNE_CACHE`
-/// (set it empty to disable persistence) and defaults to
-/// `target/ghost_tune_cache.jsonl`.
+/// The process-wide autotuner (device model detected from the host
+/// topology via [`topology::detected_cpu_spec`] — sockets x bandwidth,
+/// not the hard-coded Table 1 socket — with default sweep options). All
+/// library consumers share this cache, which persists across processes:
+/// the path comes from `GHOST_TUNE_CACHE` (set it empty to disable
+/// persistence) and defaults to `target/ghost_tune_cache.jsonl`. Cache
+/// entries are keyed by the device signature (model + cores +
+/// bandwidth), so decisions tuned on one host are not replayed on a
+/// differently shaped one.
 pub fn global() -> &'static Autotuner {
     GLOBAL.get_or_init(|| {
-        let t = Autotuner::new(topology::emmy_cpu_socket(), TuneOptions::default());
+        let t = Autotuner::new(topology::detected_cpu_spec(), TuneOptions::default());
         let path = match std::env::var("GHOST_TUNE_CACHE") {
             Ok(p) if p.is_empty() => None,
             Ok(p) => Some(PathBuf::from(p)),
@@ -938,16 +998,18 @@ mod tests {
     }
 
     #[test]
-    fn tuned_variant_is_vectorized_on_rhs_dominated_matrix() {
+    fn tuned_variant_avoids_scalar_on_rhs_dominated_matrix() {
         // paper-style RHS-dominated matrix: long uniform rows, C = 32.
-        // The chunk-column kernel streams val/col contiguously while the
-        // Scalar variant walks stride-C; with the SIMD-friendly margin the
-        // tuner must never pick Scalar here. The margin is raised well
-        // above the default for this test so a debug-build (`cargo test`,
-        // opt-level 0) timing wobble on a noisy runner cannot flip the
-        // selection: Scalar would have to beat the streaming kernel by
-        // >1.5x, which its strided access pattern cannot do on a
-        // multi-megabyte working set.
+        // The chunk-column kernels (Vectorized and Simd alike) stream
+        // val/col contiguously while the Scalar variant walks stride-C;
+        // with the SIMD-friendly margin the tuner must never pick Scalar
+        // here (which of the two streaming variants wins is
+        // host-dependent and deliberately unasserted). The margin is
+        // raised well above the default for this test so a debug-build
+        // (`cargo test`, opt-level 0) timing wobble on a noisy runner
+        // cannot flip the selection: Scalar would have to beat the
+        // streaming kernels by >1.5x, which its strided access pattern
+        // cannot do on a multi-megabyte working set.
         let n = 8192;
         let a = Crs::<f64>::from_row_fn(n, n, |i, cols, vals| {
             for d in 0..32usize {
@@ -968,7 +1030,7 @@ mod tests {
             },
         );
         let out = tuner.tune(&a).unwrap();
-        assert_eq!(out.config.variant, SpmvVariant::Vectorized, "{out:?}");
+        assert_ne!(out.config.variant, SpmvVariant::Scalar, "{out:?}");
         assert_eq!(out.config.c, 32);
         assert!(out.measured_gflops > 0.0 && out.model_gflops > 0.0);
     }
@@ -1040,6 +1102,29 @@ mod tests {
         assert_eq!(t3.cache_len(), 2);
         t3.clear_cache();
         assert!(!path.exists());
+    }
+
+    /// Cache keys carry the device *shape* (cores, bandwidth), not just
+    /// the model string: a decision tuned on one host must not be
+    /// replayed on a differently shaped one — the detected-topology
+    /// counterpart of the structural opts_sig check above.
+    #[test]
+    fn cache_entries_are_keyed_by_device_shape() {
+        let path = std::env::temp_dir().join(format!(
+            "ghost_tune_cache_devkey_{}.jsonl",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_file(&path);
+        let a = matgen::poisson7::<f64>(8, 8, 8);
+        let t1 = Autotuner::new(topology::emmy_cpu_socket(), quick_opts())
+            .with_cache_file(path.clone());
+        t1.tune(&a).unwrap();
+        let mut wider = topology::emmy_cpu_socket();
+        wider.bandwidth_gbs *= 2.0;
+        let t2 = Autotuner::new(wider, quick_opts()).with_cache_file(path.clone());
+        assert_eq!(t2.cache_len(), 0, "same model, different shape: no adoption");
+        assert!(!t2.tune(&a).unwrap().cache_hit);
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -1,0 +1,203 @@
+//! Kernel-variant equivalence sweep: the Scalar, Vectorized and Simd
+//! SpMV/SpMMV/fused kernels all accumulate each row over the chunk
+//! columns in ascending order with separate multiply-then-add (never
+//! FMA), so their results must agree with the CRS reference *bitwise* —
+//! with and without `--features simd` (the AVX2 path preserves the same
+//! accumulation order per lane). Also covers the first-touch NUMA
+//! construction path: a matrix built through [`SellMat::from_crs_numa`]
+//! must be byte-for-byte the matrix built by the plain constructor.
+
+use ghost::core::Rng;
+use ghost::densemat::{DenseMat, Layout};
+use ghost::kernels::fused::{flags, sell_spmv_fused_variant, SpmvOpts};
+use ghost::kernels::spmmv::sell_spmmv_variant;
+use ghost::kernels::spmv::{sell_spmv, unpermute, SpmvVariant};
+use ghost::sparsemat::{Crs, SellMat};
+use ghost::topology::{Machine, NumaAlloc};
+
+fn random_square(rng: &mut Rng, n: usize, avg: usize) -> Crs<f64> {
+    Crs::from_row_fn(n, n, |_i, cols, vals| {
+        let k = rng.range(0, (2 * avg).min(n) + 1);
+        for c in rng.sample_distinct(n, k) {
+            cols.push(c as i32);
+            vals.push(rng.normal());
+        }
+    })
+    .unwrap()
+}
+
+/// ~100 random matrices x C in {1, 4, 8, 32} x all three variants: the
+/// SELL result must match the CRS result bit for bit.
+#[test]
+fn spmv_variants_match_crs_bitwise() {
+    let mut rng = Rng::new(0x51_3d);
+    for case in 0..100u64 {
+        let n = rng.range(1, 121);
+        let a = random_square(&mut rng, n, 6);
+        let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mut y_crs = vec![0.0; n];
+        a.spmv(&x, &mut y_crs);
+        for c in [1usize, 4, 8, 32] {
+            let sigma = if case % 2 == 0 { 1 } else { 4 * c };
+            let s = SellMat::from_crs(&a, c, sigma).unwrap();
+            let mut xs = vec![0.0; s.nrows_padded().max(n)];
+            xs[..n].copy_from_slice(&x);
+            for variant in SpmvVariant::ALL {
+                let mut ys = vec![0.0; s.nrows_padded()];
+                sell_spmv(&s, &xs, &mut ys, variant);
+                let mut y = vec![0.0; n];
+                unpermute(&s, &ys, &mut y);
+                for i in 0..n {
+                    assert_eq!(
+                        y[i].to_bits(),
+                        y_crs[i].to_bits(),
+                        "case {case} C={c} sigma={sigma} {variant:?} row {i}: \
+                         {} vs {}",
+                        y[i],
+                        y_crs[i]
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Block kernels: every variant of `sell_spmmv_variant` must equal the
+/// column-by-column Scalar SpMV bitwise, for both x/y layouts.
+#[test]
+fn spmmv_variants_match_columnwise_spmv_bitwise() {
+    let mut rng = Rng::new(0x51_3e);
+    for case in 0..40u64 {
+        let n = rng.range(1, 97);
+        let a = random_square(&mut rng, n, 5);
+        let c = [1usize, 4, 8, 32][(case % 4) as usize];
+        let s = SellMat::from_crs(&a, c, 4 * c).unwrap();
+        let np = s.nrows_padded();
+        let nx = np.max(n);
+        for nvecs in [1usize, 3, 4] {
+            let x = DenseMat::<f64>::from_fn(nx, nvecs, Layout::RowMajor, |i, j| {
+                ((i * 31 + j * 7) % 13) as f64 * 0.25 - 1.5
+            });
+            // reference: one Scalar SpMV per column
+            let mut want = DenseMat::<f64>::zeros(np, nvecs, Layout::RowMajor);
+            for j in 0..nvecs {
+                let xcol: Vec<f64> = (0..nx).map(|i| x.at(i, j)).collect();
+                let mut ycol = vec![0.0; np];
+                sell_spmv(&s, &xcol, &mut ycol, SpmvVariant::Scalar);
+                for i in 0..np {
+                    *want.at_mut(i, j) = ycol[i];
+                }
+            }
+            for layout in [Layout::RowMajor, Layout::ColMajor] {
+                let xl = DenseMat::<f64>::from_fn(nx, nvecs, layout, |i, j| x.at(i, j));
+                for variant in SpmvVariant::ALL {
+                    let mut y = DenseMat::<f64>::zeros(np, nvecs, layout);
+                    sell_spmmv_variant(&s, &xl, &mut y, variant);
+                    for i in 0..np {
+                        for j in 0..nvecs {
+                            assert_eq!(
+                                y.at(i, j).to_bits(),
+                                want.at(i, j).to_bits(),
+                                "case {case} C={c} nvecs={nvecs} {layout:?} \
+                                 {variant:?} at ({i},{j})"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Fused kernels: y, z and every requested dot must be bitwise equal
+/// across the variant axis (col-permuted storage, the fused
+/// precondition).
+#[test]
+fn fused_variants_bitwise_identical() {
+    let mut rng = Rng::new(0x51_3f);
+    for case in 0..25u64 {
+        let n = rng.range(1, 97);
+        let a = random_square(&mut rng, n, 5);
+        let c = [1usize, 4, 8, 32][(case % 4) as usize];
+        let s = SellMat::from_crs_opts(&a, c, 4 * c, true).unwrap();
+        let np = s.nrows_padded();
+        for nvecs in [1usize, 3, 4] {
+            let x = DenseMat::<f64>::from_fn(np.max(n), nvecs, Layout::RowMajor, |i, j| {
+                ((i * 17 + j * 5) % 11) as f64 * 0.125 - 0.5
+            });
+            let y0 = DenseMat::<f64>::from_fn(np, nvecs, Layout::RowMajor, |i, j| {
+                ((i + j) % 7) as f64 * 0.5
+            });
+            let z0 = y0.clone();
+            let opts = SpmvOpts {
+                flags: flags::VSHIFT
+                    | flags::AXPBY
+                    | flags::CHAIN_AXPBY
+                    | flags::DOT_ANY,
+                alpha: 1.25,
+                beta: -0.5,
+                gamma: vec![0.75; nvecs],
+                delta: 0.25,
+                eta: 2.0,
+            };
+            let mut got: Vec<(Vec<u64>, Vec<u64>, Vec<u64>)> = Vec::new();
+            for variant in SpmvVariant::ALL {
+                let mut y = y0.clone();
+                let mut z = z0.clone();
+                let dots = sell_spmv_fused_variant(&s, &x, &mut y, Some(&mut z), &opts, variant)
+                    .unwrap();
+                let ybits: Vec<u64> = (0..np)
+                    .flat_map(|i| (0..nvecs).map(move |j| (i, j)))
+                    .map(|(i, j)| y.at(i, j).to_bits())
+                    .collect();
+                let zbits: Vec<u64> = (0..np)
+                    .flat_map(|i| (0..nvecs).map(move |j| (i, j)))
+                    .map(|(i, j)| z.at(i, j).to_bits())
+                    .collect();
+                let dbits: Vec<u64> = dots
+                    .yy
+                    .iter()
+                    .chain(dots.xy.iter())
+                    .chain(dots.xx.iter())
+                    .map(|v| v.to_bits())
+                    .collect();
+                got.push((ybits, zbits, dbits));
+            }
+            for (k, g) in got.iter().enumerate().skip(1) {
+                assert_eq!(
+                    g,
+                    &got[0],
+                    "case {case} C={c} nvecs={nvecs}: variant {:?} diverged \
+                     from {:?}",
+                    SpmvVariant::ALL[k],
+                    SpmvVariant::ALL[0]
+                );
+            }
+        }
+    }
+}
+
+/// First-touch construction is a pure placement policy: the NUMA-built
+/// matrix must be byte-for-byte the plainly built one, for both
+/// column-permute modes and a multi-node machine.
+#[test]
+fn numa_construction_is_bit_identical_to_plain() {
+    let mut rng = Rng::new(0x51_40);
+    let numa = NumaAlloc::new(&Machine::emmy_node());
+    assert!(numa.nnodes() >= 1);
+    for case in 0..20u64 {
+        let n = rng.range(1, 201);
+        let a = random_square(&mut rng, n, 7);
+        let c = [1usize, 4, 8, 32][(case % 4) as usize];
+        for col_permute in [false, true] {
+            let plain = SellMat::from_crs_opts(&a, c, 4 * c, col_permute).unwrap();
+            let placed = SellMat::from_crs_numa(&a, c, 4 * c, col_permute, &numa).unwrap();
+            assert_eq!(plain.chunk_ptr(), placed.chunk_ptr());
+            assert_eq!(plain.colidx(), placed.colidx());
+            assert_eq!(plain.perm(), placed.perm());
+            let pv: Vec<u64> = plain.values().iter().map(|v| v.to_bits()).collect();
+            let nv: Vec<u64> = placed.values().iter().map(|v| v.to_bits()).collect();
+            assert_eq!(pv, nv, "case {case} C={c} col_permute={col_permute}");
+        }
+    }
+}
