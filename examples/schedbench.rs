@@ -63,6 +63,11 @@ struct RunOutcome {
     widest: usize,
     cache_hits: u64,
     stolen_buckets: u64,
+    /// Kernel-layer gauges read off the service registry after the run:
+    /// achieved Gflop/s of the last solve and its measured-vs-roofline
+    /// efficiency (see ghost::obs / ghost::perfmodel).
+    achieved_gflops: f64,
+    efficiency: f64,
 }
 
 /// (deadline jobs, misses) across a run's reports.
@@ -156,6 +161,8 @@ fn run_service(svc: &dyn SolveService, specs: &[JobSpec]) -> Result<RunOutcome> 
         widest: stats.max_batch_width,
         cache_hits: stats.cache.hits,
         stolen_buckets: stats.stolen_buckets,
+        achieved_gflops: svc.gauge("kernel.achieved_gflops").unwrap_or(0.0),
+        efficiency: svc.gauge("kernel.efficiency").unwrap_or(0.0),
     })
 }
 
@@ -340,6 +347,8 @@ fn main() -> Result<()> {
         widest: tcp_stats.max_batch_width,
         cache_hits: tcp_stats.cache.hits,
         stolen_buckets: tcp_stats.stolen_buckets,
+        achieved_gflops: tcp_svc.gauge("kernel.achieved_gflops").unwrap_or(0.0),
+        efficiency: tcp_svc.gauge("kernel.efficiency").unwrap_or(0.0),
     };
     tcp_svc.shutdown();
     // the wire codec must be invisible in the numbers as well
@@ -389,6 +398,10 @@ fn main() -> Result<()> {
             n.sched.stolen_buckets
         );
     }
+    println!(
+        "kernel gauges (batched run): {:.2} Gflop/s achieved, {:.2} of roofline",
+        batched.achieved_gflops, batched.efficiency
+    );
     let (dl_jobs, dl_missed) = deadline_counts(&batched.reports);
     println!(
         "deadline lane: {dl_jobs} deadline jobs in the mixed stream, {dl_missed} missed"
@@ -415,13 +428,16 @@ fn main() -> Result<()> {
              \"batched_vs_serial_speedup\":{batched_speedup:.3},\
              \"sharded_vs_single_speedup\":{speedup:.3},\
              \"deadline_jobs\":{dl_jobs},\"deadline_missed\":{dl_missed},\
-             \"deadline_miss_rate\":{:.4},\"stolen_buckets\":{}}}",
+             \"deadline_miss_rate\":{:.4},\"stolen_buckets\":{},\
+             \"achieved_gflops\":{:.4},\"efficiency\":{:.4}}}",
             batched.reports.len(),
             batched.reports.len() as f64 / secs,
             tcp.reports.len() as f64 / tcp_secs,
             gflops(&batched.reports, secs),
             miss_rate(&batched.reports),
             sharded.stolen_buckets,
+            batched.achieved_gflops,
+            batched.efficiency,
         );
         std::fs::write(&path, format!("{line}\n"))?;
         println!("wrote bench JSON to {path}");

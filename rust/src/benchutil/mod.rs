@@ -1,8 +1,14 @@
 //! Benchmark harness (criterion is not vendorable offline): warmup +
 //! repeated timing with min/median/mean statistics and an aligned table
 //! printer shared by all `cargo bench` targets and examples.
+//!
+//! Percentiles come from [`crate::obs::hist::quantile_sorted`] — the
+//! same rank convention the runtime latency histograms use, so bench
+//! medians and service p50s never drift apart.
 
 use std::time::{Duration, Instant};
+
+use crate::obs::hist::quantile_sorted;
 
 /// Timing statistics over repetitions.
 #[derive(Clone, Copy, Debug)]
@@ -23,6 +29,20 @@ impl Stats {
     }
 }
 
+/// Collapse raw per-rep timings into [`Stats`]. Requires at least one
+/// sample (both harnesses guarantee it).
+fn stats_of(mut times: Vec<Duration>) -> Stats {
+    times.sort_unstable();
+    let sum: Duration = times.iter().sum();
+    Stats {
+        reps: times.len(),
+        min: times[0],
+        median: quantile_sorted(&times, 0.5).expect("stats_of needs >= 1 sample"),
+        mean: sum / times.len() as u32,
+        max: *times.last().unwrap(),
+    }
+}
+
 /// Run `f` `reps` times after `warmup` unmeasured runs.
 pub fn bench<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> Stats {
     for _ in 0..warmup {
@@ -34,15 +54,7 @@ pub fn bench<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> Stats {
         f();
         times.push(t0.elapsed());
     }
-    times.sort_unstable();
-    let sum: Duration = times.iter().sum();
-    Stats {
-        reps: times.len(),
-        min: times[0],
-        median: times[times.len() / 2],
-        mean: sum / times.len() as u32,
-        max: *times.last().unwrap(),
-    }
+    stats_of(times)
 }
 
 /// Keep re-running `f` until at least `budget` has elapsed (at least
@@ -58,15 +70,7 @@ pub fn bench_for<F: FnMut()>(budget: Duration, min_reps: usize, mut f: F) -> Sta
             break;
         }
     }
-    times.sort_unstable();
-    let sum: Duration = times.iter().sum();
-    Stats {
-        reps: times.len(),
-        min: times[0],
-        median: times[times.len() / 2],
-        mean: sum / times.len() as u32,
-        max: *times.last().unwrap(),
-    }
+    stats_of(times)
 }
 
 /// Gflop/s given flops per run and a per-run time.

@@ -17,6 +17,26 @@
 //! SpMV hot path when a request carries a caller-assembled matrix.
 
 use crate::core::{GhostError, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+// Process-wide envelope traffic counters. The fabric is simulated
+// in-process, so one set of statics observes every rank; the scheduler
+// layer surfaces them as `comm.*` metrics (see [`wire_stats`]).
+static ENC_FRAMES: AtomicU64 = AtomicU64::new(0);
+static ENC_BYTES: AtomicU64 = AtomicU64::new(0);
+static DEC_FRAMES: AtomicU64 = AtomicU64::new(0);
+static DEC_BYTES: AtomicU64 = AtomicU64::new(0);
+
+/// Snapshot of envelope traffic since process start:
+/// `(encoded frames, encoded bytes, decoded frames, decoded bytes)`.
+pub fn wire_stats() -> (u64, u64, u64, u64) {
+    (
+        ENC_FRAMES.load(Ordering::Relaxed),
+        ENC_BYTES.load(Ordering::Relaxed),
+        DEC_FRAMES.load(Ordering::Relaxed),
+        DEC_BYTES.load(Ordering::Relaxed),
+    )
+}
 
 /// Version of the on-fabric envelope layout. Bumped whenever any
 /// payload schema changes; a mismatched peer is rejected at decode.
@@ -30,7 +50,13 @@ use crate::core::{GhostError, Result};
 /// side, steal requests now carry a bucket budget and yields return a
 /// *list* of buckets (deadline-pressure-scaled multi-bucket stealing,
 /// see [`crate::sched::shard`]).
-pub const ENVELOPE_VERSION: u16 = 3;
+/// v4: observability — job specs carry an absolute monotonic-anchored
+/// deadline (`deadline_at_us`) plus a trace span (id + stamped
+/// lifecycle events) that survives steal/yield migration; job results
+/// carry `queue_wait_ms` / `solve_ms` / `total_ms` and the finished
+/// trace; node→front stats piggybacks grew a flattened metric set
+/// (see [`crate::obs::registry`]).
+pub const ENVELOPE_VERSION: u16 = 4;
 
 /// Little-endian append-only byte sink.
 #[derive(Default)]
@@ -274,6 +300,8 @@ impl Envelope {
         w.put_usize(self.payload.len());
         let mut out = w.into_bytes();
         out.extend_from_slice(&self.payload);
+        ENC_FRAMES.fetch_add(1, Ordering::Relaxed);
+        ENC_BYTES.fetch_add(out.len() as u64, Ordering::Relaxed);
         out
     }
 
@@ -291,6 +319,8 @@ impl Envelope {
         let len = r.get_usize()?;
         let payload = r.take(len)?.to_vec();
         r.finish()?;
+        DEC_FRAMES.fetch_add(1, Ordering::Relaxed);
+        DEC_BYTES.fetch_add(bytes.len() as u64, Ordering::Relaxed);
         Ok(Envelope { kind, payload })
     }
 }

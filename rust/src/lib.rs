@@ -18,6 +18,7 @@ pub mod densemat;
 pub mod hetero;
 pub mod kernels;
 pub mod matgen;
+pub mod obs;
 pub mod perfmodel;
 pub mod runtime;
 pub mod sched;

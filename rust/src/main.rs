@@ -14,7 +14,7 @@
 //!           autotune picks for the random-vector block)
 //!   serve  (--requests F.jsonl [--oneshot] | --listen HOST:PORT)
 //!          [--pus P] [--shepherds S] [--cache-mb M] [--max-batch W]
-//!          [--no-batch] [--deadline-ms D]
+//!          [--no-batch] [--deadline-ms D] [--trace FILE]
 //!          [--nodes N] [--fronts F] [--route affinity|hash|load]
 //!          [--node-pus P] [--max-outstanding J] [--min-deadline-ms D]
 //!          (the asynchronous solve service: jobs are scheduled on the
@@ -33,12 +33,19 @@
 //!           stealing under overload — see ghost::sched::shard.
 //!           --max-outstanding / --min-deadline-ms arm admission
 //!           control: saturated or infeasible requests are answered
-//!           with typed rejections instead of queueing unboundedly.)
+//!           with typed rejections instead of queueing unboundedly.
+//!           --trace FILE exports one JSONL line per completed job with
+//!           its full lifecycle span — see ghost::obs::trace.)
 //!   client --connect HOST:PORT [--requests F.jsonl] [--shutdown]
 //!          (drive a `serve --listen` service over TCP: submit every
 //!           JSONL request pipelined, print one response line per
 //!           request as results arrive; --shutdown then asks the
 //!           listener to stop — see ghost::sched::client.)
+//!   stats  --connect HOST:PORT [--raw]
+//!          (scrape the metrics endpoint of a `serve --listen` service:
+//!           plaintext `GET /metrics` on the same socket. Default
+//!           output is the global counters followed by a per-node
+//!           table; --raw dumps the `name value` lines verbatim.)
 //!
 //! Matrices: poisson7 | stencil27 | matpde | anderson | cage | random.
 //! (clap is not vendorable offline; flags are parsed by the tiny parser
@@ -414,6 +421,9 @@ fn serve_config(a: &Args) -> Result<ghost::sched::ServeConfig> {
     if let Some(d) = a.flags.get("deadline-ms").and_then(|v| v.parse().ok()) {
         cfg = cfg.with_deadline_ms(d);
     }
+    if let Some(path) = a.flags.get("trace") {
+        cfg = cfg.with_trace(std::sync::Arc::new(ghost::obs::TraceSink::to_file(path)?));
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -599,6 +609,71 @@ fn cmd_client(a: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_stats(a: &Args) -> Result<()> {
+    use std::collections::BTreeMap;
+    let addr = a.str("connect", "");
+    ghost::ensure!(
+        !addr.is_empty(),
+        InvalidArg,
+        "stats needs --connect <host:port>"
+    );
+    let text = ghost::sched::fetch_metrics(addr.as_str())?;
+    if a.flags.contains_key("raw") {
+        print!("{text}");
+        return Ok(());
+    }
+    // split the dump: `nodeI.<metric> <value>` lines feed the per-node
+    // table, everything else prints as-is (listener, sched, shard,
+    // front and comm accounts)
+    let mut nodes: BTreeMap<usize, BTreeMap<String, String>> = BTreeMap::new();
+    for line in text.lines() {
+        let Some((name, value)) = line.rsplit_once(' ') else {
+            continue;
+        };
+        let node_metric = name.strip_prefix("node").and_then(|rest| {
+            let (idx, metric) = rest.split_once('.')?;
+            Some((idx.parse::<usize>().ok()?, metric))
+        });
+        match node_metric {
+            Some((i, metric)) => {
+                nodes
+                    .entry(i)
+                    .or_default()
+                    .insert(metric.to_string(), value.to_string());
+            }
+            None => println!("{line}"),
+        }
+    }
+    if !nodes.is_empty() {
+        let cell = |m: &BTreeMap<String, String>, k: &str| {
+            m.get(k).cloned().unwrap_or_else(|| "-".into())
+        };
+        println!();
+        let mut t = Table::new(&[
+            "node",
+            "routed",
+            "handoffs",
+            "completed",
+            "kernel.flops",
+            "Gflop/s",
+            "efficiency",
+        ]);
+        for (i, m) in &nodes {
+            t.row(&[
+                i.to_string(),
+                cell(m, "routed"),
+                cell(m, "handoffs"),
+                cell(m, "sched.completed"),
+                cell(m, "kernel.flops"),
+                cell(m, "kernel.achieved_gflops"),
+                cell(m, "kernel.efficiency"),
+            ]);
+        }
+        t.print();
+    }
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let cmd = argv.first().map(|s| s.as_str()).unwrap_or("info");
@@ -611,11 +686,12 @@ fn main() -> Result<()> {
         "kpm" => cmd_kpm(&args)?,
         "serve" => cmd_serve(&args)?,
         "client" => cmd_client(&args)?,
+        "stats" => cmd_stats(&args)?,
         "version" => println!("ghost {}", ghost::version()),
         other => {
             eprintln!(
                 "unknown command '{other}'; see the module docs \
-                 (info|spmv|cg|eig|kpm|serve|client)"
+                 (info|spmv|cg|eig|kpm|serve|client|stats)"
             );
             std::process::exit(2);
         }

@@ -1,0 +1,193 @@
+//! Latency histograms and the one shared quantile implementation.
+//!
+//! [`Hist`] is a fixed array of log₂ buckets over microseconds: bucket
+//! `i` counts samples in `(2^(i-1), 2^i]` µs (bucket 0 is `<= 1` µs,
+//! the last bucket absorbs everything beyond ~134 s). `observe_us` is
+//! three relaxed atomic ops — cheap enough for the scheduler's hot
+//! completion path — and snapshots are monotone, so fabric-level
+//! merging can take the element-wise max.
+//!
+//! [`rank`] / [`quantile_sorted`] are the quantile convention shared
+//! with `benchutil::Stats` (index `floor(q * n)`, clamped): bench
+//! medians and runtime histogram percentiles come from the same tested
+//! code instead of two drifting copies.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Number of log₂ buckets: upper bounds 1 µs, 2 µs, …, 2^26 µs (~67 s),
+/// with the final bucket catching everything larger.
+pub const NBUCKETS: usize = 28;
+
+/// The sample index holding quantile `q` of `count` sorted samples:
+/// `floor(q * count)`, clamped into range. The shared convention — see
+/// the module docs.
+pub fn rank(count: usize, q: f64) -> usize {
+    if count == 0 {
+        return 0;
+    }
+    (((count as f64) * q) as usize).min(count - 1)
+}
+
+/// Quantile of an already-sorted slice under the [`rank`] convention.
+/// Empty input returns `None`.
+pub fn quantile_sorted<T: Copy>(sorted: &[T], q: f64) -> Option<T> {
+    if sorted.is_empty() {
+        None
+    } else {
+        Some(sorted[rank(sorted.len(), q)])
+    }
+}
+
+/// A lock-free log₂-bucket latency histogram over microseconds.
+pub struct Hist {
+    counts: [AtomicU64; NBUCKETS],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Hist {
+    pub fn new() -> Self {
+        Hist {
+            counts: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+
+    /// Bucket index of a sample (the last bucket absorbs overflow).
+    fn bucket_of(us: u64) -> usize {
+        if us <= 1 {
+            0
+        } else {
+            ((64 - (us - 1).leading_zeros()) as usize).min(NBUCKETS - 1)
+        }
+    }
+
+    /// Upper bound (µs) of bucket `i`.
+    pub fn bucket_bound_us(i: usize) -> u64 {
+        1u64 << i.min(63)
+    }
+
+    /// Record one sample, in microseconds. Three relaxed atomics.
+    pub fn observe_us(&self, us: u64) {
+        self.counts[Self::bucket_of(us)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    /// Record one sample from a `Duration`.
+    pub fn observe(&self, d: Duration) {
+        self.observe_us(d.as_micros() as u64);
+    }
+
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            counts: self.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect(),
+            count: self.count.load(Ordering::Relaxed),
+            sum_us: self.sum_us.load(Ordering::Relaxed),
+            max_us: self.max_us.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A point-in-time copy of a [`Hist`]. All fields are monotone in the
+/// source histogram, so merging snapshots element-wise by max is sound.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct HistSnapshot {
+    pub counts: Vec<u64>,
+    pub count: u64,
+    pub sum_us: u64,
+    pub max_us: u64,
+}
+
+impl HistSnapshot {
+    /// Quantile estimate: the upper bound (µs) of the bucket holding
+    /// the [`rank`]-th sample. 0 when empty.
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = rank(self.count as usize, q) as u64;
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum > target {
+                return Hist::bucket_bound_us(i);
+            }
+        }
+        self.max_us
+    }
+
+    /// Mean sample in microseconds (0 when empty).
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_us as f64 / self.count as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rank_matches_the_benchutil_median_convention() {
+        // benchutil::Stats historically used times[len / 2]
+        for n in 1..20usize {
+            assert_eq!(rank(n, 0.5), n / 2, "n={n}");
+        }
+        assert_eq!(rank(0, 0.5), 0);
+        assert_eq!(rank(10, 0.0), 0);
+        assert_eq!(rank(10, 1.0), 9, "q=1 clamps into range");
+        assert_eq!(quantile_sorted(&[1, 2, 3, 4], 0.5), Some(3));
+        assert_eq!(quantile_sorted::<u64>(&[], 0.5), None);
+    }
+
+    #[test]
+    fn buckets_cover_the_range_without_gaps() {
+        assert_eq!(Hist::bucket_of(0), 0);
+        assert_eq!(Hist::bucket_of(1), 0);
+        assert_eq!(Hist::bucket_of(2), 1);
+        assert_eq!(Hist::bucket_of(3), 2);
+        assert_eq!(Hist::bucket_of(4), 2);
+        assert_eq!(Hist::bucket_of(5), 3);
+        assert_eq!(Hist::bucket_of(u64::MAX), NBUCKETS - 1);
+        // every sample lands in the bucket whose bound covers it
+        for us in [1u64, 7, 100, 1000, 65_536, 1 << 30] {
+            let b = Hist::bucket_of(us);
+            assert!(us <= Hist::bucket_bound_us(b) || b == NBUCKETS - 1, "us={us}");
+            if b > 0 && b < NBUCKETS - 1 {
+                assert!(us > Hist::bucket_bound_us(b - 1), "us={us}");
+            }
+        }
+    }
+
+    #[test]
+    fn observe_snapshot_quantiles() {
+        let h = Hist::new();
+        for us in [1u64, 1, 2, 10, 100, 1000, 1000, 50_000] {
+            h.observe_us(us);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 8);
+        assert_eq!(s.sum_us, 1 + 1 + 2 + 10 + 100 + 1000 + 1000 + 50_000);
+        assert_eq!(s.max_us, 50_000);
+        // p50: rank(8, 0.5) = 4 → the 100 µs sample → bucket bound 128
+        assert_eq!(s.quantile_us(0.5), 128);
+        assert!(s.quantile_us(0.99) >= 50_000);
+        assert!(s.mean_us() > 0.0);
+        assert_eq!(HistSnapshot::default().quantile_us(0.5), 0);
+    }
+}

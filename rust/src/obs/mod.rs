@@ -1,0 +1,90 @@
+//! Observability: the cross-cutting measurement layer (GHOST §5, §7 —
+//! every implementation choice in the paper is justified against a
+//! model, and the library ships instrumentation hooks because a hybrid
+//! MPI+X service is undebuggable without them).
+//!
+//! Three building blocks, deliberately dependency-free and lock-cheap:
+//!
+//! - [`registry`]: a [`Registry`] of monotonic [`Counter`]s, [`Gauge`]s
+//!   and latency [`Hist`]ograms. Handles are `Arc<AtomicU64>`-backed —
+//!   registration takes the registry lock once, every update afterwards
+//!   is a single atomic op. Node registries are flattened into
+//!   `(name, kind, bits)` triples that piggyback on the shard fabric's
+//!   stats envelopes and merge monotonically at the front.
+//! - [`trace`]: job-lifecycle spans (submit → route → park → steal →
+//!   batch → solve → respond) stamped with microseconds on the
+//!   process-wide monotonic clock below, carried on `JobSpec` across
+//!   steal/yield envelopes and exported as JSONL via
+//!   `ghost serve --trace FILE`.
+//! - [`hist`]: fixed log₂-bucket histograms plus the one shared
+//!   quantile implementation (`benchutil::Stats` uses the same
+//!   [`hist::rank`] convention, so bench medians and runtime
+//!   percentiles can never drift apart).
+//!
+//! # The clock
+//!
+//! All timestamps are microseconds since a process-wide monotonic epoch
+//! ([`epoch`], initialized on first use). Every simulated node, front
+//! and shepherd lives in this process, so the clock is valid
+//! *fabric-wide*: a deadline stamped as an absolute microsecond count
+//! at submit ([`clock_micros`]) means the same instant after a
+//! parked-bucket steal migrates the job to another node — which is what
+//! makes post-migration `deadline_missed` accounting exact instead of
+//! the remaining-ms re-basing it replaces.
+
+pub mod hist;
+pub mod registry;
+pub mod trace;
+
+pub use hist::{Hist, HistSnapshot};
+pub use registry::{Counter, Gauge, Registry};
+pub use trace::{Stage, Trace, TraceEvent, TraceSink};
+
+use std::sync::OnceLock;
+use std::time::{Duration, Instant};
+
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+/// The process-wide monotonic epoch. First call pins it; every
+/// timestamp in this module is measured from here.
+pub fn epoch() -> Instant {
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Microseconds since [`epoch`] — the timestamp unit of every trace
+/// event, histogram sample and absolute deadline.
+pub fn clock_micros() -> u64 {
+    epoch().elapsed().as_micros() as u64
+}
+
+/// The `Instant` a clock reading refers to. Saturates far in the
+/// future for absurd inputs (a hostile envelope must not panic the
+/// node).
+pub fn instant_at_us(us: u64) -> Instant {
+    epoch()
+        .checked_add(Duration::from_micros(us))
+        .unwrap_or_else(|| epoch() + Duration::from_secs(100 * 365 * 24 * 3600))
+}
+
+/// Inverse of [`instant_at_us`]: the clock reading of an `Instant`
+/// (clamped at 0 for instants before the epoch).
+pub fn micros_of(at: Instant) -> u64 {
+    at.saturating_duration_since(epoch()).as_micros() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clock_is_monotonic_and_roundtrips() {
+        let a = clock_micros();
+        let b = clock_micros();
+        assert!(b >= a);
+        let us = clock_micros() + 250_000;
+        let at = instant_at_us(us);
+        assert_eq!(micros_of(at), us);
+        // absurd input saturates instead of panicking
+        let _ = instant_at_us(u64::MAX);
+    }
+}

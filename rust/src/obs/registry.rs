@@ -1,0 +1,300 @@
+//! The metric registry: named counters, gauges and histograms with
+//! lock-cheap handles and a wire-friendly flattened snapshot.
+//!
+//! Registration (`counter` / `gauge` / `hist`) takes the registry
+//! mutex once and hands back an `Arc<AtomicU64>`-backed handle; every
+//! subsequent update is a single atomic op, so instrumented hot paths
+//! (task dispatch, job completion, kernel accounting) pay no lock.
+//!
+//! For fabric-wide aggregation a registry flattens to
+//! `(name, kind, bits)` triples ([`Registry::wire_snapshot`]):
+//! counters carry their `u64` value, gauges their `f64` bit pattern,
+//! histograms explode into `<name>.count` / `<name>.sum_us` counters
+//! plus `p50_us`/`p90_us`/`p99_us`/`max_us` gauges. Node snapshots ride
+//! the shard fabric's existing stats envelopes and merge at the front
+//! with [`merge_wire`]: counters (monotone) by max, gauges latest-wins
+//! — the same discipline `Front::note_node_stats` applies to
+//! `SchedStats`.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::hist::Hist;
+
+/// Wire kind tag of a flattened metric: 0 = monotonic counter (`u64`),
+/// 1 = gauge (`f64` bit pattern).
+pub const KIND_COUNTER: u8 = 0;
+/// See [`KIND_COUNTER`].
+pub const KIND_GAUGE: u8 = 1;
+
+/// A monotonic counter handle. Clones share the underlying atomic.
+#[derive(Clone, Default)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, v: u64) {
+        self.0.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A last-value-wins gauge handle storing an `f64` bit pattern.
+#[derive(Clone, Default)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+enum Metric {
+    Counter(Counter),
+    Gauge(Gauge),
+    Hist(Arc<Hist>),
+}
+
+/// A named set of metrics. Insertion order is preserved so rendered
+/// dumps are stable.
+#[derive(Default)]
+pub struct Registry {
+    metrics: Mutex<Vec<(String, Metric)>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Get or register the counter `name`. A name already registered
+    /// as a different kind yields a fresh detached handle (updates are
+    /// kept but never rendered) rather than a panic — observability
+    /// must not take the service down.
+    pub fn counter(&self, name: &str) -> Counter {
+        let mut g = self.metrics.lock().unwrap();
+        for (n, m) in g.iter() {
+            if n == name {
+                return match m {
+                    Metric::Counter(c) => c.clone(),
+                    _ => Counter::default(),
+                };
+            }
+        }
+        let c = Counter::default();
+        g.push((name.to_string(), Metric::Counter(c.clone())));
+        c
+    }
+
+    /// Get or register the gauge `name` (see [`Registry::counter`] for
+    /// the kind-mismatch rule).
+    pub fn gauge(&self, name: &str) -> Gauge {
+        let mut g = self.metrics.lock().unwrap();
+        for (n, m) in g.iter() {
+            if n == name {
+                return match m {
+                    Metric::Gauge(v) => v.clone(),
+                    _ => Gauge::default(),
+                };
+            }
+        }
+        let v = Gauge::default();
+        g.push((name.to_string(), Metric::Gauge(v.clone())));
+        v
+    }
+
+    /// Get or register the histogram `name` (see [`Registry::counter`]
+    /// for the kind-mismatch rule).
+    pub fn hist(&self, name: &str) -> Arc<Hist> {
+        let mut g = self.metrics.lock().unwrap();
+        for (n, m) in g.iter() {
+            if n == name {
+                return match m {
+                    Metric::Hist(h) => h.clone(),
+                    _ => Arc::new(Hist::new()),
+                };
+            }
+        }
+        let h = Arc::new(Hist::new());
+        g.push((name.to_string(), Metric::Hist(h.clone())));
+        h
+    }
+
+    /// Current value of a registered counter.
+    pub fn counter_value(&self, name: &str) -> Option<u64> {
+        self.metrics.lock().unwrap().iter().find_map(|(n, m)| match m {
+            Metric::Counter(c) if n == name => Some(c.get()),
+            _ => None,
+        })
+    }
+
+    /// Current value of a registered gauge.
+    pub fn gauge_value(&self, name: &str) -> Option<f64> {
+        self.metrics.lock().unwrap().iter().find_map(|(n, m)| match m {
+            Metric::Gauge(v) if n == name => Some(v.get()),
+            _ => None,
+        })
+    }
+
+    /// Flatten to wire triples (see the module docs for the encoding).
+    pub fn wire_snapshot(&self) -> Vec<(String, u8, u64)> {
+        let g = self.metrics.lock().unwrap();
+        let mut out = Vec::with_capacity(g.len() * 2);
+        for (name, m) in g.iter() {
+            match m {
+                Metric::Counter(c) => out.push((name.clone(), KIND_COUNTER, c.get())),
+                Metric::Gauge(v) => {
+                    out.push((name.clone(), KIND_GAUGE, v.get().to_bits()))
+                }
+                Metric::Hist(h) => {
+                    let s = h.snapshot();
+                    out.push((format!("{name}.count"), KIND_COUNTER, s.count));
+                    out.push((format!("{name}.sum_us"), KIND_COUNTER, s.sum_us));
+                    for (q, tag) in [(0.5, "p50_us"), (0.9, "p90_us"), (0.99, "p99_us")] {
+                        out.push((
+                            format!("{name}.{tag}"),
+                            KIND_GAUGE,
+                            (s.quantile_us(q) as f64).to_bits(),
+                        ));
+                    }
+                    out.push((
+                        format!("{name}.max_us"),
+                        KIND_GAUGE,
+                        (s.max_us as f64).to_bits(),
+                    ));
+                }
+            }
+        }
+        out
+    }
+
+    /// Plaintext dump: one `<prefix><name> <value>` line per flattened
+    /// metric, in registration order.
+    pub fn render(&self, prefix: &str) -> String {
+        let mut out = String::new();
+        for (name, kind, bits) in self.wire_snapshot() {
+            out.push_str(&format!("{prefix}{name} {}\n", fmt_wire_value(kind, bits)));
+        }
+        out
+    }
+}
+
+/// Merge a flattened snapshot into an accumulated per-node view:
+/// counters (monotone) keep the max, gauges take the latest value.
+pub fn merge_wire(into: &mut HashMap<String, (u8, u64)>, update: &[(String, u8, u64)]) {
+    for (name, kind, bits) in update {
+        match into.get_mut(name) {
+            Some((k, v)) if *k == *kind && *kind == KIND_COUNTER => {
+                *v = (*v).max(*bits);
+            }
+            Some((_, v)) => {
+                *v = *bits;
+            }
+            None => {
+                into.insert(name.clone(), (*kind, *bits));
+            }
+        }
+    }
+}
+
+/// Render an accumulated wire view as sorted plaintext lines.
+pub fn render_wire(prefix: &str, map: &HashMap<String, (u8, u64)>) -> String {
+    let mut names: Vec<&String> = map.keys().collect();
+    names.sort();
+    let mut out = String::new();
+    for name in names {
+        let (kind, bits) = map[name];
+        out.push_str(&format!("{prefix}{name} {}\n", fmt_wire_value(kind, bits)));
+    }
+    out
+}
+
+/// Human/grep-friendly value: counters as integers, gauges with
+/// trailing zeros trimmed.
+pub fn fmt_wire_value(kind: u8, bits: u64) -> String {
+    if kind == KIND_COUNTER {
+        bits.to_string()
+    } else {
+        fmt_f64(f64::from_bits(bits))
+    }
+}
+
+/// Format an f64 metric value compactly (`0`, `3.21`, `12345.678901`).
+pub fn fmt_f64(v: f64) -> String {
+    if !v.is_finite() {
+        return "0".into();
+    }
+    let s = format!("{v:.6}");
+    let s = s.trim_end_matches('0').trim_end_matches('.');
+    if s.is_empty() || s == "-" {
+        "0".into()
+    } else {
+        s.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn handles_are_shared_and_lock_cheap() {
+        let r = Registry::new();
+        let c = r.counter("jobs");
+        c.inc();
+        r.counter("jobs").add(4);
+        assert_eq!(c.get(), 5);
+        assert_eq!(r.counter_value("jobs"), Some(5));
+        let g = r.gauge("eff");
+        g.set(0.75);
+        assert_eq!(r.gauge_value("eff"), Some(0.75));
+        // kind mismatch: detached handle, original value intact
+        let bogus = r.gauge("jobs");
+        bogus.set(9.9);
+        assert_eq!(r.counter_value("jobs"), Some(5));
+    }
+
+    #[test]
+    fn wire_snapshot_flattens_and_merges_monotonically() {
+        let r = Registry::new();
+        r.counter("a").add(3);
+        r.gauge("g").set(1.5);
+        r.hist("lat").observe_us(100);
+        let snap = r.wire_snapshot();
+        let names: Vec<&str> = snap.iter().map(|(n, _, _)| n.as_str()).collect();
+        assert!(names.contains(&"a"));
+        assert!(names.contains(&"lat.count"));
+        assert!(names.contains(&"lat.p99_us"));
+        let mut acc = HashMap::new();
+        merge_wire(&mut acc, &snap);
+        // a stale counter update must not regress the merged view
+        merge_wire(&mut acc, &[("a".into(), KIND_COUNTER, 1)]);
+        assert_eq!(acc["a"], (KIND_COUNTER, 3));
+        // gauges are latest-wins
+        merge_wire(&mut acc, &[("g".into(), KIND_GAUGE, 2.5f64.to_bits())]);
+        assert_eq!(f64::from_bits(acc["g"].1), 2.5);
+        let text = render_wire("node0.", &acc);
+        assert!(text.contains("node0.a 3\n"), "{text}");
+        assert!(text.contains("node0.g 2.5\n"), "{text}");
+    }
+
+    #[test]
+    fn value_formatting_is_compact() {
+        assert_eq!(fmt_f64(0.0), "0");
+        assert_eq!(fmt_f64(3.210000), "3.21");
+        assert_eq!(fmt_f64(5.0), "5");
+        assert_eq!(fmt_f64(f64::NAN), "0");
+        assert_eq!(fmt_wire_value(KIND_COUNTER, 42), "42");
+    }
+}

@@ -1,0 +1,223 @@
+//! Job-lifecycle trace spans.
+//!
+//! Every job carries a [`Trace`]: a fabric-unique span id plus the
+//! microsecond timestamps ([`super::clock_micros`]) of the lifecycle
+//! stages it passed through — submit → route → park → steal → batch →
+//! solve → respond. The trace rides `JobSpec` across the shard fabric's
+//! steal/yield envelopes (envelope v4), so a job that migrates between
+//! nodes still ends with one complete, monotonically-timestamped chain.
+//!
+//! At completion the owning scheduler serialises the chain as one JSON
+//! line into the optional [`TraceSink`] (`ghost serve --trace FILE`).
+//! All allocation happens at submit (one `Vec` with capacity for the
+//! full chain); stamping a stage on the hot path is a clock read and a
+//! push.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::core::Result;
+
+/// Lifecycle stages a job can pass through, in nominal order. A job
+/// skips stages that don't apply (only parked jobs see `Park`, only
+/// stolen ones `Steal`, only batched ones `Batch`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Stage {
+    Submit = 0,
+    Route = 1,
+    Park = 2,
+    Steal = 3,
+    Batch = 4,
+    Solve = 5,
+    Respond = 6,
+}
+
+impl Stage {
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Submit => "submit",
+            Stage::Route => "route",
+            Stage::Park => "park",
+            Stage::Steal => "steal",
+            Stage::Batch => "batch",
+            Stage::Solve => "solve",
+            Stage::Respond => "respond",
+        }
+    }
+
+    /// Decode a wire byte; unknown values are rejected by the caller.
+    pub fn from_u8(v: u8) -> Option<Stage> {
+        Some(match v {
+            0 => Stage::Submit,
+            1 => Stage::Route,
+            2 => Stage::Park,
+            3 => Stage::Steal,
+            4 => Stage::Batch,
+            5 => Stage::Solve,
+            6 => Stage::Respond,
+            _ => return None,
+        })
+    }
+}
+
+/// One stamped lifecycle hop: which stage, at what clock reading.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceEvent {
+    pub stage: Stage,
+    /// Microseconds on the process-wide monotonic clock
+    /// ([`super::clock_micros`]).
+    pub at_us: u64,
+}
+
+/// The span carried by a job. `span == 0` means tracing is disabled for
+/// this job (the default); real spans come from [`next_span`] and start
+/// at 1.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Trace {
+    pub span: u64,
+    pub events: Vec<TraceEvent>,
+}
+
+impl Trace {
+    /// A live trace with a fresh fabric-unique span id and room for the
+    /// full stage chain (no reallocation on the common path).
+    pub fn start() -> Trace {
+        let mut t = Trace { span: next_span(), events: Vec::with_capacity(8) };
+        t.stamp(Stage::Submit);
+        t
+    }
+
+    pub fn is_active(&self) -> bool {
+        self.span != 0
+    }
+
+    /// Stamp `stage` at the current clock reading. No-op on an inactive
+    /// trace, so call sites don't branch.
+    pub fn stamp(&mut self, stage: Stage) {
+        if self.span != 0 {
+            self.events.push(TraceEvent { stage, at_us: super::clock_micros() });
+        }
+    }
+
+    /// Clock reading of the first event with `stage`, if stamped.
+    pub fn first_us(&self, stage: Stage) -> Option<u64> {
+        self.events.iter().find(|e| e.stage == stage).map(|e| e.at_us)
+    }
+}
+
+static NEXT_SPAN: AtomicU64 = AtomicU64::new(1);
+
+/// Allocate a fabric-unique span id (never 0).
+pub fn next_span() -> u64 {
+    NEXT_SPAN.fetch_add(1, Ordering::Relaxed)
+}
+
+/// A shared line-oriented trace output. Writes are whole-line and
+/// mutex-serialised, so concurrent schedulers can share one sink
+/// without interleaving.
+pub struct TraceSink {
+    w: Mutex<Box<dyn Write + Send>>,
+}
+
+impl std::fmt::Debug for TraceSink {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("TraceSink")
+    }
+}
+
+impl TraceSink {
+    pub fn new(w: Box<dyn Write + Send>) -> TraceSink {
+        TraceSink { w: Mutex::new(w) }
+    }
+
+    /// Sink appending JSONL to `path` (truncates an existing file).
+    pub fn to_file<P: AsRef<Path>>(path: P) -> Result<TraceSink> {
+        let f = File::create(path)?;
+        Ok(TraceSink::new(Box::new(BufWriter::new(f))))
+    }
+
+    /// Write one line (newline appended) and flush, so traces survive a
+    /// hard kill.
+    pub fn write_line(&self, line: &str) {
+        let mut w = self.w.lock().unwrap();
+        let _ = w.write_all(line.as_bytes());
+        let _ = w.write_all(b"\n");
+        let _ = w.flush();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn spans_are_unique_and_stamps_are_monotone() {
+        let a = Trace::start();
+        let b = Trace::start();
+        assert_ne!(a.span, 0);
+        assert_ne!(a.span, b.span);
+        let mut t = Trace::start();
+        t.stamp(Stage::Route);
+        t.stamp(Stage::Solve);
+        t.stamp(Stage::Respond);
+        assert_eq!(t.events[0].stage, Stage::Submit);
+        assert_eq!(t.events.last().unwrap().stage, Stage::Respond);
+        for w in t.events.windows(2) {
+            assert!(w[1].at_us >= w[0].at_us);
+        }
+        assert_eq!(t.first_us(Stage::Route), Some(t.events[1].at_us));
+        assert_eq!(t.first_us(Stage::Park), None);
+    }
+
+    #[test]
+    fn inactive_traces_never_record() {
+        let mut t = Trace::default();
+        assert!(!t.is_active());
+        t.stamp(Stage::Solve);
+        assert!(t.events.is_empty());
+    }
+
+    #[test]
+    fn stage_bytes_round_trip() {
+        for s in [
+            Stage::Submit,
+            Stage::Route,
+            Stage::Park,
+            Stage::Steal,
+            Stage::Batch,
+            Stage::Solve,
+            Stage::Respond,
+        ] {
+            assert_eq!(Stage::from_u8(s as u8), Some(s));
+            assert!(!s.name().is_empty());
+        }
+        assert_eq!(Stage::from_u8(7), None);
+        assert_eq!(Stage::from_u8(255), None);
+    }
+
+    #[test]
+    fn sink_writes_whole_lines() {
+        struct Buf(Arc<Mutex<Vec<u8>>>);
+        impl Write for Buf {
+            fn write(&mut self, b: &[u8]) -> std::io::Result<usize> {
+                self.0.lock().unwrap().extend_from_slice(b);
+                Ok(b.len())
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+        let shared = Arc::new(Mutex::new(Vec::new()));
+        let sink = TraceSink::new(Box::new(Buf(shared.clone())));
+        sink.write_line("{\"span\":1}");
+        sink.write_line("{\"span\":2}");
+        let got = String::from_utf8(shared.lock().unwrap().clone()).unwrap();
+        assert_eq!(got, "{\"span\":1}\n{\"span\":2}\n");
+        assert!(format!("{sink:?}").contains("TraceSink"));
+    }
+}

@@ -34,9 +34,11 @@
 //! adds a digest of the column indices and value bit patterns.
 
 use std::collections::HashMap;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::Instant;
 
 use crate::core::Result;
+use crate::obs::Hist;
 use crate::solvers::LocalSellOp;
 use crate::sparsemat::Crs;
 use crate::tune::{self, Fingerprint, TunedConfig};
@@ -134,6 +136,9 @@ pub struct OperatorCache {
     budget_bytes: usize,
     numa: crate::topology::NumaAlloc,
     inner: Mutex<Inner>,
+    /// Assembly-latency histogram (sweep + SELL build on a miss),
+    /// installed by the owning scheduler's registry.
+    obs_assembly: OnceLock<Arc<Hist>>,
 }
 
 impl OperatorCache {
@@ -145,7 +150,15 @@ impl OperatorCache {
             budget_bytes,
             numa: crate::topology::NumaAlloc::single(),
             inner: Mutex::new(Inner::default()),
+            obs_assembly: OnceLock::new(),
         }
+    }
+
+    /// Install the assembly-latency histogram (first installation
+    /// wins). Kept out of the constructor so the cache stays usable —
+    /// and unobserved — without a registry.
+    pub fn install_obs(&self, assembly: Arc<Hist>) {
+        let _ = self.obs_assembly.set(assembly);
     }
 
     /// Set the first-touch placement policy applied when operators are
@@ -228,6 +241,7 @@ impl OperatorCache {
         };
         // assemble OFF the lock: unrelated lookups (and other
         // assemblies) proceed concurrently; only same-key requests wait
+        let t0 = Instant::now();
         let built = (|| {
             let tuned = tune::tune(a)?;
             let op = LocalSellOp::with_variant_numa(
@@ -240,6 +254,9 @@ impl OperatorCache {
             )?;
             Ok::<_, crate::core::GhostError>((tuned.config, op))
         })();
+        if let Some(h) = self.obs_assembly.get() {
+            h.observe(t0.elapsed());
+        }
         let mut g = self.inner.lock().unwrap();
         let (config, op) = match built {
             Ok(ok) => ok,

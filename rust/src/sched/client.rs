@@ -37,7 +37,7 @@
 //! thing [`SolveClient`] surfaces as `Err`.
 
 use std::collections::VecDeque;
-use std::io::BufReader;
+use std::io::{BufReader, Read, Write};
 use std::net::{TcpStream, ToSocketAddrs};
 use std::sync::Arc;
 
@@ -480,6 +480,35 @@ impl SolveClient {
             }
         }
     }
+}
+
+/// Scrape the metrics dump of a [`super::server::NetServer`] listener:
+/// open a fresh connection, speak one line of plaintext HTTP (the
+/// `GET ` prefix is what routes the connection away from the envelope
+/// protocol on the server side), and return the body — `name value`
+/// lines, listener accounts first, then everything the service exposes.
+/// The scrape never counts in the listener's [`super::ListenSummary`].
+pub fn fetch_metrics<A: ToSocketAddrs>(addr: A) -> Result<String> {
+    let mut stream = TcpStream::connect(addr)
+        .map_err(|e| GhostError::Comm(format!("connect failed: {e}")))?;
+    let _ = stream.set_nodelay(true);
+    stream
+        .write_all(b"GET /metrics HTTP/1.0\r\n\r\n")
+        .map_err(|e| GhostError::Comm(format!("metrics request failed: {e}")))?;
+    let mut raw = String::new();
+    stream
+        .read_to_string(&mut raw)
+        .map_err(|e| GhostError::Comm(format!("metrics read failed: {e}")))?;
+    let Some((head, body)) = raw.split_once("\r\n\r\n") else {
+        return Err(GhostError::Parse("metrics response has no header/body split".into()));
+    };
+    crate::ensure!(
+        head.starts_with("HTTP/1.0 200") || head.starts_with("HTTP/1.1 200"),
+        Parse,
+        "metrics scrape refused: {}",
+        head.lines().next().unwrap_or("")
+    );
+    Ok(body.to_string())
 }
 
 #[cfg(test)]

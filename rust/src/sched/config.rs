@@ -30,6 +30,7 @@ use std::sync::Arc;
 
 use crate::comm::CommConfig;
 use crate::core::Result;
+use crate::obs::TraceSink;
 use crate::topology::Machine;
 
 use super::shard::{RoutePolicy, ShardConfig, ShardStats, ShardedScheduler};
@@ -75,6 +76,9 @@ pub struct ServeConfig {
     pub admission: AdmissionControl,
     /// Fabric model between fronts and nodes (sharded service only).
     pub comm: CommConfig,
+    /// Optional JSONL lifecycle-trace sink (`ghost serve --trace FILE`);
+    /// shared by every node scheduler the engine stands up.
+    pub trace: Option<Arc<TraceSink>>,
 }
 
 impl Default for ServeConfig {
@@ -96,6 +100,7 @@ impl Default for ServeConfig {
             deadline_ms: None,
             admission: AdmissionControl::default(),
             comm: CommConfig::default(),
+            trace: None,
         }
     }
 }
@@ -161,6 +166,11 @@ impl ServeConfig {
         self
     }
 
+    pub fn with_trace(mut self, trace: Arc<TraceSink>) -> Self {
+        self.trace = Some(trace);
+        self
+    }
+
     /// Whether this configuration selects the sharded service.
     pub fn sharded(&self) -> bool {
         self.nodes > 1 || self.fronts > 1
@@ -211,6 +221,7 @@ impl ServeConfig {
             batching: self.batching,
             max_batch: self.max_batch,
             admission: self.admission,
+            trace: self.trace.clone(),
         }
     }
 
@@ -291,6 +302,24 @@ impl ServiceEngine {
             ServiceEngine::Sharded(s) => Some(s.shard_stats()),
         }
     }
+
+    /// The full metrics dump of the running engine (what `GET /metrics`
+    /// serves, minus the listener's own lines).
+    pub fn metrics_text(&self) -> String {
+        match self {
+            ServiceEngine::Single(s) => s.metrics_text(),
+            ServiceEngine::Sharded(s) => s.metrics_text(),
+        }
+    }
+
+    /// Latest value of a named gauge (e.g. `kernel.efficiency`); on the
+    /// sharded engine, the maximum across nodes.
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        match self {
+            ServiceEngine::Single(s) => s.gauge(name),
+            ServiceEngine::Sharded(s) => s.gauge(name),
+        }
+    }
 }
 
 impl SolveService for ServiceEngine {
@@ -317,6 +346,12 @@ impl SolveService for ServiceEngine {
             ServiceEngine::Single(s) => s.stats(),
             ServiceEngine::Sharded(s) => s.stats(),
         }
+    }
+    fn metrics_text(&self) -> String {
+        ServiceEngine::metrics_text(self)
+    }
+    fn gauge(&self, name: &str) -> Option<f64> {
+        ServiceEngine::gauge(self, name)
     }
     fn shutdown(&self) -> usize {
         match self {

@@ -62,7 +62,8 @@ pub mod shard;
 
 pub use cache::{matrix_key, MatrixKey};
 pub use client::{
-    Outcome, RejectReason, SolveClient, SolveRequest, SolveResponse, REQUEST_SCHEMA_VERSION,
+    fetch_metrics, Outcome, RejectReason, SolveClient, SolveRequest, SolveResponse,
+    REQUEST_SCHEMA_VERSION,
 };
 pub use config::{ServeConfig, ServiceEngine};
 pub use server::{ListenSummary, NetServer};
@@ -78,6 +79,10 @@ use std::time::{Duration, Instant};
 use crate::core::{GhostError, Result, Rng};
 use crate::densemat::{DenseMat, Layout};
 use crate::matgen;
+use crate::obs::{self, Counter as ObsCounter, Gauge, Hist, Registry, Stage, Trace, TraceSink};
+use crate::perfmodel;
+use crate::solvers::PerfCounters;
+use crate::topology::DeviceSpec;
 use crate::solvers::block_cg::block_cg;
 use crate::solvers::cheb_filter::chebfd;
 use crate::solvers::kpm::{kpm_moments_op, KpmConfig, KpmVariant};
@@ -185,6 +190,16 @@ pub struct JobSpec {
     /// second submission, and the home's books close through
     /// `stolen_jobs` (submitted = completed + failed + stolen_jobs).
     pub(crate) migrated: bool,
+    /// Absolute deadline on the process-wide monotonic clock
+    /// ([`obs::clock_micros`]), stamped once at first submit and carried
+    /// verbatim across steal/yield envelopes. This is what makes
+    /// post-migration `deadline_missed` accounting *exact*: the
+    /// relative `deadline_ms` is only the client-facing request field
+    /// (and the admission-control feasibility input), never re-based.
+    pub(crate) deadline_at_us: Option<u64>,
+    /// Lifecycle trace span (see [`obs::trace`]). Activated at first
+    /// submit, stamped at each hop, carried across migration.
+    pub(crate) trace: Trace,
 }
 
 impl JobSpec {
@@ -200,6 +215,8 @@ impl JobSpec {
             matrix_key: None,
             deadline_ms: None,
             migrated: false,
+            deadline_at_us: None,
+            trace: Trace::default(),
         }
     }
 
@@ -319,6 +336,17 @@ pub struct JobReport {
     pub elapsed: Duration,
     /// Completion timestamp (ordering diagnostics).
     pub completed_at: Instant,
+    /// Submit → solve-start latency (queueing + batch parking),
+    /// milliseconds. From the trace span's clock.
+    pub queue_wait_ms: f64,
+    /// Time inside the solver proper (assembly excluded — the cache
+    /// reports assembly latency separately), milliseconds.
+    pub solve_ms: f64,
+    /// Submit → respond, milliseconds (0 until finalized at
+    /// completion).
+    pub total_ms: f64,
+    /// The finished lifecycle span (empty when tracing is inactive).
+    pub trace: Trace,
 }
 
 struct JobState {
@@ -415,6 +443,10 @@ pub struct SchedConfig {
     /// Admission control at the submit door (default: admit everything,
     /// the pre-backpressure behavior).
     pub admission: AdmissionControl,
+    /// Optional JSONL trace sink: one line per completed job with its
+    /// full lifecycle span (`ghost serve --trace FILE`). `None` (the
+    /// default) disables export; spans are still stamped either way.
+    pub trace: Option<Arc<TraceSink>>,
 }
 
 impl Default for SchedConfig {
@@ -425,6 +457,7 @@ impl Default for SchedConfig {
             batching: BatchPolicy::Auto,
             max_batch: 8,
             admission: AdmissionControl::default(),
+            trace: None,
         }
     }
 }
@@ -604,6 +637,73 @@ struct Counters {
     stolen_jobs: u64,
 }
 
+/// Typed observability handles, resolved once at scheduler
+/// construction so the solve/complete hot paths never do a registry
+/// name lookup.
+struct SchedObs {
+    registry: Arc<Registry>,
+    sink: Option<Arc<TraceSink>>,
+    queue_wait: Arc<Hist>,
+    solve: Arc<Hist>,
+    total: Arc<Hist>,
+    kernel_flops: ObsCounter,
+    kernel_bytes: ObsCounter,
+    achieved: Gauge,
+    efficiency: Gauge,
+    /// Roofline device of the host this scheduler runs on
+    /// ([`crate::topology::detected_cpu_spec`] — an upper bound, so
+    /// efficiency lands in (0, 1]).
+    device: DeviceSpec,
+}
+
+/// Measured solve-phase wall time plus the operator's flop/byte
+/// counter readings around it.
+struct SolveMeasure {
+    secs: f64,
+    pc0: Option<PerfCounters>,
+    pc1: Option<PerfCounters>,
+}
+
+impl SchedObs {
+    fn new(sink: Option<Arc<TraceSink>>) -> SchedObs {
+        let registry = Arc::new(Registry::new());
+        SchedObs {
+            queue_wait: registry.hist("job.queue_wait"),
+            solve: registry.hist("job.solve"),
+            total: registry.hist("job.total"),
+            kernel_flops: registry.counter("kernel.flops"),
+            kernel_bytes: registry.counter("kernel.bytes"),
+            achieved: registry.gauge("kernel.achieved_gflops"),
+            efficiency: registry.gauge("kernel.efficiency"),
+            device: crate::topology::detected_cpu_spec(),
+            registry,
+            sink,
+        }
+    }
+
+    /// Fold one measured solve into the kernel accounts: flop/byte
+    /// counters plus the achieved-Gflop/s and roofline-efficiency
+    /// gauges ([`perfmodel::roofline_gflops`] on the measured traffic).
+    fn note_solve(&self, pc0: Option<PerfCounters>, pc1: Option<PerfCounters>, secs: f64) {
+        let (Some(pc0), Some(pc1)) = (pc0, pc1) else {
+            return;
+        };
+        let dflops = (pc1.flops - pc0.flops).max(0.0);
+        let dbytes = (pc1.bytes - pc0.bytes).max(0.0);
+        if dflops <= 0.0 || dbytes <= 0.0 || secs <= 0.0 {
+            return;
+        }
+        self.kernel_flops.add(dflops as u64);
+        self.kernel_bytes.add(dbytes as u64);
+        let achieved = dflops / secs / 1e9;
+        let model = perfmodel::roofline_gflops(&self.device, dbytes, dflops);
+        self.achieved.set(achieved);
+        if model > 0.0 {
+            self.efficiency.set(perfmodel::efficiency(achieved, model));
+        }
+    }
+}
+
 /// A single-RHS CG job parked in a batch bucket. Carries everything
 /// needed to rebuild a full [`JobSpec`] if the bucket is stolen across
 /// the shard fabric.
@@ -617,6 +717,7 @@ struct PendingCg {
     nthreads: usize,
     numanode: Option<usize>,
     submitted_at: Instant,
+    trace: Trace,
 }
 
 /// A BlockCg job parked in a block batch bucket (right-hand sides are
@@ -632,6 +733,7 @@ struct PendingBlock {
     nthreads: usize,
     numanode: Option<usize>,
     submitted_at: Instant,
+    trace: Trace,
 }
 
 /// A batch bucket: the parked jobs plus the matrix they share (kept
@@ -693,6 +795,7 @@ struct DirectJob {
     /// always goes straight to the keyed cache lookup — there is no
     /// unkeyed submit path anymore.
     key: MatrixKey,
+    trace: Trace,
 }
 
 struct SchedInner {
@@ -737,9 +840,85 @@ pub trait SolveService {
     fn drain(&self);
     /// Aggregate telemetry (summed across nodes for sharded services).
     fn stats(&self) -> SchedStats;
+    /// Plaintext metrics dump: one `name value` line per metric (the
+    /// body of the listen socket's `GET /metrics` response). The
+    /// default renders [`SolveService::stats`]; real services override
+    /// to add their registries and per-node views.
+    fn metrics_text(&self) -> String {
+        sched_stats_metrics("", &self.stats())
+    }
+    /// Latest value of the named gauge (e.g. `kernel.efficiency`), if
+    /// the service tracks it. Sharded services report the maximum
+    /// across their nodes' registries.
+    fn gauge(&self, name: &str) -> Option<f64> {
+        let _ = name;
+        None
+    }
     /// Stop the service; running jobs finish, jobs that never ran are
     /// failed with a cancellation error. Returns how many were failed.
     fn shutdown(&self) -> usize;
+}
+
+/// Render a [`SchedStats`] snapshot as metric lines. Synthesized from
+/// the snapshot at dump time — *not* double-booked into a registry —
+/// so `sched.*` lines reconcile bit-exactly with [`SchedStats`] by
+/// construction.
+pub fn sched_stats_metrics(prefix: &str, s: &SchedStats) -> String {
+    format!(
+        "{p}sched.submitted {}\n{p}sched.completed {}\n{p}sched.failed {}\n\
+         {p}sched.batches {}\n{p}sched.batched_jobs {}\n{p}sched.max_batch_width {}\n\
+         {p}sched.block_batches {}\n{p}sched.block_batched_jobs {}\n\
+         {p}sched.deadline_jobs {}\n{p}sched.deadline_missed {}\n\
+         {p}sched.stolen_buckets {}\n{p}sched.stolen_jobs {}\n\
+         {p}cache.hits {}\n{p}cache.misses {}\n{p}cache.evictions {}\n\
+         {p}cache.resident_bytes {}\n{p}cache.entries {}\n",
+        s.submitted,
+        s.completed,
+        s.failed,
+        s.batches,
+        s.batched_jobs,
+        s.max_batch_width,
+        s.block_batches,
+        s.block_batched_jobs,
+        s.deadline_jobs,
+        s.deadline_missed,
+        s.stolen_buckets,
+        s.stolen_jobs,
+        s.cache.hits,
+        s.cache.misses,
+        s.cache.evictions,
+        s.cache.resident_bytes,
+        s.cache.entries,
+        p = prefix,
+    )
+}
+
+/// Process-wide envelope traffic as `comm.*` metric lines.
+pub(crate) fn comm_metrics() -> String {
+    let (ef, eb, df, db) = crate::comm::envelope::wire_stats();
+    format!(
+        "comm.enc_frames {ef}\ncomm.enc_bytes {eb}\ncomm.dec_frames {df}\ncomm.dec_bytes {db}\n"
+    )
+}
+
+/// One JSONL trace line for a completed job's lifecycle span.
+fn trace_line(r: &JobReport) -> String {
+    let mut events = String::new();
+    for (i, e) in r.trace.events.iter().enumerate() {
+        if i > 0 {
+            events.push(',');
+        }
+        events.push_str(&format!(
+            "{{\"stage\":\"{}\",\"at_us\":{}}}",
+            e.stage.name(),
+            e.at_us
+        ));
+    }
+    format!(
+        "{{\"span\":{},\"job\":{},\"queue_wait_ms\":{:.3},\"solve_ms\":{:.3},\
+         \"total_ms\":{:.3},\"events\":[{events}]}}",
+        r.trace.span, r.id, r.queue_wait_ms, r.solve_ms, r.total_ms
+    )
 }
 
 impl SolveService for JobScheduler {
@@ -752,6 +931,12 @@ impl SolveService for JobScheduler {
     fn stats(&self) -> SchedStats {
         JobScheduler::stats(self)
     }
+    fn metrics_text(&self) -> String {
+        JobScheduler::metrics_text(self)
+    }
+    fn gauge(&self, name: &str) -> Option<f64> {
+        JobScheduler::gauge(self, name)
+    }
     fn shutdown(&self) -> usize {
         JobScheduler::shutdown(self)
     }
@@ -763,6 +948,7 @@ pub struct JobScheduler {
     queue: TaskQueue,
     cache: Arc<OperatorCache>,
     inner: Arc<SchedInner>,
+    obs: Arc<SchedObs>,
 }
 
 impl JobScheduler {
@@ -770,9 +956,15 @@ impl JobScheduler {
         // first-touch policy of the machine this scheduler runs on, so
         // cached operators are assembled NUMA-node-local (section 4.2)
         let numa = crate::topology::NumaAlloc::new(&machine);
+        let obs = Arc::new(SchedObs::new(cfg.trace.clone()));
+        let queue = TaskQueue::new(machine, cfg.nshepherds.max(1));
+        queue.install_obs(&obs.registry);
+        let cache = Arc::new(OperatorCache::new(cfg.cache_budget_bytes).with_numa(numa));
+        cache.install_obs(obs.registry.hist("cache.assembly"));
         JobScheduler {
-            queue: TaskQueue::new(machine, cfg.nshepherds.max(1)),
-            cache: Arc::new(OperatorCache::new(cfg.cache_budget_bytes).with_numa(numa)),
+            queue,
+            cache,
+            obs,
             inner: Arc::new(SchedInner {
                 batching: cfg.batching,
                 max_batch: cfg.max_batch.max(1),
@@ -816,6 +1008,63 @@ impl JobScheduler {
         }
     }
 
+    /// This scheduler's metric registry (histograms, kernel counters,
+    /// taskq/cache instrumentation).
+    pub fn registry(&self) -> &Arc<Registry> {
+        &self.obs.registry
+    }
+
+    /// Current value of a registry gauge (bench/test convenience).
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.obs.registry.gauge_value(name)
+    }
+
+    /// Plaintext metrics: synthesized `sched.*`/`cache.*` lines (always
+    /// bit-exact with [`JobScheduler::stats`]), the live registry, and
+    /// process-wide `comm.*` traffic.
+    pub fn metrics_text(&self) -> String {
+        let mut out = sched_stats_metrics("", &self.stats());
+        out.push_str(&self.obs.registry.render(""));
+        out.push_str(&comm_metrics());
+        out
+    }
+
+    /// Flattened metric set for fabric piggybacking: the registry
+    /// snapshot plus synthesized `sched.*` triples (counters merge by
+    /// max at the front, matching their monotonicity; the two
+    /// non-monotone cache occupancy fields travel as gauges).
+    pub(crate) fn wire_metrics(&self) -> Vec<(String, u8, u64)> {
+        use crate::obs::registry::{KIND_COUNTER, KIND_GAUGE};
+        let mut out = self.obs.registry.wire_snapshot();
+        let s = self.stats();
+        for (name, v) in [
+            ("sched.submitted", s.submitted),
+            ("sched.completed", s.completed),
+            ("sched.failed", s.failed),
+            ("sched.batches", s.batches),
+            ("sched.batched_jobs", s.batched_jobs),
+            ("sched.max_batch_width", s.max_batch_width as u64),
+            ("sched.block_batches", s.block_batches),
+            ("sched.block_batched_jobs", s.block_batched_jobs),
+            ("sched.deadline_jobs", s.deadline_jobs),
+            ("sched.deadline_missed", s.deadline_missed),
+            ("sched.stolen_buckets", s.stolen_buckets),
+            ("sched.stolen_jobs", s.stolen_jobs),
+            ("cache.hits", s.cache.hits),
+            ("cache.misses", s.cache.misses),
+            ("cache.evictions", s.cache.evictions),
+        ] {
+            out.push((name.to_string(), KIND_COUNTER, v));
+        }
+        for (name, v) in [
+            ("cache.resident_bytes", s.cache.resident_bytes as f64),
+            ("cache.entries", s.cache.entries as f64),
+        ] {
+            out.push((name.to_string(), KIND_GAUGE, v.to_bits()));
+        }
+        out
+    }
+
     /// Wait until every submitted job has completed.
     pub fn drain(&self) {
         self.queue.drain();
@@ -857,7 +1106,28 @@ impl JobScheduler {
         cancelled
     }
 
-    fn complete(&self, state: &JobState, res: Result<JobReport>) {
+    fn complete(&self, state: &JobState, mut res: Result<JobReport>) {
+        // finalize the lifecycle span before any waiter can observe the
+        // report: stamp Respond, derive total_ms from the span's own
+        // clock, feed the latency histograms, export the trace line
+        if let Ok(rep) = &mut res {
+            rep.trace.stamp(Stage::Respond);
+            rep.total_ms = match (
+                rep.trace.first_us(Stage::Submit),
+                rep.trace.first_us(Stage::Respond),
+            ) {
+                (Some(sub), Some(resp)) => (resp.saturating_sub(sub)) as f64 / 1e3,
+                _ => rep.elapsed.as_secs_f64() * 1e3,
+            };
+            self.obs.queue_wait.observe_us((rep.queue_wait_ms * 1e3) as u64);
+            self.obs.solve.observe_us((rep.solve_ms * 1e3) as u64);
+            self.obs.total.observe_us((rep.total_ms * 1e3) as u64);
+            if let Some(sink) = &self.obs.sink {
+                if rep.trace.is_active() {
+                    sink.write_line(&trace_line(rep));
+                }
+            }
+        }
         let ok = res.is_ok();
         let missed = matches!(
             &res,
@@ -911,9 +1181,23 @@ impl JobScheduler {
     /// stopped service as [`SubmitError::Shutdown`] (a shutdown that
     /// *races* the submit instead resolves the returned handle with a
     /// cancellation error — either way no waiter strands).
-    pub fn submit(&self, spec: JobSpec) -> SubmitResult {
+    pub fn submit(&self, mut spec: JobSpec) -> SubmitResult {
         if self.queue.is_shut_down() {
             return Err(SubmitError::Shutdown);
+        }
+        // activate the lifecycle span (stamps Submit); a migrated spec
+        // arrives with its span already running — keep it
+        if !spec.trace.is_active() {
+            spec.trace = Trace::start();
+        }
+        // the absolute deadline is stamped exactly once, at first
+        // submit; a migrated job carries it verbatim so deadline-miss
+        // accounting is exact across steals (satellite of PR 5's
+        // remaining-ms approximation)
+        if spec.deadline_at_us.is_none() {
+            spec.deadline_at_us = spec
+                .deadline_ms
+                .map(|ms| obs::clock_micros() + ms.saturating_mul(1000));
         }
         // admission next — a refusal must be cheap (no matrix
         // resolution, no digest). Migrated bucket jobs bypass it: the
@@ -960,11 +1244,12 @@ impl JobScheduler {
             numanode,
             seed,
             rhs,
-            deadline_ms,
+            deadline_at_us,
+            trace,
             ..
         } = spec;
         let submitted_at = Instant::now();
-        let deadline = deadline_ms.map(|ms| submitted_at + Duration::from_millis(ms));
+        let deadline = deadline_at_us.map(obs::instant_at_us);
         let topts = TaskOpts {
             nthreads: nthreads.max(1),
             numanode,
@@ -988,6 +1273,8 @@ impl JobScheduler {
                 let n = a.nrows();
                 let b = rhs.unwrap_or_else(|| default_rhs(n, seed));
                 let fp = client_key.unwrap_or_else(|| matrix_key(&a));
+                let mut trace = trace;
+                trace.stamp(Stage::Park);
                 let pending = PendingCg {
                     state: state.clone(),
                     b,
@@ -998,6 +1285,7 @@ impl JobScheduler {
                     nthreads: nthreads.max(1),
                     numanode,
                     submitted_at,
+                    trace,
                 };
                 {
                     let mut pend = self.inner.pending.lock().unwrap();
@@ -1026,6 +1314,8 @@ impl JobScheduler {
                 // recurrences stay independent — results demux bitwise
                 // identically to solo block_cg runs)
                 let fp = client_key.unwrap_or_else(|| matrix_key(&a));
+                let mut trace = trace;
+                trace.stamp(Stage::Park);
                 let pending = PendingBlock {
                     state: state.clone(),
                     nrhs,
@@ -1037,6 +1327,7 @@ impl JobScheduler {
                     nthreads: nthreads.max(1),
                     numanode,
                     submitted_at,
+                    trace,
                 };
                 {
                     let mut pend = self.inner.pending_block.lock().unwrap();
@@ -1066,6 +1357,7 @@ impl JobScheduler {
                     // batched arms, and the shepherd goes straight to
                     // the keyed cache lookup
                     key: client_key.unwrap_or_else(|| matrix_key(&a)),
+                    trace,
                 };
                 self.queue.enqueue(topts, move |ctx| {
                     let res = sched.run_direct(&a, job, ctx.nthreads());
@@ -1120,7 +1412,7 @@ impl JobScheduler {
     /// cap) and solve the drained right-hand sides as one block.
     fn run_batch(&self, fp: MatrixKey, a: &Crs<f64>, nthreads: usize) {
         let cap = self.width_cap(fp, a);
-        let taken: Vec<PendingCg> = {
+        let mut taken: Vec<PendingCg> = {
             let mut pend = self.inner.pending.lock().unwrap();
             let taken = if let Some(bucket) = pend.get_mut(&fp) {
                 let k = bucket.q.len().min(cap.max(1));
@@ -1142,7 +1434,12 @@ impl JobScheduler {
         }
         let k = taken.len();
         let n = a.nrows();
-        let run = || -> Result<(DenseMat<f64>, Vec<batch::ColumnStats>, bool)> {
+        for job in taken.iter_mut() {
+            job.trace.stamp(Stage::Batch);
+            job.trace.stamp(Stage::Solve);
+        }
+        let solve_start = Instant::now();
+        let run = || -> Result<(DenseMat<f64>, Vec<batch::ColumnStats>, bool, SolveMeasure)> {
             let (op, hit) = self.cache.get_or_assemble_keyed(fp, a, nthreads)?;
             let mut op = op.lock().unwrap();
             // a cached operator adopts THIS job's PU reservation
@@ -1151,11 +1448,19 @@ impl JobScheduler {
             let mut x = DenseMat::<f64>::zeros(n, k, Layout::RowMajor);
             let tols: Vec<f64> = taken.iter().map(|j| j.tol).collect();
             let iters: Vec<usize> = taken.iter().map(|j| j.max_iters).collect();
+            let pc0 = op.perf_counters();
+            let t0 = Instant::now();
             let stats = batch_cg(&mut *op, &b, &mut x, &tols, &iters)?;
-            Ok((x, stats, hit))
+            let m = SolveMeasure {
+                secs: t0.elapsed().as_secs_f64(),
+                pc0,
+                pc1: op.perf_counters(),
+            };
+            Ok((x, stats, hit, m))
         };
         match run() {
-            Ok((x, stats, hit)) => {
+            Ok((x, stats, hit, m)) => {
+                self.obs.note_solve(m.pc0, m.pc1, m.secs);
                 if k >= 2 {
                     let mut c = self.inner.counters.lock().unwrap();
                     c.batches += 1;
@@ -1181,6 +1486,13 @@ impl JobScheduler {
                             deadline_missed: job.deadline.map(|d| now > d),
                             elapsed: now.duration_since(job.submitted_at),
                             completed_at: now,
+                            queue_wait_ms: solve_start
+                                .saturating_duration_since(job.submitted_at)
+                                .as_secs_f64()
+                                * 1e3,
+                            solve_ms: m.secs * 1e3,
+                            total_ms: 0.0,
+                            trace: job.trace,
                         }),
                     };
                     self.complete(&job.state, res);
@@ -1206,7 +1518,7 @@ impl JobScheduler {
     /// drained BlockCg job with its A·P streams fused into one
     /// `apply_block` per iteration.
     fn run_batch_block(&self, fp: MatrixKey, nthreads: usize) {
-        let Some((a, taken)) = ({
+        let Some((a, mut taken)) = ({
             let mut pend = self.inner.pending_block.lock().unwrap();
             let drained = if let Some(bucket) = pend.get_mut(&fp) {
                 // take groups while the fused width stays within the
@@ -1238,7 +1550,12 @@ impl JobScheduler {
         let k = taken.len();
         let n = a.nrows();
         let total: usize = taken.iter().map(|p| p.nrhs).sum();
-        let run = || -> Result<(Vec<DenseMat<f64>>, Vec<batch::GroupStats>, bool)> {
+        for job in taken.iter_mut() {
+            job.trace.stamp(Stage::Batch);
+            job.trace.stamp(Stage::Solve);
+        }
+        let solve_start = Instant::now();
+        let run = || -> Result<(Vec<DenseMat<f64>>, Vec<batch::GroupStats>, bool, SolveMeasure)> {
             let (op, hit) = self.cache.get_or_assemble_keyed(fp, &a, nthreads)?;
             let mut op = op.lock().unwrap();
             op.set_nthreads(nthreads);
@@ -1252,11 +1569,19 @@ impl JobScheduler {
                 .collect();
             let tols: Vec<f64> = taken.iter().map(|p| p.tol).collect();
             let iters: Vec<usize> = taken.iter().map(|p| p.max_iters).collect();
+            let pc0 = op.perf_counters();
+            let t0 = Instant::now();
             let stats = batch_block_cg(&mut *op, &bs, &mut xs, &tols, &iters)?;
-            Ok((xs, stats, hit))
+            let m = SolveMeasure {
+                secs: t0.elapsed().as_secs_f64(),
+                pc0,
+                pc1: op.perf_counters(),
+            };
+            Ok((xs, stats, hit, m))
         };
         match run() {
-            Ok((xs, stats, hit)) => {
+            Ok((xs, stats, hit, m)) => {
+                self.obs.note_solve(m.pc0, m.pc1, m.secs);
                 if k >= 2 {
                     let mut c = self.inner.counters.lock().unwrap();
                     c.block_batches += 1;
@@ -1286,6 +1611,13 @@ impl JobScheduler {
                             deadline_missed: job.deadline.map(|d| now > d),
                             elapsed: now.duration_since(job.submitted_at),
                             completed_at: now,
+                            queue_wait_ms: solve_start
+                                .saturating_duration_since(job.submitted_at)
+                                .as_secs_f64()
+                                * 1e3,
+                            solve_ms: m.secs * 1e3,
+                            total_ms: 0.0,
+                            trace: job.trace,
                         }),
                     };
                     self.complete(&job.state, res);
@@ -1315,7 +1647,11 @@ impl JobScheduler {
             deadline,
             submitted_at,
             key,
+            mut trace,
         } = job;
+        // queue wait ends when a shepherd picks the job up (assembly
+        // and solve are accounted separately)
+        let picked_up = Instant::now();
         let n = a.nrows();
         let (op, cache_hit) = self.cache.get_or_assemble_keyed(key, a, nthreads)?;
         let mut op = op.lock().unwrap();
@@ -1323,6 +1659,9 @@ impl JobScheduler {
         op.set_nthreads(nthreads);
         let mv0 = op.matvecs();
         let mut batched_width = 1usize;
+        trace.stamp(Stage::Solve);
+        let pc0 = op.perf_counters();
+        let solve_start = Instant::now();
         let output = match solver {
             SolverKind::Cg { tol, max_iters } => {
                 // width-1 pass through the same bundled-CG kernel the
@@ -1407,6 +1746,8 @@ impl JobScheduler {
                 }
             }
         };
+        let secs = solve_start.elapsed().as_secs_f64();
+        self.obs.note_solve(pc0, op.perf_counters(), secs);
         let now = Instant::now();
         Ok(JobReport {
             id,
@@ -1418,6 +1759,13 @@ impl JobScheduler {
             deadline_missed: deadline.map(|d| now > d),
             elapsed: now.duration_since(submitted_at),
             completed_at: now,
+            queue_wait_ms: picked_up
+                .saturating_duration_since(submitted_at)
+                .as_secs_f64()
+                * 1e3,
+            solve_ms: secs * 1e3,
+            total_ms: 0.0,
+            trace,
         })
     }
 
@@ -1435,11 +1783,13 @@ impl JobScheduler {
     /// local waiters resolve. Returns an empty vec when nothing is
     /// parked.
     ///
-    /// Deadlines travel as *remaining* milliseconds (the envelope codec
-    /// has no absolute clock): the target re-bases them at resubmit, so
-    /// a migrated deadline stretches by the migration transit and the
-    /// reported `elapsed` restarts — the same approximation every
-    /// fabric-routed job already lives with.
+    /// Deadlines travel as the *absolute* monotonic clock reading
+    /// stamped at first submit (`deadline_at_us` — every simulated rank
+    /// shares the process clock, see [`obs::epoch`]), so a migrated
+    /// job's `deadline_missed` accounting is exact: migration transit
+    /// no longer stretches the deadline. The relative `deadline_ms`
+    /// still travels (as the remaining time) purely as a descriptive
+    /// field; the receiving scheduler prefers the absolute stamp.
     pub(crate) fn take_parked_bucket(&self) -> Vec<StolenJob> {
         // pick the deeper of the two deepest buckets (CG vs BlockCg);
         // peeking the depths and draining are separate lock scopes, so
@@ -1503,7 +1853,13 @@ impl JobScheduler {
                 spec.numanode = p.numanode;
                 spec.rhs = Some(p.b);
                 spec.deadline_ms = remaining_deadline_ms(p.deadline, now);
+                // exact inverse of the submit-side instant_at_us: the
+                // absolute deadline survives migration unchanged
+                spec.deadline_at_us = p.deadline.map(obs::micros_of);
                 spec.migrated = true;
+                let mut trace = p.trace;
+                trace.stamp(Stage::Steal);
+                spec.trace = trace;
                 StolenJob {
                     state: p.state,
                     spec,
@@ -1546,7 +1902,11 @@ impl JobScheduler {
                 spec.numanode = p.numanode;
                 spec.seed = p.seed;
                 spec.deadline_ms = remaining_deadline_ms(p.deadline, now);
+                spec.deadline_at_us = p.deadline.map(obs::micros_of);
                 spec.migrated = true;
+                let mut trace = p.trace;
+                trace.stamp(Stage::Steal);
+                spec.trace = trace;
                 StolenJob {
                     state: p.state,
                     spec,

@@ -16,6 +16,7 @@ use std::time::{Duration, Instant};
 
 use crate::comm::envelope::{ByteReader, ByteWriter};
 use crate::core::{GhostError, Result};
+use crate::obs::{Stage, Trace, TraceEvent};
 use crate::sparsemat::Crs;
 use crate::tune::Fingerprint;
 
@@ -126,6 +127,65 @@ pub(crate) fn put_spec(w: &mut ByteWriter, spec: &JobSpec) {
     }
     w.put_opt_u64(spec.deadline_ms);
     w.put_bool(spec.migrated);
+    // v4: absolute deadline + trace span survive migration
+    w.put_opt_u64(spec.deadline_at_us);
+    put_trace(w, &spec.trace);
+}
+
+/// Encode a trace span: id + stamped lifecycle events.
+pub(crate) fn put_trace(w: &mut ByteWriter, t: &Trace) {
+    w.put_u64(t.span);
+    w.put_usize(t.events.len());
+    for e in &t.events {
+        w.put_u8(e.stage as u8);
+        w.put_u64(e.at_us);
+    }
+}
+
+pub(crate) fn get_trace(r: &mut ByteReader) -> Result<Trace> {
+    let span = r.get_u64()?;
+    let n = r.get_usize()?;
+    crate::ensure!(
+        n <= 1 << 16,
+        Parse,
+        "trace of {n} events exceeds any plausible lifecycle"
+    );
+    let mut events = Vec::with_capacity(n.min(64));
+    for _ in 0..n {
+        let tag = r.get_u8()?;
+        let stage = Stage::from_u8(tag)
+            .ok_or_else(|| GhostError::Parse(format!("unknown trace stage {tag} in envelope")))?;
+        events.push(TraceEvent {
+            stage,
+            at_us: r.get_u64()?,
+        });
+    }
+    Ok(Trace { span, events })
+}
+
+/// Flattened registry snapshot (`(name, kind, bits)` triples — see
+/// [`crate::obs::registry`]) piggybacked on node→front stats envelopes.
+pub(crate) fn put_metric_set(w: &mut ByteWriter, metrics: &[(String, u8, u64)]) {
+    w.put_usize(metrics.len());
+    for (name, kind, bits) in metrics {
+        w.put_str(name);
+        w.put_u8(*kind);
+        w.put_u64(*bits);
+    }
+}
+
+pub(crate) fn get_metric_set(r: &mut ByteReader) -> Result<Vec<(String, u8, u64)>> {
+    let n = r.get_usize()?;
+    crate::ensure!(
+        n <= 1 << 16,
+        Parse,
+        "metric set of {n} entries exceeds any plausible registry"
+    );
+    let mut out = Vec::with_capacity(n.min(1024));
+    for _ in 0..n {
+        out.push((r.get_str()?, r.get_u8()?, r.get_u64()?));
+    }
+    Ok(out)
 }
 
 pub(crate) fn get_spec(r: &mut ByteReader) -> Result<JobSpec> {
@@ -198,6 +258,8 @@ pub(crate) fn get_spec(r: &mut ByteReader) -> Result<JobSpec> {
     };
     let deadline_ms = r.get_opt_u64()?;
     let migrated = r.get_bool()?;
+    let deadline_at_us = r.get_opt_u64()?;
+    let trace = get_trace(r)?;
     Ok(JobSpec {
         matrix,
         solver,
@@ -209,6 +271,8 @@ pub(crate) fn get_spec(r: &mut ByteReader) -> Result<JobSpec> {
         matrix_key,
         deadline_ms,
         migrated,
+        deadline_at_us,
+        trace,
     })
 }
 
@@ -346,6 +410,11 @@ pub(crate) fn put_job_result(w: &mut ByteWriter, res: &Result<JobReport>) {
                 Some(true) => 2,
             });
             w.put_f64(rep.elapsed.as_secs_f64());
+            // v4: phase timings + the finished trace
+            w.put_f64(rep.queue_wait_ms);
+            w.put_f64(rep.solve_ms);
+            w.put_f64(rep.total_ms);
+            put_trace(w, &rep.trace);
         }
         Err(e) => {
             w.put_bool(false);
@@ -375,6 +444,10 @@ pub(crate) fn get_job_result(r: &mut ByteReader, job_id: u64) -> Result<Result<J
             }
         };
         let elapsed = Duration::from_secs_f64(r.get_f64()?.max(0.0));
+        let queue_wait_ms = r.get_f64()?;
+        let solve_ms = r.get_f64()?;
+        let total_ms = r.get_f64()?;
+        let trace = get_trace(r)?;
         Ok(Ok(JobReport {
             id: job_id,
             output,
@@ -385,6 +458,10 @@ pub(crate) fn get_job_result(r: &mut ByteReader, job_id: u64) -> Result<Result<J
             deadline_missed,
             elapsed,
             completed_at: Instant::now(),
+            queue_wait_ms,
+            solve_ms,
+            total_ms,
+            trace,
         }))
     } else {
         Ok(Err(GhostError::Task(r.get_str()?)))

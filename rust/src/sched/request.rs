@@ -200,10 +200,14 @@ pub fn response_line(label: u64, solver: &str, res: &Result<JobReport>) -> Strin
             };
             format!(
                 "{{\"id\":{label},\"ok\":true,\"solver\":\"{solver}\",{detail},\
-                 \"batched\":{},\"cache_hit\":{}{deadline},\"ms\":{:.3}}}",
+                 \"batched\":{},\"cache_hit\":{}{deadline},\"ms\":{:.3},\
+                 \"queue_wait_ms\":{:.3},\"solve_ms\":{:.3},\"total_ms\":{:.3}}}",
                 r.batched_width,
                 r.cache_hit,
-                r.elapsed.as_secs_f64() * 1e3
+                r.elapsed.as_secs_f64() * 1e3,
+                r.queue_wait_ms,
+                r.solve_ms,
+                r.total_ms
             )
         }
         Err(e) => format!(
@@ -533,6 +537,10 @@ mod tests {
                 deadline_missed,
                 elapsed: std::time::Duration::from_millis(2),
                 completed_at: std::time::Instant::now(),
+                queue_wait_ms: 0.5,
+                solve_ms: 1.5,
+                total_ms: 2.0,
+                trace: crate::obs::Trace::default(),
             })
         };
         // no deadline: the field is absent entirely

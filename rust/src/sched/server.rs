@@ -32,9 +32,9 @@
 //! each accepted request still gets its response frame before the
 //! socket closes.
 
-use std::io::BufReader;
+use std::io::{BufReader, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
@@ -80,6 +80,17 @@ impl Counters {
             failed: self.failed.load(Ordering::SeqCst),
             rejected: self.rejected.load(Ordering::SeqCst),
         }
+    }
+
+    /// The listener's own accounts as metric lines, same `name value`
+    /// shape as [`crate::obs::registry::Registry::render`].
+    fn metrics(&self) -> String {
+        let s = self.summary();
+        format!(
+            "listener.connections {}\nlistener.requests {}\nlistener.ok {}\n\
+             listener.failed {}\nlistener.rejected {}\n",
+            s.connections, s.requests, s.ok, s.failed, s.rejected
+        )
     }
 }
 
@@ -141,6 +152,11 @@ impl NetServer {
         // read-half clones of live connections, for waking blocked
         // readers at stop time
         let live: Arc<Mutex<Vec<TcpStream>>> = Arc::new(Mutex::new(Vec::new()));
+        // envelope connections only: metrics scrapes must not consume a
+        // front index (connection k pins to front k) or count in the
+        // summary, and which kind a connection is shows up only at its
+        // first bytes — so the front sequence is drawn in handle_conn.
+        let front_seq = Arc::new(AtomicUsize::new(0));
         let mut conn_idx = 0usize;
         while !self.stop.load(Ordering::SeqCst) {
             match self.listener.accept() {
@@ -149,17 +165,16 @@ impl NetServer {
                     if let Ok(clone) = stream.try_clone() {
                         live.lock().unwrap().push(clone);
                     }
-                    self.counters.connections.fetch_add(1, Ordering::SeqCst);
                     let svc = self.svc.clone();
                     let stop = self.stop.clone();
                     let counters = self.counters.clone();
                     let deadline = self.default_deadline_ms;
-                    let front = conn_idx;
+                    let fronts = front_seq.clone();
                     conns.push(
                         std::thread::Builder::new()
                             .name(format!("ghost-net-conn-{conn_idx}"))
                             .spawn(move || {
-                                handle_conn(svc, stream, front, deadline, stop, counters)
+                                handle_conn(svc, stream, fronts, deadline, stop, counters)
                             })
                             .expect("spawn net connection"),
                     );
@@ -192,18 +207,44 @@ impl NetServer {
     }
 }
 
-/// Serve one client connection: decode request frames, submit through
-/// the service (pinned to ingress front `front`), answer each with a
-/// response or a typed reject. Joins its waiter threads before
-/// returning, so closing the connection never strands a response.
+/// Serve one client connection. The first four bytes decide the
+/// dialect: `b"GET "` is a plaintext-HTTP metrics scrape (answered and
+/// closed without touching the listener's accounts), anything else is
+/// the framed envelope protocol — decode request frames, submit through
+/// the service (pinned to the next ingress front in sequence), answer
+/// each with a response or a typed reject. Joins its waiter threads
+/// before returning, so closing the connection never strands a
+/// response.
 fn handle_conn(
     svc: Arc<dyn SolveService + Send + Sync>,
     stream: TcpStream,
-    front: usize,
+    front_seq: Arc<AtomicUsize>,
     default_deadline_ms: Option<u64>,
     stop: Arc<AtomicBool>,
     counters: Arc<Counters>,
 ) {
+    // peek, don't read: envelope framing needs the bytes left in place
+    let mut probe = [0u8; 4];
+    loop {
+        match stream.peek(&mut probe) {
+            Ok(0) => return, // EOF (hangup, or read-half closed at stop)
+            Ok(n) if n >= 4 => break,
+            Ok(_) => std::thread::sleep(Duration::from_millis(1)),
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::Interrupted =>
+            {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            Err(_) => return,
+        }
+    }
+    if &probe == b"GET " {
+        serve_metrics(stream, &svc, &counters);
+        return;
+    }
+    counters.connections.fetch_add(1, Ordering::SeqCst);
+    let front = front_seq.fetch_add(1, Ordering::SeqCst);
     let Ok(read_half) = stream.try_clone() else {
         return;
     };
@@ -299,6 +340,29 @@ fn handle_conn(
     }
 }
 
+/// Answer a plaintext-HTTP metrics scrape on the listen socket: the
+/// listener's own accounts first, then everything the service exposes
+/// ([`SolveService::metrics_text`] — scheduler stats, the obs registry,
+/// per-node fabric views, wire traffic). One response per connection
+/// (HTTP/1.0, `Connection: close`); the request line itself is never
+/// parsed beyond the `GET ` probe — every path gets the same dump.
+fn serve_metrics(
+    mut stream: TcpStream,
+    svc: &Arc<dyn SolveService + Send + Sync>,
+    counters: &Counters,
+) {
+    let body = format!("{}{}", counters.metrics(), svc.metrics_text());
+    let resp = format!(
+        "HTTP/1.0 200 OK\r\nContent-Type: text/plain; charset=utf-8\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{}",
+        body.len(),
+        body
+    );
+    let _ = stream.write_all(resp.as_bytes());
+    let _ = stream.flush();
+    let _ = stream.shutdown(Shutdown::Both);
+}
+
 #[cfg(test)]
 mod tests {
     use super::super::{
@@ -354,6 +418,13 @@ mod tests {
             }
             other => panic!("expected a typed reject, got {other:?}"),
         }
+        // a plaintext scrape on the same listen socket answers with the
+        // metric dump — and never counts in the summary below
+        let text = super::super::client::fetch_metrics(addr).unwrap();
+        assert!(text.contains("listener.requests 2"), "{text}");
+        assert!(text.contains("listener.rejected 1"), "{text}");
+        assert!(text.contains("sched.submitted 1"), "{text}");
+        assert!(text.contains("kernel.flops "), "{text}");
         client.shutdown_server().unwrap();
         let summary = runner.join().unwrap();
         assert_eq!(summary.connections, 1);

@@ -91,18 +91,24 @@ use std::sync::{Arc, Condvar, Mutex, RwLock};
 use crate::comm::envelope::{ByteReader, ByteWriter, Envelope};
 use crate::comm::{Comm, CommConfig, World};
 use crate::core::{GhostError, Result};
+use crate::obs::registry::{merge_wire, render_wire};
+use crate::obs::{self, Stage, Trace};
 use crate::topology::Machine;
 
 use super::cache::{matrix_key, MatrixKey};
 use super::proto::{
-    get_job_batch, get_job_result, get_sched_stats, get_spec, put_job_batch, put_job_result,
-    put_sched_stats, put_spec,
+    get_job_batch, get_job_result, get_metric_set, get_sched_stats, get_spec, put_job_batch,
+    put_job_result, put_metric_set, put_sched_stats, put_spec,
 };
 use super::{
-    is_known_matrix, verify_client_key, AdmissionControl, JobHandle, JobReport, JobScheduler,
-    JobSpec, JobState, MatrixSource, SchedConfig, SchedStats, SolveService, SubmitError,
-    SubmitResult,
+    comm_metrics, is_known_matrix, sched_stats_metrics, verify_client_key, AdmissionControl,
+    JobHandle, JobReport, JobScheduler, JobSpec, JobState, MatrixSource, SchedConfig, SchedStats,
+    SolveService, SubmitError, SubmitResult,
 };
+
+/// Flattened node-registry snapshot on the wire: `(name, kind, bits)`
+/// triples (see [`crate::obs::registry::Registry::wire_snapshot`]).
+type MetricSet = Vec<(String, u8, u64)>;
 
 /// How the front-end picks a node for each job.
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
@@ -271,38 +277,49 @@ fn encode_shutdown() -> Vec<u8> {
 }
 
 /// One completed (or failed) job plus a piggybacked node-stats
-/// snapshot. `job_id` is the *front-end* id — the node-local scheduler
-/// id is an implementation detail that never crosses the fabric.
-fn encode_result(job_id: u64, res: &Result<JobReport>, stats: &SchedStats) -> Vec<u8> {
+/// snapshot and the node's flattened metric registry. `job_id` is the
+/// *front-end* id — the node-local scheduler id is an implementation
+/// detail that never crosses the fabric.
+fn encode_result(
+    job_id: u64,
+    res: &Result<JobReport>,
+    stats: &SchedStats,
+    metrics: &[(String, u8, u64)],
+) -> Vec<u8> {
     let mut w = ByteWriter::new();
     w.put_u64(job_id);
     put_job_result(&mut w, res);
     put_sched_stats(&mut w, stats);
+    put_metric_set(&mut w, metrics);
     Envelope::new(K_RESULT, w.into_bytes()).encode()
 }
 
-fn decode_result(payload: &[u8]) -> Result<(u64, Result<JobReport>, SchedStats)> {
+#[allow(clippy::type_complexity)]
+fn decode_result(payload: &[u8]) -> Result<(u64, Result<JobReport>, SchedStats, MetricSet)> {
     let mut r = ByteReader::new(payload);
     let job_id = r.get_u64()?;
     let res = get_job_result(&mut r, job_id)?;
     let stats = get_sched_stats(&mut r)?;
+    let metrics = get_metric_set(&mut r)?;
     r.finish()?;
-    Ok((job_id, res, stats))
+    Ok((job_id, res, stats, metrics))
 }
 
-fn encode_ack(cancelled: usize, stats: &SchedStats) -> Vec<u8> {
+fn encode_ack(cancelled: usize, stats: &SchedStats, metrics: &[(String, u8, u64)]) -> Vec<u8> {
     let mut w = ByteWriter::new();
     w.put_usize(cancelled);
     put_sched_stats(&mut w, stats);
+    put_metric_set(&mut w, metrics);
     Envelope::new(K_ACK, w.into_bytes()).encode()
 }
 
-fn decode_ack(payload: &[u8]) -> Result<(usize, SchedStats)> {
+fn decode_ack(payload: &[u8]) -> Result<(usize, SchedStats, MetricSet)> {
     let mut r = ByteReader::new(payload);
     let cancelled = r.get_usize()?;
     let stats = get_sched_stats(&mut r)?;
+    let metrics = get_metric_set(&mut r)?;
     r.finish()?;
-    Ok((cancelled, stats))
+    Ok((cancelled, stats, metrics))
 }
 
 fn encode_steal(max_buckets: u64) -> Vec<u8> {
@@ -318,18 +335,23 @@ fn decode_steal(payload: &[u8]) -> Result<u64> {
     Ok(budget)
 }
 
-fn encode_yield(buckets: &[Vec<(u64, JobSpec)>], stats: &SchedStats) -> Vec<u8> {
+fn encode_yield(
+    buckets: &[Vec<(u64, JobSpec)>],
+    stats: &SchedStats,
+    metrics: &[(String, u8, u64)],
+) -> Vec<u8> {
     let mut w = ByteWriter::new();
     w.put_usize(buckets.len());
     for b in buckets {
         put_job_batch(&mut w, b);
     }
     put_sched_stats(&mut w, stats);
+    put_metric_set(&mut w, metrics);
     Envelope::new(K_YIELD, w.into_bytes()).encode()
 }
 
 #[allow(clippy::type_complexity)]
-fn decode_yield(payload: &[u8]) -> Result<(Vec<Vec<(u64, JobSpec)>>, SchedStats)> {
+fn decode_yield(payload: &[u8]) -> Result<(Vec<Vec<(u64, JobSpec)>>, SchedStats, MetricSet)> {
     let mut r = ByteReader::new(payload);
     let nb = r.get_usize()?;
     crate::ensure!(
@@ -342,8 +364,9 @@ fn decode_yield(payload: &[u8]) -> Result<(Vec<Vec<(u64, JobSpec)>>, SchedStats)
         buckets.push(get_job_batch(&mut r)?);
     }
     let stats = get_sched_stats(&mut r)?;
+    let metrics = get_metric_set(&mut r)?;
     r.finish()?;
-    Ok((buckets, stats))
+    Ok((buckets, stats, metrics))
 }
 
 fn encode_batch(jobs: &[(u64, JobSpec)]) -> Vec<u8> {
@@ -415,6 +438,11 @@ struct Front {
     /// Affinity table: route key → home node (bounded; see `route`).
     table: Mutex<HashMap<u64, usize>>,
     loads: Mutex<Vec<NodeStats>>,
+    /// Latest merged metric registry of each node, built from the
+    /// flattened sets piggybacked on result/yield/ack envelopes
+    /// (counters keep their max, gauges take the latest — envelopes
+    /// from concurrent node waiters can arrive out of order).
+    metrics: Mutex<Vec<HashMap<String, (u8, u64)>>>,
     /// One in-flight bucket-steal request per node (locked after
     /// `loads` wherever both are held).
     steal_inflight: Mutex<Vec<bool>>,
@@ -533,7 +561,13 @@ impl Front {
     /// requested the steal; the gate read-lock is held across the send
     /// so the shutdown envelope can never overtake the batch in the
     /// target's FIFO.
-    fn reroute_stolen(&self, src: usize, jobs: Vec<(u64, JobSpec)>, comm: &Comm) {
+    fn reroute_stolen(&self, src: usize, mut jobs: Vec<(u64, JobSpec)>, comm: &Comm) {
+        for (_, s) in jobs.iter_mut() {
+            // the bucket re-enters the router: stamp the second route
+            // hop on each migrated span (Steal was stamped node-side at
+            // bucket extraction)
+            s.trace.stamp(Stage::Route);
+        }
         let gate = self.gate.read().unwrap();
         if *gate {
             for (id, _) in jobs {
@@ -605,6 +639,15 @@ impl Front {
         l.peak_resident_bytes = l.peak_resident_bytes.max(s.cache.resident_bytes);
     }
 
+    /// Merge a node's piggybacked metric set into its registry view.
+    fn note_node_metrics(&self, node: usize, update: MetricSet) {
+        if update.is_empty() {
+            return;
+        }
+        let mut m = self.metrics.lock().unwrap();
+        merge_wire(&mut m[node], &update);
+    }
+
     /// Resolve one answered job: credit the node and the owning front,
     /// fulfill the handle, wake drain(). Ordering matters: counters are
     /// bumped under the result lock (before the waiter can wake) and
@@ -670,6 +713,7 @@ impl ShardedScheduler {
             idle: Condvar::new(),
             table: Mutex::new(HashMap::new()),
             loads: Mutex::new(vec![NodeStats::default(); cfg.nodes]),
+            metrics: Mutex::new(vec![HashMap::new(); cfg.nodes]),
             steal_inflight: Mutex::new(vec![false; cfg.nodes]),
             counters: Mutex::new(vec![FrontStats::default(); fronts]),
             gate: RwLock::new(false),
@@ -766,11 +810,24 @@ impl ShardedScheduler {
         }
         // admission before any matrix work: a refusal must be cheap
         self.front.admit(spec.deadline_ms)?;
+        // the span and the absolute deadline anchor at fabric intake:
+        // every later hop (route, steal, node submit) inherits them, so
+        // queue-wait and deadline accounting stay exact across
+        // migration
+        if !spec.trace.is_active() {
+            spec.trace = Trace::start();
+        }
+        if spec.deadline_at_us.is_none() {
+            spec.deadline_at_us = spec
+                .deadline_ms
+                .map(|ms| obs::clock_micros() + ms.saturating_mul(1000));
+        }
         let (rkey, key) = self.route_key(&spec).map_err(SubmitError::Invalid)?;
         // the node must not re-digest what the front already identified
         spec.matrix_key = key;
         let has_deadline = spec.deadline_ms.is_some();
         let (node, _handoff, steal) = self.front.route(rkey, has_deadline);
+        spec.trace.stamp(Stage::Route);
         let id = self.front.next_id.fetch_add(1, Ordering::SeqCst) + 1;
         let state = JobState::new(id);
         self.front.jobs.lock().unwrap().insert(
@@ -864,6 +921,58 @@ impl ShardedScheduler {
         }
     }
 
+    /// Fabric-wide plaintext metrics dump: the aggregated scheduler
+    /// counters, the router's per-front intake and per-node load
+    /// accounts, every node's merged metric registry under a `nodeN.`
+    /// prefix, and the envelope-codec counters. One `<name> <value>`
+    /// line each.
+    pub fn metrics_text(&self) -> String {
+        let mut out = sched_stats_metrics("", &self.stats());
+        let shard = self.shard_stats();
+        out.push_str(&format!(
+            "shard.nodes {}\nshard.fronts {}\nshard.submitted {}\nshard.completed {}\n\
+             shard.failed {}\n",
+            self.front.nodes, self.front.fronts, shard.submitted, shard.completed, shard.failed
+        ));
+        for (i, fc) in shard.per_front.iter().enumerate() {
+            out.push_str(&format!(
+                "front{i}.submitted {}\nfront{i}.completed {}\nfront{i}.failed {}\n",
+                fc.submitted, fc.completed, fc.failed
+            ));
+        }
+        for (i, l) in shard.per_node.iter().enumerate() {
+            out.push_str(&format!(
+                "node{i}.routed {}\nnode{i}.handoffs {}\nnode{i}.outstanding {}\n\
+                 node{i}.peak_outstanding {}\n",
+                l.routed, l.handoffs, l.outstanding, l.peak_outstanding
+            ));
+        }
+        let metrics = self.front.metrics.lock().unwrap();
+        for (i, m) in metrics.iter().enumerate() {
+            out.push_str(&render_wire(&format!("node{i}."), m));
+        }
+        out.push_str(&comm_metrics());
+        out
+    }
+
+    /// Latest value of gauge `name` across the fabric: the maximum over
+    /// every node's merged registry view (per-node gauges report the
+    /// same quantity; the busiest node's reading is the informative
+    /// one).
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        let metrics = self.front.metrics.lock().unwrap();
+        let mut best: Option<f64> = None;
+        for m in metrics.iter() {
+            if let Some(&(kind, bits)) = m.get(name) {
+                if kind == crate::obs::registry::KIND_GAUGE {
+                    let v = f64::from_bits(bits);
+                    best = Some(best.map_or(v, |b| b.max(v)));
+                }
+            }
+        }
+        best
+    }
+
     /// Stop every node scheduler: running jobs finish, parked jobs are
     /// failed, their failure envelopes flow back, and the fabric
     /// threads are joined. One shutdown envelope per node suffices —
@@ -940,6 +1049,12 @@ impl SolveService for ShardedScheduler {
     fn shutdown(&self) -> usize {
         ShardedScheduler::shutdown(self)
     }
+    fn metrics_text(&self) -> String {
+        ShardedScheduler::metrics_text(self)
+    }
+    fn gauge(&self, name: &str) -> Option<f64> {
+        ShardedScheduler::gauge(self, name)
+    }
 }
 
 /// Thread of front `front_idx` collecting result envelopes from one
@@ -957,17 +1072,19 @@ fn collector(comm: Comm, front: Arc<Front>, node: usize, front_idx: usize) {
         };
         match env.kind {
             K_RESULT => match decode_result(&env.payload) {
-                Ok((job_id, res, stats)) => {
+                Ok((job_id, res, stats, metrics)) => {
                     front.note_node_stats(node, stats);
+                    front.note_node_metrics(node, metrics);
                     front.complete(node, job_id, res);
                 }
                 Err(_) => continue,
             },
             K_YIELD => {
-                let Ok((buckets, stats)) = decode_yield(&env.payload) else {
+                let Ok((buckets, stats, metrics)) = decode_yield(&env.payload) else {
                     continue;
                 };
                 front.note_node_stats(node, stats);
+                front.note_node_metrics(node, metrics);
                 front.steal_inflight.lock().unwrap()[node] = false;
                 // each bucket re-routes independently: the least-loaded
                 // target is re-picked after the previous bucket's jobs
@@ -979,8 +1096,9 @@ fn collector(comm: Comm, front: Arc<Front>, node: usize, front_idx: usize) {
                 }
             }
             K_ACK => {
-                if let Ok((cancelled, stats)) = decode_ack(&env.payload) {
+                if let Ok((cancelled, stats, metrics)) = decode_ack(&env.payload) {
                     front.note_node_stats(node, stats);
+                    front.note_node_metrics(node, metrics);
                     // every front receives the ack; only one credits
                     // the cancellation count
                     if front_idx == 0 {
@@ -1037,7 +1155,7 @@ fn node_service(comm: Comm, fronts: usize, cfg: SchedConfig, pus: usize) {
                             // new node answers it
                             return;
                         }
-                        let env = encode_result(job_id, &res, &s.stats());
+                        let env = encode_result(job_id, &res, &s.stats(), &s.wire_metrics());
                         let _ = c.send_bytes(reply_to, TAG_RES, env);
                     })
                     .expect("spawn shard waiter");
@@ -1047,7 +1165,7 @@ fn node_service(comm: Comm, fronts: usize, cfg: SchedConfig, pus: usize) {
                 let _ = comm.send_bytes(
                     reply_to,
                     TAG_RES,
-                    encode_result(job_id, &Err(e), &sched.stats()),
+                    encode_result(job_id, &Err(e), &sched.stats(), &sched.wire_metrics()),
                 );
             }
         }
@@ -1119,7 +1237,11 @@ fn node_service(comm: Comm, fronts: usize, cfg: SchedConfig, pus: usize) {
                         buckets.push(batch);
                     }
                 }
-                let _ = comm.send_bytes(src, TAG_RES, encode_yield(&buckets, &sched.stats()));
+                let _ = comm.send_bytes(
+                    src,
+                    TAG_RES,
+                    encode_yield(&buckets, &sched.stats(), &sched.wire_metrics()),
+                );
             }
             K_SHUTDOWN => {
                 // cross-front handshake: the gate guarantees every
@@ -1159,7 +1281,11 @@ fn node_service(comm: Comm, fronts: usize, cfg: SchedConfig, pus: usize) {
                     let _ = h.join();
                 }
                 for &f in &front_ranks {
-                    let _ = comm.send_bytes(f, TAG_RES, encode_ack(cancelled, &sched.stats()));
+                    let _ = comm.send_bytes(
+                        f,
+                        TAG_RES,
+                        encode_ack(cancelled, &sched.stats(), &sched.wire_metrics()),
+                    );
                 }
                 break;
             }
@@ -1197,6 +1323,7 @@ mod tests {
                     })
                     .collect(),
             ),
+            metrics: Mutex::new(vec![HashMap::new(); nodes]),
             steal_inflight: Mutex::new(vec![false; nodes]),
             counters: Mutex::new(vec![FrontStats::default()]),
             gate: RwLock::new(false),
@@ -1442,19 +1569,38 @@ mod tests {
             deadline_missed: Some(true),
             elapsed: Duration::from_millis(7),
             completed_at: Instant::now(),
+            queue_wait_ms: 0.25,
+            solve_ms: 6.5,
+            total_ms: 7.0,
+            trace: {
+                let mut t = Trace::start();
+                t.stamp(Stage::Solve);
+                t.stamp(Stage::Respond);
+                t
+            },
         };
+        let want_trace = rep.trace.clone();
         let stats = SchedStats {
             submitted: 9,
             ..SchedStats::default()
         };
-        let bytes = encode_result(77, &Ok(rep), &stats);
+        let metrics = vec![
+            ("kernel.flops".to_string(), 0u8, 12345u64),
+            ("kernel.efficiency".to_string(), 1u8, 0.8f64.to_bits()),
+        ];
+        let bytes = encode_result(77, &Ok(rep), &stats, &metrics);
         let env = Envelope::decode(&bytes).unwrap();
-        let (job_id, res, st) = decode_result(&env.payload).unwrap();
+        let (job_id, res, st, ms) = decode_result(&env.payload).unwrap();
         assert_eq!(job_id, 77);
         assert_eq!(st.submitted, 9);
+        assert_eq!(ms, metrics, "metric set must survive the wire");
         let rep = res.unwrap();
         assert_eq!(rep.id, 77, "front-end id wins on the wire");
         assert_eq!(rep.deadline_missed, Some(true));
+        assert_eq!(rep.queue_wait_ms, 0.25);
+        assert_eq!(rep.solve_ms, 6.5);
+        assert_eq!(rep.total_ms, 7.0);
+        assert_eq!(rep.trace, want_trace, "trace span must survive the wire");
         match rep.output {
             JobOutput::Solve { x, iterations, .. } => {
                 assert_eq!(x[0][1].to_bits(), (-0.0f64).to_bits());
@@ -1464,10 +1610,11 @@ mod tests {
             other => panic!("wrong output: {other:?}"),
         }
         // error results carry the message
-        let bytes = encode_result(3, &Err(GhostError::Task("boom".into())), &stats);
+        let bytes = encode_result(3, &Err(GhostError::Task("boom".into())), &stats, &[]);
         let env = Envelope::decode(&bytes).unwrap();
-        let (_, res, _) = decode_result(&env.payload).unwrap();
+        let (_, res, _, ms) = decode_result(&env.payload).unwrap();
         assert!(res.unwrap_err().to_string().contains("boom"));
+        assert!(ms.is_empty());
     }
 
     #[test]
@@ -1493,9 +1640,9 @@ mod tests {
         };
         // a multi-bucket yield round-trips bucket boundaries intact
         let buckets = vec![jobs.clone(), vec![(13u64, spec)]];
-        let env = Envelope::decode(&encode_yield(&buckets, &stats)).unwrap();
+        let env = Envelope::decode(&encode_yield(&buckets, &stats, &[])).unwrap();
         assert_eq!(env.kind, K_YIELD);
-        let (back, st) = decode_yield(&env.payload).unwrap();
+        let (back, st, _) = decode_yield(&env.payload).unwrap();
         assert_eq!(back.len(), 2, "bucket boundaries must survive the wire");
         assert_eq!(back[0].len(), 2);
         assert_eq!(back[1].len(), 1);
@@ -1516,8 +1663,8 @@ mod tests {
         assert_eq!(again.len(), 2);
         assert_eq!(again[0].0, 11);
         // an empty yield (nothing was parked) decodes cleanly too
-        let env = Envelope::decode(&encode_yield(&[], &stats)).unwrap();
-        let (none, _) = decode_yield(&env.payload).unwrap();
+        let env = Envelope::decode(&encode_yield(&[], &stats, &[])).unwrap();
+        let (none, _, _) = decode_yield(&env.payload).unwrap();
         assert!(none.is_empty());
         // the steal request carries its bucket budget
         let env = Envelope::decode(&encode_steal(2)).unwrap();

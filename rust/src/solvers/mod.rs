@@ -36,6 +36,18 @@ pub use crate::kernels::fused::{flags as spmv_flags, FusedDots, SpmvOpts};
 
 use crate::kernels::fused::flags;
 
+/// Cumulative work performed by an operator: flops and minimum data
+/// traffic (the roofline operands of [`crate::perfmodel`]), accumulated
+/// per apply from the matrix's cached nnz/byte counts — two float adds
+/// per apply, no allocation. The solve service differences snapshots
+/// around a solve to report achieved Gflop/s and measured-vs-roofline
+/// efficiency.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PerfCounters {
+    pub flops: f64,
+    pub bytes: f64,
+}
+
 /// A (possibly distributed) linear operator together with its vector
 /// space: local slices + global reductions.
 ///
@@ -246,6 +258,14 @@ pub trait Operator<S: Scalar> {
     /// Number of matvecs performed so far (for benches). Block applies
     /// count one matvec per column.
     fn matvecs(&self) -> usize;
+
+    /// Cumulative flop/byte counters since construction, if this
+    /// operator accounts for its work. Matrix-backed operators return
+    /// `Some`; matrix-free operators (where the model operands are
+    /// unknown) return `None`.
+    fn perf_counters(&self) -> Option<PerfCounters> {
+        None
+    }
 }
 
 /// Gather a local-row-order slice into a 1-column SELL-order block
@@ -310,6 +330,8 @@ pub struct LocalSellOp<S> {
     nthreads: usize,
     variant: SpmvVariant,
     count: usize,
+    acc_flops: f64,
+    acc_bytes: f64,
 }
 
 impl<S: Scalar> LocalSellOp<S> {
@@ -352,6 +374,8 @@ impl<S: Scalar> LocalSellOp<S> {
             nthreads,
             variant,
             count: 0,
+            acc_flops: 0.0,
+            acc_bytes: 0.0,
         })
     }
 
@@ -393,6 +417,14 @@ impl<S: Scalar> LocalSellOp<S> {
     pub fn resident_bytes(&self) -> usize {
         self.sell.bytes() + (self.xs.len() + self.ys.len()) * S::bytes()
     }
+
+    /// Book `nv` column applies against the roofline operands. The
+    /// model terms are O(1) (cached nnz/byte totals), so this is two
+    /// float adds per apply.
+    fn account(&mut self, nv: usize) {
+        self.acc_flops += crate::perfmodel::spmv_flops::<S>(&self.sell, nv);
+        self.acc_bytes += crate::perfmodel::spmv_min_bytes::<S>(&self.sell, nv) as f64;
+    }
 }
 
 impl<S: Scalar> Operator<S> for LocalSellOp<S> {
@@ -402,6 +434,7 @@ impl<S: Scalar> Operator<S> for LocalSellOp<S> {
 
     fn apply(&mut self, x: &[S], y: &mut [S]) {
         self.count += 1;
+        self.account(1);
         // vectors live in SELL (permuted) order inside the operator
         spmv::permute(&self.sell, x, &mut self.xs);
         spmv::sell_spmv_mt(
@@ -432,6 +465,7 @@ impl<S: Scalar> Operator<S> for LocalSellOp<S> {
             );
         }
         self.count += 1;
+        self.account(1);
         let xm = to_sell_order(&self.sell, &x[..n]);
         // y is pure output unless AXPBY reads it: skip the gather stream
         let mut ym = if opts.wants(flags::AXPBY) {
@@ -458,6 +492,7 @@ impl<S: Scalar> Operator<S> for LocalSellOp<S> {
             "apply_block shapes"
         );
         self.count += nv;
+        self.account(nv);
         let xm = block_to_sell_order(&self.sell, x);
         let mut ym = DenseMat::<S>::zeros(self.sell.nrows_padded(), nv, Layout::RowMajor);
         sell_spmmv_variant(&self.sell, &xm, &mut ym, self.variant);
@@ -488,6 +523,7 @@ impl<S: Scalar> Operator<S> for LocalSellOp<S> {
             );
         }
         self.count += nv;
+        self.account(nv);
         let xm = block_to_sell_order(&self.sell, x);
         // y is pure output unless AXPBY reads it: skip the gather stream
         let mut ym = if opts.wants(flags::AXPBY) {
@@ -511,6 +547,13 @@ impl<S: Scalar> Operator<S> for LocalSellOp<S> {
 
     fn matvecs(&self) -> usize {
         self.count
+    }
+
+    fn perf_counters(&self) -> Option<PerfCounters> {
+        Some(PerfCounters {
+            flops: self.acc_flops,
+            bytes: self.acc_bytes,
+        })
     }
 }
 
@@ -564,6 +607,8 @@ pub struct MpiOp<S> {
     xbuf: Vec<S>,
     ysell: Vec<S>,
     count: usize,
+    acc_flops: f64,
+    acc_bytes: f64,
     /// Optional modeled compute-time floor per apply (device model used
     /// by the scaling benches on hosts without real parallelism): after
     /// the real kernel runs, sleep up to bytes/bandwidth.
@@ -587,6 +632,8 @@ impl<S: Scalar> MpiOp<S> {
             xbuf: vec![S::ZERO; xlen],
             ysell: vec![S::ZERO; ylen],
             count: 0,
+            acc_flops: 0.0,
+            acc_bytes: 0.0,
             time_floor: None,
         }
     }
@@ -663,6 +710,13 @@ impl<S: Scalar> MpiOp<S> {
             }
         }
     }
+
+    /// Book `nv` column applies of this rank's local part against the
+    /// roofline operands (O(1) — cached nnz/byte totals).
+    fn account(&mut self, nv: usize) {
+        self.acc_flops += crate::perfmodel::spmv_flops::<S>(&self.dm.full, nv);
+        self.acc_bytes += crate::perfmodel::spmv_min_bytes::<S>(&self.dm.full, nv) as f64;
+    }
 }
 
 impl<S: Scalar> Operator<S> for MpiOp<S> {
@@ -672,6 +726,7 @@ impl<S: Scalar> Operator<S> for MpiOp<S> {
 
     fn apply(&mut self, x: &[S], y: &mut [S]) {
         self.count += 1;
+        self.account(1);
         self.xbuf[..self.dm.nlocal].copy_from_slice(&x[..self.dm.nlocal]);
         let xopts = self.exchange_opts();
         dist_spmv_opts(&self.dm, &self.comm, &mut self.xbuf, &mut self.ysell, &xopts)
@@ -689,6 +744,7 @@ impl<S: Scalar> Operator<S> for MpiOp<S> {
         let n = self.dm.nlocal;
         crate::ensure!(x.len() >= n && y.len() >= n, DimMismatch, "apply_fused sizes");
         self.count += 1;
+        self.account(1);
         self.xbuf[..n].copy_from_slice(&x[..n]);
         let xopts = self.exchange_opts();
         dist_spmv_fused(
@@ -715,6 +771,7 @@ impl<S: Scalar> Operator<S> for MpiOp<S> {
             "apply_block shapes"
         );
         self.count += nv;
+        self.account(nv);
         let t0 = std::time::Instant::now();
         let mut xblk = DenseMat::<S>::zeros(self.dm.xbuf_len(), nv, Layout::RowMajor);
         for i in 0..n {
@@ -752,6 +809,7 @@ impl<S: Scalar> Operator<S> for MpiOp<S> {
             );
         }
         self.count += nv;
+        self.account(nv);
         let t0 = std::time::Instant::now();
         let mut xblk = DenseMat::<S>::zeros(self.dm.xbuf_len(), nv, Layout::RowMajor);
         for i in 0..n {
@@ -800,6 +858,13 @@ impl<S: Scalar> Operator<S> for MpiOp<S> {
 
     fn matvecs(&self) -> usize {
         self.count
+    }
+
+    fn perf_counters(&self) -> Option<PerfCounters> {
+        Some(PerfCounters {
+            flops: self.acc_flops,
+            bytes: self.acc_bytes,
+        })
     }
 }
 

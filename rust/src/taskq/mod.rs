@@ -46,10 +46,11 @@
 //! pinning when the simulated PU ids fit the physical CPU count.
 
 use std::collections::VecDeque;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::time::Instant;
 
 use crate::core::{GhostError, Result};
+use crate::obs::{Counter, Hist, Registry};
 use crate::topology::Machine;
 
 pub mod flags {
@@ -79,6 +80,9 @@ struct TaskInner {
     nthreads: usize,
     numanode: Option<usize>,
     flags: u32,
+    /// When the task entered the queue (feeds the `taskq.queue_wait`
+    /// histogram at pickup).
+    enqueued_at: Instant,
     /// EDF lane membership: runnable tasks with a deadline are selected
     /// earliest-deadline-first, ahead of the whole FIFO/PRIO_HIGH order.
     deadline: Option<Instant>,
@@ -203,6 +207,16 @@ struct QState {
     shutdown: bool,
 }
 
+/// Queue instrumentation handles, installed once by the owning
+/// scheduler's registry ([`TaskQueue::install_obs`]). Absent handles
+/// cost nothing on the hot path.
+struct TaskqObs {
+    enqueued: Counter,
+    executed: Counter,
+    cancelled: Counter,
+    queue_wait: Arc<Hist>,
+}
+
 struct QInner {
     state: Mutex<QState>,
     /// Signalled when the queue or PU availability changes.
@@ -211,6 +225,7 @@ struct QInner {
     next_id: Mutex<u64>,
     /// Shepherd join handles, taken (and joined) by shutdown.
     shepherds: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    obs: OnceLock<TaskqObs>,
 }
 
 /// The process-wide task queue with its shepherd thread pool.
@@ -236,6 +251,7 @@ impl TaskQueue {
             machine,
             next_id: Mutex::new(0),
             shepherds: Mutex::new(Vec::new()),
+            obs: OnceLock::new(),
         });
         let q = TaskQueue { inner };
         let mut handles = Vec::with_capacity(nshepherds.max(1));
@@ -250,6 +266,19 @@ impl TaskQueue {
         }
         *q.inner.shepherds.lock().unwrap() = handles;
         q
+    }
+
+    /// Register this queue's metrics (`taskq.enqueued` / `.executed` /
+    /// `.cancelled` counters and the `taskq.queue_wait` latency
+    /// histogram) in `reg`. First installation wins; an uninstrumented
+    /// queue pays nothing.
+    pub fn install_obs(&self, reg: &Registry) {
+        let _ = self.inner.obs.set(TaskqObs {
+            enqueued: reg.counter("taskq.enqueued"),
+            executed: reg.counter("taskq.executed"),
+            cancelled: reg.counter("taskq.cancelled"),
+            queue_wait: reg.hist("taskq.queue_wait"),
+        });
     }
 
     /// Enqueue a task (ghost_task_enqueue); returns immediately.
@@ -299,6 +328,7 @@ impl TaskQueue {
             nthreads,
             numanode: opts.numanode,
             flags: opts.flags,
+            enqueued_at: Instant::now(),
             deadline: opts.deadline,
             deps: opts.deps.iter().map(|d| d.inner.clone()).collect(),
             func: Mutex::new(Some(f)),
@@ -306,10 +336,14 @@ impl TaskQueue {
             done: Condvar::new(),
             parent_pus,
         });
+        if let Some(o) = self.inner.obs.get() {
+            o.enqueued.inc();
+        }
         if unsatisfiable {
             // NUMANODE_STRICT on a node with no PUs can never reserve:
             // cancel instead of parking the task forever (waiters wake
             // and TaskHandle::wait reports the cancellation)
+            self.note_cancelled();
             *t.state.lock().unwrap() = TState::Cancelled;
             t.done.notify_all();
             return Task {
@@ -323,6 +357,7 @@ impl TaskQueue {
                 // the shepherds are gone (or going): never park a task
                 // that nothing will ever pick up
                 drop(st);
+                self.note_cancelled();
                 *t.state.lock().unwrap() = TState::Cancelled;
                 t.done.notify_all();
                 return Task {
@@ -343,6 +378,12 @@ impl TaskQueue {
         Task {
             inner: t,
             queue: self.clone(),
+        }
+    }
+
+    fn note_cancelled(&self) {
+        if let Some(o) = self.inner.obs.get() {
+            o.cancelled.inc();
         }
     }
 
@@ -452,6 +493,7 @@ impl TaskQueue {
                             if t.deadline.is_some() {
                                 st.deadline_queued -= 1;
                             }
+                            self.note_cancelled();
                             *t.state.lock().unwrap() = TState::Cancelled;
                             t.done.notify_all();
                             self.inner.cond.notify_all();
@@ -503,6 +545,9 @@ impl TaskQueue {
                     st = self.inner.cond.wait(st).unwrap();
                 }
             };
+            if let Some(o) = self.inner.obs.get() {
+                o.queue_wait.observe(task.enqueued_at.elapsed());
+            }
             *task.state.lock().unwrap() = TState::Running;
             pin_current_thread(&pus);
             let f = task.func.lock().unwrap().take();
@@ -522,6 +567,9 @@ impl TaskQueue {
                     }
                 }
                 st.running -= 1;
+            }
+            if let Some(o) = self.inner.obs.get() {
+                o.executed.inc();
             }
             *task.state.lock().unwrap() = TState::Done;
             task.done.notify_all();
@@ -567,6 +615,7 @@ impl TaskQueue {
         self.inner.cond.notify_all();
         let mut cancelled = Vec::with_capacity(pending.len());
         for t in pending {
+            self.note_cancelled();
             *t.state.lock().unwrap() = TState::Cancelled;
             t.done.notify_all();
             cancelled.push(t.id);
@@ -1118,6 +1167,28 @@ mod tests {
             assert_eq!(ran, (0..8).collect::<Vec<_>>(), "submit order {order:?}");
             q.shutdown();
         }
+    }
+
+    #[test]
+    fn installed_obs_counts_enqueue_execute_cancel() {
+        let q = queue(2);
+        let reg = Registry::new();
+        q.install_obs(&reg);
+        let t = q.enqueue(TaskOpts::default(), |_| {});
+        t.wait();
+        q.drain();
+        assert_eq!(reg.counter_value("taskq.enqueued"), Some(1));
+        assert_eq!(reg.counter_value("taskq.executed"), Some(1));
+        assert_eq!(reg.counter_value("taskq.cancelled"), Some(0));
+        assert_eq!(reg.hist("taskq.queue_wait").snapshot().count, 1);
+        q.shutdown();
+        // a post-shutdown enqueue is cancelled on arrival — and counted
+        let late = q.enqueue(TaskOpts::default(), |_| {});
+        late.wait();
+        assert!(late.is_cancelled());
+        assert_eq!(reg.counter_value("taskq.enqueued"), Some(2));
+        assert_eq!(reg.counter_value("taskq.cancelled"), Some(1));
+        assert_eq!(reg.counter_value("taskq.executed"), Some(1));
     }
 
     #[test]

@@ -1,0 +1,331 @@
+//! End-to-end observability integration: a loopback TCP serve run per
+//! topology in {1, 4} nodes x {1, 2} fronts, with lifecycle tracing and
+//! the metrics endpoint armed.
+//!
+//! What must hold (the PR-8 acceptance bar):
+//!
+//! - the scraped `GET /metrics` dump reconciles **bit-exactly** with the
+//!   [`ListenSummary`] the listener returns and with the aggregated
+//!   scheduler stats — the `sched.*` lines are synthesized from the
+//!   same snapshot, never double-booked (migrated jobs balance through
+//!   `sched.stolen_jobs`: submitted = completed + failed + stolen);
+//! - on sharded topologies the per-node `nodeN.routed` lines sum to the
+//!   job count (a stolen bucket re-routes as a *handoff*, never a
+//!   second `routed`), per-front intake sums match, and the per-node
+//!   registry views that crossed the stats envelopes account for every
+//!   completion;
+//! - every completed job wrote one JSONL trace line whose span chain is
+//!   complete (starts at `submit`, ends at `respond`) with monotone
+//!   non-decreasing timestamps — including jobs that migrated;
+//! - [`JobReport`] latency decomposition is sane: `queue_wait_ms`,
+//!   `solve_ms` and `total_ms` all present, `total >= solve`;
+//! - solver outputs are bitwise identical with tracing on vs off —
+//!   observability must be invisible in the numbers;
+//! - the roofline-efficiency gauge lands in (0, 1.5] (the model is an
+//!   upper bound built from the detected device, with slack for noisy
+//!   detection on shared CI machines).
+
+use std::sync::Arc;
+
+use ghost::comm::CommConfig;
+use ghost::obs::TraceSink;
+use ghost::sched::{
+    fetch_metrics, JobOutput, JobReport, JobSpec, MatrixSource, NetServer, ServeConfig,
+    SolveClient, SolveService, SolverKind,
+};
+
+/// Parse `name value` metric lines into (name, value-string) pairs.
+fn metric_map(text: &str) -> std::collections::HashMap<String, String> {
+    text.lines()
+        .filter_map(|l| {
+            let (name, value) = l.rsplit_once(' ')?;
+            Some((name.to_string(), value.to_string()))
+        })
+        .collect()
+}
+
+fn metric_u64(m: &std::collections::HashMap<String, String>, name: &str) -> u64 {
+    m.get(name)
+        .unwrap_or_else(|| panic!("metric {name} missing"))
+        .parse()
+        .unwrap_or_else(|_| panic!("metric {name} is not an integer"))
+}
+
+/// Like [`metric_u64`] but 0 when absent: a node's piggybacked registry
+/// view only exists once that node has sent an envelope, so a node the
+/// router never picked has no `nodeN.<registry>` lines yet.
+fn metric_u64_or0(m: &std::collections::HashMap<String, String>, name: &str) -> u64 {
+    m.get(name).map_or(0, |v| {
+        v.parse()
+            .unwrap_or_else(|_| panic!("metric {name} is not an integer"))
+    })
+}
+
+/// The workload: `jobs` CG solves over a few distinct small matrices
+/// (distinct sparsity keys spread affinity routing across nodes).
+fn specs(jobs: usize) -> Vec<JobSpec> {
+    let sizes = [64usize, 125, 216, 343];
+    (0..jobs)
+        .map(|i| {
+            let mut s = JobSpec::new(
+                MatrixSource::Named {
+                    name: "poisson7".into(),
+                    n: sizes[i % sizes.len()],
+                },
+                SolverKind::Cg {
+                    tol: 1e-8,
+                    max_iters: 500,
+                },
+            );
+            s.seed = i as u64;
+            // half the stream rides the EDF lane with a generous target
+            if i % 2 == 0 {
+                s.deadline_ms = Some(120_000);
+            }
+            s
+        })
+        .collect()
+}
+
+/// Serve `jobs` requests over loopback TCP on the given topology with a
+/// trace sink, scrape the metrics endpoint after the last response, and
+/// return (reports, scraped text, listener summary, trace JSONL lines).
+/// Multi-front topologies connect one client per front so every ingress
+/// front sees traffic.
+fn serve_round(
+    nodes: usize,
+    fronts: usize,
+    jobs: usize,
+    trace_path: &std::path::Path,
+) -> (Vec<JobReport>, String, ghost::sched::ListenSummary, Vec<String>) {
+    let sink = Arc::new(TraceSink::to_file(trace_path).unwrap());
+    let svc = ServeConfig::default()
+        .with_pus(4)
+        .with_nodes(nodes)
+        .with_fronts(fronts)
+        .with_comm(CommConfig::instant())
+        .with_trace(sink)
+        .build_arc()
+        .unwrap();
+    let server = NetServer::bind(svc.clone(), "127.0.0.1:0", None).unwrap();
+    let addr = server.local_addr().unwrap();
+    let runner = std::thread::spawn(move || server.run().unwrap());
+    let nclients = fronts.min(2).min(jobs);
+    let mut clients: Vec<SolveClient> = (0..nclients)
+        .map(|_| SolveClient::connect(addr).unwrap())
+        .collect();
+    for (i, s) in specs(jobs).into_iter().enumerate() {
+        clients[i % nclients].submit(s).unwrap();
+    }
+    let mut reports = Vec::with_capacity(jobs);
+    for c in clients.iter_mut() {
+        while c.pending() > 0 {
+            reports.push(c.recv().unwrap().report().unwrap());
+        }
+    }
+    // every response is in, and the listener settles each request's
+    // counter *before* writing its response frame: the scrape sees the
+    // closed books
+    let text = fetch_metrics(addr).unwrap();
+    clients.truncate(1); // EOF ends the extra handler threads
+    clients[0].shutdown_server().unwrap();
+    let summary = runner.join().unwrap();
+    svc.shutdown();
+    let trace = std::fs::read_to_string(trace_path).unwrap();
+    let lines: Vec<String> = trace.lines().map(|s| s.to_string()).collect();
+    let _ = std::fs::remove_file(trace_path);
+    assert_eq!(reports.len(), jobs, "one report per request");
+    (reports, text, summary, lines)
+}
+
+/// Pull the span chain out of one trace line: (stage, at_us) pairs in
+/// written order.
+fn span_chain(line: &str) -> Vec<(String, u64)> {
+    let events = line
+        .split_once("\"events\":[")
+        .expect("trace line has events")
+        .1
+        .trim_end_matches(|c| c == '}' || c == ']');
+    events
+        .split("},{")
+        .map(|e| {
+            let stage = e
+                .split_once("\"stage\":\"")
+                .expect("event has stage")
+                .1
+                .split('"')
+                .next()
+                .unwrap()
+                .to_string();
+            let at: u64 = e
+                .split_once("\"at_us\":")
+                .expect("event has at_us")
+                .1
+                .trim_matches(|c: char| !c.is_ascii_digit())
+                .parse()
+                .unwrap();
+            (stage, at)
+        })
+        .collect()
+}
+
+#[test]
+fn metrics_reconcile_and_spans_complete_across_topologies() {
+    for (nodes, fronts) in [(1usize, 1usize), (1, 2), (4, 1), (4, 2)] {
+        let jobs = 8;
+        let path = std::env::temp_dir().join(format!("ghost_obs_{nodes}x{fronts}.jsonl"));
+        let (reports, text, summary, trace_lines) = serve_round(nodes, fronts, jobs, &path);
+        let m = metric_map(&text);
+        let label = format!("{nodes} node(s) x {fronts} front(s)");
+
+        // --- listener lines reconcile bit-exactly with ListenSummary
+        assert_eq!(metric_u64(&m, "listener.requests"), summary.requests, "{label}");
+        assert_eq!(metric_u64(&m, "listener.connections"), summary.connections, "{label}");
+        assert_eq!(metric_u64(&m, "listener.ok"), summary.ok, "{label}");
+        assert_eq!(metric_u64(&m, "listener.failed"), summary.failed, "{label}");
+        assert_eq!(metric_u64(&m, "listener.rejected"), summary.rejected, "{label}");
+        assert_eq!(summary.requests, jobs as u64, "{label}");
+        assert_eq!(summary.ok, jobs as u64, "{label}");
+        assert_eq!(
+            summary.requests,
+            summary.ok + summary.failed + summary.rejected,
+            "{label}"
+        );
+        // the metrics scrape itself never counts as a connection —
+        // only the envelope-protocol clients do
+        assert_eq!(summary.connections, fronts.min(2) as u64, "{label}");
+
+        // --- aggregated scheduler accounts. A migrated job is a real
+        // second submission on the thief node; the home node's books
+        // close through stolen_jobs, so across the fabric:
+        //   submitted = completed + failed + stolen_jobs
+        let submitted = metric_u64(&m, "sched.submitted");
+        let completed = metric_u64(&m, "sched.completed");
+        let failed = metric_u64(&m, "sched.failed");
+        let stolen = metric_u64(&m, "sched.stolen_jobs");
+        assert_eq!(completed, jobs as u64, "{label}");
+        assert_eq!(failed, 0, "{label}");
+        assert_eq!(submitted, completed + failed + stolen, "{label}");
+
+        let sharded = nodes > 1 || fronts > 1;
+        if sharded {
+            assert_eq!(metric_u64(&m, "shard.submitted"), jobs as u64, "{label}");
+            assert_eq!(metric_u64(&m, "shard.completed"), jobs as u64, "{label}");
+            let routed: u64 = (0..nodes)
+                .map(|i| metric_u64(&m, &format!("node{i}.routed")))
+                .sum();
+            assert_eq!(routed, jobs as u64, "{label}: routed jobs must sum");
+            let front_in: u64 = (0..fronts)
+                .map(|i| metric_u64(&m, &format!("front{i}.submitted")))
+                .sum();
+            assert_eq!(front_in, jobs as u64, "{label}: front intake must sum");
+            // node registries made it across the stats envelopes
+            let node_completed: u64 = (0..nodes)
+                .map(|i| metric_u64_or0(&m, &format!("node{i}.sched.completed")))
+                .sum();
+            assert_eq!(node_completed, jobs as u64, "{label}");
+            let node_flops: u64 = (0..nodes)
+                .map(|i| metric_u64_or0(&m, &format!("node{i}.kernel.flops")))
+                .sum();
+            assert!(node_flops > 0, "{label}: no kernel flops crossed the fabric");
+        } else {
+            // single engine: kernel counters sit at the top level
+            assert!(metric_u64(&m, "kernel.flops") > 0, "{label}");
+            assert!(metric_u64(&m, "kernel.bytes") > 0, "{label}");
+        }
+
+        // --- efficiency gauge in (0, 1.5]. Sharded: the max across
+        // the nodes that reported (mirrors ShardedScheduler::gauge)
+        let eff = if sharded {
+            (0..nodes)
+                .filter_map(|i| m.get(&format!("node{i}.kernel.efficiency")))
+                .map(|v| v.parse::<f64>().unwrap())
+                .fold(f64::NEG_INFINITY, f64::max)
+        } else {
+            m.get("kernel.efficiency")
+                .unwrap_or_else(|| panic!("{label}: kernel.efficiency missing"))
+                .parse()
+                .unwrap()
+        };
+        assert!(eff > 0.0 && eff <= 1.5, "{label}: efficiency {eff} out of (0, 1.5]");
+
+        // --- latency decomposition present and sane
+        for r in &reports {
+            assert!(r.total_ms > 0.0, "{label}");
+            assert!(r.solve_ms > 0.0, "{label}");
+            assert!(r.queue_wait_ms >= 0.0, "{label}");
+            assert!(
+                r.total_ms + 1e-6 >= r.solve_ms,
+                "{label}: total {} < solve {}",
+                r.total_ms,
+                r.solve_ms
+            );
+        }
+
+        // --- one complete, monotone span chain per job
+        assert_eq!(trace_lines.len(), jobs, "{label}: one trace line per job");
+        for line in &trace_lines {
+            let chain = span_chain(line);
+            assert!(chain.len() >= 3, "{label}: thin chain: {line}");
+            assert_eq!(chain.first().unwrap().0, "submit", "{label}: {line}");
+            assert_eq!(chain.last().unwrap().0, "respond", "{label}: {line}");
+            for w in chain.windows(2) {
+                assert!(
+                    w[0].1 <= w[1].1,
+                    "{label}: span timestamps regressed: {line}"
+                );
+            }
+            if sharded {
+                // fabric intake stamps the route hop on every job
+                assert!(
+                    chain.iter().any(|(s, _)| s == "route"),
+                    "{label}: no route hop: {line}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn tracing_is_invisible_in_the_numbers() {
+    // same specs through two identical single-node engines, tracing on
+    // vs off: solver outputs must be bitwise identical
+    // batching off pins the execution plan: coalescing width is
+    // timing-dependent and a width-2 block pass takes different
+    // iterates than two solo passes, which would drown the signal
+    let jobs = 6;
+    let path = std::env::temp_dir().join("ghost_obs_onoff.jsonl");
+    let traced_cfg = ServeConfig::default()
+        .with_pus(2)
+        .with_batching(ghost::sched::BatchPolicy::Off)
+        .with_trace(Arc::new(TraceSink::to_file(&path).unwrap()));
+    let plain_cfg = ServeConfig::default()
+        .with_pus(2)
+        .with_batching(ghost::sched::BatchPolicy::Off);
+    let run = |cfg: &ServeConfig| -> Vec<JobReport> {
+        let engine = cfg.build().unwrap();
+        let handles: Vec<_> = specs(jobs)
+            .into_iter()
+            .map(|s| engine.submit(s).unwrap())
+            .collect();
+        let reports = handles.into_iter().map(|h| h.wait().unwrap()).collect();
+        engine.shutdown();
+        reports
+    };
+    let traced = run(&traced_cfg);
+    let plain = run(&plain_cfg);
+    let _ = std::fs::remove_file(&path);
+    for (a, b) in traced.iter().zip(&plain) {
+        let (JobOutput::Solve { x: xa, .. }, JobOutput::Solve { x: xb, .. }) =
+            (&a.output, &b.output)
+        else {
+            panic!("expected Solve outputs");
+        };
+        assert_eq!(xa.len(), xb.len());
+        for (ca, cb) in xa.iter().zip(xb) {
+            for (u, v) in ca.iter().zip(cb) {
+                assert_eq!(u.to_bits(), v.to_bits(), "tracing changed the numbers");
+            }
+        }
+    }
+}
