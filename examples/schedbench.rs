@@ -27,6 +27,11 @@
 //! deadline-miss-rate column exercises the EDF lane end to end, and the
 //! sharded table reports how many parked buckets migrated.
 //!
+//! A churn pass re-runs the sharded stream while the busiest node
+//! retires mid-run: its backlog is evacuated to the survivors and the
+//! results must *still* be bitwise identical — the evacuated-job count
+//! lands in the JSON artifact as `evacuated_jobs`.
+//!
 //! A third comparison pushes the mixed stream through the **TCP
 //! ingress**: a loopback `NetServer` in front of the same scheduler,
 //! driven by a pipelined `SolveClient`. Results must again be bitwise
@@ -52,7 +57,8 @@ use ghost::core::Result;
 use ghost::matgen;
 use ghost::sched::{
     matrix_key, BatchPolicy, JobOutput, JobReport, JobSpec, MatrixSource, NetServer,
-    Priority, RoutePolicy, ServeConfig, SolveClient, SolveService, SolverKind,
+    Priority, RoutePolicy, SchedConfig, ServeConfig, ShardConfig, ShardedScheduler,
+    SolveClient, SolveService, SolverKind,
 };
 use ghost::sparsemat::Crs;
 
@@ -314,6 +320,50 @@ fn main() -> Result<()> {
     assert_bitwise("sharded vs single", &single.reports, &sharded.reports);
     println!("result check: sharded solutions bitwise-match single-node ✓");
 
+    // --- node churn: the same stream while the busiest node retires
+    // mid-run — its backlog evacuates to the survivors, every handle
+    // still resolves, and the results stay bitwise identical
+    let churn = ShardedScheduler::new(ShardConfig {
+        nodes,
+        policy: RoutePolicy::Affinity,
+        pus_per_node: 1,
+        sched: SchedConfig {
+            nshepherds: 1,
+            batching: BatchPolicy::Auto,
+            ..SchedConfig::default()
+        },
+        comm: CommConfig::instant(),
+        ..ShardConfig::default()
+    })?;
+    let churn_handles: Vec<_> = sjobs
+        .iter()
+        .map(|s| churn.submit(s.clone()).map_err(ghost::core::GhostError::from))
+        .collect::<Result<_>>()?;
+    let busiest = churn
+        .shard_stats()
+        .per_node
+        .iter()
+        .enumerate()
+        .max_by_key(|(_, n)| n.outstanding + n.migrated_outstanding)
+        .map(|(i, _)| i)
+        .unwrap_or(0);
+    churn.leave_node(busiest)?;
+    let churn_reports: Vec<JobReport> = churn_handles
+        .into_iter()
+        .map(|h| h.wait())
+        .collect::<Result<_>>()?;
+    let evacuated_jobs: u64 = churn
+        .metrics_text()
+        .lines()
+        .find_map(|l| l.strip_prefix("shard.evacuated_jobs ").and_then(|v| v.trim().parse().ok()))
+        .unwrap_or(0);
+    churn.shutdown();
+    assert_bitwise("churn vs single", &single.reports, &churn_reports);
+    println!(
+        "result check: node-churn solutions bitwise-match single-node ✓ \
+         (node {busiest} retired, {evacuated_jobs} jobs evacuated)"
+    );
+
     // --- the same mixed stream through the TCP ingress (loopback):
     // specs cross the wire as envelope frames, responses come back in
     // completion order and are re-sorted by client id for the check
@@ -429,6 +479,7 @@ fn main() -> Result<()> {
              \"sharded_vs_single_speedup\":{speedup:.3},\
              \"deadline_jobs\":{dl_jobs},\"deadline_missed\":{dl_missed},\
              \"deadline_miss_rate\":{:.4},\"stolen_buckets\":{},\
+             \"evacuated_jobs\":{evacuated_jobs},\
              \"achieved_gflops\":{:.4},\"efficiency\":{:.4}}}",
             batched.reports.len(),
             batched.reports.len() as f64 / secs,

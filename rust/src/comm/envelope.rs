@@ -56,7 +56,14 @@ pub fn wire_stats() -> (u64, u64, u64, u64) {
 /// carry `queue_wait_ms` / `solve_ms` / `total_ms` and the finished
 /// trace; node→front stats piggybacks grew a flattened metric set
 /// (see [`crate::obs::registry`]).
-pub const ENVELOPE_VERSION: u16 = 4;
+/// v5: elastic fabric — the join / ping / pong liveness kinds (the
+/// failure detector's probe round-trip, pongs piggyback stats +
+/// metrics), the leave kind (immediate node retirement, also the chaos
+/// crash injection), the dead kind (forged close notice on a dead
+/// node's result stream so collectors unblock), and the checkpoint
+/// record kind used by the parked-work checkpoint file
+/// ([`crate::sched::checkpoint`] — same codec, never on the fabric).
+pub const ENVELOPE_VERSION: u16 = 5;
 
 /// Little-endian append-only byte sink.
 #[derive(Default)]

@@ -17,6 +17,8 @@
 //!          [--no-batch] [--deadline-ms D] [--trace FILE]
 //!          [--nodes N] [--fronts F] [--route affinity|hash|load]
 //!          [--node-pus P] [--max-outstanding J] [--min-deadline-ms D]
+//!          [--max-nodes M] [--fd-round-ms MS] [--fd-dead-rounds R]
+//!          [--checkpoint FILE] [--checkpoint-every-ms MS]
 //!          (the asynchronous solve service: jobs are scheduled on the
 //!           task queue, operators are cached by sparsity fingerprint,
 //!           and concurrent single-RHS CG and BlockCg jobs are
@@ -35,7 +37,14 @@
 //!           control: saturated or infeasible requests are answered
 //!           with typed rejections instead of queueing unboundedly.
 //!           --trace FILE exports one JSONL line per completed job with
-//!           its full lifecycle span — see ghost::obs::trace.)
+//!           its full lifecycle span — see ghost::obs::trace.
+//!           Fault tolerance (sharded only): --max-nodes M reserves
+//!           node slots for runtime joins; --fd-round-ms/--fd-dead-rounds
+//!           tune the failure detector that evacuates a silent node's
+//!           parked and in-flight work onto the survivors; --checkpoint
+//!           FILE persists every parked job so a front restart resumes
+//!           them (the file is restored at startup), written every
+//!           --checkpoint-every-ms ms and once more at shutdown.)
 //!   client --connect HOST:PORT [--requests F.jsonl] [--shutdown]
 //!          (drive a `serve --listen` service over TCP: submit every
 //!           JSONL request pipelined, print one response line per
@@ -424,6 +433,21 @@ fn serve_config(a: &Args) -> Result<ghost::sched::ServeConfig> {
     if let Some(path) = a.flags.get("trace") {
         cfg = cfg.with_trace(std::sync::Arc::new(ghost::obs::TraceSink::to_file(path)?));
     }
+    if let Some(m) = a.flags.get("max-nodes").and_then(|v| v.parse().ok()) {
+        cfg = cfg.with_max_nodes(m);
+    }
+    if let Some(ms) = a.flags.get("fd-round-ms").and_then(|v| v.parse().ok()) {
+        cfg.fd_round_ms = ms;
+    }
+    if let Some(r) = a.flags.get("fd-dead-rounds").and_then(|v| v.parse().ok()) {
+        cfg.fd_dead_rounds = r;
+    }
+    if let Some(path) = a.flags.get("checkpoint") {
+        cfg = cfg.with_checkpoint(path.as_str());
+    }
+    if let Some(ms) = a.flags.get("checkpoint-every-ms").and_then(|v| v.parse().ok()) {
+        cfg = cfg.with_checkpoint_every_ms(ms);
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -446,7 +470,14 @@ fn cmd_serve(a: &Args) -> Result<()> {
     let deadline_ms = cfg.deadline_ms;
     println!("{}", cfg.describe());
     if !listen.is_empty() {
-        let svc = cfg.build_arc()?;
+        let engine = cfg.build()?;
+        if cfg.checkpoint.is_some() {
+            let restored = engine.restore_checkpoint()?;
+            if restored > 0 {
+                eprintln!("restored {restored} parked job(s) from checkpoint");
+            }
+        }
+        let svc: std::sync::Arc<dyn SolveService + Send + Sync> = std::sync::Arc::new(engine);
         let server = NetServer::bind(svc.clone(), listen.as_str(), deadline_ms)?;
         eprintln!(
             "listening on {} — stop with `ghost client --connect <addr> --shutdown`",
@@ -457,12 +488,21 @@ fn cmd_serve(a: &Args) -> Result<()> {
             "listener done: {} connection(s), {} request(s) — {} ok, {} failed, {} rejected",
             s.connections, s.requests, s.ok, s.failed, s.rejected
         );
+        // restored jobs have no waiting client: let them finish rather
+        // than counting them stranded
+        svc.drain();
         let cancelled = svc.shutdown();
         ghost::ensure!(cancelled == 0, Task, "{cancelled} jobs stranded at shutdown");
         return Ok(());
     }
     let oneshot = a.flags.contains_key("oneshot");
     let engine = cfg.build()?;
+    if cfg.checkpoint.is_some() {
+        let restored = engine.restore_checkpoint()?;
+        if restored > 0 {
+            eprintln!("restored {restored} parked job(s) from checkpoint");
+        }
+    }
     let sched: &dyn SolveService = &engine;
     let mut out = std::io::stdout();
     if oneshot {

@@ -23,7 +23,9 @@ use crate::core::Result;
 
 /// Lifecycle stages a job can pass through, in nominal order. A job
 /// skips stages that don't apply (only parked jobs see `Park`, only
-/// stolen ones `Steal`, only batched ones `Batch`).
+/// stolen ones `Steal`, only batched ones `Batch`; `Evacuate` marks a
+/// re-route off a dead or leaving node and `Restore` a resubmission
+/// from a parked-work checkpoint after a front restart).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 #[repr(u8)]
 pub enum Stage {
@@ -34,6 +36,8 @@ pub enum Stage {
     Batch = 4,
     Solve = 5,
     Respond = 6,
+    Evacuate = 7,
+    Restore = 8,
 }
 
 impl Stage {
@@ -46,6 +50,8 @@ impl Stage {
             Stage::Batch => "batch",
             Stage::Solve => "solve",
             Stage::Respond => "respond",
+            Stage::Evacuate => "evacuate",
+            Stage::Restore => "restore",
         }
     }
 
@@ -59,6 +65,8 @@ impl Stage {
             4 => Stage::Batch,
             5 => Stage::Solve,
             6 => Stage::Respond,
+            7 => Stage::Evacuate,
+            8 => Stage::Restore,
             _ => return None,
         })
     }
@@ -192,11 +200,13 @@ mod tests {
             Stage::Batch,
             Stage::Solve,
             Stage::Respond,
+            Stage::Evacuate,
+            Stage::Restore,
         ] {
             assert_eq!(Stage::from_u8(s as u8), Some(s));
             assert!(!s.name().is_empty());
         }
-        assert_eq!(Stage::from_u8(7), None);
+        assert_eq!(Stage::from_u8(9), None);
         assert_eq!(Stage::from_u8(255), None);
     }
 

@@ -1,0 +1,250 @@
+//! Parked-work checkpointing: a versioned on-disk snapshot of every
+//! outstanding job a router front still owes an answer for, so a front
+//! restart loses nothing (ROADMAP "elastic, fault-tolerant shard
+//! fabric"; the ESSEX context of GHOST is explicit that exascale-class
+//! resource management must survive component failure).
+//!
+//! # File format
+//!
+//! The file reuses the fabric's envelope codec
+//! ([`crate::comm::envelope`]) so there is exactly one binary dialect
+//! to fuzz: a sequence of `u32`-length-prefixed [`Envelope`] frames of
+//! kind [`K_CKPT`].
+//!
+//! ```text
+//! [u32 len][envelope: MAGIC, format version, advisory job count]
+//! [u32 len][envelope: job id, JobSpec]        (one frame per job)
+//! ...
+//! ```
+//!
+//! Writes go to `<path>.tmp` and are atomically renamed into place, so
+//! a crash mid-write leaves the previous checkpoint intact. Loading is
+//! additionally *truncation-tolerant*: a torn tail (power loss on a
+//! filesystem that reordered the rename, a copy cut short) costs only
+//! the frames after the tear — every complete frame before it is
+//! restored. A bad header is a hard error (the file is not a
+//! checkpoint); a bad record frame just ends the readable prefix.
+
+use std::fs;
+use std::path::Path;
+
+use crate::comm::envelope::{ByteReader, ByteWriter, Envelope};
+use crate::core::{GhostError, Result};
+
+use super::proto::{get_spec, put_spec};
+use super::JobSpec;
+
+/// Envelope kind of every frame in a checkpoint file. File-only: this
+/// kind never travels on the fabric (fabric kinds live in
+/// [`super::shard`], client kinds in [`super::client`]).
+pub(crate) const K_CKPT: u8 = 24;
+
+/// First eight bytes of the header payload — rejects renamed foreign
+/// files before any spec decoding runs.
+const MAGIC: u64 = 0x4748_4f53_5443_4b50; // "GHOSTCKP"
+
+/// Checkpoint file format version (independent of the envelope
+/// version, which gates each frame separately).
+pub const CHECKPOINT_VERSION: u16 = 1;
+
+fn frame(env: &Envelope, out: &mut Vec<u8>) {
+    let bytes = env.encode();
+    out.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
+    out.extend_from_slice(&bytes);
+}
+
+/// Serialise `jobs` as a checkpoint image (header + one record frame
+/// per job).
+pub fn encode_checkpoint(jobs: &[(u64, JobSpec)]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(64 + jobs.len() * 256);
+    let mut hw = ByteWriter::with_capacity(24);
+    hw.put_u64(MAGIC);
+    hw.put_u16(CHECKPOINT_VERSION);
+    hw.put_u64(jobs.len() as u64);
+    frame(&Envelope::new(K_CKPT, hw.into_bytes()), &mut out);
+    for (id, spec) in jobs {
+        let mut w = ByteWriter::new();
+        w.put_u64(*id);
+        put_spec(&mut w, spec);
+        frame(&Envelope::new(K_CKPT, w.into_bytes()), &mut out);
+    }
+    out
+}
+
+/// Write `jobs` to `path` via a same-directory temp file + atomic
+/// rename, so readers never observe a half-written checkpoint.
+pub fn save<P: AsRef<Path>>(path: P, jobs: &[(u64, JobSpec)]) -> Result<()> {
+    let path = path.as_ref();
+    let mut tmp = path.as_os_str().to_owned();
+    tmp.push(".tmp");
+    fs::write(&tmp, encode_checkpoint(jobs))?;
+    fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+/// Decode a checkpoint image. A bad header is a hard error; a torn or
+/// corrupt record frame ends the readable prefix (`truncated` reports
+/// whether anything after the last good frame was discarded).
+pub fn decode_checkpoint(bytes: &[u8]) -> Result<(Vec<(u64, JobSpec)>, bool)> {
+    let mut off = 0usize;
+    let mut next = |bytes: &[u8]| -> Option<Vec<u8>> {
+        if bytes.len() < off + 4 {
+            return None;
+        }
+        let len = u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()) as usize;
+        if bytes.len() < off + 4 + len {
+            return None;
+        }
+        let f = bytes[off + 4..off + 4 + len].to_vec();
+        off += 4 + len;
+        Some(f)
+    };
+    let header = next(bytes).ok_or_else(|| {
+        GhostError::Parse("checkpoint file too short for a header frame".into())
+    })?;
+    let env = Envelope::decode(&header)?;
+    crate::ensure!(
+        env.kind == K_CKPT,
+        Parse,
+        "checkpoint header has kind {} (want {K_CKPT})",
+        env.kind
+    );
+    let mut r = ByteReader::new(&env.payload);
+    let magic = r.get_u64()?;
+    crate::ensure!(magic == MAGIC, Parse, "not a checkpoint file (bad magic)");
+    let v = r.get_u16()?;
+    crate::ensure!(
+        v == CHECKPOINT_VERSION,
+        Parse,
+        "checkpoint format v{v}, this build reads v{CHECKPOINT_VERSION}"
+    );
+    let advertised = r.get_u64()? as usize;
+    r.finish()?;
+    let mut jobs = Vec::with_capacity(advertised.min(1024));
+    let mut torn = false;
+    while off < bytes.len() {
+        // any decode failure from here on is a torn tail, not an error:
+        // keep every complete record before it
+        let Some(f) = next(bytes) else {
+            torn = true;
+            break;
+        };
+        let rec = match Envelope::decode(&f) {
+            Ok(env) if env.kind == K_CKPT => env,
+            _ => {
+                torn = true;
+                break;
+            }
+        };
+        let mut r = ByteReader::new(&rec.payload);
+        let parsed = (|| -> Result<(u64, JobSpec)> {
+            let id = r.get_u64()?;
+            let spec = get_spec(&mut r)?;
+            r.finish()?;
+            Ok((id, spec))
+        })();
+        match parsed {
+            Ok(j) => jobs.push(j),
+            Err(_) => {
+                torn = true;
+                break;
+            }
+        }
+    }
+    Ok((jobs, torn || jobs.len() != advertised))
+}
+
+/// Load the checkpoint at `path`. Returns the restorable jobs plus
+/// whether the file was torn (see [`decode_checkpoint`]). A missing
+/// file is an empty, untorn checkpoint — restart-with-checkpointing
+/// must work on first boot.
+pub fn load<P: AsRef<Path>>(path: P) -> Result<(Vec<(u64, JobSpec)>, bool)> {
+    match fs::read(path.as_ref()) {
+        Ok(bytes) => decode_checkpoint(&bytes),
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok((Vec::new(), false)),
+        Err(e) => Err(e.into()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{JobSpec, MatrixSource, Priority, SolverKind};
+    use super::*;
+
+    fn spec(seed: u64) -> JobSpec {
+        let mut s = JobSpec::new(
+            MatrixSource::Named {
+                name: "poisson7".into(),
+                n: 64,
+            },
+            SolverKind::Cg {
+                tol: 1e-8,
+                max_iters: 200,
+            },
+        );
+        s.seed = seed;
+        s.priority = if seed % 2 == 0 {
+            Priority::High
+        } else {
+            Priority::Normal
+        };
+        s.deadline_at_us = Some(1_000_000 + seed);
+        s
+    }
+
+    #[test]
+    fn round_trips_bitwise() {
+        let jobs: Vec<(u64, JobSpec)> = (0..5).map(|i| (100 + i, spec(i))).collect();
+        let bytes = encode_checkpoint(&jobs);
+        let (got, torn) = decode_checkpoint(&bytes).unwrap();
+        assert!(!torn);
+        assert_eq!(got.len(), 5);
+        for ((id, s), (gid, g)) in jobs.iter().zip(&got) {
+            assert_eq!(id, gid);
+            assert_eq!(s.seed, g.seed);
+            assert_eq!(s.priority, g.priority);
+            assert_eq!(s.deadline_at_us, g.deadline_at_us);
+        }
+    }
+
+    #[test]
+    fn torn_tail_loses_only_the_torn_frame() {
+        let jobs: Vec<(u64, JobSpec)> = (0..4).map(|i| (i, spec(i))).collect();
+        let bytes = encode_checkpoint(&jobs);
+        // cut mid-way through the last frame: everything before it loads
+        let (got, torn) = decode_checkpoint(&bytes[..bytes.len() - 7]).unwrap();
+        assert!(torn);
+        assert_eq!(got.len(), 3);
+        // a flipped byte inside a record ends the prefix there too
+        let mut bad = bytes.clone();
+        let n = bad.len();
+        bad[n - 20] ^= 0xff;
+        let (got, torn) = decode_checkpoint(&bad).unwrap();
+        assert!(torn);
+        assert!(got.len() < 4);
+    }
+
+    #[test]
+    fn header_is_a_hard_gate() {
+        assert!(decode_checkpoint(b"not a checkpoint").is_err());
+        let bytes = encode_checkpoint(&[]);
+        let (got, torn) = decode_checkpoint(&bytes).unwrap();
+        assert!(got.is_empty() && !torn);
+    }
+
+    #[test]
+    fn save_and_load_via_temp_rename() {
+        let dir = std::env::temp_dir().join(format!("ghost_ckpt_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("parked.ckpt");
+        let jobs: Vec<(u64, JobSpec)> = (0..3).map(|i| (i, spec(i))).collect();
+        save(&path, &jobs).unwrap();
+        let (got, torn) = load(&path).unwrap();
+        assert!(!torn);
+        assert_eq!(got.len(), 3);
+        // missing file: empty restart, not an error
+        let (none, torn) = load(dir.join("absent.ckpt")).unwrap();
+        assert!(none.is_empty() && !torn);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

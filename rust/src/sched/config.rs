@@ -79,6 +79,23 @@ pub struct ServeConfig {
     /// Optional JSONL lifecycle-trace sink (`ghost serve --trace FILE`);
     /// shared by every node scheduler the engine stands up.
     pub trace: Option<Arc<TraceSink>>,
+    /// Node-slot capacity for runtime joins (see
+    /// [`ShardConfig::max_nodes`]); `0` means "exactly `nodes`".
+    pub max_nodes: usize,
+    /// Failure-detector round length, ms (see
+    /// [`ShardConfig::fd_round_ms`]); `0` disables the detector.
+    pub fd_round_ms: u64,
+    /// Silent rounds before a node is declared dead (see
+    /// [`ShardConfig::fd_dead_rounds`]); `0` disables the detector.
+    pub fd_dead_rounds: u64,
+    /// Rounds an unanswered steal slot stays armed (see
+    /// [`ShardConfig::steal_expire_rounds`]).
+    pub steal_expire_rounds: u64,
+    /// Parked-work checkpoint file (`ghost serve --checkpoint FILE`);
+    /// `None` disables checkpointing.
+    pub checkpoint: Option<std::path::PathBuf>,
+    /// Checkpoint cadence, ms (see [`ShardConfig::checkpoint_every_ms`]).
+    pub checkpoint_every_ms: u64,
 }
 
 impl Default for ServeConfig {
@@ -101,6 +118,12 @@ impl Default for ServeConfig {
             admission: AdmissionControl::default(),
             comm: CommConfig::default(),
             trace: None,
+            max_nodes: shard.max_nodes,
+            fd_round_ms: shard.fd_round_ms,
+            fd_dead_rounds: shard.fd_dead_rounds,
+            steal_expire_rounds: shard.steal_expire_rounds,
+            checkpoint: None,
+            checkpoint_every_ms: shard.checkpoint_every_ms,
         }
     }
 }
@@ -171,6 +194,34 @@ impl ServeConfig {
         self
     }
 
+    pub fn with_max_nodes(mut self, max_nodes: usize) -> Self {
+        self.max_nodes = max_nodes;
+        self
+    }
+
+    /// Failure-detector cadence: a round every `round_ms` ms, dead
+    /// after `dead_rounds` silent rounds. Either value `0` disables it.
+    pub fn with_failure_detector(mut self, round_ms: u64, dead_rounds: u64) -> Self {
+        self.fd_round_ms = round_ms;
+        self.fd_dead_rounds = dead_rounds;
+        self
+    }
+
+    pub fn with_steal_expire_rounds(mut self, rounds: u64) -> Self {
+        self.steal_expire_rounds = rounds;
+        self
+    }
+
+    pub fn with_checkpoint<P: Into<std::path::PathBuf>>(mut self, path: P) -> Self {
+        self.checkpoint = Some(path.into());
+        self
+    }
+
+    pub fn with_checkpoint_every_ms(mut self, every_ms: u64) -> Self {
+        self.checkpoint_every_ms = every_ms;
+        self
+    }
+
     /// Whether this configuration selects the sharded service.
     pub fn sharded(&self) -> bool {
         self.nodes > 1 || self.fronts > 1
@@ -209,6 +260,23 @@ impl ServeConfig {
         if let Some(p) = self.node_pus {
             crate::ensure!(p >= 1, InvalidArg, "node_pus must be >= 1");
         }
+        crate::ensure!(
+            self.max_nodes == 0 || self.max_nodes >= self.nodes,
+            InvalidArg,
+            "max_nodes must be 0 (= nodes) or >= nodes"
+        );
+        crate::ensure!(
+            self.steal_expire_rounds >= 1,
+            InvalidArg,
+            "steal_expire_rounds must be >= 1"
+        );
+        if self.checkpoint.is_some() {
+            crate::ensure!(
+                self.checkpoint_every_ms >= 1,
+                InvalidArg,
+                "checkpoint_every_ms must be >= 1 when checkpointing"
+            );
+        }
         Ok(())
     }
 
@@ -238,6 +306,12 @@ impl ServeConfig {
             sched: self.sched_config(),
             admission: self.admission,
             comm: self.comm.clone(),
+            max_nodes: self.max_nodes,
+            fd_round_ms: self.fd_round_ms,
+            fd_dead_rounds: self.fd_dead_rounds,
+            steal_expire_rounds: self.steal_expire_rounds,
+            checkpoint: self.checkpoint.clone(),
+            checkpoint_every_ms: self.checkpoint_every_ms,
         }
     }
 
@@ -264,7 +338,7 @@ impl ServeConfig {
     /// serve banners print this).
     pub fn describe(&self) -> String {
         if self.sharded() {
-            format!(
+            let mut s = format!(
                 "sharded solve service: {} nodes x {} PUs, {} front(s), {} routing, \
                  {} shepherds/node, {} MiB operator cache/node, batching {:?}",
                 self.nodes,
@@ -274,7 +348,24 @@ impl ServeConfig {
                 self.nshepherds(),
                 self.cache_mb,
                 self.batching
-            )
+            );
+            if self.max_nodes > self.nodes {
+                s.push_str(&format!(", up to {} node slots", self.max_nodes));
+            }
+            if self.fd_round_ms > 0 && self.fd_dead_rounds > 0 {
+                s.push_str(&format!(
+                    ", failure detector {}ms x {} rounds",
+                    self.fd_round_ms, self.fd_dead_rounds
+                ));
+            }
+            if let Some(p) = &self.checkpoint {
+                s.push_str(&format!(
+                    ", checkpoint {} every {}ms",
+                    p.display(),
+                    self.checkpoint_every_ms
+                ));
+            }
+            s
         } else {
             format!(
                 "solve service: {} PUs, {} shepherds, {} MiB operator cache, batching {:?}",
@@ -318,6 +409,19 @@ impl ServiceEngine {
         match self {
             ServiceEngine::Single(s) => s.gauge(name),
             ServiceEngine::Sharded(s) => s.gauge(name),
+        }
+    }
+
+    /// Resubmit every job in the engine's parked-work checkpoint (see
+    /// [`ShardedScheduler::restore_checkpoint`]) and return how many
+    /// were restored. The single-node engine has no checkpoint: `0`.
+    /// The restored handles are detached — after a restart the original
+    /// requesters are gone, so the jobs simply run to completion and
+    /// land in the metrics.
+    pub fn restore_checkpoint(&self) -> Result<usize> {
+        match self {
+            ServiceEngine::Single(_) => Ok(0),
+            ServiceEngine::Sharded(s) => Ok(s.restore_checkpoint()?.len()),
         }
     }
 }
@@ -397,6 +501,47 @@ mod tests {
         assert!(ServeConfig::default().with_max_batch(0).validate().is_err());
         assert!(ServeConfig::default().with_shepherds(0).validate().is_err());
         assert!(ServeConfig::default().with_node_pus(0).build().is_err());
+        // fault-tolerance knobs have their own floor checks
+        assert!(ServeConfig::default()
+            .with_nodes(4)
+            .with_max_nodes(2)
+            .validate()
+            .is_err());
+        assert!(ServeConfig::default()
+            .with_steal_expire_rounds(0)
+            .validate()
+            .is_err());
+        assert!(ServeConfig::default()
+            .with_checkpoint("/tmp/x.ckpt")
+            .with_checkpoint_every_ms(0)
+            .validate()
+            .is_err());
+    }
+
+    #[test]
+    fn fault_tolerance_knobs_flow_into_the_shard_config() {
+        let cfg = ServeConfig::default()
+            .with_nodes(2)
+            .with_max_nodes(6)
+            .with_failure_detector(10, 3)
+            .with_steal_expire_rounds(4)
+            .with_checkpoint("/tmp/ghost_cfg_test.ckpt")
+            .with_checkpoint_every_ms(250);
+        cfg.validate().unwrap();
+        let shard = cfg.shard_config();
+        assert_eq!(shard.max_nodes, 6);
+        assert_eq!(shard.capacity(), 6);
+        assert_eq!((shard.fd_round_ms, shard.fd_dead_rounds), (10, 3));
+        assert_eq!(shard.steal_expire_rounds, 4);
+        assert_eq!(shard.checkpoint_every_ms, 250);
+        assert!(shard.checkpoint.is_some());
+        let banner = cfg.describe();
+        assert!(banner.contains("up to 6 node slots"));
+        assert!(banner.contains("failure detector 10ms x 3 rounds"));
+        assert!(banner.contains("checkpoint"));
+        // max_nodes 0 means "exactly nodes": capacity clamps up
+        let shard = ServeConfig::default().with_nodes(3).shard_config();
+        assert_eq!(shard.capacity(), 3);
     }
 
     #[test]

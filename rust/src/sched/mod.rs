@@ -53,6 +53,7 @@
 
 pub mod batch;
 pub mod cache;
+pub mod checkpoint;
 pub mod client;
 pub mod config;
 pub(crate) mod proto;
@@ -1783,13 +1784,14 @@ impl JobScheduler {
     /// local waiters resolve. Returns an empty vec when nothing is
     /// parked.
     ///
-    /// Deadlines travel as the *absolute* monotonic clock reading
+    /// Deadlines travel *only* as the absolute monotonic clock reading
     /// stamped at first submit (`deadline_at_us` — every simulated rank
     /// shares the process clock, see [`obs::epoch`]), so a migrated
-    /// job's `deadline_missed` accounting is exact: migration transit
-    /// no longer stretches the deadline. The relative `deadline_ms`
-    /// still travels (as the remaining time) purely as a descriptive
-    /// field; the receiving scheduler prefers the absolute stamp.
+    /// job's `deadline_missed` accounting is exact however many times
+    /// it moves: migration transit never stretches the deadline. The
+    /// relative `deadline_ms` is a client-request field and is cleared
+    /// on extraction — the old remaining-ms re-basing it carried was an
+    /// approximation the absolute stamp makes wrong.
     pub(crate) fn take_parked_bucket(&self) -> Vec<StolenJob> {
         // pick the deeper of the two deepest buckets (CG vs BlockCg);
         // peeking the depths and draining are separate lock scopes, so
@@ -1821,7 +1823,6 @@ impl JobScheduler {
     }
 
     fn take_cg_bucket(&self) -> Vec<StolenJob> {
-        let now = Instant::now();
         let drained = {
             let mut pend = self.inner.pending.lock().unwrap();
             let deepest = pend
@@ -1852,7 +1853,6 @@ impl JobScheduler {
                 spec.nthreads = p.nthreads;
                 spec.numanode = p.numanode;
                 spec.rhs = Some(p.b);
-                spec.deadline_ms = remaining_deadline_ms(p.deadline, now);
                 // exact inverse of the submit-side instant_at_us: the
                 // absolute deadline survives migration unchanged
                 spec.deadline_at_us = p.deadline.map(obs::micros_of);
@@ -1869,7 +1869,6 @@ impl JobScheduler {
     }
 
     fn take_block_bucket(&self) -> Vec<StolenJob> {
-        let now = Instant::now();
         let drained = {
             let mut pend = self.inner.pending_block.lock().unwrap();
             let deepest = pend
@@ -1901,7 +1900,6 @@ impl JobScheduler {
                 spec.nthreads = p.nthreads;
                 spec.numanode = p.numanode;
                 spec.seed = p.seed;
-                spec.deadline_ms = remaining_deadline_ms(p.deadline, now);
                 spec.deadline_at_us = p.deadline.map(obs::micros_of);
                 spec.migrated = true;
                 let mut trace = p.trace;
@@ -1935,13 +1933,6 @@ impl JobScheduler {
             self.inner.jobs.lock().unwrap().remove(&j.state.id);
         }
     }
-}
-
-/// Remaining milliseconds until `deadline`, measured at `now` (how a
-/// deadline travels in a stolen bucket — the codec has no absolute
-/// clock).
-fn remaining_deadline_ms(deadline: Option<Instant>, now: Instant) -> Option<u64> {
-    deadline.map(|d| d.saturating_duration_since(now).as_millis() as u64)
 }
 
 /// Sentinel error text installed in a migrated job's *local* state

@@ -50,6 +50,12 @@ use super::proto::get_spec;
 use super::SolveService;
 
 /// What a listener did over its lifetime.
+///
+/// Invariant: every counted request gets exactly one outcome —
+/// `requests == ok + failed + rejected` once [`NetServer::run`]
+/// returns, even when clients disconnect mid-job (the waiter records
+/// the outcome before attempting the response write, and a failed
+/// write drops the connection instead of the count).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct ListenSummary {
     pub connections: u64,
@@ -60,6 +66,14 @@ pub struct ListenSummary {
     pub failed: u64,
     /// Requests refused at the door (typed reject frames).
     pub rejected: u64,
+}
+
+impl ListenSummary {
+    /// Requests that received an outcome. Equal to
+    /// [`requests`](ListenSummary::requests) on a reconciled summary.
+    pub fn answered(&self) -> u64 {
+        self.ok + self.failed + self.rejected
+    }
 }
 
 #[derive(Default)]
@@ -275,12 +289,16 @@ fn handle_conn(
                 break;
             }
             K_CLIENT_REQUEST => {
-                counters.requests.fetch_add(1, Ordering::SeqCst);
                 let mut r = ByteReader::new(&env.payload);
                 let header = r.get_u64().and_then(|v| r.get_u64().map(|id| (v, id)));
                 let Ok((v, client_id)) = header else {
                     break; // no id to answer to: protocol violation
                 };
+                // count only after the header parses: a request with no
+                // readable id can never get an outcome frame, and
+                // counting it would leave the summary short of its
+                // requests == ok + failed + rejected reconciliation
+                counters.requests.fetch_add(1, Ordering::SeqCst);
                 // version gate first: a future schema may encode specs
                 // in ways this build cannot parse, so refuse before
                 // parsing — naming both versions
@@ -313,16 +331,24 @@ fn handle_conn(
                         let w = std::thread::Builder::new()
                             .name("ghost-net-waiter".into())
                             .spawn(move || {
+                                // record the outcome BEFORE the write:
+                                // a client that disconnected mid-job
+                                // must not leave the summary short
                                 let res = handle.wait();
                                 if res.is_ok() {
                                     counters.ok.fetch_add(1, Ordering::SeqCst);
                                 } else {
                                     counters.failed.fetch_add(1, Ordering::SeqCst);
                                 }
-                                let _ = write_frame(
-                                    &mut *writer.lock().unwrap(),
-                                    &encode_response(client_id, &res),
-                                );
+                                let mut w = writer.lock().unwrap();
+                                if write_frame(&mut *w, &encode_response(client_id, &res))
+                                    .is_err()
+                                {
+                                    // the peer is gone: drop the whole
+                                    // connection so the reader stops
+                                    // accepting work it can never answer
+                                    let _ = w.shutdown(Shutdown::Both);
+                                }
                             })
                             .expect("spawn net waiter");
                         waiters.push(w);
@@ -430,6 +456,7 @@ mod tests {
         assert_eq!(summary.connections, 1);
         assert_eq!(summary.requests, 2);
         assert_eq!((summary.ok, summary.failed, summary.rejected), (1, 0, 1));
+        assert_eq!(summary.answered(), summary.requests, "summary reconciles");
         assert_eq!(svc.shutdown(), 0, "no stranded jobs after the listener stopped");
     }
 }

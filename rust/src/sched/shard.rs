@@ -30,8 +30,15 @@
 //!   markedly lighter, the job is handed off to the least-loaded node
 //!   (work stealing — the handoff is one-off, the affinity table keeps
 //!   pointing at the home node).
-//! - **Hash**: stateless `key % nodes` placement.
+//! - **Hash**: stateless rendezvous placement over the live node set.
 //! - **Load**: always the node with the fewest outstanding jobs.
+//!
+//! All placement is **consistent-hash style** (rendezvous / highest-
+//! random-weight over the *live* node set): every (key, node) pair has
+//! a deterministic weight and a key lives on its heaviest live node.
+//! When a node joins or leaves, only the keys whose heaviest node
+//! changed move — a minimal slice of the warm-cache key space — instead
+//! of the whole-table reshuffle a `key % nodes` layout would force.
 //!
 //! **Deadline-aware routing:** each node's load account tracks how many
 //! of its outstanding jobs carry deadlines
@@ -116,7 +123,7 @@ pub enum RoutePolicy {
     /// Matrix-fingerprint affinity (same matrix → same node → warm
     /// operator cache) with work-stealing handoff under overload.
     Affinity,
-    /// Stateless `key % nodes`.
+    /// Stateless rendezvous placement over the live node set.
     Hash,
     /// Least outstanding jobs.
     Load,
@@ -177,6 +184,27 @@ pub struct ShardConfig {
     pub admission: AdmissionControl,
     /// Fabric model the envelopes travel through.
     pub comm: CommConfig,
+    /// Rank capacity for runtime joins: the fabric reserves room for
+    /// this many nodes ([`ShardedScheduler::join_node`] brings the
+    /// spares online). `0` means `nodes` — no headroom.
+    pub max_nodes: usize,
+    /// Failure-detector round length in milliseconds. Each round the
+    /// monitor probes every live node and advances the fabric round
+    /// counter (which also expires lost steal slots).
+    pub fd_round_ms: u64,
+    /// Probe rounds a node may stay silent before it is declared dead
+    /// and evacuated. `0` disables the failure detector entirely.
+    pub fd_dead_rounds: u64,
+    /// Fabric rounds after which an unanswered bucket-steal request is
+    /// considered lost and the node's steal slot re-arms (the yield
+    /// envelope was dropped or its sender died mid-steal).
+    pub steal_expire_rounds: u64,
+    /// Parked-work checkpoint file ([`super::checkpoint`]): every
+    /// outstanding job is periodically snapshotted so a front restart
+    /// loses nothing. `None` disables checkpointing.
+    pub checkpoint: Option<std::path::PathBuf>,
+    /// Checkpoint period in milliseconds.
+    pub checkpoint_every_ms: u64,
 }
 
 impl Default for ShardConfig {
@@ -191,7 +219,21 @@ impl Default for ShardConfig {
             sched: SchedConfig::default(),
             admission: AdmissionControl::default(),
             comm: CommConfig::default(),
+            max_nodes: 0,
+            fd_round_ms: 50,
+            fd_dead_rounds: 6,
+            steal_expire_rounds: 8,
+            checkpoint: None,
+            checkpoint_every_ms: 500,
         }
+    }
+}
+
+impl ShardConfig {
+    /// Node slots the fabric is built with (initial nodes + join
+    /// headroom).
+    pub fn capacity(&self) -> usize {
+        self.max_nodes.max(self.nodes)
     }
 }
 
@@ -203,9 +245,16 @@ pub struct NodeStats {
     /// Jobs that landed here via work-stealing handoff (their affinity
     /// home was overloaded).
     pub handoffs: u64,
-    /// Jobs routed but not yet completed.
+    /// Fresh client jobs routed but not yet completed.
     pub outstanding: usize,
-    /// Outstanding-job watermark.
+    /// Outstanding *migrated* re-parks (stolen-bucket re-routes,
+    /// evacuations off dead nodes, checkpoint restores). Kept apart
+    /// from `outstanding` because migrated jobs were already admitted
+    /// once: they weigh on routing but never on the admission
+    /// watermark, so an evacuation burst cannot wedge a healthy node
+    /// into refusing fresh clients.
+    pub migrated_outstanding: usize,
+    /// Outstanding-job watermark (fresh + migrated).
     pub peak_outstanding: usize,
     /// How many outstanding jobs carry deadlines — the node's EDF
     /// pressure. Subtracted from the steal threshold (a node busy with
@@ -220,6 +269,31 @@ pub struct NodeStats {
     /// (monotone counters keep their maximum seen — envelopes from
     /// concurrent node waiters may arrive out of order).
     pub sched: SchedStats,
+    /// Whether the node is routable. `false` for a join slot not yet
+    /// online, a retired node, or one the failure detector declared
+    /// dead; placement and admission only ever see live nodes.
+    pub live: bool,
+}
+
+/// Routing weight of a node's backlog: fresh and migrated work queue
+/// alike on the node, only admission distinguishes them.
+fn queue_len(l: &NodeStats) -> usize {
+    l.outstanding + l.migrated_outstanding
+}
+
+/// Rendezvous (highest-random-weight) placement: every (key, node)
+/// pair has a deterministic weight and the key lives on the heaviest
+/// *live* node. A node joining or leaving moves only the keys whose
+/// heaviest node changed — ~1/n of the key space — instead of the
+/// whole-table reshuffle modulo placement would force. `None` iff no
+/// node is live.
+fn rendezvous(loads: &[NodeStats], rkey: u64) -> Option<usize> {
+    loads
+        .iter()
+        .enumerate()
+        .filter(|(_, l)| l.live)
+        .max_by_key(|&(i, _)| (fnv(&[rkey, 0x9E37_79B9_7F4A_7C15 ^ (i as u64 + 1)]), i))
+        .map(|(i, _)| i)
 }
 
 /// Per-front intake account: how much of the request stream entered
@@ -264,6 +338,23 @@ const K_YIELD: u8 = 6;
 /// Front → node: a re-routed stolen bucket — submitted as one batch so
 /// the jobs re-park together and re-coalesce.
 const K_BATCH: u8 = 7;
+/// Front → node: first-contact probe to a node brought online by a
+/// runtime join (solicits the pong that marks it alive).
+const K_JOIN: u8 = 8;
+/// Front → node: periodic liveness probe from the failure detector.
+const K_PING: u8 = 9;
+/// Node → front: probe answer, piggybacking a node-stats snapshot and
+/// the node's metric registry (liveness doubles as telemetry pull).
+const K_PONG: u8 = 10;
+/// Front → node: retire immediately. The node resolves local state and
+/// answers *nothing* — this is also the chaos crash injection: a
+/// killed node goes silent exactly like a crashed one, and the failure
+/// detector must find out on its own.
+const K_LEAVE: u8 = 11;
+/// Forged close notice on a dead node's result stream, sent by the
+/// front *as* the dead node, so every collector blocked on that stream
+/// exits (the node itself can no longer say goodbye).
+const K_DEAD: u8 = 12;
 
 fn encode_submit(job_id: u64, spec: &JobSpec) -> Vec<u8> {
     let mut w = ByteWriter::new();
@@ -382,6 +473,25 @@ fn decode_batch(payload: &[u8]) -> Result<Vec<(u64, JobSpec)>> {
     Ok(jobs)
 }
 
+fn encode_kind_only(kind: u8) -> Vec<u8> {
+    Envelope::new(kind, Vec::new()).encode()
+}
+
+fn encode_pong(stats: &SchedStats, metrics: &[(String, u8, u64)]) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    put_sched_stats(&mut w, stats);
+    put_metric_set(&mut w, metrics);
+    Envelope::new(K_PONG, w.into_bytes()).encode()
+}
+
+fn decode_pong(payload: &[u8]) -> Result<(SchedStats, MetricSet)> {
+    let mut r = ByteReader::new(payload);
+    let stats = get_sched_stats(&mut r)?;
+    let metrics = get_metric_set(&mut r)?;
+    r.finish()?;
+    Ok((stats, metrics))
+}
+
 // ---------------------------------------------------------------------------
 // routing front-end
 // ---------------------------------------------------------------------------
@@ -414,22 +524,31 @@ fn named_hash(name: &str, n: usize) -> u64 {
 }
 
 /// One routed-but-unanswered job: its waiter state, whether it charged
-/// a node's EDF pressure, and the front whose intake account owns it.
+/// a node's EDF pressure, the front whose intake account owns it, the
+/// node currently responsible for answering it, whether it charged the
+/// migrated account there, and the self-contained spec it can be
+/// re-submitted from (evacuation off a dead node, checkpointing).
 struct FrontJob {
     state: Arc<JobState>,
     deadline: bool,
     front: usize,
+    node: usize,
+    migrated: bool,
+    spec: JobSpec,
 }
 
 /// The routing state every front rank shares: one affinity table, one
 /// set of load accounts, one job map — a request routes identically
 /// whichever front it enters through.
 struct Front {
+    /// Node *slots* (initial nodes + join headroom); the live subset is
+    /// whatever `loads[i].live` says right now.
     nodes: usize,
     fronts: usize,
     policy: RoutePolicy,
     steal_threshold: usize,
     max_yield_buckets: usize,
+    steal_expire_rounds: u64,
     admission: AdmissionControl,
     next_id: AtomicU64,
     /// Jobs routed but not yet answered; paired with `idle` for drain.
@@ -444,8 +563,12 @@ struct Front {
     /// from concurrent node waiters can arrive out of order).
     metrics: Mutex<Vec<HashMap<String, (u8, u64)>>>,
     /// One in-flight bucket-steal request per node (locked after
-    /// `loads` wherever both are held).
-    steal_inflight: Mutex<Vec<bool>>,
+    /// `loads` wherever both are held). `0` = the slot is free; else
+    /// `armed_round + 1` — the fabric round the request was sent on,
+    /// so a lost yield (dropped envelope, home died mid-steal) expires
+    /// after `steal_expire_rounds` instead of wedging the node's slot
+    /// forever.
+    steal_inflight: Mutex<Vec<u64>>,
     /// Per-front intake accounts (index = front rank).
     counters: Mutex<Vec<FrontStats>>,
     /// Write-locked by shutdown so no submit — and no stolen-bucket
@@ -454,6 +577,18 @@ struct Front {
     gate: RwLock<bool>,
     /// Sum of node-reported shutdown cancellations.
     ack_cancelled: AtomicU64,
+    /// Fabric round counter, advanced by the monitor thread every
+    /// `fd_round_ms`. Clocks both the failure detector and steal-slot
+    /// expiry.
+    round: AtomicU64,
+    /// Last fabric round each node was heard from (pong or any result
+    /// traffic). Judged against `round` by the failure detector.
+    last_pong: Mutex<Vec<u64>>,
+    /// Lifecycle counters surfaced in the metrics dump.
+    node_joined: AtomicU64,
+    node_dead: AtomicU64,
+    evacuated: AtomicU64,
+    checkpointed: AtomicU64,
 }
 
 impl Front {
@@ -462,27 +597,44 @@ impl Front {
     /// problem, not an admission problem) or the deadline is beneath
     /// the floor.
     fn admit(&self, deadline_ms: Option<u64>) -> std::result::Result<(), SubmitError> {
+        // only live nodes count, and only their *fresh* outstanding
+        // jobs: migrated re-parks (evacuations, stolen buckets) were
+        // already admitted once and must not eat the watermark fresh
+        // clients are admitted against
         let min_outstanding = {
             let loads = self.loads.lock().unwrap();
-            loads.iter().map(|l| l.outstanding).min().unwrap_or(0)
+            loads
+                .iter()
+                .filter(|l| l.live)
+                .map(|l| l.outstanding)
+                .min()
+                .unwrap_or(0)
         };
         self.admission.check(min_outstanding, deadline_ms)
     }
 
-    /// Pick a node for `rkey` and charge the load account. Returns
-    /// (node, was-a-handoff, steal request as (node, bucket budget)).
-    fn route(&self, rkey: u64, has_deadline: bool) -> (usize, bool, Option<(usize, u64)>) {
+    /// Pick a *live* node for `rkey` and charge the load account.
+    /// `migrated` jobs charge the migrated account (see
+    /// [`NodeStats::migrated_outstanding`]). Returns (node,
+    /// was-a-handoff, steal request as (node, bucket budget)).
+    fn route(
+        &self,
+        rkey: u64,
+        has_deadline: bool,
+        migrated: bool,
+    ) -> (usize, bool, Option<(usize, u64)>) {
         let mut loads = self.loads.lock().unwrap();
         let argmin = |loads: &[NodeStats]| -> usize {
             loads
                 .iter()
                 .enumerate()
-                .min_by_key(|&(_, l)| l.outstanding)
+                .filter(|(_, l)| l.live)
+                .min_by_key(|&(_, l)| queue_len(l))
                 .map(|(i, _)| i)
                 .unwrap_or(0)
         };
         let (node, handoff, steal_from) = match self.policy {
-            RoutePolicy::Hash => ((rkey % self.nodes as u64) as usize, false, None),
+            RoutePolicy::Hash => (rendezvous(&loads, rkey).unwrap_or(0), false, None),
             RoutePolicy::Load => (argmin(&loads), false, None),
             RoutePolicy::Affinity => {
                 let mut table = self.table.lock().unwrap();
@@ -499,10 +651,13 @@ impl Front {
                         .steal_threshold
                         .saturating_sub(loads[home].outstanding_deadlines)
                         .max(1);
-                    loads[home].outstanding >= eff
-                        && loads[alt].outstanding + 2 <= loads[home].outstanding
+                    queue_len(&loads[home]) >= eff
+                        && queue_len(&loads[alt]) + 2 <= queue_len(&loads[home])
                 };
-                match table.get(&rkey).copied() {
+                // a sticky entry pointing at a dead node is stale: the
+                // key re-places on its rendezvous home among the living
+                let sticky = table.get(&rkey).copied().filter(|&h| loads[h].live);
+                match sticky {
                     // sticky: the warm cache lives on the home node
                     Some(home) if !overloaded(home) => (home, false, None),
                     // work-stealing handoff: one-off — the table keeps
@@ -515,10 +670,18 @@ impl Front {
                     Some(home) => {
                         let steal = {
                             let mut infl = self.steal_inflight.lock().unwrap();
-                            if infl[home] {
+                            let round = self.round.load(Ordering::SeqCst);
+                            // an armed slot whose yield never came back
+                            // (dropped envelope, home died mid-steal)
+                            // expires after steal_expire_rounds — the
+                            // node must stay stealable-from forever
+                            let armed = infl[home] != 0
+                                && round.saturating_sub(infl[home] - 1)
+                                    < self.steal_expire_rounds.max(1);
+                            if armed {
                                 None
                             } else {
-                                infl[home] = true;
+                                infl[home] = round + 1;
                                 let budget = (1 + loads[home].outstanding_deadlines
                                     / self.steal_threshold.max(1))
                                 .min(self.max_yield_buckets.max(1))
@@ -528,13 +691,13 @@ impl Front {
                         };
                         (alt, true, steal)
                     }
-                    // first sighting: hash-based fallback placement,
-                    // diverted to the least-loaded node when the hash
-                    // home is already backed up — and the divert
-                    // becomes the sticky home (this is what makes the
-                    // table more than `key % nodes`)
+                    // first sighting: rendezvous fallback placement,
+                    // diverted to the least-loaded node when the
+                    // rendezvous home is already backed up — and the
+                    // divert becomes the sticky home (this is what
+                    // makes the table more than pure rendezvous)
                     None => {
-                        let hash_home = (rkey % self.nodes as u64) as usize;
+                        let hash_home = rendezvous(&loads, rkey).unwrap_or(alt);
                         let home = if overloaded(hash_home) { alt } else { hash_home };
                         table.insert(rkey, home);
                         (home, false, None)
@@ -547,8 +710,12 @@ impl Front {
         if handoff {
             l.handoffs += 1;
         }
-        l.outstanding += 1;
-        l.peak_outstanding = l.peak_outstanding.max(l.outstanding);
+        if migrated {
+            l.migrated_outstanding += 1;
+        } else {
+            l.outstanding += 1;
+        }
+        l.peak_outstanding = l.peak_outstanding.max(queue_len(l));
         if has_deadline {
             l.outstanding_deadlines += 1;
         }
@@ -583,31 +750,99 @@ impl Front {
             }
             return;
         }
-        let target = {
+        // how many of the bucket's jobs had charged src's fresh vs
+        // migrated account (per-job, from the job map — a job may be on
+        // its second migration); the extracted specs carry only the
+        // absolute deadline stamp, so EDF pressure counts that
+        let (mut fresh, mut migr) = (0usize, 0usize);
+        {
+            let jmap = self.jobs.lock().unwrap();
+            for (id, _) in jobs.iter() {
+                match jmap.get(id) {
+                    Some(j) if j.migrated => migr += 1,
+                    Some(_) => fresh += 1,
+                    None => {}
+                }
+            }
+        }
+        let k = jobs.len();
+        let dls = jobs
+            .iter()
+            .filter(|(_, s)| s.deadline_at_us.is_some())
+            .count();
+        {
             let mut loads = self.loads.lock().unwrap();
-            let target = loads
-                .iter()
-                .enumerate()
-                .filter(|&(i, _)| i != src)
-                .min_by_key(|&(_, l)| l.outstanding)
-                .map(|(i, _)| i)
-                .unwrap_or(src);
-            let k = jobs.len();
-            let dls = jobs
-                .iter()
-                .filter(|(_, s)| s.deadline_ms.is_some())
-                .count();
-            loads[src].outstanding = loads[src].outstanding.saturating_sub(k);
+            loads[src].outstanding = loads[src].outstanding.saturating_sub(fresh);
+            loads[src].migrated_outstanding =
+                loads[src].migrated_outstanding.saturating_sub(migr);
             loads[src].outstanding_deadlines =
                 loads[src].outstanding_deadlines.saturating_sub(dls);
+        }
+        loop {
+            let picked = {
+                let mut loads = self.loads.lock().unwrap();
+                let t = loads
+                    .iter()
+                    .enumerate()
+                    .filter(|&(i, l)| i != src && l.live)
+                    .min_by_key(|&(_, l)| queue_len(l))
+                    .map(|(i, _)| i)
+                    .or_else(|| {
+                        // only the source is still alive: it keeps its
+                        // own bucket (it re-parks and re-coalesces)
+                        loads.iter().position(|l| l.live)
+                    });
+                if let Some(t) = t {
+                    let l = &mut loads[t];
+                    // migrated re-parks never charge the fresh account
+                    // the admission watermark reads — a steal burst
+                    // must not wedge the target into refusing fresh
+                    // clients
+                    l.migrated_outstanding += k;
+                    l.outstanding_deadlines += dls;
+                    l.handoffs += k as u64;
+                    l.peak_outstanding = l.peak_outstanding.max(queue_len(l));
+                }
+                t
+            };
+            let Some(target) = picked else {
+                // the whole fabric died under the bucket
+                for (id, _) in jobs.iter() {
+                    self.complete(
+                        src,
+                        *id,
+                        Err(GhostError::Comm(
+                            "stolen bucket re-route found no live node".into(),
+                        )),
+                    );
+                }
+                return;
+            };
+            {
+                let mut jmap = self.jobs.lock().unwrap();
+                for (id, s) in jobs.iter() {
+                    if let Some(j) = jmap.get_mut(id) {
+                        j.node = target;
+                        j.migrated = true;
+                        j.spec = s.clone();
+                    }
+                }
+            }
+            // the target may have died between the pick and the map
+            // update. Evacuation scans the job map after marking the
+            // node dead, so a target still live *here* — after our map
+            // update — is guaranteed to either answer or be evacuated;
+            // a target that died re-picks.
+            if self.loads.lock().unwrap()[target].live {
+                let _ = comm.send_bytes(self.fronts + target, TAG_REQ, encode_batch(&jobs));
+                break;
+            }
+            let mut loads = self.loads.lock().unwrap();
             let l = &mut loads[target];
-            l.outstanding += k;
-            l.outstanding_deadlines += dls;
-            l.handoffs += k as u64;
-            l.peak_outstanding = l.peak_outstanding.max(l.outstanding);
-            target
-        };
-        let _ = comm.send_bytes(self.fronts + target, TAG_REQ, encode_batch(&jobs));
+            l.migrated_outstanding = l.migrated_outstanding.saturating_sub(k);
+            l.outstanding_deadlines = l.outstanding_deadlines.saturating_sub(dls);
+            l.handoffs = l.handoffs.saturating_sub(k as u64);
+        }
         drop(gate);
     }
 
@@ -654,23 +889,32 @@ impl Front {
     /// the job leaves the map only afterwards (before drain() can
     /// observe it empty), so neither wait()-then-stats() nor
     /// drain()-then-stats() undercounts.
-    fn complete(&self, node: usize, job_id: u64, res: Result<JobReport>) {
+    fn complete(&self, _node: usize, job_id: u64, res: Result<JobReport>) {
         let entry = self
             .jobs
             .lock()
             .unwrap()
             .get(&job_id)
-            .map(|j| (j.state.clone(), j.deadline, j.front));
-        {
+            .map(|j| (j.state.clone(), j.deadline, j.front, j.node, j.migrated));
+        // only an entry still in the map uncharges a load account: a
+        // duplicate answer (the old node raced its own evacuation) must
+        // be a no-op, and the job's *current* node is the account that
+        // was charged — a migrated job answers from somewhere else than
+        // it was first routed
+        if let Some((_, deadline, _, jnode, migrated)) = &entry {
             let mut loads = self.loads.lock().unwrap();
-            loads[node].outstanding = loads[node].outstanding.saturating_sub(1);
-            if matches!(entry, Some((_, true, _))) {
-                loads[node].outstanding_deadlines =
-                    loads[node].outstanding_deadlines.saturating_sub(1);
+            let l = &mut loads[*jnode];
+            if *migrated {
+                l.migrated_outstanding = l.migrated_outstanding.saturating_sub(1);
+            } else {
+                l.outstanding = l.outstanding.saturating_sub(1);
+            }
+            if *deadline {
+                l.outstanding_deadlines = l.outstanding_deadlines.saturating_sub(1);
             }
         }
         let ok = res.is_ok();
-        if let Some((state, _, fidx)) = entry {
+        if let Some((state, _, fidx, _, _)) = entry {
             state.fulfill_then(res, || {
                 let mut c = self.counters.lock().unwrap();
                 let c = &mut c[fidx];
@@ -684,6 +928,136 @@ impl Front {
         self.jobs.lock().unwrap().remove(&job_id);
         self.idle.notify_all();
     }
+
+    /// Snapshot every outstanding job — parked and in-flight alike —
+    /// to the checkpoint file ([`super::checkpoint`]). The snapshot is
+    /// taken in job-id order so identical fabric states write identical
+    /// files.
+    fn write_checkpoint(&self, path: &std::path::Path) -> Result<usize> {
+        let mut jobs: Vec<(u64, JobSpec)> = {
+            let jmap = self.jobs.lock().unwrap();
+            jmap.iter().map(|(&id, j)| (id, j.spec.clone())).collect()
+        };
+        jobs.sort_by_key(|(id, _)| *id);
+        super::checkpoint::save(path, &jobs)?;
+        self.checkpointed
+            .fetch_add(jobs.len() as u64, Ordering::Relaxed);
+        Ok(jobs.len())
+    }
+
+    /// Retire `node` — dead or leaving — and re-route everything it
+    /// still owes: every outstanding job of the node is rebuilt as a
+    /// self-contained request envelope from its stored spec and
+    /// re-submitted to a live node, so every [`JobHandle`] still
+    /// resolves, bitwise-equal to a quiet run (solvers are
+    /// deterministic in their seeds; placement is unobservable in the
+    /// numbers). Returns how many jobs were evacuated, or `None` if
+    /// the node was already retired or the fabric is shutting down
+    /// (shutdown fails stranded jobs itself).
+    fn evacuate(&self, node: usize, comm: &Comm) -> Option<usize> {
+        {
+            let mut loads = self.loads.lock().unwrap();
+            if !loads[node].live {
+                return None;
+            }
+            loads[node].live = false;
+            // the node answers nothing anymore: its open charges move
+            // with the jobs below
+            loads[node].outstanding = 0;
+            loads[node].migrated_outstanding = 0;
+            loads[node].outstanding_deadlines = 0;
+        }
+        // sticky keys re-place on their rendezvous home among the
+        // living (only this node's slice of the key space moves)
+        self.table.lock().unwrap().retain(|_, &mut n| n != node);
+        // a steal the node never answered must not outlive it
+        self.steal_inflight.lock().unwrap()[node] = 0;
+        let gate = self.gate.read().unwrap();
+        if *gate {
+            return None;
+        }
+        let mut owed: Vec<(u64, JobSpec)> = {
+            let jmap = self.jobs.lock().unwrap();
+            jmap.iter()
+                .filter(|(_, j)| j.node == node)
+                .map(|(&id, j)| (id, j.spec.clone()))
+                .collect()
+        };
+        owed.sort_by_key(|(id, _)| *id);
+        let mut moved = 0usize;
+        for (id, mut spec) in owed {
+            spec.migrated = true;
+            spec.trace.stamp(Stage::Evacuate);
+            let has_deadline = spec.deadline_at_us.is_some();
+            let target = {
+                let mut loads = self.loads.lock().unwrap();
+                let target = loads
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, l)| l.live)
+                    .min_by_key(|&(_, l)| queue_len(l))
+                    .map(|(i, _)| i);
+                match target {
+                    Some(t) => {
+                        let l = &mut loads[t];
+                        l.migrated_outstanding += 1;
+                        l.handoffs += 1;
+                        if has_deadline {
+                            l.outstanding_deadlines += 1;
+                        }
+                        l.peak_outstanding = l.peak_outstanding.max(queue_len(l));
+                        t
+                    }
+                    None => {
+                        // the last node died: nothing can answer this
+                        // job — fail the handle rather than strand it
+                        drop(loads);
+                        self.complete(
+                            node,
+                            id,
+                            Err(GhostError::Comm(
+                                "job evacuated off a dead node with no live node left"
+                                    .into(),
+                            )),
+                        );
+                        continue;
+                    }
+                }
+            };
+            {
+                let mut jmap = self.jobs.lock().unwrap();
+                match jmap.get_mut(&id) {
+                    Some(j) => {
+                        j.node = target;
+                        j.migrated = true;
+                        j.spec = spec.clone();
+                    }
+                    None => {
+                        // answered while we were evacuating: undo the
+                        // charge, skip the resubmit
+                        let mut loads = self.loads.lock().unwrap();
+                        let l = &mut loads[target];
+                        l.migrated_outstanding = l.migrated_outstanding.saturating_sub(1);
+                        if has_deadline {
+                            l.outstanding_deadlines =
+                                l.outstanding_deadlines.saturating_sub(1);
+                        }
+                        continue;
+                    }
+                }
+            }
+            let _ = comm.send_bytes(self.fronts + target, TAG_REQ, encode_submit(id, &spec));
+            moved += 1;
+        }
+        drop(gate);
+        self.evacuated.fetch_add(moved as u64, Ordering::Relaxed);
+        Some(moved)
+    }
+
+    /// Live-node count right now.
+    fn live_count(&self) -> usize {
+        self.loads.lock().unwrap().iter().filter(|l| l.live).count()
+    }
 }
 
 /// The sharded solve service. Dropping it shuts the fabric down.
@@ -691,74 +1065,270 @@ pub struct ShardedScheduler {
     /// One fabric handle per front rank (index = front).
     comms: Vec<Comm>,
     front: Arc<Front>,
+    /// The fabric itself, kept so runtime joins can spawn node and
+    /// collector threads on the spare ranks.
+    world: World,
+    /// Per-node scheduler config handed to every node — including ones
+    /// joined at runtime.
+    node_cfg: SchedConfig,
+    pus_per_node: usize,
+    /// Next never-used node slot (slots are not reused: a dead rank's
+    /// mailboxes may hold stale envelopes).
+    next_slot: Mutex<usize>,
     /// Round-robin front assignment for un-pinned submits.
     rr: AtomicU64,
+    /// The node service threads, joined *first* at shutdown: once they
+    /// are gone every result stream is complete and a trailing close
+    /// can be forged for collectors of nodes that died unacked.
+    node_threads: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    /// Collector, monitor, and checkpointer threads.
     threads: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    /// Parked-work checkpoint file, if configured.
+    checkpoint: Option<std::path::PathBuf>,
 }
 
 impl ShardedScheduler {
     pub fn new(cfg: ShardConfig) -> Result<Self> {
         crate::ensure!(cfg.nodes >= 1, InvalidArg, "sharding needs >= 1 node");
         let fronts = cfg.fronts.max(1);
-        let world = World::new(fronts + cfg.nodes, cfg.comm.clone());
+        let capacity = cfg.capacity();
+        let world = World::new(fronts + capacity, cfg.comm.clone());
         let front = Arc::new(Front {
-            nodes: cfg.nodes,
+            nodes: capacity,
             fronts,
             policy: cfg.policy,
             steal_threshold: cfg.steal_threshold,
             max_yield_buckets: cfg.max_yield_buckets.max(1),
+            steal_expire_rounds: cfg.steal_expire_rounds,
             admission: cfg.admission,
             next_id: AtomicU64::new(0),
             jobs: Mutex::new(HashMap::new()),
             idle: Condvar::new(),
             table: Mutex::new(HashMap::new()),
-            loads: Mutex::new(vec![NodeStats::default(); cfg.nodes]),
-            metrics: Mutex::new(vec![HashMap::new(); cfg.nodes]),
-            steal_inflight: Mutex::new(vec![false; cfg.nodes]),
+            loads: Mutex::new(
+                (0..capacity)
+                    .map(|i| NodeStats {
+                        live: i < cfg.nodes,
+                        ..NodeStats::default()
+                    })
+                    .collect(),
+            ),
+            metrics: Mutex::new(vec![HashMap::new(); capacity]),
+            steal_inflight: Mutex::new(vec![0; capacity]),
             counters: Mutex::new(vec![FrontStats::default(); fronts]),
             gate: RwLock::new(false),
             ack_cancelled: AtomicU64::new(0),
+            round: AtomicU64::new(0),
+            last_pong: Mutex::new(vec![0; capacity]),
+            node_joined: AtomicU64::new(0),
+            node_dead: AtomicU64::new(0),
+            evacuated: AtomicU64::new(0),
+            checkpointed: AtomicU64::new(0),
         });
         // the fronts own admission; a node must never bounce a job the
         // front already admitted
         let mut scfg = cfg.sched.clone();
         scfg.admission = AdmissionControl::default();
-        let mut threads = Vec::with_capacity(cfg.nodes * (1 + fronts));
+        let pus = cfg.pus_per_node.max(1);
+        let mut node_threads = Vec::with_capacity(cfg.nodes);
+        let mut threads = Vec::with_capacity(cfg.nodes * fronts + 2);
         for i in 0..cfg.nodes {
-            let comm = world.rank(fronts + i);
-            let node_cfg = scfg.clone();
-            let pus = cfg.pus_per_node.max(1);
+            spawn_node(&world, &front, &scfg, pus, i, &mut node_threads, &mut threads);
+        }
+        // the failure detector: one monitor advancing the fabric round
+        // clock, probing every live node, and evacuating the silent
+        if cfg.fd_round_ms > 0 && cfg.fd_dead_rounds > 0 {
+            let all_comms: Vec<Comm> = (0..fronts + capacity).map(|r| world.rank(r)).collect();
+            let fr = front.clone();
+            let (round_ms, dead_rounds) = (cfg.fd_round_ms, cfg.fd_dead_rounds);
             threads.push(
                 std::thread::Builder::new()
-                    .name(format!("ghost-shard-node-{i}"))
-                    .spawn(move || node_service(comm, fronts, node_cfg, pus))
-                    .expect("spawn shard node"),
+                    .name("ghost-shard-monitor".into())
+                    .spawn(move || monitor(all_comms, fr, round_ms, dead_rounds))
+                    .expect("spawn shard monitor"),
             );
-            for f in 0..fronts {
-                let comm = world.rank(f);
+        }
+        // periodic parked-work checkpointing
+        if let Some(path) = cfg.checkpoint.clone() {
+            if cfg.checkpoint_every_ms > 0 {
                 let fr = front.clone();
+                let every = cfg.checkpoint_every_ms;
                 threads.push(
                     std::thread::Builder::new()
-                        .name(format!("ghost-shard-collect-{f}-{i}"))
-                        .spawn(move || collector(comm, fr, i, f))
-                        .expect("spawn shard collector"),
+                        .name("ghost-shard-ckpt".into())
+                        .spawn(move || checkpointer(fr, path, every))
+                        .expect("spawn shard checkpointer"),
                 );
             }
         }
         Ok(ShardedScheduler {
             comms: (0..fronts).map(|f| world.rank(f)).collect(),
             front,
+            world,
+            node_cfg: scfg,
+            pus_per_node: pus,
+            next_slot: Mutex::new(cfg.nodes),
             rr: AtomicU64::new(0),
+            node_threads: Mutex::new(node_threads),
             threads: Mutex::new(threads),
+            checkpoint: cfg.checkpoint,
         })
     }
 
+    /// Live nodes right now (runtime joins and deaths move this).
     pub fn nodes(&self) -> usize {
+        self.front.live_count()
+    }
+
+    /// Node slots the fabric was built with (initial + join headroom).
+    pub fn capacity(&self) -> usize {
         self.front.nodes
     }
 
     pub fn fronts(&self) -> usize {
         self.front.fronts
+    }
+
+    /// Bring one more node online on a spare rank: a fresh scheduler +
+    /// operator cache, its own collectors, live for routing as soon as
+    /// this returns. Rendezvous placement guarantees only the keys
+    /// whose heaviest node changed re-home onto it (~1/n of the key
+    /// space); every other key keeps its warm cache. Fails when every
+    /// slot the fabric was built with (`max_nodes`) is in use.
+    pub fn join_node(&self) -> Result<usize> {
+        let gate = self.front.gate.read().unwrap();
+        crate::ensure!(!*gate, InvalidArg, "fabric is shut down");
+        let slot = {
+            let mut next = self.next_slot.lock().unwrap();
+            crate::ensure!(
+                *next < self.front.nodes,
+                InvalidArg,
+                "no spare node slot (capacity {}, raise max_nodes)",
+                self.front.nodes
+            );
+            let s = *next;
+            *next += 1;
+            s
+        };
+        {
+            let mut node_threads = self.node_threads.lock().unwrap();
+            let mut threads = self.threads.lock().unwrap();
+            spawn_node(
+                &self.world,
+                &self.front,
+                &self.node_cfg,
+                self.pus_per_node,
+                slot,
+                &mut node_threads,
+                &mut threads,
+            );
+        }
+        // grace: the node is "heard" as of now, then marked routable
+        self.front.last_pong.lock().unwrap()[slot] =
+            self.front.round.load(Ordering::SeqCst);
+        self.front.loads.lock().unwrap()[slot].live = true;
+        // drop sticky entries whose rendezvous owner moved to the new
+        // node — the minimal slice; every other key stays warm where
+        // it is
+        {
+            let loads = self.front.loads.lock().unwrap();
+            self.front
+                .table
+                .lock()
+                .unwrap()
+                .retain(|&rkey, _| rendezvous(&loads, rkey) != Some(slot));
+        }
+        self.front.node_joined.fetch_add(1, Ordering::Relaxed);
+        // first-contact probe: the pong marks it alive to the detector
+        let _ = self.comms[0].send_bytes(
+            self.front.fronts + slot,
+            TAG_REQ,
+            encode_kind_only(K_JOIN),
+        );
+        drop(gate);
+        Ok(slot)
+    }
+
+    /// Gracefully retire node `k` right now: stop routing to it,
+    /// re-submit everything it owes to the remaining live nodes
+    /// (every outstanding [`JobHandle`] still resolves), and release
+    /// its rank — without waiting for the failure detector. Refuses to
+    /// retire the last live node.
+    pub fn leave_node(&self, k: usize) -> Result<()> {
+        crate::ensure!(k < self.front.nodes, InvalidArg, "no node {k}");
+        crate::ensure!(
+            self.front.live_count() > 1,
+            InvalidArg,
+            "cannot retire the last live node"
+        );
+        let evacuated = self.front.evacuate(k, &self.comms[0]);
+        crate::ensure!(
+            evacuated.is_some(),
+            InvalidArg,
+            "node {k} is not live"
+        );
+        // now that nothing new can land there, tell it to go away and
+        // close its result streams so the collectors exit
+        let _ = self.comms[0].send_bytes(
+            self.front.fronts + k,
+            TAG_REQ,
+            encode_kind_only(K_LEAVE),
+        );
+        let node_comm = self.world.rank(self.front.fronts + k);
+        for f in 0..self.front.fronts {
+            let _ = node_comm.send_bytes(f, TAG_RES, encode_kind_only(K_DEAD));
+        }
+        Ok(())
+    }
+
+    /// Chaos hook: crash node `k`. The node goes silent immediately —
+    /// it answers nothing, not even in-flight work — exactly like a
+    /// real crash, and the failure detector must notice the silence
+    /// (after [`ShardConfig::fd_dead_rounds`] probe rounds) and
+    /// evacuate everything it owed.
+    pub fn kill_node(&self, k: usize) -> Result<()> {
+        crate::ensure!(k < self.front.nodes, InvalidArg, "no node {k}");
+        crate::ensure!(
+            self.front.loads.lock().unwrap()[k].live,
+            InvalidArg,
+            "node {k} is not live"
+        );
+        let _ = self.comms[0].send_bytes(
+            self.front.fronts + k,
+            TAG_REQ,
+            encode_kind_only(K_LEAVE),
+        );
+        Ok(())
+    }
+
+    /// Write a checkpoint of every outstanding job right now. Errors
+    /// when no checkpoint file is configured.
+    pub fn checkpoint_now(&self) -> Result<usize> {
+        let path = self.checkpoint.as_deref().ok_or_else(|| {
+            GhostError::InvalidArg("no checkpoint file configured".into())
+        })?;
+        self.front.write_checkpoint(path)
+    }
+
+    /// Restore the configured checkpoint: every job in the file is
+    /// re-submitted (admission-exempt — it was admitted before the
+    /// restart) and the new handles are returned in checkpoint order.
+    /// A torn tail (crash mid-write on a reordering filesystem) costs
+    /// only the torn frames; a missing file restores nothing.
+    pub fn restore_checkpoint(&self) -> Result<Vec<JobHandle>> {
+        let path = self.checkpoint.as_deref().ok_or_else(|| {
+            GhostError::InvalidArg("no checkpoint file configured".into())
+        })?;
+        let (restored, _torn) = super::checkpoint::load(path)?;
+        let mut handles = Vec::with_capacity(restored.len());
+        for (_, mut spec) in restored {
+            spec.migrated = true;
+            spec.trace.stamp(Stage::Restore);
+            handles.push(self.submit(spec).map_err(|e| {
+                GhostError::Task(format!("checkpoint restore refused: {e}"))
+            })?);
+        }
+        Ok(handles)
     }
 
     /// Derive the routing key of a spec on the front-end — without
@@ -808,8 +1378,13 @@ impl ShardedScheduler {
         if *gate {
             return Err(SubmitError::Shutdown);
         }
-        // admission before any matrix work: a refusal must be cheap
-        self.front.admit(spec.deadline_ms)?;
+        // admission before any matrix work: a refusal must be cheap.
+        // Migrated jobs (checkpoint restores) are exempt: they were
+        // admitted before the restart and must not be lost to a full
+        // queue now.
+        if !spec.migrated {
+            self.front.admit(spec.deadline_ms)?;
+        }
         // the span and the absolute deadline anchor at fabric intake:
         // every later hop (route, steal, node submit) inherits them, so
         // queue-wait and deadline accounting stay exact across
@@ -825,8 +1400,11 @@ impl ShardedScheduler {
         let (rkey, key) = self.route_key(&spec).map_err(SubmitError::Invalid)?;
         // the node must not re-digest what the front already identified
         spec.matrix_key = key;
-        let has_deadline = spec.deadline_ms.is_some();
-        let (node, _handoff, steal) = self.front.route(rkey, has_deadline);
+        // the absolute stamp is the one source of deadline truth — a
+        // restored job carries it even though its relative request
+        // field was cleared on extraction
+        let has_deadline = spec.deadline_at_us.is_some();
+        let (node, _handoff, steal) = self.front.route(rkey, has_deadline, spec.migrated);
         spec.trace.stamp(Stage::Route);
         let id = self.front.next_id.fetch_add(1, Ordering::SeqCst) + 1;
         let state = JobState::new(id);
@@ -836,6 +1414,9 @@ impl ShardedScheduler {
                 state: state.clone(),
                 deadline: has_deadline,
                 front: f,
+                node,
+                migrated: spec.migrated,
+                spec: spec.clone(),
             },
         );
         self.front.counters.lock().unwrap()[f].submitted += 1;
@@ -932,7 +1513,20 @@ impl ShardedScheduler {
         out.push_str(&format!(
             "shard.nodes {}\nshard.fronts {}\nshard.submitted {}\nshard.completed {}\n\
              shard.failed {}\n",
-            self.front.nodes, self.front.fronts, shard.submitted, shard.completed, shard.failed
+            self.front.live_count(),
+            self.front.fronts,
+            shard.submitted,
+            shard.completed,
+            shard.failed
+        ));
+        out.push_str(&format!(
+            "shard.max_nodes {}\nshard.node_joined {}\nshard.node_dead {}\n\
+             shard.evacuated_jobs {}\nshard.checkpointed_jobs {}\n",
+            self.front.nodes,
+            self.front.node_joined.load(Ordering::Relaxed),
+            self.front.node_dead.load(Ordering::Relaxed),
+            self.front.evacuated.load(Ordering::Relaxed),
+            self.front.checkpointed.load(Ordering::Relaxed)
         ));
         for (i, fc) in shard.per_front.iter().enumerate() {
             out.push_str(&format!(
@@ -943,8 +1537,14 @@ impl ShardedScheduler {
         for (i, l) in shard.per_node.iter().enumerate() {
             out.push_str(&format!(
                 "node{i}.routed {}\nnode{i}.handoffs {}\nnode{i}.outstanding {}\n\
-                 node{i}.peak_outstanding {}\n",
-                l.routed, l.handoffs, l.outstanding, l.peak_outstanding
+                 node{i}.migrated_outstanding {}\nnode{i}.peak_outstanding {}\n\
+                 node{i}.live {}\n",
+                l.routed,
+                l.handoffs,
+                l.outstanding,
+                l.migrated_outstanding,
+                l.peak_outstanding,
+                l.live as u8
             ));
         }
         let metrics = self.front.metrics.lock().unwrap();
@@ -989,8 +1589,12 @@ impl ShardedScheduler {
             // under the write gate no submit — from any front — can
             // enqueue after this: every request envelope is already
             // delivered, and the node's shutdown sweep picks up those
-            // recv_bytes_any's scan had not reached
-            for node in 0..self.front.nodes {
+            // recv_bytes_any's scan had not reached. Only slots that
+            // ever started get one (a dead node's envelope just sits
+            // in its mailbox; a never-started slot has no mailbox
+            // reader at all).
+            let started = *self.next_slot.lock().unwrap();
+            for node in 0..started {
                 let _ = self.comms[0].send_bytes(
                     self.front.fronts + node,
                     TAG_REQ,
@@ -998,9 +1602,32 @@ impl ShardedScheduler {
                 );
             }
         }
+        // node threads first: a live node exits after acking every
+        // front; a killed node's thread is already gone. Either way,
+        // once these joins return every result stream is complete —
+        // then forge a trailing close on each stream so collectors of
+        // nodes that died unacked exit too (FIFO order puts the forged
+        // close after everything the node ever sent; collectors that
+        // already left on a real ack just leave it unread).
+        let node_threads: Vec<_> = std::mem::take(&mut *self.node_threads.lock().unwrap());
+        for t in node_threads {
+            let _ = t.join();
+        }
+        let started = *self.next_slot.lock().unwrap();
+        for node in 0..started {
+            let node_comm = self.world.rank(self.front.fronts + node);
+            for f in 0..self.front.fronts {
+                let _ = node_comm.send_bytes(f, TAG_RES, encode_kind_only(K_DEAD));
+            }
+        }
         let threads: Vec<_> = std::mem::take(&mut *self.threads.lock().unwrap());
         for t in threads {
             let _ = t.join();
+        }
+        // final checkpoint BEFORE failing stranded jobs: what shutdown
+        // is about to cancel is exactly what a restart must restore
+        if let Some(path) = self.checkpoint.as_deref() {
+            let _ = self.front.write_checkpoint(path);
         }
         // failsafe: nothing can answer a job once the fabric is down
         let stranded: Vec<(Arc<JobState>, usize)> = self
@@ -1057,6 +1684,99 @@ impl SolveService for ShardedScheduler {
     }
 }
 
+/// Spawn the service thread and per-front collectors for node `slot` —
+/// at construction or for a runtime join.
+fn spawn_node(
+    world: &World,
+    front: &Arc<Front>,
+    cfg: &SchedConfig,
+    pus: usize,
+    slot: usize,
+    node_threads: &mut Vec<std::thread::JoinHandle<()>>,
+    threads: &mut Vec<std::thread::JoinHandle<()>>,
+) {
+    let fronts = front.fronts;
+    let comm = world.rank(fronts + slot);
+    let node_cfg = cfg.clone();
+    node_threads.push(
+        std::thread::Builder::new()
+            .name(format!("ghost-shard-node-{slot}"))
+            .spawn(move || node_service(comm, fronts, node_cfg, pus))
+            .expect("spawn shard node"),
+    );
+    for f in 0..fronts {
+        let comm = world.rank(f);
+        let fr = front.clone();
+        threads.push(
+            std::thread::Builder::new()
+                .name(format!("ghost-shard-collect-{f}-{slot}"))
+                .spawn(move || collector(comm, fr, slot, f))
+                .expect("spawn shard collector"),
+        );
+    }
+}
+
+/// The failure detector: every `round_ms` advance the fabric round
+/// clock, probe each live node, and declare dead any node that has
+/// been silent for more than `dead_rounds` rounds — then evacuate
+/// everything it owed and forge a close on its result streams so its
+/// collectors exit (the dead node can no longer say goodbye itself).
+/// Detection *timing* is wall-clock, but the outcome is deterministic:
+/// evacuated jobs re-solve from their seeds bitwise-equal wherever
+/// they land.
+fn monitor(comms: Vec<Comm>, front: Arc<Front>, round_ms: u64, dead_rounds: u64) {
+    loop {
+        std::thread::sleep(std::time::Duration::from_millis(round_ms.max(1)));
+        if *front.gate.read().unwrap() {
+            return;
+        }
+        let round = front.round.fetch_add(1, Ordering::SeqCst) + 1;
+        let live: Vec<usize> = {
+            let loads = front.loads.lock().unwrap();
+            loads
+                .iter()
+                .enumerate()
+                .filter(|(_, l)| l.live)
+                .map(|(i, _)| i)
+                .collect()
+        };
+        for &node in &live {
+            let _ = comms[0].send_bytes(front.fronts + node, TAG_REQ, encode_kind_only(K_PING));
+        }
+        for &node in &live {
+            let heard = front.last_pong.lock().unwrap()[node];
+            if round.saturating_sub(heard) > dead_rounds {
+                front.node_dead.fetch_add(1, Ordering::Relaxed);
+                if front.evacuate(node, &comms[0]).is_some() {
+                    let node_comm = &comms[front.fronts + node];
+                    for f in 0..front.fronts {
+                        let _ = node_comm.send_bytes(f, TAG_RES, encode_kind_only(K_DEAD));
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Periodically snapshot every outstanding job to the checkpoint file.
+/// The shutdown path writes the final image itself (after the fabric
+/// has drained what it can), so this thread just exits on the gate.
+fn checkpointer(front: Arc<Front>, path: std::path::PathBuf, every_ms: u64) {
+    let step = std::time::Duration::from_millis(every_ms.clamp(1, 25));
+    let mut elapsed = 0u64;
+    loop {
+        std::thread::sleep(step);
+        if *front.gate.read().unwrap() {
+            return;
+        }
+        elapsed += step.as_millis() as u64;
+        if elapsed >= every_ms {
+            elapsed = 0;
+            let _ = front.write_checkpoint(&path);
+        }
+    }
+}
+
 /// Thread of front `front_idx` collecting result envelopes from one
 /// node. Also handles the node's bucket yields: each yielded bucket is
 /// re-routed to the then-least-loaded node from right here (this thread
@@ -1070,6 +1790,12 @@ fn collector(comm: Comm, front: Arc<Front>, node: usize, front_idx: usize) {
         let Ok(env) = Envelope::decode(&bytes) else {
             continue; // malformed peer message: drop, never crash
         };
+        // any word from the node is proof of life for the detector
+        {
+            let round = front.round.load(Ordering::SeqCst);
+            let mut lp = front.last_pong.lock().unwrap();
+            lp[node] = lp[node].max(round);
+        }
         match env.kind {
             K_RESULT => match decode_result(&env.payload) {
                 Ok((job_id, res, stats, metrics)) => {
@@ -1079,13 +1805,25 @@ fn collector(comm: Comm, front: Arc<Front>, node: usize, front_idx: usize) {
                 }
                 Err(_) => continue,
             },
+            K_PONG => {
+                if let Ok((stats, metrics)) = decode_pong(&env.payload) {
+                    front.note_node_stats(node, stats);
+                    front.note_node_metrics(node, metrics);
+                }
+            }
+            K_DEAD => {
+                // the front itself forged a close on this stream: the
+                // node was declared dead (or retired) and every job it
+                // owed has been evacuated — nothing more will come
+                return;
+            }
             K_YIELD => {
                 let Ok((buckets, stats, metrics)) = decode_yield(&env.payload) else {
                     continue;
                 };
                 front.note_node_stats(node, stats);
                 front.note_node_metrics(node, metrics);
-                front.steal_inflight.lock().unwrap()[node] = false;
+                front.steal_inflight.lock().unwrap()[node] = 0;
                 // each bucket re-routes independently: the least-loaded
                 // target is re-picked after the previous bucket's jobs
                 // were charged, so a multi-bucket yield spreads out
@@ -1107,6 +1845,9 @@ fn collector(comm: Comm, front: Arc<Front>, node: usize, front_idx: usize) {
                             .fetch_add(cancelled as u64, Ordering::SeqCst);
                     }
                 }
+                // the node is gone: a steal it never answered must not
+                // leave its slot armed
+                front.steal_inflight.lock().unwrap()[node] = 0;
                 return;
             }
             _ => continue,
@@ -1129,6 +1870,11 @@ fn node_service(comm: Comm, fronts: usize, cfg: SchedConfig, pus: usize) {
     let mut waiters: Vec<std::thread::JoinHandle<()>> = Vec::new();
     let locals: Arc<Mutex<HashMap<u64, u64>>> = Arc::new(Mutex::new(HashMap::new()));
     let stolen: Arc<Mutex<HashSet<u64>>> = Arc::new(Mutex::new(HashSet::new()));
+    // set by K_LEAVE: the node is crashing/retiring and must answer
+    // *nothing* from here on — waiters woken by the teardown check it
+    // before sending, so a killed node goes silent like a real crash
+    let dead: Arc<std::sync::atomic::AtomicBool> =
+        Arc::new(std::sync::atomic::AtomicBool::new(false));
     let accept = |reply_to: usize,
                   job_id: u64,
                   spec_res: Result<JobSpec>,
@@ -1144,6 +1890,7 @@ fn node_service(comm: Comm, fronts: usize, cfg: SchedConfig, pus: usize) {
                 let s = sched.clone();
                 let locals = locals.clone();
                 let stolen = stolen.clone();
+                let dead = dead.clone();
                 let local_id = handle.id();
                 let w = std::thread::Builder::new()
                     .name("ghost-shard-waiter".into())
@@ -1153,6 +1900,11 @@ fn node_service(comm: Comm, fronts: usize, cfg: SchedConfig, pus: usize) {
                         if stolen.lock().unwrap().remove(&job_id) {
                             // the job migrated in a stolen bucket; the
                             // new node answers it
+                            return;
+                        }
+                        if dead.load(Ordering::SeqCst) {
+                            // crashed/retired: the job was (or will
+                            // be) evacuated — its new home answers
                             return;
                         }
                         let env = encode_result(job_id, &res, &s.stats(), &s.wire_metrics());
@@ -1243,6 +1995,29 @@ fn node_service(comm: Comm, fronts: usize, cfg: SchedConfig, pus: usize) {
                     encode_yield(&buckets, &sched.stats(), &sched.wire_metrics()),
                 );
             }
+            K_JOIN | K_PING => {
+                // liveness probe (or first contact after a join):
+                // answer with a stats + metrics snapshot, so the
+                // detector's heartbeat doubles as a telemetry pull
+                let _ = comm.send_bytes(
+                    src,
+                    TAG_RES,
+                    encode_pong(&sched.stats(), &sched.wire_metrics()),
+                );
+            }
+            K_LEAVE => {
+                // crash injection / immediate retirement: resolve all
+                // local state quietly and answer NOTHING — no result,
+                // no ack, no sweep. The front finds out the way it
+                // would about a real crash (kill_node) or already knows
+                // (leave_node evacuated first).
+                dead.store(true, Ordering::SeqCst);
+                sched.shutdown();
+                for h in waiters.drain(..) {
+                    let _ = h.join();
+                }
+                break;
+            }
             K_SHUTDOWN => {
                 // cross-front handshake: the gate guarantees every
                 // request envelope was delivered before this one, but
@@ -1309,6 +2084,7 @@ mod tests {
             policy,
             steal_threshold: 4,
             max_yield_buckets: 2,
+            steal_expire_rounds: 8,
             admission: AdmissionControl::default(),
             next_id: AtomicU64::new(0),
             jobs: Mutex::new(HashMap::new()),
@@ -1319,22 +2095,48 @@ mod tests {
                     .into_iter()
                     .map(|outstanding| NodeStats {
                         outstanding,
+                        live: true,
                         ..NodeStats::default()
                     })
                     .collect(),
             ),
             metrics: Mutex::new(vec![HashMap::new(); nodes]),
-            steal_inflight: Mutex::new(vec![false; nodes]),
+            steal_inflight: Mutex::new(vec![0; nodes]),
             counters: Mutex::new(vec![FrontStats::default()]),
             gate: RwLock::new(false),
             ack_cancelled: AtomicU64::new(0),
+            round: AtomicU64::new(0),
+            last_pong: Mutex::new(vec![0; nodes]),
+            node_joined: AtomicU64::new(0),
+            node_dead: AtomicU64::new(0),
+            evacuated: AtomicU64::new(0),
+            checkpointed: AtomicU64::new(0),
         }
+    }
+
+    /// Rendezvous home of `rkey` over `nodes` all-live nodes.
+    fn home_of(rkey: u64, nodes: usize) -> usize {
+        let loads = vec![
+            NodeStats {
+                live: true,
+                ..NodeStats::default()
+            };
+            nodes
+        ];
+        rendezvous(&loads, rkey).unwrap()
+    }
+
+    /// A key whose rendezvous home (over `nodes` live nodes) is `want`.
+    fn key_homed_at(want: usize, nodes: usize) -> u64 {
+        (0u64..10_000)
+            .find(|&k| home_of(k, nodes) == want)
+            .expect("some key homes at every node")
     }
 
     #[test]
     fn load_routing_picks_the_least_loaded_node() {
         let f = front(RoutePolicy::Load, 4, vec![2, 0, 3, 1]);
-        let (node, handoff, steal) = f.route(0xDEAD, false);
+        let (node, handoff, steal) = f.route(0xDEAD, false, false);
         assert_eq!(node, 1);
         assert!(!handoff);
         assert!(steal.is_none(), "load routing never bucket-steals");
@@ -1350,7 +2152,7 @@ mod tests {
     fn load_routing_never_picks_a_busy_node_over_an_idle_one() {
         let f = front(RoutePolicy::Load, 3, vec![2, 2, 0]);
         for _ in 0..2 {
-            let (node, _, _) = f.route(7, false);
+            let (node, _, _) = f.route(7, false, false);
             // node 2 starts idle: it must fill up to parity before any
             // node with >= 2 queued jobs receives more work
             assert_eq!(node, 2);
@@ -1362,9 +2164,9 @@ mod tests {
     #[test]
     fn affinity_routing_is_sticky_and_hands_off_under_overload() {
         let f = front(RoutePolicy::Affinity, 2, vec![0, 0]);
-        let key = 42u64; // home = 42 % 2 = 0
-        let (n1, h1, s1) = f.route(key, false);
-        let (n2, h2, s2) = f.route(key, false);
+        let key = key_homed_at(0, 2);
+        let (n1, h1, s1) = f.route(key, false, false);
+        let (n2, h2, s2) = f.route(key, false, false);
         assert_eq!((n1, h1, s1), (0, false, None));
         assert_eq!(
             (n2, h2, s2),
@@ -1380,7 +2182,7 @@ mod tests {
             loads[0].outstanding = 6;
             loads[1].outstanding = 0;
         }
-        let (n3, h3, s3) = f.route(key, false);
+        let (n3, h3, s3) = f.route(key, false, false);
         assert_eq!((n3, h3), (1, true), "overloaded home must hand off");
         assert_eq!(
             s3,
@@ -1394,10 +2196,10 @@ mod tests {
             loads[0].outstanding = 6;
             loads[1].outstanding = 0;
         }
-        let (n3b, h3b, s3b) = f.route(key, false);
+        let (n3b, h3b, s3b) = f.route(key, false, false);
         assert_eq!((n3b, h3b, s3b), (1, true, None));
         // the yield arrived: the slot reopens
-        f.steal_inflight.lock().unwrap()[0] = false;
+        f.steal_inflight.lock().unwrap()[0] = 0;
         // the affinity table still points home: once the backlog
         // clears, the key returns to its warm cache
         {
@@ -1405,15 +2207,124 @@ mod tests {
             loads[0].outstanding = 0;
             loads[1].outstanding = 0;
         }
-        let (n4, h4, s4) = f.route(key, false);
+        let (n4, h4, s4) = f.route(key, false, false);
         assert_eq!((n4, h4, s4), (0, false, None));
+    }
+
+    #[test]
+    fn lost_steal_slot_expires_after_bounded_rounds() {
+        // regression: the one-in-flight steal flag used to leak when
+        // the yield envelope was dropped or the home died mid-steal —
+        // that node could never be stolen from again
+        let f = front(RoutePolicy::Affinity, 2, vec![0, 0]);
+        let key = key_homed_at(0, 2);
+        let (n, _, _) = f.route(key, false, false);
+        assert_eq!(n, 0);
+        let overload = |f: &Front| {
+            let mut loads = f.loads.lock().unwrap();
+            loads[0].outstanding = 6;
+            loads[1].outstanding = 0;
+        };
+        overload(&f);
+        let (_, h, s) = f.route(key, false, false);
+        assert!(h);
+        assert_eq!(s, Some((0, 1)), "first handoff arms the steal slot");
+        // the yield never comes back; rounds pass but not enough
+        f.round
+            .store(f.steal_expire_rounds - 1, Ordering::SeqCst);
+        overload(&f);
+        let (_, _, s) = f.route(key, false, false);
+        assert_eq!(s, None, "slot still armed inside the expiry window");
+        // one more round: the slot expires and the node is stealable
+        // from again
+        f.round.store(f.steal_expire_rounds, Ordering::SeqCst);
+        overload(&f);
+        let (_, _, s) = f.route(key, false, false);
+        assert_eq!(
+            s,
+            Some((0, 1)),
+            "an unanswered steal must expire, not wedge the node"
+        );
+    }
+
+    #[test]
+    fn migrated_reparks_never_eat_the_admission_watermark() {
+        // regression: evacuated/stolen re-parks used to charge the
+        // target's fresh outstanding account, so an evacuation burst
+        // could wedge a healthy node into permanent QueueFull
+        let mut f = front(RoutePolicy::Load, 2, vec![0, 0]);
+        f.admission = AdmissionControl {
+            max_outstanding: Some(2),
+            min_deadline_ms: None,
+        };
+        // a burst of migrated re-parks lands on both nodes
+        for _ in 0..10 {
+            f.route(1, false, true);
+        }
+        {
+            let loads = f.loads.lock().unwrap();
+            assert_eq!(loads[0].outstanding + loads[1].outstanding, 0);
+            assert_eq!(
+                loads[0].migrated_outstanding + loads[1].migrated_outstanding,
+                10
+            );
+        }
+        // fresh clients are still admitted: the watermark reads the
+        // fresh account only
+        assert!(f.admit(None).is_ok(), "migrated backlog must not wedge admission");
+        // but routing still sees the migrated backlog as load
+        f.loads.lock().unwrap()[0].migrated_outstanding = 0;
+        let (n, _, _) = f.route(2, false, false);
+        assert_eq!(n, 0, "routing weighs migrated + fresh backlog");
+    }
+
+    #[test]
+    fn rendezvous_moves_only_the_joining_nodes_slice() {
+        let live = |n: usize| {
+            vec![
+                NodeStats {
+                    live: true,
+                    ..NodeStats::default()
+                };
+                n
+            ]
+        };
+        let before = live(3);
+        let mut after = live(4);
+        let keys: Vec<u64> = (0..2000).collect();
+        let mut moved = 0usize;
+        for &k in &keys {
+            let a = rendezvous(&before, k).unwrap();
+            let b = rendezvous(&after, k).unwrap();
+            if a != b {
+                // every key that moves, moves ONTO the new node —
+                // nothing reshuffles between survivors
+                assert_eq!(b, 3, "key {k} moved between survivors");
+                moved += 1;
+            }
+        }
+        assert!(moved > 0, "the new node must take some keys");
+        assert!(
+            moved < keys.len() / 2,
+            "a join must remap a minimal slice, not reshuffle ({moved}/{})",
+            keys.len()
+        );
+        // a leave moves only the departed node's keys, symmetric case
+        after[3].live = false;
+        for &k in &keys {
+            assert_eq!(
+                rendezvous(&before, k),
+                rendezvous(&after, k),
+                "a leave must restore the survivors' map exactly"
+            );
+        }
     }
 
     #[test]
     fn deadline_pressure_lowers_the_handoff_bar_and_scales_the_steal_budget() {
         let f = front(RoutePolicy::Affinity, 2, vec![0, 0]);
-        let key = 42u64; // home = 0
-        let (n1, _, _) = f.route(key, true);
+        let key = key_homed_at(0, 2);
+        let (n1, _, _) = f.route(key, true, false);
         assert_eq!(n1, 0);
         assert_eq!(f.loads.lock().unwrap()[0].outstanding_deadlines, 1);
         // outstanding 3 is BELOW the configured threshold 4, but two
@@ -1426,10 +2337,10 @@ mod tests {
             loads[0].outstanding_deadlines = 2;
             loads[1].outstanding = 0;
         }
-        let (n2, h2, s2) = f.route(key, false);
+        let (n2, h2, s2) = f.route(key, false, false);
         assert_eq!((n2, h2), (1, true), "EDF pressure must lower the bar");
         assert_eq!(s2, Some((0, 1)), "pressure 2 / threshold 4 → 1 bucket");
-        f.steal_inflight.lock().unwrap()[0] = false;
+        f.steal_inflight.lock().unwrap()[0] = 0;
         // heavy pressure scales the budget up to max_yield_buckets
         {
             let mut loads = f.loads.lock().unwrap();
@@ -1437,7 +2348,7 @@ mod tests {
             loads[0].outstanding_deadlines = 4;
             loads[1].outstanding = 0;
         }
-        let (_, h3, s3) = f.route(key, false);
+        let (_, h3, s3) = f.route(key, false, false);
         assert!(h3);
         assert_eq!(s3, Some((0, 2)), "pressure 4 / threshold 4 → 2 buckets");
         // completion drains the pressure gauge
@@ -1478,11 +2389,12 @@ mod tests {
 
     #[test]
     fn affinity_first_sighting_diverts_from_a_backed_up_hash_home_and_sticks() {
-        // hash home of key 4 on 2 nodes is node 0, which starts backed
-        // up while node 1 is idle: the first sighting must be placed on
-        // node 1 (a placement, not a handoff) ...
+        // the rendezvous home of `key` on 2 nodes is node 0, which
+        // starts backed up while node 1 is idle: the first sighting
+        // must be placed on node 1 (a placement, not a handoff) ...
+        let key = key_homed_at(0, 2);
         let f = front(RoutePolicy::Affinity, 2, vec![5, 0]);
-        let (n1, h1, _) = f.route(4, false);
+        let (n1, h1, _) = f.route(key, false, false);
         assert_eq!(
             (n1, h1),
             (1, false),
@@ -1495,7 +2407,7 @@ mod tests {
             loads[0].outstanding = 0;
             loads[1].outstanding = 0;
         }
-        let (n2, h2, _) = f.route(4, false);
+        let (n2, h2, _) = f.route(key, false, false);
         assert_eq!(
             (n2, h2),
             (1, false),
@@ -1506,9 +2418,17 @@ mod tests {
     #[test]
     fn hash_routing_is_stateless_and_stable() {
         let f = front(RoutePolicy::Hash, 3, vec![9, 9, 9]);
-        let a = f.route(10, false).0;
-        assert_eq!(a, f.route(10, false).0);
-        assert_eq!(a, (10 % 3) as usize);
+        let a = f.route(10, false, false).0;
+        assert_eq!(a, f.route(10, false, false).0);
+        assert_eq!(a, home_of(10, 3), "hash routing is pure rendezvous");
+        // a dead node never receives hash routes; survivors keep their
+        // keys (consistent-hash property at the router level)
+        let stays = key_homed_at(0, 3);
+        f.loads.lock().unwrap()[2].live = false;
+        assert_eq!(f.route(stays, false, false).0, 0);
+        let moved = key_homed_at(2, 3);
+        let n = f.route(moved, false, false).0;
+        assert!(n < 2, "a dead node's key re-homes among the living");
     }
 
     #[test]
@@ -1670,6 +2590,25 @@ mod tests {
         let env = Envelope::decode(&encode_steal(2)).unwrap();
         assert_eq!(env.kind, K_STEAL);
         assert_eq!(decode_steal(&env.payload).unwrap(), 2);
+    }
+
+    #[test]
+    fn liveness_envelopes_round_trip() {
+        for kind in [K_JOIN, K_PING, K_LEAVE, K_DEAD] {
+            let env = Envelope::decode(&encode_kind_only(kind)).unwrap();
+            assert_eq!(env.kind, kind);
+            assert!(env.payload.is_empty());
+        }
+        let stats = SchedStats {
+            completed: 17,
+            ..SchedStats::default()
+        };
+        let metrics = vec![("kernel.flops".to_string(), 0u8, 99u64)];
+        let env = Envelope::decode(&encode_pong(&stats, &metrics)).unwrap();
+        assert_eq!(env.kind, K_PONG);
+        let (st, ms) = decode_pong(&env.payload).unwrap();
+        assert_eq!(st.completed, 17);
+        assert_eq!(ms, metrics);
     }
 
     #[test]

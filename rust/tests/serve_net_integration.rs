@@ -179,7 +179,67 @@ fn tcp_two_fronts_four_nodes_match_the_single_front_engine_bitwise() {
     assert_eq!(summary.requests, specs.len() as u64);
     assert_eq!(summary.ok, specs.len() as u64);
     assert_eq!((summary.failed, summary.rejected), (0, 0));
+    assert_eq!(summary.answered(), summary.requests, "summary reconciles");
     assert_eq!(engine.shutdown(), 0, "stranded jobs after listener stop");
+}
+
+/// A client that submits work and then vanishes mid-job must not leave
+/// the listener's accounts short: the waiter records the outcome before
+/// attempting the response write, so `requests == ok + failed +
+/// rejected` reconciles even when every write to that client fails —
+/// and the dead connection is dropped instead of lingering.
+#[test]
+fn client_disconnecting_mid_job_leaves_a_reconciled_summary() {
+    let engine: Arc<ServiceEngine> = Arc::new(
+        ServeConfig::default()
+            .with_nodes(2)
+            .with_fronts(2)
+            .with_route(RoutePolicy::Load)
+            .with_node_pus(1)
+            .with_shepherds(1)
+            .with_comm(CommConfig::instant())
+            .build()
+            .unwrap(),
+    );
+    let server = NetServer::bind(engine.clone(), "127.0.0.1:0", None).unwrap();
+    let addr = server.local_addr().unwrap();
+    let runner = std::thread::spawn(move || server.run().unwrap());
+
+    // slow enough that the connection is gone before the job resolves
+    let slow = || {
+        JobSpec::new(
+            MatrixSource::Named {
+                name: "poisson7".into(),
+                n: 1000,
+            },
+            SolverKind::ChebFilter {
+                degree: 16,
+                block: 4,
+            },
+        )
+    };
+    {
+        let mut client = SolveClient::connect(addr).unwrap();
+        for _ in 0..3 {
+            client.submit(slow()).expect("submit");
+        }
+        // dropped here without receiving a single response: the socket
+        // closes while all three jobs are still in flight
+    }
+    // the service still owes those jobs an outcome; drain so the
+    // waiters have resolved (and failed their writes) before we stop
+    engine.drain();
+    let mut control = SolveClient::connect(addr).unwrap();
+    control.shutdown_server().unwrap();
+    let summary = runner.join().unwrap();
+    assert_eq!(summary.requests, 3);
+    assert_eq!(
+        summary.answered(),
+        summary.requests,
+        "disconnected client must not leave the summary short: {summary:?}"
+    );
+    assert_eq!(summary.ok, 3, "jobs completed even though the client left");
+    assert_eq!(engine.shutdown(), 0, "stranded jobs after client vanished");
 }
 
 /// Saturation: a small outstanding-job watermark plus slow jobs forces
@@ -265,6 +325,7 @@ fn saturation_yields_typed_rejections_and_strands_nothing() {
     assert_eq!(summary.ok, ok as u64);
     assert_eq!(summary.rejected, rejected as u64);
     assert_eq!(summary.failed, 0);
+    assert_eq!(summary.answered(), summary.requests, "summary reconciles");
     assert_eq!(engine.shutdown(), 0, "stranded jobs after saturation run");
 }
 

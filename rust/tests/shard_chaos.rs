@@ -1,0 +1,455 @@
+//! Chaos tests for the elastic shard fabric
+//! (`ghost::sched::shard`): a node killed mid-stream is detected and
+//! its owed jobs evacuated with every handle resolving bitwise equal
+//! to a quiet run; a runtime join remaps only the joining node's slice
+//! of the key space (survivors keep their warm operator caches); a
+//! front restart restores the checkpointed backlog — torn tails lose
+//! only the torn frames; and absolute deadlines survive double
+//! migration without re-basing.
+//!
+//! Every scenario is deterministic in *outcome*: the failure detector
+//! runs on wall-clock rounds, but seeded solvers make the recomputed
+//! results bitwise identical wherever (and however often) a job lands.
+
+use std::sync::Arc;
+
+use ghost::comm::CommConfig;
+use ghost::matgen;
+use ghost::sched::{
+    BatchPolicy, JobOutput, JobReport, JobScheduler, JobSpec, MatrixSource, RoutePolicy,
+    SchedConfig, ShardConfig, ShardedScheduler, SolverKind,
+};
+use ghost::sparsemat::Crs;
+use ghost::topology::Machine;
+
+/// Fabric under churn: one front, one PU per node, and a handoff bar
+/// parked far above the traffic so placement is pure rendezvous +
+/// sticky affinity — churn, not work-stealing, is what these tests
+/// observe.
+fn chaos_config(nodes: usize) -> ShardConfig {
+    ShardConfig {
+        nodes,
+        fronts: 1,
+        policy: RoutePolicy::Affinity,
+        steal_threshold: 64,
+        pus_per_node: 1,
+        sched: SchedConfig {
+            nshepherds: 1,
+            batching: BatchPolicy::Auto,
+            ..SchedConfig::default()
+        },
+        comm: CommConfig::instant(),
+        ..ShardConfig::default()
+    }
+}
+
+fn cg(a: &Arc<Crs<f64>>, seed: u64) -> JobSpec {
+    let mut s = JobSpec::new(
+        MatrixSource::Mat(a.clone()),
+        SolverKind::Cg {
+            tol: 1e-9,
+            max_iters: 2000,
+        },
+    );
+    s.seed = seed;
+    s
+}
+
+fn cheb(a: &Arc<Crs<f64>>, seed: u64, degree: usize) -> JobSpec {
+    let mut s = JobSpec::new(
+        MatrixSource::Mat(a.clone()),
+        SolverKind::ChebFilter { degree, block: 4 },
+    );
+    s.seed = seed;
+    s
+}
+
+/// Quiet single-node reference run of `specs`, in order.
+fn single_reference(specs: &[JobSpec]) -> Vec<JobReport> {
+    let single = JobScheduler::new(
+        Machine::small_node(2),
+        SchedConfig {
+            nshepherds: 2,
+            batching: BatchPolicy::Auto,
+            ..SchedConfig::default()
+        },
+    );
+    let handles: Vec<_> = specs
+        .iter()
+        .map(|s| single.submit(s.clone()).expect("reference submit"))
+        .collect();
+    let reports: Vec<JobReport> = handles
+        .into_iter()
+        .map(|h| h.wait().expect("reference job"))
+        .collect();
+    assert_eq!(single.shutdown(), 0);
+    reports
+}
+
+/// Read one counter out of the fabric's metrics endpoint text.
+fn metric(svc: &ShardedScheduler, name: &str) -> u64 {
+    let text = svc.metrics_text();
+    text.lines()
+        .find_map(|l| l.strip_prefix(name).and_then(|r| r.strip_prefix(' ')))
+        .unwrap_or_else(|| panic!("metric {name} missing from:\n{text}"))
+        .trim()
+        .parse()
+        .expect("metric value")
+}
+
+/// Submit one job, wait for it, and return which node it ran on —
+/// observed through the per-node routed counters, so the probe sees
+/// exactly what the router decided.
+fn probe_home(svc: &ShardedScheduler, spec: JobSpec) -> (usize, JobReport) {
+    let before: Vec<u64> = svc.shard_stats().per_node.iter().map(|n| n.routed).collect();
+    let rep = svc
+        .submit(spec)
+        .expect("probe submit")
+        .wait()
+        .expect("probe job");
+    let after: Vec<u64> = svc.shard_stats().per_node.iter().map(|n| n.routed).collect();
+    let mut landed = None;
+    for (i, (b, a)) in before.iter().zip(&after).enumerate() {
+        if a > b {
+            assert!(
+                landed.is_none(),
+                "probe split across nodes: {before:?} -> {after:?}"
+            );
+            landed = Some(i);
+        }
+    }
+    (landed.expect("probe routed nowhere"), rep)
+}
+
+fn assert_report_bitwise_equal(tag: &str, i: usize, g: &JobReport, w: &JobReport) {
+    match (&g.output, &w.output) {
+        (
+            JobOutput::Solve {
+                x: xg,
+                iterations: ig,
+                final_residual: rg,
+                converged: cg,
+            },
+            JobOutput::Solve {
+                x: xw,
+                iterations: iw,
+                final_residual: rw,
+                converged: cw,
+            },
+        ) => {
+            assert_eq!(ig, iw, "job {i} iterations ({tag})");
+            assert_eq!(rg.to_bits(), rw.to_bits(), "job {i} residual ({tag})");
+            assert_eq!(cg, cw);
+            assert_eq!(xg.len(), xw.len());
+            for (colg, colw) in xg.iter().zip(xw) {
+                for (u, v) in colg.iter().zip(colw) {
+                    assert_eq!(u.to_bits(), v.to_bits(), "job {i}: solution diverged ({tag})");
+                }
+            }
+        }
+        (
+            JobOutput::Eigenvalues { values: vg, .. },
+            JobOutput::Eigenvalues { values: vw, .. },
+        ) => {
+            assert_eq!(vg.len(), vw.len());
+            for (u, v) in vg.iter().zip(vw) {
+                assert_eq!(u.to_bits(), v.to_bits(), "job {i}: Ritz values diverged ({tag})");
+            }
+        }
+        (JobOutput::Moments { mu: mg }, JobOutput::Moments { mu: mw }) => {
+            assert_eq!(mg.len(), mw.len());
+            for (u, v) in mg.iter().zip(mw) {
+                assert_eq!(u.to_bits(), v.to_bits(), "job {i}: KPM moments diverged ({tag})");
+            }
+        }
+        (
+            JobOutput::Filtered { eigenvalues: eg, .. },
+            JobOutput::Filtered { eigenvalues: ew, .. },
+        ) => {
+            assert_eq!(eg.len(), ew.len());
+            for (u, v) in eg.iter().zip(ew) {
+                assert_eq!(
+                    u.to_bits(),
+                    v.to_bits(),
+                    "job {i}: filtered values diverged ({tag})"
+                );
+            }
+        }
+        other => panic!("job {i}: output kinds diverged ({tag}): {other:?}"),
+    }
+}
+
+fn assert_outputs_bitwise_equal(tag: &str, got: &[JobReport], want: &[JobReport]) {
+    assert_eq!(got.len(), want.len(), "{tag}");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_report_bitwise_equal(tag, i, g, w);
+    }
+}
+
+/// The tentpole kill scenario at N in {2, 4, 8}: a warm affinity home
+/// crashes with a burst of jobs in flight. The failure detector must
+/// notice the silence on its own, evacuate everything the dead node
+/// owed, and every outstanding handle must resolve bitwise equal to a
+/// quiet single-node run — zero stranded, zero failed.
+#[test]
+fn killed_node_is_detected_and_evacuated_with_bitwise_parity() {
+    let a = Arc::new(matgen::poisson7::<f64>(6, 6, 4));
+    let mut specs: Vec<JobSpec> = (0..4).map(|s| cg(&a, s)).collect();
+    specs.extend((10..13).map(|s| cheb(&a, s, 16)));
+    let want = single_reference(&specs);
+    for &nodes in &[2usize, 4, 8] {
+        let mut cfg = chaos_config(nodes);
+        cfg.fd_round_ms = 10;
+        cfg.fd_dead_rounds = 3;
+        let svc = ShardedScheduler::new(cfg).unwrap();
+        // phase 1: warm the matrix's affinity home and record where it is
+        let mut got = Vec::new();
+        let mut home = None;
+        for s in &specs[..4] {
+            let (n, rep) = probe_home(&svc, s.clone());
+            if let Some(h) = home {
+                assert_eq!(h, n, "affinity stream split across nodes");
+            }
+            home = Some(n);
+            got.push(rep);
+        }
+        let home = home.unwrap();
+        // phase 2: a burst lands on the home — then the home crashes.
+        // The kill envelope rides the same FIFO as the submits, so
+        // every burst job reaches the dead node first: nothing escapes
+        // the evacuation path.
+        let handles: Vec<_> = specs[4..]
+            .iter()
+            .map(|s| svc.submit(s.clone()).expect("burst submit"))
+            .collect();
+        svc.kill_node(home).unwrap();
+        for h in handles {
+            got.push(h.wait().expect("evacuated job must still resolve"));
+        }
+        assert_outputs_bitwise_equal(&format!("nodes={nodes}"), &got, &want);
+        // the detector saw exactly one death, and evacuation re-ran the
+        // dead node's owed jobs on the survivors
+        assert_eq!(metric(&svc, "shard.node_dead"), 1, "nodes={nodes}");
+        assert!(metric(&svc, "shard.evacuated_jobs") >= 1, "nodes={nodes}");
+        assert_eq!(svc.nodes(), nodes - 1, "nodes={nodes}");
+        let st = svc.shard_stats();
+        assert_eq!(st.completed, specs.len() as u64, "{st:?}");
+        assert_eq!(st.failed, 0, "{st:?}");
+        assert_eq!(svc.shutdown(), 0, "stranded handles at nodes={nodes}");
+    }
+}
+
+/// A runtime join must remap only the keys whose rendezvous owner
+/// became the new node: movers land on the new node (cold, by
+/// definition), every other key keeps its warm cache — observed
+/// per-matrix through `cache_hit`, the end-to-end signature of
+/// consistent hashing.
+#[test]
+fn join_remaps_only_the_new_nodes_slice() {
+    const W: usize = 16;
+    let mats: Vec<Arc<Crs<f64>>> = (0..W)
+        .map(|i| Arc::new(matgen::poisson7::<f64>(4 + i, 4, 3)))
+        .collect();
+    let mut cfg = chaos_config(3);
+    cfg.max_nodes = 4;
+    cfg.fd_round_ms = 0; // no churn but ours: placement stays put
+    let svc = ShardedScheduler::new(cfg).unwrap();
+    assert_eq!(svc.capacity(), 4);
+    assert_eq!(svc.nodes(), 3);
+    // round 1: first sightings assemble each matrix on its rendezvous
+    // home; round 2: repeats stick to the warm home
+    let homes: Vec<usize> = mats
+        .iter()
+        .enumerate()
+        .map(|(i, m)| probe_home(&svc, cg(m, i as u64)).0)
+        .collect();
+    for (i, m) in mats.iter().enumerate() {
+        let (n, rep) = probe_home(&svc, cg(m, 100 + i as u64));
+        assert_eq!(n, homes[i], "matrix {i} left its warm home unprompted");
+        assert!(rep.cache_hit, "matrix {i} must hit its warm cache");
+    }
+    let slot = svc.join_node().unwrap();
+    assert_eq!(slot, 3, "the spare slot comes online");
+    assert_eq!(svc.nodes(), 4);
+    // round 3: every key either stays put and stays warm, or re-homes
+    // onto the new node and assembles there — survivors never
+    // reshuffle among themselves
+    let mut moved = 0usize;
+    for (i, m) in mats.iter().enumerate() {
+        let (n, rep) = probe_home(&svc, cg(m, 200 + i as u64));
+        if n == homes[i] {
+            assert!(
+                rep.cache_hit,
+                "unmoved matrix {i} lost its warm cache to the join"
+            );
+        } else {
+            assert_eq!(
+                n, slot,
+                "matrix {i} reshuffled between survivors: {} -> {n}",
+                homes[i]
+            );
+            assert!(
+                !rep.cache_hit,
+                "matrix {i} cannot be warm on the brand-new node"
+            );
+            moved += 1;
+        }
+    }
+    assert!(
+        moved < W,
+        "a join must remap a slice, not the whole key space ({moved}/{W})"
+    );
+    assert_eq!(metric(&svc, "shard.node_joined"), 1);
+    // the headroom is spent: a fifth node has no rank to land on
+    assert!(svc.join_node().is_err(), "capacity 4 must refuse node 5");
+    assert_eq!(svc.shutdown(), 0);
+}
+
+/// A front restart loses nothing: the backlog shutdown strands is
+/// exactly what the final checkpoint parked, a fresh fabric restores
+/// it bitwise, and a crash-torn tail costs only the torn frame.
+#[test]
+fn restart_restores_the_checkpointed_backlog_bitwise() {
+    let a = Arc::new(matgen::poisson7::<f64>(6, 6, 4));
+    let specs: Vec<JobSpec> = (0..12).map(|s| cheb(&a, s, 16)).collect();
+    let want = single_reference(&specs);
+    let dir = std::env::temp_dir();
+    let path = dir.join(format!("ghost_chaos_ckpt_{}.bin", std::process::id()));
+    let torn = dir.join(format!("ghost_chaos_ckpt_{}_torn.bin", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_file(&torn);
+    let fabric = |ckpt: &std::path::Path| {
+        let mut cfg = chaos_config(2);
+        cfg.fd_round_ms = 0;
+        cfg.checkpoint = Some(ckpt.to_path_buf());
+        // the periodic checkpointer stays quiet so the file under test
+        // is exactly the final shutdown snapshot (the period itself is
+        // covered by the sched::checkpoint unit tests)
+        cfg.checkpoint_every_ms = 600_000;
+        ShardedScheduler::new(cfg).unwrap()
+    };
+    let svc = fabric(&path);
+    let handles: Vec<_> = specs
+        .iter()
+        .map(|s| svc.submit(s.clone()).expect("submit"))
+        .collect();
+    // the on-demand snapshot sees the whole outstanding burst
+    assert!(svc.checkpoint_now().unwrap() >= 1);
+    // the "crash": shut down immediately — the final checkpoint parks
+    // everything still outstanding, then those handles fail
+    let cancelled = svc.shutdown();
+    assert!(
+        cancelled >= 2,
+        "the burst must outlive the fabric (only {cancelled} parked)"
+    );
+    assert!(metric(&svc, "shard.checkpointed_jobs") >= cancelled as u64);
+    let mut failed_idx = Vec::new();
+    for (i, h) in handles.into_iter().enumerate() {
+        match h.wait() {
+            // what did finish is bitwise equal to the quiet run
+            Ok(rep) => assert_report_bitwise_equal("pre-crash", i, &rep, &want[i]),
+            Err(_) => failed_idx.push(i),
+        }
+    }
+    assert_eq!(
+        failed_idx.len(),
+        cancelled,
+        "stranded handles and cancelled count must reconcile"
+    );
+    // tear the tail off a copy before anything overwrites the file: a
+    // crash mid-write on a reordering filesystem truncates the last
+    // frame, never the header
+    let bytes = std::fs::read(&path).unwrap();
+    assert!(bytes.len() > 7);
+    std::fs::write(&torn, &bytes[..bytes.len() - 7]).unwrap();
+    // restart: the restored handles arrive in checkpoint order, which
+    // is id order, which (with one front) is submit order — so they
+    // line up with the stranded indices one for one
+    let svc2 = fabric(&path);
+    let restored = svc2.restore_checkpoint().unwrap();
+    assert_eq!(
+        restored.len(),
+        failed_idx.len(),
+        "a restart must lose no parked job"
+    );
+    let got: Vec<JobReport> = restored
+        .into_iter()
+        .map(|h| h.wait().expect("restored job"))
+        .collect();
+    for (j, rep) in got.iter().enumerate() {
+        assert_report_bitwise_equal("restored", j, rep, &want[failed_idx[j]]);
+    }
+    assert_eq!(svc2.shutdown(), 0);
+    // the torn copy restores everything but the torn tail frame
+    let svc3 = fabric(&torn);
+    let salvaged = svc3.restore_checkpoint().unwrap();
+    assert_eq!(
+        salvaged.len(),
+        failed_idx.len() - 1,
+        "a torn tail costs exactly the torn frame"
+    );
+    for (j, h) in salvaged.into_iter().enumerate() {
+        let rep = h.wait().expect("salvaged job");
+        assert_report_bitwise_equal("salvaged", j, &rep, &want[failed_idx[j]]);
+    }
+    assert_eq!(svc3.shutdown(), 0);
+    let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_file(&torn);
+}
+
+/// Deadlines are absolute: a job migrated twice by back-to-back
+/// graceful retirements keeps the deadline stamped at first submit, so
+/// its `deadline_missed` verdict reads the same as in a quiet run — a
+/// re-based deadline would flip the hopeless ones back to "met".
+#[test]
+fn absolute_deadlines_survive_double_migration() {
+    let a = Arc::new(matgen::poisson7::<f64>(16, 16, 16));
+    let specs: Vec<JobSpec> = (0..6u64)
+        .map(|seed| {
+            let mut s = cheb(&a, seed, 24);
+            // alternate an already-hopeless deadline with an
+            // unmissable one
+            s.deadline_ms = Some(if seed % 2 == 0 { 1 } else { 600_000 });
+            s
+        })
+        .collect();
+    let want = single_reference(&specs);
+    for (i, w) in want.iter().enumerate() {
+        assert_eq!(
+            w.deadline_missed,
+            Some(i % 2 == 0),
+            "reference-run sanity, job {i}"
+        );
+    }
+    let mut cfg = chaos_config(3);
+    cfg.policy = RoutePolicy::Load;
+    cfg.fd_round_ms = 0; // graceful leaves only: no detector in the loop
+    let svc = ShardedScheduler::new(cfg).unwrap();
+    let handles: Vec<_> = specs
+        .iter()
+        .map(|s| svc.submit(s.clone()).expect("submit"))
+        .collect();
+    // two retirements back to back: whatever node 0 owed lands on the
+    // survivors, and whatever landed on node 1 is evacuated *again*
+    svc.leave_node(0).unwrap();
+    svc.leave_node(1).unwrap();
+    assert_eq!(svc.nodes(), 1);
+    assert!(
+        svc.leave_node(2).is_err(),
+        "the last live node must refuse to retire"
+    );
+    let got: Vec<JobReport> = handles
+        .into_iter()
+        .map(|h| h.wait().expect("migrated job"))
+        .collect();
+    assert_outputs_bitwise_equal("double-migration", &got, &want);
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert_eq!(
+            g.deadline_missed, w.deadline_missed,
+            "job {i}: deadline verdict diverged after migration"
+        );
+    }
+    assert!(metric(&svc, "shard.evacuated_jobs") >= 1);
+    assert_eq!(metric(&svc, "shard.node_dead"), 0, "leaves are not deaths");
+    assert_eq!(svc.shutdown(), 0);
+}
