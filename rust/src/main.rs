@@ -38,13 +38,15 @@
 //!           with typed rejections instead of queueing unboundedly.
 //!           --trace FILE exports one JSONL line per completed job with
 //!           its full lifecycle span — see ghost::obs::trace.
-//!           Fault tolerance (sharded only): --max-nodes M reserves
-//!           node slots for runtime joins; --fd-round-ms/--fd-dead-rounds
-//!           tune the failure detector that evacuates a silent node's
-//!           parked and in-flight work onto the survivors; --checkpoint
-//!           FILE persists every parked job so a front restart resumes
-//!           them (the file is restored at startup), written every
-//!           --checkpoint-every-ms ms and once more at shutdown.)
+//!           Fault tolerance (sharded only — a single-node serve
+//!           refuses these flags rather than silently ignore them):
+//!           --max-nodes M reserves node slots for runtime joins;
+//!           --fd-round-ms/--fd-dead-rounds tune the failure detector
+//!           that evacuates a silent node's parked and in-flight work
+//!           onto the survivors; --checkpoint FILE persists every
+//!           parked job so a front restart resumes them (the file is
+//!           restored at startup), written every --checkpoint-every-ms
+//!           ms and once more at shutdown.)
 //!   client --connect HOST:PORT [--requests F.jsonl] [--shutdown]
 //!          (drive a `serve --listen` service over TCP: submit every
 //!           JSONL request pipelined, print one response line per
@@ -447,6 +449,18 @@ fn serve_config(a: &Args) -> Result<ghost::sched::ServeConfig> {
     }
     if let Some(ms) = a.flags.get("checkpoint-every-ms").and_then(|v| v.parse().ok()) {
         cfg = cfg.with_checkpoint_every_ms(ms);
+    }
+    // the failure detector only exists on the sharded engine; refuse
+    // explicit fd flags on a single-node serve rather than let the
+    // durability the user asked for be a silent no-op (validate()
+    // rejects --checkpoint there for the same reason)
+    if !cfg.sharded() {
+        ghost::ensure!(
+            !a.flags.contains_key("fd-round-ms") && !a.flags.contains_key("fd-dead-rounds"),
+            InvalidArg,
+            "--fd-round-ms/--fd-dead-rounds need a sharded service (--nodes > 1 or \
+             --fronts > 1): the single-node engine has no failure detector"
+        );
     }
     cfg.validate()?;
     Ok(cfg)

@@ -83,16 +83,22 @@ pub struct ServeConfig {
     /// [`ShardConfig::max_nodes`]); `0` means "exactly `nodes`".
     pub max_nodes: usize,
     /// Failure-detector round length, ms (see
-    /// [`ShardConfig::fd_round_ms`]); `0` disables the detector.
+    /// [`ShardConfig::fd_round_ms`]); `0` disables the detector. Only
+    /// meaningful on the sharded service — the single-node engine has
+    /// no failure detector (the CLI refuses explicit `--fd-*` flags
+    /// there).
     pub fd_round_ms: u64,
     /// Silent rounds before a node is declared dead (see
     /// [`ShardConfig::fd_dead_rounds`]); `0` disables the detector.
+    /// Sharded service only, like [`fd_round_ms`](Self::fd_round_ms).
     pub fd_dead_rounds: u64,
     /// Rounds an unanswered steal slot stays armed (see
     /// [`ShardConfig::steal_expire_rounds`]).
     pub steal_expire_rounds: u64,
     /// Parked-work checkpoint file (`ghost serve --checkpoint FILE`);
-    /// `None` disables checkpointing.
+    /// `None` disables checkpointing. Sharded service only —
+    /// [`validate`](ServeConfig::validate) refuses it on a single-node
+    /// serve, where it would be a silent no-op.
     pub checkpoint: Option<std::path::PathBuf>,
     /// Checkpoint cadence, ms (see [`ShardConfig::checkpoint_every_ms`]).
     pub checkpoint_every_ms: u64,
@@ -275,6 +281,15 @@ impl ServeConfig {
                 self.checkpoint_every_ms >= 1,
                 InvalidArg,
                 "checkpoint_every_ms must be >= 1 when checkpointing"
+            );
+            // the single-node engine never writes or restores a
+            // checkpoint: accepting the flag there would let users
+            // believe their backlog is persisted when it is not
+            crate::ensure!(
+                self.sharded(),
+                InvalidArg,
+                "checkpointing requires the sharded service (nodes > 1 or fronts > 1): \
+                 the single-node engine does not persist parked work"
             );
         }
         Ok(())
@@ -516,6 +531,22 @@ mod tests {
             .with_checkpoint_every_ms(0)
             .validate()
             .is_err());
+        // the single-node engine never persists parked work: accepting
+        // --checkpoint there would be a silent no-op, so it is refused
+        assert!(ServeConfig::default()
+            .with_checkpoint("/tmp/x.ckpt")
+            .validate()
+            .is_err());
+        assert!(ServeConfig::default()
+            .with_nodes(2)
+            .with_checkpoint("/tmp/x.ckpt")
+            .validate()
+            .is_ok());
+        assert!(ServeConfig::default()
+            .with_fronts(2)
+            .with_checkpoint("/tmp/x.ckpt")
+            .validate()
+            .is_ok());
     }
 
     #[test]

@@ -92,7 +92,7 @@
 //! the node, then one ack per front so every collector exits).
 
 use std::collections::{HashMap, HashSet};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, RwLock};
 
 use crate::comm::envelope::{ByteReader, ByteWriter, Envelope};
@@ -577,9 +577,11 @@ struct Front {
     gate: RwLock<bool>,
     /// Sum of node-reported shutdown cancellations.
     ack_cancelled: AtomicU64,
-    /// Fabric round counter, advanced by the monitor thread every
-    /// `fd_round_ms`. Clocks both the failure detector and steal-slot
-    /// expiry.
+    /// Fabric round counter, advanced by the always-running monitor
+    /// thread (every `fd_round_ms`, or on a fixed internal cadence when
+    /// failure detection is disabled). Clocks both the failure detector
+    /// and steal-slot expiry — the latter must keep ticking even with
+    /// the detector off, or a lost yield wedges a steal slot forever.
     round: AtomicU64,
     /// Last fabric round each node was heard from (pong or any result
     /// traffic). Judged against `round` by the failure detector.
@@ -589,6 +591,13 @@ struct Front {
     node_dead: AtomicU64,
     evacuated: AtomicU64,
     checkpointed: AtomicU64,
+    /// `false` while a checkpoint file left by a previous run may still
+    /// hold an un-restored backlog: the periodic writer and the
+    /// shutdown snapshot must not clobber it before
+    /// [`ShardedScheduler::restore_checkpoint`] has read it (or
+    /// [`ShardedScheduler::checkpoint_now`] explicitly overwrote it).
+    /// Starts `true` when there is no pre-existing file to protect.
+    ckpt_armed: AtomicBool,
 }
 
 impl Front {
@@ -616,14 +625,20 @@ impl Front {
     /// Pick a *live* node for `rkey` and charge the load account.
     /// `migrated` jobs charge the migrated account (see
     /// [`NodeStats::migrated_outstanding`]). Returns (node,
-    /// was-a-handoff, steal request as (node, bucket budget)).
+    /// was-a-handoff, steal request as (node, bucket budget)) — or
+    /// `None` when no node is live at all: the caller must fail the
+    /// job (mirroring evacuate's no-live-node arm) instead of parking
+    /// an envelope in a dead rank's mailbox that nothing will answer.
     fn route(
         &self,
         rkey: u64,
         has_deadline: bool,
         migrated: bool,
-    ) -> (usize, bool, Option<(usize, u64)>) {
+    ) -> Option<(usize, bool, Option<(usize, u64)>)> {
         let mut loads = self.loads.lock().unwrap();
+        if !loads.iter().any(|l| l.live) {
+            return None;
+        }
         let argmin = |loads: &[NodeStats]| -> usize {
             loads
                 .iter()
@@ -719,7 +734,7 @@ impl Front {
         if has_deadline {
             l.outstanding_deadlines += 1;
         }
-        (node, handoff, steal_from)
+        Some((node, handoff, steal_from))
     }
 
     /// Re-route a yielded bucket to the least-loaded node (≠ source) as
@@ -765,12 +780,11 @@ impl Front {
                 }
             }
         }
-        let k = jobs.len();
-        let dls = jobs
-            .iter()
-            .filter(|(_, s)| s.deadline_at_us.is_some())
-            .count();
         {
+            let dls = jobs
+                .iter()
+                .filter(|(_, s)| s.deadline_at_us.is_some())
+                .count();
             let mut loads = self.loads.lock().unwrap();
             loads[src].outstanding = loads[src].outstanding.saturating_sub(fresh);
             loads[src].migrated_outstanding =
@@ -778,7 +792,19 @@ impl Front {
             loads[src].outstanding_deadlines =
                 loads[src].outstanding_deadlines.saturating_sub(dls);
         }
+        // `owner` is the node the jobs are currently claimed for in the
+        // map — the yielding source at first, then each picked target.
+        // Only jobs still owned move with the batch: one answered (or
+        // claimed by a concurrent evacuation of a dying owner) while
+        // the bucket was in flight is already handled elsewhere and
+        // must not be sent twice.
+        let mut owner = src;
         loop {
+            let k = jobs.len();
+            let dls = jobs
+                .iter()
+                .filter(|(_, s)| s.deadline_at_us.is_some())
+                .count();
             let picked = {
                 let mut loads = self.loads.lock().unwrap();
                 let t = loads
@@ -818,25 +844,51 @@ impl Front {
                 }
                 return;
             };
+            let (mut lost, mut lost_dls) = (0usize, 0usize);
             {
                 let mut jmap = self.jobs.lock().unwrap();
-                for (id, s) in jobs.iter() {
-                    if let Some(j) = jmap.get_mut(id) {
+                jobs.retain(|(id, s)| match jmap.get_mut(id) {
+                    Some(j) if j.node == owner => {
                         j.node = target;
                         j.migrated = true;
                         j.spec = s.clone();
+                        true
                     }
-                }
+                    _ => {
+                        lost += 1;
+                        if s.deadline_at_us.is_some() {
+                            lost_dls += 1;
+                        }
+                        false
+                    }
+                });
             }
+            if lost > 0 {
+                let mut loads = self.loads.lock().unwrap();
+                let l = &mut loads[target];
+                l.migrated_outstanding = l.migrated_outstanding.saturating_sub(lost);
+                l.outstanding_deadlines = l.outstanding_deadlines.saturating_sub(lost_dls);
+                l.handoffs = l.handoffs.saturating_sub(lost as u64);
+            }
+            if jobs.is_empty() {
+                break;
+            }
+            owner = target;
             // the target may have died between the pick and the map
-            // update. Evacuation scans the job map after marking the
-            // node dead, so a target still live *here* — after our map
+            // update. Evacuation marks the node dead *before* its
+            // owed-scan, so a target still live *here* — after our map
             // update — is guaranteed to either answer or be evacuated;
-            // a target that died re-picks.
+            // a target that died re-picks (and its evacuation, if it
+            // claimed the jobs first, wins them via the owner check).
             if self.loads.lock().unwrap()[target].live {
                 let _ = comm.send_bytes(self.fronts + target, TAG_REQ, encode_batch(&jobs));
                 break;
             }
+            let k = jobs.len();
+            let dls = jobs
+                .iter()
+                .filter(|(_, s)| s.deadline_at_us.is_some())
+                .count();
             let mut loads = self.loads.lock().unwrap();
             let l = &mut loads[target];
             l.migrated_outstanding = l.migrated_outstanding.saturating_sub(k);
@@ -1027,14 +1079,18 @@ impl Front {
             {
                 let mut jmap = self.jobs.lock().unwrap();
                 match jmap.get_mut(&id) {
-                    Some(j) => {
+                    // still owed by the dead node: claim it
+                    Some(j) if j.node == node => {
                         j.node = target;
                         j.migrated = true;
                         j.spec = spec.clone();
                     }
-                    None => {
-                        // answered while we were evacuating: undo the
-                        // charge, skip the resubmit
+                    // answered while we were evacuating, or a racing
+                    // re-router (a submit whose insert lost the race
+                    // with this scan) already claimed it and will send
+                    // the envelope itself: undo the charge, skip the
+                    // resubmit
+                    _ => {
                         let mut loads = self.loads.lock().unwrap();
                         let l = &mut loads[target];
                         l.migrated_outstanding = l.migrated_outstanding.saturating_sub(1);
@@ -1124,6 +1180,9 @@ impl ShardedScheduler {
             node_dead: AtomicU64::new(0),
             evacuated: AtomicU64::new(0),
             checkpointed: AtomicU64::new(0),
+            ckpt_armed: AtomicBool::new(
+                cfg.checkpoint.as_deref().map_or(true, |p| !p.exists()),
+            ),
         });
         // the fronts own admission; a node must never bounce a job the
         // front already admitted
@@ -1135,12 +1194,19 @@ impl ShardedScheduler {
         for i in 0..cfg.nodes {
             spawn_node(&world, &front, &scfg, pus, i, &mut node_threads, &mut threads);
         }
-        // the failure detector: one monitor advancing the fabric round
-        // clock, probing every live node, and evacuating the silent
-        if cfg.fd_round_ms > 0 && cfg.fd_dead_rounds > 0 {
+        // The monitor always runs: it advances the fabric round clock
+        // that expires unanswered steal slots, which must keep ticking
+        // even with failure detection disabled — otherwise a lost
+        // yield (dropped envelope, home died mid-steal) would wedge a
+        // node's steal slot forever. Detection itself (probing and
+        // dead-declaration) only happens when both knobs are set;
+        // `dead_rounds == 0` puts the monitor in clock-only mode.
+        {
+            let detect = cfg.fd_round_ms > 0 && cfg.fd_dead_rounds > 0;
+            let round_ms = if detect { cfg.fd_round_ms } else { 10 };
+            let dead_rounds = if detect { cfg.fd_dead_rounds } else { 0 };
             let all_comms: Vec<Comm> = (0..fronts + capacity).map(|r| world.rank(r)).collect();
             let fr = front.clone();
-            let (round_ms, dead_rounds) = (cfg.fd_round_ms, cfg.fd_dead_rounds);
             threads.push(
                 std::thread::Builder::new()
                     .name("ghost-shard-monitor".into())
@@ -1302,11 +1368,14 @@ impl ShardedScheduler {
     }
 
     /// Write a checkpoint of every outstanding job right now. Errors
-    /// when no checkpoint file is configured.
+    /// when no checkpoint file is configured. An explicit snapshot is
+    /// caller intent to overwrite whatever the file held, so it also
+    /// arms the periodic writer.
     pub fn checkpoint_now(&self) -> Result<usize> {
         let path = self.checkpoint.as_deref().ok_or_else(|| {
             GhostError::InvalidArg("no checkpoint file configured".into())
         })?;
+        self.front.ckpt_armed.store(true, Ordering::SeqCst);
         self.front.write_checkpoint(path)
     }
 
@@ -1320,6 +1389,9 @@ impl ShardedScheduler {
             GhostError::InvalidArg("no checkpoint file configured".into())
         })?;
         let (restored, _torn) = super::checkpoint::load(path)?;
+        // the persisted backlog is in memory now: the periodic writer
+        // may overwrite the file with the live job set from here on
+        self.front.ckpt_armed.store(true, Ordering::SeqCst);
         let mut handles = Vec::with_capacity(restored.len());
         for (_, mut spec) in restored {
             spec.migrated = true;
@@ -1404,40 +1476,132 @@ impl ShardedScheduler {
         // restored job carries it even though its relative request
         // field was cleared on extraction
         let has_deadline = spec.deadline_at_us.is_some();
-        let (node, _handoff, steal) = self.front.route(rkey, has_deadline, spec.migrated);
         spec.trace.stamp(Stage::Route);
         let id = self.front.next_id.fetch_add(1, Ordering::SeqCst) + 1;
         let state = JobState::new(id);
-        self.front.jobs.lock().unwrap().insert(
-            id,
-            FrontJob {
-                state: state.clone(),
-                deadline: has_deadline,
-                front: f,
-                node,
-                migrated: spec.migrated,
-                spec: spec.clone(),
-            },
-        );
         self.front.counters.lock().unwrap()[f].submitted += 1;
-        let node_rank = self.front.fronts + node;
-        if let Err(e) = self.comms[f].send_bytes(node_rank, TAG_REQ, encode_submit(id, &spec)) {
-            self.front.complete(
-                node,
-                id,
-                Err(GhostError::Comm(format!("request envelope not sent: {e}"))),
-            );
-        }
-        if let Some((src, budget)) = steal {
-            // the routed job was handed off because `src` is backed up;
-            // ask it to also yield parked buckets so the backlog itself
-            // migrates (the yield flows back on src's result stream to
-            // this front and is re-routed by its collector)
-            let _ = self.comms[f].send_bytes(
-                self.front.fronts + src,
-                TAG_REQ,
-                encode_steal(budget),
-            );
+        // Route, make the job visible in the map, THEN re-check the
+        // target is still live (as reroute_stolen does). A node dying
+        // between route() and the map insert has already run its
+        // evacuation owed-scan, which cannot see a job that is not in
+        // the map yet — sending anyway would strand the envelope in a
+        // dead rank's mailbox and hang the handle forever. `prev`
+        // tracks which node this loop last claimed the job for, so a
+        // concurrent evacuation that re-routed it first wins the claim
+        // and this loop backs off without sending.
+        let mut prev: Option<usize> = None;
+        let target = loop {
+            let Some((node, _handoff, steal)) =
+                self.front.route(rkey, has_deadline, spec.migrated)
+            else {
+                // no live node can answer: mirror evacuate's
+                // no-live-node arm and fail the handle instead of
+                // stranding it (every dead node's accounts were zeroed
+                // by its evacuation, so completing is uncharged)
+                if prev.is_none() {
+                    self.front.jobs.lock().unwrap().insert(
+                        id,
+                        FrontJob {
+                            state: state.clone(),
+                            deadline: has_deadline,
+                            front: f,
+                            node: 0,
+                            migrated: spec.migrated,
+                            spec: spec.clone(),
+                        },
+                    );
+                }
+                self.front.complete(
+                    0,
+                    id,
+                    Err(GhostError::Comm(
+                        "no live node left to route the job to".into(),
+                    )),
+                );
+                break None;
+            };
+            {
+                let mut jmap = self.front.jobs.lock().unwrap();
+                match prev {
+                    None => {
+                        jmap.insert(
+                            id,
+                            FrontJob {
+                                state: state.clone(),
+                                deadline: has_deadline,
+                                front: f,
+                                node,
+                                migrated: spec.migrated,
+                                spec: spec.clone(),
+                            },
+                        );
+                    }
+                    Some(p) => match jmap.get_mut(&id) {
+                        // still ours: move the claim to the new node
+                        Some(j) if j.node == p => j.node = node,
+                        // evacuation re-routed (or failed) the job
+                        // while this loop was re-picking: its envelope
+                        // is already on its way — undo this round's
+                        // charge and send nothing
+                        _ => {
+                            let mut loads = self.front.loads.lock().unwrap();
+                            let l = &mut loads[node];
+                            if spec.migrated {
+                                l.migrated_outstanding =
+                                    l.migrated_outstanding.saturating_sub(1);
+                            } else {
+                                l.outstanding = l.outstanding.saturating_sub(1);
+                            }
+                            if has_deadline {
+                                l.outstanding_deadlines =
+                                    l.outstanding_deadlines.saturating_sub(1);
+                            }
+                            break None;
+                        }
+                    },
+                }
+            }
+            prev = Some(node);
+            if let Some((src, budget)) = steal {
+                // the routed job was handed off because `src` is backed
+                // up; ask it to also yield parked buckets so the
+                // backlog itself migrates (the yield flows back on
+                // src's result stream to this front and is re-routed by
+                // its collector). `src` is live and distinct from
+                // `node`, so the request goes out regardless of the
+                // liveness re-check below.
+                let _ = self.comms[f].send_bytes(
+                    self.front.fronts + src,
+                    TAG_REQ,
+                    encode_steal(budget),
+                );
+            }
+            if self.front.loads.lock().unwrap()[node].live {
+                break Some(node);
+            }
+            // `node` died between route() and the map update. If its
+            // evacuation saw the job after all (the update beat the
+            // owed-scan), the job is already re-routed or failed;
+            // otherwise the scan missed it and this loop re-routes.
+            let handled = match self.front.jobs.lock().unwrap().get(&id) {
+                Some(j) => j.node != node,
+                None => true,
+            };
+            if handled {
+                break None;
+            }
+        };
+        if let Some(node) = target {
+            let node_rank = self.front.fronts + node;
+            if let Err(e) =
+                self.comms[f].send_bytes(node_rank, TAG_REQ, encode_submit(id, &spec))
+            {
+                self.front.complete(
+                    node,
+                    id,
+                    Err(GhostError::Comm(format!("request envelope not sent: {e}"))),
+                );
+            }
         }
         drop(gate);
         Ok(JobHandle { state })
@@ -1520,9 +1684,10 @@ impl ShardedScheduler {
             shard.failed
         ));
         out.push_str(&format!(
-            "shard.max_nodes {}\nshard.node_joined {}\nshard.node_dead {}\n\
+            "shard.max_nodes {}\nshard.round {}\nshard.node_joined {}\nshard.node_dead {}\n\
              shard.evacuated_jobs {}\nshard.checkpointed_jobs {}\n",
             self.front.nodes,
+            self.front.round.load(Ordering::SeqCst),
             self.front.node_joined.load(Ordering::Relaxed),
             self.front.node_dead.load(Ordering::Relaxed),
             self.front.evacuated.load(Ordering::Relaxed),
@@ -1625,9 +1790,14 @@ impl ShardedScheduler {
             let _ = t.join();
         }
         // final checkpoint BEFORE failing stranded jobs: what shutdown
-        // is about to cancel is exactly what a restart must restore
+        // is about to cancel is exactly what a restart must restore.
+        // Skipped while a previous run's un-restored file is still
+        // being protected — overwriting it here would lose that backlog
+        // just as surely as the periodic writer would.
         if let Some(path) = self.checkpoint.as_deref() {
-            let _ = self.front.write_checkpoint(path);
+            if self.front.ckpt_armed.load(Ordering::SeqCst) {
+                let _ = self.front.write_checkpoint(path);
+            }
         }
         // failsafe: nothing can answer a job once the fabric is down
         let stranded: Vec<(Arc<JobState>, usize)> = self
@@ -1716,11 +1886,14 @@ fn spawn_node(
     }
 }
 
-/// The failure detector: every `round_ms` advance the fabric round
-/// clock, probe each live node, and declare dead any node that has
-/// been silent for more than `dead_rounds` rounds — then evacuate
-/// everything it owed and forge a close on its result streams so its
-/// collectors exit (the dead node can no longer say goodbye itself).
+/// The fabric round clock and failure detector: every `round_ms`
+/// advance the round counter (which expires unanswered steal slots —
+/// see [`Front::steal_inflight`]); then, unless `dead_rounds` is `0`
+/// (clock-only mode, failure detection disabled), probe each live node
+/// and declare dead any node that has been silent for more than
+/// `dead_rounds` rounds — evacuating everything it owed and forging a
+/// close on its result streams so its collectors exit (the dead node
+/// can no longer say goodbye itself).
 /// Detection *timing* is wall-clock, but the outcome is deterministic:
 /// evacuated jobs re-solve from their seeds bitwise-equal wherever
 /// they land.
@@ -1731,6 +1904,12 @@ fn monitor(comms: Vec<Comm>, front: Arc<Front>, round_ms: u64, dead_rounds: u64)
             return;
         }
         let round = front.round.fetch_add(1, Ordering::SeqCst) + 1;
+        // clock-only mode (failure detection disabled): the round
+        // advance above is the whole job — steal slots still expire,
+        // nothing is probed or declared dead
+        if dead_rounds == 0 {
+            continue;
+        }
         let live: Vec<usize> = {
             let loads = front.loads.lock().unwrap();
             loads
@@ -1761,6 +1940,10 @@ fn monitor(comms: Vec<Comm>, front: Arc<Front>, round_ms: u64, dead_rounds: u64)
 /// Periodically snapshot every outstanding job to the checkpoint file.
 /// The shutdown path writes the final image itself (after the fabric
 /// has drained what it can), so this thread just exits on the gate.
+/// While `ckpt_armed` is down (a file from a previous run exists but
+/// has not been restored yet) the writer stays quiet: overwriting the
+/// persisted backlog with the current — typically empty — job set
+/// before `restore_checkpoint` reads it would silently lose it.
 fn checkpointer(front: Arc<Front>, path: std::path::PathBuf, every_ms: u64) {
     let step = std::time::Duration::from_millis(every_ms.clamp(1, 25));
     let mut elapsed = 0u64;
@@ -1772,7 +1955,9 @@ fn checkpointer(front: Arc<Front>, path: std::path::PathBuf, every_ms: u64) {
         elapsed += step.as_millis() as u64;
         if elapsed >= every_ms {
             elapsed = 0;
-            let _ = front.write_checkpoint(&path);
+            if front.ckpt_armed.load(Ordering::SeqCst) {
+                let _ = front.write_checkpoint(&path);
+            }
         }
     }
 }

@@ -397,6 +397,112 @@ fn restart_restores_the_checkpointed_backlog_bitwise() {
     let _ = std::fs::remove_file(&torn);
 }
 
+/// With failure detection disabled the fabric round clock must keep
+/// ticking — it is what expires unanswered steal slots, so a frozen
+/// clock would re-wedge the K_STEAL slot of any node whose yield
+/// envelope was lost — while never probing or declaring deaths.
+#[test]
+fn round_clock_ticks_without_the_failure_detector() {
+    let mut cfg = chaos_config(2);
+    cfg.fd_round_ms = 0; // detection off; the clock must still run
+    let svc = ShardedScheduler::new(cfg).unwrap();
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+    while metric(&svc, "shard.round") == 0 {
+        assert!(
+            std::time::Instant::now() < deadline,
+            "the round clock is frozen with the failure detector disabled"
+        );
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    assert_eq!(
+        metric(&svc, "shard.node_dead"),
+        0,
+        "clock-only mode must never declare a death"
+    );
+    assert_eq!(svc.shutdown(), 0);
+}
+
+/// When every node has died, a fresh submit must fail its handle the
+/// way evacuation fails jobs stranded by the last death — never park
+/// an envelope in a dead rank's mailbox where nothing will answer it
+/// (that hangs the handle, drain(), and every net waiter forever).
+#[test]
+fn submit_with_no_live_node_fails_instead_of_hanging() {
+    let a = Arc::new(matgen::poisson7::<f64>(4, 4, 3));
+    let mut cfg = chaos_config(2);
+    cfg.fd_round_ms = 5;
+    cfg.fd_dead_rounds = 2;
+    let svc = ShardedScheduler::new(cfg).unwrap();
+    // sanity: the live fabric answers
+    svc.submit(cg(&a, 1)).unwrap().wait().unwrap();
+    svc.kill_node(0).unwrap();
+    svc.kill_node(1).unwrap();
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(60);
+    while svc.nodes() > 0 {
+        assert!(
+            std::time::Instant::now() < deadline,
+            "the detector never declared the killed nodes dead"
+        );
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    let err = svc
+        .submit(cg(&a, 2))
+        .expect("routing failure surfaces on the handle, not at submit")
+        .wait()
+        .expect_err("a fabric with no live node must fail the job");
+    assert!(
+        err.to_string().contains("no live node"),
+        "wrong failure: {err}"
+    );
+    let st = svc.shard_stats();
+    assert_eq!(st.completed, 1, "{st:?}");
+    assert_eq!(st.failed, 1, "{st:?}");
+    assert_eq!(svc.shutdown(), 0, "no handle may stay stranded");
+}
+
+/// A restart with an aggressive periodic checkpointer must not clobber
+/// the checkpoint file before `restore_checkpoint` has read it: the
+/// writer stays disarmed until the first restore (or an explicit
+/// `checkpoint_now`) — before this guard, a small --checkpoint-every-ms
+/// overwrote the persisted backlog with the empty live job set.
+#[test]
+fn periodic_checkpointer_cannot_clobber_an_unrestored_backlog() {
+    let a = Arc::new(matgen::poisson7::<f64>(6, 6, 4));
+    let dir = std::env::temp_dir();
+    let path = dir.join(format!("ghost_chaos_ckpt_race_{}.bin", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    let fabric = |every_ms: u64| {
+        let mut cfg = chaos_config(2);
+        cfg.fd_round_ms = 0;
+        cfg.checkpoint = Some(path.clone());
+        cfg.checkpoint_every_ms = every_ms;
+        ShardedScheduler::new(cfg).unwrap()
+    };
+    let svc = fabric(600_000);
+    let handles: Vec<_> = (0..8)
+        .map(|s| svc.submit(cheb(&a, s, 16)).expect("submit"))
+        .collect();
+    // the "crash": the final shutdown snapshot parks the backlog
+    let parked = svc.shutdown();
+    assert!(parked >= 1, "the burst must outlive the fabric");
+    drop(handles);
+    // restart with a 1ms writer and give it ample time to misbehave
+    // before the restore reads the file
+    let svc2 = fabric(1);
+    std::thread::sleep(std::time::Duration::from_millis(120));
+    let restored = svc2.restore_checkpoint().unwrap();
+    assert_eq!(
+        restored.len(),
+        parked,
+        "the periodic writer clobbered the un-restored backlog"
+    );
+    for h in restored {
+        h.wait().expect("restored job");
+    }
+    assert_eq!(svc2.shutdown(), 0);
+    let _ = std::fs::remove_file(&path);
+}
+
 /// Deadlines are absolute: a job migrated twice by back-to-back
 /// graceful retirements keeps the deadline stamped at first submit, so
 /// its `deadline_missed` verdict reads the same as in a quiet run — a
