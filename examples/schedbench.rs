@@ -53,7 +53,7 @@ use std::time::Instant;
 
 use ghost::benchutil::Table;
 use ghost::comm::CommConfig;
-use ghost::core::Result;
+use ghost::core::{Precision, Result};
 use ghost::matgen;
 use ghost::sched::{
     matrix_key, BatchPolicy, JobOutput, JobReport, JobSpec, MatrixSource, NetServer,
@@ -405,6 +405,64 @@ fn main() -> Result<()> {
     assert_bitwise("tcp vs batched", &batched.reports, &tcp.reports);
     println!("result check: TCP-ingress solutions bitwise-match in-process ✓");
 
+    // --- mixed precision: the same CG solve at f64 and f32 storage on
+    // the same matrix through the same service. The report's measured
+    // operator traffic (solve_bytes, PR-8 perf counters), normalized
+    // per matvec, shows the storage cut directly: an f32 value stream
+    // moves < 0.75x the bytes of the f64 one on the same sparsity.
+    let prec_svc = ServeConfig::default()
+        .with_pus(pus)
+        .with_shepherds(pus)
+        .with_batching(BatchPolicy::Off)
+        .build()?;
+    let prec_spec = |precision| {
+        let mut s = JobSpec::new(
+            MatrixSource::Mat(a.clone()),
+            SolverKind::Cg {
+                tol: 1e-8,
+                max_iters: 2000,
+            },
+        )
+        .with_precision(precision);
+        s.seed = 7;
+        s
+    };
+    let rep64 = prec_svc.submit(prec_spec(Precision::F64))?.wait()?;
+    let rep32 = prec_svc.submit(prec_spec(Precision::F32))?.wait()?;
+    prec_svc.shutdown();
+    let prec_stats = |rep: &JobReport| {
+        let secs = (rep.solve_ms / 1e3).max(1e-9);
+        let gf = 2.0 * rep.nnz as f64 * rep.matvecs as f64 / secs / 1e9;
+        let bpm = rep.solve_bytes / (rep.matvecs as f64).max(1.0);
+        (gf, bpm)
+    };
+    let (gflops_f64, bytes_f64) = prec_stats(&rep64);
+    let (gflops_f32, bytes_f32) = prec_stats(&rep32);
+    for (name, rep) in [("f64", &rep64), ("f32", &rep32)] {
+        if let JobOutput::Solve {
+            converged,
+            final_residual,
+            iterations,
+            ..
+        } = &rep.output
+        {
+            assert!(
+                *converged,
+                "{name} CG must converge to the f64 tolerance (residual {final_residual:.2e})"
+            );
+            println!(
+                "precision {name}: {iterations} iterations, residual {final_residual:.2e}, \
+                 {:.0} bytes/matvec",
+                rep.solve_bytes / (rep.matvecs as f64).max(1.0)
+            );
+        }
+    }
+    println!(
+        "mixed precision: f32 streams {:.2}x the bytes/matvec of f64 \
+         ({gflops_f32:.2} vs {gflops_f64:.2} Gflop/s)",
+        bytes_f32 / bytes_f64.max(1e-9)
+    );
+
     let mut t = Table::new(&[
         "mode",
         "jobs/s",
@@ -480,6 +538,8 @@ fn main() -> Result<()> {
              \"deadline_jobs\":{dl_jobs},\"deadline_missed\":{dl_missed},\
              \"deadline_miss_rate\":{:.4},\"stolen_buckets\":{},\
              \"evacuated_jobs\":{evacuated_jobs},\
+             \"gflops_f64\":{gflops_f64:.4},\"gflops_f32\":{gflops_f32:.4},\
+             \"bytes_f64\":{bytes_f64:.1},\"bytes_f32\":{bytes_f32:.1},\
              \"achieved_gflops\":{:.4},\"efficiency\":{:.4}}}",
             batched.reports.len(),
             batched.reports.len() as f64 / secs,

@@ -63,7 +63,12 @@ pub fn wire_stats() -> (u64, u64, u64, u64) {
 /// node's result stream so collectors unblock), and the checkpoint
 /// record kind used by the parked-work checkpoint file
 /// ([`crate::sched::checkpoint`] — same codec, never on the fabric).
-pub const ENVELOPE_VERSION: u16 = 5;
+/// v6: mixed precision — spec and fingerprint envelopes carry the
+/// requested storage-precision tag (f64/f32/bf16) and job results
+/// carry the measured operator traffic (`solve_bytes`), so a v5 peer
+/// can neither misread an f32 request as f64 nor drop the byte
+/// accounting silently.
+pub const ENVELOPE_VERSION: u16 = 6;
 
 /// Little-endian append-only byte sink.
 #[derive(Default)]

@@ -8,7 +8,9 @@ pub mod scalar;
 
 pub use error::{GhostError, Result};
 pub use rng::Rng;
-pub use scalar::{Complex, Scalar, C32, C64};
+#[cfg(feature = "bf16")]
+pub use scalar::Bf16;
+pub use scalar::{Complex, Precision, PromoteTo, Scalar, C32, C64};
 
 /// Global row/column index (64-bit; section 5.1 of the paper).
 pub type Gidx = i64;

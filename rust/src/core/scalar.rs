@@ -177,6 +177,282 @@ pub trait Scalar:
         let _ = v;
         None
     }
+    /// View a slice of `Self` as `f32` when `Self` *is* `f32` — the
+    /// dispatch hook for the mixed-precision x86 kernel (f32 value
+    /// stream, f64 accumulation).
+    #[inline(always)]
+    fn as_f32_slice(v: &[Self]) -> Option<&[f32]> {
+        let _ = v;
+        None
+    }
+}
+
+/// Lossy-down / exact-up conversion between a low-precision storage
+/// scalar and the (wider) accumulation scalar. The mixed-precision SELL
+/// kernels are generic over `V: PromoteTo<f64>`: the value stream is
+/// read in `V`, promoted *exactly* (`f32 -> f64` and `bf16 -> f64` are
+/// injective), and every arithmetic operation runs in f64 — which is
+/// what makes the bitwise-equality contract across kernel variants hold
+/// for mixed operators exactly as it does for uniform ones.
+pub trait PromoteTo<S: Scalar>: Scalar {
+    /// Exact widening conversion (storage -> accumulation).
+    fn up(self) -> S;
+    /// Rounding narrowing conversion (accumulation -> storage).
+    fn down(v: S) -> Self;
+}
+
+impl<S: Scalar> PromoteTo<S> for S {
+    #[inline(always)]
+    fn up(self) -> S {
+        self
+    }
+    #[inline(always)]
+    fn down(v: S) -> Self {
+        v
+    }
+}
+
+impl PromoteTo<f64> for f32 {
+    #[inline(always)]
+    fn up(self) -> f64 {
+        self as f64
+    }
+    #[inline(always)]
+    fn down(v: f64) -> Self {
+        v as f32
+    }
+}
+
+/// Matrix-value storage precision: the user-visible knob the mixed-
+/// precision solve path hangs off. `F64` is classic uniform double;
+/// `F32` (and `Bf16` behind the `bf16` cargo feature) store the SELL
+/// value array narrow while every recurrence accumulates in f64.
+/// Travels through [`crate::tune::Fingerprint`], the operator-cache
+/// key, the request schema (`"precision"` JSONL field) and the wire
+/// protocol (one tag byte).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug, Default)]
+pub enum Precision {
+    #[default]
+    F64,
+    F32,
+    #[cfg(feature = "bf16")]
+    Bf16,
+}
+
+impl Precision {
+    /// Canonical lowercase name — the JSONL request value and the
+    /// fingerprint/decision-cache tag.
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::F64 => "f64",
+            Precision::F32 => "f32",
+            #[cfg(feature = "bf16")]
+            Precision::Bf16 => "bf16",
+        }
+    }
+
+    /// Parse a request-schema precision value. `None` for anything
+    /// outside the allowed set (callers turn that into a typed reject
+    /// naming [`Precision::allowed`]).
+    pub fn parse(s: &str) -> Option<Precision> {
+        match s {
+            "f64" => Some(Precision::F64),
+            "f32" => Some(Precision::F32),
+            #[cfg(feature = "bf16")]
+            "bf16" => Some(Precision::Bf16),
+            _ => None,
+        }
+    }
+
+    /// The allowed set, for reject diagnostics.
+    pub fn allowed() -> &'static str {
+        #[cfg(feature = "bf16")]
+        {
+            "f64, f32, bf16"
+        }
+        #[cfg(not(feature = "bf16"))]
+        {
+            "f64, f32"
+        }
+    }
+
+    /// Stable wire tag (proto/envelope field).
+    pub fn tag(self) -> u8 {
+        match self {
+            Precision::F64 => 0,
+            Precision::F32 => 1,
+            #[cfg(feature = "bf16")]
+            Precision::Bf16 => 2,
+        }
+    }
+
+    /// Inverse of [`Precision::tag`]. A tag for a precision this build
+    /// does not support (bf16 without the feature) is `None`.
+    pub fn from_tag(t: u8) -> Option<Precision> {
+        match t {
+            0 => Some(Precision::F64),
+            1 => Some(Precision::F32),
+            #[cfg(feature = "bf16")]
+            2 => Some(Precision::Bf16),
+            _ => None,
+        }
+    }
+
+    /// Matrix-value bytes per element at this precision.
+    pub fn value_bytes(self) -> usize {
+        match self {
+            Precision::F64 => 8,
+            Precision::F32 => 4,
+            #[cfg(feature = "bf16")]
+            Precision::Bf16 => 2,
+        }
+    }
+}
+
+impl fmt::Display for Precision {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// bfloat16 storage scalar (behind the `bf16` cargo feature): the top
+/// 16 bits of an f32, kept only as a *storage* format — all arithmetic
+/// round-trips through f32/f64, and the mixed kernels promote each
+/// value exactly before accumulating.
+#[cfg(feature = "bf16")]
+#[derive(Clone, Copy, PartialEq, Debug, Default)]
+#[repr(transparent)]
+pub struct Bf16(pub u16);
+
+#[cfg(feature = "bf16")]
+impl Bf16 {
+    #[inline(always)]
+    pub fn from_f32(v: f32) -> Self {
+        let bits = v.to_bits();
+        if v.is_nan() {
+            // keep NaN a NaN: force a quiet-bit payload that survives
+            // the truncation
+            return Bf16(((bits >> 16) as u16) | 0x0040);
+        }
+        // round to nearest even on the dropped 16 bits
+        let bias = 0x7fff + ((bits >> 16) & 1);
+        Bf16((bits.wrapping_add(bias) >> 16) as u16)
+    }
+
+    #[inline(always)]
+    pub fn to_f32(self) -> f32 {
+        f32::from_bits((self.0 as u32) << 16)
+    }
+}
+
+#[cfg(feature = "bf16")]
+macro_rules! bf16_binop {
+    ($trait:ident, $m:ident, $atrait:ident, $am:ident) => {
+        impl $trait for Bf16 {
+            type Output = Self;
+            #[inline(always)]
+            fn $m(self, o: Self) -> Self {
+                Bf16::from_f32(self.to_f32().$m(o.to_f32()))
+            }
+        }
+        impl $atrait for Bf16 {
+            #[inline(always)]
+            fn $am(&mut self, o: Self) {
+                *self = Bf16::from_f32(self.to_f32().$m(o.to_f32()));
+            }
+        }
+    };
+}
+
+#[cfg(feature = "bf16")]
+bf16_binop!(Add, add, AddAssign, add_assign);
+#[cfg(feature = "bf16")]
+bf16_binop!(Sub, sub, SubAssign, sub_assign);
+#[cfg(feature = "bf16")]
+bf16_binop!(Mul, mul, MulAssign, mul_assign);
+
+#[cfg(feature = "bf16")]
+impl Div for Bf16 {
+    type Output = Self;
+    #[inline(always)]
+    fn div(self, o: Self) -> Self {
+        Bf16::from_f32(self.to_f32() / o.to_f32())
+    }
+}
+
+#[cfg(feature = "bf16")]
+impl DivAssign for Bf16 {
+    #[inline(always)]
+    fn div_assign(&mut self, o: Self) {
+        *self = *self / o;
+    }
+}
+
+#[cfg(feature = "bf16")]
+impl Neg for Bf16 {
+    type Output = Self;
+    #[inline(always)]
+    fn neg(self) -> Self {
+        Bf16(self.0 ^ 0x8000)
+    }
+}
+
+#[cfg(feature = "bf16")]
+impl Sum for Bf16 {
+    fn sum<I: Iterator<Item = Self>>(it: I) -> Self {
+        Bf16::from_f32(it.map(|v| v.to_f32()).sum())
+    }
+}
+
+#[cfg(feature = "bf16")]
+impl fmt::Display for Bf16 {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.to_f32())
+    }
+}
+
+#[cfg(feature = "bf16")]
+impl Scalar for Bf16 {
+    const ZERO: Self = Bf16(0);
+    const ONE: Self = Bf16(0x3f80); // 1.0f32 >> 16
+    const IS_COMPLEX: bool = false;
+    const NAME: &'static str = "bf16";
+    #[inline(always)]
+    fn from_f64(v: f64) -> Self {
+        Bf16::from_f32(v as f32)
+    }
+    #[inline(always)]
+    fn from_re_im(re: f64, _im: f64) -> Self {
+        Bf16::from_f32(re as f32)
+    }
+    #[inline(always)]
+    fn conj(self) -> Self {
+        self
+    }
+    #[inline(always)]
+    fn re(self) -> f64 {
+        self.to_f32() as f64
+    }
+    #[inline(always)]
+    fn im(self) -> f64 {
+        0.0
+    }
+    #[inline(always)]
+    fn abs(self) -> f64 {
+        (self.to_f32() as f64).abs()
+    }
+}
+
+#[cfg(feature = "bf16")]
+impl PromoteTo<f64> for Bf16 {
+    #[inline(always)]
+    fn up(self) -> f64 {
+        self.to_f32() as f64
+    }
+    #[inline(always)]
+    fn down(v: f64) -> Self {
+        Bf16::from_f32(v as f32)
+    }
 }
 
 impl Scalar for f32 {
@@ -211,6 +487,10 @@ impl Scalar for f32 {
     #[inline(always)]
     fn mul_add(a: Self, b: Self, c: Self) -> Self {
         f32::mul_add(a, b, c)
+    }
+    #[inline(always)]
+    fn as_f32_slice(v: &[Self]) -> Option<&[f32]> {
+        Some(v)
     }
 }
 
@@ -366,5 +646,43 @@ mod tests {
     fn from_re_im() {
         assert_eq!(f64::from_re_im(2.0, 9.0), 2.0);
         assert_eq!(C64::from_re_im(2.0, 9.0), C64::new(2.0, 9.0));
+    }
+
+    #[test]
+    fn precision_roundtrips() {
+        for p in [Precision::F64, Precision::F32] {
+            assert_eq!(Precision::parse(p.name()), Some(p));
+            assert_eq!(Precision::from_tag(p.tag()), Some(p));
+        }
+        assert_eq!(Precision::parse("f16"), None);
+        assert_eq!(Precision::from_tag(200), None);
+        assert_eq!(Precision::default(), Precision::F64);
+        assert_eq!(Precision::F64.value_bytes(), 8);
+        assert_eq!(Precision::F32.value_bytes(), 4);
+        assert!(Precision::allowed().contains("f32"));
+    }
+
+    #[test]
+    fn promote_is_exact_for_f32() {
+        // every f32 promotes exactly: down-then-up round-trips
+        for v in [1.0f32, -0.25, 3.5e7, f32::MIN_POSITIVE, 1e-30] {
+            assert_eq!(<f32 as PromoteTo<f64>>::up(v), v as f64);
+            assert_eq!(<f32 as PromoteTo<f64>>::down(v as f64), v);
+        }
+        // reflexive impl is the identity
+        assert_eq!(<f64 as PromoteTo<f64>>::up(2.5), 2.5);
+    }
+
+    #[cfg(feature = "bf16")]
+    #[test]
+    fn bf16_storage_roundtrip() {
+        assert_eq!(Bf16::ONE.to_f32(), 1.0);
+        assert_eq!(Bf16::from_f32(1.5).to_f32(), 1.5);
+        assert_eq!((-Bf16::from_f32(2.0)).to_f32(), -2.0);
+        assert!(Bf16::from_f32(f32::NAN).to_f32().is_nan());
+        // promote is exact (bf16 is a prefix of f32)
+        let v = Bf16::from_f32(0.1);
+        assert_eq!(<Bf16 as PromoteTo<f64>>::up(v), v.to_f32() as f64);
+        assert_eq!(Precision::Bf16.value_bytes(), 2);
     }
 }

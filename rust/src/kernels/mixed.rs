@@ -1,0 +1,330 @@
+//! Mixed-precision single-vector SpMV: low-precision SELL value stream,
+//! f64 operands and f64 accumulation.
+//!
+//! These kernels are the bandwidth play of the precision axis: the
+//! matrix value array — the dominant traffic stream of every SELL
+//! kernel (section 4.1's code balance) — is stored in `V` (f32, or bf16
+//! behind the `bf16` feature) and each value is promoted *exactly* to
+//! f64 ([`PromoteTo::up`]) right before the multiply. Every arithmetic
+//! operation then runs in f64, in ascending chunk-column order with
+//! separate multiply and add — the same accumulation contract as the
+//! uniform kernels in [`super::spmv`], so all three structural variants
+//! produce bitwise-identical results for a given stored matrix.
+//!
+//! The variant set mirrors [`super::spmv::SpmvVariant`] one-for-one
+//! (same autotuner axis, same preference order); the `Simd` body
+//! dispatches to an AVX2 f32→f64 chunk kernel under the `simd` feature
+//! ([`super::simd_x86::spmv_chunk_f32_to_f64`]) and falls back to the
+//! portable wide-lane body everywhere else.
+
+use super::prefetch_read;
+use super::spmv::{SpmvVariant, PREFETCH_DIST, SIMD_LANES};
+use crate::core::PromoteTo;
+use crate::sparsemat::SellMat;
+
+/// y = A x with `V`-stored values and f64 accumulation. `x` is indexed
+/// by SELL-local column indices; `y` has `nrows_padded` entries in SELL
+/// row order — the mixed twin of [`super::spmv::sell_spmv`].
+pub fn sell_spmv_mixed<V: PromoteTo<f64>>(
+    a: &SellMat<V>,
+    x: &[f64],
+    y: &mut [f64],
+    variant: SpmvVariant,
+) {
+    debug_assert!(y.len() >= a.nrows_padded());
+    debug_assert!(x.len() >= a.ncols());
+    mixed_range_offset(a, x, y, 0, a.nchunks(), variant);
+}
+
+/// Multi-threaded mixed SpMV: chunk ranges split exactly like
+/// [`super::spmv::sell_spmv_mt`] (disjoint y slices on chunk
+/// boundaries), so threading never changes results.
+pub fn sell_spmv_mixed_mt<V: PromoteTo<f64>>(
+    a: &SellMat<V>,
+    x: &[f64],
+    y: &mut [f64],
+    variant: SpmvVariant,
+    nthreads: usize,
+) {
+    let nchunks = a.nchunks();
+    let nt = nthreads.max(1).min(nchunks.max(1));
+    if nt <= 1 {
+        sell_spmv_mixed(a, x, y, variant);
+        return;
+    }
+    let c = a.chunk_height();
+    let per = nchunks.div_ceil(nt);
+    let mut slices: Vec<&mut [f64]> = Vec::with_capacity(nt);
+    let mut rest: &mut [f64] = &mut y[..nchunks * c];
+    for t in 0..nt {
+        let lo = (t * per).min(nchunks);
+        let hi = ((t + 1) * per).min(nchunks);
+        let take = (hi - lo) * c;
+        let (head, tail) = rest.split_at_mut(take);
+        slices.push(head);
+        rest = tail;
+    }
+    std::thread::scope(|s| {
+        for (t, ys) in slices.into_iter().enumerate() {
+            let lo = (t * per).min(nchunks);
+            let hi = ((t + 1) * per).min(nchunks);
+            s.spawn(move || {
+                mixed_range_offset(a, x, ys, lo, hi, variant);
+            });
+        }
+    });
+}
+
+/// Dispatch one contiguous chunk range to the requested variant's mixed
+/// body; `yslice` is `y[ch0*C .. ch1*C]` of the full result.
+fn mixed_range_offset<V: PromoteTo<f64>>(
+    a: &SellMat<V>,
+    x: &[f64],
+    yslice: &mut [f64],
+    ch0: usize,
+    ch1: usize,
+    variant: SpmvVariant,
+) {
+    match variant {
+        SpmvVariant::Vectorized => mixed_chunks_vec(a, x, yslice, ch0, ch1),
+        SpmvVariant::Scalar => mixed_chunks_scalar(a, x, yslice, ch0, ch1),
+        SpmvVariant::Simd => mixed_chunks_simd(a, x, yslice, ch0, ch1),
+    }
+}
+
+/// Chunk-column traversal (auto-vectorizable): contiguous in r.
+fn mixed_chunks_vec<V: PromoteTo<f64>>(
+    a: &SellMat<V>,
+    x: &[f64],
+    yslice: &mut [f64],
+    ch0: usize,
+    ch1: usize,
+) {
+    let c = a.chunk_height();
+    let val = a.values();
+    let col = a.colidx();
+    let cptr = a.chunk_ptr();
+    let clen = a.chunk_len();
+    for ch in ch0..ch1 {
+        let base = cptr[ch];
+        let w = clen[ch];
+        let yrow = &mut yslice[(ch - ch0) * c..(ch - ch0 + 1) * c];
+        yrow.fill(0.0);
+        for wi in 0..w {
+            let vs = &val[base + wi * c..base + wi * c + c];
+            let cs = &col[base + wi * c..base + wi * c + c];
+            for r in 0..c {
+                // exact promote, then f64 mul + add: vectorizes
+                yrow[r] += vs[r].up() * x[cs[r] as usize];
+            }
+        }
+    }
+}
+
+/// Row-wise stride-C traversal — the no-vectorization baseline.
+fn mixed_chunks_scalar<V: PromoteTo<f64>>(
+    a: &SellMat<V>,
+    x: &[f64],
+    yslice: &mut [f64],
+    ch0: usize,
+    ch1: usize,
+) {
+    let c = a.chunk_height();
+    let val = a.values();
+    let col = a.colidx();
+    let cptr = a.chunk_ptr();
+    let clen = a.chunk_len();
+    for ch in ch0..ch1 {
+        let base = cptr[ch];
+        let w = clen[ch];
+        for r in 0..c {
+            let mut acc = 0.0f64;
+            let mut k = base + r;
+            for _ in 0..w {
+                acc += val[k].up() * x[col[k] as usize];
+                k += c;
+            }
+            yslice[(ch - ch0) * c + r] = acc;
+        }
+    }
+}
+
+/// Explicit wide-lane chunk-column body with software prefetch; the f32
+/// storage case runs on AVX2 intrinsics when the `simd` feature and the
+/// host allow it.
+fn mixed_chunks_simd<V: PromoteTo<f64>>(
+    a: &SellMat<V>,
+    x: &[f64],
+    yslice: &mut [f64],
+    ch0: usize,
+    ch1: usize,
+) {
+    let c = a.chunk_height();
+    let val = a.values();
+    let col = a.colidx();
+    let cptr = a.chunk_ptr();
+    let clen = a.chunk_len();
+    for ch in ch0..ch1 {
+        let base = cptr[ch];
+        let w = clen[ch];
+        let yrow = &mut yslice[(ch - ch0) * c..(ch - ch0 + 1) * c];
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        if super::simd_x86::spmv_chunk_f32_to_f64(val, col, x, yrow, base, w, c) {
+            continue;
+        }
+        let mut r = 0;
+        while r + SIMD_LANES <= c {
+            let (mut a0, mut a1, mut a2, mut a3) = (0.0f64, 0.0, 0.0, 0.0);
+            for wi in 0..w {
+                let k = base + wi * c + r;
+                if wi + PREFETCH_DIST < w {
+                    let kp = k + PREFETCH_DIST * c;
+                    prefetch_read(x, col[kp] as usize);
+                    prefetch_read(x, col[kp + 1] as usize);
+                    prefetch_read(x, col[kp + 2] as usize);
+                    prefetch_read(x, col[kp + 3] as usize);
+                }
+                a0 += val[k].up() * x[col[k] as usize];
+                a1 += val[k + 1].up() * x[col[k + 1] as usize];
+                a2 += val[k + 2].up() * x[col[k + 2] as usize];
+                a3 += val[k + 3].up() * x[col[k + 3] as usize];
+            }
+            yrow[r] = a0;
+            yrow[r + 1] = a1;
+            yrow[r + 2] = a2;
+            yrow[r + 3] = a3;
+            r += SIMD_LANES;
+        }
+        while r < c {
+            let mut acc = 0.0f64;
+            for wi in 0..w {
+                let k = base + wi * c + r;
+                acc += val[k].up() * x[col[k] as usize];
+            }
+            yrow[r] = acc;
+            r += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::prop::prop_check;
+    use crate::core::{Lidx, Rng, Scalar};
+    use crate::kernels::spmv::unpermute;
+    use crate::sparsemat::Crs;
+
+    fn random_crs(rng: &mut Rng, n: usize, avg: usize) -> Crs<f64> {
+        Crs::from_row_fn(n, n, |_i, cols, vals| {
+            let k = rng.range(0, (2 * avg).min(n) + 1);
+            for c in rng.sample_distinct(n, k) {
+                cols.push(c as Lidx);
+                vals.push(rng.normal());
+            }
+        })
+        .unwrap()
+    }
+
+    /// Reference: CRS SpMV with values narrowed to V then promoted —
+    /// the exact arithmetic the mixed SELL kernels must reproduce.
+    fn mixed_crs_ref<V: crate::core::PromoteTo<f64>>(a: &Crs<f64>, x: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0f64; a.nrows()];
+        for i in 0..a.nrows() {
+            let mut acc = 0.0f64;
+            let (cols, vals) = a.row(i);
+            for (c, v) in cols.iter().zip(vals) {
+                acc += V::down(*v).up() * x[*c as usize];
+            }
+            y[i] = acc;
+        }
+        y
+    }
+
+    #[test]
+    fn mixed_variants_bitwise_match_each_other_and_crs_ref() {
+        prop_check(30, 61, |g| {
+            let n = g.usize(1, 120);
+            let a = random_crs(g.rng(), n, 6);
+            let c = *g.choose(&[1usize, 4, 8, 32]);
+            let sigma = *g.choose(&[1usize, 16, 256]);
+            let s64 = crate::sparsemat::SellMat::from_crs(&a, c, sigma).unwrap();
+            let s32 = s64.map_values(|v| v as f32);
+            let x = g.vec_normal(n);
+            let y_ref = mixed_crs_ref::<f32>(&a, &x);
+            let mut xs = vec![0.0; s32.nrows_padded().max(n)];
+            xs[..n].copy_from_slice(&x);
+            for variant in SpmvVariant::ALL {
+                let mut ys = vec![0.0; s32.nrows_padded()];
+                sell_spmv_mixed(&s32, &xs, &mut ys, variant);
+                let mut y = vec![0.0; n];
+                unpermute(&s32, &ys, &mut y);
+                for i in 0..n {
+                    assert!(
+                        y[i].to_bits() == y_ref[i].to_bits(),
+                        "{variant:?} row {i}: {} vs {}",
+                        y[i],
+                        y_ref[i]
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn mixed_multithreaded_matches_sequential() {
+        prop_check(10, 67, |g| {
+            let n = g.usize(10, 300);
+            let a = random_crs(g.rng(), n, 8);
+            let s32 = crate::sparsemat::SellMat::from_crs(&a, 8, 64)
+                .unwrap()
+                .map_values(|v| v as f32);
+            let x = g.vec_normal(n);
+            let mut xs = vec![0.0; s32.nrows_padded().max(n)];
+            xs[..n].copy_from_slice(&x);
+            for variant in SpmvVariant::ALL {
+                let mut y1 = vec![0.0; s32.nrows_padded()];
+                sell_spmv_mixed(&s32, &xs, &mut y1, variant);
+                for nt in [2usize, 3, 7] {
+                    let mut y2 = vec![0.0; s32.nrows_padded()];
+                    sell_spmv_mixed_mt(&s32, &xs, &mut y2, variant, nt);
+                    assert_eq!(y1, y2, "{variant:?} nthreads={nt}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn f64_storage_through_mixed_matches_uniform_kernel() {
+        // the reflexive PromoteTo impl makes the mixed kernel a strict
+        // generalization: V = f64 must reproduce the uniform kernel
+        let mut rng = Rng::new(9);
+        let a = random_crs(&mut rng, 64, 6);
+        let s = crate::sparsemat::SellMat::from_crs(&a, 4, 16).unwrap();
+        let x: Vec<f64> = (0..64).map(|i| (i as f64) * 0.5 - 7.0).collect();
+        let mut xs = vec![0.0; s.nrows_padded()];
+        xs[..64].copy_from_slice(&x);
+        for variant in SpmvVariant::ALL {
+            let mut y_mixed = vec![0.0; s.nrows_padded()];
+            sell_spmv_mixed(&s, &xs, &mut y_mixed, variant);
+            let mut y_uniform = vec![0.0; s.nrows_padded()];
+            crate::kernels::spmv::sell_spmv(&s, &xs, &mut y_uniform, variant);
+            assert_eq!(y_mixed, y_uniform, "{variant:?}");
+        }
+    }
+
+    #[test]
+    fn value_bytes_actually_halve() {
+        let mut rng = Rng::new(3);
+        let a = random_crs(&mut rng, 100, 8);
+        let s64 = crate::sparsemat::SellMat::from_crs(&a, 8, 32).unwrap();
+        let s32 = s64.map_values(|v| v as f32);
+        let idx_bytes = s64.colidx().len() * std::mem::size_of::<Lidx>();
+        assert_eq!(
+            s32.bytes() - idx_bytes,
+            (s64.bytes() - idx_bytes) / 2,
+            "f32 value array must be exactly half the f64 one"
+        );
+        assert_eq!(f32::bytes(), 4);
+    }
+}

@@ -4,12 +4,14 @@
 //! ("fused") SpMV of section 5.3.
 
 pub mod fused;
+pub mod mixed;
 #[cfg(all(feature = "simd", target_arch = "x86_64"))]
 pub(crate) mod simd_x86;
 pub mod spmmv;
 pub mod spmv;
 
 pub use fused::{sell_spmv_fused, sell_spmv_fused_variant, FusedDots, SpmvOpts};
+pub use mixed::{sell_spmv_mixed, sell_spmv_mixed_mt};
 pub use spmmv::{sell_spmmv, sell_spmmv_generic, sell_spmmv_variant, SpmmvVariant};
 pub use spmv::{crs_spmv, sell_spmv, sell_spmv_mt, SpmvVariant};
 

@@ -13,8 +13,9 @@
 //! contract between kernel variants that the equivalence suite asserts.
 
 use std::arch::x86_64::{
-    __m128i, _mm256_add_pd, _mm256_i32gather_pd, _mm256_loadu_pd, _mm256_mul_pd,
-    _mm256_setzero_pd, _mm256_storeu_pd, _mm_loadu_si128, _mm_prefetch, _MM_HINT_T0,
+    __m128i, _mm256_add_pd, _mm256_cvtps_pd, _mm256_i32gather_pd, _mm256_loadu_pd,
+    _mm256_mul_pd, _mm256_setzero_pd, _mm256_storeu_pd, _mm_loadu_ps, _mm_loadu_si128,
+    _mm_prefetch, _MM_HINT_T0,
 };
 use std::sync::OnceLock;
 
@@ -90,6 +91,69 @@ unsafe fn chunk_avx2(
     }
 }
 
+/// One SELL chunk of the *mixed-precision* `Simd` SpMV: f32 value
+/// stream, f64 operand gather, f64 accumulation. The four chunk values
+/// are loaded as f32 and widened with `_mm256_cvtps_pd` — an *exact*
+/// conversion, so `cvt(v) * x` rounds identically to the portable
+/// kernel's `v.up() * x` and the bitwise-equality contract holds across
+/// variants for mixed operators too. Returns `false` (chunk not
+/// handled) when the storage scalar is not f32, the chunk height is not
+/// a multiple of 4, or the host lacks AVX2.
+#[inline]
+pub(crate) fn spmv_chunk_f32_to_f64<V: Scalar>(
+    val: &[V],
+    col: &[Lidx],
+    x: &[f64],
+    yrow: &mut [f64],
+    base: usize,
+    w: usize,
+    c: usize,
+) -> bool {
+    if c % 4 != 0 || !avx2_available() {
+        return false;
+    }
+    let Some(vf) = V::as_f32_slice(val) else {
+        return false;
+    };
+    // SAFETY: AVX2 presence was checked above; every lane index stays in
+    // bounds exactly as in `chunk_avx2`.
+    unsafe { chunk_avx2_f32_to_f64(vf, col, x, yrow, base, w, c) };
+    true
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn chunk_avx2_f32_to_f64(
+    val: &[f32],
+    col: &[Lidx],
+    x: &[f64],
+    yrow: &mut [f64],
+    base: usize,
+    w: usize,
+    c: usize,
+) {
+    let xp = x.as_ptr();
+    for r in (0..c).step_by(4) {
+        let mut acc = _mm256_setzero_pd();
+        for wi in 0..w {
+            let k = base + wi * c + r;
+            if wi + PREFETCH_DIST < w {
+                let kp = k + PREFETCH_DIST * c;
+                for lane in 0..4 {
+                    let tgt = *col.get_unchecked(kp + lane) as usize;
+                    _mm_prefetch::<_MM_HINT_T0>(xp.add(tgt) as *const i8);
+                }
+            }
+            // four f32 values, widened exactly to f64 lanes
+            let v = _mm256_cvtps_pd(_mm_loadu_ps(val.as_ptr().add(k)));
+            let idx = _mm_loadu_si128(col.as_ptr().add(k) as *const __m128i);
+            let g = _mm256_i32gather_pd::<8>(xp, idx);
+            // separate mul + add: bitwise parity with the portable kernels
+            acc = _mm256_add_pd(acc, _mm256_mul_pd(v, g));
+        }
+        _mm256_storeu_pd(yrow.as_mut_ptr().add(r), acc);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -107,6 +171,42 @@ mod tests {
         let x = [2.0f64; 1];
         let mut y = [0.0f64; 2];
         assert!(!spmv_chunk_f64(&val, &col[..2], &x, &mut y, 0, 1, 2));
+    }
+
+    #[test]
+    fn mixed_body_declines_non_f32_storage() {
+        // f64 storage: the mixed body must decline (the uniform body
+        // handles it); bf16/odd chunks likewise fall back
+        let val = [1.0f64; 4];
+        let col = [0 as Lidx; 4];
+        let x = [2.0f64; 1];
+        let mut y = [0.0f64; 4];
+        assert!(!spmv_chunk_f32_to_f64(&val, &col, &x, &mut y, 0, 1, 4));
+        let val32 = [1.0f32; 2];
+        let mut y2 = [0.0f64; 2];
+        assert!(!spmv_chunk_f32_to_f64(&val32, &col[..2], &x, &mut y2, 0, 1, 2));
+    }
+
+    #[test]
+    fn avx2_mixed_chunk_matches_portable_when_available() {
+        if !avx2_available() {
+            return;
+        }
+        let c = 8usize;
+        let w = 3usize;
+        let x: Vec<f64> = (0..32).map(|i| (i as f64) * 0.25 - 3.0).collect();
+        let val: Vec<f32> = (0..c * w).map(|i| (i as f32) * 0.5 - 5.0).collect();
+        let col: Vec<Lidx> = (0..c * w).map(|i| ((i * 7) % 32) as Lidx).collect();
+        let mut y = vec![0.0f64; c];
+        assert!(spmv_chunk_f32_to_f64(&val, &col, &x, &mut y, 0, w, c));
+        for (r, yr) in y.iter().enumerate() {
+            let mut acc = 0.0f64;
+            for wi in 0..w {
+                let k = wi * c + r;
+                acc += f64::from(val[k]) * x[col[k] as usize];
+            }
+            assert_eq!(yr.to_bits(), acc.to_bits(), "row {r}");
+        }
     }
 
     #[test]

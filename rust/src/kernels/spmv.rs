@@ -251,8 +251,10 @@ fn spmv_chunks_simd<S: Scalar>(a: &SellMat<S>, x: &[S], yslice: &mut [S], ch0: u
 }
 
 /// Gather a SELL-ordered result back to original row order
-/// (y_orig[i] = y_sell[inv_perm[i]]).
-pub fn unpermute<S: Scalar>(a: &SellMat<S>, y_sell: &[S], y_orig: &mut [S]) {
+/// (y_orig[i] = y_sell[inv_perm[i]]). The vector scalar is independent
+/// of the matrix storage scalar so the mixed-precision operators (low-
+/// precision matrix, f64 vectors) reuse the same permutation helpers.
+pub fn unpermute<S: Scalar, T: Scalar>(a: &SellMat<S>, y_sell: &[T], y_orig: &mut [T]) {
     let inv = a.inv_perm();
     for i in 0..a.nrows() {
         y_orig[i] = y_sell[inv[i]];
@@ -261,13 +263,13 @@ pub fn unpermute<S: Scalar>(a: &SellMat<S>, y_sell: &[S], y_orig: &mut [S]) {
 
 /// Permute an original-order vector into SELL order
 /// (x_sell[i] = x_orig[perm[i]]).
-pub fn permute<S: Scalar>(a: &SellMat<S>, x_orig: &[S], x_sell: &mut [S]) {
+pub fn permute<S: Scalar, T: Scalar>(a: &SellMat<S>, x_orig: &[T], x_sell: &mut [T]) {
     let perm = a.perm();
     for i in 0..a.nrows_padded() {
         x_sell[i] = if perm[i] < a.nrows() {
             x_orig[perm[i]]
         } else {
-            S::ZERO
+            T::ZERO
         };
     }
 }

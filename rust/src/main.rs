@@ -8,6 +8,10 @@
 //!           (C, sigma, variant) — see ghost::tune; with --nvecs > 1 the
 //!           tuner's nvecs axis also picks the SpMMV processing width)
 //!   cg     [--matrix M] [--n N] [--tol T] [--threads T]
+//!          [--precision f64|f32|bf16]
+//!          (narrow precisions store the SELL values narrow, accumulate
+//!           in f64 and iteratively refine to the f64 tolerance;
+//!           bf16 needs the `bf16` cargo feature)
 //!   eig    [--matrix M] [--n N] [--nev K] [--space M] [--tol T]
 //!   kpm    [--n N] [--moments M] [--vectors R]
 //!          (the blocked-fused moments run at the width the nvecs-axis
@@ -66,7 +70,7 @@ use std::collections::HashMap;
 use std::time::Instant;
 
 use ghost::benchutil::{gflops, Table};
-use ghost::core::Result;
+use ghost::core::{Precision, Result};
 use ghost::densemat::{DenseMat, Layout};
 use ghost::kernels::spmmv::sell_spmmv;
 use ghost::kernels::spmv::sell_spmv_mt;
@@ -75,9 +79,11 @@ use ghost::perfmodel;
 use ghost::solvers::cg::cg;
 use ghost::solvers::kpm::{kpm_moments_width, KpmConfig, KpmVariant};
 use ghost::solvers::krylov_schur::{eigs_largest_real, EigOpts};
-use ghost::solvers::{LocalCrsOp, LocalSellOp};
+use ghost::solvers::refine::refine_cg;
+use ghost::solvers::{LocalCrsOp, LocalSellOp, MixedSellOp};
 use ghost::sparsemat::{Crs, SellMat};
 use ghost::topology;
+use ghost::topology::NumaAlloc;
 use ghost::tune;
 
 struct Args {
@@ -308,26 +314,57 @@ fn cmd_cg(a: &Args) -> Result<()> {
     let mname = a.str("matrix", "poisson7");
     let tol: f64 = a.get("tol", 1e-8);
     let nthreads: usize = a.get("threads", 4);
+    let pname = a.str("precision", "f64");
+    let Some(precision) = Precision::parse(&pname) else {
+        eprintln!(
+            "unknown precision '{pname}' (allowed: {})",
+            Precision::allowed()
+        );
+        std::process::exit(2);
+    };
     let m = build_matrix(&mname, n);
     let b = vec![1.0f64; m.nrows()];
     let mut x = vec![0.0f64; m.nrows()];
-    // autotuned operator setup: no hard-coded (C, sigma) literal
-    let mut op = LocalSellOp::new_tuned(&m, nthreads)?;
-    println!(
-        "operator: SELL-{}-{} {:?} (autotuned)",
-        op.sell().chunk_height(),
-        op.sell().sigma(),
-        op.variant()
-    );
     let t0 = Instant::now();
-    let st = cg(&mut op, &b, &mut x, tol, 10_000)?;
+    let (converged, iterations, final_residual) = if precision == Precision::F64 {
+        // autotuned operator setup: no hard-coded (C, sigma) literal
+        let mut op = LocalSellOp::new_tuned(&m, nthreads)?;
+        println!(
+            "operator: SELL-{}-{} {:?} (autotuned, f64)",
+            op.sell().chunk_height(),
+            op.sell().sigma(),
+            op.variant()
+        );
+        let st = cg(&mut op, &b, &mut x, tol, 10_000)?;
+        (st.converged, st.iterations, st.final_residual)
+    } else {
+        // narrow storage, f64 accumulation: low-precision inner CG
+        // corrections driven to the requested f64 tolerance by the
+        // iterative-refinement outer loop
+        let tuned = tune::tune_with_precision(&m, precision)?;
+        let (c, sigma, variant) = (tuned.config.c, tuned.config.sigma, tuned.config.variant);
+        let numa = NumaAlloc::single();
+        let mut op = match precision {
+            Precision::F32 => ghost::solvers::AnyOp::F32(MixedSellOp::<f32>::with_variant_numa(
+                &m, c, sigma, nthreads, variant, &numa,
+            )?),
+            #[cfg(feature = "bf16")]
+            Precision::Bf16 => ghost::solvers::AnyOp::Bf16(MixedSellOp::with_variant_numa(
+                &m, c, sigma, nthreads, variant, &numa,
+            )?),
+            Precision::F64 => unreachable!(),
+        };
+        println!("operator: SELL-{c}-{sigma} {variant:?} (autotuned, {precision} storage + f64 accumulation)");
+        let st = refine_cg(&m, &mut op, &b, &mut x, tol, 16, 10_000)?;
+        (st.converged, st.inner_iterations, st.final_residual)
+    };
     println!(
         "CG on {mname} (n = {}): converged = {}, {} iterations, {:.3}s, residual {:.2e}",
         m.nrows(),
-        st.converged,
-        st.iterations,
+        converged,
+        iterations,
         t0.elapsed().as_secs_f64(),
-        st.final_residual
+        final_residual
     );
     Ok(())
 }

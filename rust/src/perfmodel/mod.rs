@@ -16,6 +16,17 @@ pub fn spmv_min_bytes<S: Scalar>(a: &SellMat<S>, nvecs: usize) -> usize {
     a.bytes() + a.nrows_padded() * S::bytes() * 2 * nvecs + a.ncols() * S::bytes() * nvecs
 }
 
+/// Minimum data traffic of one *mixed-precision* SpM(M)V: the matrix
+/// value + index stream at the storage precision (`a.bytes()` — the
+/// halved stream the precision axis exists for), while the x/y vector
+/// terms stay at the accumulation scalar's width (`vec_bytes`, 8 for
+/// f64 recurrences). This is the bytes account the mixed operators feed
+/// the kernel counters with, so the measured-traffic reduction is
+/// visible in `kernel.bytes`/`kernel.efficiency`.
+pub fn spmv_min_bytes_mixed<V: Scalar>(a: &SellMat<V>, vec_bytes: usize, nvecs: usize) -> usize {
+    a.bytes() + a.nrows_padded() * vec_bytes * 2 * nvecs + a.ncols() * vec_bytes * nvecs
+}
+
 /// Flops of one SpM(M)V (2 per stored nonzero per vector; complex
 /// multiplies count 8 flops as usual).
 pub fn spmv_flops<S: Scalar>(a: &SellMat<S>, nvecs: usize) -> f64 {

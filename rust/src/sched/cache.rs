@@ -3,9 +3,12 @@
 //! Assembling a solve operator is expensive — the perfmodel-guided
 //! (C, sigma, variant) sweep of [`crate::tune`] plus the SELL-C-sigma
 //! build — and the solve service sees the *same* matrices over and over.
-//! The cache memoizes finished [`LocalSellOp`]s keyed by [`MatrixKey`]
-//! (the tuner's sparsity [`Fingerprint`] plus a content digest), so a
-//! repeated solve skips both assembly and the sweep. Eviction is LRU by
+//! The cache memoizes finished operators ([`AnyOp`]: full-precision
+//! [`LocalSellOp`]s and narrowed-storage [`MixedSellOp`]s) keyed by
+//! [`MatrixKey`] (the tuner's sparsity [`Fingerprint`] plus a content
+//! digest) *and* storage [`Precision`], so a repeated solve skips both
+//! assembly and the sweep, and an f32 request never aliases the f64
+//! operator over the same matrix. Eviction is LRU by
 //! *resident bytes* (SELL storage plus
 //! operator scratch), bounded by a byte budget; hit/miss/eviction
 //! counters are exported through [`CacheStats`] for the service's
@@ -37,9 +40,9 @@ use std::collections::HashMap;
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::time::Instant;
 
-use crate::core::Result;
+use crate::core::{Precision, Result};
 use crate::obs::Hist;
-use crate::solvers::LocalSellOp;
+use crate::solvers::{AnyOp, LocalSellOp, MixedSellOp};
 use crate::sparsemat::Crs;
 use crate::tune::{self, Fingerprint, TunedConfig};
 
@@ -82,7 +85,9 @@ pub fn matrix_key(a: &Crs<f64>) -> MatrixKey {
 
 /// A cached operator, shared between jobs. The mutex serializes solves
 /// on the same operator (its scratch buffers make `apply*` `&mut`).
-pub type SharedOp = Arc<Mutex<LocalSellOp<f64>>>;
+/// Precision-erased ([`AnyOp`]): an f32-storage operator and the f64
+/// one over the same matrix are distinct cache entries of one type.
+pub type SharedOp = Arc<Mutex<AnyOp>>;
 
 /// Cache telemetry counters.
 #[derive(Clone, Copy, Debug, Default)]
@@ -119,10 +124,17 @@ enum WidthSlot {
 
 #[derive(Default)]
 struct Inner {
-    map: HashMap<MatrixKey, Slot>,
+    /// Operator entries, keyed by matrix identity *and* storage
+    /// precision: the f32 operator over a matrix is a different entry
+    /// from the f64 one, with its own tuning decision and byte account,
+    /// so mixed-precision requests never evict or alias the full-
+    /// precision operator (and vice versa).
+    map: HashMap<(MatrixKey, Precision), Slot>,
     /// Memoized batch-width decisions (tune_block) — independent of
     /// operator entries, so the sweep runs once per matrix even when
     /// the width is asked for before (or after) the entry is evicted.
+    /// Keyed by matrix alone: only f64 jobs batch, and the width
+    /// trade-off is structural.
     widths: HashMap<MatrixKey, WidthSlot>,
     tick: u64,
     hits: u64,
@@ -195,14 +207,32 @@ impl OperatorCache {
     /// [`OperatorCache::get_or_assemble`] with a precomputed key: the
     /// O(nnz) digest is a full scan of the matrix, so callers that
     /// already hold the key (the batch runner got it from the bucket)
-    /// must not pay for it again.
+    /// must not pay for it again. Assembles the full-precision (f64)
+    /// operator; precision-tagged requests go through
+    /// [`OperatorCache::get_or_assemble_prec`].
     pub fn get_or_assemble_keyed(
         &self,
         key: MatrixKey,
         a: &Crs<f64>,
         nthreads: usize,
     ) -> Result<(SharedOp, bool)> {
-        // what the map says about `key` right now, extracted so the
+        self.get_or_assemble_prec(key, Precision::F64, a, nthreads)
+    }
+
+    /// Fetch the operator for (`key`, `precision`), assembling it on a
+    /// miss: the f64 CRS matrix is tuned (under the precision-tagged
+    /// fingerprint), SELL-built, and — for narrow precisions — its
+    /// value array rounded chunk-wise into a [`MixedSellOp`] whose
+    /// `apply` still accumulates in f64.
+    pub fn get_or_assemble_prec(
+        &self,
+        key: MatrixKey,
+        precision: Precision,
+        a: &Crs<f64>,
+        nthreads: usize,
+    ) -> Result<(SharedOp, bool)> {
+        let pkey = (key, precision);
+        // what the map says about `pkey` right now, extracted so the
         // guard can be handed to the entry condvar without a live
         // borrow of its interior
         enum Seen {
@@ -215,7 +245,7 @@ impl OperatorCache {
             loop {
                 let seen = {
                     let g = &mut *guard;
-                    match g.map.get_mut(&key) {
+                    match g.map.get_mut(&pkey) {
                         Some(Slot::Ready(e)) => {
                             g.tick += 1;
                             e.last_used = g.tick;
@@ -236,22 +266,28 @@ impl OperatorCache {
             }
             guard.misses += 1;
             let cv = Arc::new(Condvar::new());
-            guard.map.insert(key, Slot::Assembling(cv.clone()));
+            guard.map.insert(pkey, Slot::Assembling(cv.clone()));
             cv
         };
         // assemble OFF the lock: unrelated lookups (and other
         // assemblies) proceed concurrently; only same-key requests wait
         let t0 = Instant::now();
         let built = (|| {
-            let tuned = tune::tune(a)?;
-            let op = LocalSellOp::with_variant_numa(
-                a,
-                tuned.config.c,
-                tuned.config.sigma,
-                nthreads.max(1),
-                tuned.config.variant,
-                &self.numa,
-            )?;
+            let tuned = tune::tune_with_precision(a, precision)?;
+            let (c, sigma, variant) = (tuned.config.c, tuned.config.sigma, tuned.config.variant);
+            let nt = nthreads.max(1);
+            let op = match precision {
+                Precision::F64 => AnyOp::F64(LocalSellOp::with_variant_numa(
+                    a, c, sigma, nt, variant, &self.numa,
+                )?),
+                Precision::F32 => AnyOp::F32(MixedSellOp::with_variant_numa(
+                    a, c, sigma, nt, variant, &self.numa,
+                )?),
+                #[cfg(feature = "bf16")]
+                Precision::Bf16 => AnyOp::Bf16(MixedSellOp::with_variant_numa(
+                    a, c, sigma, nt, variant, &self.numa,
+                )?),
+            };
             Ok::<_, crate::core::GhostError>((tuned.config, op))
         })();
         if let Some(h) = self.obs_assembly.get() {
@@ -263,7 +299,7 @@ impl OperatorCache {
             Err(e) => {
                 // failed assembly: clear the placeholder and wake the
                 // waiters so one of them can retry
-                g.map.remove(&key);
+                g.map.remove(&pkey);
                 cv.notify_all();
                 return Err(e);
             }
@@ -273,7 +309,7 @@ impl OperatorCache {
         g.tick += 1;
         let now = g.tick;
         g.map.insert(
-            key,
+            pkey,
             Slot::Ready(Entry {
                 op: shared.clone(),
                 bytes,
@@ -289,7 +325,7 @@ impl OperatorCache {
                 .map
                 .iter()
                 .filter_map(|(k, s)| match s {
-                    Slot::Ready(e) if *k != key => Some((*k, e.last_used)),
+                    Slot::Ready(e) if *k != pkey => Some((*k, e.last_used)),
                     _ => None,
                 })
                 .min_by_key(|&(_, last)| last)
@@ -375,9 +411,10 @@ impl OperatorCache {
         }
     }
 
-    /// Tuned configuration of a cached matrix, if present (and ready).
+    /// Tuned configuration of a cached matrix at full precision, if
+    /// present (and ready).
     pub fn config_of(&self, a: &Crs<f64>) -> Option<TunedConfig> {
-        let key = matrix_key(a);
+        let key = (matrix_key(a), Precision::F64);
         match self.inner.lock().unwrap().map.get(&key) {
             Some(Slot::Ready(e)) => Some(e.config),
             _ => None,
@@ -523,7 +560,7 @@ mod tests {
         let cache = Arc::new(OperatorCache::new(1 << 30));
         let a = matgen::poisson7::<f64>(6, 6, 4);
         let b = matgen::anderson::<f64>(16, 1.0, 5);
-        let key_a = matrix_key(&a);
+        let key_a = (matrix_key(&a), Precision::F64);
         // simulate a slow in-flight assembly of `a` by parking its
         // Assembling placeholder directly (deterministic: no timing on
         // a real sweep)
@@ -614,6 +651,50 @@ mod tests {
         for m in &mats {
             let (_op, hit) = cache.get_or_assemble(m, 1).unwrap();
             assert!(hit);
+        }
+    }
+
+    #[test]
+    fn f32_and_f64_operators_coexist_under_one_matrix_key() {
+        let cache = OperatorCache::new(1 << 30);
+        let a = matgen::poisson7::<f64>(6, 6, 4);
+        let key = matrix_key(&a);
+        let (op64, hit) = cache
+            .get_or_assemble_prec(key, Precision::F64, &a, 1)
+            .unwrap();
+        assert!(!hit);
+        // the f32 operator is assembled separately, not aliased
+        let (op32, hit) = cache
+            .get_or_assemble_prec(key, Precision::F32, &a, 1)
+            .unwrap();
+        assert!(!hit, "precision must be part of the cache key");
+        assert_eq!(op32.lock().unwrap().precision(), Precision::F32);
+        assert_eq!(op64.lock().unwrap().precision(), Precision::F64);
+        // both stay warm side by side
+        assert!(cache
+            .get_or_assemble_prec(key, Precision::F64, &a, 1)
+            .unwrap()
+            .1);
+        assert!(cache
+            .get_or_assemble_prec(key, Precision::F32, &a, 1)
+            .unwrap()
+            .1);
+        let s = cache.stats();
+        assert_eq!((s.misses, s.hits, s.entries), (2, 2, 2), "{s:?}");
+        // the narrowed operator really halves the matrix value stream:
+        // its resident bytes must be well under the f64 operator's
+        let b64 = op64.lock().unwrap().resident_bytes();
+        let b32 = op32.lock().unwrap().resident_bytes();
+        assert!(b32 < b64, "f32 {b32} vs f64 {b64}");
+        // and it still applies the matrix (to f32 rounding)
+        let n = a.nrows();
+        let x = vec![1.0; n];
+        let mut y = vec![0.0; n];
+        op32.lock().unwrap().apply(&x, &mut y);
+        let mut want = vec![0.0; n];
+        a.spmv(&x, &mut want);
+        for i in 0..n {
+            assert!((y[i] - want[i]).abs() < 1e-4, "row {i}: {} vs {}", y[i], want[i]);
         }
     }
 

@@ -54,7 +54,12 @@ use super::{JobHandle, JobReport, JobSpec, SolveService, SubmitError};
 /// - **v1**: the PR-3 JSONL schema (no version field — absence means 1).
 /// - **v2**: explicit `"v"` field; adds `deadline_ms` and typed
 ///   rejection responses. All v1 requests remain valid v2 requests.
-pub const REQUEST_SCHEMA_VERSION: u64 = 2;
+/// - **v3**: adds `"precision"` (operator storage precision: `"f64"`,
+///   `"f32"`, or `"bf16"` behind the `bf16` feature; absent means
+///   `"f64"`). An unknown precision string is a typed
+///   [`RejectReason::Invalid`] naming the allowed set, never a silent
+///   f64 fallback. All v2 requests remain valid v3 requests.
+pub const REQUEST_SCHEMA_VERSION: u64 = 3;
 
 /// Client → server: a versioned solve request.
 pub(crate) const K_CLIENT_REQUEST: u8 = 16;
@@ -537,12 +542,14 @@ mod tests {
         let mut req = SolveRequest::new(cg_spec(64));
         req.client_id = 7;
         req.spec.deadline_ms = Some(1234);
+        req.spec.precision = crate::core::Precision::F32;
         let env = Envelope::decode(&encode_request(&req)).unwrap();
         assert_eq!(env.kind, K_CLIENT_REQUEST);
         let back = decode_request(&env.payload).unwrap();
         assert_eq!(back.v, REQUEST_SCHEMA_VERSION);
         assert_eq!(back.client_id, 7);
         assert_eq!(back.spec.deadline_ms, Some(1234));
+        assert_eq!(back.spec.precision, crate::core::Precision::F32);
         match &back.spec.matrix {
             MatrixSource::Named { name, n } => assert_eq!((name.as_str(), *n), ("poisson7", 64)),
             other => panic!("wrong matrix source: {other:?}"),

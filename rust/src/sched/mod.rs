@@ -77,7 +77,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::core::{GhostError, Result, Rng};
+use crate::core::{GhostError, Precision, Result, Rng};
 use crate::densemat::{DenseMat, Layout};
 use crate::matgen;
 use crate::obs::{self, Counter as ObsCounter, Gauge, Hist, Registry, Stage, Trace, TraceSink};
@@ -88,6 +88,7 @@ use crate::solvers::block_cg::block_cg;
 use crate::solvers::cheb_filter::chebfd;
 use crate::solvers::kpm::{kpm_moments_op, KpmConfig, KpmVariant};
 use crate::solvers::lanczos::{lanczos, spectral_bounds};
+use crate::solvers::refine::refine_cg;
 use crate::solvers::Operator;
 use crate::sparsemat::Crs;
 use crate::taskq::{flags as tflags, TaskOpts, TaskQueue};
@@ -163,6 +164,17 @@ pub struct JobSpec {
     /// Explicit right-hand side for Cg jobs; generated from `seed`
     /// ([`default_rhs`]) when absent.
     pub rhs: Option<Vec<f64>>,
+    /// Storage precision of the operator this job solves with.
+    /// [`Precision::F64`] (the default) is the classic path. A narrow
+    /// precision stores the matrix values at that width (roughly
+    /// halving SpMV traffic for f32) while every accumulation stays
+    /// f64; `Cg` jobs then run f32-inner/f64-outer iterative
+    /// refinement ([`crate::solvers::refine`]) so the reported residual
+    /// still meets the requested *f64* tolerance. Non-f64 jobs never
+    /// coalesce into batches — they run direct, so results are bitwise
+    /// reproducible across engines and batching policies by
+    /// construction.
+    pub precision: Precision,
     /// Client-provided identity of a [`MatrixSource::Mat`] matrix
     /// (obtained once via [`matrix_key`]). High-rate intake of the same
     /// large matrix then skips the per-submit O(nnz) content digest on
@@ -213,6 +225,7 @@ impl JobSpec {
             numanode: None,
             seed: 0,
             rhs: None,
+            precision: Precision::default(),
             matrix_key: None,
             deadline_ms: None,
             migrated: false,
@@ -230,6 +243,12 @@ impl JobSpec {
     /// Give the job a completion deadline (see the field docs).
     pub fn with_deadline_ms(mut self, ms: u64) -> Self {
         self.deadline_ms = Some(ms);
+        self
+    }
+
+    /// Select the operator storage precision (see the field docs).
+    pub fn with_precision(mut self, precision: Precision) -> Self {
+        self.precision = precision;
         self
     }
 }
@@ -260,6 +279,14 @@ pub fn is_known_matrix(name: &str) -> bool {
         "poisson7" | "stencil27" | "matpde" | "anderson" | "cage" | "random" | "hamiltonian"
     )
 }
+
+/// Outer-step cap for narrow-precision Cg refinement. Each outer step
+/// contracts the true residual by roughly [`refine::INNER_TOL`], so
+/// even a very tight f64 tolerance converges within a handful of
+/// steps; the cap only bounds pathological (barely-SPD) inputs.
+///
+/// [`refine::INNER_TOL`]: crate::solvers::refine::INNER_TOL
+const REFINE_MAX_OUTER: usize = 16;
 
 /// Deterministic right-hand side for jobs that do not carry one.
 pub fn default_rhs(n: usize, seed: u64) -> Vec<f64> {
@@ -343,6 +370,13 @@ pub struct JobReport {
     /// Time inside the solver proper (assembly excluded — the cache
     /// reports assembly latency separately), milliseconds.
     pub solve_ms: f64,
+    /// Bytes the operator's kernel counters attribute to this job's
+    /// solve (equal share of the block's traffic for a batched job; 0
+    /// when the operator does not account). This is where the ~2x
+    /// traffic reduction of f32 storage is *measured*, not predicted:
+    /// the same matrix solved at f32 reports roughly half the bytes
+    /// per iteration.
+    pub solve_bytes: f64,
     /// Submit → respond, milliseconds (0 until finalized at
     /// completion).
     pub total_ms: f64,
@@ -665,6 +699,17 @@ struct SolveMeasure {
     pc1: Option<PerfCounters>,
 }
 
+impl SolveMeasure {
+    /// Bytes the operator's kernel counters moved during the measured
+    /// window (0 when the operator does not account).
+    fn bytes(&self) -> f64 {
+        match (self.pc0, self.pc1) {
+            (Some(p0), Some(p1)) => (p1.bytes - p0.bytes).max(0.0),
+            _ => 0.0,
+        }
+    }
+}
+
 impl SchedObs {
     fn new(sink: Option<Arc<TraceSink>>) -> SchedObs {
         let registry = Arc::new(Registry::new());
@@ -796,6 +841,8 @@ struct DirectJob {
     /// always goes straight to the keyed cache lookup — there is no
     /// unkeyed submit path anymore.
     key: MatrixKey,
+    /// Operator storage precision (every non-f64 job runs direct).
+    precision: Precision,
     trace: Trace,
 }
 
@@ -1245,6 +1292,7 @@ impl JobScheduler {
             numanode,
             seed,
             rhs,
+            precision,
             deadline_at_us,
             trace,
             ..
@@ -1262,8 +1310,18 @@ impl JobScheduler {
             // a deadline job's task rides the queue's EDF lane
             deadline,
         };
+        // only full-precision jobs coalesce: the batch runners solve at
+        // f64 through one shared operator, and a narrow-precision job
+        // needs its refinement loop (and its own operator entry)
+        // anyway. Routing every non-f64 job direct also makes its
+        // result trivially independent of the batching policy and the
+        // engine it lands on — the cross-engine bitwise-determinism
+        // contract for mixed precision.
+        let batchable = precision == Precision::F64;
         let task = match (solver, self.inner.batching) {
-            (SolverKind::Cg { tol, max_iters }, policy) if policy != BatchPolicy::Off => {
+            (SolverKind::Cg { tol, max_iters }, policy)
+                if policy != BatchPolicy::Off && batchable =>
+            {
                 // park in the batch bucket, then enqueue a runner; the
                 // first runner to execute drains every compatible job
                 // parked so far into one block solve. Deadline jobs
@@ -1308,7 +1366,7 @@ impl JobScheduler {
                     max_iters,
                 },
                 policy,
-            ) if policy != BatchPolicy::Off && nrhs >= 1 => {
+            ) if policy != BatchPolicy::Off && nrhs >= 1 && batchable => {
                 // BlockCg coalesces too: groups park per matrix and the
                 // first runner fuses every parked group's A·P stream
                 // into one apply_block per iteration (the per-group
@@ -1358,6 +1416,7 @@ impl JobScheduler {
                     // batched arms, and the shepherd goes straight to
                     // the keyed cache lookup
                     key: client_key.unwrap_or_else(|| matrix_key(&a)),
+                    precision,
                     trace,
                 };
                 self.queue.enqueue(topts, move |ctx| {
@@ -1468,6 +1527,7 @@ impl JobScheduler {
                     c.batched_jobs += k as u64;
                     c.max_batch_width = c.max_batch_width.max(k);
                 }
+                let per_job_bytes = m.bytes() / k as f64;
                 let now = Instant::now();
                 for (j, (s, job)) in stats.into_iter().zip(taken).enumerate() {
                     let res = match s.error {
@@ -1492,6 +1552,7 @@ impl JobScheduler {
                                 .as_secs_f64()
                                 * 1e3,
                             solve_ms: m.secs * 1e3,
+                            solve_bytes: per_job_bytes,
                             total_ms: 0.0,
                             trace: job.trace,
                         }),
@@ -1591,6 +1652,7 @@ impl JobScheduler {
                     // bundles too (total = sum of the fused widths)
                     c.max_batch_width = c.max_batch_width.max(total);
                 }
+                let per_job_bytes = m.bytes() / k as f64;
                 let now = Instant::now();
                 for ((mut s, job), x) in stats.into_iter().zip(taken).zip(xs) {
                     let res = match s.error.take() {
@@ -1617,6 +1679,7 @@ impl JobScheduler {
                                 .as_secs_f64()
                                 * 1e3,
                             solve_ms: m.secs * 1e3,
+                            solve_bytes: per_job_bytes,
                             total_ms: 0.0,
                             trace: job.trace,
                         }),
@@ -1648,13 +1711,16 @@ impl JobScheduler {
             deadline,
             submitted_at,
             key,
+            precision,
             mut trace,
         } = job;
         // queue wait ends when a shepherd picks the job up (assembly
         // and solve are accounted separately)
         let picked_up = Instant::now();
         let n = a.nrows();
-        let (op, cache_hit) = self.cache.get_or_assemble_keyed(key, a, nthreads)?;
+        let (op, cache_hit) = self
+            .cache
+            .get_or_assemble_prec(key, precision, a, nthreads)?;
         let mut op = op.lock().unwrap();
         // a cached operator adopts THIS job's PU reservation
         op.set_nthreads(nthreads);
@@ -1665,9 +1731,6 @@ impl JobScheduler {
         let solve_start = Instant::now();
         let output = match solver {
             SolverKind::Cg { tol, max_iters } => {
-                // width-1 pass through the same bundled-CG kernel the
-                // batcher uses, so batched and serial runs demultiplex
-                // to bitwise-identical results
                 let bvec = match rhs {
                     Some(b) => {
                         crate::ensure!(b.len() == n, DimMismatch, "rhs length");
@@ -1675,17 +1738,48 @@ impl JobScheduler {
                     }
                     None => default_rhs(n, seed),
                 };
-                let b = DenseMat::<f64>::from_fn(n, 1, Layout::RowMajor, |i, _| bvec[i]);
-                let mut x = DenseMat::<f64>::zeros(n, 1, Layout::RowMajor);
-                let mut st = batch_cg(&mut *op, &b, &mut x, &[tol], &[max_iters])?;
-                if let Some(e) = st[0].error.take() {
-                    return Err(e);
-                }
-                JobOutput::Solve {
-                    x: vec![(0..n).map(|i| x.at(i, 0)).collect()],
-                    iterations: st[0].iterations,
-                    final_residual: st[0].final_residual,
-                    converged: st[0].converged,
+                if precision == Precision::F64 {
+                    // width-1 pass through the same bundled-CG kernel
+                    // the batcher uses, so batched and serial runs
+                    // demultiplex to bitwise-identical results
+                    let b =
+                        DenseMat::<f64>::from_fn(n, 1, Layout::RowMajor, |i, _| bvec[i]);
+                    let mut x = DenseMat::<f64>::zeros(n, 1, Layout::RowMajor);
+                    let mut st = batch_cg(&mut *op, &b, &mut x, &[tol], &[max_iters])?;
+                    if let Some(e) = st[0].error.take() {
+                        return Err(e);
+                    }
+                    JobOutput::Solve {
+                        x: vec![(0..n).map(|i| x.at(i, 0)).collect()],
+                        iterations: st[0].iterations,
+                        final_residual: st[0].final_residual,
+                        converged: st[0].converged,
+                    }
+                } else {
+                    // narrow storage: iterative refinement — inner CG
+                    // corrections on the low-precision operator, outer
+                    // f64 residual against the original CRS matrix, so
+                    // the job meets the *f64* tolerance it asked for
+                    // while streaming roughly half the matrix bytes
+                    // per inner iteration
+                    let mut x = vec![0.0f64; n];
+                    let st = refine_cg(
+                        a,
+                        &mut *op,
+                        &bvec,
+                        &mut x,
+                        tol,
+                        REFINE_MAX_OUTER,
+                        max_iters,
+                    )?;
+                    JobOutput::Solve {
+                        x: vec![x],
+                        // the matrix-stream count, comparable to a
+                        // plain CG iteration count
+                        iterations: st.inner_iterations,
+                        final_residual: st.final_residual,
+                        converged: st.converged,
+                    }
                 }
             }
             SolverKind::BlockCg {
@@ -1748,7 +1842,12 @@ impl JobScheduler {
             }
         };
         let secs = solve_start.elapsed().as_secs_f64();
-        self.obs.note_solve(pc0, op.perf_counters(), secs);
+        let m = SolveMeasure {
+            secs,
+            pc0,
+            pc1: op.perf_counters(),
+        };
+        self.obs.note_solve(m.pc0, m.pc1, m.secs);
         let now = Instant::now();
         Ok(JobReport {
             id,
@@ -1765,6 +1864,7 @@ impl JobScheduler {
                 .as_secs_f64()
                 * 1e3,
             solve_ms: secs * 1e3,
+            solve_bytes: m.bytes(),
             total_ms: 0.0,
             trace,
         })

@@ -15,7 +15,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::comm::envelope::{ByteReader, ByteWriter};
-use crate::core::{GhostError, Result};
+use crate::core::{GhostError, Precision, Result};
 use crate::obs::{Stage, Trace, TraceEvent};
 use crate::sparsemat::Crs;
 use crate::tune::Fingerprint;
@@ -25,6 +25,8 @@ use super::{JobOutput, JobReport, JobSpec, MatrixSource, Priority, SchedStats, S
 
 pub(crate) fn put_fingerprint(w: &mut ByteWriter, fp: &Fingerprint) {
     w.put_str(fp.dtype);
+    // v6: the fingerprint carries the storage-precision axis
+    w.put_u8(fp.precision.tag());
     w.put_usize(fp.nrows);
     w.put_usize(fp.ncols);
     w.put_usize(fp.nnz);
@@ -45,8 +47,13 @@ pub(crate) fn get_fingerprint(r: &mut ByteReader) -> Result<Fingerprint> {
             )))
         }
     };
+    let ptag = r.get_u8()?;
+    let precision = Precision::from_tag(ptag).ok_or_else(|| {
+        GhostError::Parse(format!("unknown precision tag {ptag} in fingerprint envelope"))
+    })?;
     Ok(Fingerprint {
         dtype,
+        precision,
         nrows: r.get_usize()?,
         ncols: r.get_usize()?,
         nnz: r.get_usize()?,
@@ -117,6 +124,8 @@ pub(crate) fn put_spec(w: &mut ByteWriter, spec: &JobSpec) {
         }
         None => w.put_bool(false),
     }
+    // v6: requested operator storage precision
+    w.put_u8(spec.precision.tag());
     match &spec.matrix_key {
         Some(k) => {
             w.put_bool(true);
@@ -248,6 +257,10 @@ pub(crate) fn get_spec(r: &mut ByteReader) -> Result<JobSpec> {
     } else {
         None
     };
+    let ptag = r.get_u8()?;
+    let precision = Precision::from_tag(ptag).ok_or_else(|| {
+        GhostError::Parse(format!("unknown precision tag {ptag} in spec envelope"))
+    })?;
     let matrix_key = if r.get_bool()? {
         Some(MatrixKey {
             fp: get_fingerprint(r)?,
@@ -268,6 +281,7 @@ pub(crate) fn get_spec(r: &mut ByteReader) -> Result<JobSpec> {
         numanode,
         seed,
         rhs,
+        precision,
         matrix_key,
         deadline_ms,
         migrated,
@@ -413,6 +427,8 @@ pub(crate) fn put_job_result(w: &mut ByteWriter, res: &Result<JobReport>) {
             // v4: phase timings + the finished trace
             w.put_f64(rep.queue_wait_ms);
             w.put_f64(rep.solve_ms);
+            // v6: measured operator traffic for the solve (perf-counter delta)
+            w.put_f64(rep.solve_bytes);
             w.put_f64(rep.total_ms);
             put_trace(w, &rep.trace);
         }
@@ -446,6 +462,7 @@ pub(crate) fn get_job_result(r: &mut ByteReader, job_id: u64) -> Result<Result<J
         let elapsed = Duration::from_secs_f64(r.get_f64()?.max(0.0));
         let queue_wait_ms = r.get_f64()?;
         let solve_ms = r.get_f64()?;
+        let solve_bytes = r.get_f64()?;
         let total_ms = r.get_f64()?;
         let trace = get_trace(r)?;
         Ok(Ok(JobReport {
@@ -460,6 +477,7 @@ pub(crate) fn get_job_result(r: &mut ByteReader, job_id: u64) -> Result<Result<J
             completed_at: Instant::now(),
             queue_wait_ms,
             solve_ms,
+            solve_bytes,
             total_ms,
             trace,
         }))

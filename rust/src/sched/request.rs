@@ -12,6 +12,7 @@
 //! {"id":5,"solver":"cheb_filter","matrix":"poisson7","n":1000,"degree":16,"block":4}
 //! {"id":6,"solver":"cg","matrix":"poisson7","n":4096,"tol":1e-8,"deadline_ms":250}
 //! {"v":2,"id":7,"solver":"cg","matrix":"poisson7","n":4096,"tol":1e-8}
+//! {"v":3,"id":8,"solver":"cg","matrix":"poisson7","n":4096,"tol":1e-8,"precision":"f32"}
 //! ```
 //!
 //! **Versioning:** `"v"` declares the request schema version the line
@@ -20,6 +21,13 @@
 //! `1..=current` are accepted (fields added later take their documented
 //! defaults), anything newer is answered with a typed
 //! `"reject":"invalid"` response naming both versions.
+//!
+//! `"precision"` (schema v3) selects the operator storage precision:
+//! `"f64"` (the default when absent), `"f32"`, or `"bf16"` behind the
+//! `bf16` feature. A narrow-precision CG job stores the matrix narrow,
+//! accumulates in f64 and refines to the requested f64 tolerance. An
+//! unknown precision string is a typed `"reject":"invalid"` response
+//! naming the allowed set — never a silent f64 fallback.
 //!
 //! `deadline_ms` puts the job on the scheduler's EDF lane and reports
 //! `"deadline_missed"` in the response; the serve loops can also stamp
@@ -43,7 +51,7 @@ use std::io::Write;
 use std::path::Path;
 use std::time::{Duration, Instant};
 
-use crate::core::{GhostError, Result};
+use crate::core::{GhostError, Precision, Result};
 use crate::tune::json_field;
 
 use super::client::{RejectReason, SolveRequest, REQUEST_SCHEMA_VERSION};
@@ -127,6 +135,17 @@ pub fn parse_request(line: &str) -> Result<Option<Request>> {
     spec.numanode = num(line, "numanode");
     spec.seed = num(line, "seed").unwrap_or(0);
     spec.deadline_ms = num(line, "deadline_ms");
+    // v3: operator storage precision; absent means f64, an unknown
+    // string is an InvalidArg (the serve loops answer it as a typed
+    // rejection naming the allowed set — never a silent f64 fallback)
+    if let Some(p) = json_field(line, "precision") {
+        spec.precision = Precision::parse(p).ok_or_else(|| {
+            GhostError::InvalidArg(format!(
+                "unknown precision \"{p}\" (allowed: {})",
+                Precision::allowed()
+            ))
+        })?;
+    }
     Ok(Some(Request {
         client_id: num(line, "id"),
         v: num(line, "v").unwrap_or(1),
@@ -201,12 +220,14 @@ pub fn response_line(label: u64, solver: &str, res: &Result<JobReport>) -> Strin
             format!(
                 "{{\"id\":{label},\"ok\":true,\"solver\":\"{solver}\",{detail},\
                  \"batched\":{},\"cache_hit\":{}{deadline},\"ms\":{:.3},\
-                 \"queue_wait_ms\":{:.3},\"solve_ms\":{:.3},\"total_ms\":{:.3}}}",
+                 \"queue_wait_ms\":{:.3},\"solve_ms\":{:.3},\"solve_bytes\":{:.0},\
+                 \"total_ms\":{:.3}}}",
                 r.batched_width,
                 r.cache_hit,
                 r.elapsed.as_secs_f64() * 1e3,
                 r.queue_wait_ms,
                 r.solve_ms,
+                r.solve_bytes,
                 r.total_ms
             )
         }
@@ -299,11 +320,27 @@ fn submit_line(
             }
         }
         Err(e) => {
-            writeln!(
-                out,
-                "{{\"line\":{lineno},\"ok\":false,\"error\":\"{}\"}}",
-                json_escape(&e.to_string())
-            )?;
+            // an invalid field value on a well-formed line (unknown
+            // precision) is a *typed* rejection like the schema gate;
+            // only unparseable lines get the plain line-error response
+            if matches!(e, GhostError::InvalidArg(_)) {
+                let solver = json_field(line, "solver").unwrap_or("?");
+                writeln!(
+                    out,
+                    "{}",
+                    reject_line(
+                        num(line, "id").unwrap_or(0),
+                        solver,
+                        &SubmitError::Invalid(e)
+                    )
+                )?;
+            } else {
+                writeln!(
+                    out,
+                    "{{\"line\":{lineno},\"ok\":false,\"error\":\"{}\"}}",
+                    json_escape(&e.to_string())
+                )?;
+            }
             Ok(None)
         }
     }
@@ -494,6 +531,59 @@ mod tests {
     }
 
     #[test]
+    fn precision_field_parses_defaults_and_rejects_unknowns_by_name() {
+        // absent means f64 — every pre-v3 line keeps its meaning
+        let r = parse_request("{\"solver\":\"cg\",\"matrix\":\"poisson7\",\"n\":216}")
+            .unwrap()
+            .unwrap();
+        assert_eq!(r.spec.precision, Precision::F64);
+        let r = parse_request(
+            "{\"v\":3,\"id\":11,\"solver\":\"cg\",\"matrix\":\"poisson7\",\"n\":216,\
+             \"precision\":\"f32\"}",
+        )
+        .unwrap()
+        .unwrap();
+        assert_eq!(r.spec.precision, Precision::F32);
+        assert!(r.into_request().validate().is_ok());
+        // an unknown precision is an InvalidArg naming the allowed set,
+        // not a silent f64 fallback
+        let err = parse_request(
+            "{\"v\":3,\"solver\":\"cg\",\"matrix\":\"poisson7\",\"n\":216,\
+             \"precision\":\"f16\"}",
+        )
+        .unwrap_err();
+        assert!(matches!(err, GhostError::InvalidArg(_)), "{err}");
+        let msg = err.to_string();
+        assert!(
+            msg.contains("f16") && msg.contains(Precision::allowed()),
+            "the refusal must name the bad value and the allowed set: {msg}"
+        );
+    }
+
+    #[test]
+    fn unknown_precision_becomes_a_typed_reject_response() {
+        use super::super::{JobScheduler, SchedConfig};
+        use crate::topology::Machine;
+        let sched = JobScheduler::new(Machine::small_node(1), SchedConfig::default());
+        let mut out = Vec::new();
+        let inflight = submit_line(
+            &sched,
+            "{\"v\":3,\"id\":42,\"solver\":\"cg\",\"matrix\":\"poisson7\",\"n\":64,\
+             \"precision\":\"f16\"}",
+            1,
+            None,
+            &mut out,
+        )
+        .unwrap();
+        assert!(inflight.is_none());
+        let line = String::from_utf8(out).unwrap();
+        assert!(line.contains("\"id\":42"), "{line}");
+        assert!(line.contains("\"reject\":\"invalid\""), "{line}");
+        assert!(line.contains(Precision::allowed()), "{line}");
+        sched.shutdown();
+    }
+
+    #[test]
     fn read_fresh_lines_tails_appends_and_survives_truncation() {
         let path = std::env::temp_dir().join(format!(
             "ghost_follow_tail_{}.jsonl",
@@ -539,6 +629,7 @@ mod tests {
                 completed_at: std::time::Instant::now(),
                 queue_wait_ms: 0.5,
                 solve_ms: 1.5,
+                solve_bytes: 640.0,
                 total_ms: 2.0,
                 trace: crate::obs::Trace::default(),
             })

@@ -2261,6 +2261,7 @@ mod tests {
     use std::time::{Duration, Instant};
 
     use super::super::{JobOutput, Priority};
+    use crate::core::Precision;
 
     fn front(policy: RoutePolicy, nodes: usize, loads: Vec<usize>) -> Front {
         Front {
@@ -2633,6 +2634,7 @@ mod tests {
         spec.numanode = Some(1);
         spec.seed = 99;
         spec.rhs = Some(vec![1.5; a.nrows()]);
+        spec.precision = Precision::F32;
         spec.deadline_ms = Some(2500);
         let bytes = encode_submit(77, &spec);
         let env = Envelope::decode(&bytes).unwrap();
@@ -2647,6 +2649,7 @@ mod tests {
         assert_eq!(back.numanode, Some(1));
         assert_eq!(back.seed, 99);
         assert_eq!(back.rhs.as_deref(), Some(&vec![1.5; a.nrows()][..]));
+        assert_eq!(back.precision, Precision::F32);
         assert_eq!(back.deadline_ms, Some(2500));
         match (&back.matrix, &back.solver) {
             (MatrixSource::Mat(b), super::super::SolverKind::Cg { tol, max_iters }) => {
@@ -2676,6 +2679,7 @@ mod tests {
             completed_at: Instant::now(),
             queue_wait_ms: 0.25,
             solve_ms: 6.5,
+            solve_bytes: 2048.0,
             total_ms: 7.0,
             trace: {
                 let mut t = Trace::start();
@@ -2704,6 +2708,7 @@ mod tests {
         assert_eq!(rep.deadline_missed, Some(true));
         assert_eq!(rep.queue_wait_ms, 0.25);
         assert_eq!(rep.solve_ms, 6.5);
+        assert_eq!(rep.solve_bytes, 2048.0);
         assert_eq!(rep.total_ms, 7.0);
         assert_eq!(rep.trace, want_trace, "trace span must survive the wire");
         match rep.output {

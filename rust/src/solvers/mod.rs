@@ -18,13 +18,16 @@ pub mod gmres;
 pub mod kpm;
 pub mod krylov_schur;
 pub mod lanczos;
+pub mod refine;
 
 use crate::comm::exchange::{
     dist_spmmv, dist_spmmv_fused, dist_spmv_fused, dist_spmv_opts, DistMatrix,
     FusedBlockTail, FusedTail, OverlapMode, SpmvExchangeOpts,
 };
 use crate::comm::Comm;
-use crate::core::{Result, Scalar};
+#[cfg(feature = "bf16")]
+use crate::core::Bf16;
+use crate::core::{Precision, PromoteTo, Result, Scalar};
 use crate::densemat::{tsm, DenseMat, Layout};
 use crate::kernels::fused::sell_spmv_fused_variant;
 use crate::kernels::spmmv::sell_spmmv_variant;
@@ -554,6 +557,245 @@ impl<S: Scalar> Operator<S> for LocalSellOp<S> {
             flops: self.acc_flops,
             bytes: self.acc_bytes,
         })
+    }
+}
+
+/// Local mixed-precision operator: the SELL value array is stored in a
+/// *narrow* scalar `V` (f32, or bf16 behind the `bf16` feature) while
+/// every vector, dot product and accumulation runs in f64 — the
+/// `Operator<f64>` contract that `apply*` accumulates in f64 regardless
+/// of storage. Only `apply` (and `dot`) are native: the fused/block
+/// surface comes from the trait's composed defaults, so semantics are
+/// identical to an unfused f64 operator over the *narrowed* matrix
+/// values, with roughly half the matrix traffic per pass.
+///
+/// The matrix is col-permuted (P A P^T) like [`LocalSellOp`]; `apply`
+/// permutes on entry/exit so the external interface stays in row
+/// order. Perf counters book the narrow value stream
+/// ([`crate::perfmodel::spmv_min_bytes_mixed`]), which is how the ~2×
+/// traffic reduction shows up in the service's `kernel.bytes` and
+/// efficiency gauges.
+pub struct MixedSellOp<V> {
+    sell: SellMat<V>,
+    xs: Vec<f64>,
+    ys: Vec<f64>,
+    nthreads: usize,
+    variant: SpmvVariant,
+    count: usize,
+    acc_flops: f64,
+    acc_bytes: f64,
+}
+
+impl<V: PromoteTo<f64>> MixedSellOp<V> {
+    /// Assemble from an f64 CRS matrix: the SELL structure is built at
+    /// f64 (same sigma sort and chunk layout as [`LocalSellOp`]), then
+    /// the value array is narrowed to `V` chunk-wise with the same
+    /// first-touch NUMA placement.
+    pub fn with_variant_numa(
+        a: &Crs<f64>,
+        c: usize,
+        sigma: usize,
+        nthreads: usize,
+        variant: SpmvVariant,
+        numa: &NumaAlloc,
+    ) -> Result<Self> {
+        let sell64 = SellMat::from_crs_numa(a, c, sigma, true, numa)?;
+        let sell = sell64.to_precision_numa(|v| V::down(v), numa);
+        let np = sell.nrows_padded();
+        let granule = c.max(1) * 64;
+        Ok(MixedSellOp {
+            xs: numa.alloc(np.max(a.ncols()), granule, 0.0f64),
+            ys: numa.alloc(np, granule, 0.0f64),
+            sell,
+            nthreads,
+            variant,
+            count: 0,
+            acc_flops: 0.0,
+            acc_bytes: 0.0,
+        })
+    }
+
+    /// [`MixedSellOp::with_variant_numa`] on the single-node allocator.
+    pub fn new(a: &Crs<f64>, c: usize, sigma: usize, nthreads: usize) -> Result<Self> {
+        Self::with_variant_numa(
+            a,
+            c,
+            sigma,
+            nthreads,
+            SpmvVariant::Vectorized,
+            &NumaAlloc::single(),
+        )
+    }
+
+    pub fn sell(&self) -> &SellMat<V> {
+        &self.sell
+    }
+
+    /// The kernel variant this operator applies with.
+    pub fn variant(&self) -> SpmvVariant {
+        self.variant
+    }
+
+    /// See [`LocalSellOp::set_nthreads`].
+    pub fn set_nthreads(&mut self, nthreads: usize) {
+        self.nthreads = nthreads.max(1);
+    }
+
+    /// Resident bytes: narrow SELL storage + the f64 scratch vectors.
+    pub fn resident_bytes(&self) -> usize {
+        self.sell.bytes() + (self.xs.len() + self.ys.len()) * 8
+    }
+
+    /// Book `nv` column applies: flops at 2/nnz (arithmetic is f64 but
+    /// the count is precision-independent), bytes with the narrow
+    /// matrix stream and f64 vector traffic.
+    fn account(&mut self, nv: usize) {
+        self.acc_flops += crate::perfmodel::spmv_flops::<V>(&self.sell, nv);
+        self.acc_bytes +=
+            crate::perfmodel::spmv_min_bytes_mixed::<V>(&self.sell, 8, nv) as f64;
+    }
+}
+
+impl<V: PromoteTo<f64>> Operator<f64> for MixedSellOp<V> {
+    fn nlocal(&self) -> usize {
+        self.sell.nrows()
+    }
+
+    fn apply(&mut self, x: &[f64], y: &mut [f64]) {
+        self.count += 1;
+        self.account(1);
+        // vectors live in SELL (permuted) order inside the operator
+        spmv::permute(&self.sell, x, &mut self.xs);
+        crate::kernels::mixed::sell_spmv_mixed_mt(
+            &self.sell,
+            &self.xs,
+            &mut self.ys,
+            self.variant,
+            self.nthreads,
+        );
+        spmv::unpermute(&self.sell, &self.ys, y);
+    }
+
+    fn dot(&self, a: &[f64], b: &[f64]) -> f64 {
+        local_dot(a, b)
+    }
+
+    fn matvecs(&self) -> usize {
+        self.count
+    }
+
+    fn perf_counters(&self) -> Option<PerfCounters> {
+        Some(PerfCounters {
+            flops: self.acc_flops,
+            bytes: self.acc_bytes,
+        })
+    }
+}
+
+/// A precision-erased local f64 operator: the one concrete type the
+/// operator cache (and anything else that stores operators for later)
+/// can hold while f64 and narrowed-storage operators coexist. Every
+/// variant produces f64 results — that is the [`Operator`] accumulation
+/// contract — the enum only erases the *storage* scalar of the matrix
+/// stream. Dispatch is a single match per operation, vanishing next to
+/// an SpMV.
+pub enum AnyOp {
+    F64(LocalSellOp<f64>),
+    F32(MixedSellOp<f32>),
+    #[cfg(feature = "bf16")]
+    Bf16(MixedSellOp<Bf16>),
+}
+
+/// Forward one expression to the operator inside whichever variant.
+macro_rules! any_op {
+    ($self:expr, $op:ident => $body:expr) => {
+        match $self {
+            AnyOp::F64($op) => $body,
+            AnyOp::F32($op) => $body,
+            #[cfg(feature = "bf16")]
+            AnyOp::Bf16($op) => $body,
+        }
+    };
+}
+
+impl AnyOp {
+    /// The storage precision of the matrix stream.
+    pub fn precision(&self) -> Precision {
+        match self {
+            AnyOp::F64(_) => Precision::F64,
+            AnyOp::F32(_) => Precision::F32,
+            #[cfg(feature = "bf16")]
+            AnyOp::Bf16(_) => Precision::Bf16,
+        }
+    }
+
+    /// See [`LocalSellOp::set_nthreads`].
+    pub fn set_nthreads(&mut self, nthreads: usize) {
+        any_op!(self, op => op.set_nthreads(nthreads))
+    }
+
+    /// SELL storage + operator scratch, for the cache's byte budget.
+    pub fn resident_bytes(&self) -> usize {
+        any_op!(self, op => op.resident_bytes())
+    }
+
+    /// The kernel variant this operator applies with.
+    pub fn variant(&self) -> SpmvVariant {
+        any_op!(self, op => op.variant())
+    }
+}
+
+impl Operator<f64> for AnyOp {
+    fn nlocal(&self) -> usize {
+        any_op!(self, op => op.nlocal())
+    }
+
+    fn apply(&mut self, x: &[f64], y: &mut [f64]) {
+        any_op!(self, op => op.apply(x, y))
+    }
+
+    fn apply_fused(
+        &mut self,
+        x: &[f64],
+        y: &mut [f64],
+        z: Option<&mut [f64]>,
+        opts: &SpmvOpts<f64>,
+    ) -> Result<FusedDots<f64>> {
+        any_op!(self, op => op.apply_fused(x, y, z, opts))
+    }
+
+    fn apply_block(&mut self, x: &DenseMat<f64>, y: &mut DenseMat<f64>) -> Result<()> {
+        any_op!(self, op => op.apply_block(x, y))
+    }
+
+    fn apply_block_fused(
+        &mut self,
+        x: &DenseMat<f64>,
+        y: &mut DenseMat<f64>,
+        z: Option<&mut DenseMat<f64>>,
+        opts: &SpmvOpts<f64>,
+    ) -> Result<FusedDots<f64>> {
+        any_op!(self, op => op.apply_block_fused(x, y, z, opts))
+    }
+
+    fn block_dot(&self, a: &DenseMat<f64>, b: &DenseMat<f64>) -> Result<DenseMat<f64>> {
+        any_op!(self, op => op.block_dot(a, b))
+    }
+
+    fn dot(&self, a: &[f64], b: &[f64]) -> f64 {
+        any_op!(self, op => op.dot(a, b))
+    }
+
+    fn norm(&self, a: &[f64]) -> f64 {
+        any_op!(self, op => op.norm(a))
+    }
+
+    fn matvecs(&self) -> usize {
+        any_op!(self, op => op.matvecs())
+    }
+
+    fn perf_counters(&self) -> Option<PerfCounters> {
+        any_op!(self, op => op.perf_counters())
     }
 }
 

@@ -315,6 +315,74 @@ impl<S: Scalar> SellMat<S> {
         self.col_permuted
     }
 
+    /// Map every stored value to a new scalar type, preserving the C/σ
+    /// layout, permutations and column space verbatim — the conversion
+    /// behind the mixed-precision operators (e.g. `|v| v as f32`
+    /// narrows an assembled f64 matrix to f32 storage without redoing
+    /// the sigma sort or the chunk assembly).
+    pub fn map_values<T: Scalar>(&self, f: impl Fn(S) -> T) -> SellMat<T> {
+        SellMat {
+            nrows: self.nrows,
+            nrows_padded: self.nrows_padded,
+            ncols: self.ncols,
+            nnz: self.nnz,
+            c: self.c,
+            sigma: self.sigma,
+            chunk_ptr: self.chunk_ptr.clone(),
+            chunk_len: self.chunk_len.clone(),
+            row_len: self.row_len.clone(),
+            val: self.val.iter().map(|&v| f(v)).collect(),
+            col: self.col.clone(),
+            perm: self.perm.clone(),
+            inv_perm: self.inv_perm.clone(),
+            col_permuted: self.col_permuted,
+        }
+    }
+
+    /// [`SellMat::map_values`] with first-touch NUMA placement of the
+    /// new value and column arrays: pages are touched chunk-range-wise
+    /// by threads pinned per `numa`'s partition, exactly as
+    /// [`SellMat::from_crs_numa`] places the original arrays — so a
+    /// narrowed operator streams its (halved) value array from the
+    /// right NUMA nodes too.
+    pub fn to_precision_numa<T: Scalar>(
+        &self,
+        f: impl Fn(S) -> T + Sync,
+        numa: &NumaAlloc,
+    ) -> SellMat<T> {
+        let src_val = &self.val;
+        let src_col = &self.col;
+        let cptr = &self.chunk_ptr;
+        let val = numa.build(cptr, |ch, slab| {
+            let base = cptr[ch];
+            for (i, e) in slab.iter_mut().enumerate() {
+                e.write(f(src_val[base + i]));
+            }
+        });
+        let col = numa.build(cptr, |ch, slab| {
+            let base = cptr[ch];
+            for (i, e) in slab.iter_mut().enumerate() {
+                e.write(src_col[base + i]);
+            }
+        });
+        SellMat {
+            nrows: self.nrows,
+            nrows_padded: self.nrows_padded,
+            ncols: self.ncols,
+            nnz: self.nnz,
+            c: self.c,
+            sigma: self.sigma,
+            chunk_ptr: self.chunk_ptr.clone(),
+            chunk_len: self.chunk_len.clone(),
+            row_len: self.row_len.clone(),
+            val,
+            col,
+            perm: self.perm.clone(),
+            inv_perm: self.inv_perm.clone(),
+            col_permuted: self.col_permuted,
+        }
+    }
+
     /// Export as uniform (nchunks, C, W) row-major slabs matching the
     /// Pallas/JAX artifact layout (python/compile/kernels/ref.py):
     /// element (chunk, r, w) at chunk*(C*W) + r*W + w. Pads chunks to
@@ -450,6 +518,28 @@ mod tests {
         // chunk 1: rows 2,3; row 2 has 3 nnz
         assert_eq!(&val[6..12], &[4.0, 5.0, 6.0, 7.0, 0.0, 0.0]);
         assert_eq!(&col[6..12], &[0, 2, 3, 3, 0, 0]);
+    }
+
+    #[test]
+    fn map_values_preserves_structure_and_numa_variant_matches() {
+        let mut rng = Rng::new(17);
+        let a = random_crs(&mut rng, 90, 7);
+        let s = SellMat::from_crs_opts(&a, 8, 64, true).unwrap();
+        let plain = s.map_values(|v| v as f32);
+        let numa = s.to_precision_numa(|v| v as f32, &crate::topology::NumaAlloc::single());
+        assert_eq!(plain.values(), numa.values());
+        assert_eq!(plain.colidx(), s.colidx());
+        assert_eq!(plain.perm(), s.perm());
+        assert_eq!(plain.chunk_ptr(), s.chunk_ptr());
+        assert_eq!(plain.nnz(), s.nnz());
+        assert!(plain.is_col_permuted());
+        // value array bytes halve; index bytes unchanged
+        let idx = s.colidx().len() * std::mem::size_of::<Lidx>();
+        assert_eq!(plain.bytes() - idx, (s.bytes() - idx) / 2);
+        // every value is the rounded original
+        for (v32, v64) in plain.values().iter().zip(s.values()) {
+            assert_eq!(*v32, *v64 as f32);
+        }
     }
 
     #[test]

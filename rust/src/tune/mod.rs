@@ -40,7 +40,7 @@ use std::sync::{Mutex, OnceLock};
 use std::time::Duration;
 
 use crate::benchutil::{bench_for, gflops};
-use crate::core::{Lidx, Result, Scalar};
+use crate::core::{Lidx, Precision, Result, Scalar};
 use crate::densemat::{DenseMat, Layout};
 use crate::kernels::fused::{flags, sell_spmv_fused_variant, SpmvOpts};
 use crate::kernels::spmmv::sell_spmmv_variant;
@@ -57,6 +57,12 @@ use crate::topology::{self, DeviceSpec};
 #[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
 pub struct Fingerprint {
     pub dtype: &'static str,
+    /// Storage precision of the operator the decision is for
+    /// ([`Precision::F64`] for the uniform kernels). Mixed-precision
+    /// operators over the same structure key *separate* decisions, so
+    /// an f32 request never adopts or evicts the f64 tuning (and vice
+    /// versa) even though both stream the same sparsity pattern.
+    pub precision: Precision,
     pub nrows: usize,
     pub ncols: usize,
     pub nnz: usize,
@@ -87,12 +93,21 @@ pub fn fingerprint_block<S: Scalar>(a: &Crs<S>, nvecs: usize) -> Fingerprint {
         / n;
     Fingerprint {
         dtype: S::NAME,
+        precision: Precision::F64,
         nrows: a.nrows(),
         ncols: a.ncols(),
         nnz: a.nnz(),
         row_var_q: (var * 1024.0).round() as u64,
         max_row_len: a.max_row_len(),
         nvecs,
+    }
+}
+
+impl Fingerprint {
+    /// The same structural key under a different storage precision.
+    pub fn with_precision(mut self, precision: Precision) -> Self {
+        self.precision = precision;
+        self
     }
 }
 
@@ -184,7 +199,11 @@ struct CacheEntry {
 /// v2: `Simd` joined the variant axis and the device key gained
 /// cores/bandwidth (detected-topology device specs), so v1 decisions —
 /// measured without the new kernel — are deliberately invalidated.
-pub const CACHE_FORMAT_VERSION: u32 = 2;
+/// v3: the fingerprint gained the storage-precision axis (mixed
+/// f32/bf16 operators key separate decisions); v2 lines carry no
+/// precision tag and are rejected wholesale rather than silently
+/// defaulted to f64.
+pub const CACHE_FORMAT_VERSION: u32 = 3;
 
 /// Default cap on cached decisions (in memory and on disk). Least
 /// recently used entries beyond the cap are evicted and truncated from
@@ -443,7 +462,7 @@ impl Autotuner {
     /// sparsity structure (and at most once per *process set* when a
     /// persistence file is configured).
     pub fn tune<S: Scalar>(&self, a: &Crs<S>) -> Result<TuneOutcome> {
-        self.tune_impl(a, 1)
+        self.tune_impl(a, 1, Precision::F64)
     }
 
     /// Tune (C, sigma, variant, processing width) for a block workload of
@@ -455,12 +474,32 @@ impl Autotuner {
     /// nvecs folded into the fingerprint.
     pub fn tune_block<S: Scalar>(&self, a: &Crs<S>, nvecs: usize) -> Result<TuneOutcome> {
         crate::ensure!(nvecs >= 1, InvalidArg, "nvecs must be >= 1");
-        self.tune_impl(a, nvecs)
+        self.tune_impl(a, nvecs, Precision::F64)
     }
 
-    fn tune_impl<S: Scalar>(&self, a: &Crs<S>, nvecs: usize) -> Result<TuneOutcome> {
+    /// [`Autotuner::tune`] for an operator whose values will be stored
+    /// at `precision`. The sweep itself is unchanged — the C/sigma/
+    /// variant trade-off is a structural property, and the uniform-
+    /// kernel measurement ranks candidates the same way when every
+    /// candidate's value stream shrinks by the same factor — but the
+    /// decision is cached under the precision tag, so f32 and f64
+    /// operators over the same matrix hold independent entries.
+    pub fn tune_with_precision<S: Scalar>(
+        &self,
+        a: &Crs<S>,
+        precision: Precision,
+    ) -> Result<TuneOutcome> {
+        self.tune_impl(a, 1, precision)
+    }
+
+    fn tune_impl<S: Scalar>(
+        &self,
+        a: &Crs<S>,
+        nvecs: usize,
+        precision: Precision,
+    ) -> Result<TuneOutcome> {
         crate::ensure!(a.nrows() > 0 && a.nnz() > 0, InvalidArg, "empty matrix");
-        let fp = fingerprint_block(a, nvecs);
+        let fp = fingerprint_block(a, nvecs).with_precision(precision);
         {
             let mut st = self.cache.lock().unwrap();
             self.ensure_loaded(&mut st);
@@ -762,7 +801,8 @@ fn device_sig(d: &DeviceSpec) -> String {
 /// cross-contaminate.
 fn cache_line(fp: &Fingerprint, e: &CacheEntry, device: &str, osig: u64) -> String {
     format!(
-        "{{\"v\":{},\"device\":\"{}\",\"osig\":{},\"dtype\":\"{}\",\"nrows\":{},\"ncols\":{},\
+        "{{\"v\":{},\"device\":\"{}\",\"osig\":{},\"dtype\":\"{}\",\"precision\":\"{}\",\
+         \"nrows\":{},\"ncols\":{},\
          \"nnz\":{},\"row_var_q\":{},\
          \"max_row_len\":{},\"nvecs\":{},\"c\":{},\"sigma\":{},\"variant\":\"{:?}\",\
          \"width\":{},\"measured_gflops\":{},\"model_gflops\":{},\"beta\":{},\
@@ -771,6 +811,7 @@ fn cache_line(fp: &Fingerprint, e: &CacheEntry, device: &str, osig: u64) -> Stri
         device,
         osig,
         fp.dtype,
+        fp.precision.name(),
         fp.nrows,
         fp.ncols,
         fp.nnz,
@@ -825,8 +866,10 @@ fn parse_cache_line(line: &str, device: &str, osig: u64) -> Option<(Fingerprint,
         "c64" => "c64",
         _ => return None,
     };
+    let precision = Precision::parse(json_field(line, "precision")?)?;
     let fp = Fingerprint {
         dtype,
+        precision,
         nrows: json_field(line, "nrows")?.parse().ok()?,
         ncols: json_field(line, "ncols")?.parse().ok()?,
         nnz: json_field(line, "nnz")?.parse().ok()?,
@@ -893,6 +936,12 @@ pub fn tune_block<S: Scalar>(a: &Crs<S>, nvecs: usize) -> Result<TuneOutcome> {
     global().tune_block(a, nvecs)
 }
 
+/// Precision-tagged tune through the process-wide autotuner (see
+/// [`Autotuner::tune_with_precision`]).
+pub fn tune_with_precision<S: Scalar>(a: &Crs<S>, precision: Precision) -> Result<TuneOutcome> {
+    global().tune_with_precision(a, precision)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -922,6 +971,20 @@ mod tests {
         // dtype is part of the key
         let az = matgen::cage_like::<crate::core::C64>(300, 7);
         assert_ne!(fingerprint(&a), fingerprint(&az));
+    }
+
+    #[test]
+    fn precision_is_part_of_the_cache_key() {
+        let tuner = Autotuner::new(topology::emmy_cpu_socket(), quick_opts());
+        let a = matgen::poisson7::<f64>(8, 8, 4);
+        assert!(!tuner.tune(&a).unwrap().cache_hit);
+        // the same structure under f32 storage sweeps independently:
+        // the f64 decision must not be adopted (or evicted)
+        let f32_out = tuner.tune_with_precision(&a, Precision::F32).unwrap();
+        assert!(!f32_out.cache_hit, "f32 must not adopt the f64 entry");
+        assert_eq!(tuner.cache_len(), 2);
+        assert!(tuner.tune_with_precision(&a, Precision::F32).unwrap().cache_hit);
+        assert!(tuner.tune(&a).unwrap().cache_hit, "f64 entry coexists");
     }
 
     #[test]
@@ -1150,6 +1213,36 @@ mod tests {
         let t2 = Autotuner::new(topology::emmy_cpu_socket(), quick_opts())
             .with_cache_file(path.clone());
         assert_eq!(t2.cache_len(), 0, "stale-format lines must be rejected");
+        assert!(!t2.tune(&a).unwrap().cache_hit);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    /// Regression for the v2 -> v3 bump, mirroring the stale-format
+    /// test above: a v2 line carries no precision tag and must be
+    /// rejected wholesale at load instead of being half-parsed with a
+    /// defaulted f64 precision.
+    #[test]
+    fn v2_format_lines_without_precision_are_rejected() {
+        let path = std::env::temp_dir().join(format!(
+            "ghost_tune_cache_v2_{}.jsonl",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_file(&path);
+        let a = matgen::poisson7::<f64>(8, 8, 4);
+        let t1 = Autotuner::new(topology::emmy_cpu_socket(), quick_opts())
+            .with_cache_file(path.clone());
+        t1.tune(&a).unwrap();
+        // rewrite the file as a v2 tuner would have written it: version
+        // 2, no precision field
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"precision\":\"f64\""));
+        let stale = text
+            .replace(&format!("\"v\":{CACHE_FORMAT_VERSION}"), "\"v\":2")
+            .replace("\"precision\":\"f64\",", "");
+        std::fs::write(&path, stale).unwrap();
+        let t2 = Autotuner::new(topology::emmy_cpu_socket(), quick_opts())
+            .with_cache_file(path.clone());
+        assert_eq!(t2.cache_len(), 0, "v2 lines must be rejected at load");
         assert!(!t2.tune(&a).unwrap().cache_hit);
         let _ = std::fs::remove_file(&path);
     }

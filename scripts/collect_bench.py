@@ -1,0 +1,167 @@
+#!/usr/bin/env python3
+"""Fold BENCH_*.json CI artifacts into one perf-trajectory table.
+
+Each CI run uploads a ``BENCH_<tag>.json`` artifact (see the ``bench``
+job in .github/workflows/ci.yml): one flat object with the schedbench
+and spmvbench headline numbers, tagged by PR number (run number on
+main). This script gathers every such file from the paths it is given
+(files or directories, searched non-recursively), sorts them by tag,
+prints the trajectory as a table, and — when at least two entries
+exist — gates the newest entry against its predecessor:
+
+  * ``schedbench.jobs_per_sec``   may not regress by more than 15%
+  * ``schedbench.gflops``         may not regress by more than 15%
+
+A regression exits non-zero so the CI step fails; a single entry (the
+first run, or a run where the previous artifact could not be fetched)
+prints the table and exits zero — the gate is tolerant of missing
+history, never of a measured regression.
+
+Usage:
+    python3 scripts/collect_bench.py [PATH ...] [--max-regression 0.15]
+
+With no PATH the current directory is searched.
+"""
+
+import argparse
+import glob
+import json
+import os
+import re
+import sys
+
+TAG_RE = re.compile(r"BENCH_(\d+)\.json$")
+
+# (column header, path into the merged artifact)
+COLUMNS = [
+    ("jobs/s", ("schedbench", "jobs_per_sec")),
+    ("tcp jobs/s", ("schedbench", "tcp_jobs_per_sec")),
+    ("Gflop/s", ("schedbench", "gflops")),
+    ("f64 Gflop/s", ("schedbench", "gflops_f64")),
+    ("f32 Gflop/s", ("schedbench", "gflops_f32")),
+    ("f32/f64 bytes", None),  # computed: bytes_f32 / bytes_f64
+    ("efficiency", ("schedbench", "efficiency")),
+    ("tuned Gflop/s", ("spmvbench", "tuned_gflops")),
+]
+
+# the regression gate: (label, path, relative floor vs previous)
+GATES = [
+    ("schedbench.jobs_per_sec", ("schedbench", "jobs_per_sec")),
+    ("schedbench.gflops", ("schedbench", "gflops")),
+]
+
+
+def lookup(entry, path):
+    node = entry
+    for key in path:
+        if not isinstance(node, dict) or key not in node:
+            return None
+        node = node[key]
+    return node
+
+
+def byte_ratio(entry):
+    f64 = lookup(entry, ("schedbench", "bytes_f64"))
+    f32 = lookup(entry, ("schedbench", "bytes_f32"))
+    if not f64 or f32 is None:
+        return None
+    return f32 / f64
+
+
+def gather(paths):
+    files = []
+    for p in paths:
+        if os.path.isdir(p):
+            files.extend(glob.glob(os.path.join(p, "BENCH_*.json")))
+        elif os.path.isfile(p):
+            files.append(p)
+        else:
+            files.extend(glob.glob(p))
+    entries = {}
+    for f in sorted(set(files)):
+        m = TAG_RE.search(os.path.basename(f))
+        if not m:
+            continue
+        try:
+            data = json.load(open(f))
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"warning: skipping unreadable {f}: {e}", file=sys.stderr)
+            continue
+        tag = int(data.get("tag", m.group(1)))
+        # same tag seen twice (re-run): the later file in sort order wins
+        entries[tag] = data
+    return [entries[t] for t in sorted(entries)]
+
+
+def fmt(v):
+    if v is None:
+        return "-"
+    if isinstance(v, float):
+        return f"{v:.3f}"
+    return str(v)
+
+
+def print_table(entries):
+    headers = ["tag"] + [c for c, _ in COLUMNS]
+    rows = []
+    for e in entries:
+        row = [str(e.get("tag", "?"))]
+        for name, path in COLUMNS:
+            row.append(fmt(byte_ratio(e) if path is None else lookup(e, path)))
+        rows.append(row)
+    widths = [max(len(h), *(len(r[i]) for r in rows)) for i, h in enumerate(headers)]
+    line = "  ".join(h.rjust(w) for h, w in zip(headers, widths))
+    print(line)
+    print("-" * len(line))
+    for row in rows:
+        print("  ".join(v.rjust(w) for v, w in zip(row, widths)))
+
+
+def check_regression(prev, cur, max_regression):
+    failures = []
+    for label, path in GATES:
+        was, now = lookup(prev, path), lookup(cur, path)
+        if was is None or now is None or was <= 0:
+            # the metric did not exist yet in the older schema: nothing
+            # to gate against, the next run will have both sides
+            continue
+        drop = (was - now) / was
+        if drop > max_regression:
+            failures.append(
+                f"{label}: {was:.3f} -> {now:.3f} "
+                f"({100 * drop:.1f}% drop > {100 * max_regression:.0f}% allowed)"
+            )
+        else:
+            print(f"ok: {label} {was:.3f} -> {now:.3f} ({100 * -drop:+.1f}%)")
+    return failures
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("paths", nargs="*", default=None, help="files/dirs/globs of BENCH_*.json")
+    ap.add_argument(
+        "--max-regression",
+        type=float,
+        default=0.15,
+        help="allowed fractional drop vs the previous artifact (default 0.15)",
+    )
+    args = ap.parse_args()
+    entries = gather(args.paths or ["."])
+    if not entries:
+        print("no BENCH_*.json artifacts found — nothing to fold", file=sys.stderr)
+        return 0
+    print_table(entries)
+    if len(entries) < 2:
+        print("\nonly one artifact: trajectory seeded, no regression gate this run")
+        return 0
+    failures = check_regression(entries[-2], entries[-1], args.max_regression)
+    if failures:
+        print("\nperf regression vs previous artifact:", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
